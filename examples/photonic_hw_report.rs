@@ -1,0 +1,36 @@
+//! Pre-silicon hardware report: regenerates the §5.3 system-performance
+//! evaluation (Tables 4/5/6) and the per-benchmark MZI budgets
+//! (Tables 19/20), from the analytic device model.
+//!
+//!     cargo run --release --example photonic_hw_report
+
+use optical_pinn::experiments::tables456;
+use optical_pinn::hw::Layout;
+use optical_pinn::photonic::{PhotonicModel, PhotonicVariant};
+
+fn main() -> optical_pinn::Result<()> {
+    let (t4, t5, t6) = tables456(None);
+    t4.print();
+    t5.print();
+    t6.print();
+
+    println!("## MZI budgets per benchmark (cf. Tables 19/20)\n");
+    println!("| Problem | #MZIs ONN | trainable | #MZIs TONN (ours) | trainable |");
+    println!("|---|---|---|---|---|");
+    for pde in optical_pinn::pde::ALL_PDES {
+        let onn = PhotonicModel::new(pde, PhotonicVariant::Onn, 0)?;
+        let tonn = PhotonicModel::new(pde, PhotonicVariant::Tonn, 0)?;
+        println!(
+            "| {pde} | {} | {} | {} | {} |",
+            onn.n_mzis(),
+            onn.n_trainable(),
+            tonn.n_mzis(),
+            tonn.n_trainable()
+        );
+    }
+    println!(
+        "\nheadline: {}x MZI reduction for the 128x128 hidden layer (paper: 42.7x)",
+        Layout::OnnSm.n_mzis() / Layout::TonnSm.n_mzis()
+    );
+    Ok(())
+}

@@ -1,0 +1,204 @@
+"""AOT exporter: lower every L2 graph to HLO text for the rust runtime.
+
+Run once via ``make artifacts`` (a no-op when outputs are newer than the
+compile-path sources). Python never runs at training time; after this step
+the rust binary is self-contained.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids.
+Graphs are lowered with ``return_tuple=True``; rust unwraps the tuple.
+
+Artifacts per (pde, model variant):
+* ``<m>_fwd``        — u_theta over a (4096, D) eval block;
+* ``<m>_loss_<b>``   — scalar PINN loss, backend b in {sg, ad, se};
+* ``<m>_grad_<b>``   — (loss, d loss / d theta) via jax.value_and_grad;
+plus the ablation variants of §5/App. E (TT rank, width, SG level, sigma,
+MC sample count) and a Pallas-lowered flagship pair (bs_tt), all indexed in
+``artifacts/manifest.json`` together with the flat parameter layout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from .model import ModelDef, build_model  # noqa: E402
+from .pdes import get_pde  # noqa: E402
+from .quadrature import grid_to_json_dict, smolyak_sparse_grid  # noqa: E402
+from .stein import build_loss, build_u_fn  # noqa: E402
+
+EVAL_BATCH = 4096
+PDES = ["bs", "hjb20", "burgers", "darcy"]
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # array constants (the baked quadrature nodes/weights!) as `{...}`,
+    # which the xla_extension 0.5.1 text parser silently reads as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float64)
+
+
+class Exporter:
+    def __init__(self, out_dir: str, only: str | None = None, force: bool = False):
+        self.out_dir = out_dir
+        self.only = only
+        self.force = force
+        self.manifest: dict = {"dtype": "f64", "models": {}, "artifacts": []}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def register_model(self, key: str, pde_name: str, variant: str, model: ModelDef):
+        if key in self.manifest["models"]:
+            return
+        self.manifest["models"][key] = {
+            "pde": pde_name,
+            "variant": variant,
+            "n_params": model.n_params,
+            "d_in": model.d_in,
+            "in_lo": list(model.in_lo),
+            "in_hi": list(model.in_hi),
+            "layout": model.param_layout(),
+        }
+
+    def emit(self, name: str, fn, input_specs: list[tuple[str, tuple]], meta: dict):
+        """Lower ``fn`` over the given input shapes and write HLO text."""
+        if self.only and self.only not in name:
+            return
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        entry = {
+            "name": name,
+            "file": os.path.basename(path),
+            "inputs": [{"name": n, "shape": list(s)} for n, s in input_specs],
+            **meta,
+        }
+        self.manifest["artifacts"].append(entry)
+        if os.path.exists(path) and not self.force:
+            return
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[_spec(s) for _, s in input_specs])
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s", flush=True)
+
+    def dump_quadrature(self):
+        for dim, level in [(1, 3), (2, 2), (2, 3), (2, 4), (2, 5), (3, 3), (21, 3)]:
+            g = smolyak_sparse_grid(dim, level)
+            path = os.path.join(self.out_dir, f"quadrature_d{dim}_l{level}.json")
+            with open(path, "w") as f:
+                json.dump(grid_to_json_dict(g), f)
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"manifest: {len(self.manifest['artifacts'])} artifacts, "
+              f"{len(self.manifest['models'])} models")
+
+
+def export_model_set(ex: Exporter, pde_name: str, variant: str, *, rank: int = 2,
+                     width: int | None = None, key: str | None = None,
+                     methods: tuple[str, ...] = ("sg",), fwd: bool = True,
+                     level: int | None = None, sigma: float | None = None,
+                     mc_samples: int | None = None, use_pallas: bool | None = None,
+                     suffix: str = "", grad_only: bool = False, no_grad: bool = False):
+    pde = get_pde(pde_name)
+    model = build_model(pde_name, variant, rank=rank, width=width)
+    key = key or f"{pde_name}_{variant}"
+    ex.register_model(key, pde_name, variant, model)
+    base_meta = {"pde": pde_name, "model": key,
+                 "sigma": sigma if sigma is not None else pde.sigma_stein,
+                 "level": level if level is not None else pde.sg_level}
+    p = model.n_params
+
+    if fwd:
+        u_fn = build_u_fn(pde, model, use_pallas)
+        ex.emit(f"{key}{suffix}_fwd", u_fn,
+                [("params", (p,)), ("pts", (EVAL_BATCH, pde.d_in))],
+                {**base_meta, "kind": "fwd"})
+
+    if mc_samples is not None:
+        import dataclasses
+
+        pde = dataclasses.replace(pde, mc_samples=mc_samples)
+
+    for method in methods:
+        loss_fn, extra = build_loss(pde, model, method, level=level, sigma=sigma,
+                                    use_pallas=use_pallas)
+        inputs = [("params", (p,))]
+        inputs += [(nm, (n, pde.d_in)) for nm, n in pde.point_inputs]
+        inputs += [(nm, shape) for nm, shape in extra]
+        meta = {**base_meta, "method": method,
+                "point_inputs": [[nm, n] for nm, n in pde.point_inputs],
+                "extra_inputs": [[nm, list(s)] for nm, s in extra]}
+        if not grad_only:
+            ex.emit(f"{key}{suffix}_loss_{method}", loss_fn, inputs,
+                    {**meta, "kind": "loss"})
+        if not no_grad:
+            # interpret-mode pallas_call has no reverse-mode rule, so the
+            # Pallas-lowered flagship exports forward/loss graphs only.
+            ex.emit(f"{key}{suffix}_grad_{method}", jax.value_and_grad(loss_fn), inputs,
+                    {**meta, "kind": "grad"})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-ad", action="store_true", help="skip the slow AD-hessian graphs")
+    args = ap.parse_args()
+
+    ex = Exporter(os.path.abspath(args.out), only=args.only, force=args.force)
+    ex.dump_quadrature()
+
+    for pde_name in PDES:
+        std_methods = ("sg",) if args.skip_ad else ("sg", "ad", "se")
+        export_model_set(ex, pde_name, "std", methods=std_methods)
+        export_model_set(ex, pde_name, "tt", methods=("sg",))
+
+    # --- ablation variants (App. E) ---------------------------------------
+    for r in (4, 6, 8):  # Table 9 (r=2 is the base tt model)
+        export_model_set(ex, "hjb20", "tt", rank=r, key=f"hjb20_tt_r{r}",
+                         methods=("sg",), fwd=True, grad_only=False)
+    for w in (32, 64, 128, 256):  # Table 10
+        export_model_set(ex, "hjb20", "std", width=w, key=f"hjb20_std_w{w}",
+                         methods=("sg",), fwd=True)
+    for lvl in (2, 4):  # Table 13
+        export_model_set(ex, "bs", "std", key="bs_std", methods=("sg",), fwd=False,
+                         level=lvl, suffix=f"_l{lvl}")
+    for i, sg in enumerate((0.1, 0.01, 1e-4)):  # Table 14
+        export_model_set(ex, "bs", "std", key="bs_std", methods=("sg",), fwd=False,
+                         sigma=sg, suffix=f"_sig{i}")
+    for s in (64, 512):  # Table 12
+        export_model_set(ex, "bs", "std", key="bs_std", methods=("se",), fwd=False,
+                         mc_samples=s, suffix=f"_mc{s}")
+
+    # --- Pallas-lowered flagship (kernel-in-HLO compose proof) -------------
+    export_model_set(ex, "bs", "tt", key="bs_tt", methods=("sg",), fwd=True,
+                     use_pallas=True, suffix="_pallas", no_grad=True)
+
+    ex.finish()
+
+
+if __name__ == "__main__":
+    main()

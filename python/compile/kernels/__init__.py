@@ -1,0 +1,14 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from .dense import dense_pallas
+from .ref import ACTIVATIONS, dense_ref, tt_contract_ref, tt_full_matrix
+from .tt_matvec import tt_matvec_pallas
+
+__all__ = [
+    "ACTIVATIONS",
+    "dense_pallas",
+    "dense_ref",
+    "tt_contract_ref",
+    "tt_full_matrix",
+    "tt_matvec_pallas",
+]

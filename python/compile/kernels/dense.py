@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused dense layer ``y = act(x @ a + b)``.
+
+Hardware adaptation (paper -> TPU idiom): the paper implements a dense
+layer as one optical pass through an MZI mesh; here the digital equivalent
+is a single MXU-tiled GEMM with the bias add and activation fused into the
+epilogue so the activations never round-trip to HBM between the GEMM and
+the nonlinearity.
+
+BlockSpec schedule: the grid runs over batch tiles only; the weight panel
+``a`` (n_in x n_out, at most 512x512 = 1 MiB f32 for the paper's largest
+layer) and bias stay resident in VMEM across the whole sweep, exactly like
+the weight-stationary scheme of the photonic accelerator (App. B.2).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU numbers are estimated in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ACTIVATIONS
+
+__all__ = ["dense_pallas"]
+
+_DEF_BLOCK_B = 256
+
+
+def _dense_kernel(x_ref, a_ref, b_ref, o_ref, *, act: str):
+    x = x_ref[...]
+    a = a_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, a) + b[None, :]
+    o_ref[...] = ACTIVATIONS[act](y).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_b"))
+def dense_pallas(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    act: str = "tanh",
+    block_b: int = _DEF_BLOCK_B,
+) -> jnp.ndarray:
+    """Fused dense+activation. x: (B, n_in), a: (n_in, n_out), b: (n_out,)."""
+    batch, n_in = x.shape
+    n_out = a.shape[1]
+    if a.shape[0] != n_in:
+        raise ValueError(f"shape mismatch: x {x.shape} vs a {a.shape}")
+    bb = min(block_b, batch)
+    grid = (pl.cdiv(batch, bb),)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n_in, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bb, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_out), x.dtype),
+        interpret=True,
+    )(x, a, b)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain jax.numpy ops only. ``pytest python/tests`` sweeps
+shapes/dtypes with hypothesis and asserts allclose between kernel and
+oracle; the AOT path may lower either implementation (see model.py).
+
+Conventions
+-----------
+* Dense layers compute ``y = act(x @ A + b)`` with ``A`` of shape
+  (n_in, n_out) — i.e. ``A = W.T`` for the paper's ``y = W x``.
+* A TT layer stores the paper's ``W`` (shape M x N, Eq. (13)) as cores
+  ``G_k`` of shape (r_{k-1}, m_k, n_k, r_k) and computes ``y = x @ W.T``
+  via sequential core contractions without materializing W.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+
+__all__ = [
+    "ACTIVATIONS",
+    "dense_ref",
+    "tt_contract_ref",
+    "tt_full_matrix",
+]
+
+ACTIVATIONS = {
+    "tanh": jnp.tanh,
+    "sine": jnp.sin,
+    "identity": lambda z: z,
+    "relu": lambda z: jnp.maximum(z, 0.0),
+}
+
+
+def dense_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Fused dense layer oracle: act(x @ a + b)."""
+    return ACTIVATIONS[act](x @ a + b)
+
+
+def tt_contract_ref(x: jnp.ndarray, cores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """TT matrix-vector product oracle: ``y = x @ W(cores).T``.
+
+    x: (B, N) with N = prod(n_k); returns (B, M) with M = prod(m_k).
+
+    The contraction peels input modes from the front (n_1 slowest, C-order)
+    and accumulates output modes with m_k fastest, so the result matches
+    ``tt_full_matrix`` folded C-order on both sides.
+    """
+    batch = x.shape[0]
+    n_total = math.prod(g.shape[2] for g in cores)
+    if x.shape[1] != n_total:
+        raise ValueError(f"x has {x.shape[1]} features, cores expect {n_total}")
+    rest = n_total
+    m_acc = 1
+    carry = x.reshape(batch, rest, 1)  # (B, rest, m_acc * r), r0 = 1
+    for core in cores:
+        r_in, m_k, n_k, r_out = core.shape
+        rest2 = rest // n_k
+        c = carry.reshape(batch, n_k, rest2, m_acc, r_in)
+        c = c.transpose(0, 2, 3, 4, 1).reshape(batch * rest2 * m_acc, r_in * n_k)
+        g = core.transpose(0, 2, 1, 3).reshape(r_in * n_k, m_k * r_out)
+        c = c @ g
+        carry = c.reshape(batch, rest2, m_acc * m_k * r_out)
+        rest, m_acc = rest2, m_acc * m_k
+    return carry.reshape(batch, m_acc)
+
+
+def tt_full_matrix(cores: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Materialize the full ``W`` (M x N) from TT cores (test helper)."""
+    t = jnp.ones((1, 1, 1), dtype=cores[0].dtype)
+    for core in cores:
+        t = jnp.einsum("abr,rmns->ambns", t, core)
+        a, m, b, n, s = t.shape
+        t = t.reshape(a * m, b * n, s)
+    return t.reshape(t.shape[0], t.shape[1])

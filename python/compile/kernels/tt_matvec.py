@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: tensor-train layer contraction ``y = x @ W(cores).T``.
+
+This is the paper's compute hot-spot: the TT-compressed hidden layer
+(Eq. (13), Fig. 1) that the photonic TONN evaluates by cascading MZI tensor
+cores in one optical pass (TONN-SM, Fig. 2b).
+
+Hardware adaptation (photonics/GPU -> TPU idiom): instead of threadblock /
+wavelength multiplexing, a batch tile is streamed HBM->VMEM once per grid
+step and **all L core contractions happen in VMEM** before the output tile
+is written back — the digital analogue of keeping every TT core "in flight"
+within a single optical traversal. Cores are tiny ((r*m) x (n*r), ~KiB) and
+stay VMEM-resident across the sweep (weight stationary, App. B.2). Each
+contraction step is an MXU GEMM of shape (B*rest*m_acc, r*n_k) x
+(r*n_k, m_k*r'); the in-between relayouts are registers/VMEM only.
+
+``interpret=True`` always (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["tt_matvec_pallas"]
+
+_DEF_BLOCK_B = 256
+
+
+def _tt_kernel(x_ref, *refs, shapes, block_b: int):
+    core_refs, o_ref = refs[:-1], refs[-1]
+    x = x_ref[...]
+    batch = x.shape[0]
+    rest = x.shape[1]
+    m_acc = 1
+    carry = x.reshape(batch, rest, 1)
+    for core_ref, (r_in, m_k, n_k, r_out) in zip(core_refs, shapes):
+        core = core_ref[...]
+        rest2 = rest // n_k
+        c = carry.reshape(batch, n_k, rest2, m_acc, r_in)
+        c = c.transpose(0, 2, 3, 4, 1).reshape(batch * rest2 * m_acc, r_in * n_k)
+        g = core.transpose(0, 2, 1, 3).reshape(r_in * n_k, m_k * r_out)
+        c = jnp.dot(c, g)
+        carry = c.reshape(batch, rest2, m_acc * m_k * r_out)
+        rest, m_acc = rest2, m_acc * m_k
+    o_ref[...] = carry.reshape(batch, m_acc).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def tt_matvec_pallas(
+    x: jnp.ndarray,
+    cores: Sequence[jnp.ndarray],
+    block_b: int = _DEF_BLOCK_B,
+) -> jnp.ndarray:
+    """TT matrix-vector product. x: (B, N=prod n_k) -> (B, M=prod m_k)."""
+    cores = tuple(cores)
+    batch = x.shape[0]
+    n_total = math.prod(g.shape[2] for g in cores)
+    m_total = math.prod(g.shape[1] for g in cores)
+    if x.shape[1] != n_total:
+        raise ValueError(f"x has {x.shape[1]} features, cores expect {n_total}")
+    shapes = tuple(g.shape for g in cores)
+    bb = min(block_b, batch)
+    grid = (pl.cdiv(batch, bb),)
+    in_specs = [pl.BlockSpec((bb, n_total), lambda i: (i, 0))]
+    for s in shapes:
+        in_specs.append(pl.BlockSpec(s, functools.partial(lambda i, k=len(s): tuple([0] * k))))
+    return pl.pallas_call(
+        functools.partial(_tt_kernel, shapes=shapes, block_b=bb),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb, m_total), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, m_total), x.dtype),
+        interpret=True,
+    )(x, *cores)

@@ -1,0 +1,266 @@
+"""L2: PINN model definitions (dense MLP and TT-compressed MLP).
+
+Build-time only. Defines the exact networks of the paper (App. C.1):
+
+* Black-Scholes: 3-layer MLP, 128 neurons/hidden, tanh. TT variant folds
+  the 128x128 hidden layer as (4,4,8)x(8,4,4), ranks [1,r,r,1]
+  (20.4x parameter reduction at r=2 — matches the paper's 20.44x).
+* 20-dim HJB: 3-layer MLP, 512 neurons/hidden, sine. TT variant folds the
+  21x512 input layer as (1,1,3,7)x(8,4,4,4) and the 512x512 hidden layer as
+  (4,4,4,8)x(8,4,4,4), ranks [1,r,r,r,1] (1,929 params at r=2 — Table 9).
+* Burgers / Darcy: 5 weight layers, 100 neurons/hidden, tanh
+  (30,701 params — App. C.1); TT folds the three 100x100 hidden layers as
+  (4,5,5)x(5,5,4), rank (1,2,2,1) (1,241 params).
+
+The **flat parameter layout** is the interchange contract with rust: layers
+in order; a dense layer contributes ``A`` (n_in x n_out, C-order; the
+transpose of the paper's W) then ``b``; a TT layer contributes its cores
+``G_k`` (r_{k-1}, m_k, n_k, r_k) in order, then ``b``. aot.py records the
+layout in artifacts/manifest.json and rust honors it byte-for-byte.
+
+All parameters are float64 (see DESIGN.md: the Stein contraction weights
+scale as 1/sigma^2 with sigma as small as 1e-3, which f32 cannot support).
+"""
+
+from __future__ import annotations
+
+import math
+import os
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ACTIVATIONS, dense_pallas, tt_contract_ref, tt_matvec_pallas
+
+__all__ = ["DenseLayer", "TTLayer", "ModelDef", "build_model"]
+
+DTYPE = jnp.float64
+
+# Pallas kernels are used for the forward when this env var is set; the
+# default AOT artifacts lower the jnp oracle path for runtime speed (the
+# interpret-mode pallas lowering wraps each grid step in a while-loop that
+# the CPU backend cannot fuse). Both paths are proven identical by pytest,
+# and dedicated *_pallas artifacts are exported for the flagship config.
+USE_PALLAS = os.environ.get("OPINN_PALLAS", "0") == "1"
+
+
+@dataclass(frozen=True)
+class DenseLayer:
+    n_in: int
+    n_out: int
+    act: str  # activation applied after affine; "identity" for output
+
+    @property
+    def n_params(self) -> int:
+        return self.n_in * self.n_out + self.n_out
+
+    def shapes(self, idx: int):
+        return [
+            (f"layer{idx}.A", (self.n_in, self.n_out)),
+            (f"layer{idx}.b", (self.n_out,)),
+        ]
+
+    def init(self, rng: np.random.Generator) -> list[np.ndarray]:
+        bound = math.sqrt(6.0 / (self.n_in + self.n_out))
+        a = rng.uniform(-bound, bound, size=(self.n_in, self.n_out))
+        return [a, np.zeros(self.n_out)]
+
+    def apply(self, params: Sequence[jnp.ndarray], x: jnp.ndarray, use_pallas: bool):
+        a, b = params
+        if use_pallas:
+            return dense_pallas(x, a, b, self.act)
+        return ACTIVATIONS[self.act](x @ a + b)
+
+
+@dataclass(frozen=True)
+class TTLayer:
+    """TT-factorized linear layer: the paper's W (M x N) as cores (Eq. 13).
+
+    Computes y = act(x @ W(cores).T + b) without materializing W.
+    """
+
+    m: tuple[int, ...]  # output mode sizes, prod = n_out
+    n: tuple[int, ...]  # input mode sizes, prod = n_in
+    ranks: tuple[int, ...]  # len = L+1, ranks[0] = ranks[-1] = 1
+    act: str
+
+    def __post_init__(self):
+        if len(self.m) != len(self.n) or len(self.ranks) != len(self.m) + 1:
+            raise ValueError("inconsistent TT mode/rank lengths")
+        if self.ranks[0] != 1 or self.ranks[-1] != 1:
+            raise ValueError("boundary TT ranks must be 1")
+
+    @property
+    def n_in(self) -> int:
+        return math.prod(self.n)
+
+    @property
+    def n_out(self) -> int:
+        return math.prod(self.m)
+
+    @property
+    def core_shapes(self) -> list[tuple[int, int, int, int]]:
+        return [
+            (self.ranks[k], self.m[k], self.n[k], self.ranks[k + 1])
+            for k in range(len(self.m))
+        ]
+
+    @property
+    def n_params(self) -> int:
+        return sum(math.prod(s) for s in self.core_shapes) + self.n_out
+
+    def shapes(self, idx: int):
+        out = [
+            (f"layer{idx}.core{k}", s) for k, s in enumerate(self.core_shapes)
+        ]
+        out.append((f"layer{idx}.b", (self.n_out,)))
+        return out
+
+    def init(self, rng: np.random.Generator) -> list[np.ndarray]:
+        # Choose core std so the reconstructed W matches Xavier variance:
+        # Var[W_ij] = sigma_c^(2L) * prod(interior ranks).
+        L = len(self.m)
+        target_var = 2.0 / (self.n_in + self.n_out)
+        paths = math.prod(self.ranks[1:-1]) if L > 1 else 1
+        sigma_c = (target_var / paths) ** (1.0 / (2 * L))
+        cores = [rng.normal(0.0, sigma_c, size=s) for s in self.core_shapes]
+        return cores + [np.zeros(self.n_out)]
+
+    def apply(self, params: Sequence[jnp.ndarray], x: jnp.ndarray, use_pallas: bool):
+        cores, b = list(params[:-1]), params[-1]
+        if use_pallas:
+            y = tt_matvec_pallas(x, cores)
+        else:
+            y = tt_contract_ref(x, cores)
+        return ACTIVATIONS[self.act](y + b)
+
+
+@dataclass(frozen=True)
+class ModelDef:
+    """A PINN body network: fixed input affine normalization + layers."""
+
+    name: str
+    layers: tuple
+    in_lo: tuple[float, ...]  # raw-domain lower bounds per input dim
+    in_hi: tuple[float, ...]
+    seed: int = 0
+
+    @property
+    def d_in(self) -> int:
+        return self.layers[0].n_in
+
+    @property
+    def n_params(self) -> int:
+        return sum(l.n_params for l in self.layers)
+
+    def param_layout(self) -> list[dict]:
+        """[{name, shape, offset, len}] in flat-vector order."""
+        out, off = [], 0
+        for i, layer in enumerate(self.layers):
+            for name, shape in layer.shapes(i):
+                ln = math.prod(shape)
+                out.append(
+                    {"name": name, "shape": list(shape), "offset": off, "len": ln}
+                )
+                off += ln
+        return out
+
+    def init_flat(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        parts = []
+        for layer in self.layers:
+            parts.extend(p.reshape(-1) for p in layer.init(rng))
+        flat = np.concatenate(parts).astype(np.float64)
+        assert flat.size == self.n_params
+        return flat
+
+    def unflatten(self, flat: jnp.ndarray) -> list[list[jnp.ndarray]]:
+        groups, off = [], 0
+        for i, layer in enumerate(self.layers):
+            g = []
+            for _, shape in layer.shapes(i):
+                ln = math.prod(shape)
+                g.append(flat[off : off + ln].reshape(shape))
+                off += ln
+            groups.append(g)
+        return groups
+
+    def apply(self, flat: jnp.ndarray, x: jnp.ndarray, use_pallas: bool | None = None) -> jnp.ndarray:
+        """Raw network output f_theta(x): x (B, d_in) -> (B,)."""
+        if use_pallas is None:
+            use_pallas = USE_PALLAS
+        lo = jnp.asarray(self.in_lo, DTYPE)
+        hi = jnp.asarray(self.in_hi, DTYPE)
+        h = (x - lo) / (hi - lo) * 2.0 - 1.0
+        for layer, params in zip(self.layers, self.unflatten(flat)):
+            h = layer.apply(params, h, use_pallas)
+        return h[:, 0]
+
+
+def _hidden_fold_100() -> TTLayer:
+    return TTLayer(m=(4, 5, 5), n=(5, 5, 4), ranks=(1, 2, 2, 1), act="tanh")
+
+
+def build_model(pde: str, variant: str, rank: int = 2, width: int | None = None) -> ModelDef:
+    """Construct the paper's baseline network for a PDE benchmark.
+
+    pde: bs | hjb20 | burgers | darcy;  variant: std | tt.
+    ``rank`` applies to the TT variant (Table 9); ``width`` overrides the
+    hidden width of the std variant (Table 10; bs/hjb only).
+    """
+    if variant not in ("std", "tt"):
+        raise ValueError(f"unknown variant {variant!r}")
+    tt = variant == "tt"
+    if pde == "bs":
+        w = width or 128
+        lo, hi = (0.0, 0.0), (200.0, 1.0)
+        if not tt:
+            layers = (
+                DenseLayer(2, w, "tanh"),
+                DenseLayer(w, w, "tanh"),
+                DenseLayer(w, 1, "identity"),
+            )
+        else:
+            if w != 128:
+                raise ValueError("TT fold is defined for width 128")
+            layers = (
+                DenseLayer(2, 128, "tanh"),
+                TTLayer(m=(4, 4, 8), n=(8, 4, 4), ranks=(1, rank, rank, 1), act="tanh"),
+                DenseLayer(128, 1, "identity"),
+            )
+        return ModelDef(f"bs_{variant}", layers, lo, hi)
+    if pde == "hjb20":
+        w = width or 512
+        lo, hi = tuple([0.0] * 21), tuple([1.0] * 21)
+        if not tt:
+            layers = (
+                DenseLayer(21, w, "sine"),
+                DenseLayer(w, w, "sine"),
+                DenseLayer(w, 1, "identity"),
+            )
+        else:
+            if w != 512:
+                raise ValueError("TT fold is defined for width 512")
+            r = rank
+            layers = (
+                TTLayer(m=(8, 4, 4, 4), n=(1, 1, 3, 7), ranks=(1, r, r, r, 1), act="sine"),
+                TTLayer(m=(8, 4, 4, 4), n=(4, 4, 4, 8), ranks=(1, r, r, r, 1), act="sine"),
+                DenseLayer(512, 1, "identity"),
+            )
+        return ModelDef(f"hjb20_{variant}", layers, lo, hi)
+    if pde in ("burgers", "darcy"):
+        lo = (-1.0, 0.0) if pde == "burgers" else (0.0, 0.0)
+        hi = (1.0, 1.0)
+        w = width or 100
+        if not tt:
+            hidden = [DenseLayer(w, w, "tanh") for _ in range(3)]
+            layers = (DenseLayer(2, w, "tanh"), *hidden, DenseLayer(w, 1, "identity"))
+        else:
+            if w != 100:
+                raise ValueError("TT fold is defined for width 100")
+            hidden = [_hidden_fold_100() for _ in range(3)]
+            layers = (DenseLayer(2, 100, "tanh"), *hidden, DenseLayer(100, 1, "identity"))
+        return ModelDef(f"{pde}_{variant}", layers, lo, hi)
+    raise ValueError(f"unknown pde {pde!r}")

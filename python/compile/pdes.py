@@ -1,0 +1,430 @@
+"""L2: the four PDE benchmarks of the paper (App. C.1), in JAX.
+
+Each benchmark bundles:
+* ``transform`` — the solution ansatz u_theta built from the body network
+  f_theta (hard initial/terminal/boundary constraints where the paper uses
+  them: HJB's (1-t) f + ||x||_1 and Darcy's distance-function BC);
+* ``residual`` — the PDE residual from the derivative bundle
+  (u, grad u, diag Hessian) at residual points (Eq. (2));
+* soft data losses (terminal/boundary/initial) where applicable;
+* the exact/reference solution used for relative-l2 evaluation.
+
+Reference solutions: Black-Scholes analytic (Eq. 20), HJB analytic
+(||x||_1 + 1 - t), Burgers via the Cole-Hopf transform evaluated with
+Gauss-Hermite quadrature + log-sum-exp (nu = 0.01/pi), Darcy via a 5-point
+finite-difference solver (rust hosts the 241x241 production solver in
+``rust/src/pde/darcy.rs``; a small numpy twin lives here for cross-checks).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PdeDef", "get_pde", "burgers_exact_np", "darcy_fd_solve_np", "darcy_k_np"]
+
+# --- Black-Scholes constants (App. C.1) ------------------------------------
+BS_SIGMA = 0.2
+BS_RATE = 0.05
+BS_STRIKE = 100.0
+BS_T = 1.0
+BS_XMAX = 200.0
+BS_OUT_SCALE = 100.0  # net outputs O(1); prices are O(100)
+
+# --- Burgers constants ------------------------------------------------------
+NU = 0.01 / math.pi
+
+# --- HJB constants -----------------------------------------------------------
+HJB_D = 20
+
+
+@dataclass(frozen=True)
+class PdeDef:
+    name: str
+    d_in: int  # network input dim (space [+ time])
+    sigma_stein: float  # Stein smoothing radius (raw input units)
+    sg_level: int
+    # names and static shapes of the collocation inputs fed by rust
+    point_inputs: tuple[tuple[str, int], ...]  # (input name, n_points)
+    transform: Callable  # (x, f_vals) -> u_vals ; f_vals = body net output
+    # compose: chain rule of `transform` — maps the derivative bundle of the
+    # raw network f (estimated optically / by Stein) to the bundle of u.
+    # The analytic part is evaluated digitally by the controller, so hard
+    # constraints (|x| kinks, distance polynomials) never pass through the
+    # Stein smoothing. (x, f, grad_f, diagh_f) -> (u, grad_u, diagh_u).
+    compose: Callable
+    residual: Callable  # (x, u, grad, diag_hess) -> (B,)
+    data_loss: Callable  # (u_fn, points dict) -> scalar extra loss
+    exact: Callable  # jnp (B, d_in) -> (B,)
+    mc_samples: int  # SE baseline sample count (Table 1 setup)
+    res_scale: float = 1.0  # residual normalization so loss terms are O(1)
+
+
+# ---------------------------------------------------------------------------
+# Black-Scholes
+# ---------------------------------------------------------------------------
+
+def _norm_cdf(z):
+    return 0.5 * (1.0 + jax.scipy.special.erf(z / math.sqrt(2.0)))
+
+
+def bs_exact(pts: jnp.ndarray) -> jnp.ndarray:
+    """Analytic call price; pts = (x, t). Handles t -> T and x -> 0 limits."""
+    x, t = pts[:, 0], pts[:, 1]
+    tau = jnp.maximum(BS_T - t, 1e-12)
+    xs = jnp.maximum(x, 1e-12)
+    d1 = (jnp.log(xs / BS_STRIKE) + (BS_RATE + 0.5 * BS_SIGMA**2) * tau) / (
+        BS_SIGMA * jnp.sqrt(tau)
+    )
+    d2 = d1 - BS_SIGMA * jnp.sqrt(tau)
+    price = xs * _norm_cdf(d1) - BS_STRIKE * jnp.exp(-BS_RATE * tau) * _norm_cdf(d2)
+    payoff = jnp.maximum(x - BS_STRIKE, 0.0)
+    near_expiry = (BS_T - t) < 1e-9
+    return jnp.where(near_expiry, payoff, jnp.where(x <= 1e-12, 0.0, price))
+
+
+def _bs_transform(x, f):
+    return BS_OUT_SCALE * f
+
+
+def _bs_compose(x, f, gf, hf):
+    return BS_OUT_SCALE * f, BS_OUT_SCALE * gf, BS_OUT_SCALE * hf
+
+
+def _bs_residual(x, u, grad, diag_h):
+    s, _t = x[:, 0], x[:, 1]
+    u_x, u_t = grad[:, 0], grad[:, 1]
+    u_xx = diag_h[:, 0]
+    return u_t + 0.5 * BS_SIGMA**2 * s**2 * u_xx + BS_RATE * s * u_x - BS_RATE * u
+
+
+def _bs_data_loss(u_fn, pts):
+    # terminal condition u(x, T) = max(x - K, 0)
+    term = u_fn(pts["pts_term"]) - jnp.maximum(pts["pts_term"][:, 0] - BS_STRIKE, 0.0)
+    # boundaries u(0, t) = 0 and u(xmax, t) = xmax - K e^{-r(T-t)}
+    xb = pts["pts_bnd"]
+    tgt = jnp.where(
+        xb[:, 0] < 1.0,
+        0.0,
+        BS_XMAX - BS_STRIKE * jnp.exp(-BS_RATE * (BS_T - xb[:, 1])),
+    )
+    bnd = u_fn(xb) - tgt
+    # price scale is O(100): normalize so loss terms are O(1)
+    sc = 1.0 / BS_OUT_SCALE**2
+    return sc * (jnp.mean(term**2) + jnp.mean(bnd**2))
+
+
+# ---------------------------------------------------------------------------
+# 20-dim HJB
+# ---------------------------------------------------------------------------
+
+def hjb_exact(pts: jnp.ndarray) -> jnp.ndarray:
+    x, t = pts[:, :HJB_D], pts[:, HJB_D]
+    return jnp.sum(jnp.abs(x), axis=-1) + 1.0 - t
+
+
+def _hjb_transform(x, f):
+    # hard terminal constraint (App. C.2): u = (1-t) f + ||x||_1
+    t = x[:, HJB_D]
+    return (1.0 - t) * f + jnp.sum(jnp.abs(x[:, :HJB_D]), axis=-1)
+
+
+def _hjb_compose(x, f, gf, hf):
+    t = x[:, HJB_D]
+    xs = x[:, :HJB_D]
+    omt = 1.0 - t
+    u = omt * f + jnp.sum(jnp.abs(xs), axis=-1)
+    gu_x = omt[:, None] * gf[:, :HJB_D] + jnp.sign(xs)
+    gu_t = -f + omt * gf[:, HJB_D]
+    grad = jnp.concatenate([gu_x, gu_t[:, None]], axis=1)
+    hu_x = omt[:, None] * hf[:, :HJB_D]
+    hu_t = -2.0 * gf[:, HJB_D] + omt * hf[:, HJB_D]  # u_tt (unused by residual)
+    diag_h = jnp.concatenate([hu_x, hu_t[:, None]], axis=1)
+    return u, grad, diag_h
+
+
+def _hjb_residual(x, u, grad, diag_h):
+    u_t = grad[:, HJB_D]
+    gx = grad[:, :HJB_D]
+    lap_x = jnp.sum(diag_h[:, :HJB_D], axis=-1)
+    return u_t + lap_x - 0.05 * jnp.sum(gx**2, axis=-1) + 2.0
+
+
+def _hjb_data_loss(u_fn, pts):
+    return jnp.asarray(0.0, jnp.float64)  # terminal condition is hard-coded
+
+
+# ---------------------------------------------------------------------------
+# Burgers
+# ---------------------------------------------------------------------------
+
+_GH_N = 96
+_gh_x, _gh_w = np.polynomial.hermite.hermgauss(_GH_N)  # physicists'
+
+
+def burgers_exact_np(pts: np.ndarray) -> np.ndarray:
+    """Cole-Hopf solution of Burgers with u0 = -sin(pi x), nu = 0.01/pi.
+
+    u(x,t) = -2 nu d/dx ln phi; evaluated as a ratio of Gauss-Hermite sums
+    with a shared log-sum-exp shift (the integrand spans e^{+-50}).
+    """
+    pts = np.asarray(pts, dtype=np.float64)
+    x, t = pts[:, 0], pts[:, 1]
+    t = np.maximum(t, 1e-12)
+    s = np.sqrt(4.0 * NU * t)[:, None]  # (B,1)
+    eta = x[:, None] - s * _gh_x[None, :]  # (B, n)
+    # H(y) = -cos(pi y) / (2 pi nu): exponent of the heat kernel initial data
+    expo = -np.cos(math.pi * eta) / (2.0 * math.pi * NU)
+    m = expo.max(axis=1, keepdims=True)
+    w = _gh_w[None, :] * np.exp(expo - m)
+    num = np.sum(w * np.sin(math.pi * eta), axis=1)
+    den = np.sum(w, axis=1)
+    u = -num / np.maximum(den, 1e-300)
+    # initial slice exactly
+    u = np.where(pts[:, 1] <= 1e-12, -np.sin(math.pi * x), u)
+    return u
+
+
+def burgers_exact(pts: jnp.ndarray) -> jnp.ndarray:
+    x, t = pts[:, 0], pts[:, 1]
+    t = jnp.maximum(t, 1e-12)
+    s = jnp.sqrt(4.0 * NU * t)[:, None]
+    eta = x[:, None] - s * jnp.asarray(_gh_x)[None, :]
+    expo = -jnp.cos(math.pi * eta) / (2.0 * math.pi * NU)
+    m = jnp.max(expo, axis=1, keepdims=True)
+    w = jnp.asarray(_gh_w)[None, :] * jnp.exp(expo - m)
+    num = jnp.sum(w * jnp.sin(math.pi * eta), axis=1)
+    den = jnp.sum(w, axis=1)
+    u = -num / jnp.maximum(den, 1e-300)
+    return jnp.where(pts[:, 1] <= 1e-12, -jnp.sin(math.pi * x), u)
+
+
+def _burgers_transform(x, f):
+    return f
+
+
+def _identity_compose(x, f, gf, hf):
+    return f, gf, hf
+
+
+def _burgers_residual(x, u, grad, diag_h):
+    u_x, u_t = grad[:, 0], grad[:, 1]
+    u_xx = diag_h[:, 0]
+    return u_t + u * u_x - NU * u_xx
+
+
+def _burgers_data_loss(u_fn, pts):
+    ic = u_fn(pts["pts_init"]) + jnp.sin(math.pi * pts["pts_init"][:, 0])
+    bc = u_fn(pts["pts_bnd"])
+    return jnp.mean(ic**2) + jnp.mean(bc**2)
+
+
+# ---------------------------------------------------------------------------
+# Darcy flow
+# ---------------------------------------------------------------------------
+# Piecewise-constant permeability (substitution for the paper's Fig. 6 field,
+# which is not reproducible from the text): k = 12 inside two axis-aligned
+# blocks, k = 3 elsewhere. Deterministic and shared with rust.
+_DARCY_BLOCKS = (
+    (0.15, 0.55, 0.15, 0.45),  # (x0, x1, y0, y1)
+    (0.55, 0.85, 0.55, 0.85),
+)
+DARCY_K_IN, DARCY_K_OUT = 12.0, 3.0
+DARCY_F = 1.0
+
+
+def darcy_k_np(pts: np.ndarray) -> np.ndarray:
+    x, y = pts[:, 0], pts[:, 1]
+    k = np.full(x.shape, DARCY_K_OUT)
+    for (x0, x1, y0, y1) in _DARCY_BLOCKS:
+        inside = (x >= x0) & (x < x1) & (y >= y0) & (y < y1)
+        k = np.where(inside, DARCY_K_IN, k)
+    return k
+
+
+def darcy_k(pts: jnp.ndarray) -> jnp.ndarray:
+    x, y = pts[:, 0], pts[:, 1]
+    k = jnp.full(x.shape, DARCY_K_OUT)
+    for (x0, x1, y0, y1) in _DARCY_BLOCKS:
+        inside = (x >= x0) & (x < x1) & (y >= y0) & (y < y1)
+        k = jnp.where(inside, DARCY_K_IN, k)
+    return k
+
+
+def darcy_fd_solve_np(n: int = 121, tol: float = 1e-10, max_iter: int = 20000):
+    """5-point FD reference for div(k grad u) = f, u|boundary = 0.
+
+    Harmonic averaging of k at cell faces; conjugate gradient on -A u = -f
+    (A is SPD for the negated system). Returns (grid_x, grid_y, u[n, n]).
+    """
+    h = 1.0 / (n - 1)
+    xs = np.linspace(0.0, 1.0, n)
+    xx, yy = np.meshgrid(xs, xs, indexing="ij")
+    k = darcy_k_np(np.stack([xx.ravel(), yy.ravel()], axis=1)).reshape(n, n)
+
+    def face(a, b):
+        return 2.0 * a * b / (a + b)
+
+    kxp = np.zeros((n, n)); kxm = np.zeros((n, n))
+    kyp = np.zeros((n, n)); kym = np.zeros((n, n))
+    kxp[:-1, :] = face(k[:-1, :], k[1:, :])
+    kxm[1:, :] = face(k[1:, :], k[:-1, :])
+    kyp[:, :-1] = face(k[:, :-1], k[:, 1:])
+    kym[:, 1:] = face(k[:, 1:], k[:, :-1])
+
+    inner = np.zeros((n, n), dtype=bool)
+    inner[1:-1, 1:-1] = True
+
+    def apply_a(u):  # A u = -div(k grad u) restricted to interior
+        au = np.zeros_like(u)
+        au[1:-1, 1:-1] = (
+            (kxp[1:-1, 1:-1] + kxm[1:-1, 1:-1] + kyp[1:-1, 1:-1] + kym[1:-1, 1:-1])
+            * u[1:-1, 1:-1]
+            - kxp[1:-1, 1:-1] * u[2:, 1:-1]
+            - kxm[1:-1, 1:-1] * u[:-2, 1:-1]
+            - kyp[1:-1, 1:-1] * u[1:-1, 2:]
+            - kym[1:-1, 1:-1] * u[1:-1, :-2]
+        ) / h**2
+        return au
+
+    b = np.where(inner, -DARCY_F, 0.0)  # -div(k grad u) = -f
+    u = np.zeros((n, n))
+    r = b - apply_a(u)
+    r[~inner] = 0.0
+    p = r.copy()
+    rs = float(np.sum(r * r))
+    b_norm = math.sqrt(float(np.sum(b * b))) or 1.0
+    for _ in range(max_iter):
+        ap = apply_a(p)
+        alpha = rs / float(np.sum(p * ap))
+        u += alpha * p
+        r -= alpha * ap
+        rs_new = float(np.sum(r * r))
+        if math.sqrt(rs_new) / b_norm < tol:
+            break
+        p = r + (rs_new / rs) * p
+        rs = rs_new
+    return xs, xs, u
+
+
+_DARCY_REF_CACHE: dict[int, tuple] = {}
+
+
+def darcy_exact(pts: jnp.ndarray, n: int = 121) -> jnp.ndarray:
+    """Bilinear interpolation of the FD reference (test/eval helper)."""
+    if n not in _DARCY_REF_CACHE:
+        _DARCY_REF_CACHE[n] = darcy_fd_solve_np(n)
+    xs, _, u = _DARCY_REF_CACHE[n]
+    h = xs[1] - xs[0]
+    p = np.asarray(pts)
+    fx = np.clip(p[:, 0] / h, 0, len(xs) - 1 - 1e-9)
+    fy = np.clip(p[:, 1] / h, 0, len(xs) - 1 - 1e-9)
+    i, j = fx.astype(int), fy.astype(int)
+    ax, ay = fx - i, fy - j
+    val = (
+        u[i, j] * (1 - ax) * (1 - ay)
+        + u[i + 1, j] * ax * (1 - ay)
+        + u[i, j + 1] * (1 - ax) * ay
+        + u[i + 1, j + 1] * ax * ay
+    )
+    return jnp.asarray(val)
+
+
+def _darcy_transform(x, f):
+    d = x[:, 0] * (1.0 - x[:, 0]) * x[:, 1] * (1.0 - x[:, 1])
+    return d * f  # hard zero-Dirichlet boundary
+
+
+def _darcy_compose(x, f, gf, hf):
+    xx, yy = x[:, 0], x[:, 1]
+    d = xx * (1.0 - xx) * yy * (1.0 - yy)
+    dx = (1.0 - 2.0 * xx) * yy * (1.0 - yy)
+    dy = xx * (1.0 - xx) * (1.0 - 2.0 * yy)
+    dxx = -2.0 * yy * (1.0 - yy)
+    dyy = -2.0 * xx * (1.0 - xx)
+    u = d * f
+    ux = dx * f + d * gf[:, 0]
+    uy = dy * f + d * gf[:, 1]
+    uxx = dxx * f + 2.0 * dx * gf[:, 0] + d * hf[:, 0]
+    uyy = dyy * f + 2.0 * dy * gf[:, 1] + d * hf[:, 1]
+    return u, jnp.stack([ux, uy], axis=1), jnp.stack([uxx, uyy], axis=1)
+
+
+def _darcy_residual(x, u, grad, diag_h):
+    lap = diag_h[:, 0] + diag_h[:, 1]
+    return darcy_k(x) * lap - DARCY_F
+
+
+def _darcy_data_loss(u_fn, pts):
+    return jnp.asarray(0.0, jnp.float64)  # boundary is hard-coded
+
+
+# ---------------------------------------------------------------------------
+
+_REGISTRY = {
+    "bs": PdeDef(
+        name="bs",
+        d_in=2,
+        sigma_stein=1e-3,
+        sg_level=3,
+        point_inputs=(("pts_res", 100), ("pts_term", 10), ("pts_bnd", 20)),
+        transform=_bs_transform,
+        compose=_bs_compose,
+        residual=_bs_residual,
+        data_loss=_bs_data_loss,
+        exact=bs_exact,
+        mc_samples=2048,
+        res_scale=1.0 / BS_OUT_SCALE,
+    ),
+    "hjb20": PdeDef(
+        name="hjb20",
+        d_in=21,
+        sigma_stein=0.1,
+        sg_level=3,
+        point_inputs=(("pts_res", 100),),
+        transform=_hjb_transform,
+        compose=_hjb_compose,
+        residual=_hjb_residual,
+        data_loss=_hjb_data_loss,
+        exact=hjb_exact,
+        mc_samples=1024,
+    ),
+    "burgers": PdeDef(
+        name="burgers",
+        d_in=2,
+        sigma_stein=1e-3,
+        sg_level=3,
+        point_inputs=(("pts_res", 512), ("pts_init", 100), ("pts_bnd", 100)),
+        transform=_burgers_transform,
+        compose=_identity_compose,
+        residual=_burgers_residual,
+        data_loss=_burgers_data_loss,
+        exact=burgers_exact,
+        mc_samples=2048,
+    ),
+    "darcy": PdeDef(
+        name="darcy",
+        d_in=2,
+        sigma_stein=1e-3,
+        sg_level=3,
+        point_inputs=(("pts_res", 512),),
+        transform=_darcy_transform,
+        compose=_darcy_compose,
+        residual=_darcy_residual,
+        data_loss=_darcy_data_loss,
+        exact=darcy_exact,
+        mc_samples=2048,
+    ),
+}
+
+
+def get_pde(name: str) -> PdeDef:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown pde {name!r}; have {sorted(_REGISTRY)}") from None

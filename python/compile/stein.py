@@ -1,0 +1,160 @@
+"""L2: BP-free loss evaluation — the sparse-grid Stein estimator (paper §3.1).
+
+Three interchangeable derivative backends build the PINN loss (Eq. (3)):
+
+* ``sg`` — the paper's contribution: a level-k Smolyak sparse Gauss-Hermite
+  grid evaluates the Stein identities (Eq. (12)). One shared forward sweep
+  over {x, x +- sigma*delta_j} feeds u, the full gradient AND the diagonal
+  Hessian (the residuals only ever need diag terms), so the query count per
+  point is exactly 2*n_L + 1.
+* ``se`` — the Monte Carlo Stein estimator of He et al. 2023: identical
+  contraction with i.i.d. N(0, I) nodes (weights 1/S). The nodes are an
+  *input* so rust can resample each step.
+* ``ad`` — automatic differentiation (gold reference, Table 1's AD column):
+  exact gradient via reverse mode and diagonal Hessian via a dense
+  ``jax.hessian`` (input dims are <= 21, so this is cheap).
+
+Everything here is traced and AOT-lowered by aot.py; nothing runs at
+training time in Python.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ModelDef
+from .pdes import PdeDef
+from .quadrature import smolyak_sparse_grid
+
+__all__ = ["stein_bundle", "ad_bundle", "build_loss", "build_u_fn", "rel_l2"]
+
+
+def build_u_fn(pde: PdeDef, model: ModelDef, use_pallas: bool | None = None) -> Callable:
+    """u_theta(flat, X): the transformed solution network, (B, D) -> (B,)."""
+
+    def u_fn(flat, x):
+        return pde.transform(x, model.apply(flat, x, use_pallas))
+
+    return u_fn
+
+
+def stein_bundle(u_fn, flat, x, nodes, weights, sigma):
+    """(u, grad, diag_hess) at points ``x`` via Stein identities.
+
+    u_fn: (flat, (B, D)) -> (B,);  x: (n, D);  nodes: (J, D) for N(0, I);
+    weights: (J,). Returns u (n,), grad (n, D), diag_hess (n, D).
+
+    One batched forward of size n*(2J+1) — this is the photonic inference
+    batch the accelerator replays per loss query (§4).
+    """
+    n, d = x.shape
+    delta = sigma * nodes  # (J, D) scaled nodes delta*
+    xp = (x[:, None, :] + delta[None, :, :]).reshape(-1, d)
+    xm = (x[:, None, :] - delta[None, :, :]).reshape(-1, d)
+    big = jnp.concatenate([x, xp, xm], axis=0)
+    vals = u_fn(flat, big)
+    j = nodes.shape[0]
+    g0 = vals[:n]
+    gp = vals[n : n + n * j].reshape(n, j)
+    gm = vals[n + n * j :].reshape(n, j)
+
+    w = weights  # (J,)
+    u = 0.5 * ((gp + gm) @ w)
+    # grad_d = sum_j w_j * node_{j,d} / (2 sigma) * (gp - gm)
+    grad = (gp - gm) @ (w[:, None] * nodes) / (2.0 * sigma)
+    # diag_h_d = sum_j w_j * (node_{j,d}^2 - 1) / (2 sigma^2) * (gp + gm - 2 g0)
+    hw = w[:, None] * (nodes**2 - 1.0) / (2.0 * sigma**2)
+    diag_h = (gp + gm - 2.0 * g0[:, None]) @ hw
+    return u, grad, diag_h
+
+
+def ad_bundle(u_fn, flat, x):
+    """(u, grad, diag_hess) via automatic differentiation (gold reference)."""
+
+    def scalar(pt):
+        return u_fn(flat, pt[None, :])[0]
+
+    u = u_fn(flat, x)
+    grad = jax.vmap(jax.grad(scalar))(x)
+    hess = jax.vmap(jax.hessian(scalar))(x)
+    diag_h = jnp.diagonal(hess, axis1=1, axis2=2)
+    return u, grad, diag_h
+
+
+def build_loss(
+    pde: PdeDef,
+    model: ModelDef,
+    method: str,
+    level: int | None = None,
+    sigma: float | None = None,
+    use_pallas: bool | None = None,
+) -> tuple[Callable, list[tuple[str, tuple]]]:
+    """Build the full PINN loss (Eq. (3)) for one derivative backend.
+
+    Returns ``(loss_fn, extra_inputs)`` where loss_fn's positional signature
+    is ``(flat, <point inputs in pde.point_inputs order>, *extra)`` and
+    ``extra_inputs`` describes additional inputs (the SE backend's MC node
+    block). All shapes are static — rust supplies exactly these blocks.
+    """
+    sigma = pde.sigma_stein if sigma is None else sigma
+    level = pde.sg_level if level is None else level
+    u_fn = build_u_fn(pde, model, use_pallas)
+
+    # The derivative bundle is estimated for the RAW body network f (the
+    # quantity the photonic chip evaluates); the transform's chain rule
+    # (pde.compose) is applied digitally afterwards, so hard-constraint
+    # factors (|x| kinks, distance polynomials) never pass through the
+    # smoothing (see DESIGN.md).
+    def f_fn(flat, x):
+        return model.apply(flat, x, use_pallas)
+
+    extra: list[tuple[str, tuple]] = []
+
+    if method == "sg":
+        grid = smolyak_sparse_grid(pde.d_in, level)
+        nodes_c = jnp.asarray(grid.nodes)
+        weights_c = jnp.asarray(grid.weights)
+
+        def bundle(flat, x, *extra_args):
+            return stein_bundle(f_fn, flat, x, nodes_c, weights_c, sigma)
+
+    elif method == "se":
+        extra.append(("mc_nodes", (pde.mc_samples, pde.d_in)))
+
+        def bundle(flat, x, *extra_args):
+            mc = extra_args[0]
+            w = jnp.full((mc.shape[0],), 1.0 / mc.shape[0], mc.dtype)
+            return stein_bundle(f_fn, flat, x, mc, w, sigma)
+
+    elif method == "ad":
+
+        def bundle(flat, x, *extra_args):
+            return ad_bundle(f_fn, flat, x)
+
+    else:
+        raise ValueError(f"unknown loss method {method!r}")
+
+    point_names = [nm for nm, _ in pde.point_inputs]
+
+    def loss_fn(flat, *args):
+        pts = dict(zip(point_names, args[: len(point_names)]))
+        extra_args = args[len(point_names) :]
+        x_res = pts["pts_res"]
+        f, gf, hf = bundle(flat, x_res, *extra_args)
+        u, grad, diag_h = pde.compose(x_res, f, gf, hf)
+        r = pde.residual(x_res, u, grad, diag_h) * pde.res_scale
+        loss = jnp.mean(r**2)
+        loss = loss + pde.data_loss(lambda p: u_fn(flat, p), pts)
+        return loss
+
+    return loss_fn, extra
+
+
+def rel_l2(pred: jnp.ndarray, ref: jnp.ndarray) -> jnp.ndarray:
+    """Relative l2 error ||pred - ref|| / ||ref|| (paper's metric)."""
+    return jnp.linalg.norm(pred - ref) / jnp.linalg.norm(ref)

@@ -1,0 +1,90 @@
+"""AOT artifact integrity: manifest <-> HLO files <-> model layouts.
+
+These tests gate the interchange contract with rust; they only run when
+``make artifacts`` has produced the artifacts directory."""
+
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_all_files_exist_and_parse_header(self, manifest):
+        for a in manifest["artifacts"]:
+            path = os.path.join(ART, a["file"])
+            assert os.path.exists(path), a["name"]
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head, a["name"]
+
+    def test_every_model_layout_is_dense(self, manifest):
+        for name, m in manifest["models"].items():
+            off = 0
+            for e in m["layout"]:
+                assert e["offset"] == off, (name, e)
+                assert e["len"] == int(np.prod(e["shape"]))
+                off += e["len"]
+            assert off == m["n_params"], name
+
+    def test_param_input_matches_model(self, manifest):
+        for a in manifest["artifacts"]:
+            model = manifest["models"][a["model"]]
+            p_in = next(i for i in a["inputs"] if i["name"] == "params")
+            assert p_in["shape"] == [model["n_params"]], a["name"]
+
+    def test_core_artifact_set_complete(self, manifest):
+        names = {a["name"] for a in manifest["artifacts"]}
+        for pde in ("bs", "hjb20", "burgers", "darcy"):
+            for kind in ("fwd", "loss_sg", "grad_sg"):
+                assert f"{pde}_std_{kind}" in names
+                assert f"{pde}_tt_{kind}" in names
+            for kind in ("loss_ad", "grad_ad", "loss_se", "grad_se"):
+                assert f"{pde}_std_{kind}" in names
+        assert "bs_tt_pallas_loss_sg" in names  # Pallas-lowered flagship
+
+    def test_point_inputs_recorded(self, manifest):
+        for a in manifest["artifacts"]:
+            if a.get("kind") in ("loss", "grad"):
+                assert a["point_inputs"], a["name"]
+                in_names = [i["name"] for i in a["inputs"]]
+                for nm, _n in a["point_inputs"]:
+                    assert nm in in_names
+
+
+class TestQuadratureDumps:
+    @pytest.mark.parametrize(
+        "dim,level,expect",
+        [(2, 2, 5), (2, 3, 13), (2, 4, 29), (2, 5, 53), (21, 3, 925)],
+    )
+    def test_dumped_grid_counts(self, dim, level, expect):
+        path = os.path.join(ART, f"quadrature_d{dim}_l{level}.json")
+        with open(path) as f:
+            g = json.load(f)
+        assert g["n_nodes"] == expect
+        assert len(g["nodes"]) == expect and len(g["weights"]) == expect
+        assert math.isclose(sum(g["weights"]), 1.0, rel_tol=1e-10)
+
+    def test_dumped_matches_reconstruction(self):
+        from compile.quadrature import smolyak_sparse_grid
+
+        with open(os.path.join(ART, "quadrature_d2_l3.json")) as f:
+            g = json.load(f)
+        ref = smolyak_sparse_grid(2, 3)
+        np.testing.assert_allclose(np.array(g["nodes"]), ref.nodes, atol=1e-14)
+        np.testing.assert_allclose(np.array(g["weights"]), ref.weights, atol=1e-14)

@@ -1,0 +1,123 @@
+"""L1 Pallas kernels vs pure-jnp oracles: hypothesis shape/dtype sweeps.
+
+This is the build-time correctness gate for the kernels that get lowered
+into the AOT artifacts."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import (
+    ACTIVATIONS,
+    dense_pallas,
+    dense_ref,
+    tt_contract_ref,
+    tt_full_matrix,
+    tt_matvec_pallas,
+)
+
+_DTYPES = [np.float32, np.float64]
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+class TestDenseKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        batch=st.integers(1, 300),
+        n_in=st.integers(1, 96),
+        n_out=st.integers(1, 96),
+        act=st.sampled_from(sorted(ACTIVATIONS)),
+        dtype=st.sampled_from(_DTYPES),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref(self, batch, n_in, n_out, act, dtype, seed):
+        rng = _rng(seed)
+        x = jnp.asarray(rng.normal(size=(batch, n_in)), dtype)
+        a = jnp.asarray(rng.normal(size=(n_in, n_out)), dtype)
+        b = jnp.asarray(rng.normal(size=(n_out,)), dtype)
+        got = dense_pallas(x, a, b, act)
+        want = dense_ref(x, a, b, act)
+        assert got.shape == (batch, n_out) and got.dtype == want.dtype
+        # atol matters: f32 accumulations near zero have no relative digits
+        tol = dict(rtol=1e-5, atol=1e-5) if dtype == np.float32 else dict(rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(got, want, **tol)
+
+    def test_partial_batch_tile(self):
+        """Batch not divisible by the block size exercises masked tiles."""
+        rng = _rng(0)
+        x = jnp.asarray(rng.normal(size=(257, 16)))
+        a = jnp.asarray(rng.normal(size=(16, 8)))
+        b = jnp.asarray(rng.normal(size=(8,)))
+        np.testing.assert_allclose(
+            dense_pallas(x, a, b, "tanh", block_b=64), dense_ref(x, a, b, "tanh")
+        )
+
+    def test_shape_mismatch_raises(self):
+        x = jnp.zeros((4, 3))
+        a = jnp.zeros((5, 2))
+        with pytest.raises(ValueError):
+            dense_pallas(x, a, jnp.zeros((2,)), "tanh")
+
+
+def _tt_cases(draw):
+    L = draw(st.integers(2, 4))
+    m = tuple(draw(st.integers(1, 6)) for _ in range(L))
+    n = tuple(draw(st.integers(1, 6)) for _ in range(L))
+    ranks = (1,) + tuple(draw(st.integers(1, 4)) for _ in range(L - 1)) + (1,)
+    return m, n, ranks
+
+
+class TestTTKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.data(), batch=st.integers(1, 200), dtype=st.sampled_from(_DTYPES),
+           seed=st.integers(0, 2**31))
+    def test_matches_ref_and_dense(self, data, batch, dtype, seed):
+        m, n, ranks = _tt_cases(data.draw)
+        rng = _rng(seed)
+        cores = [
+            jnp.asarray(rng.normal(size=(ranks[k], m[k], n[k], ranks[k + 1])), dtype)
+            for k in range(len(m))
+        ]
+        x = jnp.asarray(rng.normal(size=(batch, math.prod(n))), dtype)
+        got = tt_matvec_pallas(x, cores)
+        ref = tt_contract_ref(x, cores)
+        dense = x @ tt_full_matrix(cores).T
+        rtol = 2e-4 if dtype == np.float32 else 1e-11
+        np.testing.assert_allclose(got, ref, rtol=rtol, atol=rtol)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(dense), rtol=rtol, atol=rtol)
+
+    def test_paper_bs_fold(self):
+        """The exact BS hidden-layer fold: (4,4,8)x(8,4,4), ranks [1,2,2,1]."""
+        rng = _rng(7)
+        m, n, r = (4, 4, 8), (8, 4, 4), (1, 2, 2, 1)
+        cores = [
+            jnp.asarray(rng.normal(size=(r[k], m[k], n[k], r[k + 1])))
+            for k in range(3)
+        ]
+        x = jnp.asarray(rng.normal(size=(130, 128)))
+        np.testing.assert_allclose(
+            tt_matvec_pallas(x, cores), x @ tt_full_matrix(cores).T, rtol=1e-10
+        )
+
+    def test_rank_one_is_kronecker(self):
+        """All ranks 1 => W is a Kronecker product of the core slices."""
+        rng = _rng(3)
+        g1 = jnp.asarray(rng.normal(size=(1, 2, 3, 1)))
+        g2 = jnp.asarray(rng.normal(size=(1, 4, 5, 1)))
+        w = tt_full_matrix([g1, g2])
+        want = jnp.kron(g1[0, :, :, 0], g2[0, :, :, 0])
+        np.testing.assert_allclose(w, want, rtol=1e-12)
+
+    def test_feature_mismatch_raises(self):
+        g = jnp.zeros((1, 2, 3, 1))
+        with pytest.raises(ValueError):
+            tt_contract_ref(jnp.zeros((4, 5)), [g])
+        with pytest.raises(ValueError):
+            tt_matvec_pallas(jnp.zeros((4, 5)), [g])

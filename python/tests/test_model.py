@@ -1,0 +1,132 @@
+"""Model definitions: paper-exact parameter counts, layout integrity,
+round-tripping, and TT-vs-dense consistency."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import tt_full_matrix
+from compile.model import DenseLayer, TTLayer, build_model
+
+
+class TestParamCounts:
+    """Counts the paper states explicitly (App. C.1, Tables 9/10)."""
+
+    @pytest.mark.parametrize(
+        "pde,variant,kw,expect",
+        [
+            ("bs", "std", {}, 17025),
+            ("bs", "tt", {}, 833),
+            ("hjb20", "std", {}, 274433),
+            ("hjb20", "tt", {}, 1929),       # Table 9, r=2
+            ("hjb20", "tt", {"rank": 4}, 2705),
+            ("hjb20", "tt", {"rank": 6}, 3865),
+            ("hjb20", "tt", {"rank": 8}, 5409),
+            ("hjb20", "std", {"width": 256}, 71681),  # Table 10
+            ("hjb20", "std", {"width": 128}, 19457),
+            ("hjb20", "std", {"width": 64}, 5633),
+            ("hjb20", "std", {"width": 32}, 1793),
+            ("burgers", "std", {}, 30701),
+            ("burgers", "tt", {}, 1241),
+            ("darcy", "std", {}, 30701),
+            ("darcy", "tt", {}, 1241),
+        ],
+    )
+    def test_paper_counts(self, pde, variant, kw, expect):
+        assert build_model(pde, variant, **kw).n_params == expect
+
+    def test_compression_ratios(self):
+        """Paper §5.1: 20.44x (BS), 142.27x (HJB), 24.74x (Burgers/Darcy)."""
+        for pde, want in [("bs", 20.44), ("hjb20", 142.27), ("burgers", 24.74)]:
+            std = build_model(pde, "std").n_params
+            tt = build_model(pde, "tt").n_params
+            assert abs(std / tt - want) < 0.1, (pde, std / tt)
+
+
+class TestLayout:
+    @pytest.mark.parametrize("pde", ["bs", "hjb20", "burgers", "darcy"])
+    @pytest.mark.parametrize("variant", ["std", "tt"])
+    def test_layout_is_contiguous_and_complete(self, pde, variant):
+        model = build_model(pde, variant)
+        layout = model.param_layout()
+        off = 0
+        for e in layout:
+            assert e["offset"] == off
+            assert e["len"] == int(np.prod(e["shape"]))
+            off += e["len"]
+        assert off == model.n_params
+
+    def test_unflatten_roundtrip(self):
+        model = build_model("bs", "tt")
+        flat = jnp.asarray(model.init_flat())
+        groups = model.unflatten(flat)
+        rebuilt = jnp.concatenate([p.reshape(-1) for g in groups for p in g])
+        np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(flat))
+
+    def test_init_is_deterministic(self):
+        a = build_model("hjb20", "tt").init_flat()
+        b = build_model("hjb20", "tt").init_flat()
+        np.testing.assert_array_equal(a, b)
+
+
+class TestForward:
+    @pytest.mark.parametrize("pde", ["bs", "hjb20", "burgers", "darcy"])
+    @pytest.mark.parametrize("variant", ["std", "tt"])
+    def test_forward_shapes_finite(self, pde, variant):
+        model = build_model(pde, variant)
+        flat = jnp.asarray(model.init_flat())
+        x = jnp.asarray(np.random.default_rng(0).uniform(0, 1, size=(17, model.d_in)))
+        y = model.apply(flat, x)
+        assert y.shape == (17,)
+        assert bool(jnp.all(jnp.isfinite(y)))
+
+    def test_tt_layer_equals_materialized_dense(self):
+        """TT layer forward == dense forward with W reconstructed."""
+        layer = TTLayer(m=(4, 4, 8), n=(8, 4, 4), ranks=(1, 3, 3, 1), act="identity")
+        rng = np.random.default_rng(11)
+        params = [jnp.asarray(p) for p in layer.init(rng)]
+        x = jnp.asarray(rng.normal(size=(9, 128)))
+        got = layer.apply(params, x, use_pallas=False)
+        w = tt_full_matrix(params[:-1])
+        want = x @ w.T + params[-1]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10)
+
+    def test_pallas_path_matches_jnp_path(self):
+        model = build_model("bs", "tt")
+        flat = jnp.asarray(model.init_flat())
+        x = jnp.asarray(np.random.default_rng(1).uniform(0, 1, size=(33, 2)) * [200.0, 1.0])
+        np.testing.assert_allclose(
+            np.asarray(model.apply(flat, x, use_pallas=True)),
+            np.asarray(model.apply(flat, x, use_pallas=False)),
+            rtol=1e-10,
+        )
+
+    def test_tt_init_variance_matches_xavier(self):
+        """Reconstructed W element variance ~ 2/(fan_in+fan_out)."""
+        layer = TTLayer(m=(8, 8, 8), n=(8, 8, 8), ranks=(1, 4, 4, 1), act="identity")
+        rng = np.random.default_rng(0)
+        vars_ = []
+        for _ in range(5):
+            cores = [jnp.asarray(c) for c in layer.init(rng)[:-1]]
+            w = np.asarray(tt_full_matrix(cores))
+            vars_.append(w.var())
+        target = 2.0 / (512 + 512)
+        assert 0.3 * target < np.mean(vars_) < 3.0 * target
+
+
+class TestValidation:
+    def test_bad_tt_ranks_raise(self):
+        with pytest.raises(ValueError):
+            TTLayer(m=(2, 2), n=(2, 2), ranks=(2, 2, 1), act="tanh")
+        with pytest.raises(ValueError):
+            TTLayer(m=(2, 2), n=(2, 2, 2), ranks=(1, 2, 1), act="tanh")
+
+    def test_unknown_pde_or_variant(self):
+        with pytest.raises(ValueError):
+            build_model("poisson", "std")
+        with pytest.raises(ValueError):
+            build_model("bs", "cp")
+
+    def test_tt_width_override_rejected(self):
+        with pytest.raises(ValueError):
+            build_model("bs", "tt", width=64)

@@ -1,0 +1,157 @@
+"""PDE benchmark definitions: exact solutions, residual identities, and
+the Darcy finite-difference reference solver."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.pdes import (
+    BS_RATE,
+    BS_SIGMA,
+    BS_STRIKE,
+    NU,
+    burgers_exact_np,
+    darcy_fd_solve_np,
+    darcy_k_np,
+    get_pde,
+)
+from compile.stein import ad_bundle
+
+
+class TestBlackScholes:
+    def test_terminal_payoff(self):
+        pde = get_pde("bs")
+        x = jnp.asarray([[50.0, 1.0], [150.0, 1.0], [100.0, 1.0]])
+        np.testing.assert_allclose(pde.exact(x), [0.0, 50.0, 0.0], atol=1e-9)
+
+    def test_lower_boundary_zero(self):
+        pde = get_pde("bs")
+        x = jnp.asarray([[0.0, 0.3], [0.0, 0.9]])
+        np.testing.assert_allclose(pde.exact(x), [0.0, 0.0], atol=1e-12)
+
+    def test_deep_itm_approaches_intrinsic(self):
+        pde = get_pde("bs")
+        x = jnp.asarray([[200.0, 0.5]])
+        want = 200.0 - BS_STRIKE * math.exp(-BS_RATE * 0.5)
+        assert abs(float(pde.exact(x)[0]) - want) < 0.05
+
+    def test_exact_solution_satisfies_pde(self):
+        """AD residual of the analytic price is ~0 in the interior."""
+        pde = get_pde("bs")
+        rng = np.random.default_rng(0)
+        pts = jnp.asarray(np.column_stack([rng.uniform(50, 150, 20), rng.uniform(0.1, 0.8, 20)]))
+        u_fn = lambda _p, x: pde.exact(x)
+        u, g, h = ad_bundle(u_fn, None, pts)
+        r = pde.residual(pts, u, g, h)
+        assert float(jnp.max(jnp.abs(r))) < 1e-6
+
+
+class TestHJB:
+    def test_exact_terminal(self):
+        pde = get_pde("hjb20")
+        rng = np.random.default_rng(0)
+        x = np.column_stack([rng.uniform(0, 1, (5, 20)), np.ones(5)])
+        got = pde.exact(jnp.asarray(x))
+        want = np.abs(x[:, :20]).sum(axis=1)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_exact_solution_satisfies_pde(self):
+        """u = ||x||_1 + 1 - t: u_t = -1, lap = 0, |grad|^2 = 20
+        => -1 + 0 - 0.05*20 + 2 = 0."""
+        pde = get_pde("hjb20")
+        rng = np.random.default_rng(1)
+        pts = jnp.asarray(rng.uniform(0.05, 0.95, (10, 21)))
+        u_fn = lambda _p, x: pde.exact(x)
+        u, g, h = ad_bundle(u_fn, None, pts)
+        r = pde.residual(pts, u, g, h)
+        assert float(jnp.max(jnp.abs(r))) < 1e-8
+
+
+class TestBurgers:
+    def test_initial_condition(self):
+        x = np.column_stack([np.linspace(-1, 1, 11), np.zeros(11)])
+        np.testing.assert_allclose(
+            burgers_exact_np(x), -np.sin(math.pi * x[:, 0]), atol=1e-12
+        )
+
+    def test_boundaries_zero(self):
+        x = np.array([[-1.0, 0.5], [1.0, 0.5], [-1.0, 0.9], [1.0, 0.2]])
+        np.testing.assert_allclose(burgers_exact_np(x), 0.0, atol=1e-8)
+
+    def test_odd_symmetry(self):
+        rng = np.random.default_rng(0)
+        xs, ts = rng.uniform(0, 1, 16), rng.uniform(0, 1, 16)
+        up = burgers_exact_np(np.column_stack([xs, ts]))
+        um = burgers_exact_np(np.column_stack([-xs, ts]))
+        np.testing.assert_allclose(up, -um, atol=1e-8)
+
+    def test_shock_forms_at_origin(self):
+        """By t = 1 the slope at x=0 steepens far beyond the initial -pi."""
+        eps = 1e-3
+        u = burgers_exact_np(np.array([[-eps, 1.0], [eps, 1.0]]))
+        slope = (u[1] - u[0]) / (2 * eps)
+        assert slope < -50.0
+
+    def test_satisfies_pde_via_ad(self):
+        pde = get_pde("burgers")
+        rng = np.random.default_rng(2)
+        pts = jnp.asarray(
+            np.column_stack([rng.uniform(-0.6, 0.6, 10), rng.uniform(0.05, 0.4, 10)])
+        )
+        u_fn = lambda _p, x: pde.exact(x)
+        u, g, h = ad_bundle(u_fn, None, pts)
+        r = pde.residual(pts, u, g, h)
+        assert float(jnp.max(jnp.abs(r))) < 2e-3
+
+
+class TestDarcy:
+    def test_permeability_values(self):
+        pts = np.array([[0.3, 0.3], [0.7, 0.7], [0.05, 0.05], [0.9, 0.2]])
+        np.testing.assert_array_equal(darcy_k_np(pts), [12.0, 12.0, 3.0, 3.0])
+
+    def test_fd_solution_boundary_and_sign(self):
+        xs, ys, u = darcy_fd_solve_np(n=61)
+        assert np.allclose(u[0, :], 0) and np.allclose(u[-1, :], 0)
+        assert np.allclose(u[:, 0], 0) and np.allclose(u[:, -1], 0)
+        # div(k grad u) = +1 with zero BC => u < 0 inside
+        assert u[30, 30] < 0 and u.min() < -1e-3
+
+    def test_fd_grid_convergence(self):
+        """Coarse vs fine solution agree (O(h^2) discretization)."""
+        _, _, u1 = darcy_fd_solve_np(n=41)
+        _, _, u2 = darcy_fd_solve_np(n=81)
+        c = u2[::2, ::2]
+        rel = np.linalg.norm(u1 - c) / np.linalg.norm(c)
+        assert rel < 0.05, rel
+
+    def test_fd_satisfies_stencil_interior(self):
+        """Residual of the solved system is tiny (CG converged)."""
+        n = 41
+        xs, _, u = darcy_fd_solve_np(n=n, tol=1e-12)
+        h = 1.0 / (n - 1)
+        xx, yy = np.meshgrid(xs, xs, indexing="ij")
+        k = darcy_k_np(np.stack([xx.ravel(), yy.ravel()], axis=1)).reshape(n, n)
+        face = lambda a, b: 2 * a * b / (a + b)
+        i, j = 10, 25  # interior point away from k-jumps
+        lap = (
+            face(k[i, j], k[i + 1, j]) * (u[i + 1, j] - u[i, j])
+            - face(k[i, j], k[i - 1, j]) * (u[i, j] - u[i - 1, j])
+            + face(k[i, j], k[i, j + 1]) * (u[i, j + 1] - u[i, j])
+            - face(k[i, j], k[i, j - 1]) * (u[i, j] - u[i, j - 1])
+        ) / h**2
+        assert abs(lap - 1.0) < 1e-6
+
+
+class TestRegistry:
+    def test_all_benchmarks_present(self):
+        for name in ("bs", "hjb20", "burgers", "darcy"):
+            pde = get_pde(name)
+            assert pde.d_in in (2, 21)
+            assert pde.sg_level == 3
+
+    def test_unknown_raises(self):
+        with pytest.raises(ValueError):
+            get_pde("heat")

@@ -1,0 +1,107 @@
+"""Sparse-grid quadrature: node counts (paper Tables 13/16), exactness,
+and Smolyak invariants."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.quadrature import gauss_hermite, smolyak_sparse_grid
+
+
+class TestGaussHermite:
+    @pytest.mark.parametrize("n", range(1, 12))
+    def test_weights_sum_to_one(self, n):
+        _, w = gauss_hermite(n)
+        assert math.isclose(sum(w), 1.0, rel_tol=1e-12)
+
+    @pytest.mark.parametrize("n", range(1, 12))
+    def test_polynomial_exactness(self, n):
+        """Exact for E[x^k], k <= 2n-1 (double factorial moments)."""
+        x, w = gauss_hermite(n)
+        x, w = np.array(x), np.array(w)
+        for k in range(0, 2 * n):
+            got = float(np.sum(w * x**k))
+            want = 0.0 if k % 2 else float(np.prod(np.arange(1, k, 2))) if k else 1.0
+            # Tolerance scales with the magnitude of the summands: high odd
+            # moments cancel ~1e9-sized terms to zero.
+            scale = float(np.sum(w * np.abs(x) ** k))
+            assert math.isclose(got, want, rel_tol=1e-6, abs_tol=1e-9 * scale + 1e-9), (n, k)
+
+    @pytest.mark.parametrize("n", range(1, 12))
+    def test_symmetry(self, n):
+        x, _ = gauss_hermite(n)
+        assert sorted(x) == sorted(-v for v in x)
+        if n % 2 == 1:
+            assert 0.0 in x
+
+
+class TestSmolyak:
+    # Paper-reported node counts: Table 13 (D=2 levels 2-4), Table 16
+    # (D=2 levels 3-7), App. C.2 (D=2 -> 13, D=21 -> 925 at level 3).
+    @pytest.mark.parametrize(
+        "dim,level,expect",
+        [(2, 2, 5), (2, 3, 13), (2, 4, 29), (2, 5, 53), (2, 6, 89), (2, 7, 137), (21, 3, 925)],
+    )
+    def test_paper_node_counts(self, dim, level, expect):
+        assert smolyak_sparse_grid(dim, level).n_nodes == expect
+
+    @pytest.mark.parametrize("dim,level", [(1, 4), (2, 3), (3, 3), (5, 2)])
+    def test_weights_sum_to_one(self, dim, level):
+        g = smolyak_sparse_grid(dim, level)
+        assert math.isclose(g.weights.sum(), 1.0, rel_tol=1e-10)
+
+    @pytest.mark.parametrize("dim,level", [(2, 3), (3, 3), (4, 2)])
+    def test_node_symmetry(self, dim, level):
+        """The grid is closed under negation with equal weights."""
+        g = smolyak_sparse_grid(dim, level)
+        table = {tuple(n): w for n, w in zip(g.nodes, g.weights)}
+        for node, w in table.items():
+            neg = tuple(-v for v in node)
+            assert neg in table and math.isclose(table[neg], w, rel_tol=1e-10)
+
+    def test_level1_is_single_origin_node(self):
+        g = smolyak_sparse_grid(4, 1)
+        assert g.n_nodes == 1
+        assert np.allclose(g.nodes, 0.0) and math.isclose(g.weights[0], 1.0)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        dim=st.integers(1, 4),
+        level=st.integers(1, 4),
+        data=st.data(),
+    )
+    def test_total_degree_exactness(self, dim, level, data):
+        """A level-k rule integrates any monomial of total degree <= 2k-1
+        exactly (the defining Smolyak property for GH-l rules)."""
+        g = smolyak_sparse_grid(dim, level)
+        deg = data.draw(
+            st.lists(st.integers(0, 2 * level - 1), min_size=dim, max_size=dim).filter(
+                lambda ks: sum(ks) <= 2 * level - 1
+            )
+        )
+        vals = np.prod(g.nodes ** np.array(deg), axis=1)
+        got = float(np.sum(g.weights * vals))
+        want = 1.0
+        for k in deg:
+            want *= 0.0 if k % 2 else (float(np.prod(np.arange(1, k, 2))) if k else 1.0)
+        assert math.isclose(got, want, rel_tol=1e-8, abs_tol=1e-8)
+
+    def test_gaussian_integral_convergence(self):
+        """E[exp(a.x)] = exp(||a||^2/2): error decreases with level."""
+        a = np.array([0.3, -0.2])
+        want = math.exp(0.5 * float(a @ a))
+        errs = []
+        for level in (2, 3, 4, 5):
+            g = smolyak_sparse_grid(2, level)
+            got = float(np.sum(g.weights * np.exp(g.nodes @ a)))
+            errs.append(abs(got - want))
+        assert errs[-1] < errs[0] * 1e-3
+
+    def test_invalid_args(self):
+        with pytest.raises(ValueError):
+            smolyak_sparse_grid(0, 2)
+        with pytest.raises(ValueError):
+            smolyak_sparse_grid(2, 0)

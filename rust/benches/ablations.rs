@@ -1,0 +1,19 @@
+//! App. E ablations: Tables 9/10/11/12/13/14/17/18.
+//! Run all (default) or one: `cargo bench --bench ablations -- tt_rank`.
+use optical_pinn::experiments::{ablation, record_table, Backend};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let all = ["tt_rank", "width", "grid", "mc_samples", "sg_level", "sigma", "mu", "queries"];
+    let chosen: Vec<&str> = if args.is_empty() {
+        all.to_vec()
+    } else {
+        all.iter().copied().filter(|a| args.iter().any(|x| x == a)).collect()
+    };
+    for which in chosen {
+        match ablation(which, Backend::Pjrt) {
+            Ok(t) => record_table(&format!("ablation_{which}"), &t),
+            Err(e) => eprintln!("ablation {which}: {e}"),
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Figure 3: training efficiency of ZO families at a fixed photonic
+//! forward budget (standard joint RGE vs DeepZero-style coordinate-wise
+//! vs the paper's TT + tensor-wise RGE).
+use optical_pinn::experiments::{fig3, record_table, Backend};
+
+fn main() {
+    let t = fig3(Backend::Pjrt).expect("fig3");
+    record_table("fig3_zo_efficiency", &t);
+}

@@ -1,0 +1,105 @@
+//! §Perf hot-path benchmarks: the L3 components that sit on the training
+//! loop, measured at realistic shapes, plus the native-vs-PJRT loss
+//! latency comparison that drives the backend choice.
+//!
+//! Before/after numbers from the optimization pass are recorded in
+//! EXPERIMENTS.md §Perf.
+
+use optical_pinn::bench_harness::{bench, black_box, record, Table};
+use optical_pinn::engine::native::default_threads;
+use optical_pinn::engine::{Engine, NativeEngine, PjrtEngine};
+use optical_pinn::experiments::runner::artifacts_dir;
+use optical_pinn::linalg::gemm::{matmul, matmul_parallel};
+use optical_pinn::net::build_model;
+use optical_pinn::photonic::{PhotonicModel, PhotonicVariant};
+use optical_pinn::quadrature::smolyak_sparse_grid;
+use optical_pinn::stein::SteinEstimator;
+use optical_pinn::util::json::Json;
+use optical_pinn::util::rng::Rng;
+
+fn main() {
+    let mut table = Table::new("§Perf hot paths", &["op", "mean ms", "throughput"]);
+    let mut rng = Rng::new(0);
+    let threads = default_threads();
+
+    // 1. GEMM at the BS Stein-batch shape: (2730 x 128) x (128 x 128)
+    let (m, k, n) = (2730, 128, 128);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    let t = bench("gemm_serial", 3, 20, || {
+        black_box(matmul(m, k, n, &a, &b));
+    });
+    let gflops = 2.0 * (m * k * n) as f64 / t.mean_s / 1e9;
+    table.row(vec!["gemm 2730x128x128 serial".into(), format!("{:.3}", t.per_iter_ms()), format!("{gflops:.2} GFLOP/s")]);
+    let t = bench("gemm_parallel", 3, 20, || {
+        black_box(matmul_parallel(m, k, n, &a, &b, threads));
+    });
+    let gflops = 2.0 * (m * k * n) as f64 / t.mean_s / 1e9;
+    table.row(vec![format!("gemm 2730x128x128 x{threads} threads"), format!("{:.3}", t.per_iter_ms()), format!("{gflops:.2} GFLOP/s")]);
+
+    // 2. Stein batch assembly + contraction (no forward)
+    let grid = smolyak_sparse_grid(2, 3);
+    let est = SteinEstimator::from_grid(&grid, 1e-3);
+    let x: Vec<f64> = (0..200).map(|_| rng.uniform_in(0.0, 1.0)).collect();
+    let t = bench("stein_batch", 3, 100, || {
+        black_box(est.build_batch(&x, 100));
+    });
+    table.row(vec!["stein build_batch (100 pts)".into(), format!("{:.4}", t.per_iter_ms()), format!("{:.1} Mpts/s", 2700.0 / t.mean_s / 1e6)]);
+    let vals: Vec<f64> = (0..2700).map(|_| rng.normal()).collect();
+    let t = bench("stein_contract", 3, 100, || {
+        black_box(est.contract(&vals, 100));
+    });
+    table.row(vec!["stein contract (100 pts)".into(), format!("{:.4}", t.per_iter_ms()), String::new()]);
+
+    // 3. Full native loss vs PJRT loss (the training-step inner op)
+    for (pde, variant) in [("bs", "tt"), ("bs", "std"), ("hjb20", "tt")] {
+        let mut native = NativeEngine::new(pde, variant).unwrap();
+        let params = native.model.init_flat(0);
+        let mut prng = Rng::new(1);
+        let pts = native.pde().sample_points(&mut prng);
+        let t = bench(&format!("native_loss_{pde}_{variant}"), 2, 10, || {
+            black_box(native.loss(&params, &pts).unwrap());
+        });
+        table.row(vec![format!("loss {pde}/{variant} native"), format!("{:.2}", t.per_iter_ms()), format!("{:.0} loss/s", 1.0 / t.mean_s)]);
+        if let Some(dir) = artifacts_dir() {
+            let mut pjrt = PjrtEngine::new(&dir, pde, &format!("{pde}_{variant}"), "sg").unwrap();
+            let t = bench(&format!("pjrt_loss_{pde}_{variant}"), 2, 10, || {
+                black_box(pjrt.loss(&params, &pts).unwrap());
+            });
+            table.row(vec![format!("loss {pde}/{variant} pjrt"), format!("{:.2}", t.per_iter_ms()), format!("{:.0} loss/s", 1.0 / t.mean_s)]);
+        }
+    }
+
+    // 4. Photonic realize (phase -> weights) — the phase-domain hot path
+    let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+    let phi = pm.init_phases(0);
+    let t = bench("tonn_realize", 3, 100, || {
+        black_box(pm.realize(&phi));
+    });
+    table.row(vec!["TONN realize (bs)".into(), format!("{:.3}", t.per_iter_ms()), String::new()]);
+    let mut pm2 = PhotonicModel::new("bs", PhotonicVariant::Onn, 0).unwrap();
+    let phi2 = pm2.init_phases(0);
+    let t = bench("onn_realize", 3, 20, || {
+        black_box(pm2.realize(&phi2));
+    });
+    table.row(vec!["ONN realize (bs, 18k MZIs)".into(), format!("{:.3}", t.per_iter_ms()), String::new()]);
+
+    // 5. TT contraction vs dense forward at the hidden-layer shape
+    let tt_model = build_model("bs", "tt", 2, None).unwrap();
+    let tt_params = tt_model.init_flat(0);
+    let xs: Vec<f64> = (0..2730 * 2).map(|_| rng.uniform_in(0.0, 1.0)).collect();
+    let t = bench("tt_forward", 3, 20, || {
+        black_box(tt_model.forward(&tt_params, &xs, 2730, threads));
+    });
+    table.row(vec!["TT-MLP fwd 2730 pts".into(), format!("{:.3}", t.per_iter_ms()), format!("{:.1} kpts/s", 2.73 / t.mean_s)]);
+    let std_model = build_model("bs", "std", 2, None).unwrap();
+    let std_params = std_model.init_flat(0);
+    let t = bench("std_forward", 3, 20, || {
+        black_box(std_model.forward(&std_params, &xs, 2730, threads));
+    });
+    table.row(vec!["Std-MLP fwd 2730 pts".into(), format!("{:.3}", t.per_iter_ms()), format!("{:.1} kpts/s", 2.73 / t.mean_s)]);
+
+    table.print();
+    record("hotpath", table.to_json());
+    let _ = Json::Null;
+}

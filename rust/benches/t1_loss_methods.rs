@@ -1,0 +1,9 @@
+//! Table 1 (+Table 7): relative-l2 error of loss computation backends
+//! (AD / Monte-Carlo Stein / sparse-grid Stein) under FO training.
+//! Scaled-down by default; OPINN_FULL=1 for paper-scale epochs/seeds.
+use optical_pinn::experiments::{record_table, table1, Backend};
+
+fn main() {
+    let t = table1(Backend::Pjrt).expect("table1 (needs `make artifacts`)");
+    record_table("t1_loss_methods", &t);
+}

@@ -1,0 +1,8 @@
+//! Table 2 (+Table 8, Figure 7 curves): FO vs ZO x Std vs TT with the
+//! sparse-grid loss. Curves land in bench_out/curves_fig7_*.csv.
+use optical_pinn::experiments::{record_table, table2, Backend};
+
+fn main() {
+    let t = table2(Backend::Pjrt).expect("table2 (needs `make artifacts`)");
+    record_table("t2_training_methods", &t);
+}

@@ -1,0 +1,15 @@
+//! Table 3 (+Tables 19/20, Figures 4/8/9): phase-domain on-chip training
+//! protocols (FLOPS vs L2ight vs ours) under the App. F.2 non-idealities.
+//! Error curves land in bench_out/curves_fig4_*.csv.
+use optical_pinn::experiments::{record_table, table3, Backend};
+
+fn main() {
+    // full 4-benchmark sweep under OPINN_FULL; bs+hjb20 otherwise
+    let pdes: &[&str] = if optical_pinn::bench_harness::full_scale() {
+        &["bs", "hjb20", "burgers", "darcy"]
+    } else {
+        &["bs"]
+    };
+    let t = table3(Backend::Pjrt, pdes).expect("table3");
+    record_table("t3_photonic_training", &t);
+}

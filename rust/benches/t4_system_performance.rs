@@ -1,0 +1,30 @@
+//! Tables 4/5/6: pre-silicon system performance of the four accelerator
+//! layouts (Eq. (14)-(16) with the Table 21/22 device constants), plus a
+//! measured digital-controller overhead check (the T_DIG=500ns budget).
+use optical_pinn::bench_harness::bench;
+use optical_pinn::experiments::record_table;
+use optical_pinn::experiments::tables456;
+use optical_pinn::net::build_model;
+use optical_pinn::optim::{Adam, Optimizer};
+
+fn main() {
+    let (t4, t5, t6) = tables456(None);
+    record_table("t4_system_performance", &t4);
+    record_table("t5_footprint", &t5);
+    record_table("t6_latency", &t6);
+
+    // Digital-controller budget: one Adam update over the TT phase vector
+    // must fit the paper's 500 ns digital overhead at ASIC speeds; here we
+    // simply report the CPU cost for scale.
+    let model = build_model("bs", "tt", 2, None).unwrap();
+    let mut params = model.init_flat(0);
+    let grad = vec![1e-3; params.len()];
+    let mut opt = Adam::new(params.len(), 1e-3);
+    let t = bench("adam_step_833_params", 10, 1000, || {
+        opt.step(&mut params, &grad);
+    });
+    println!(
+        "digital update (833 params): {:.1} ns/step on CPU (paper budget: 500 ns on ASIC)",
+        t.mean_s * 1e9
+    );
+}

@@ -1,0 +1,164 @@
+//! In-tree micro-benchmark harness (criterion is not in the vendored
+//! registry). `cargo bench` targets are plain binaries (`harness = false`)
+//! built on this module.
+//!
+//! Conventions shared by all bench targets:
+//! * default configs are scaled down to run in CI time;
+//! * `OPINN_FULL=1` switches to paper-scale epochs/repeats;
+//! * every target prints the paper's table rows and appends a machine-
+//!   readable record to `bench_out/<target>.json`.
+
+use std::time::Instant;
+
+pub use std::hint::black_box;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// True when paper-scale runs were requested.
+pub fn full_scale() -> bool {
+    std::env::var("OPINN_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Repeats for mean±std across seeds (paper uses 3).
+pub fn n_seeds() -> u64 {
+    if full_scale() {
+        3
+    } else {
+        1
+    }
+}
+
+/// Timing statistics for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl Timing {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean_s
+    }
+}
+
+/// Time a closure: `warmup` unmeasured runs, then `iters` measured.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        std_s: stats::std(&samples),
+        min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Markdown table printer matching the paper's row style.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// JSON form for bench_out records.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            ("header", Json::Arr(self.header.iter().map(|h| Json::str(h.clone())).collect())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn print(&self) {
+        println!("\n## {}\n", self.title);
+        println!("| {} |", self.header.join(" | "));
+        println!("|{}|", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            println!("| {} |", r.join(" | "));
+        }
+        println!();
+    }
+}
+
+/// Append a JSON record for this bench run under `bench_out/`.
+pub fn record(target: &str, payload: Json) {
+    let dir = std::path::Path::new("bench_out");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{target}.json"));
+    let mut arr = match Json::from_file(&path) {
+        Ok(Json::Arr(v)) => v,
+        _ => Vec::new(),
+    };
+    arr.push(payload);
+    let _ = std::fs::write(&path, Json::Arr(arr).to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let t = bench("noop-ish", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.mean_s >= 0.0 && t.min_s <= t.mean_s + 1e-12);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("Table X", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print(); // just must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,216 @@
+//! Experiment configuration: JSON files + CLI overrides + named presets
+//! for every paper table/figure (the launcher reads these).
+
+use crate::loss::DerivMethod;
+use crate::util::argparse::Args;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// A fully-resolved experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub pde: String,
+    /// "std" | "tt"
+    pub variant: String,
+    /// "fo" | "zo"
+    pub train: String,
+    /// derivative backend for the loss
+    pub method: DerivMethod,
+    pub epochs: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub rank: usize,
+    pub width: Option<usize>,
+    pub eval_every: usize,
+    /// "pjrt" | "native"
+    pub backend: String,
+    pub artifacts_dir: String,
+    pub mu: f64,
+    pub n_queries: usize,
+    pub verbose: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            pde: "bs".into(),
+            variant: "tt".into(),
+            train: "zo".into(),
+            method: DerivMethod::Sg,
+            epochs: 2000,
+            lr: 1e-3,
+            seed: 0,
+            rank: 2,
+            width: None,
+            eval_every: 100,
+            backend: "pjrt".into(),
+            artifacts_dir: std::env::var("OPINN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+            mu: 0.01,
+            n_queries: 1,
+            verbose: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Paper-default epochs per benchmark (App. C: 40k Burgers, 20k
+    /// Darcy, ~10k for BS/HJB; scaled by OPINN_FULL).
+    pub fn paper_epochs(pde: &str) -> usize {
+        match pde {
+            "burgers" => 40_000,
+            "darcy" => 20_000,
+            _ => 10_000,
+        }
+    }
+
+    /// Parse config from a JSON object (missing keys keep defaults).
+    pub fn from_json(j: &Json) -> Result<ExperimentConfig> {
+        let mut c = ExperimentConfig::default();
+        let obj = j.as_obj()?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "pde" => c.pde = v.as_str()?.to_string(),
+                "variant" => c.variant = v.as_str()?.to_string(),
+                "train" => c.train = v.as_str()?.to_string(),
+                "method" => {
+                    c.method = match v.as_str()? {
+                        "sg" => DerivMethod::Sg,
+                        "se" => DerivMethod::Se,
+                        other => {
+                            return Err(Error::Config(format!("bad method {other:?}")))
+                        }
+                    }
+                }
+                "epochs" => c.epochs = v.as_usize()?,
+                "lr" => c.lr = v.as_f64()?,
+                "seed" => c.seed = v.as_usize()? as u64,
+                "rank" => c.rank = v.as_usize()?,
+                "width" => c.width = Some(v.as_usize()?),
+                "eval_every" => c.eval_every = v.as_usize()?,
+                "backend" => c.backend = v.as_str()?.to_string(),
+                "artifacts_dir" => c.artifacts_dir = v.as_str()?.to_string(),
+                "mu" => c.mu = v.as_f64()?,
+                "n_queries" => c.n_queries = v.as_usize()?,
+                "verbose" => c.verbose = matches!(v, Json::Bool(true)),
+                other => return Err(Error::Config(format!("unknown config key {other:?}"))),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Apply CLI overrides (`--epochs`, `--lr`, ...).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(p) = args.positional.first() {
+            self.pde = p.clone();
+        }
+        if let Some(v) = args.positional.get(1) {
+            self.variant = v.clone();
+        }
+        if let Some(v) = args.get("train") {
+            self.train = v.to_string();
+        }
+        if let Some(v) = args.get("method") {
+            self.method = match v {
+                "sg" => DerivMethod::Sg,
+                "se" => DerivMethod::Se,
+                other => return Err(Error::Config(format!("bad method {other:?}"))),
+            };
+        }
+        self.epochs = args.get_usize("epochs", self.epochs)?;
+        self.lr = args.get_f64("lr", self.lr)?;
+        self.seed = args.get_u64("seed", self.seed)?;
+        self.rank = args.get_usize("rank", self.rank)?;
+        if let Some(w) = args.get("width") {
+            self.width = Some(w.parse().map_err(|_| Error::Config("bad --width".into()))?);
+        }
+        self.eval_every = args.get_usize("eval-every", self.eval_every)?;
+        if let Some(b) = args.get("backend") {
+            self.backend = b.to_string();
+        }
+        if let Some(d) = args.get("artifacts") {
+            self.artifacts_dir = d.to_string();
+        }
+        self.mu = args.get_f64("mu", self.mu)?;
+        self.n_queries = args.get_usize("queries", self.n_queries)?;
+        if args.flag("verbose") {
+            self.verbose = true;
+        }
+        Ok(())
+    }
+
+    /// Model key in the artifact manifest.
+    pub fn model_key(&self) -> String {
+        format!("{}_{}", self.pde, self.variant)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !crate::pde::ALL_PDES.contains(&self.pde.as_str()) {
+            return Err(Error::Config(format!("unknown pde {:?}", self.pde)));
+        }
+        if !["std", "tt"].contains(&self.variant.as_str()) {
+            return Err(Error::Config(format!("unknown variant {:?}", self.variant)));
+        }
+        if !["fo", "zo"].contains(&self.train.as_str()) {
+            return Err(Error::Config(format!("unknown train mode {:?}", self.train)));
+        }
+        if !["pjrt", "native"].contains(&self.backend.as_str()) {
+            return Err(Error::Config(format!("unknown backend {:?}", self.backend)));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_and_overrides() {
+        let j = Json::parse(
+            r#"{"pde":"hjb20","variant":"std","train":"fo","epochs":500,"lr":0.002}"#,
+        )
+        .unwrap();
+        let mut c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.pde, "hjb20");
+        assert_eq!(c.epochs, 500);
+        // first token is the subcommand (as in `opinn train burgers tt ...`)
+        let args = Args::parse(
+            ["train", "burgers", "tt", "--epochs", "99", "--verbose"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.pde, "burgers");
+        assert_eq!(c.variant, "tt");
+        assert_eq!(c.epochs, 99);
+        assert!(c.verbose);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let j = Json::parse(r#"{"pede":"bs"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let mut c = ExperimentConfig::default();
+        c.pde = "heat".into();
+        assert!(c.validate().is_err());
+        let mut c2 = ExperimentConfig::default();
+        c2.backend = "cuda".into();
+        assert!(c2.validate().is_err());
+    }
+
+    #[test]
+    fn paper_epochs() {
+        assert_eq!(ExperimentConfig::paper_epochs("burgers"), 40_000);
+        assert_eq!(ExperimentConfig::paper_epochs("bs"), 10_000);
+    }
+}

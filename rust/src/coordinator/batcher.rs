@@ -1,0 +1,205 @@
+//! Dynamic batcher: a bounded request queue + a worker that packs
+//! outstanding forward requests into one engine call (vLLM-router style,
+//! scaled to this system's needs).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use crate::{err, Result};
+
+/// One forward request: `points` is (n x d) flattened; the response is the
+/// n output values.
+struct Request {
+    points: Vec<f64>,
+    n: usize,
+    resp: SyncSender<Vec<f64>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Max points fused into a single engine call.
+    pub max_batch_points: usize,
+    /// Bounded queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch_points: 8192, queue_depth: 64 }
+    }
+}
+
+/// A batched inference front-end over a thread-safe forward closure.
+pub struct InferenceServer {
+    tx: Option<SyncSender<Request>>,
+    worker: Option<JoinHandle<u64>>,
+    d: usize,
+}
+
+impl InferenceServer {
+    /// Spawn the worker. `forward(points, n) -> values` must be Send.
+    pub fn start<F>(d: usize, cfg: BatcherConfig, mut forward: F) -> InferenceServer
+    where
+        F: FnMut(&[f64], usize) -> Vec<f64> + Send + 'static,
+    {
+        let (tx, rx): (SyncSender<Request>, Receiver<Request>) = sync_channel(cfg.queue_depth);
+        let worker = std::thread::spawn(move || {
+            let mut batches: u64 = 0;
+            loop {
+                // block for the first request; drain opportunistically
+                let first = match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break,
+                };
+                let mut pending = vec![first];
+                let mut total = pending[0].n;
+                while total < cfg.max_batch_points {
+                    match rx.try_recv() {
+                        Ok(r) => {
+                            total += r.n;
+                            pending.push(r);
+                        }
+                        Err(_) => break,
+                    }
+                }
+                // pack into one call
+                let mut big = Vec::with_capacity(total * d);
+                for r in &pending {
+                    big.extend_from_slice(&r.points);
+                }
+                let vals = forward(&big, total);
+                batches += 1;
+                let mut off = 0;
+                for r in pending {
+                    let out = vals[off..off + r.n].to_vec();
+                    off += r.n;
+                    let _ = r.resp.send(out); // receiver may have gone away
+                }
+            }
+            batches
+        });
+        InferenceServer { tx: Some(tx), worker: Some(worker), d }
+    }
+
+    /// Submit a forward request and wait for its results.
+    pub fn infer(&self, points: &[f64], n: usize) -> Result<Vec<f64>> {
+        if points.len() != n * self.d {
+            return Err(crate::Error::Shape(format!(
+                "infer: {} coords for n={n}, d={}",
+                points.len(),
+                self.d
+            )));
+        }
+        let (rtx, rrx) = sync_channel(1);
+        let req = Request { points: points.to_vec(), n, resp: rtx };
+        let tx = self.tx.as_ref().ok_or_else(|| err("server stopped"))?;
+        // block on backpressure
+        let mut req = Some(req);
+        loop {
+            match tx.try_send(req.take().unwrap()) {
+                Ok(()) => break,
+                Err(TrySendError::Full(r)) => {
+                    req = Some(r);
+                    std::thread::yield_now();
+                }
+                Err(TrySendError::Disconnected(_)) => return Err(err("worker died")),
+            }
+        }
+        rrx.recv().map_err(|_| err("worker dropped response"))
+    }
+
+    /// Stop the worker; returns the number of fused batches it executed.
+    pub fn shutdown(mut self) -> u64 {
+        self.tx.take();
+        self.worker.take().map(|w| w.join().unwrap_or(0)).unwrap_or(0)
+    }
+}
+
+impl Drop for InferenceServer {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    fn double(points: &[f64], n: usize) -> Vec<f64> {
+        assert_eq!(points.len() % n, 0);
+        let d = points.len() / n;
+        (0..n).map(|i| 2.0 * points[i * d]).collect()
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let srv = InferenceServer::start(2, BatcherConfig::default(), double);
+        let out = srv.infer(&[1.0, 0.0, 3.0, 0.0], 2).unwrap();
+        assert_eq!(out, vec![2.0, 6.0]);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn results_are_demultiplexed_correctly_under_concurrency() {
+        let srv = Arc::new(InferenceServer::start(1, BatcherConfig::default(), double));
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let s = Arc::clone(&srv);
+            handles.push(std::thread::spawn(move || {
+                for k in 0..50 {
+                    let x = (t * 100 + k) as f64;
+                    let out = s.infer(&[x, x + 1.0], 2).unwrap();
+                    assert_eq!(out, vec![2.0 * x, 2.0 * (x + 1.0)]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn batching_actually_fuses_requests() {
+        // slow forward so requests pile up behind the first
+        let calls = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&calls);
+        let srv = Arc::new(InferenceServer::start(
+            1,
+            BatcherConfig { max_batch_points: 1024, queue_depth: 64 },
+            move |pts: &[f64], n: usize| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                double(pts, n)
+            },
+        ));
+        let mut handles = Vec::new();
+        for t in 0..16 {
+            let s = Arc::clone(&srv);
+            handles.push(std::thread::spawn(move || {
+                s.infer(&[t as f64], 1).unwrap()
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total_calls = calls.load(Ordering::SeqCst);
+        assert!(total_calls < 16, "no fusion happened: {total_calls} calls");
+        let batches = match Arc::try_unwrap(srv) {
+            Ok(s) => s.shutdown(),
+            Err(_) => panic!("server still shared"),
+        };
+        assert_eq!(batches, total_calls);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let srv = InferenceServer::start(3, BatcherConfig::default(), double);
+        assert!(srv.infer(&[1.0, 2.0], 1).is_err());
+        srv.shutdown();
+    }
+}

@@ -1,0 +1,70 @@
+//! Parameter/phase checkpointing (JSON; full f64 round-trip).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Save a flat vector with metadata.
+pub fn save_params(path: &Path, name: &str, step: usize, params: &[f64]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let obj = Json::obj(vec![
+        ("name", Json::str(name)),
+        ("step", Json::Num(step as f64)),
+        ("len", Json::Num(params.len() as f64)),
+        ("params", Json::arr_f64(params)),
+    ]);
+    std::fs::write(path, obj.to_string())?;
+    Ok(())
+}
+
+/// Load a checkpoint; returns (name, step, params).
+pub fn load_params(path: &Path) -> Result<(String, usize, Vec<f64>)> {
+    let j = Json::from_file(path)?;
+    let name = j.req("name")?.as_str()?.to_string();
+    let step = j.req("step")?.as_usize()?;
+    let params = j.req("params")?.as_f64_vec()?;
+    let want = j.req("len")?.as_usize()?;
+    if params.len() != want {
+        return Err(Error::Json(format!(
+            "checkpoint corrupt: len field {want} != {} values",
+            params.len()
+        )));
+    }
+    Ok((name, step, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_bits() {
+        let dir = std::env::temp_dir().join("opinn_ckpt_test");
+        let path = dir.join("p.json");
+        let params = vec![1.0, -2.5e-13, 0.1 + 0.2, f64::MIN_POSITIVE];
+        save_params(&path, "bs_tt", 42, &params).unwrap();
+        let (name, step, loaded) = load_params(&path).unwrap();
+        assert_eq!(name, "bs_tt");
+        assert_eq!(step, 42);
+        assert_eq!(loaded, params);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        assert!(load_params(Path::new("/nonexistent/x.json")).is_err());
+    }
+
+    #[test]
+    fn corrupt_len_detected() {
+        let dir = std::env::temp_dir().join("opinn_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.json");
+        std::fs::write(&path, r#"{"name":"x","step":1,"len":5,"params":[1,2]}"#).unwrap();
+        assert!(load_params(&path).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

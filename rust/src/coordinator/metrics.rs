@@ -1,0 +1,147 @@
+//! Run metrics: counters, timers, and CSV training-curve export.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::Result;
+
+/// A lightweight metrics registry for a training run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    /// (step, column -> value) records for curve export
+    curve: Vec<(usize, BTreeMap<String, f64>)>,
+    timers: BTreeMap<String, (f64, u64)>, // total secs, count
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Time a closure, accumulating under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        let e = self.timers.entry(name.to_string()).or_insert((0.0, 0));
+        e.0 += t.elapsed().as_secs_f64();
+        e.1 += 1;
+        out
+    }
+
+    pub fn timer_mean_ms(&self, name: &str) -> Option<f64> {
+        self.timers.get(name).map(|(tot, n)| 1e3 * tot / (*n).max(1) as f64)
+    }
+
+    /// Append one row of the training curve.
+    pub fn curve_point(&mut self, step: usize, cols: &[(&str, f64)]) {
+        let row = cols.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        self.curve.push((step, row));
+    }
+
+    /// Export the curve as CSV (header from the union of columns).
+    pub fn curve_csv(&self) -> String {
+        let mut cols: Vec<String> = Vec::new();
+        for (_, row) in &self.curve {
+            for k in row.keys() {
+                if !cols.contains(k) {
+                    cols.push(k.clone());
+                }
+            }
+        }
+        let mut out = String::from("step");
+        for c in &cols {
+            out.push(',');
+            out.push_str(c);
+        }
+        out.push('\n');
+        for (step, row) in &self.curve {
+            out.push_str(&step.to_string());
+            for c in &cols {
+                out.push(',');
+                if let Some(v) = row.get(c) {
+                    out.push_str(&format!("{v:.6e}"));
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_curve_csv(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.curve_csv())?;
+        Ok(())
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> = self
+            .counters
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        parts.extend(self.gauges.iter().map(|(k, v)| format!("{k}={v:.4e}")));
+        for (k, (tot, n)) in &self.timers {
+            parts.push(format!("{k}={:.2}ms x{n}", 1e3 * tot / (*n).max(1) as f64));
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = Metrics::new();
+        m.inc("fwd", 3);
+        m.inc("fwd", 2);
+        m.set_gauge("rel_l2", 0.05);
+        assert_eq!(m.counter("fwd"), 5);
+        assert_eq!(m.counter("missing"), 0);
+        assert_eq!(m.gauge("rel_l2"), Some(0.05));
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let mut m = Metrics::new();
+        for _ in 0..3 {
+            m.time("op", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        }
+        let mean = m.timer_mean_ms("op").unwrap();
+        assert!(mean >= 1.0, "{mean}");
+    }
+
+    #[test]
+    fn curve_csv_format() {
+        let mut m = Metrics::new();
+        m.curve_point(0, &[("loss", 1.0), ("err", 0.5)]);
+        m.curve_point(10, &[("loss", 0.1)]);
+        let csv = m.curve_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,err,loss");
+        assert!(lines[1].starts_with("0,"));
+        assert!(lines[2].starts_with("10,,") || lines[2].contains(",,"));
+    }
+}

@@ -1,0 +1,16 @@
+//! The digital control system (paper §4, Fig. 2a): request batching in
+//! front of the inference engine, run metrics, and checkpointing.
+//!
+//! The photonic accelerator amortizes its DAC/ADC conversion latency by
+//! batching forward queries (App. B.2: ~1000 inputs per weight update);
+//! [`batcher::InferenceServer`] models that front-end: a bounded queue of
+//! forward requests packed into maximal batches by a worker thread, with
+//! backpressure on the submitting side.
+
+pub mod batcher;
+pub mod checkpoint;
+pub mod metrics;
+
+pub use batcher::{BatcherConfig, InferenceServer};
+pub use checkpoint::{load_params, save_params};
+pub use metrics::Metrics;

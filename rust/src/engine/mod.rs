@@ -1,0 +1,52 @@
+//! Execution engines: the common trait plus the native (pure-rust) and
+//! PJRT (AOT-compiled XLA) implementations.
+//!
+//! The production hot path is [`PjrtEngine`]: it executes the HLO graphs
+//! lowered once by `python/compile/aot.py` (L2+L1), so the compiled
+//! Pallas/JAX numerics run under the rust coordinator with no Python in
+//! the loop. [`NativeEngine`] re-implements the same forward/loss in pure
+//! rust; it cross-checks the artifacts, drives the photonic phase-domain
+//! simulation when artifacts are absent, and serves as the reference for
+//! the §Perf comparisons.
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::NativeEngine;
+pub use pjrt::{PjrtEngine, PjrtRuntime};
+
+use crate::pde::{Pde, PointSet};
+use crate::util::rng::Rng;
+use crate::util::stats::rel_l2;
+use crate::Result;
+
+/// A loss/forward evaluation backend for one (pde, model) pair.
+pub trait Engine {
+    /// The PDE benchmark this engine is bound to.
+    fn pde(&self) -> &dyn Pde;
+    /// Flat parameter count of the bound model.
+    fn n_params(&self) -> usize;
+    /// PINN loss at `params` over the collocation set.
+    fn loss(&mut self, params: &[f64], pts: &PointSet) -> Result<f64>;
+    /// (loss, d loss / d params) — only available where a grad artifact
+    /// exists (FO baselines); native engines return Unsupported.
+    fn loss_grad(&mut self, params: &[f64], pts: &PointSet) -> Result<(f64, Vec<f64>)>;
+    /// Transformed solution u_theta at arbitrary points.
+    fn forward_u(&mut self, params: &[f64], x: &[f64], n: usize) -> Result<Vec<f64>>;
+    /// Photonic-inference queries consumed per loss() call (latency model).
+    fn forwards_per_loss(&self) -> usize;
+    /// Refresh any per-step stochastic state (SE backend's MC nodes).
+    fn resample(&mut self, _rng: &mut Rng) {}
+    /// Human-readable backend tag ("native" / "pjrt").
+    fn backend(&self) -> &'static str;
+}
+
+/// Relative-l2 error of the engine's solution on the PDE's eval cloud.
+pub fn rel_l2_eval(engine: &mut dyn Engine, params: &[f64], rng: &mut Rng) -> Result<f64> {
+    let d = engine.pde().d_in();
+    let pts = engine.pde().eval_points(rng);
+    let n = pts.len() / d;
+    let pred = engine.forward_u(params, &pts, n)?;
+    let exact = engine.pde().exact(&pts, n);
+    Ok(rel_l2(&pred, &exact))
+}

@@ -1,0 +1,313 @@
+//! PJRT runtime: load AOT-compiled HLO text, compile once, execute from
+//! the training hot path (the L3 <-> L2 boundary).
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO **text** is the interchange
+//! format (xla_extension 0.5.1 rejects jax>=0.5 64-bit-id protos), graphs
+//! are lowered with `return_tuple=True`, so every output is a tuple.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use super::Engine;
+use crate::pde::{get_pde, Pde, PointSet};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::{err, Error, Result};
+
+/// Shared runtime: one PJRT client + a compile cache keyed by artifact
+/// name + the parsed manifest.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Json,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// executions performed (telemetry for the coordinator)
+    pub exec_count: u64,
+}
+
+impl PjrtRuntime {
+    /// Open the artifacts directory produced by `make artifacts`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Json::from_file(&dir.join("manifest.json")).map_err(|e| {
+            Error::Config(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, dir, manifest, cache: HashMap::new(), exec_count: 0 })
+    }
+
+    /// Default artifacts location: $OPINN_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<PjrtRuntime> {
+        let dir = std::env::var("OPINN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(dir)
+    }
+
+    /// Manifest metadata for one artifact.
+    pub fn artifact_meta(&self, name: &str) -> Result<&Json> {
+        self.manifest
+            .req("artifacts")?
+            .as_arr()?
+            .iter()
+            .find(|a| a.get("name").and_then(|n| n.as_str().ok().map(|s| s == name)).unwrap_or(false))
+            .ok_or_else(|| Error::Config(format!("artifact {name:?} not in manifest")))
+    }
+
+    /// Manifest metadata for one model key.
+    pub fn model_meta(&self, key: &str) -> Result<&Json> {
+        self.manifest.req("models")?.req(key)
+    }
+
+    /// Declared input shapes of an artifact, in call order.
+    pub fn input_shapes(&self, name: &str) -> Result<Vec<(String, Vec<usize>)>> {
+        let meta = self.artifact_meta(name)?;
+        meta.req("inputs")?
+            .as_arr()?
+            .iter()
+            .map(|i| {
+                let nm = i.req("name")?.as_str()?.to_string();
+                let shape: Vec<usize> = i
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|v| v.as_usize())
+                    .collect::<Result<_>>()?;
+                Ok((nm, shape))
+            })
+            .collect()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let file = self.artifact_meta(name)?.req("file")?.as_str()?.to_string();
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with f64 inputs, returning each tuple output as
+    /// a flat Vec<f64>. Shapes are validated against the manifest.
+    pub fn exec(&mut self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        self.load(name)?;
+        let shapes = self.input_shapes(name)?;
+        if shapes.len() != inputs.len() {
+            return Err(Error::Shape(format!(
+                "{name}: expected {} inputs, got {}",
+                shapes.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for ((in_name, shape), data) in shapes.iter().zip(inputs) {
+            let want: usize = shape.iter().product();
+            if want != data.len() {
+                return Err(Error::Shape(format!(
+                    "{name}/{in_name}: expected {want} elems {shape:?}, got {}",
+                    data.len()
+                )));
+            }
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(if dims.len() == 1 { lit } else { lit.reshape(&dims)? });
+        }
+        let exe = self.cache.get(name).expect("loaded above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        self.exec_count += 1;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f64>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// Engine backed by AOT-compiled loss / grad / fwd graphs.
+pub struct PjrtEngine {
+    rt: PjrtRuntime,
+    pde: Box<dyn Pde>,
+    pub model_key: String,
+    loss_name: String,
+    grad_name: Option<String>,
+    fwd_name: Option<String>,
+    n_params: usize,
+    /// MC nodes buffer for the SE backend (resampled per step).
+    mc_nodes: Option<Vec<f64>>,
+    queries_per_loss: usize,
+    fwd_batch: usize,
+}
+
+impl PjrtEngine {
+    /// Standard construction: `<model_key>_{loss,grad}_<method>` + fwd.
+    pub fn new(dir: impl AsRef<Path>, pde_name: &str, model_key: &str, method: &str) -> Result<PjrtEngine> {
+        let loss = format!("{model_key}_loss_{method}");
+        let grad = format!("{model_key}_grad_{method}");
+        let fwd = format!("{model_key}_fwd");
+        Self::from_names(dir, pde_name, model_key, &loss, Some(&grad), Some(&fwd))
+    }
+
+    /// Explicit artifact names (ablation variants, pallas flagship, ...).
+    pub fn from_names(
+        dir: impl AsRef<Path>,
+        pde_name: &str,
+        model_key: &str,
+        loss_name: &str,
+        grad_name: Option<&str>,
+        fwd_name: Option<&str>,
+    ) -> Result<PjrtEngine> {
+        let rt = PjrtRuntime::new(dir)?;
+        let pde = get_pde(pde_name)?;
+        let n_params = rt.model_meta(model_key)?.req("n_params")?.as_usize()?;
+        // validate the loss artifact exists and its params shape matches
+        let shapes = rt.input_shapes(loss_name)?;
+        let p = shapes
+            .iter()
+            .find(|(n, _)| n == "params")
+            .ok_or_else(|| Error::Config(format!("{loss_name}: no params input")))?;
+        if p.1 != vec![n_params] {
+            return Err(Error::Shape(format!(
+                "{loss_name}: params shape {:?} != model n_params {n_params}",
+                p.1
+            )));
+        }
+        // SE graphs declare an mc_nodes input
+        let mc_nodes = shapes.iter().find(|(n, _)| n == "mc_nodes").map(|(_, s)| vec![0.0; s.iter().product()]);
+        let grad_name = match grad_name {
+            Some(g) if rt.artifact_meta(g).is_ok() => Some(g.to_string()),
+            _ => None,
+        };
+        let fwd_name = match fwd_name {
+            Some(f) if rt.artifact_meta(f).is_ok() => Some(f.to_string()),
+            _ => None,
+        };
+        let fwd_batch = match &fwd_name {
+            Some(f) => {
+                let fs = rt.input_shapes(f)?;
+                fs.iter()
+                    .find(|(n, _)| n == "pts")
+                    .map(|(_, s)| s[0])
+                    .unwrap_or(4096)
+            }
+            None => 4096,
+        };
+        // queries per loss: residual points x (2 n_L + 1) + data points
+        let meta = rt.artifact_meta(loss_name)?;
+        let level = meta.req("level")?.as_usize()?;
+        let grid = crate::quadrature::smolyak_sparse_grid(pde.d_in(), level);
+        let n_res = pde.point_inputs()[0].1;
+        let data: usize = pde.point_inputs()[1..].iter().map(|(_, n)| n).sum();
+        let queries_per_loss = n_res * (2 * grid.n_nodes() + 1) + data;
+        let mut eng = PjrtEngine {
+            rt,
+            pde,
+            model_key: model_key.to_string(),
+            loss_name: loss_name.to_string(),
+            grad_name,
+            fwd_name,
+            n_params,
+            mc_nodes,
+            queries_per_loss,
+            fwd_batch,
+        };
+        // eagerly compile the hot-path graph
+        eng.rt.load(loss_name)?;
+        Ok(eng)
+    }
+
+    /// Total PJRT executions so far.
+    pub fn exec_count(&self) -> u64 {
+        self.rt.exec_count
+    }
+
+}
+
+/// Input list for a loss/grad graph: params, point blocks, optional MC
+/// nodes (free function so the field borrows stay disjoint from `rt`).
+fn assemble_inputs<'a>(
+    mc_nodes: &'a Option<Vec<f64>>,
+    params: &'a [f64],
+    pts: &'a PointSet,
+) -> Vec<&'a [f64]> {
+    let mut inputs: Vec<&[f64]> = vec![params];
+    for (_, block) in &pts.blocks {
+        inputs.push(block);
+    }
+    if let Some(mc) = mc_nodes {
+        inputs.push(mc);
+    }
+    inputs
+}
+
+impl Engine for PjrtEngine {
+    fn pde(&self) -> &dyn Pde {
+        self.pde.as_ref()
+    }
+
+    fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    fn loss(&mut self, params: &[f64], pts: &PointSet) -> Result<f64> {
+        let name = self.loss_name.clone();
+        let inputs = assemble_inputs(&self.mc_nodes, params, pts);
+        let out = self.rt.exec(&name, &inputs)?;
+        Ok(out[0][0])
+    }
+
+    fn loss_grad(&mut self, params: &[f64], pts: &PointSet) -> Result<(f64, Vec<f64>)> {
+        let name = self
+            .grad_name
+            .clone()
+            .ok_or_else(|| err(format!("{}: no grad artifact", self.model_key)))?;
+        let inputs = assemble_inputs(&self.mc_nodes, params, pts);
+        let out = self.rt.exec(&name, &inputs)?;
+        let grad = out[1].clone();
+        Ok((out[0][0], grad))
+    }
+
+    fn forward_u(&mut self, params: &[f64], x: &[f64], n: usize) -> Result<Vec<f64>> {
+        let name = self
+            .fwd_name
+            .clone()
+            .ok_or_else(|| err(format!("{}: no fwd artifact", self.model_key)))?;
+        let d = self.pde.d_in();
+        let b = self.fwd_batch;
+        let mut out = Vec::with_capacity(n);
+        let mut chunk = vec![0.0; b * d];
+        let mut i = 0;
+        while i < n {
+            let take = b.min(n - i);
+            chunk[..take * d].copy_from_slice(&x[i * d..(i + take) * d]);
+            // pad the tail with the last point (harmless duplicates)
+            for j in take..b {
+                chunk.copy_within((take - 1) * d..take * d, j * d);
+            }
+            let res = self.rt.exec(&name, &[params, &chunk])?;
+            out.extend_from_slice(&res[0][..take]);
+            i += take;
+        }
+        Ok(out)
+    }
+
+    fn forwards_per_loss(&self) -> usize {
+        self.queries_per_loss
+    }
+
+    fn resample(&mut self, rng: &mut Rng) {
+        if let Some(mc) = &mut self.mc_nodes {
+            rng.fill_normal(mc);
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment harnesses: one function per paper table/figure.
+//!
+//! Each harness reproduces the corresponding table's rows (who wins, by
+//! roughly what factor) rather than the authors' absolute numbers — the
+//! substrate here is the CPU/PJRT simulator, not their GPU testbed.
+//! Default epochs are scaled down for CI budgets; `OPINN_FULL=1` runs
+//! paper-scale (see DESIGN.md §2 for the experiment index).
+
+pub mod runner;
+pub mod tables;
+
+pub use runner::{make_engine, Backend, RunSpec};
+pub use tables::*;

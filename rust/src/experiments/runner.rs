@@ -1,0 +1,125 @@
+//! Shared experiment plumbing: engine construction + seeded repetition.
+
+use crate::engine::{Engine, NativeEngine, PjrtEngine};
+use crate::engine::native::NativeOptions;
+use crate::loss::DerivMethod;
+use crate::zo::{train, History, TrainConfig};
+use crate::net::build_model;
+use crate::Result;
+
+/// Which execution backend to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Pjrt,
+    Native,
+}
+
+/// Default artifacts dir ($OPINN_ARTIFACTS, ./artifacts, or the manifest
+/// next to the crate root when running under `cargo bench`).
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let candidates = [
+        std::env::var("OPINN_ARTIFACTS").unwrap_or_default(),
+        "artifacts".to_string(),
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+    ];
+    candidates
+        .iter()
+        .filter(|c| !c.is_empty())
+        .map(std::path::PathBuf::from)
+        .find(|p| p.join("manifest.json").exists())
+}
+
+/// One trainable run description.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub pde: String,
+    pub variant: String,
+    /// artifact model key override (ablation variants)
+    pub model_key: Option<String>,
+    /// loss method: "sg" | "ad" | "se"
+    pub method: String,
+    pub rank: usize,
+    pub width: Option<usize>,
+}
+
+impl RunSpec {
+    pub fn new(pde: &str, variant: &str, method: &str) -> RunSpec {
+        RunSpec {
+            pde: pde.into(),
+            variant: variant.into(),
+            model_key: None,
+            method: method.into(),
+            rank: 2,
+            width: None,
+        }
+    }
+
+    pub fn key(&self) -> String {
+        self.model_key
+            .clone()
+            .unwrap_or_else(|| format!("{}_{}", self.pde, self.variant))
+    }
+}
+
+/// Build an engine for a run; falls back to native when artifacts are
+/// missing (native supports sg/se only).
+pub fn make_engine(spec: &RunSpec, backend: Backend) -> Result<Box<dyn Engine>> {
+    match backend {
+        Backend::Pjrt => {
+            let dir = artifacts_dir().ok_or_else(|| {
+                crate::err("artifacts not found; run `make artifacts` or set OPINN_ARTIFACTS")
+            })?;
+            Ok(Box::new(PjrtEngine::new(&dir, &spec.pde, &spec.key(), &spec.method)?))
+        }
+        Backend::Native => {
+            let method = match spec.method.as_str() {
+                "sg" => DerivMethod::Sg,
+                "se" => DerivMethod::Se,
+                other => {
+                    return Err(crate::err(format!(
+                        "native backend cannot evaluate {other:?} losses"
+                    )))
+                }
+            };
+            let opts = NativeOptions { method, ..Default::default() };
+            Ok(Box::new(NativeEngine::with_options(
+                &spec.pde,
+                &spec.variant,
+                spec.rank,
+                spec.width,
+                opts,
+            )?))
+        }
+    }
+}
+
+/// Train once from a fresh init; returns the history.
+pub fn run_once(spec: &RunSpec, backend: Backend, cfg: &TrainConfig) -> Result<History> {
+    let mut engine = make_engine(spec, backend)?;
+    let model = build_model(&spec.pde, &spec.variant, spec.rank, spec.width)?;
+    let mut params = model.init_flat(cfg.seed);
+    let mut cfg = cfg.clone();
+    if cfg.layout.is_empty() {
+        cfg.layout = model.param_layout();
+    }
+    train(engine.as_mut(), &mut params, &cfg)
+}
+
+/// Mean ± std of final errors across seeds.
+pub fn run_seeds(
+    spec: &RunSpec,
+    backend: Backend,
+    cfg: &TrainConfig,
+    seeds: u64,
+) -> Result<(f64, f64, Vec<History>)> {
+    let mut errs = Vec::new();
+    let mut hists = Vec::new();
+    for s in 0..seeds {
+        let mut c = cfg.clone();
+        c.seed = s;
+        let h = run_once(spec, backend, &c)?;
+        errs.push(h.best_error());
+        hists.push(h);
+    }
+    Ok((crate::util::stats::mean(&errs), crate::util::stats::std(&errs), hists))
+}

@@ -1,0 +1,498 @@
+//! One harness per paper table/figure (DESIGN.md §2 experiment index).
+
+use crate::bench_harness::{full_scale, n_seeds, record, Table};
+use crate::engine::Engine;
+use crate::hw::{FootprintBreakdown, LatencyBreakdown, Layout, TrainingLatency};
+use crate::photonic::{
+    train_phase_domain, PhaseProtocol, PhotonicModel, PhotonicVariant,
+};
+use crate::photonic::training::PhaseTrainConfig;
+use crate::util::json::Json;
+use crate::util::stats::{sci, sci_pm};
+use crate::zo::rge::RgeConfig;
+use crate::zo::{TrainConfig, TrainMethod};
+use crate::Result;
+
+use super::runner::{make_engine, run_seeds, Backend, RunSpec};
+
+/// PDEs covered by the training benches: all four at paper scale, the
+/// Black-Scholes benchmark only in quick mode (the hjb20-std loss alone
+/// is ~48 GFLOP per evaluation — far beyond a CI budget on small boxes).
+fn bench_pdes() -> Vec<&'static str> {
+    if full_scale() {
+        crate::pde::ALL_PDES.to_vec()
+    } else {
+        vec!["bs"]
+    }
+}
+
+fn scaled(full: usize, quick: usize) -> usize {
+    if full_scale() {
+        full
+    } else {
+        quick
+    }
+}
+
+fn base_cfg(pde: &str, method: TrainMethod) -> TrainConfig {
+    // hjb20's 925-node grid makes each loss ~9 GFLOP; keep quick runs tiny
+    let quick = if pde == "hjb20" { 30 } else { 150 };
+    let epochs = scaled(crate::config::ExperimentConfig::paper_epochs(pde), quick);
+    let mut cfg = TrainConfig::zo(epochs);
+    cfg.method = method;
+    cfg.eval_every = (epochs / 10).max(1);
+    cfg
+}
+
+/// Table 1 (+Table 7): rel-l2 of loss backends AD / SE / SG under FO.
+pub fn table1(backend: Backend) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 1 — relative l2 error of loss computation methods (FO training)",
+        &["Problem", "AD", "SE", "SG (ours)"],
+    );
+    for pde in bench_pdes() {
+        let mut cells = vec![pde.to_string()];
+        for method in ["ad", "se", "sg"] {
+            let spec = RunSpec::new(pde, "std", method);
+            let mut cfg = base_cfg(pde, TrainMethod::Fo);
+            if method == "se" && !full_scale() {
+                // the 2048-sample MC loss costs ~157x the SG loss; trim
+                cfg.epochs = cfg.epochs.min(20);
+                cfg.eval_every = 5;
+            }
+            let (m, s, _) = run_seeds(&spec, backend, &cfg, n_seeds())?;
+            cells.push(sci_pm(m, s));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Table 2 (+Table 8): FO vs ZO x Std vs TT (SG loss everywhere).
+pub fn table2(backend: Backend) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 2 — relative l2 error of training methods (SG loss)",
+        &["Problem", "FO Std", "FO TT", "ZO Std", "ZO TT (ours)"],
+    );
+    for pde in bench_pdes() {
+        let mut cells = vec![pde.to_string()];
+        for (variant, method) in
+            [("std", "fo"), ("tt", "fo"), ("std", "zo"), ("tt", "zo")]
+        {
+            let spec = RunSpec::new(pde, variant, "sg");
+            let tm = if method == "fo" {
+                TrainMethod::Fo
+            } else {
+                TrainMethod::ZoRge(RgeConfig::default())
+            };
+            let cfg = base_cfg(pde, tm);
+            let (m, s, hists) = run_seeds(&spec, backend, &cfg, n_seeds())?;
+            cells.push(sci_pm(m, s));
+            // Figure 7 curves: dump CSV for bs/hjb20
+            if pde == "bs" || pde == "hjb20" {
+                dump_curves(&format!("fig7_{pde}_{method}_{variant}"), &hists);
+            }
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Figure 3: error vs photonic forwards for ZO method families.
+pub fn fig3(backend: Backend) -> Result<Table> {
+    let budget = scaled(3_000_000_000, 8_000_000) as u64;
+    let mut t = Table::new(
+        "Figure 3 — training efficiency (error at equal forward budget, Black-Scholes)",
+        &["Method", "rel l2 at budget", "forwards used"],
+    );
+    let cases: Vec<(&str, &str, TrainMethod)> = vec![
+        ("Standard ZO (joint RGE)", "std", TrainMethod::ZoRge(RgeConfig {
+            tensor_wise: false,
+            ..Default::default()
+        })),
+        ("DeepZero-style CGE", "tt", TrainMethod::ZoCoordwise {
+            mu: 1e-3,
+            coords_per_step: Some(64),
+        }),
+        ("Ours (TT + tensor-wise RGE)", "tt", TrainMethod::ZoRge(RgeConfig::default())),
+    ];
+    for (name, variant, method) in cases {
+        let spec = RunSpec::new("bs", variant, "sg");
+        let mut cfg = base_cfg("bs", method);
+        cfg.epochs = usize::MAX / 2; // budget-terminated
+        cfg.max_forwards = Some(budget);
+        cfg.eval_every = 50;
+        let (m, _, hists) = run_seeds(&spec, backend, &cfg, 1)?;
+        dump_curves(&format!("fig3_{}", name.split_whitespace().next().unwrap()), &hists);
+        t.row(vec![
+            name.to_string(),
+            sci(m),
+            hists[0].total_forwards.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Table 3 (+19/20, Fig. 4/8/9): phase-domain on-chip training protocols.
+pub fn table3(backend: Backend, pdes: &[&str]) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 3 — relative l2 error of photonic on-chip training",
+        &["Problem", "#MZIs (ONN)", "#MZIs (ours)", "FLOPS", "L2ight", "Ours"],
+    );
+    let epochs = scaled(10_000, 120);
+    for pde in pdes {
+        let onn = PhotonicModel::new(pde, PhotonicVariant::Onn, 0)?;
+        let tonn = PhotonicModel::new(pde, PhotonicVariant::Tonn, 0)?;
+        let mut cells = vec![
+            pde.to_string(),
+            onn.n_mzis().to_string(),
+            tonn.n_mzis().to_string(),
+        ];
+        for protocol in [PhaseProtocol::Flops, PhaseProtocol::L2ight, PhaseProtocol::Ours] {
+            let variant = match protocol {
+                PhaseProtocol::Ours => "tt",
+                _ => "std",
+            };
+            let mut engine = make_engine(&RunSpec::new(pde, variant, "sg"), backend)?;
+            let mut pm = match protocol {
+                PhaseProtocol::Ours => PhotonicModel::new(pde, PhotonicVariant::Tonn, 0)?,
+                _ => PhotonicModel::new(pde, PhotonicVariant::Onn, 0)?,
+            };
+            let cfg = PhaseTrainConfig {
+                epochs,
+                eval_every: (epochs / 10).max(1),
+                ..Default::default()
+            };
+            let res = train_phase_domain(&mut pm, engine.as_mut(), protocol, &cfg);
+            match res {
+                Ok((_, hist)) => {
+                    dump_curves(&format!("fig4_{pde}_{protocol:?}"), &[hist.clone()]);
+                    cells.push(sci(hist.best_error()));
+                }
+                Err(e) => cells.push(format!("n/a ({e})")),
+            }
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Tables 4+5+6: pre-silicon system performance (analytic model +
+/// measured epoch count from a real phase-domain run when available).
+pub fn tables456(measured_epochs: Option<usize>) -> (Table, Table, Table) {
+    let epochs = measured_epochs.unwrap_or(10_000);
+    let mut t4 = Table::new(
+        "Table 4 — 128x128 hidden layer implementation (Black-Scholes)",
+        &["Design", "# MZIs", "Footprint (mm^2)", "Training time (s)"],
+    );
+    let mut t5 = Table::new(
+        "Table 5 — footprint breakdown (mm^2)",
+        &["Design", "Laser", "Modulator", "Tensor core", "PD", "Cross-connect", "Total"],
+    );
+    let mut t6 = Table::new(
+        "Table 6 — latency breakdown",
+        &["Design", "Cycles", "t/inference (ns)", "t/epoch (ms)", "Train time (s)"],
+    );
+    for layout in [Layout::OnnSm, Layout::TonnSm, Layout::OnnTm, Layout::TonnTm] {
+        let fp = FootprintBreakdown::for_layout(layout);
+        let lat = LatencyBreakdown::for_layout(layout);
+        let tt = TrainingLatency::for_layout(layout, epochs);
+        t4.row(vec![
+            layout.name().into(),
+            layout.n_mzis().to_string(),
+            format!("{:.2}{}", fp.total(), if layout == Layout::OnnSm { " (infeasible)" } else { "" }),
+            format!("{:.2}", tt.seconds),
+        ]);
+        t5.row(vec![
+            layout.name().into(),
+            format!("{:.2}", fp.laser),
+            format!("{:.2}", fp.modulator),
+            format!("{:.2}", fp.tensor_core),
+            format!("{:.2}", fp.photodetector),
+            format!("{:.2}", fp.cross_connect),
+            format!("{:.2}", fp.total()),
+        ]);
+        t6.row(vec![
+            layout.name().into(),
+            lat.cycles.to_string(),
+            format!("{:.2}", lat.t_inference_ns),
+            format!("{:.3}", lat.t_epoch_ms),
+            format!("{:.2}", tt.seconds),
+        ]);
+    }
+    (t4, t5, t6)
+}
+
+/// Tables 9/10/12/13/14/17/18 ablations (App. E).
+pub fn ablation(which: &str, backend: Backend) -> Result<Table> {
+    // hjb20-based ablations cost ~minutes/epoch on small boxes (925-node
+    // grid x 100 points); they are paper-scale-only runs.
+    if !full_scale() && matches!(which, "tt_rank" | "width") {
+        let mut t = Table::new(
+            &format!("Table {} — requires OPINN_FULL=1 (hjb20 workload)",
+                if which == "tt_rank" { "9" } else { "10" }),
+            &["note"],
+        );
+        t.row(vec!["skipped in quick mode; run OPINN_FULL=1 cargo bench --bench ablations".into()]);
+        return Ok(t);
+    }
+    match which {
+        "tt_rank" => {
+            // Table 9: FO training of hjb20 TT at ranks 2..8 (SG loss).
+            let mut t = Table::new(
+                "Table 9 — TT-rank ablation (20-dim HJB, FO + SG)",
+                &["TT-rank", "Params", "rel l2"],
+            );
+            for r in [2usize, 4, 6, 8] {
+                let mut spec = RunSpec::new("hjb20", "tt", "sg");
+                spec.rank = r;
+                if r != 2 {
+                    spec.model_key = Some(format!("hjb20_tt_r{r}"));
+                }
+                let cfg = base_cfg("hjb20", TrainMethod::Fo);
+                let (m, s, _) = run_seeds(&spec, backend, &cfg, n_seeds())?;
+                let params = crate::net::build_model("hjb20", "tt", r, None)?.n_params();
+                t.row(vec![r.to_string(), params.to_string(), sci_pm(m, s)]);
+            }
+            Ok(t)
+        }
+        "width" => {
+            // Table 10: hidden width of the std MLP (hjb20).
+            let mut t = Table::new(
+                "Table 10 — hidden-width ablation (20-dim HJB, FO + SG)",
+                &["Width", "Params", "rel l2"],
+            );
+            for w in [512usize, 256, 128, 64, 32] {
+                let mut spec = RunSpec::new("hjb20", "std", "sg");
+                spec.width = Some(w);
+                if w != 512 {
+                    spec.model_key = Some(format!("hjb20_std_w{w}"));
+                }
+                let cfg = base_cfg("hjb20", TrainMethod::Fo);
+                let (m, s, _) = run_seeds(&spec, backend, &cfg, n_seeds())?;
+                let params =
+                    crate::net::build_model("hjb20", "std", 2, Some(w))?.n_params();
+                t.row(vec![w.to_string(), params.to_string(), sci_pm(m, s)]);
+            }
+            Ok(t)
+        }
+        "mc_samples" => {
+            // Table 12: SE sample count (BS, FO).
+            let mut t = Table::new(
+                "Table 12 — Monte Carlo sample count (Black-Scholes, FO + SE)",
+                &["Samples", "rel l2"],
+            );
+            for (s_count, key) in
+                [(64usize, Some("bs_std_mc64")), (512, Some("bs_std_mc512")), (2048, None)]
+            {
+                let mut spec = RunSpec::new("bs", "std", "se");
+                // ablation artifacts carry the suffix in the *artifact*
+                // name, not the model key; use from_names via model_key
+                if let Some(k) = key {
+                    spec.model_key = Some(k.to_string());
+                }
+                let mut cfg = base_cfg("bs", TrainMethod::Fo);
+                if !full_scale() {
+                    cfg.epochs = cfg.epochs.min(20);
+                    cfg.eval_every = 5;
+                }
+                let res = run_seeds_se(&spec, backend, &cfg, key);
+                match res {
+                    Ok((m, s, _)) => t.row(vec![s_count.to_string(), sci_pm(m, s)]),
+                    Err(e) => t.row(vec![s_count.to_string(), format!("n/a ({e})")]),
+                }
+            }
+            Ok(t)
+        }
+        "sg_level" => {
+            let mut t = Table::new(
+                "Table 13 — sparse-grid level (Black-Scholes, FO + SG)",
+                &["Level", "Nodes", "rel l2"],
+            );
+            for (lvl, suffix) in [(2usize, Some("l2")), (3, None), (4, Some("l4"))] {
+                let nodes = crate::quadrature::smolyak_sparse_grid(2, lvl).n_nodes();
+                let mut spec = RunSpec::new("bs", "std", "sg");
+                if let Some(sfx) = suffix {
+                    spec.model_key = Some(format!("bs_std_{sfx}"));
+                }
+                let cfg = base_cfg("bs", TrainMethod::Fo);
+                let res = run_seeds_suffixed(&spec, backend, &cfg, suffix);
+                match res {
+                    Ok((m, s, _)) => t.row(vec![lvl.to_string(), nodes.to_string(), sci_pm(m, s)]),
+                    Err(e) => t.row(vec![lvl.to_string(), nodes.to_string(), format!("n/a ({e})")]),
+                }
+            }
+            Ok(t)
+        }
+        "sigma" => {
+            let mut t = Table::new(
+                "Table 14 — Stein sigma (Black-Scholes, FO + SG)",
+                &["sigma", "rel l2"],
+            );
+            for (sig, suffix) in
+                [(0.1, Some("sig0")), (0.01, Some("sig1")), (1e-3, None), (1e-4, Some("sig2"))]
+            {
+                let spec = RunSpec::new("bs", "std", "sg");
+                let cfg = base_cfg("bs", TrainMethod::Fo);
+                let res = run_seeds_suffixed(&spec, backend, &cfg, suffix);
+                match res {
+                    Ok((m, s, _)) => t.row(vec![format!("{sig}"), sci_pm(m, s)]),
+                    Err(e) => t.row(vec![format!("{sig}"), format!("n/a ({e})")]),
+                }
+            }
+            Ok(t)
+        }
+        "mu" => {
+            let mut t = Table::new(
+                "Table 17 — ZO smoothing mu (Black-Scholes TT, ZO + SG)",
+                &["mu", "rel l2"],
+            );
+            for mu in [0.1, 0.01, 1e-3, 1e-4] {
+                let spec = RunSpec::new("bs", "tt", "sg");
+                let cfg = base_cfg(
+                    "bs",
+                    TrainMethod::ZoRge(RgeConfig { mu, ..Default::default() }),
+                );
+                let (m, s, _) = run_seeds(&spec, backend, &cfg, n_seeds())?;
+                t.row(vec![format!("{mu}"), sci_pm(m, s)]);
+            }
+            Ok(t)
+        }
+        "queries" => {
+            let mut t = Table::new(
+                "Table 18 — query count N at fixed forward budget (BS TT, ZO)",
+                &["N", "rel l2 at budget"],
+            );
+            let budget = scaled(800_000_000, 6_000_000) as u64;
+            for n in [1usize, 10, 50, 100] {
+                let spec = RunSpec::new("bs", "tt", "sg");
+                let mut cfg = base_cfg(
+                    "bs",
+                    TrainMethod::ZoRge(RgeConfig { n_queries: n, ..Default::default() }),
+                );
+                cfg.epochs = usize::MAX / 2;
+                cfg.max_forwards = Some(budget);
+                cfg.eval_every = 50;
+                let (m, s, _) = run_seeds(&spec, backend, &cfg, 1)?;
+                t.row(vec![n.to_string(), sci_pm(m, s)]);
+            }
+            Ok(t)
+        }
+        "grid" => {
+            // Table 11: eval-grid resolution of a trained BS TT model.
+            let mut t = Table::new(
+                "Table 11 — eval mesh resolution (Black-Scholes, ZO + SG)",
+                &["Grid", "rel l2"],
+            );
+            let spec = RunSpec::new("bs", "tt", "sg");
+            let cfg = base_cfg("bs", TrainMethod::ZoRge(RgeConfig::default()));
+            let mut engine = make_engine(&spec, backend)?;
+            let model = crate::net::build_model("bs", "tt", 2, None)?;
+            let mut params = model.init_flat(0);
+            let mut c = cfg.clone();
+            c.layout = model.param_layout();
+            crate::zo::train(engine.as_mut(), &mut params, &c)?;
+            for n in [100usize, 300, 1000] {
+                let mut pts = Vec::with_capacity(n * n * 2);
+                for i in 0..n {
+                    for j in 0..n {
+                        pts.push(200.0 * i as f64 / (n - 1) as f64);
+                        pts.push(j as f64 / (n - 1) as f64);
+                    }
+                }
+                let pred = engine.forward_u(&params, &pts, n * n)?;
+                let exact = engine.pde().exact(&pts, n * n);
+                t.row(vec![
+                    format!("{n}x{n}"),
+                    sci(crate::util::stats::rel_l2(&pred, &exact)),
+                ]);
+            }
+            Ok(t)
+        }
+        other => Err(crate::err(format!("unknown ablation {other:?}"))),
+    }
+}
+
+// SE/suffixed variants need explicit artifact names on the pjrt backend.
+fn run_seeds_se(
+    spec: &RunSpec,
+    backend: Backend,
+    cfg: &TrainConfig,
+    key: Option<&str>,
+) -> Result<(f64, f64, Vec<crate::zo::History>)> {
+    run_seeds_named(spec, backend, cfg, key.map(|k| (format!("{k}_loss_se"), format!("{k}_grad_se"))))
+}
+
+fn run_seeds_suffixed(
+    spec: &RunSpec,
+    backend: Backend,
+    cfg: &TrainConfig,
+    suffix: Option<&str>,
+) -> Result<(f64, f64, Vec<crate::zo::History>)> {
+    run_seeds_named(
+        spec,
+        backend,
+        cfg,
+        suffix.map(|s| (format!("bs_std_{s}_loss_sg"), format!("bs_std_{s}_grad_sg"))),
+    )
+}
+
+fn run_seeds_named(
+    spec: &RunSpec,
+    backend: Backend,
+    cfg: &TrainConfig,
+    names: Option<(String, String)>,
+) -> Result<(f64, f64, Vec<crate::zo::History>)> {
+    match names {
+        None => run_seeds(spec, backend, cfg, n_seeds()),
+        Some((loss, grad)) => {
+            let dir = super::runner::artifacts_dir()
+                .ok_or_else(|| crate::err("artifacts required for ablation variants"))?;
+            let mut errs = Vec::new();
+            let mut hists = Vec::new();
+            for s in 0..n_seeds() {
+                let mut engine = crate::engine::PjrtEngine::from_names(
+                    &dir,
+                    &spec.pde,
+                    "bs_std",
+                    &loss,
+                    Some(&grad),
+                    Some("bs_std_fwd"),
+                )?;
+                let model = crate::net::build_model(&spec.pde, &spec.variant, spec.rank, spec.width)?;
+                let mut params = model.init_flat(s);
+                let mut c = cfg.clone();
+                c.seed = s;
+                if c.layout.is_empty() {
+                    c.layout = model.param_layout();
+                }
+                let h = crate::zo::train(&mut engine, &mut params, &c)?;
+                errs.push(h.best_error());
+                hists.push(h);
+            }
+            Ok((crate::util::stats::mean(&errs), crate::util::stats::std(&errs), hists))
+        }
+    }
+}
+
+/// Dump error curves for figure reproduction (bench_out/curves_*.csv).
+pub fn dump_curves(name: &str, hists: &[crate::zo::History]) {
+    let mut m = crate::coordinator::Metrics::new();
+    if let Some(h) = hists.first() {
+        for ((step, err), (loss, fwd)) in h
+            .steps
+            .iter()
+            .zip(&h.errors)
+            .zip(h.losses.iter().zip(&h.forwards))
+        {
+            m.curve_point(*step, &[("rel_l2", *err), ("loss", *loss), ("forwards", *fwd as f64)]);
+        }
+    }
+    let _ = m.write_curve_csv(std::path::Path::new(&format!("bench_out/curves_{name}.csv")));
+}
+
+/// Record a table into bench_out/<target>.json for EXPERIMENTS.md.
+pub fn record_table(target: &str, t: &Table) {
+    t.print();
+    record(target, t.to_json());
+}

@@ -1,0 +1,117 @@
+//! Latency model (Eq. (15)–(16), Table 6).
+
+use super::footprint::Layout;
+use super::params::*;
+
+/// Per-inference and per-epoch latency for one layout.
+#[derive(Debug, Clone)]
+pub struct LatencyBreakdown {
+    pub layout: Layout,
+    pub cycles: usize,
+    /// ns per optical inference (Eq. (15)).
+    pub t_inference_ns: f64,
+    /// ms per training epoch (Eq. (16)).
+    pub t_epoch_ms: f64,
+}
+
+/// Workload constants of §5.3.2 (Black–Scholes training):
+/// N_point forward points per loss, N_loss loss evaluations per gradient
+/// (the 13-node sparse grid), N_grads = 2 (the ± ZO probes).
+pub const N_POINT: usize = 130;
+pub const N_LOSS: usize = 13;
+pub const N_GRADS: usize = 2;
+
+impl LatencyBreakdown {
+    pub fn for_layout(layout: Layout) -> LatencyBreakdown {
+        let cycles = layout.cycles();
+        let t_inf = cycles as f64 * (T_DAC + T_TUNING + layout.t_opt() + T_ADC);
+        let t_epoch_ns =
+            (t_inf * N_POINT as f64 * N_LOSS as f64 + T_TUNING) * N_GRADS as f64 + T_DIG;
+        LatencyBreakdown {
+            layout,
+            cycles,
+            t_inference_ns: t_inf,
+            t_epoch_ms: t_epoch_ns / 1e6,
+        }
+    }
+}
+
+/// End-to-end training time (Table 6 "time to converge").
+#[derive(Debug, Clone)]
+pub struct TrainingLatency {
+    pub layout: Layout,
+    pub epochs: usize,
+    pub seconds: f64,
+}
+
+impl TrainingLatency {
+    /// Paper: "our BP-free training finds a good solution after 10000
+    /// epochs"; pass a measured epoch count to re-evaluate.
+    pub fn for_layout(layout: Layout, epochs: usize) -> TrainingLatency {
+        let per_epoch = LatencyBreakdown::for_layout(layout).t_epoch_ms;
+        TrainingLatency { layout, epochs, seconds: per_epoch * epochs as f64 / 1e3 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inference_latency_matches_table_6() {
+        let cases = [
+            (Layout::OnnSm, 51.30),
+            (Layout::TonnSm, 48.74),
+            (Layout::OnnTm, 1545.92),
+            (Layout::TonnTm, 289.86),
+        ];
+        for (layout, want) in cases {
+            let got = LatencyBreakdown::for_layout(layout).t_inference_ns;
+            assert!((got - want).abs() < 0.01, "{}: {got} vs {want}", layout.name());
+        }
+    }
+
+    #[test]
+    fn epoch_latency_matches_table_6() {
+        let cases = [
+            (Layout::OnnSm, 0.174),
+            (Layout::TonnSm, 0.165),
+            (Layout::OnnTm, 5.23),
+            (Layout::TonnTm, 0.980),
+        ];
+        for (layout, want) in cases {
+            let got = LatencyBreakdown::for_layout(layout).t_epoch_ms;
+            assert!(
+                (got - want).abs() / want < 0.02,
+                "{}: {got} vs {want}",
+                layout.name()
+            );
+        }
+    }
+
+    #[test]
+    fn training_time_matches_table_6() {
+        let cases = [
+            (Layout::OnnSm, 1.74),
+            (Layout::TonnSm, 1.64),
+            (Layout::OnnTm, 52.27),
+            (Layout::TonnTm, 9.80),
+        ];
+        for (layout, want) in cases {
+            let got = TrainingLatency::for_layout(layout, 10_000).seconds;
+            assert!(
+                (got - want).abs() / want < 0.02,
+                "{}: {got} vs {want}",
+                layout.name()
+            );
+        }
+    }
+
+    #[test]
+    fn tonn_sm_is_the_fastest_whole_model_design() {
+        let sm = TrainingLatency::for_layout(Layout::TonnSm, 10_000).seconds;
+        let tm = TrainingLatency::for_layout(Layout::TonnTm, 10_000).seconds;
+        let onn_tm = TrainingLatency::for_layout(Layout::OnnTm, 10_000).seconds;
+        assert!(sm < tm && tm < onn_tm);
+    }
+}

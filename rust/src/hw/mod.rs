@@ -1,0 +1,33 @@
+//! Pre-silicon system performance model (paper §5.3, Tables 4–6,
+//! Eq. (14)–(16)), with the III-V-on-Si device constants of Table 21/22.
+
+pub mod footprint;
+pub mod latency;
+
+pub use footprint::{FootprintBreakdown, Layout};
+pub use latency::{LatencyBreakdown, TrainingLatency};
+
+/// Device constants (Table 21).
+pub mod params {
+    /// Number of WDM wavelengths.
+    pub const N_WAVELENGTHS: usize = 8;
+    /// Weight/phase bit precision.
+    pub const BITS: u32 = 8;
+    /// 8x8 MZI mesh area, mm².
+    pub const A_MZI_MESH: f64 = 16.32;
+    /// Comb laser footprint, mm².
+    pub const A_LASER: f64 = 0.2;
+    /// Cross-connect area, mm².
+    pub const A_CROSS_CONNECT: f64 = 1.6;
+    /// ADC / DAC conversion delay, ns.
+    pub const T_ADC: f64 = 24.0;
+    pub const T_DAC: f64 = 24.0;
+    /// MOSCAP phase shifter tuning delay, ns.
+    pub const T_TUNING: f64 = 0.1;
+    /// Digital controller overhead per epoch, ns.
+    pub const T_DIG: f64 = 500.0;
+    /// Optical propagation latency, ns (§5.3.2).
+    pub const T_OPT_ONN: f64 = 3.20;
+    pub const T_OPT_TONN_SM: f64 = 0.64;
+    pub const T_OPT_TONN_TM: f64 = 0.21;
+}

@@ -1,0 +1,79 @@
+//! # optical-pinn
+//!
+//! Production reproduction of *"Scalable Back-Propagation-Free Training of
+//! Optical Physics-Informed Neural Networks"* (Zhao, Yu, et al., 2025).
+//!
+//! The crate is the **L3 rust coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (TT contraction, fused dense) authored in
+//!   `python/compile/kernels/`, validated against pure-`jnp` oracles;
+//! * **L2** — JAX PINN models and sparse-grid Stein loss graphs
+//!   (`python/compile/`), AOT-lowered **once** to HLO text in `artifacts/`;
+//! * **L3** — this crate: the BP-free training controller (the paper's
+//!   "digital control system"), the photonic hardware simulator, the PJRT
+//!   runtime that executes the compiled loss/gradient graphs, the PDE
+//!   benchmark suite with reference solvers, and the pre-silicon
+//!   performance model. Python never runs on the training path.
+//!
+//! ## Quick tour
+//!
+//! * [`quadrature`] — Gauss–Hermite rules + Smolyak sparse grids (§3.1.2);
+//! * [`stein`] — the sparse-grid Stein derivative estimator (Eq. 12);
+//! * [`net`] — dense and tensor-train network forward passes (§3.2);
+//! * [`pde`] — Black–Scholes, 20-d HJB, Burgers, Darcy + reference solvers;
+//! * [`engine`] — `NativeEngine` (pure rust) and `PjrtEngine` (XLA/PJRT);
+//! * [`zo`] / [`optim`] — RGE zeroth-order estimators, ZO/FO trainers, Adam;
+//! * [`photonic`] — MZI meshes, non-idealities, TONN cores, on-chip
+//!   training protocols (FLOPS, L²ight, ours);
+//! * [`hw`] — footprint/latency model (Eq. 14–16, Tables 4–6);
+//! * [`coordinator`] — batched inference dispatcher, metrics, checkpoints;
+//! * [`bench_harness`] — the in-tree micro-benchmark runner used by
+//!   `cargo bench` (criterion is not available in the vendored registry).
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod hw;
+pub mod linalg;
+pub mod loss;
+pub mod mnist;
+pub mod net;
+pub mod optim;
+pub mod pde;
+pub mod photonic;
+pub mod quadrature;
+pub mod stein;
+pub mod util;
+pub mod zo;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("shape error: {0}")]
+    Shape(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Shorthand constructor for ad-hoc errors.
+pub fn err(msg: impl Into<String>) -> Error {
+    Error::Other(msg.into())
+}

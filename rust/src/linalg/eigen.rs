@@ -1,0 +1,130 @@
+//! Symmetric tridiagonal eigensolver (implicit QL with Wilkinson shift).
+//!
+//! Used by Golub–Welsch in [`crate::quadrature`]: the probabilists'
+//! Gauss–Hermite nodes are the eigenvalues of the Jacobi matrix with zero
+//! diagonal and off-diagonal sqrt(i), and the weights are the squared
+//! first components of the eigenvectors. Sizes here are <= ~40.
+
+/// Eigen-decompose a symmetric tridiagonal matrix given its diagonal `d`
+/// and sub-diagonal `e` (length n-1). Returns `(eigenvalues, first_row)`
+/// where `first_row[k]` is the first component of the k-th eigenvector,
+/// both sorted ascending by eigenvalue.
+pub fn symmetric_tridiagonal_eigen(d: &[f64], e: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let n = d.len();
+    assert_eq!(e.len(), n.saturating_sub(1));
+    let mut d = d.to_vec();
+    // work array, padded by one
+    let mut e: Vec<f64> = e.iter().copied().chain(std::iter::once(0.0)).collect();
+    // z accumulates the first row of the eigenvector matrix (starts as e_1^T).
+    let mut z = vec![0.0; n];
+    if n > 0 {
+        z[0] = 1.0;
+    }
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small off-diagonal to split at.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 50, "tridiagonal QL failed to converge");
+            // Wilkinson shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // rotate the tracked first-row components
+                f = z[i + 1];
+                z[i + 1] = s * z[i] + c * f;
+                z[i] = c * z[i] - s * f;
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort ascending by eigenvalue.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let vals: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let first: Vec<f64> = idx.iter().map(|&i| z[i]).collect();
+    (vals, first)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_by_two_known() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1, 3; eigvecs (1,-1)/sqrt2, (1,1)/sqrt2
+        let (vals, first) = symmetric_tridiagonal_eigen(&[2.0, 2.0], &[1.0]);
+        assert!((vals[0] - 1.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        for f in &first {
+            assert!((f.abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let (vals, first) = symmetric_tridiagonal_eigen(&[3.0, -1.0, 2.0], &[0.0, 0.0]);
+        assert_eq!(vals, vec![-1.0, 2.0, 3.0]);
+        // first components: only the eigenvector of d[0]=3 touches e1
+        let nonzero: Vec<_> = first.iter().filter(|x| x.abs() > 0.5).collect();
+        assert_eq!(nonzero.len(), 1);
+    }
+
+    #[test]
+    fn first_components_square_to_one() {
+        // sum_k z_k^2 = ||e_1||^2 = 1 for any symmetric tridiagonal.
+        let d = vec![0.0; 9];
+        let e: Vec<f64> = (1..9).map(|i| (i as f64).sqrt()).collect();
+        let (_, first) = symmetric_tridiagonal_eigen(&d, &e);
+        let s: f64 = first.iter().map(|x| x * x).sum();
+        assert!((s - 1.0).abs() < 1e-12, "{s}");
+    }
+
+    #[test]
+    fn eigenvalues_are_symmetric_for_hermite_jacobi() {
+        let n = 7;
+        let d = vec![0.0; n];
+        let e: Vec<f64> = (1..n).map(|i| (i as f64).sqrt()).collect();
+        let (vals, _) = symmetric_tridiagonal_eigen(&d, &e);
+        for k in 0..n {
+            assert!((vals[k] + vals[n - 1 - k]).abs() < 1e-10);
+        }
+    }
+}

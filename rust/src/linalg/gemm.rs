@@ -1,0 +1,183 @@
+//! Blocked GEMM kernels (row-major f64).
+//!
+//! `gemm` is the single-threaded cache-blocked `ikj` kernel;
+//! `matmul_parallel` splits output rows across std threads when the
+//! problem is large enough to amortize spawn cost. Block sizes were tuned
+//! in the §Perf pass (see EXPERIMENTS.md §Perf / L3).
+
+/// C += A @ B with A (m x k), B (k x n), C (m x n), all row-major.
+/// C must be zeroed by the caller if a plain product is wanted.
+pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    const MC: usize = 64; // rows of A per block
+    const KC: usize = 256; // depth per block
+    for i0 in (0..m).step_by(MC) {
+        let i1 = (i0 + MC).min(m);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            for i in i0..i1 {
+                let crow = &mut c[i * n..(i + 1) * n];
+                let arow = &a[i * k..(i + 1) * k];
+                for p in p0..p1 {
+                    let aip = arow[p];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n..(p + 1) * n];
+                    // The autovectorizer turns this into AVX fma.
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aip * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = A @ B (zeroing C first).
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    c.fill(0.0);
+    gemm_acc(m, k, n, a, b, c);
+}
+
+/// C = A @ B^T with B (n x k) row-major — dot-product form, good locality.
+pub fn gemm_bt(m: usize, k: usize, n: usize, a: &[f64], b_t: &[f64], c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b_t.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b_t[j * k..(j + 1) * k];
+            let mut acc = 0.0;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            crow[j] = acc;
+        }
+    }
+}
+
+/// Convenience wrapper returning a fresh Vec.
+pub fn matmul(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    gemm_acc(m, k, n, a, b, &mut c);
+    c
+}
+
+/// Row-parallel GEMM across std threads. Falls back to single-threaded
+/// below ~2 MFLOP where spawn cost dominates.
+pub fn matmul_parallel(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f64],
+    b: &[f64],
+    threads: usize,
+) -> Vec<f64> {
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    if threads <= 1 || flops < 2e6 || m < 2 * threads {
+        return matmul(m, k, n, a, b);
+    }
+    let mut c = vec![0.0; m * n];
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let i0 = t * rows_per;
+            let mrows = chunk.len() / n;
+            let a_slice = &a[i0 * k..(i0 + mrows) * k];
+            s.spawn(move || {
+                gemm_acc(mrows, k, n, a_slice, b, chunk);
+            });
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    fn naive(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + p] * b[p * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn rand_mat(r: &mut Rng, len: usize) -> Vec<f64> {
+        (0..len).map(|_| r.normal()).collect()
+    }
+
+    #[test]
+    fn gemm_matches_naive_property() {
+        check(
+            "gemm == naive",
+            40,
+            |r| {
+                let (m, k, n) = (1 + r.below(70), 1 + r.below(70), 1 + r.below(70));
+                let a = rand_mat(r, m * k);
+                let b = rand_mat(r, k * n);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                assert_close(&matmul(*m, *k, *n, a, b), &naive(*m, *k, *n, a, b), 1e-11)
+            },
+        );
+    }
+
+    #[test]
+    fn gemm_bt_matches_naive_property() {
+        check(
+            "gemm_bt == naive",
+            30,
+            |r| {
+                let (m, k, n) = (1 + r.below(50), 1 + r.below(50), 1 + r.below(50));
+                let a = rand_mat(r, m * k);
+                let b = rand_mat(r, k * n);
+                (m, k, n, a, b)
+            },
+            |(m, k, n, a, b)| {
+                // transpose b to (n x k) for gemm_bt
+                let mut bt = vec![0.0; k * n];
+                for p in 0..*k {
+                    for j in 0..*n {
+                        bt[j * k + p] = b[p * n + j];
+                    }
+                }
+                let mut c = vec![0.0; m * n];
+                gemm_bt(*m, *k, *n, a, &bt, &mut c);
+                assert_close(&c, &naive(*m, *k, *n, a, b), 1e-11)
+            },
+        );
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut r = Rng::new(1);
+        let (m, k, n) = (301, 128, 97);
+        let a = rand_mat(&mut r, m * k);
+        let b = rand_mat(&mut r, k * n);
+        let serial = matmul(m, k, n, &a, &b);
+        for threads in [2, 4, 8] {
+            let par = matmul_parallel(m, k, n, &a, &b, threads);
+            assert_close(&par, &serial, 1e-12).unwrap();
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        assert_eq!(matmul(1, 1, 1, &[3.0], &[4.0]), vec![12.0]);
+        assert_eq!(matmul(2, 1, 1, &[1.0, 2.0], &[5.0]), vec![5.0, 10.0]);
+    }
+}

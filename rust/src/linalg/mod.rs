@@ -1,0 +1,177 @@
+//! Dense linear algebra substrate (std-only; no BLAS in this environment).
+//!
+//! Sizes in this system are small-to-medium (layers <= 512 wide, photonic
+//! meshes <= 64x64, Stein batches up to ~3x10^4 rows), so a cache-blocked
+//! `ikj` GEMM with optional std::thread row-parallelism is sufficient; the
+//! §Perf pass tunes the block sizes against roofline (EXPERIMENTS.md).
+//!
+//! Also hosts the two tiny eigensolvers the system needs: symmetric
+//! tridiagonal QL (Golub–Welsch for Gauss–Hermite nodes) and a one-sided
+//! Jacobi SVD (mapping trained weights onto MZI meshes).
+
+pub mod eigen;
+pub mod gemm;
+pub mod svd;
+
+pub use eigen::symmetric_tridiagonal_eigen;
+pub use gemm::{gemm, gemm_bt, matmul, matmul_parallel};
+pub use svd::jacobi_svd;
+
+/// Row-major f64 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a row-generating closure.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// `self @ other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dimension mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        gemm::gemm(
+            self.rows, self.cols, other.cols,
+            &self.data, &other.data, &mut out.data,
+        );
+        out
+    }
+
+    /// `self @ v` for a vector.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len());
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            out[i] = row.iter().zip(v).map(|(a, b)| a * b).sum();
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// ||A^T A - I||_max — unitarity defect, used by the photonic tests.
+    pub fn orthogonality_defect(&self) -> f64 {
+        let g = self.transpose().matmul(self);
+        let mut worst = 0.0f64;
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((g.get(i, j) - want).abs());
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(3, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(a.matmul(&Mat::eye(3)), a);
+        assert_eq!(Mat::eye(3).matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(3, 5, |i, j| (i + 7 * j) as f64);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Mat::from_fn(4, 3, |i, j| (i as f64) - (j as f64) * 0.5);
+        let v = vec![1.0, -2.0, 3.0];
+        let mv = a.matvec(&v);
+        let mm = a.matmul(&Mat::from_vec(3, 1, v));
+        assert_eq!(mv, mm.data);
+    }
+
+    #[test]
+    fn orthogonality_defect_of_rotation_is_zero() {
+        let th = 0.7f64;
+        let r = Mat::from_vec(2, 2, vec![th.cos(), th.sin(), -th.sin(), th.cos()]);
+        assert!(r.orthogonality_defect() < 1e-15);
+    }
+}

@@ -1,0 +1,148 @@
+//! One-sided Jacobi SVD for small dense matrices.
+//!
+//! The photonic module uses this to map a trained weight block onto the
+//! MZI parameterization W = U Σ V* (App. A.1) and in tests to verify that
+//! a Clements mesh reproduces a target unitary. O(n^3) per sweep; fine for
+//! the k x k blocks (k <= 64) of the ONN simulator.
+
+use super::Mat;
+
+/// Compute A = U diag(s) V^T. Returns (U (m x n), s (n), V (n x n)),
+/// singular values sorted descending. Requires m >= n.
+pub fn jacobi_svd(a: &Mat) -> (Mat, Vec<f64>, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "jacobi_svd requires rows >= cols");
+    let mut u = a.clone(); // columns rotate toward orthogonality
+    let mut v = Mat::eye(n);
+    let max_sweeps = 60;
+    let eps = 1e-14;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries over columns p, q.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let (x, y) = (u.get(i, p), u.get(i, q));
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(f64::MIN_POSITIVE));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let (x, y) = (u.get(i, p), u.get(i, q));
+                    u.set(i, p, c * x - s * y);
+                    u.set(i, q, s * x + c * y);
+                }
+                for i in 0..n {
+                    let (x, y) = (v.get(i, p), v.get(i, q));
+                    v.set(i, p, c * x - s * y);
+                    v.set(i, q, s * x + c * y);
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // Singular values are column norms; normalize U's columns.
+    let mut s = vec![0.0; n];
+    for j in 0..n {
+        let norm: f64 = (0..m).map(|i| u.get(i, j).powi(2)).sum::<f64>().sqrt();
+        s[j] = norm;
+        if norm > 0.0 {
+            for i in 0..m {
+                u.set(i, j, u.get(i, j) / norm);
+            }
+        }
+    }
+    // Sort descending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+    let s_sorted: Vec<f64> = idx.iter().map(|&j| s[j]).collect();
+    let mut u_s = Mat::zeros(m, n);
+    let mut v_s = Mat::zeros(n, n);
+    for (new_j, &j) in idx.iter().enumerate() {
+        for i in 0..m {
+            u_s.set(i, new_j, u.get(i, j));
+        }
+        for i in 0..n {
+            v_s.set(i, new_j, v.get(i, j));
+        }
+    }
+    (u_s, s_sorted, v_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(u: &Mat, s: &[f64], v: &Mat) -> Mat {
+        let mut us = u.clone();
+        for i in 0..us.rows {
+            for j in 0..us.cols {
+                us.set(i, j, us.get(i, j) * s[j]);
+            }
+        }
+        us.matmul(&v.transpose())
+    }
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        check(
+            "usv^t == a",
+            20,
+            |r: &mut Rng| {
+                let n = 2 + r.below(12);
+                let m = n + r.below(8);
+                Mat::from_fn(m, n, |_, _| r.normal())
+            },
+            |a| {
+                let (u, s, v) = jacobi_svd(a);
+                let err = reconstruct(&u, &s, &v).max_abs_diff(a);
+                if err < 1e-10 { Ok(()) } else { Err(format!("recon err {err}")) }
+            },
+        );
+    }
+
+    #[test]
+    fn factors_are_orthogonal() {
+        let mut r = Rng::new(5);
+        let a = Mat::from_fn(10, 6, |_, _| r.normal());
+        let (u, s, v) = jacobi_svd(&a);
+        assert!(u.orthogonality_defect() < 1e-10);
+        assert!(v.orthogonality_defect() < 1e-10);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12, "not sorted: {s:?}");
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_svd() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let (_, s, _) = jacobi_svd(&a);
+        assert!((s[0] - 3.0).abs() < 1e-12);
+        assert!((s[1] - 2.0).abs() < 1e-12);
+        assert!((s[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_deficient() {
+        // rank-1 matrix
+        let a = Mat::from_fn(4, 3, |i, j| (i as f64 + 1.0) * (j as f64 + 1.0));
+        let (u, s, v) = jacobi_svd(&a);
+        assert!(s[1] < 1e-10 && s[2] < 1e-10);
+        let err = reconstruct(&u, &s, &v).max_abs_diff(&a);
+        assert!(err < 1e-10);
+    }
+}

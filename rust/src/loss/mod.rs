@@ -1,0 +1,196 @@
+//! BP-free PINN loss composition (paper Eq. (3) with the Eq.-(12) SG
+//! estimator, or the MC "SE" baseline of He et al. 2023).
+//!
+//! Mirrors `build_loss` in `python/compile/stein.py`; the native engine
+//! evaluates this directly, and the integration tests check it against the
+//! AOT-compiled PJRT loss to ~1e-12.
+
+use crate::pde::{Pde, PointSet};
+use crate::quadrature::smolyak_sparse_grid;
+use crate::stein::SteinEstimator;
+use crate::util::rng::Rng;
+
+/// Derivative backend for the loss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DerivMethod {
+    /// Sparse-grid Stein (the paper's contribution).
+    Sg,
+    /// Monte Carlo Stein estimator (He et al. 2023 baseline).
+    Se,
+}
+
+/// The full PINN loss for one PDE benchmark.
+pub struct PinnLoss {
+    pub method: DerivMethod,
+    pub estimator: SteinEstimator,
+    pub res_scale: f64,
+    mc_samples: usize,
+    sigma: f64,
+    dim: usize,
+}
+
+impl PinnLoss {
+    /// Sparse-grid loss at the pde's default level/sigma.
+    pub fn sg(pde: &dyn Pde) -> PinnLoss {
+        Self::sg_with(pde, pde.sg_level(), pde.sigma_stein())
+    }
+
+    /// Sparse-grid loss with explicit level/sigma (ablations T13/T14).
+    pub fn sg_with(pde: &dyn Pde, level: usize, sigma: f64) -> PinnLoss {
+        let grid = smolyak_sparse_grid(pde.d_in(), level);
+        PinnLoss {
+            method: DerivMethod::Sg,
+            estimator: SteinEstimator::from_grid(&grid, sigma),
+            res_scale: pde.res_scale(),
+            mc_samples: pde.mc_samples(),
+            sigma,
+            dim: pde.d_in(),
+        }
+    }
+
+    /// Monte Carlo Stein loss; call [`PinnLoss::resample_mc`] per step.
+    pub fn se(pde: &dyn Pde, samples: usize, rng: &mut Rng) -> PinnLoss {
+        let mut l = PinnLoss {
+            method: DerivMethod::Se,
+            estimator: SteinEstimator::from_grid(
+                &smolyak_sparse_grid(pde.d_in(), 1),
+                pde.sigma_stein(),
+            ),
+            res_scale: pde.res_scale(),
+            mc_samples: samples,
+            sigma: pde.sigma_stein(),
+            dim: pde.d_in(),
+        };
+        l.resample_mc(rng);
+        l
+    }
+
+    /// Draw fresh i.i.d. N(0, I) nodes for the SE backend.
+    pub fn resample_mc(&mut self, rng: &mut Rng) {
+        debug_assert_eq!(self.method, DerivMethod::Se);
+        let s = self.mc_samples;
+        let mut nodes = vec![0.0; s * self.dim];
+        rng.fill_normal(&mut nodes);
+        let w = vec![1.0 / s as f64; s];
+        self.estimator = SteinEstimator::from_nodes(self.dim, &nodes, &w, self.sigma);
+    }
+
+    /// Current MC nodes (row-major), for feeding the PJRT `loss_se` graph.
+    pub fn mc_nodes(&self) -> Option<Vec<f64>> {
+        match self.method {
+            DerivMethod::Se => {
+                // reconstruct nodes from the estimator's stored grad weights
+                None // not needed: PjrtEngine keeps its own node buffer
+            }
+            DerivMethod::Sg => None,
+        }
+    }
+
+    /// Forward queries needed for one loss evaluation.
+    pub fn queries(&self, pde: &dyn Pde) -> usize {
+        let n_res = pde.point_inputs()[0].1;
+        let data_pts: usize = pde.point_inputs()[1..].iter().map(|(_, n)| n).sum();
+        n_res * self.estimator.queries_per_point() + data_pts
+    }
+
+    /// Evaluate the loss through a batched raw-network oracle
+    /// `fwd(points, n) -> f values`.
+    pub fn eval(
+        &self,
+        pde: &dyn Pde,
+        pts: &PointSet,
+        fwd: &mut dyn FnMut(&[f64], usize) -> Vec<f64>,
+    ) -> f64 {
+        let x_res = pts.get("pts_res").expect("pts_res block");
+        let n = x_res.len() / pde.d_in();
+        let fb = self.estimator.bundle(|p, m| fwd(p, m), x_res, n);
+        let ub = pde.compose(x_res, &fb);
+        let r = pde.residual(x_res, &ub);
+        let mut loss =
+            r.iter().map(|v| (v * self.res_scale).powi(2)).sum::<f64>() / n as f64;
+        let mut u_of = |p: &[f64], m: usize| pde.transform(p, &fwd(p, m));
+        loss += pde.data_loss(pts, &mut u_of);
+        loss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::build_model;
+    use crate::pde::get_pde;
+
+    #[test]
+    fn sg_loss_is_finite_for_all_benchmarks() {
+        for name in crate::pde::ALL_PDES {
+            let pde = get_pde(name).unwrap();
+            let model = build_model(name, "std", 2, None).unwrap();
+            let flat = model.init_flat(0);
+            let mut rng = Rng::new(0);
+            let pts = pde.sample_points(&mut rng);
+            let loss = PinnLoss::sg(pde.as_ref());
+            let v = loss.eval(pde.as_ref(), &pts, &mut |p, m| {
+                model.forward(&flat, p, m, 1)
+            });
+            assert!(v.is_finite() && v >= 0.0, "{name}: {v}");
+        }
+    }
+
+    #[test]
+    fn query_count_black_scholes() {
+        // 100 residual x 27 + 30 data points = 2730.
+        let pde = get_pde("bs").unwrap();
+        let loss = PinnLoss::sg(pde.as_ref());
+        assert_eq!(loss.queries(pde.as_ref()), 100 * 27 + 30);
+    }
+
+    #[test]
+    fn se_loss_tracks_sg_order_of_magnitude() {
+        let pde = get_pde("bs").unwrap();
+        let model = build_model("bs", "std", 2, None).unwrap();
+        let flat = model.init_flat(3);
+        let mut rng = Rng::new(1);
+        let pts = pde.sample_points(&mut rng);
+        let sg = PinnLoss::sg(pde.as_ref());
+        let se = PinnLoss::se(pde.as_ref(), 2048, &mut rng);
+        let v_sg = sg.eval(pde.as_ref(), &pts, &mut |p, m| model.forward(&flat, p, m, 1));
+        let v_se = se.eval(pde.as_ref(), &pts, &mut |p, m| model.forward(&flat, p, m, 1));
+        assert!(v_se > 0.2 * v_sg && v_se < 10.0 * v_sg, "{v_se} vs {v_sg}");
+    }
+
+    #[test]
+    fn loss_decreases_along_negative_fd_gradient() {
+        // One finite-difference step on a few params must reduce the loss.
+        let pde = get_pde("bs").unwrap();
+        let model = build_model("bs", "tt", 2, None).unwrap();
+        let mut flat = model.init_flat(7);
+        let mut rng = Rng::new(2);
+        let pts = pde.sample_points(&mut rng);
+        let loss = PinnLoss::sg(pde.as_ref());
+        let f = |p: &Vec<f64>| {
+            loss.eval(pde.as_ref(), &pts, &mut |x, m| model.forward(p, x, m, 1))
+        };
+        let l0 = f(&flat);
+        // numerical gradient on 10 random coords
+        let h = 1e-5;
+        let mut grad = vec![0.0; flat.len()];
+        for _ in 0..10 {
+            let i = rng.below(flat.len());
+            let orig = flat[i];
+            flat[i] = orig + h;
+            let lp = f(&flat);
+            flat[i] = orig - h;
+            let lm = f(&flat);
+            flat[i] = orig;
+            grad[i] = (lp - lm) / (2.0 * h);
+        }
+        let gnorm: f64 = grad.iter().map(|g| g * g).sum::<f64>();
+        if gnorm > 0.0 {
+            for (p, g) in flat.iter_mut().zip(&grad) {
+                *p -= 1e-3 * g / gnorm.sqrt();
+            }
+            let l1 = f(&flat);
+            assert!(l1 < l0 + 1e-9, "loss went up: {l0} -> {l1}");
+        }
+    }
+}

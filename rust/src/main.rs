@@ -1,0 +1,280 @@
+//! `opinn` — the optical-PINN training coordinator CLI (L3 leader).
+//!
+//! Subcommands:
+//!   train        weight-domain training (FO via AOT grad / BP-free ZO)
+//!   train-phase  photonic phase-domain training (flops|l2ight|ours)
+//!   tables       regenerate a paper table/figure (t1 t2 t3 t456 fig3
+//!                ablations mnist)
+//!   hw-report    print the pre-silicon footprint/latency model
+//!   info         artifact manifest summary
+//!
+//! Examples:
+//!   opinn train bs tt --train zo --epochs 2000 --backend pjrt
+//!   opinn train-phase bs --protocol ours --epochs 500
+//!   opinn tables t2
+//!   OPINN_FULL=1 opinn tables t3
+
+use optical_pinn::config::ExperimentConfig;
+use optical_pinn::coordinator::{save_params, Metrics};
+use optical_pinn::experiments::{self, Backend, RunSpec};
+use optical_pinn::hw;
+use optical_pinn::mnist;
+use optical_pinn::net::build_model;
+use optical_pinn::photonic::training::PhaseTrainConfig;
+use optical_pinn::photonic::{train_phase_domain, PhaseProtocol, PhotonicModel, PhotonicVariant};
+use optical_pinn::util::argparse::Args;
+use optical_pinn::util::rng::Rng;
+use optical_pinn::util::stats::sci;
+use optical_pinn::zo::rge::RgeConfig;
+use optical_pinn::zo::{train, TrainConfig, TrainMethod};
+use optical_pinn::Result;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("opinn: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn backend_of(cfg: &ExperimentConfig) -> Backend {
+    if cfg.backend == "native" {
+        Backend::Native
+    } else {
+        Backend::Pjrt
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(args),
+        Some("train-phase") => cmd_train_phase(args),
+        Some("tables") => cmd_tables(args),
+        Some("hw-report") => cmd_hw_report(args),
+        Some("info") => cmd_info(args),
+        _ => {
+            eprintln!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "usage: opinn <train|train-phase|tables|hw-report|info> [options]
+  train <pde> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
+        [--lr F] [--seed N] [--backend pjrt|native] [--out ckpt.json]
+  train-phase <pde> [--protocol ours|flops|l2ight] [--epochs N]
+  tables <t1|t2|t3|t456|fig3|tt_rank|width|grid|mc_samples|sg_level|sigma|mu|queries|mnist>
+  hw-report [--epochs N]
+  info";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_args(args)?;
+    cfg.validate()?;
+    let method = if cfg.train == "fo" {
+        TrainMethod::Fo
+    } else {
+        TrainMethod::ZoRge(RgeConfig {
+            mu: cfg.mu,
+            n_queries: cfg.n_queries,
+            ..Default::default()
+        })
+    };
+    let loss_method = match cfg.method {
+        optical_pinn::loss::DerivMethod::Sg => "sg",
+        optical_pinn::loss::DerivMethod::Se => "se",
+    };
+    let spec = RunSpec {
+        pde: cfg.pde.clone(),
+        variant: cfg.variant.clone(),
+        model_key: None,
+        method: loss_method.into(),
+        rank: cfg.rank,
+        width: cfg.width,
+    };
+    let mut engine = experiments::make_engine(&spec, backend_of(&cfg))?;
+    let model = build_model(&cfg.pde, &cfg.variant, cfg.rank, cfg.width)?;
+    let mut params = model.init_flat(cfg.seed);
+    let tc = TrainConfig {
+        method,
+        epochs: cfg.epochs,
+        lr: cfg.lr,
+        eval_every: cfg.eval_every,
+        seed: cfg.seed,
+        layout: model.param_layout(),
+        max_forwards: None,
+        verbose: true,
+    };
+    let mut metrics = Metrics::new();
+    let hist = metrics.time("train", || train(engine.as_mut(), &mut params, &tc))?;
+    for ((s, e), l) in hist.steps.iter().zip(&hist.errors).zip(&hist.losses) {
+        metrics.curve_point(*s, &[("rel_l2", *e), ("loss", *l)]);
+    }
+    println!(
+        "final rel_l2 = {}  (best {})  forwards = {}  wall = {:.1}s  [{}]",
+        sci(hist.final_error),
+        sci(hist.best_error()),
+        hist.total_forwards,
+        hist.wall_secs,
+        engine.backend(),
+    );
+    if let Some(out) = args.get("out") {
+        save_params(std::path::Path::new(out), &model.name, cfg.epochs, &params)?;
+        println!("checkpoint -> {out}");
+    }
+    if let Some(curve) = args.get("curve") {
+        metrics.write_curve_csv(std::path::Path::new(curve))?;
+    }
+    Ok(())
+}
+
+fn cmd_train_phase(args: &Args) -> Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_args(args)?;
+    let protocol = match args.get_or("protocol", "ours").as_str() {
+        "ours" => PhaseProtocol::Ours,
+        "flops" => PhaseProtocol::Flops,
+        "l2ight" => PhaseProtocol::L2ight,
+        other => return Err(optical_pinn::err(format!("unknown protocol {other:?}"))),
+    };
+    let (variant, pv) = match protocol {
+        PhaseProtocol::Ours => ("tt", PhotonicVariant::Tonn),
+        _ => ("std", PhotonicVariant::Onn),
+    };
+    let spec = RunSpec::new(&cfg.pde, variant, "sg");
+    let mut engine = experiments::make_engine(&spec, backend_of(&cfg))?;
+    let mut pm = PhotonicModel::new(&cfg.pde, pv, cfg.seed)?;
+    println!(
+        "photonic model: {} MZIs, {} trainable scalars",
+        pm.n_mzis(),
+        pm.n_trainable()
+    );
+    let pc = PhaseTrainConfig {
+        epochs: cfg.epochs,
+        lr: cfg.lr,
+        eval_every: cfg.eval_every,
+        seed: cfg.seed,
+        verbose: true,
+        ..Default::default()
+    };
+    let (phi, hist) = train_phase_domain(&mut pm, engine.as_mut(), protocol, &pc)?;
+    println!(
+        "final rel_l2 = {} (best {})  forwards = {}",
+        sci(hist.final_error),
+        sci(hist.best_error()),
+        hist.total_forwards
+    );
+    if let Some(out) = args.get("out") {
+        save_params(std::path::Path::new(out), "phases", cfg.epochs, &phi)?;
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "t2".to_string());
+    let backend = if args.get("backend") == Some("native") {
+        Backend::Native
+    } else {
+        Backend::Pjrt
+    };
+    match which.as_str() {
+        "t1" => experiments::record_table("t1", &experiments::table1(backend)?),
+        "t2" => experiments::record_table("t2", &experiments::table2(backend)?),
+        "t3" => {
+            let t = experiments::table3(backend, &["bs", "hjb20", "burgers", "darcy"])?;
+            experiments::record_table("t3", &t)
+        }
+        "t456" => {
+            let (t4, t5, t6) = experiments::tables456(None);
+            experiments::record_table("t4", &t4);
+            experiments::record_table("t5", &t5);
+            experiments::record_table("t6", &t6);
+        }
+        "fig3" => experiments::record_table("fig3", &experiments::fig3(backend)?),
+        "mnist" => cmd_mnist()?,
+        abl => experiments::record_table(abl, &experiments::ablation(abl, backend)?),
+    }
+    Ok(())
+}
+
+fn cmd_mnist() -> Result<()> {
+    use optical_pinn::bench_harness::{full_scale, Table};
+    let (n_train, n_test, epochs) = if full_scale() {
+        (4000, 1000, 2000)
+    } else {
+        (512, 256, 80)
+    };
+    let train_set = mnist::MnistLike::generate(n_train, 0);
+    let test_set = mnist::MnistLike::generate(n_test, 1);
+    let threads = optical_pinn::engine::native::default_threads();
+    let mut t = Table::new(
+        "Table 23 — MNIST-like validation accuracy (weight domain)",
+        &["Method", "Params", "Val. accuracy (%)"],
+    );
+    // FO std via manual backprop
+    {
+        let model = mnist::build_classifier("std")?;
+        let mut flat = model.init_flat(0);
+        let mut rng = Rng::new(0);
+        let mut opt = optical_pinn::optim::Adam::new(flat.len(), 1e-3);
+        use optical_pinn::optim::Optimizer;
+        for _ in 0..epochs {
+            let idx: Vec<usize> = (0..128).map(|_| rng.below(train_set.len())).collect();
+            let (x, y) = train_set.batch(&idx);
+            let (_, g) = mnist::fo_loss_grad(&model, &flat, &x, &y, threads)?;
+            opt.step(&mut flat, &g);
+        }
+        let acc = mnist::accuracy(&model, &flat, &test_set, threads);
+        t.row(vec![
+            "Standard, FO".into(),
+            model.n_params().to_string(),
+            format!("{:.2}", 100.0 * acc),
+        ]);
+    }
+    for variant in ["std", "tt"] {
+        let model = mnist::build_classifier(variant)?;
+        let mut flat = model.init_flat(0);
+        mnist::train_zo(&model, &mut flat, &train_set, epochs, 128, 0, threads)?;
+        let acc = mnist::accuracy(&model, &flat, &test_set, threads);
+        t.row(vec![
+            format!("{variant}, ZO"),
+            model.n_params().to_string(),
+            format!("{:.2}", 100.0 * acc),
+        ]);
+    }
+    experiments::record_table("mnist", &t);
+    Ok(())
+}
+
+fn cmd_hw_report(args: &Args) -> Result<()> {
+    let epochs = args.get_usize("epochs", 10_000)?;
+    let (t4, t5, t6) = experiments::tables456(Some(epochs));
+    t4.print();
+    t5.print();
+    t6.print();
+    let red = hw::Layout::OnnSm.n_mzis() as f64 / hw::Layout::TonnSm.n_mzis() as f64;
+    println!("MZI reduction (ONN-SM -> TONN-SM): {red:.1}x");
+    Ok(())
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let dir = experiments::runner::artifacts_dir()
+        .ok_or_else(|| optical_pinn::err("no artifacts found; run `make artifacts`"))?;
+    let rt = optical_pinn::engine::PjrtRuntime::new(&dir)?;
+    let arts = rt.manifest.req("artifacts")?.as_arr()?;
+    let models = rt.manifest.req("models")?.as_obj()?;
+    println!("artifacts dir: {}", dir.display());
+    println!("{} artifacts, {} models", arts.len(), models.len());
+    for (k, m) in models {
+        println!("  {k}: {} params", m.req("n_params")?.as_usize()?);
+    }
+    Ok(())
+}

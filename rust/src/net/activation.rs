@@ -1,0 +1,62 @@
+//! Layer activations (paper: tanh for BS/Burgers/Darcy, sine for HJB).
+
+/// Elementwise activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Tanh,
+    Sine,
+    Relu,
+    Identity,
+}
+
+impl Act {
+    #[inline]
+    pub fn eval(self, x: f64) -> f64 {
+        match self {
+            Act::Tanh => x.tanh(),
+            Act::Sine => x.sin(),
+            Act::Relu => x.max(0.0),
+            Act::Identity => x,
+        }
+    }
+
+    /// Apply in place over a buffer.
+    pub fn apply(self, xs: &mut [f64]) {
+        if self == Act::Identity {
+            return;
+        }
+        for v in xs.iter_mut() {
+            *v = self.eval(*v);
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Act::Tanh => "tanh",
+            Act::Sine => "sine",
+            Act::Relu => "relu",
+            Act::Identity => "identity",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn values() {
+        assert_eq!(Act::Identity.eval(3.5), 3.5);
+        assert_eq!(Act::Relu.eval(-2.0), 0.0);
+        assert_eq!(Act::Relu.eval(2.0), 2.0);
+        assert!((Act::Tanh.eval(0.5) - 0.5f64.tanh()).abs() < 1e-15);
+        assert!((Act::Sine.eval(1.0) - 1.0f64.sin()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn apply_in_place() {
+        let mut xs = vec![-1.0, 0.0, 2.0];
+        Act::Relu.apply(&mut xs);
+        assert_eq!(xs, vec![0.0, 0.0, 2.0]);
+    }
+}

@@ -1,0 +1,364 @@
+//! Layers: dense affine and tensor-train factorized (paper Eq. (13)).
+
+use super::activation::Act;
+use crate::linalg::gemm::{gemm, matmul_parallel};
+use crate::util::rng::Rng;
+
+/// Dense layer: `y = act(x @ A + b)` with `A` (n_in x n_out) row-major
+/// (the transpose of the paper's `W`).
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    pub n_in: usize,
+    pub n_out: usize,
+    pub act: Act,
+}
+
+/// Tensor-train layer: the paper's `W` (M x N) stored as cores
+/// `G_k` of shape (r_{k-1}, m_k, n_k, r_k); computes
+/// `y = act(x @ W(cores)^T + b)` by sequential core contraction without
+/// materializing `W` — the digital twin of the cascaded photonic tensor
+/// cores in TONN-SM (Fig. 2b).
+#[derive(Debug, Clone)]
+pub struct TTLayer {
+    pub m: Vec<usize>,
+    pub n: Vec<usize>,
+    pub ranks: Vec<usize>,
+    pub act: Act,
+}
+
+impl TTLayer {
+    pub fn new(m: Vec<usize>, n: Vec<usize>, ranks: Vec<usize>, act: Act) -> TTLayer {
+        assert_eq!(m.len(), n.len(), "mode count mismatch");
+        assert_eq!(ranks.len(), m.len() + 1, "rank count mismatch");
+        assert!(ranks[0] == 1 && ranks[m.len()] == 1, "boundary ranks must be 1");
+        TTLayer { m, n, ranks, act }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n.iter().product()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.m.iter().product()
+    }
+
+    pub fn core_shapes(&self) -> Vec<(usize, usize, usize, usize)> {
+        (0..self.m.len())
+            .map(|k| (self.ranks[k], self.m[k], self.n[k], self.ranks[k + 1]))
+            .collect()
+    }
+
+    pub fn n_core_params(&self) -> usize {
+        self.core_shapes().iter().map(|s| s.0 * s.1 * s.2 * s.3).sum()
+    }
+
+    /// Materialize the full W (n_out x n_in), for tests and for mapping
+    /// onto photonic meshes.
+    pub fn full_matrix(&self, cores_flat: &[f64]) -> Vec<f64> {
+        // t: (M_acc x N_acc x r) built left to right.
+        let mut t = vec![1.0f64];
+        let (mut ma, mut na, mut r) = (1usize, 1usize, 1usize);
+        let mut off = 0;
+        for (r_in, m_k, n_k, r_out) in self.core_shapes() {
+            let core = &cores_flat[off..off + r_in * m_k * n_k * r_out];
+            off += core.len();
+            let mut t2 = vec![0.0; ma * m_k * na * n_k * r_out];
+            for a in 0..ma {
+                for mm in 0..m_k {
+                    for b in 0..na {
+                        for nn in 0..n_k {
+                            let mut acc = vec![0.0; r_out];
+                            for ri in 0..r {
+                                let tv = t[(a * na + b) * r + ri];
+                                if tv == 0.0 {
+                                    continue;
+                                }
+                                let base = ((ri * m_k + mm) * n_k + nn) * r_out;
+                                for (ro, av) in acc.iter_mut().enumerate() {
+                                    *av += tv * core[base + ro];
+                                }
+                            }
+                            let row = a * m_k + mm;
+                            let col = b * n_k + nn;
+                            let dst = (row * (na * n_k) + col) * r_out;
+                            t2[dst..dst + r_out].copy_from_slice(&acc);
+                        }
+                    }
+                }
+            }
+            t = t2;
+            ma *= m_k;
+            na *= n_k;
+            r = r_out;
+        }
+        debug_assert_eq!(r, 1);
+        t // (n_out x n_in), row-major
+    }
+
+    /// TT matrix-vector product over a batch: x (B x N) -> (B x M),
+    /// identical contraction order to `kernels/ref.py::tt_contract_ref`.
+    pub fn contract(&self, cores_flat: &[f64], x: &[f64], batch: usize) -> Vec<f64> {
+        let n_total = self.n_in();
+        debug_assert_eq!(x.len(), batch * n_total);
+        let mut rest = n_total;
+        let mut macc = 1usize;
+        // carry: (B, rest, macc * r), r starts at 1.
+        let mut carry = x.to_vec();
+        let mut r_cur = 1usize;
+        let mut off = 0;
+        let mut scratch: Vec<f64> = Vec::new();
+        for (r_in, m_k, n_k, r_out) in self.core_shapes() {
+            let core = &cores_flat[off..off + r_in * m_k * n_k * r_out];
+            off += core.len();
+            debug_assert_eq!(r_in, r_cur);
+            let rest2 = rest / n_k;
+            // Permute carry (B, n_k, rest2, macc, r_in) -> (B, rest2, macc, r_in, n_k)
+            let rows = batch * rest2 * macc;
+            let inner = r_in * n_k;
+            scratch.clear();
+            scratch.resize(rows * inner, 0.0);
+            for b in 0..batch {
+                for jn in 0..n_k {
+                    for r2 in 0..rest2 {
+                        for ma in 0..macc {
+                            let src = (((b * n_k + jn) * rest2 + r2) * macc + ma) * r_in;
+                            let dst_row = (b * rest2 + r2) * macc + ma;
+                            for ri in 0..r_in {
+                                scratch[dst_row * inner + ri * n_k + jn] = carry[src + ri];
+                            }
+                        }
+                    }
+                }
+            }
+            // Core reshaped (r_in, n_k, m_k, r_out) -> (inner x m_k*r_out)
+            let outc = m_k * r_out;
+            let mut g = vec![0.0; inner * outc];
+            for ri in 0..r_in {
+                for mm in 0..m_k {
+                    for nn in 0..n_k {
+                        for ro in 0..r_out {
+                            g[(ri * n_k + nn) * outc + mm * r_out + ro] =
+                                core[((ri * m_k + mm) * n_k + nn) * r_out + ro];
+                        }
+                    }
+                }
+            }
+            let mut out = vec![0.0; rows * outc];
+            gemm(rows, inner, outc, &scratch, &g, &mut out);
+            carry = out; // logical (B, rest2, macc*m_k*r_out)
+            rest = rest2;
+            macc *= m_k;
+            r_cur = r_out;
+        }
+        debug_assert_eq!(rest, 1);
+        debug_assert_eq!(r_cur, 1);
+        carry // (B x M)
+    }
+}
+
+/// A network layer.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Dense(DenseLayer),
+    TT(TTLayer),
+}
+
+impl Layer {
+    pub fn dense(n_in: usize, n_out: usize, act: Act) -> Layer {
+        Layer::Dense(DenseLayer { n_in, n_out, act })
+    }
+
+    pub fn n_in(&self) -> usize {
+        match self {
+            Layer::Dense(l) => l.n_in,
+            Layer::TT(l) => l.n_in(),
+        }
+    }
+
+    pub fn n_out(&self) -> usize {
+        match self {
+            Layer::Dense(l) => l.n_out,
+            Layer::TT(l) => l.n_out(),
+        }
+    }
+
+    pub fn act(&self) -> Act {
+        match self {
+            Layer::Dense(l) => l.act,
+            Layer::TT(l) => l.act,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        match self {
+            Layer::Dense(l) => l.n_in * l.n_out + l.n_out,
+            Layer::TT(l) => l.n_core_params() + l.n_out(),
+        }
+    }
+
+    /// Named parameter shapes, in flat-layout order (matches model.py).
+    pub fn shapes(&self, idx: usize) -> Vec<(String, Vec<usize>)> {
+        match self {
+            Layer::Dense(l) => vec![
+                (format!("layer{idx}.A"), vec![l.n_in, l.n_out]),
+                (format!("layer{idx}.b"), vec![l.n_out]),
+            ],
+            Layer::TT(l) => {
+                let mut v: Vec<(String, Vec<usize>)> = l
+                    .core_shapes()
+                    .iter()
+                    .enumerate()
+                    .map(|(k, s)| (format!("layer{idx}.core{k}"), vec![s.0, s.1, s.2, s.3]))
+                    .collect();
+                v.push((format!("layer{idx}.b"), vec![l.n_out()]));
+                v
+            }
+        }
+    }
+
+    /// Initialize this layer's parameters into `out` (appended).
+    pub fn init_into(&self, rng: &mut Rng, out: &mut Vec<f64>) {
+        match self {
+            Layer::Dense(l) => {
+                let bound = (6.0 / (l.n_in + l.n_out) as f64).sqrt();
+                for _ in 0..l.n_in * l.n_out {
+                    out.push(rng.uniform_in(-bound, bound));
+                }
+                out.extend(std::iter::repeat(0.0).take(l.n_out));
+            }
+            Layer::TT(l) => {
+                // Match model.py: core std so reconstructed W has Xavier var.
+                let big_l = l.m.len();
+                let target = 2.0 / (l.n_in() + l.n_out()) as f64;
+                let paths: usize = l.ranks[1..big_l].iter().product();
+                let sigma_c = (target / paths.max(1) as f64).powf(1.0 / (2 * big_l) as f64);
+                for _ in 0..l.n_core_params() {
+                    out.push(rng.normal_ms(0.0, sigma_c));
+                }
+                out.extend(std::iter::repeat(0.0).take(l.n_out()));
+            }
+        }
+    }
+
+    /// Forward over a batch: params is this layer's slice of the flat
+    /// vector; x (B x n_in) -> (B x n_out) with activation applied.
+    pub fn forward(&self, params: &[f64], x: &[f64], batch: usize, threads: usize) -> Vec<f64> {
+        debug_assert_eq!(params.len(), self.n_params());
+        let mut y = match self {
+            Layer::Dense(l) => {
+                let a = &params[..l.n_in * l.n_out];
+                let b = &params[l.n_in * l.n_out..];
+                let mut y = matmul_parallel(batch, l.n_in, l.n_out, x, a, threads);
+                for row in y.chunks_mut(l.n_out) {
+                    for (v, bv) in row.iter_mut().zip(b) {
+                        *v += bv;
+                    }
+                }
+                y
+            }
+            Layer::TT(l) => {
+                let ncore = l.n_core_params();
+                let b = &params[ncore..];
+                let mut y = l.contract(&params[..ncore], x, batch);
+                for row in y.chunks_mut(l.n_out()) {
+                    for (v, bv) in row.iter_mut().zip(b) {
+                        *v += bv;
+                    }
+                }
+                y
+            }
+        };
+        self.act().apply(&mut y);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::{assert_close, check};
+
+    #[test]
+    fn dense_forward_known() {
+        let l = Layer::dense(2, 2, Act::Identity);
+        // A = [[1,2],[3,4]], b = [10, 20]
+        let params = vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0];
+        let y = l.forward(&params, &[1.0, 1.0], 1, 1);
+        assert_eq!(y, vec![14.0, 26.0]);
+    }
+
+    #[test]
+    fn tt_contract_matches_full_matrix_property() {
+        check(
+            "tt contract == dense",
+            25,
+            |r| {
+                let ell = 2 + r.below(3);
+                let m: Vec<usize> = (0..ell).map(|_| 1 + r.below(4)).collect();
+                let n: Vec<usize> = (0..ell).map(|_| 1 + r.below(4)).collect();
+                let mut ranks = vec![1usize];
+                for _ in 1..ell {
+                    ranks.push(1 + r.below(3));
+                }
+                ranks.push(1);
+                let tt = TTLayer::new(m, n, ranks, Act::Identity);
+                let mut cores = vec![0.0; tt.n_core_params()];
+                r.fill_normal(&mut cores);
+                let batch = 1 + r.below(7);
+                let mut x = vec![0.0; batch * tt.n_in()];
+                r.fill_normal(&mut x);
+                (tt, cores, x, batch)
+            },
+            |(tt, cores, x, batch)| {
+                let got = tt.contract(cores, x, *batch);
+                // dense reference: y = x @ W^T
+                let w = tt.full_matrix(cores); // (M x N)
+                let (m_out, n_in) = (tt.n_out(), tt.n_in());
+                let mut want = vec![0.0; batch * m_out];
+                for bi in 0..*batch {
+                    for i in 0..m_out {
+                        let mut acc = 0.0;
+                        for j in 0..n_in {
+                            acc += x[bi * n_in + j] * w[i * n_in + j];
+                        }
+                        want[bi * m_out + i] = acc;
+                    }
+                }
+                assert_close(&got, &want, 1e-10)
+            },
+        );
+    }
+
+    #[test]
+    fn paper_bs_fold_counts() {
+        let tt = TTLayer::new(vec![4, 4, 8], vec![8, 4, 4], vec![1, 2, 2, 1], Act::Tanh);
+        assert_eq!(tt.n_in(), 128);
+        assert_eq!(tt.n_out(), 128);
+        assert_eq!(tt.n_core_params(), 192);
+        assert_eq!(Layer::TT(tt).n_params(), 320);
+    }
+
+    #[test]
+    fn rank_one_is_kronecker() {
+        let tt = TTLayer::new(vec![2, 2], vec![2, 2], vec![1, 1, 1], Act::Identity);
+        let cores = vec![
+            1.0, 2.0, 3.0, 4.0, // G1 (1,2,2,1): [[1,2],[3,4]]
+            5.0, 6.0, 7.0, 8.0, // G2: [[5,6],[7,8]]
+        ];
+        let w = tt.full_matrix(&cores);
+        // W = kron(G1, G2)
+        let want = [
+            5.0, 6.0, 10.0, 12.0,
+            7.0, 8.0, 14.0, 16.0,
+            15.0, 18.0, 20.0, 24.0,
+            21.0, 24.0, 28.0, 32.0,
+        ];
+        assert_close(&w, &want, 1e-14).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "boundary ranks")]
+    fn bad_ranks_rejected() {
+        TTLayer::new(vec![2], vec![2], vec![2, 1], Act::Tanh);
+    }
+}

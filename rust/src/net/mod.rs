@@ -1,0 +1,15 @@
+//! PINN body networks: dense MLP and tensor-train (TT) compressed MLP.
+//!
+//! Exact L3 mirror of `python/compile/model.py`: the layer stack, the flat
+//! parameter layout, and the forward numerics match the AOT-lowered graphs
+//! (the integration tests cross-check native-vs-PJRT to ~1e-12). The
+//! native forward powers the photonic phase-domain simulator and the
+//! fallback engine; the production loss path executes the compiled HLO.
+
+pub mod activation;
+pub mod layer;
+pub mod model;
+
+pub use activation::Act;
+pub use layer::{DenseLayer, Layer, TTLayer};
+pub use model::{build_model, Model, ParamEntry};

@@ -1,0 +1,309 @@
+//! Model assembly + the flat-parameter interchange contract.
+
+use super::activation::Act;
+use super::layer::{Layer, TTLayer};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+/// One entry of the flat parameter layout (mirrors manifest.json).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// A PINN body network: fixed affine input normalization + layer stack.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub in_lo: Vec<f64>,
+    pub in_hi: Vec<f64>,
+}
+
+impl Model {
+    pub fn d_in(&self) -> usize {
+        self.layers[0].n_in()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+
+    /// Flat layout, identical to `ModelDef.param_layout()` in model.py.
+    pub fn param_layout(&self) -> Vec<ParamEntry> {
+        let mut out = Vec::new();
+        let mut off = 0;
+        for (i, layer) in self.layers.iter().enumerate() {
+            for (name, shape) in layer.shapes(i) {
+                let len: usize = shape.iter().product();
+                out.push(ParamEntry { name, shape, offset: off, len });
+                off += len;
+            }
+        }
+        out
+    }
+
+    /// Check this model's layout against a manifest.json "models" entry.
+    pub fn check_manifest(&self, entry: &Json) -> Result<()> {
+        let n = entry.req("n_params")?.as_usize()?;
+        if n != self.n_params() {
+            return Err(Error::Shape(format!(
+                "{}: manifest has {n} params, model has {}",
+                self.name,
+                self.n_params()
+            )));
+        }
+        let layout = entry.req("layout")?.as_arr()?;
+        let ours = self.param_layout();
+        if layout.len() != ours.len() {
+            return Err(Error::Shape(format!(
+                "{}: manifest layout has {} entries, model has {}",
+                self.name,
+                layout.len(),
+                ours.len()
+            )));
+        }
+        for (theirs, mine) in layout.iter().zip(&ours) {
+            let name = theirs.req("name")?.as_str()?;
+            let off = theirs.req("offset")?.as_usize()?;
+            let shape: Vec<usize> = theirs
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?;
+            if name != mine.name || off != mine.offset || shape != mine.shape {
+                return Err(Error::Shape(format!(
+                    "{}: layout mismatch at {}: manifest ({name}, {off}, {shape:?}) vs ({}, {}, {:?})",
+                    self.name, mine.name, mine.name, mine.offset, mine.shape
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Deterministic init (rust-side; artifacts accept any params).
+    pub fn init_flat(&self, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(self.n_params());
+        for layer in &self.layers {
+            layer.init_into(&mut rng, &mut out);
+        }
+        debug_assert_eq!(out.len(), self.n_params());
+        out
+    }
+
+    /// Raw network output f_theta: x (B x d_in) -> (B,), identical
+    /// numerics to `ModelDef.apply` in model.py.
+    pub fn forward(&self, flat: &[f64], x: &[f64], batch: usize, threads: usize) -> Vec<f64> {
+        assert_eq!(flat.len(), self.n_params(), "param length mismatch");
+        let d = self.d_in();
+        assert_eq!(x.len(), batch * d, "input shape mismatch");
+        // input normalization to [-1, 1]
+        let mut h = vec![0.0; batch * d];
+        for i in 0..batch {
+            for k in 0..d {
+                let (lo, hi) = (self.in_lo[k], self.in_hi[k]);
+                h[i * d + k] = (x[i * d + k] - lo) / (hi - lo) * 2.0 - 1.0;
+            }
+        }
+        let mut off = 0;
+        for layer in &self.layers {
+            let p = &flat[off..off + layer.n_params()];
+            off += layer.n_params();
+            h = layer.forward(p, &h, batch, threads);
+        }
+        // (B x 1) -> (B,)
+        debug_assert_eq!(h.len(), batch);
+        h
+    }
+}
+
+/// Construct the paper's baseline network for a PDE benchmark
+/// (exact mirror of `build_model` in model.py).
+pub fn build_model(pde: &str, variant: &str, rank: usize, width: Option<usize>) -> Result<Model> {
+    let tt = match variant {
+        "std" => false,
+        "tt" => true,
+        other => return Err(Error::Config(format!("unknown variant {other:?}"))),
+    };
+    let hidden100 = || {
+        Layer::TT(TTLayer::new(
+            vec![4, 5, 5],
+            vec![5, 5, 4],
+            vec![1, 2, 2, 1],
+            Act::Tanh,
+        ))
+    };
+    let model = match pde {
+        "bs" => {
+            let w = width.unwrap_or(128);
+            let layers = if !tt {
+                vec![
+                    Layer::dense(2, w, Act::Tanh),
+                    Layer::dense(w, w, Act::Tanh),
+                    Layer::dense(w, 1, Act::Identity),
+                ]
+            } else {
+                if w != 128 {
+                    return Err(Error::Config("TT fold is defined for width 128".into()));
+                }
+                vec![
+                    Layer::dense(2, 128, Act::Tanh),
+                    Layer::TT(TTLayer::new(
+                        vec![4, 4, 8],
+                        vec![8, 4, 4],
+                        vec![1, rank, rank, 1],
+                        Act::Tanh,
+                    )),
+                    Layer::dense(128, 1, Act::Identity),
+                ]
+            };
+            Model {
+                name: format!("bs_{variant}"),
+                layers,
+                in_lo: vec![0.0, 0.0],
+                in_hi: vec![200.0, 1.0],
+            }
+        }
+        "hjb20" => {
+            let w = width.unwrap_or(512);
+            let layers = if !tt {
+                vec![
+                    Layer::dense(21, w, Act::Sine),
+                    Layer::dense(w, w, Act::Sine),
+                    Layer::dense(w, 1, Act::Identity),
+                ]
+            } else {
+                if w != 512 {
+                    return Err(Error::Config("TT fold is defined for width 512".into()));
+                }
+                vec![
+                    Layer::TT(TTLayer::new(
+                        vec![8, 4, 4, 4],
+                        vec![1, 1, 3, 7],
+                        vec![1, rank, rank, rank, 1],
+                        Act::Sine,
+                    )),
+                    Layer::TT(TTLayer::new(
+                        vec![8, 4, 4, 4],
+                        vec![4, 4, 4, 8],
+                        vec![1, rank, rank, rank, 1],
+                        Act::Sine,
+                    )),
+                    Layer::dense(512, 1, Act::Identity),
+                ]
+            };
+            Model {
+                name: format!("hjb20_{variant}"),
+                layers,
+                in_lo: vec![0.0; 21],
+                in_hi: vec![1.0; 21],
+            }
+        }
+        "burgers" | "darcy" => {
+            let w = width.unwrap_or(100);
+            let layers = if !tt {
+                vec![
+                    Layer::dense(2, w, Act::Tanh),
+                    Layer::dense(w, w, Act::Tanh),
+                    Layer::dense(w, w, Act::Tanh),
+                    Layer::dense(w, w, Act::Tanh),
+                    Layer::dense(w, 1, Act::Identity),
+                ]
+            } else {
+                if w != 100 {
+                    return Err(Error::Config("TT fold is defined for width 100".into()));
+                }
+                vec![
+                    Layer::dense(2, 100, Act::Tanh),
+                    hidden100(),
+                    hidden100(),
+                    hidden100(),
+                    Layer::dense(100, 1, Act::Identity),
+                ]
+            };
+            let lo = if pde == "burgers" { vec![-1.0, 0.0] } else { vec![0.0, 0.0] };
+            Model {
+                name: format!("{pde}_{variant}"),
+                layers,
+                in_lo: lo,
+                in_hi: vec![1.0, 1.0],
+            }
+        }
+        other => return Err(Error::Config(format!("unknown pde {other:?}"))),
+    };
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_param_counts() {
+        // App. C.1 / Tables 9-10 — same table as python test_model.py.
+        let cases: Vec<(&str, &str, usize, Option<usize>, usize)> = vec![
+            ("bs", "std", 2, None, 17025),
+            ("bs", "tt", 2, None, 833),
+            ("hjb20", "std", 2, None, 274433),
+            ("hjb20", "tt", 2, None, 1929),
+            ("hjb20", "tt", 4, None, 2705),
+            ("hjb20", "tt", 6, None, 3865),
+            ("hjb20", "tt", 8, None, 5409),
+            ("hjb20", "std", 2, Some(256), 71681),
+            ("hjb20", "std", 2, Some(32), 1793),
+            ("burgers", "std", 2, None, 30701),
+            ("burgers", "tt", 2, None, 1241),
+            ("darcy", "tt", 2, None, 1241),
+        ];
+        for (pde, variant, rank, width, expect) in cases {
+            let m = build_model(pde, variant, rank, width).unwrap();
+            assert_eq!(m.n_params(), expect, "{pde} {variant} r={rank} w={width:?}");
+        }
+    }
+
+    #[test]
+    fn layout_is_dense_and_ordered() {
+        for (pde, variant) in [("bs", "tt"), ("hjb20", "tt"), ("burgers", "std")] {
+            let m = build_model(pde, variant, 2, None).unwrap();
+            let mut off = 0;
+            for e in m.param_layout() {
+                assert_eq!(e.offset, off, "{pde} {variant} {}", e.name);
+                assert_eq!(e.len, e.shape.iter().product::<usize>());
+                off += e.len;
+            }
+            assert_eq!(off, m.n_params());
+        }
+    }
+
+    #[test]
+    fn forward_is_finite_and_normalized_inputs_help() {
+        let m = build_model("bs", "tt", 2, None).unwrap();
+        let flat = m.init_flat(0);
+        let x = vec![100.0, 0.5, 0.0, 0.0, 200.0, 1.0];
+        let y = m.forward(&flat, &x, 3, 1);
+        assert_eq!(y.len(), 3);
+        for v in y {
+            assert!(v.is_finite() && v.abs() < 10.0);
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let m = build_model("bs", "std", 2, None).unwrap();
+        assert_eq!(m.init_flat(1), m.init_flat(1));
+        assert_ne!(m.init_flat(1), m.init_flat(2));
+    }
+
+    #[test]
+    fn unknown_configs_rejected() {
+        assert!(build_model("heat", "std", 2, None).is_err());
+        assert!(build_model("bs", "cp", 2, None).is_err());
+        assert!(build_model("bs", "tt", 2, Some(64)).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! First-order optimizers driven by exact (FO) or estimated (ZO)
+//! gradients. The paper trains everything with Adam at lr 1e-3 (§5).
+
+/// A gradient-descent optimizer over a flat parameter vector.
+pub trait Optimizer: Send {
+    fn step(&mut self, params: &mut [f64], grad: &[f64]);
+    fn lr(&self) -> f64;
+    fn set_lr(&mut self, lr: f64);
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(dim: usize, lr: f64) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len(), "Adam dim mismatch");
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+/// Plain SGD (optionally with momentum).
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    vel: Vec<f64>,
+}
+
+impl Sgd {
+    pub fn new(dim: usize, lr: f64, momentum: f64) -> Sgd {
+        Sgd { lr, momentum, vel: vec![0.0; dim] }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), grad.len());
+        for i in 0..params.len() {
+            self.vel[i] = self.momentum * self.vel[i] - self.lr * grad[i];
+            params[i] += self.vel[i];
+        }
+    }
+
+    fn lr(&self) -> f64 {
+        self.lr
+    }
+
+    fn set_lr(&mut self, lr: f64) {
+        self.lr = lr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rosenbrock_grad(p: &[f64]) -> (f64, Vec<f64>) {
+        let (x, y) = (p[0], p[1]);
+        let f = (1.0 - x).powi(2) + 100.0 * (y - x * x).powi(2);
+        let gx = -2.0 * (1.0 - x) - 400.0 * x * (y - x * x);
+        let gy = 200.0 * (y - x * x);
+        (f, vec![gx, gy])
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let mut p = vec![5.0, -3.0];
+        let mut opt = Adam::new(2, 0.1);
+        for _ in 0..500 {
+            let g: Vec<f64> = p.iter().map(|x| 2.0 * x).collect();
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0].abs() < 1e-3 && p[1].abs() < 1e-3, "{p:?}");
+    }
+
+    #[test]
+    fn adam_makes_progress_on_rosenbrock() {
+        let mut p = vec![-1.2, 1.0];
+        let f0 = rosenbrock_grad(&p).0;
+        let mut opt = Adam::new(2, 0.02);
+        for _ in 0..2000 {
+            let (_, g) = rosenbrock_grad(&p);
+            opt.step(&mut p, &g);
+        }
+        let f1 = rosenbrock_grad(&p).0;
+        assert!(f1 < f0 * 1e-2, "{f0} -> {f1}");
+    }
+
+    #[test]
+    fn sgd_with_momentum_minimizes_quadratic() {
+        let mut p = vec![4.0];
+        let mut opt = Sgd::new(1, 0.05, 0.9);
+        for _ in 0..300 {
+            let g = vec![2.0 * p[0]];
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0].abs() < 1e-4, "{}", p[0]);
+    }
+
+    #[test]
+    fn lr_accessors() {
+        let mut a = Adam::new(1, 1e-3);
+        assert_eq!(a.lr(), 1e-3);
+        a.set_lr(1e-4);
+        assert_eq!(a.lr(), 1e-4);
+    }
+}

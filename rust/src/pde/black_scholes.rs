@@ -1,0 +1,237 @@
+//! 1-d Black–Scholes call-option benchmark (App. C.1, Eq. (19)–(21)).
+//!
+//! Terminal-value problem on (x, t) in [0, 200] x [0, 1]:
+//! `u_t + 0.5 σ² x² u_xx + r x u_x - r u = 0`, `u(x, T) = max(x - K, 0)`,
+//! `u(0, t) = 0`, `u(200, t) = 200 - K e^{-r(T-t)}`.
+
+use super::special::norm_cdf;
+use super::{Pde, PointSet};
+use crate::stein::Bundle;
+use crate::util::rng::Rng;
+
+pub const SIGMA: f64 = 0.2;
+pub const RATE: f64 = 0.05;
+pub const STRIKE: f64 = 100.0;
+pub const T_END: f64 = 1.0;
+pub const X_MAX: f64 = 200.0;
+/// Net outputs are O(1); prices are O(100) (matches model.py).
+pub const OUT_SCALE: f64 = 100.0;
+
+pub struct BlackScholes;
+
+/// Analytic call price (Eq. (20)); handles t -> T and x -> 0 limits.
+pub fn exact_price(x: f64, t: f64) -> f64 {
+    if T_END - t < 1e-9 {
+        return (x - STRIKE).max(0.0);
+    }
+    if x <= 1e-12 {
+        return 0.0;
+    }
+    let tau = T_END - t;
+    let d1 = ((x / STRIKE).ln() + (RATE + 0.5 * SIGMA * SIGMA) * tau) / (SIGMA * tau.sqrt());
+    let d2 = d1 - SIGMA * tau.sqrt();
+    x * norm_cdf(d1) - STRIKE * (-RATE * tau).exp() * norm_cdf(d2)
+}
+
+impl Pde for BlackScholes {
+    fn name(&self) -> &'static str {
+        "bs"
+    }
+
+    fn d_in(&self) -> usize {
+        2
+    }
+
+    fn sigma_stein(&self) -> f64 {
+        1e-3
+    }
+
+    fn res_scale(&self) -> f64 {
+        1.0 / OUT_SCALE
+    }
+
+    fn point_inputs(&self) -> Vec<(&'static str, usize)> {
+        vec![("pts_res", 100), ("pts_term", 10), ("pts_bnd", 20)]
+    }
+
+    fn sample_points(&self, rng: &mut Rng) -> PointSet {
+        let mut res = Vec::with_capacity(200);
+        for _ in 0..100 {
+            res.push(rng.uniform_in(0.0, X_MAX));
+            res.push(rng.uniform_in(0.0, T_END));
+        }
+        let mut term = Vec::with_capacity(20);
+        for _ in 0..10 {
+            term.push(rng.uniform_in(0.0, X_MAX));
+            term.push(T_END);
+        }
+        let mut bnd = Vec::with_capacity(40);
+        for i in 0..20 {
+            bnd.push(if i < 10 { 0.0 } else { X_MAX });
+            bnd.push(rng.uniform_in(0.0, T_END));
+        }
+        PointSet {
+            blocks: vec![
+                ("pts_res".into(), res),
+                ("pts_term".into(), term),
+                ("pts_bnd".into(), bnd),
+            ],
+        }
+    }
+
+    fn transform(&self, _x: &[f64], f: &[f64]) -> Vec<f64> {
+        f.iter().map(|v| OUT_SCALE * v).collect()
+    }
+
+    fn compose(&self, _x: &[f64], f: &Bundle) -> Bundle {
+        Bundle {
+            n: f.n,
+            d: f.d,
+            value: f.value.iter().map(|v| OUT_SCALE * v).collect(),
+            grad: f.grad.iter().map(|v| OUT_SCALE * v).collect(),
+            diag_hess: f.diag_hess.iter().map(|v| OUT_SCALE * v).collect(),
+        }
+    }
+
+    fn residual(&self, x: &[f64], u: &Bundle) -> Vec<f64> {
+        (0..u.n)
+            .map(|i| {
+                let s = x[i * 2];
+                let u_x = u.grad[i * 2];
+                let u_t = u.grad[i * 2 + 1];
+                let u_xx = u.diag_hess[i * 2];
+                u_t + 0.5 * SIGMA * SIGMA * s * s * u_xx + RATE * s * u_x - RATE * u.value[i]
+            })
+            .collect()
+    }
+
+    fn data_loss(
+        &self,
+        pts: &PointSet,
+        u_of: &mut dyn FnMut(&[f64], usize) -> Vec<f64>,
+    ) -> f64 {
+        let term = pts.get("pts_term").expect("pts_term");
+        let bnd = pts.get("pts_bnd").expect("pts_bnd");
+        let (nt, nb) = (term.len() / 2, bnd.len() / 2);
+        let ut = u_of(term, nt);
+        let ub = u_of(bnd, nb);
+        let mut lt = 0.0;
+        for i in 0..nt {
+            let target = (term[i * 2] - STRIKE).max(0.0);
+            lt += (ut[i] - target).powi(2);
+        }
+        let mut lb = 0.0;
+        for i in 0..nb {
+            let (xb, tb) = (bnd[i * 2], bnd[i * 2 + 1]);
+            let target = if xb < 1.0 {
+                0.0
+            } else {
+                X_MAX - STRIKE * (-RATE * (T_END - tb)).exp()
+            };
+            lb += (ub[i] - target).powi(2);
+        }
+        (lt / nt as f64 + lb / nb as f64) / (OUT_SCALE * OUT_SCALE)
+    }
+
+    fn exact(&self, x: &[f64], n: usize) -> Vec<f64> {
+        (0..n).map(|i| exact_price(x[i * 2], x[i * 2 + 1])).collect()
+    }
+
+    fn eval_points(&self, _rng: &mut Rng) -> Vec<f64> {
+        // 100 x 100 space-time grid (paper Table 11 base resolution).
+        let n = 100;
+        let mut pts = Vec::with_capacity(n * n * 2);
+        for i in 0..n {
+            for j in 0..n {
+                pts.push(X_MAX * i as f64 / (n - 1) as f64);
+                pts.push(T_END * j as f64 / (n - 1) as f64);
+            }
+        }
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_terminal_and_boundaries() {
+        assert_eq!(exact_price(50.0, 1.0), 0.0);
+        assert_eq!(exact_price(150.0, 1.0), 50.0);
+        assert_eq!(exact_price(0.0, 0.4), 0.0);
+        let deep = exact_price(200.0, 0.5);
+        let intrinsic = 200.0 - STRIKE * (-RATE * 0.5f64).exp();
+        assert!((deep - intrinsic).abs() < 0.05, "{deep} vs {intrinsic}");
+    }
+
+    #[test]
+    fn exact_satisfies_pde_by_finite_difference() {
+        let bs = BlackScholes;
+        let h = 1e-4;
+        for &(x, t) in &[(80.0, 0.3), (120.0, 0.6), (100.0, 0.1)] {
+            let u = exact_price(x, t);
+            let u_x = (exact_price(x + h, t) - exact_price(x - h, t)) / (2.0 * h);
+            let u_t = (exact_price(x, t + h) - exact_price(x, t - h)) / (2.0 * h);
+            let u_xx = (exact_price(x + h, t) + exact_price(x - h, t) - 2.0 * u) / (h * h);
+            let r = u_t + 0.5 * SIGMA * SIGMA * x * x * u_xx + RATE * x * u_x - RATE * u;
+            assert!(r.abs() < 1e-3, "residual {r} at ({x},{t})");
+            let _ = &bs;
+        }
+    }
+
+    #[test]
+    fn compose_scales_everything() {
+        let bs = BlackScholes;
+        let b = Bundle {
+            n: 1,
+            d: 2,
+            value: vec![1.0],
+            grad: vec![2.0, 3.0],
+            diag_hess: vec![4.0, 5.0],
+        };
+        let u = bs.compose(&[100.0, 0.5], &b);
+        assert_eq!(u.value, vec![100.0]);
+        assert_eq!(u.grad, vec![200.0, 300.0]);
+        assert_eq!(u.diag_hess, vec![400.0, 500.0]);
+    }
+
+    #[test]
+    fn sample_points_respect_domain() {
+        let bs = BlackScholes;
+        let mut rng = Rng::new(0);
+        let pts = bs.sample_points(&mut rng);
+        let term = pts.get("pts_term").unwrap();
+        for c in term.chunks(2) {
+            assert_eq!(c[1], T_END);
+        }
+        let bnd = pts.get("pts_bnd").unwrap();
+        for c in bnd.chunks(2) {
+            assert!(c[0] == 0.0 || c[0] == X_MAX);
+        }
+    }
+
+    #[test]
+    fn residual_of_exact_bundle_is_zero() {
+        // Feed exact derivatives into the residual directly.
+        let bs = BlackScholes;
+        let (x, t) = (90.0, 0.4);
+        let h = 1e-4;
+        let u = exact_price(x, t);
+        let bundle = Bundle {
+            n: 1,
+            d: 2,
+            value: vec![u],
+            grad: vec![
+                (exact_price(x + h, t) - exact_price(x - h, t)) / (2.0 * h),
+                (exact_price(x, t + h) - exact_price(x, t - h)) / (2.0 * h),
+            ],
+            diag_hess: vec![
+                (exact_price(x + h, t) + exact_price(x - h, t) - 2.0 * u) / (h * h),
+                0.0,
+            ],
+        };
+        let r = bs.residual(&[x, t], &bundle);
+        assert!(r[0].abs() < 1e-3, "{}", r[0]);
+    }
+}

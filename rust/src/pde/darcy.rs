@@ -1,0 +1,336 @@
+//! 2-d Darcy flow benchmark (App. C.1, Eq. (26)–(27)).
+//!
+//! `∇·(k(x) ∇u) = f` on [0,1]² with `u = 0` on the boundary, `f = 1`, and
+//! a piecewise-constant permeability (k = 12 inside two blocks, k = 3
+//! elsewhere — a deterministic substitution for the paper's Fig. 6 field,
+//! shared bit-for-bit with `python/compile/pdes.py`).
+//!
+//! The reference solver is a 5-point finite-difference discretization with
+//! harmonic face averaging, solved matrix-free by conjugate gradients on
+//! the production 241x241 grid (the paper's resolution).
+
+use super::{Pde, PointSet};
+use crate::stein::Bundle;
+use crate::util::rng::Rng;
+use std::sync::OnceLock;
+
+pub const K_IN: f64 = 12.0;
+pub const K_OUT: f64 = 3.0;
+pub const FORCING: f64 = 1.0;
+/// (x0, x1, y0, y1) of the high-permeability blocks.
+pub const BLOCKS: [(f64, f64, f64, f64); 2] =
+    [(0.15, 0.55, 0.15, 0.45), (0.55, 0.85, 0.55, 0.85)];
+
+/// Permeability field.
+pub fn permeability(x: f64, y: f64) -> f64 {
+    for (x0, x1, y0, y1) in BLOCKS {
+        if x >= x0 && x < x1 && y >= y0 && y < y1 {
+            return K_IN;
+        }
+    }
+    K_OUT
+}
+
+/// 5-point FD solve of `div(k grad u) = f`, zero Dirichlet BC.
+/// Returns the (n x n) grid of u values (row-major, x-major).
+pub fn fd_solve(n: usize, tol: f64, max_iter: usize) -> Vec<f64> {
+    let h = 1.0 / (n - 1) as f64;
+    let idx = |i: usize, j: usize| i * n + j;
+    let mut k = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            k[idx(i, j)] = permeability(i as f64 * h, j as f64 * h);
+        }
+    }
+    let face = |a: f64, b: f64| 2.0 * a * b / (a + b);
+    // Matrix-free A u = -div(k grad u) over interior points (SPD).
+    let apply_a = |u: &[f64], out: &mut [f64]| {
+        out.fill(0.0);
+        for i in 1..n - 1 {
+            for j in 1..n - 1 {
+                let kc = k[idx(i, j)];
+                let kxp = face(kc, k[idx(i + 1, j)]);
+                let kxm = face(kc, k[idx(i - 1, j)]);
+                let kyp = face(kc, k[idx(i, j + 1)]);
+                let kym = face(kc, k[idx(i, j - 1)]);
+                out[idx(i, j)] = ((kxp + kxm + kyp + kym) * u[idx(i, j)]
+                    - kxp * u[idx(i + 1, j)]
+                    - kxm * u[idx(i - 1, j)]
+                    - kyp * u[idx(i, j + 1)]
+                    - kym * u[idx(i, j - 1)])
+                    / (h * h);
+            }
+        }
+    };
+    // RHS: A u = -f on the interior.
+    let mut b = vec![0.0; n * n];
+    for i in 1..n - 1 {
+        for j in 1..n - 1 {
+            b[idx(i, j)] = -FORCING;
+        }
+    }
+    let mut u = vec![0.0; n * n];
+    let mut r = b.clone(); // r = b - A*0
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n * n];
+    let dot = |a: &[f64], c: &[f64]| a.iter().zip(c).map(|(x, y)| x * y).sum::<f64>();
+    let mut rs = dot(&r, &r);
+    let b_norm = dot(&b, &b).sqrt().max(f64::MIN_POSITIVE);
+    for _ in 0..max_iter {
+        apply_a(&p, &mut ap);
+        let alpha = rs / dot(&p, &ap);
+        for i in 0..u.len() {
+            u[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new = dot(&r, &r);
+        if rs_new.sqrt() / b_norm < tol {
+            break;
+        }
+        let beta = rs_new / rs;
+        for i in 0..p.len() {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs = rs_new;
+    }
+    u
+}
+
+/// Darcy benchmark with a cached FD reference at a chosen resolution.
+pub struct Darcy {
+    pub n_grid: usize,
+    cache: OnceLock<Vec<f64>>,
+}
+
+impl Darcy {
+    /// Paper resolution (241 x 241).
+    pub fn production() -> Darcy {
+        Darcy::with_grid(241)
+    }
+
+    /// Custom resolution (tests use coarser grids).
+    pub fn with_grid(n_grid: usize) -> Darcy {
+        Darcy { n_grid, cache: OnceLock::new() }
+    }
+
+    fn reference(&self) -> &Vec<f64> {
+        self.cache
+            .get_or_init(|| fd_solve(self.n_grid, 1e-10, 40 * self.n_grid))
+    }
+
+    /// Bilinear interpolation of the FD reference.
+    pub fn interp(&self, x: f64, y: f64) -> f64 {
+        let u = self.reference();
+        let n = self.n_grid;
+        let h = 1.0 / (n - 1) as f64;
+        let fx = (x / h).clamp(0.0, (n - 1) as f64 - 1e-9);
+        let fy = (y / h).clamp(0.0, (n - 1) as f64 - 1e-9);
+        let (i, j) = (fx as usize, fy as usize);
+        let (ax, ay) = (fx - i as f64, fy - j as f64);
+        let idx = |i: usize, j: usize| i * n + j;
+        u[idx(i, j)] * (1.0 - ax) * (1.0 - ay)
+            + u[idx(i + 1, j)] * ax * (1.0 - ay)
+            + u[idx(i, j + 1)] * (1.0 - ax) * ay
+            + u[idx(i + 1, j + 1)] * ax * ay
+    }
+}
+
+impl Pde for Darcy {
+    fn name(&self) -> &'static str {
+        "darcy"
+    }
+
+    fn d_in(&self) -> usize {
+        2
+    }
+
+    fn sigma_stein(&self) -> f64 {
+        1e-3
+    }
+
+    fn point_inputs(&self) -> Vec<(&'static str, usize)> {
+        vec![("pts_res", 512)]
+    }
+
+    fn sample_points(&self, rng: &mut Rng) -> PointSet {
+        // Random subset of the paper's fixed uniform grid (App. C.4),
+        // keeping points strictly interior.
+        let n = self.n_grid;
+        let h = 1.0 / (n - 1) as f64;
+        let mut res = Vec::with_capacity(1024);
+        for _ in 0..512 {
+            let i = 1 + rng.below(n - 2);
+            let j = 1 + rng.below(n - 2);
+            res.push(i as f64 * h);
+            res.push(j as f64 * h);
+        }
+        PointSet { blocks: vec![("pts_res".into(), res)] }
+    }
+
+    fn transform(&self, x: &[f64], f: &[f64]) -> Vec<f64> {
+        f.iter()
+            .enumerate()
+            .map(|(i, fv)| {
+                let (xx, yy) = (x[i * 2], x[i * 2 + 1]);
+                xx * (1.0 - xx) * yy * (1.0 - yy) * fv
+            })
+            .collect()
+    }
+
+    fn compose(&self, x: &[f64], f: &Bundle) -> Bundle {
+        let mut value = vec![0.0; f.n];
+        let mut grad = vec![0.0; f.n * 2];
+        let mut diag = vec![0.0; f.n * 2];
+        for i in 0..f.n {
+            let (xx, yy) = (x[i * 2], x[i * 2 + 1]);
+            let d = xx * (1.0 - xx) * yy * (1.0 - yy);
+            let dx = (1.0 - 2.0 * xx) * yy * (1.0 - yy);
+            let dy = xx * (1.0 - xx) * (1.0 - 2.0 * yy);
+            let dxx = -2.0 * yy * (1.0 - yy);
+            let dyy = -2.0 * xx * (1.0 - xx);
+            let (fv, fx, fy) = (f.value[i], f.grad[i * 2], f.grad[i * 2 + 1]);
+            let (fxx, fyy) = (f.diag_hess[i * 2], f.diag_hess[i * 2 + 1]);
+            value[i] = d * fv;
+            grad[i * 2] = dx * fv + d * fx;
+            grad[i * 2 + 1] = dy * fv + d * fy;
+            diag[i * 2] = dxx * fv + 2.0 * dx * fx + d * fxx;
+            diag[i * 2 + 1] = dyy * fv + 2.0 * dy * fy + d * fyy;
+        }
+        Bundle { n: f.n, d: 2, value, grad, diag_hess: diag }
+    }
+
+    fn residual(&self, x: &[f64], u: &Bundle) -> Vec<f64> {
+        (0..u.n)
+            .map(|i| {
+                let k = permeability(x[i * 2], x[i * 2 + 1]);
+                let lap = u.diag_hess[i * 2] + u.diag_hess[i * 2 + 1];
+                k * lap - FORCING
+            })
+            .collect()
+    }
+
+    fn data_loss(
+        &self,
+        _pts: &PointSet,
+        _u_of: &mut dyn FnMut(&[f64], usize) -> Vec<f64>,
+    ) -> f64 {
+        0.0 // zero-Dirichlet boundary is hard-coded in the ansatz
+    }
+
+    fn exact(&self, x: &[f64], n: usize) -> Vec<f64> {
+        (0..n).map(|i| self.interp(x[i * 2], x[i * 2 + 1])).collect()
+    }
+
+    fn eval_points(&self, _rng: &mut Rng) -> Vec<f64> {
+        let n = 100;
+        let mut pts = Vec::with_capacity(n * n * 2);
+        for i in 0..n {
+            for j in 0..n {
+                pts.push((i + 1) as f64 / (n + 1) as f64);
+                pts.push((j + 1) as f64 / (n + 1) as f64);
+            }
+        }
+        pts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permeability_field() {
+        assert_eq!(permeability(0.3, 0.3), K_IN);
+        assert_eq!(permeability(0.7, 0.7), K_IN);
+        assert_eq!(permeability(0.05, 0.05), K_OUT);
+        assert_eq!(permeability(0.9, 0.2), K_OUT);
+    }
+
+    #[test]
+    fn fd_boundary_zero_and_negative_interior() {
+        let n = 41;
+        let u = fd_solve(n, 1e-10, 4000);
+        for i in 0..n {
+            assert_eq!(u[i], 0.0); // j = 0 row
+            assert_eq!(u[i * n], 0.0); // i = 0 col
+            assert_eq!(u[i * n + n - 1], 0.0);
+            assert_eq!(u[(n - 1) * n + i], 0.0);
+        }
+        // div(k grad u) = +1 with zero BC => u < 0 inside
+        assert!(u[(n / 2) * n + n / 2] < -1e-3);
+    }
+
+    #[test]
+    fn fd_grid_convergence() {
+        let u1 = fd_solve(41, 1e-10, 4000);
+        let u2 = fd_solve(81, 1e-10, 8000);
+        // compare on the coarse grid (every 2nd fine point)
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for i in 0..41 {
+            for j in 0..41 {
+                let c = u2[(2 * i) * 81 + 2 * j];
+                let d = u1[i * 41 + j] - c;
+                num += d * d;
+                den += c * c;
+            }
+        }
+        let rel = (num / den).sqrt();
+        assert!(rel < 0.05, "rel {rel}");
+    }
+
+    #[test]
+    fn interp_matches_grid_nodes() {
+        let d = Darcy::with_grid(41);
+        let h = 1.0 / 40.0;
+        let u = d.reference().clone();
+        for &(i, j) in &[(5usize, 7usize), (20, 20), (33, 12)] {
+            let v = d.interp(i as f64 * h, j as f64 * h);
+            assert!((v - u[i * 41 + j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn compose_matches_fd_of_transform() {
+        let d = Darcy::with_grid(11);
+        let f = |x: f64, y: f64| (1.3 * x + 0.4 * y).sin();
+        let (x0, y0) = (0.4, 0.6);
+        let h = 1e-5;
+        let f0 = f(x0, y0);
+        let fb = Bundle {
+            n: 1,
+            d: 2,
+            value: vec![f0],
+            grad: vec![
+                (f(x0 + h, y0) - f(x0 - h, y0)) / (2.0 * h),
+                (f(x0, y0 + h) - f(x0, y0 - h)) / (2.0 * h),
+            ],
+            diag_hess: vec![
+                (f(x0 + h, y0) + f(x0 - h, y0) - 2.0 * f0) / (h * h),
+                (f(x0, y0 + h) + f(x0, y0 - h) - 2.0 * f0) / (h * h),
+            ],
+        };
+        let ub = d.compose(&[x0, y0], &fb);
+        let u = |x: f64, y: f64| x * (1.0 - x) * y * (1.0 - y) * f(x, y);
+        let u0 = u(x0, y0);
+        assert!((ub.value[0] - u0).abs() < 1e-12);
+        let gx = (u(x0 + h, y0) - u(x0 - h, y0)) / (2.0 * h);
+        assert!((ub.grad[0] - gx).abs() < 1e-6);
+        let hxx = (u(x0 + h, y0) + u(x0 - h, y0) - 2.0 * u0) / (h * h);
+        assert!((ub.diag_hess[0] - hxx).abs() < 1e-3);
+    }
+
+    #[test]
+    fn residual_sign_convention() {
+        // For u solving div(k grad u) = 1, k*lap(u) ~ 1 away from k-jumps.
+        let d = Darcy::with_grid(81);
+        let h = 1.0 / 80.0;
+        let u = |x: f64, y: f64| d.interp(x, y);
+        let (x0, y0) = (0.3, 0.3); // interior of a constant-k block
+        let lap = (u(x0 + h, y0) + u(x0 - h, y0) + u(x0, y0 + h) + u(x0, y0 - h)
+            - 4.0 * u(x0, y0))
+            / (h * h);
+        let r = permeability(x0, y0) * lap - FORCING;
+        assert!(r.abs() < 0.1, "residual {r}");
+    }
+}

@@ -1,0 +1,151 @@
+//! The paper's PDE benchmark suite (App. C.1) with reference solvers.
+//!
+//! Each benchmark implements [`Pde`]: collocation sampling (App. C.4), the
+//! solution ansatz (`transform` + its analytic chain rule `compose`), the
+//! residual (Eq. (2)), soft data losses, and the exact/reference solution
+//! used for the relative-l2 metric. The derivative bundle entering
+//! `compose` is always that of the **raw body network** — the quantity the
+//! photonic chip measures — so hard constraints never pass through the
+//! Stein smoothing (mirrors `python/compile/pdes.py`).
+
+pub mod black_scholes;
+pub mod burgers;
+pub mod darcy;
+pub mod hjb20;
+pub mod special;
+
+use crate::stein::Bundle;
+use crate::util::rng::Rng;
+use crate::{Error, Result};
+
+pub use black_scholes::BlackScholes;
+pub use burgers::Burgers;
+pub use darcy::Darcy;
+pub use hjb20::Hjb20;
+
+/// Named collocation blocks, in the order the AOT loss artifacts expect.
+#[derive(Debug, Clone)]
+pub struct PointSet {
+    /// (name, flattened (n x d) coordinates)
+    pub blocks: Vec<(String, Vec<f64>)>,
+}
+
+impl PointSet {
+    pub fn get(&self, name: &str) -> Option<&[f64]> {
+        self.blocks
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_slice())
+    }
+
+    /// All coordinates concatenated in block order.
+    pub fn concat(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for (_, v) in &self.blocks {
+            out.extend_from_slice(v);
+        }
+        out
+    }
+}
+
+/// A PDE benchmark.
+pub trait Pde: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Network input dimension (space [+ time]).
+    fn d_in(&self) -> usize;
+    /// Stein smoothing radius (raw input units; paper App. C.2).
+    fn sigma_stein(&self) -> f64;
+    /// Sparse-grid accuracy level (paper: 3 everywhere).
+    fn sg_level(&self) -> usize {
+        3
+    }
+    /// Residual normalization so loss terms are O(1).
+    fn res_scale(&self) -> f64 {
+        1.0
+    }
+    /// MC sample count for the SE baseline (Table 1 setup).
+    fn mc_samples(&self) -> usize {
+        2048
+    }
+    /// Collocation input names and sizes (must match the AOT artifacts).
+    fn point_inputs(&self) -> Vec<(&'static str, usize)>;
+    /// Sample one epoch of collocation points (App. C.4).
+    fn sample_points(&self, rng: &mut Rng) -> PointSet;
+    /// Solution ansatz: u values from raw network values at points x.
+    fn transform(&self, x: &[f64], f: &[f64]) -> Vec<f64>;
+    /// Chain rule of `transform` on the raw-network derivative bundle.
+    fn compose(&self, x: &[f64], f: &Bundle) -> Bundle;
+    /// PDE residual from the bundle of u at the residual points.
+    fn residual(&self, x: &[f64], u: &Bundle) -> Vec<f64>;
+    /// Soft data losses (terminal/boundary/initial); `u_of(points, n)`
+    /// evaluates the transformed solution.
+    fn data_loss(
+        &self,
+        pts: &PointSet,
+        u_of: &mut dyn FnMut(&[f64], usize) -> Vec<f64>,
+    ) -> f64;
+    /// Exact / reference solution at points (n x d_in).
+    fn exact(&self, x: &[f64], n: usize) -> Vec<f64>;
+    /// Evaluation point cloud for the relative-l2 metric.
+    fn eval_points(&self, rng: &mut Rng) -> Vec<f64>;
+}
+
+/// Look up a benchmark by name.
+pub fn get_pde(name: &str) -> Result<Box<dyn Pde>> {
+    match name {
+        "bs" => Ok(Box::new(BlackScholes)),
+        "hjb20" => Ok(Box::new(Hjb20)),
+        "burgers" => Ok(Box::new(Burgers)),
+        "darcy" => Ok(Box::new(Darcy::production())),
+        other => Err(Error::Config(format!(
+            "unknown pde {other:?}; have bs|hjb20|burgers|darcy"
+        ))),
+    }
+}
+
+/// All benchmark names, in paper order.
+pub const ALL_PDES: [&str; 4] = ["bs", "hjb20", "burgers", "darcy"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_complete() {
+        for name in ALL_PDES {
+            let p = get_pde(name).unwrap();
+            assert_eq!(p.name(), name);
+            assert!(p.d_in() == 2 || p.d_in() == 21);
+            assert_eq!(p.sg_level(), 3);
+        }
+        assert!(get_pde("poisson").is_err());
+    }
+
+    #[test]
+    fn sampled_points_match_declared_shapes() {
+        let mut rng = Rng::new(0);
+        for name in ALL_PDES {
+            let p = get_pde(name).unwrap();
+            let pts = p.sample_points(&mut rng);
+            let decl = p.point_inputs();
+            assert_eq!(pts.blocks.len(), decl.len(), "{name}");
+            for ((bn, bv), (dn, dnn)) in pts.blocks.iter().zip(&decl) {
+                assert_eq!(bn, dn);
+                assert_eq!(bv.len(), dnn * p.d_in(), "{name}/{bn}");
+            }
+        }
+    }
+
+    #[test]
+    fn pointset_accessors() {
+        let ps = PointSet {
+            blocks: vec![
+                ("a".into(), vec![1.0, 2.0]),
+                ("b".into(), vec![3.0]),
+            ],
+        };
+        assert_eq!(ps.get("a"), Some(&[1.0, 2.0][..]));
+        assert_eq!(ps.get("c"), None);
+        assert_eq!(ps.concat(), vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,71 @@
+//! Special functions needed by the reference solutions.
+
+/// Complementary error function, Numerical-Recipes Chebyshev fit
+/// (fractional error < 1.2e-7 everywhere).
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Error function.
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Standard normal CDF.
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * erfc(-z / std::f64::consts::SQRT_2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // (x, erf(x)) from tables
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778),
+            (1.0, 0.8427007929),
+            (2.0, 0.9953222650),
+            (-1.0, -0.8427007929),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 2e-7, "erf({x})");
+        }
+    }
+
+    #[test]
+    fn norm_cdf_symmetry_and_tails() {
+        // the Chebyshev fit carries ~1.2e-7 absolute error
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-6);
+        for z in [0.3, 1.1, 2.5] {
+            assert!((norm_cdf(z) + norm_cdf(-z) - 1.0).abs() < 5e-7);
+        }
+        assert!(norm_cdf(-8.0) < 1e-14);
+        assert!(norm_cdf(8.0) > 1.0 - 1e-14);
+    }
+
+    #[test]
+    fn norm_cdf_table_value() {
+        // Phi(1.96) ~ 0.9750021
+        assert!((norm_cdf(1.96) - 0.9750021).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,120 @@
+//! MZI rotators and the Clements rectangular mesh (App. A.1).
+//!
+//! A reconfigurable 2x2 MZI implements the real rotator of Eq. (16):
+//! `[[cos φ, sin φ], [-sin φ, cos φ]]`. A Clements mesh cascades
+//! N(N-1)/2 of them in a rectangular arrangement to realize an arbitrary
+//! N x N orthogonal matrix (the real restriction of the unitary mesh —
+//! the simulation, like TorchONN's real mode, works over R).
+
+use crate::linalg::Mat;
+
+/// Rectangular Clements mesh over `n` modes.
+#[derive(Debug, Clone)]
+pub struct ClementsMesh {
+    pub n: usize,
+    /// MZI placements as (layer-ordered) mode pairs (i, i+1).
+    pub pairs: Vec<(usize, usize)>,
+}
+
+impl ClementsMesh {
+    pub fn new(n: usize) -> ClementsMesh {
+        assert!(n >= 1);
+        let mut pairs = Vec::with_capacity(n * (n.saturating_sub(1)) / 2);
+        // n layers of alternating even/odd nearest-neighbor couplers gives
+        // exactly n(n-1)/2 MZIs for the rectangular arrangement.
+        for layer in 0..n {
+            let start = layer % 2;
+            let mut i = start;
+            while i + 1 < n {
+                pairs.push((i, i + 1));
+                i += 2;
+            }
+            if pairs.len() >= n * (n - 1) / 2 {
+                break;
+            }
+        }
+        pairs.truncate(n * (n - 1) / 2);
+        ClementsMesh { n, pairs }
+    }
+
+    /// Number of phase shifters (one per MZI).
+    pub fn n_phases(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Build the orthogonal matrix `U(Φ) = R_K ... R_2 R_1` by applying
+    /// each rotator to the accumulating matrix.
+    pub fn unitary(&self, phases: &[f64]) -> Mat {
+        assert_eq!(phases.len(), self.n_phases(), "phase count mismatch");
+        let n = self.n;
+        let mut u = Mat::eye(n);
+        for (&(a, b), &phi) in self.pairs.iter().zip(phases) {
+            let (c, s) = (phi.cos(), phi.sin());
+            // left-multiply by R acting on rows a, b
+            for j in 0..n {
+                let (xa, xb) = (u.get(a, j), u.get(b, j));
+                u.set(a, j, c * xa + s * xb);
+                u.set(b, j, -s * xa + c * xb);
+            }
+        }
+        u
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mzi_count_is_n_choose_2() {
+        for n in [1, 2, 3, 4, 8, 16] {
+            let m = ClementsMesh::new(n);
+            assert_eq!(m.n_phases(), n * (n - 1) / 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn unitary_is_orthogonal_for_random_phases() {
+        let mut rng = Rng::new(0);
+        for n in [2, 5, 8] {
+            let mesh = ClementsMesh::new(n);
+            let mut phases = vec![0.0; mesh.n_phases()];
+            rng.fill_uniform(&mut phases, 0.0, std::f64::consts::TAU);
+            let u = mesh.unitary(&phases);
+            assert!(u.orthogonality_defect() < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn zero_phases_give_identity() {
+        let mesh = ClementsMesh::new(6);
+        let u = mesh.unitary(&vec![0.0; mesh.n_phases()]);
+        assert!(u.max_abs_diff(&Mat::eye(6)) < 1e-15);
+    }
+
+    #[test]
+    fn two_mode_mesh_is_single_rotator() {
+        let mesh = ClementsMesh::new(2);
+        assert_eq!(mesh.n_phases(), 1);
+        let phi = 0.7f64;
+        let u = mesh.unitary(&[phi]);
+        assert!((u.get(0, 0) - phi.cos()).abs() < 1e-15);
+        assert!((u.get(0, 1) - phi.sin()).abs() < 1e-15);
+        assert!((u.get(1, 0) + phi.sin()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn mesh_is_expressive_enough_to_mix_all_modes() {
+        // With random phases, no row of U should stay axis-aligned.
+        let mesh = ClementsMesh::new(8);
+        let mut rng = Rng::new(3);
+        let mut phases = vec![0.0; mesh.n_phases()];
+        rng.fill_uniform(&mut phases, 0.2, 6.0);
+        let u = mesh.unitary(&phases);
+        for i in 0..8 {
+            let max_c = (0..8).map(|j| u.get(i, j).abs()).fold(0.0, f64::max);
+            assert!(max_c < 0.999, "row {i} not mixed");
+        }
+    }
+}

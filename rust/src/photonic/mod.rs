@@ -1,0 +1,30 @@
+//! Photonic hardware substrate (paper §4, App. A/B/F).
+//!
+//! * [`clements`] — MZI rotators and Clements rectangular meshes: the
+//!   phase parameterization `U(Φ) = D Π R_ij(φ_ij)` of App. A.1;
+//! * [`svd_block`] — the blocked SVD weight parameterization
+//!   `W(Φ) = {U_pq Σ_pq V*_pq}` of App. F.1 (k = 8 blocks);
+//! * [`nonideal`] — the hardware-restricted objective of App. F.2:
+//!   8-bit phase quantization Q, γ-drift Γ, thermal crosstalk Ω, and
+//!   manufacturing phase bias Φ_b;
+//! * [`tonn`] — tensorized ONN: each TT core's unfolding as one small MZI
+//!   mesh (the 42.7x device-count reduction of Table 4);
+//! * [`model`] — `PhotonicModel`: maps a phase vector Φ through the
+//!   non-ideality pipeline to the flat parameter vector of the logical
+//!   network, so the same AOT loss artifacts evaluate phase-domain
+//!   training;
+//! * [`training`] — the three on-chip protocols of §5.2: FLOPS (ZO on all
+//!   phases), L²ight (subspace FO on Σ), and ours (TT + tensor-wise ZO).
+
+pub mod clements;
+pub mod model;
+pub mod nonideal;
+pub mod svd_block;
+pub mod tonn;
+pub mod training;
+
+pub use clements::ClementsMesh;
+pub use model::{PhotonicModel, PhotonicVariant};
+pub use nonideal::NonIdeality;
+pub use svd_block::SvdMesh;
+pub use training::{train_phase_domain, PhaseProtocol};

@@ -1,0 +1,392 @@
+//! `PhotonicModel`: phase vector Φ -> (non-ideality pipeline) -> flat
+//! parameter vector of the logical network.
+//!
+//! This is the simulation core of §5.2 (phase-domain training): the same
+//! AOT-compiled loss graphs (or the native engine) evaluate the loss at
+//! the *realized* parameters `W(Ω Γ Q(Φ) + Φ_b)`, and all three on-chip
+//! protocols differ only in how they update Φ.
+
+use super::nonideal::NonIdeality;
+use super::svd_block::SvdMesh;
+use super::tonn::{core_mesh, core_to_unfold, unfold_to_core};
+use crate::linalg::Mat;
+use crate::net::{build_model, Layer, Model, ParamEntry};
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// Which hardware mapping to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhotonicVariant {
+    /// Dense layers blocked into k x k SVD meshes (standard ONN, App. F.1).
+    Onn,
+    /// TT cores as single small meshes (TONN, §4).
+    Tonn,
+}
+
+/// Where a realized mesh matrix lands in the flat parameter vector.
+enum MeshTarget {
+    /// Block (row0..row0+rows, col0..col0+cols) of a dense layer's W
+    /// (W = A^T; A stored (n_in x n_out) at `a_off`).
+    DenseBlock { a_off: usize, n_out: usize, row0: usize, col0: usize },
+    /// A TT core at `core_off` with the given shape.
+    TtCore { core_off: usize, shape: (usize, usize, usize, usize) },
+}
+
+struct MeshGroup {
+    mesh: SvdMesh,
+    phase_off: usize,
+    target: MeshTarget,
+}
+
+/// One bias vector mapped straight from the digital section of Φ.
+struct BiasGroup {
+    phi_off: usize,
+    param_off: usize,
+    len: usize,
+}
+
+/// The photonic realization of a PINN body network.
+pub struct PhotonicModel {
+    pub model: Model,
+    groups: Vec<MeshGroup>,
+    biases: Vec<BiasGroup>,
+    /// Optical phase count (excludes digital biases).
+    pub n_phases: usize,
+    pub nonideal: NonIdeality,
+    scratch_eff: Vec<f64>,
+}
+
+/// Block size of the dense (ONN) mapping — k = 8 per App. F.1.
+pub const BLOCK_K: usize = 8;
+
+impl PhotonicModel {
+    /// Map a benchmark model onto photonic hardware. `variant` selects
+    /// ONN (std model, dense blocks) or TONN (tt model, core meshes);
+    /// `chip_seed` freezes the fabrication draws.
+    pub fn new(pde: &str, variant: PhotonicVariant, chip_seed: u64) -> Result<PhotonicModel> {
+        let logical = match variant {
+            PhotonicVariant::Onn => build_model(pde, "std", 2, None)?,
+            PhotonicVariant::Tonn => build_model(pde, "tt", 2, None)?,
+        };
+        Self::from_model(logical, chip_seed, true)
+    }
+
+    /// Build from an explicit logical model (used by ablations/tests).
+    pub fn from_model(model: Model, chip_seed: u64, nonideal: bool) -> Result<PhotonicModel> {
+        let layout = model.param_layout();
+        let mut groups: Vec<MeshGroup> = Vec::new();
+        let mut biases: Vec<BiasGroup> = Vec::new();
+        let mut phase_off = 0usize;
+        let mut mesh_bounds = Vec::new();
+        let mut entry_idx = 0usize;
+
+        for layer in model.layers.iter() {
+            match layer {
+                Layer::Dense(d) => {
+                    let a_entry = &layout[entry_idx];
+                    let b_entry = &layout[entry_idx + 1];
+                    entry_idx += 2;
+                    // scale bound for singular values of a k x k block
+                    let s_max = 4.0 / (d.n_in as f64).sqrt();
+                    let (m_out, n_in) = (d.n_out, d.n_in);
+                    let mut row0 = 0;
+                    while row0 < m_out {
+                        let rows = BLOCK_K.min(m_out - row0);
+                        let mut col0 = 0;
+                        while col0 < n_in {
+                            let cols = BLOCK_K.min(n_in - col0);
+                            let mesh = SvdMesh::new(rows, cols, s_max);
+                            let np = mesh.n_phases();
+                            groups.push(MeshGroup {
+                                mesh,
+                                phase_off,
+                                target: MeshTarget::DenseBlock {
+                                    a_off: a_entry.offset,
+                                    n_out: m_out,
+                                    row0,
+                                    col0,
+                                },
+                            });
+                            phase_off += np;
+                            mesh_bounds.push(phase_off);
+                            col0 += cols;
+                        }
+                        row0 += rows;
+                    }
+                    biases.push(BiasGroup { phi_off: 0, param_off: b_entry.offset, len: b_entry.len });
+                }
+                Layer::TT(tt) => {
+                    let shapes = tt.core_shapes();
+                    // core std (same formula as init) bounds the σ scale
+                    let big_l = shapes.len();
+                    let target_var = 2.0 / (tt.n_in() + tt.n_out()) as f64;
+                    let paths: usize = tt.ranks[1..big_l].iter().product();
+                    let sigma_c =
+                        (target_var / paths.max(1) as f64).powf(1.0 / (2 * big_l) as f64);
+                    for shape in shapes {
+                        let core_entry = &layout[entry_idx];
+                        entry_idx += 1;
+                        let (a, b) = super::tonn::core_unfold_dims(shape);
+                        let s_max = 3.0 * sigma_c * (a.max(b) as f64).sqrt();
+                        let mesh = core_mesh(shape, s_max);
+                        let np = mesh.n_phases();
+                        groups.push(MeshGroup {
+                            mesh,
+                            phase_off,
+                            target: MeshTarget::TtCore { core_off: core_entry.offset, shape },
+                        });
+                        phase_off += np;
+                        mesh_bounds.push(phase_off);
+                    }
+                    let b_entry = &layout[entry_idx];
+                    entry_idx += 1;
+                    biases.push(BiasGroup { phi_off: 0, param_off: b_entry.offset, len: b_entry.len });
+                }
+            }
+        }
+        // digital bias section follows the optical phases in Φ
+        let mut phi = phase_off;
+        for b in &mut biases {
+            b.phi_off = phi;
+            phi += b.len;
+        }
+        let ni = if nonideal {
+            NonIdeality::paper_default(phase_off, mesh_bounds, chip_seed)
+        } else {
+            NonIdeality::ideal(phase_off)
+        };
+        Ok(PhotonicModel {
+            model,
+            groups,
+            biases,
+            n_phases: phase_off,
+            nonideal: ni,
+            scratch_eff: vec![0.0; phase_off],
+        })
+    }
+
+    /// Total trainable scalars: optical phases + digital biases.
+    pub fn n_trainable(&self) -> usize {
+        self.n_phases + self.biases.iter().map(|b| b.len).sum::<usize>()
+    }
+
+    /// Physical MZI count (Tables 4/19/20).
+    pub fn n_mzis(&self) -> usize {
+        self.groups.iter().map(|g| g.mesh.n_mzis()).sum()
+    }
+
+    /// Per-mesh parameter blocks (for tensor-wise ZO over Φ).
+    pub fn phase_layout(&self) -> Vec<ParamEntry> {
+        let mut out: Vec<ParamEntry> = self
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(i, g)| ParamEntry {
+                name: format!("mesh{i}"),
+                shape: vec![g.mesh.n_phases()],
+                offset: g.phase_off,
+                len: g.mesh.n_phases(),
+            })
+            .collect();
+        for (i, b) in self.biases.iter().enumerate() {
+            out.push(ParamEntry {
+                name: format!("bias{i}"),
+                shape: vec![b.len],
+                offset: b.phi_off,
+                len: b.len,
+            });
+        }
+        out
+    }
+
+    /// Global Φ indices of the Σ (attenuator) phases — the L²ight
+    /// trainable subspace — plus all digital bias indices.
+    pub fn l2ight_trainable(&self) -> Vec<usize> {
+        let mut idx = Vec::new();
+        for g in &self.groups {
+            for k in g.mesh.sigma_range() {
+                idx.push(g.phase_off + k);
+            }
+        }
+        for b in &self.biases {
+            idx.extend(b.phi_off..b.phi_off + b.len);
+        }
+        idx
+    }
+
+    /// Random phase initialization: optical phases ~ U[0, 2π), biases 0.
+    pub fn init_phases(&self, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut phi = vec![0.0; self.n_trainable()];
+        rng.fill_uniform(&mut phi[..self.n_phases], 0.0, std::f64::consts::TAU);
+        phi
+    }
+
+    /// Realize Φ into the flat parameter vector of the logical model,
+    /// applying the non-ideality pipeline to the optical section.
+    pub fn realize(&mut self, phi: &[f64]) -> Vec<f64> {
+        assert_eq!(phi.len(), self.n_trainable());
+        let mut params = vec![0.0; self.model.n_params()];
+        self.nonideal.apply(&phi[..self.n_phases], &mut self.scratch_eff);
+        for g in &self.groups {
+            let p = &self.scratch_eff[g.phase_off..g.phase_off + g.mesh.n_phases()];
+            let w = g.mesh.realize(p);
+            match &g.target {
+                MeshTarget::DenseBlock { a_off, n_out, row0, col0 } => {
+                    // A[(col, row)] = W[row - row0, col - col0]
+                    for r in 0..w.rows {
+                        for c in 0..w.cols {
+                            let row = row0 + r; // output index
+                            let col = col0 + c; // input index
+                            params[a_off + col * n_out + row] = w.get(r, c);
+                        }
+                    }
+                }
+                MeshTarget::TtCore { core_off, shape } => {
+                    let len = shape.0 * shape.1 * shape.2 * shape.3;
+                    unfold_to_core(*shape, &w, &mut params[*core_off..core_off + len]);
+                }
+            }
+        }
+        for b in &self.biases {
+            params[b.param_off..b.param_off + b.len]
+                .copy_from_slice(&phi[b.phi_off..b.phi_off + b.len]);
+        }
+        params
+    }
+
+    /// L²ight chain rule: map dL/dparams (from the AOT grad artifact,
+    /// evaluated at the realized params) to dL/dΦ restricted to the
+    /// Σ-phase + bias subspace (straight-through across Q, Γ, Ω).
+    pub fn sigma_chain_grad(&mut self, phi: &[f64], dl_dparams: &[f64]) -> Vec<f64> {
+        assert_eq!(dl_dparams.len(), self.model.n_params());
+        let mut grad = vec![0.0; self.n_trainable()];
+        self.nonideal.apply(&phi[..self.n_phases], &mut self.scratch_eff);
+        for g in &self.groups {
+            let p = &self.scratch_eff[g.phase_off..g.phase_off + g.mesh.n_phases()];
+            // assemble dL/dW for this mesh
+            let gw = match &g.target {
+                MeshTarget::DenseBlock { a_off, n_out, row0, col0 } => {
+                    let (rows, cols) = (g.mesh.rows, g.mesh.cols);
+                    Mat::from_fn(rows, cols, |r, c| {
+                        dl_dparams[a_off + (col0 + c) * n_out + (row0 + r)]
+                    })
+                }
+                MeshTarget::TtCore { core_off, shape } => {
+                    let len = shape.0 * shape.1 * shape.2 * shape.3;
+                    core_to_unfold(*shape, &dl_dparams[*core_off..core_off + len])
+                }
+            };
+            let gs = g.mesh.sigma_grad(p, &gw);
+            for (k, idx) in g.mesh.sigma_range().enumerate() {
+                grad[g.phase_off + idx] = gs[k];
+            }
+        }
+        for b in &self.biases {
+            grad[b.phi_off..b.phi_off + b.len]
+                .copy_from_slice(&dl_dparams[b.param_off..b.param_off + b.len]);
+        }
+        grad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn onn_vs_tonn_mzi_reduction_black_scholes() {
+        // Table 4: the 128x128 hidden layer alone is 16384 MZIs on ONN and
+        // 384 on TONN (3 8x8 SVD meshes x (28+8+28)... = 192 phases; the
+        // paper counts 2 MZIs per attenuator stage -> same order).
+        let onn = PhotonicModel::new("bs", PhotonicVariant::Onn, 0).unwrap();
+        let tonn = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+        assert!(onn.n_mzis() > 17_000, "onn {}", onn.n_mzis());
+        assert!(tonn.n_mzis() < 3_000, "tonn {}", tonn.n_mzis());
+        let reduction = onn.n_mzis() as f64 / tonn.n_mzis() as f64;
+        assert!(reduction > 5.0, "reduction {reduction}");
+    }
+
+    #[test]
+    fn realize_produces_full_param_vector() {
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 1).unwrap();
+        let phi = pm.init_phases(0);
+        let params = pm.realize(&phi);
+        assert_eq!(params.len(), pm.model.n_params());
+        assert!(params.iter().all(|v| v.is_finite()));
+        // realized params must not be all zero (meshes actually wrote)
+        let nnz = params.iter().filter(|v| v.abs() > 1e-12).count();
+        assert!(nnz > params.len() / 2, "nnz {nnz}");
+    }
+
+    #[test]
+    fn realize_is_deterministic_and_phase_sensitive() {
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 1).unwrap();
+        let phi = pm.init_phases(0);
+        let a = pm.realize(&phi);
+        let b = pm.realize(&phi);
+        assert_eq!(a, b);
+        let mut phi2 = phi.clone();
+        phi2[0] += 0.1;
+        let c = pm.realize(&phi2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn bias_section_is_digital_passthrough() {
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 1).unwrap();
+        let mut phi = pm.init_phases(0);
+        let bias_idx = pm.n_phases; // first digital entry
+        phi[bias_idx] = 0.321;
+        let params = pm.realize(&phi);
+        // find it: the first bias group's first param
+        let off = pm.biases[0].param_off;
+        assert_eq!(params[off], 0.321);
+    }
+
+    #[test]
+    fn l2ight_subspace_is_much_smaller_than_full() {
+        let pm = PhotonicModel::new("bs", PhotonicVariant::Onn, 0).unwrap();
+        let sub = pm.l2ight_trainable().len();
+        assert!(sub < pm.n_trainable() / 4, "{sub} vs {}", pm.n_trainable());
+    }
+
+    #[test]
+    fn phase_layout_covers_phi_exactly() {
+        let pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+        let layout = pm.phase_layout();
+        let total: usize = layout.iter().map(|e| e.len).sum();
+        assert_eq!(total, pm.n_trainable());
+    }
+
+    #[test]
+    fn sigma_chain_grad_matches_fd_on_ideal_chip() {
+        // ideal chip (no quantization) so the straight-through assumption
+        // is exact; loss = sum of params with random weights.
+        let model = build_model("bs", "tt", 2, None).unwrap();
+        let mut pm = PhotonicModel::from_model(model, 0, false).unwrap();
+        let phi = pm.init_phases(3);
+        let mut rng = Rng::new(9);
+        let c: Vec<f64> = (0..pm.model.n_params()).map(|_| rng.normal()).collect();
+        let loss = |pm: &mut PhotonicModel, phi: &[f64]| -> f64 {
+            pm.realize(phi).iter().zip(&c).map(|(a, b)| a * b).sum()
+        };
+        let grad = pm.sigma_chain_grad(&phi, &c);
+        let h = 1e-6;
+        // check a few sigma coordinates
+        let idx = pm.l2ight_trainable();
+        for &i in idx.iter().step_by(idx.len() / 7 + 1) {
+            let mut pp = phi.clone();
+            pp[i] += h;
+            let lp = loss(&mut pm, &pp);
+            pp[i] -= 2.0 * h;
+            let lm = loss(&mut pm, &pp);
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (grad[i] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "phi[{i}]: {} vs {fd}",
+                grad[i]
+            );
+        }
+    }
+}

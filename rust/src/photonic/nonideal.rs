@@ -1,0 +1,171 @@
+//! ONN non-idealities (App. F.2): the hardware-restricted objective
+//! `Φ* = argmin L(W(Ω Γ Q(Φ) + Φ_b))`.
+//!
+//! * `Q` — 8-bit uniform quantization of each phase into [0, 2π);
+//! * `Γ` — per-device multiplicative γ-drift, factor ~ N(1, 0.002²);
+//! * `Ω` — thermal crosstalk: mutual coupling 0.005 between adjacent MZIs
+//!   within a mesh (self-coupling 1);
+//! * `Φ_b` — manufacturing phase bias ~ U(0, 2π), fixed per device.
+//!
+//! Γ and Φ_b are frozen per-chip draws (fabrication outcomes); they are
+//! sampled once from a seed so repeated runs see the same chip.
+
+use crate::util::rng::Rng;
+use std::f64::consts::TAU;
+
+/// Non-ideality pipeline configuration + frozen per-device draws.
+#[derive(Debug, Clone)]
+pub struct NonIdeality {
+    pub bits: u32,
+    pub gamma_std: f64,
+    pub crosstalk: f64,
+    pub enable_bias: bool,
+    /// per-phase multiplicative drift factors (len = n_phases)
+    gamma: Vec<f64>,
+    /// per-phase bias (len = n_phases)
+    bias: Vec<f64>,
+    /// mesh boundaries: crosstalk does not couple across meshes
+    mesh_bounds: Vec<usize>,
+}
+
+impl NonIdeality {
+    /// The paper's settings: 8-bit control, σ_γ = 0.002, crosstalk 0.005,
+    /// uniform phase bias.
+    pub fn paper_default(n_phases: usize, mesh_bounds: Vec<usize>, seed: u64) -> NonIdeality {
+        Self::new(n_phases, mesh_bounds, seed, 8, 0.002, 0.005, true)
+    }
+
+    /// An ideal chip (pass-through) — for ablations.
+    pub fn ideal(n_phases: usize) -> NonIdeality {
+        Self::new(n_phases, vec![n_phases], 0, 32, 0.0, 0.0, false)
+    }
+
+    pub fn new(
+        n_phases: usize,
+        mesh_bounds: Vec<usize>,
+        seed: u64,
+        bits: u32,
+        gamma_std: f64,
+        crosstalk: f64,
+        enable_bias: bool,
+    ) -> NonIdeality {
+        let mut rng = Rng::new(seed ^ 0xfab_f00d);
+        let gamma: Vec<f64> = (0..n_phases).map(|_| rng.normal_ms(1.0, gamma_std)).collect();
+        let bias: Vec<f64> = (0..n_phases)
+            .map(|_| if enable_bias { rng.uniform_in(0.0, TAU) } else { 0.0 })
+            .collect();
+        debug_assert_eq!(*mesh_bounds.last().unwrap_or(&0), n_phases);
+        NonIdeality { bits, gamma_std, crosstalk, enable_bias, gamma, bias, mesh_bounds }
+    }
+
+    /// 8-bit quantization into [0, 2π).
+    #[inline]
+    pub fn quantize(&self, phi: f64) -> f64 {
+        if self.bits >= 32 {
+            return phi.rem_euclid(TAU);
+        }
+        let levels = (1u64 << self.bits) as f64;
+        let step = TAU / levels;
+        (phi.rem_euclid(TAU) / step).round() * step % TAU
+    }
+
+    /// Apply the full pipeline: Φ_eff = Ω(Γ · Q(Φ)) + Φ_b.
+    pub fn apply(&self, phases: &[f64], out: &mut [f64]) {
+        assert_eq!(phases.len(), self.gamma.len());
+        assert_eq!(out.len(), phases.len());
+        // Q then Γ
+        for i in 0..phases.len() {
+            out[i] = self.gamma[i] * self.quantize(phases[i]);
+        }
+        // Ω: banded coupling within each mesh
+        if self.crosstalk > 0.0 {
+            let mut lo = 0;
+            for &hi in &self.mesh_bounds {
+                if hi > lo + 1 {
+                    let seg: Vec<f64> = out[lo..hi].to_vec();
+                    for i in 0..seg.len() {
+                        let mut v = seg[i];
+                        if i > 0 {
+                            v += self.crosstalk * seg[i - 1];
+                        }
+                        if i + 1 < seg.len() {
+                            v += self.crosstalk * seg[i + 1];
+                        }
+                        out[lo + i] = v;
+                    }
+                }
+                lo = hi;
+            }
+        }
+        // Φ_b
+        for i in 0..phases.len() {
+            out[i] += self.bias[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantization_grid() {
+        let ni = NonIdeality::new(4, vec![4], 0, 8, 0.0, 0.0, false);
+        let step = TAU / 256.0;
+        for &phi in &[0.0, 0.1, 3.0, 6.2] {
+            let q = ni.quantize(phi);
+            let k = q / step;
+            assert!((k - k.round()).abs() < 1e-9, "{phi} -> {q}");
+            assert!((q - phi).abs() <= step / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn ideal_pipeline_is_identity_mod_tau() {
+        let ni = NonIdeality::ideal(3);
+        let phases = [0.5, 2.0, 4.0];
+        let mut out = [0.0; 3];
+        ni.apply(&phases, &mut out);
+        for (o, p) in out.iter().zip(&phases) {
+            assert!((o - p).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn bias_is_frozen_across_calls_and_seeds_differ() {
+        let ni1 = NonIdeality::paper_default(8, vec![8], 1);
+        let ni2 = NonIdeality::paper_default(8, vec![8], 1);
+        let ni3 = NonIdeality::paper_default(8, vec![8], 2);
+        let phases = [1.0; 8];
+        let (mut a, mut b, mut c) = ([0.0; 8], [0.0; 8], [0.0; 8]);
+        ni1.apply(&phases, &mut a);
+        ni2.apply(&phases, &mut b);
+        ni3.apply(&phases, &mut c);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn crosstalk_respects_mesh_boundaries() {
+        // two meshes of 2 phases each: no coupling across index 1|2
+        let ni = NonIdeality::new(4, vec![2, 4], 0, 32, 0.0, 0.5, false);
+        let phases = [1.0, 0.0, 0.0, 0.0];
+        let mut out = [0.0; 4];
+        ni.apply(&phases, &mut out);
+        assert!((out[0] - 1.0).abs() < 1e-12);
+        assert!((out[1] - 0.5).abs() < 1e-12); // neighbor within mesh 1
+        assert_eq!(out[2], 0.0); // mesh 2 untouched
+        assert_eq!(out[3], 0.0);
+    }
+
+    #[test]
+    fn gamma_drift_is_small_multiplicative() {
+        let ni = NonIdeality::new(1000, vec![1000], 7, 32, 0.002, 0.0, false);
+        let phases = vec![1.0; 1000];
+        let mut out = vec![0.0; 1000];
+        ni.apply(&phases, &mut out);
+        let mean: f64 = out.iter().sum::<f64>() / 1000.0;
+        assert!((mean - 1.0).abs() < 0.001, "mean {mean}");
+        assert!(out.iter().all(|v| (v - 1.0).abs() < 0.02));
+    }
+}

@@ -1,0 +1,173 @@
+//! SVD-parameterized MZI mesh for one weight block (App. A.1 / F.1).
+//!
+//! A (rows x cols) real matrix is realized as `W = U Σ V^T` with U, V
+//! Clements meshes and `Σ = s_max · diag(cos φ^S)` implemented by
+//! single-port attenuator MZIs. Phase layout (and the flat order used by
+//! the trainers): `[Φ^U | Φ^S | Φ^V]`.
+
+use super::clements::ClementsMesh;
+use crate::linalg::Mat;
+
+/// One rectangular SVD mesh.
+#[derive(Debug, Clone)]
+pub struct SvdMesh {
+    pub rows: usize,
+    pub cols: usize,
+    pub u_mesh: ClementsMesh,
+    pub v_mesh: ClementsMesh,
+    /// Σ scaling (the paper's max(|Σ|); fixed, not trainable).
+    pub s_max: f64,
+}
+
+impl SvdMesh {
+    pub fn new(rows: usize, cols: usize, s_max: f64) -> SvdMesh {
+        SvdMesh {
+            rows,
+            cols,
+            u_mesh: ClementsMesh::new(rows),
+            v_mesh: ClementsMesh::new(cols),
+            s_max,
+        }
+    }
+
+    pub fn n_sigma(&self) -> usize {
+        self.rows.min(self.cols)
+    }
+
+    /// Total phase shifters: U-mesh + Σ attenuators + V-mesh.
+    pub fn n_phases(&self) -> usize {
+        self.u_mesh.n_phases() + self.n_sigma() + self.v_mesh.n_phases()
+    }
+
+    /// Physical MZI count (same as `n_phases`: one phase per MZI).
+    pub fn n_mzis(&self) -> usize {
+        self.n_phases()
+    }
+
+    /// Offsets of the Σ section inside this mesh's phase slice.
+    pub fn sigma_range(&self) -> std::ops::Range<usize> {
+        let s = self.u_mesh.n_phases();
+        s..s + self.n_sigma()
+    }
+
+    /// Realize the block: `W(Φ) = U Σ V^T` (rows x cols).
+    pub fn realize(&self, phases: &[f64]) -> Mat {
+        assert_eq!(phases.len(), self.n_phases(), "phase slice mismatch");
+        let nu = self.u_mesh.n_phases();
+        let ns = self.n_sigma();
+        let u = self.u_mesh.unitary(&phases[..nu]);
+        let v = self.v_mesh.unitary(&phases[nu + ns..]);
+        // W = U * Σ * V^T: scale the first ns columns of U by σ_i, then
+        // multiply by the first ns rows of V^T.
+        let mut w = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let mut acc = 0.0;
+                for k in 0..ns {
+                    let sigma = self.s_max * phases[nu + k].cos();
+                    acc += u.get(i, k) * sigma * v.get(j, k);
+                }
+                w.set(i, j, acc);
+            }
+        }
+        w
+    }
+
+    /// Gradient chain for L²ight subspace training: given `G = dL/dW`
+    /// (rows x cols) and the current phases, return dL/dφ^S
+    /// (dW/dσ_i = u_i v_i^T, dσ_i/dφ_i = -s_max sin φ_i).
+    pub fn sigma_grad(&self, phases: &[f64], g: &Mat) -> Vec<f64> {
+        let nu = self.u_mesh.n_phases();
+        let ns = self.n_sigma();
+        let u = self.u_mesh.unitary(&phases[..nu]);
+        let v = self.v_mesh.unitary(&phases[nu + ns..]);
+        (0..ns)
+            .map(|k| {
+                let mut dl_ds = 0.0;
+                for i in 0..self.rows {
+                    for j in 0..self.cols {
+                        dl_ds += g.get(i, j) * u.get(i, k) * v.get(j, k);
+                    }
+                }
+                dl_ds * (-self.s_max * phases[nu + k].sin())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn phase_count_k8_is_64() {
+        // 8x8 block: 28 + 8 + 28 = 64 MZIs — the k=8 blocking of App. F.1;
+        // 256 such blocks give the 16384 MZIs of Table 4 (ONN-SM).
+        let m = SvdMesh::new(8, 8, 1.0);
+        assert_eq!(m.n_phases(), 64);
+        assert_eq!(256 * m.n_mzis(), 16384);
+    }
+
+    #[test]
+    fn realized_block_has_bounded_singular_values() {
+        let m = SvdMesh::new(8, 8, 1.5);
+        let mut rng = Rng::new(0);
+        let mut phases = vec![0.0; m.n_phases()];
+        rng.fill_uniform(&mut phases, 0.0, std::f64::consts::TAU);
+        let w = m.realize(&phases);
+        let (_, s, _) = crate::linalg::jacobi_svd(&w);
+        for sv in s {
+            assert!(sv <= 1.5 + 1e-9, "σ = {sv}");
+        }
+    }
+
+    #[test]
+    fn zero_sigma_phases_give_full_scale() {
+        // cos(0) = 1 -> σ_i = s_max, W = s_max * U V^T (orthogonal scaled).
+        let m = SvdMesh::new(4, 4, 2.0);
+        let mut phases = vec![0.0; m.n_phases()];
+        let mut rng = Rng::new(1);
+        let nu = m.u_mesh.n_phases();
+        rng.fill_uniform(&mut phases[..nu], 0.0, 6.0);
+        let w = m.realize(&phases);
+        let mut wtw = w.transpose().matmul(&w);
+        wtw.scale(1.0 / 4.0);
+        assert!(wtw.max_abs_diff(&crate::linalg::Mat::eye(4)) < 1e-12);
+    }
+
+    #[test]
+    fn sigma_grad_matches_finite_difference() {
+        let m = SvdMesh::new(4, 3, 1.0);
+        let mut rng = Rng::new(2);
+        let mut phases = vec![0.0; m.n_phases()];
+        rng.fill_uniform(&mut phases, 0.3, 5.9);
+        // loss L(W) = sum_ij c_ij W_ij with random c
+        let c = Mat::from_fn(4, 3, |_, _| rng.normal());
+        let loss = |w: &Mat| -> f64 {
+            w.data.iter().zip(&c.data).map(|(a, b)| a * b).sum()
+        };
+        let grad = m.sigma_grad(&phases, &c);
+        let h = 1e-6;
+        for (k, idx) in m.sigma_range().enumerate() {
+            let mut pp = phases.clone();
+            pp[idx] += h;
+            let lp = loss(&m.realize(&pp));
+            pp[idx] -= 2.0 * h;
+            let lm = loss(&m.realize(&pp));
+            let fd = (lp - lm) / (2.0 * h);
+            assert!((grad[k] - fd).abs() < 1e-5, "σ-phase {k}: {} vs {fd}", grad[k]);
+        }
+    }
+
+    #[test]
+    fn rectangular_blocks_supported() {
+        let m = SvdMesh::new(8, 2, 1.0);
+        assert_eq!(m.n_phases(), 28 + 2 + 1);
+        let mut rng = Rng::new(3);
+        let mut phases = vec![0.0; m.n_phases()];
+        rng.fill_uniform(&mut phases, 0.0, 6.28);
+        let w = m.realize(&phases);
+        assert_eq!((w.rows, w.cols), (8, 2));
+    }
+}

@@ -1,0 +1,113 @@
+//! Tensorized ONN (paper §4, App. B, after Xiao et al. 2021/2023).
+//!
+//! Each TT core `G_k` (r_{k-1}, m_k, n_k, r_k) is a *single small MZI
+//! mesh* realizing the unfolding matrix (m_k·r_k) x (r_{k-1}·n_k) —
+//! instead of the O(N²) MZIs a full N x N layer needs. This is the source
+//! of the 42.7x MZI reduction in Table 4: the three BS hidden-layer cores
+//! unfold to 8x8 / 8x8 / 8x8 meshes (384 MZIs) versus 16384 for the dense
+//! 128x128 mesh.
+
+use super::svd_block::SvdMesh;
+
+/// Unfolding dimensions of a TT core as a photonic matrix-vector unit:
+/// output side m·r_out, input side r_in·n.
+pub fn core_unfold_dims(shape: (usize, usize, usize, usize)) -> (usize, usize) {
+    let (r_in, m, n, r_out) = shape;
+    (m * r_out, r_in * n)
+}
+
+/// MZI count of an SVD mesh realizing an (a x b) matrix:
+/// a(a-1)/2 + b(b-1)/2 + min(a,b).
+pub fn mesh_mzi_count(a: usize, b: usize) -> usize {
+    a * (a - 1) / 2 + b * (b - 1) / 2 + a.min(b)
+}
+
+/// Build the SVD mesh for a TT core.
+pub fn core_mesh(shape: (usize, usize, usize, usize), s_max: f64) -> SvdMesh {
+    let (rows, cols) = core_unfold_dims(shape);
+    SvdMesh::new(rows, cols, s_max)
+}
+
+/// Extract the core tensor (flattened C-order (r_in, m, n, r_out)) from
+/// the realized unfolding matrix W (rows = m·r_out, cols = r_in·n):
+/// core[ri, mm, nn, ro] = W[mm·r_out + ro, ri·n + nn].
+pub fn unfold_to_core(
+    shape: (usize, usize, usize, usize),
+    w: &crate::linalg::Mat,
+    out: &mut [f64],
+) {
+    let (r_in, m, n, r_out) = shape;
+    debug_assert_eq!((w.rows, w.cols), core_unfold_dims(shape));
+    debug_assert_eq!(out.len(), r_in * m * n * r_out);
+    for ri in 0..r_in {
+        for mm in 0..m {
+            for nn in 0..n {
+                for ro in 0..r_out {
+                    out[((ri * m + mm) * n + nn) * r_out + ro] =
+                        w.get(mm * r_out + ro, ri * n + nn);
+                }
+            }
+        }
+    }
+}
+
+/// Inverse of [`unfold_to_core`]: pack dL/dcore into dL/dW layout.
+pub fn core_to_unfold(
+    shape: (usize, usize, usize, usize),
+    core_grad: &[f64],
+) -> crate::linalg::Mat {
+    let (r_in, m, n, r_out) = shape;
+    let (rows, cols) = core_unfold_dims(shape);
+    let mut w = crate::linalg::Mat::zeros(rows, cols);
+    for ri in 0..r_in {
+        for mm in 0..m {
+            for nn in 0..n {
+                for ro in 0..r_out {
+                    w.set(
+                        mm * r_out + ro,
+                        ri * n + nn,
+                        core_grad[((ri * m + mm) * n + nn) * r_out + ro],
+                    );
+                }
+            }
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn bs_hidden_core_meshes_are_8x8() {
+        // BS TT fold (4,4,8)x(8,4,4), ranks [1,2,2,1]:
+        // G1 (1,4,8,2) -> 8x8, G2 (2,4,4,2) -> 8x8, G3 (2,8,4,1) -> 8x8.
+        for shape in [(1, 4, 8, 2), (2, 4, 4, 2), (2, 8, 4, 1)] {
+            assert_eq!(core_unfold_dims(shape), (8, 8), "{shape:?}");
+            assert_eq!(mesh_mzi_count(8, 8), 64);
+        }
+        // 3 cores x (28+8+28) = 192 mesh MZIs + attenuation-free routing:
+        // the dense mesh needs 16384 -> two orders of magnitude more.
+        assert!(16384 / (3 * mesh_mzi_count(8, 8)) > 40);
+    }
+
+    #[test]
+    fn unfold_roundtrip() {
+        let shape = (2, 3, 4, 2);
+        let (rows, cols) = core_unfold_dims(shape);
+        let w = Mat::from_fn(rows, cols, |i, j| (i * cols + j) as f64);
+        let mut core = vec![0.0; 2 * 3 * 4 * 2];
+        unfold_to_core(shape, &w, &mut core);
+        let back = core_to_unfold(shape, &core);
+        assert_eq!(back, w);
+    }
+
+    #[test]
+    fn mzi_count_formula() {
+        assert_eq!(mesh_mzi_count(8, 8), 28 + 28 + 8);
+        assert_eq!(mesh_mzi_count(8, 2), 28 + 1 + 2);
+        assert_eq!(mesh_mzi_count(1, 1), 1);
+    }
+}

@@ -1,0 +1,198 @@
+//! On-chip (phase-domain) training protocols (§5.2, Tables 3/19/20).
+//!
+//! All three protocols optimize MZI phases Φ against the hardware-
+//! restricted loss `L(W(Ω Γ Q(Φ) + Φ_b))` evaluated through an engine
+//! (native or AOT/PJRT), and share the sparse-grid loss computation:
+//!
+//! * **FLOPS** (Gu et al. 2020) — joint ZO-RGE over *all* phases of the
+//!   standard ONN; the dimension-dependent variance is what makes it fail
+//!   at real-size PINNs.
+//! * **L²ight** (Gu et al. 2021b) — subspace FO: only the Σ attenuator
+//!   phases (and digital biases) receive exact gradients (via the AOT
+//!   grad artifact + the analytic U Σ V^T chain rule); U/V meshes stay at
+//!   their random initialization.
+//! * **Ours** — the paper's method: TONN hardware + tensor-wise ZO-RGE
+//!   over the (much smaller) TT-core phase vector.
+
+use super::model::PhotonicModel;
+use crate::engine::{rel_l2_eval, Engine};
+use crate::optim::{Adam, Optimizer};
+use crate::util::rng::Rng;
+use crate::zo::rge::{Perturbation, RgeConfig, RgeEstimator};
+use crate::zo::trainer::History;
+use crate::Result;
+
+/// Which on-chip protocol to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseProtocol {
+    /// ZO over all ONN phases (joint RGE) — FLOPS baseline.
+    Flops,
+    /// Subspace FO over Σ phases — L²ight baseline (needs grad artifact).
+    L2ight,
+    /// Tensor-wise ZO over TONN phases — the paper's method.
+    Ours,
+}
+
+/// Configuration for a phase-domain run.
+#[derive(Debug, Clone)]
+pub struct PhaseTrainConfig {
+    pub epochs: usize,
+    pub lr: f64,
+    /// ZO smoothing μ — the paper sets it to the minimum phase control
+    /// resolution (2π/256 for 8-bit control).
+    pub mu: f64,
+    pub n_queries: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for PhaseTrainConfig {
+    fn default() -> Self {
+        PhaseTrainConfig {
+            epochs: 400,
+            lr: 5e-3,
+            mu: std::f64::consts::TAU / 256.0,
+            n_queries: 1,
+            eval_every: 40,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Train MZI phases on-chip; returns (final phases, history).
+pub fn train_phase_domain(
+    pm: &mut PhotonicModel,
+    engine: &mut dyn Engine,
+    protocol: PhaseProtocol,
+    cfg: &PhaseTrainConfig,
+) -> Result<(Vec<f64>, History)> {
+    let t0 = std::time::Instant::now();
+    let mut phi = pm.init_phases(cfg.seed);
+    let d = phi.len();
+    let mut opt = Adam::new(d, cfg.lr);
+    let mut rng = Rng::new(cfg.seed ^ 0x0071c5);
+    let mut hist = History::default();
+    let fpl = engine.forwards_per_loss() as u64;
+    let mut forwards = 0u64;
+    let mut grad = vec![0.0; d];
+
+    let mut rge = match protocol {
+        PhaseProtocol::Flops => Some(RgeEstimator::new(
+            RgeConfig {
+                n_queries: cfg.n_queries,
+                mu: cfg.mu,
+                dist: Perturbation::Rademacher,
+                tensor_wise: false,
+            },
+            d,
+            &[],
+        )),
+        PhaseProtocol::Ours => Some(RgeEstimator::new(
+            RgeConfig {
+                n_queries: cfg.n_queries,
+                mu: cfg.mu,
+                dist: Perturbation::Rademacher,
+                tensor_wise: true,
+            },
+            d,
+            &pm.phase_layout(),
+        )),
+        PhaseProtocol::L2ight => None,
+    };
+    let l2_idx = (protocol == PhaseProtocol::L2ight).then(|| pm.l2ight_trainable());
+
+    for epoch in 0..cfg.epochs {
+        engine.resample(&mut rng);
+        let pts = engine.pde().sample_points(&mut rng);
+        match protocol {
+            PhaseProtocol::Flops | PhaseProtocol::Ours => {
+                let est = rge.as_mut().unwrap();
+                let mut calls = 0u64;
+                est.estimate(&phi, &mut grad, &mut rng, &mut |p| {
+                    calls += 1;
+                    let params = pm.realize(p);
+                    engine.loss(&params, &pts)
+                })?;
+                forwards += calls * fpl;
+                opt.step(&mut phi, &grad);
+            }
+            PhaseProtocol::L2ight => {
+                let params = pm.realize(&phi);
+                let (_, dl_dp) = engine.loss_grad(&params, &pts)?;
+                forwards += fpl;
+                let full = pm.sigma_chain_grad(&phi, &dl_dp);
+                // zero out the frozen coordinates (U/V phases)
+                grad.fill(0.0);
+                for &i in l2_idx.as_ref().unwrap() {
+                    grad[i] = full[i];
+                }
+                opt.step(&mut phi, &grad);
+            }
+        }
+
+        let last = epoch + 1 == cfg.epochs;
+        if epoch % cfg.eval_every == 0 || last {
+            let params = pm.realize(&phi);
+            let mut erng = Rng::new(cfg.seed ^ 0x5eed_e4a1);
+            let err = rel_l2_eval(engine, &params, &mut erng)?;
+            let loss = {
+                let mut lrng = Rng::new(cfg.seed ^ 0x1055);
+                let lpts = engine.pde().sample_points(&mut lrng);
+                engine.loss(&params, &lpts)?
+            };
+            hist.steps.push(epoch);
+            hist.losses.push(loss);
+            hist.errors.push(err);
+            hist.forwards.push(forwards);
+            if cfg.verbose {
+                eprintln!(
+                    "[{protocol:?}] epoch {epoch:>6} loss {loss:10.4e} rel_l2 {err:9.3e}"
+                );
+            }
+        }
+    }
+    hist.final_error = *hist.errors.last().unwrap_or(&f64::NAN);
+    hist.total_forwards = forwards;
+    hist.wall_secs = t0.elapsed().as_secs_f64();
+    Ok((phi, hist))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+    use crate::photonic::model::PhotonicVariant;
+
+    #[test]
+    fn ours_improves_loss_on_bs_tonn() {
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let cfg = PhaseTrainConfig { epochs: 30, eval_every: 29, ..Default::default() };
+        let (_, hist) = train_phase_domain(&mut pm, &mut eng, PhaseProtocol::Ours, &cfg).unwrap();
+        assert!(hist.errors.len() >= 2);
+        assert!(hist.final_error.is_finite());
+        assert!(hist.losses.last().unwrap() <= &(hist.losses[0] * 2.0 + 1.0));
+    }
+
+    #[test]
+    fn flops_runs_on_onn() {
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Onn, 0).unwrap();
+        let mut eng = NativeEngine::new("bs", "std").unwrap();
+        let cfg = PhaseTrainConfig { epochs: 3, eval_every: 2, ..Default::default() };
+        let (phi, hist) =
+            train_phase_domain(&mut pm, &mut eng, PhaseProtocol::Flops, &cfg).unwrap();
+        assert_eq!(phi.len(), pm.n_trainable());
+        assert!(hist.final_error.is_finite());
+    }
+
+    #[test]
+    fn l2ight_requires_grad_artifact() {
+        // On the native engine (no grad), L2ight must fail cleanly.
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Onn, 0).unwrap();
+        let mut eng = NativeEngine::new("bs", "std").unwrap();
+        let cfg = PhaseTrainConfig { epochs: 2, ..Default::default() };
+        assert!(train_phase_domain(&mut pm, &mut eng, PhaseProtocol::L2ight, &cfg).is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! Gauss–Hermite quadrature and Smolyak sparse grids (paper §3.1.2).
+//!
+//! Mirror of `python/compile/quadrature.py` (the build-time construction
+//! baked into the AOT loss graphs). The rust side rebuilds the grids for
+//! the native engine, the photonic phase-domain trainers, and the
+//! hardware model, and the integration tests cross-check both
+//! constructions through `artifacts/quadrature_*.json`.
+//!
+//! Univariate family: `V_l` = probabilists' Gauss–Hermite with `l` nodes
+//! (exact for polynomials of degree <= 2l-1 under N(0,1)). Level-k Smolyak
+//! combination per Eq. (10) with node dedup / weight merging. Node counts
+//! reproduce the paper exactly: D=2 levels 2..7 -> 5/13/29/53/89/137,
+//! D=21 level 3 -> 925.
+
+use std::collections::BTreeMap;
+
+use crate::linalg::symmetric_tridiagonal_eigen;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Probabilists' Gauss–Hermite rule with `n` nodes via Golub–Welsch.
+///
+/// Returns `(nodes, weights)` with `sum_j w_j f(x_j) ~ E_{N(0,1)}[f]`.
+pub fn gauss_hermite(n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n >= 1, "need at least one node");
+    if n == 1 {
+        return (vec![0.0], vec![1.0]);
+    }
+    // Jacobi matrix: diag 0, off-diag sqrt(i), i = 1..n-1.
+    let d = vec![0.0; n];
+    let e: Vec<f64> = (1..n).map(|i| (i as f64).sqrt()).collect();
+    let (mut nodes, first) = symmetric_tridiagonal_eigen(&d, &e);
+    let mut weights: Vec<f64> = first.iter().map(|z| z * z).collect();
+    // Exact symmetrization (pair nodes +-x, zero the center for odd n).
+    for i in 0..n / 2 {
+        let j = n - 1 - i;
+        let x = 0.5 * (nodes[j] - nodes[i]);
+        nodes[i] = -x;
+        nodes[j] = x;
+        let w = 0.5 * (weights[i] + weights[j]);
+        weights[i] = w;
+        weights[j] = w;
+    }
+    if n % 2 == 1 {
+        nodes[n / 2] = 0.0;
+    }
+    // Normalize weight sum to exactly 1.
+    let s: f64 = weights.iter().sum();
+    for w in &mut weights {
+        *w /= s;
+    }
+    (nodes, weights)
+}
+
+/// A D-dimensional sparse quadrature rule for N(0, I_D).
+#[derive(Debug, Clone)]
+pub struct SparseGrid {
+    pub dim: usize,
+    pub level: usize,
+    /// (n_nodes x dim), row-major.
+    pub nodes: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+impl SparseGrid {
+    pub fn n_nodes(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Node `j` as a slice.
+    pub fn node(&self, j: usize) -> &[f64] {
+        &self.nodes[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// Approximate `E_{N(0,I)}[f]` for a scalar integrand.
+    pub fn integrate(&self, mut f: impl FnMut(&[f64]) -> f64) -> f64 {
+        (0..self.n_nodes()).map(|j| self.weights[j] * f(self.node(j))).sum()
+    }
+
+    /// Load a grid dumped by the python exporter (cross-check path).
+    pub fn from_json(json: &Json) -> Result<SparseGrid> {
+        let dim = json.req("dim")?.as_usize()?;
+        let level = json.req("level")?.as_usize()?;
+        let mut nodes = Vec::new();
+        for row in json.req("nodes")?.as_arr()? {
+            let r = row.as_f64_vec()?;
+            if r.len() != dim {
+                return Err(Error::Shape(format!("node row has {} dims, want {dim}", r.len())));
+            }
+            nodes.extend(r);
+        }
+        let weights = json.req("weights")?.as_f64_vec()?;
+        if weights.len() * dim != nodes.len() {
+            return Err(Error::Shape("node/weight count mismatch".into()));
+        }
+        Ok(SparseGrid { dim, level, nodes, weights })
+    }
+}
+
+/// All multi-indices l in N^parts (l_i >= 1) with sum(l) == total.
+fn compositions(total: usize, parts: usize, out: &mut Vec<Vec<usize>>, prefix: &mut Vec<usize>) {
+    if parts == 1 {
+        if total >= 1 {
+            prefix.push(total);
+            out.push(prefix.clone());
+            prefix.pop();
+        }
+        return;
+    }
+    // first in 1..=total-(parts-1)
+    for first in 1..=total.saturating_sub(parts - 1) {
+        prefix.push(first);
+        compositions(total - first, parts - 1, out, prefix);
+        prefix.pop();
+    }
+}
+
+fn binomial(n: usize, k: usize) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let mut r = 1.0;
+    for i in 0..k {
+        r = r * (n - i) as f64 / (i + 1) as f64;
+    }
+    r
+}
+
+/// Level-`level` Smolyak sparse Gauss–Hermite rule in `dim` dimensions
+/// (Eq. (10) of the paper), with duplicate nodes merged.
+pub fn smolyak_sparse_grid(dim: usize, level: usize) -> SparseGrid {
+    assert!(dim >= 1 && level >= 1, "dim and level must be >= 1");
+    let k = level;
+    // Dedup key: node coordinates rounded at 1e-12 resolution.
+    let key = |node: &[f64]| -> Vec<i64> {
+        node.iter().map(|&x| (x * 1e12).round() as i64).collect()
+    };
+    let mut acc: BTreeMap<Vec<i64>, (Vec<f64>, f64)> = BTreeMap::new();
+
+    let q_lo = k.saturating_sub(dim);
+    for q in q_lo..k {
+        let sign = if (k - 1 - q) % 2 == 0 { 1.0 } else { -1.0 };
+        let coeff = sign * binomial(dim - 1, k - 1 - q);
+        if coeff == 0.0 {
+            continue;
+        }
+        let mut combos = Vec::new();
+        compositions(dim + q, dim, &mut combos, &mut Vec::new());
+        for multi in combos {
+            let rules: Vec<(Vec<f64>, Vec<f64>)> =
+                multi.iter().map(|&l| gauss_hermite(l)).collect();
+            // Iterate the tensor product with an odometer.
+            let sizes: Vec<usize> = rules.iter().map(|r| r.0.len()).collect();
+            let total: usize = sizes.iter().product();
+            let mut idx = vec![0usize; dim];
+            for _ in 0..total {
+                let mut node = Vec::with_capacity(dim);
+                let mut w = coeff;
+                for d in 0..dim {
+                    node.push(rules[d].0[idx[d]]);
+                    w *= rules[d].1[idx[d]];
+                }
+                let e = acc.entry(key(&node)).or_insert_with(|| (node, 0.0));
+                e.1 += w;
+                // odometer increment
+                for d in (0..dim).rev() {
+                    idx[d] += 1;
+                    if idx[d] < sizes[d] {
+                        break;
+                    }
+                    idx[d] = 0;
+                }
+            }
+        }
+    }
+
+    let mut nodes = Vec::new();
+    let mut weights = Vec::new();
+    for (_, (node, w)) in acc {
+        if w.abs() > 1e-12 {
+            nodes.extend(node);
+            weights.push(w);
+        }
+    }
+    SparseGrid { dim, level, nodes, weights }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauss_hermite_moments() {
+        for n in 1..=10 {
+            let (x, w) = gauss_hermite(n);
+            // E[x^k] exact for k <= 2n-1: 0 for odd, (k-1)!! for even.
+            for kdeg in 0..2 * n {
+                let got: f64 = x.iter().zip(&w).map(|(xi, wi)| wi * xi.powi(kdeg as i32)).sum();
+                let want = if kdeg % 2 == 1 {
+                    0.0
+                } else {
+                    (1..kdeg).step_by(2).map(|v| v as f64).product::<f64>()
+                };
+                assert!((got - want).abs() < 1e-8 * (1.0 + want), "n={n} k={kdeg}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_node_counts() {
+        // Table 13 / Table 16 / App. C.2.
+        for (d, l, expect) in [
+            (2, 2, 5),
+            (2, 3, 13),
+            (2, 4, 29),
+            (2, 5, 53),
+            (2, 6, 89),
+            (2, 7, 137),
+            (21, 3, 925),
+        ] {
+            assert_eq!(smolyak_sparse_grid(d, l).n_nodes(), expect, "D={d} k={l}");
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        for (d, l) in [(1, 4), (2, 3), (3, 3), (5, 2), (21, 3)] {
+            let g = smolyak_sparse_grid(d, l);
+            let s: f64 = g.weights.iter().sum();
+            assert!((s - 1.0).abs() < 1e-10, "D={d} k={l}: {s}");
+        }
+    }
+
+    #[test]
+    fn total_degree_exactness() {
+        // level-k integrates total degree <= 2k-1 exactly.
+        let g = smolyak_sparse_grid(3, 3);
+        // E[x^2 y^2 z^0] over terms of total degree <= 5
+        let cases: Vec<(Vec<u32>, f64)> = vec![
+            (vec![0, 0, 0], 1.0),
+            (vec![2, 0, 0], 1.0),
+            (vec![4, 0, 0], 3.0),
+            (vec![2, 2, 0], 1.0),
+            (vec![1, 1, 0], 0.0),
+            (vec![3, 1, 1], 0.0),
+            (vec![2, 2, 1], 0.0),
+        ];
+        for (deg, want) in cases {
+            let got = g.integrate(|x| {
+                x.iter().zip(&deg).map(|(v, &k)| v.powi(k as i32)).product()
+            });
+            assert!((got - want).abs() < 1e-9, "{deg:?}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn gaussian_integral_converges_with_level() {
+        let a = [0.3, -0.2];
+        let want = (0.5f64 * (a[0] * a[0] + a[1] * a[1])).exp();
+        let mut errs = Vec::new();
+        for l in [2, 3, 4, 5] {
+            let g = smolyak_sparse_grid(2, l);
+            let got = g.integrate(|x| (a[0] * x[0] + a[1] * x[1]).exp());
+            errs.push((got - want).abs());
+        }
+        assert!(errs[3] < errs[0] * 1e-3, "{errs:?}");
+    }
+
+    #[test]
+    fn grid_is_symmetric() {
+        let g = smolyak_sparse_grid(2, 4);
+        let key = |n: &[f64]| -> Vec<i64> { n.iter().map(|&x| (x * 1e10).round() as i64).collect() };
+        let map: std::collections::BTreeMap<Vec<i64>, f64> = (0..g.n_nodes())
+            .map(|j| (key(g.node(j)), g.weights[j]))
+            .collect();
+        for j in 0..g.n_nodes() {
+            let neg: Vec<f64> = g.node(j).iter().map(|x| -x).collect();
+            let w = map.get(&key(&neg)).expect("negated node missing");
+            assert!((w - g.weights[j]).abs() < 1e-10);
+        }
+    }
+}

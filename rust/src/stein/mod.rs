@@ -1,0 +1,282 @@
+//! Sparse-grid Stein derivative estimator (paper §3.1, Eq. (12)).
+//!
+//! Given a *batched forward oracle* for the body network f (either the
+//! native engine, the PJRT executable, or the photonic simulator), the
+//! estimator evaluates f once over the fused batch
+//! `{x_i} ∪ {x_i ± σ δ_j}` and contracts the results with three weight
+//! sets to produce the value, the full gradient and the diagonal Hessian
+//! at every point — exactly 2·n_L+1 forward queries per point.
+//!
+//! This module is the L3 mirror of `python/compile/stein.py`; the
+//! integration tests check both against the PJRT-compiled loss graphs.
+
+use crate::quadrature::SparseGrid;
+
+/// Derivative bundle at `n` points of dimension `d`.
+#[derive(Debug, Clone)]
+pub struct Bundle {
+    pub n: usize,
+    pub d: usize,
+    /// f(x_i), length n.
+    pub value: Vec<f64>,
+    /// df/dx_id, row-major (n x d).
+    pub grad: Vec<f64>,
+    /// d2f/dx_id^2, row-major (n x d).
+    pub diag_hess: Vec<f64>,
+}
+
+/// The Stein estimator configured with a quadrature rule and radius σ.
+#[derive(Debug, Clone)]
+pub struct SteinEstimator {
+    pub dim: usize,
+    pub sigma: f64,
+    /// (J x dim) unit-variance nodes δ̂_j.
+    nodes: Vec<f64>,
+    weights: Vec<f64>,
+    /// Precomputed contraction weights: w_j δ̂_jd / (2σ)  (J x dim).
+    grad_w: Vec<f64>,
+    /// Precomputed w_j (δ̂_jd² - 1) / (2σ²)  (J x dim).
+    hess_w: Vec<f64>,
+}
+
+impl SteinEstimator {
+    /// Build from a sparse grid (the paper's SG estimator).
+    pub fn from_grid(grid: &SparseGrid, sigma: f64) -> Self {
+        Self::from_nodes(grid.dim, &grid.nodes, &grid.weights, sigma)
+    }
+
+    /// Build from arbitrary nodes/weights (also powers the MC "SE"
+    /// baseline of He et al. 2023 with w_j = 1/S).
+    pub fn from_nodes(dim: usize, nodes: &[f64], weights: &[f64], sigma: f64) -> Self {
+        let j = weights.len();
+        assert_eq!(nodes.len(), j * dim);
+        assert!(sigma > 0.0);
+        let mut grad_w = vec![0.0; j * dim];
+        let mut hess_w = vec![0.0; j * dim];
+        for jj in 0..j {
+            for d in 0..dim {
+                let nd = nodes[jj * dim + d];
+                grad_w[jj * dim + d] = weights[jj] * nd / (2.0 * sigma);
+                hess_w[jj * dim + d] = weights[jj] * (nd * nd - 1.0) / (2.0 * sigma * sigma);
+            }
+        }
+        SteinEstimator {
+            dim,
+            sigma,
+            nodes: nodes.to_vec(),
+            weights: weights.to_vec(),
+            grad_w,
+            hess_w,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Number of forward queries per evaluation point (2 n_L + 1).
+    pub fn queries_per_point(&self) -> usize {
+        2 * self.n_nodes() + 1
+    }
+
+    /// Assemble the fused evaluation batch `[x; x+σδ; x-σδ]`:
+    /// rows 0..n are the centers, then n·J plus-shifts, then n·J minus.
+    pub fn build_batch(&self, x: &[f64], n: usize) -> Vec<f64> {
+        let d = self.dim;
+        debug_assert_eq!(x.len(), n * d);
+        let j = self.n_nodes();
+        let mut big = Vec::with_capacity((n + 2 * n * j) * d);
+        big.extend_from_slice(x);
+        for sign in [1.0f64, -1.0] {
+            for i in 0..n {
+                let xi = &x[i * d..(i + 1) * d];
+                for jj in 0..j {
+                    let node = &self.nodes[jj * d..(jj + 1) * d];
+                    for k in 0..d {
+                        big.push(xi[k] + sign * self.sigma * node[k]);
+                    }
+                }
+            }
+        }
+        big
+    }
+
+    /// Contract forward values over the fused batch into the bundle.
+    /// `vals` has length n·(2J+1) in the order produced by [`build_batch`].
+    pub fn contract(&self, vals: &[f64], n: usize) -> Bundle {
+        let d = self.dim;
+        let j = self.n_nodes();
+        assert_eq!(vals.len(), n * (2 * j + 1));
+        let g0 = &vals[..n];
+        let gp = &vals[n..n + n * j];
+        let gm = &vals[n + n * j..];
+
+        let mut value = vec![0.0; n];
+        let mut grad = vec![0.0; n * d];
+        let mut diag = vec![0.0; n * d];
+        for i in 0..n {
+            let gpi = &gp[i * j..(i + 1) * j];
+            let gmi = &gm[i * j..(i + 1) * j];
+            let mut u = 0.0;
+            for jj in 0..j {
+                let sum = gpi[jj] + gmi[jj];
+                let dif = gpi[jj] - gmi[jj];
+                u += self.weights[jj] * 0.5 * sum;
+                let even = sum - 2.0 * g0[i];
+                let gw = &self.grad_w[jj * d..(jj + 1) * d];
+                let hw = &self.hess_w[jj * d..(jj + 1) * d];
+                let gr = &mut grad[i * d..(i + 1) * d];
+                let dh = &mut diag[i * d..(i + 1) * d];
+                for k in 0..d {
+                    gr[k] += gw[k] * dif;
+                    dh[k] += hw[k] * even;
+                }
+            }
+            value[i] = u;
+        }
+        Bundle { n, d, value, grad, diag_hess: diag }
+    }
+
+    /// One-shot helper: estimate the bundle through a batched oracle
+    /// `f(points, n_points) -> values`.
+    pub fn bundle<F>(&self, f: F, x: &[f64], n: usize) -> Bundle
+    where
+        F: FnOnce(&[f64], usize) -> Vec<f64>,
+    {
+        let big = self.build_batch(x, n);
+        let total = n * self.queries_per_point();
+        let vals = f(&big, total);
+        assert_eq!(vals.len(), total, "oracle returned wrong count");
+        self.contract(&vals, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quadrature::smolyak_sparse_grid;
+    use crate::util::proptest_lite::check;
+    use crate::util::rng::Rng;
+
+    fn eval_all(f: impl Fn(&[f64]) -> f64, pts: &[f64], d: usize) -> Vec<f64> {
+        pts.chunks(d).map(|p| f(p)).collect()
+    }
+
+    #[test]
+    fn quadratic_is_exact() {
+        // f(x,y) = 3x^2 + xy - 2y + 1. The Hessian contraction weights are
+        // degree-4 polynomials in delta, so a level-3 grid (total degree 5
+        // exactness) integrates them exactly. The estimated value is that
+        // of the *smoothed* model: u = f + sigma^2/2 * tr(H) = f + 3 s^2.
+        let sigma = 0.3;
+        let grid = smolyak_sparse_grid(2, 3);
+        let est = SteinEstimator::from_grid(&grid, sigma);
+        let f = |p: &[f64]| 3.0 * p[0] * p[0] + p[0] * p[1] - 2.0 * p[1] + 1.0;
+        let x = vec![0.5, -1.0, 2.0, 0.25];
+        let b = est.bundle(|pts, _| eval_all(f, pts, 2), &x, 2);
+        for (i, (xi, yi)) in [(0.5, -1.0), (2.0, 0.25)].iter().enumerate() {
+            let smoothed = f(&[*xi, *yi]) + 3.0 * sigma * sigma;
+            assert!((b.value[i] - smoothed).abs() < 1e-10);
+            assert!((b.grad[i * 2] - (6.0 * xi + yi)).abs() < 1e-9);
+            assert!((b.grad[i * 2 + 1] - (xi - 2.0)).abs() < 1e-9);
+            assert!((b.diag_hess[i * 2] - 6.0).abs() < 1e-8);
+            assert!((b.diag_hess[i * 2 + 1] - 0.0).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn harmonic_function_has_zero_laplacian() {
+        // Paper App. E.4.2: u = e^{-x} sin(y), Δu = 0. The oracle is the
+        // *unsmoothed* f whose Gaussian smoothing equals u up to e^{σ²/2},
+        // so we check the estimator's laplacian of the smoothed model.
+        let sigma = 0.1;
+        let grid = smolyak_sparse_grid(2, 5);
+        let est = SteinEstimator::from_grid(&grid, sigma);
+        let f = move |p: &[f64]| (-sigma * sigma / 2.0f64).exp() * (-p[0]).exp() * p[1].sin();
+        let mut rng = Rng::new(0);
+        let n = 50;
+        let mut x = vec![0.0; n * 2];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let b = est.bundle(|pts, _| eval_all(f, pts, 2), &x, n);
+        let mut norm = 0.0;
+        for i in 0..n {
+            let lap = b.diag_hess[i * 2] + b.diag_hess[i * 2 + 1];
+            norm += lap * lap;
+        }
+        assert!(norm.sqrt() < 1e-6, "laplacian norm {}", norm.sqrt());
+    }
+
+    #[test]
+    fn sg_beats_mc_on_laplacian() {
+        // Table 15/16: sparse grid needs orders of magnitude fewer queries.
+        let sigma = 0.1;
+        let f = move |p: &[f64]| (-sigma * sigma / 2.0f64).exp() * (-p[0]).exp() * p[1].sin();
+        let x = vec![0.3, 0.7];
+        let grid = smolyak_sparse_grid(2, 4);
+        let sg = SteinEstimator::from_grid(&grid, sigma);
+        let b = sg.bundle(|pts, _| eval_all(f, pts, 2), &x, 1);
+        let sg_err = (b.diag_hess[0] + b.diag_hess[1]).abs();
+
+        let mut rng = Rng::new(3);
+        let s = 4096;
+        let mut nodes = vec![0.0; s * 2];
+        rng.fill_normal(&mut nodes);
+        let w = vec![1.0 / s as f64; s];
+        let mc = SteinEstimator::from_nodes(2, &nodes, &w, sigma);
+        let bm = mc.bundle(|pts, _| eval_all(f, pts, 2), &x, 1);
+        let mc_err = (bm.diag_hess[0] + bm.diag_hess[1]).abs();
+        assert!(sg_err < 1e-7, "sg {sg_err}");
+        assert!(mc_err > 100.0 * sg_err, "mc {mc_err} vs sg {sg_err}");
+    }
+
+    #[test]
+    fn query_count_matches_paper() {
+        // BS setting: D=2, level 3 -> 13 nodes -> 27 queries per point.
+        let grid = smolyak_sparse_grid(2, 3);
+        let est = SteinEstimator::from_grid(&grid, 1e-3);
+        assert_eq!(est.n_nodes(), 13);
+        assert_eq!(est.queries_per_point(), 27);
+    }
+
+    #[test]
+    fn batch_layout_roundtrip_property() {
+        check(
+            "batch layout",
+            20,
+            |r| {
+                let d = 1 + r.below(4);
+                let n = 1 + r.below(6);
+                let mut x = vec![0.0; n * d];
+                r.fill_normal(&mut x);
+                (d, n, x)
+            },
+            |(d, n, x)| {
+                let grid = smolyak_sparse_grid(*d, 2);
+                let est = SteinEstimator::from_grid(&grid, 0.01);
+                let big = est.build_batch(x, *n);
+                if big.len() != n * est.queries_per_point() * d {
+                    return Err("batch size".into());
+                }
+                // centers come first, untouched
+                if big[..n * d] != x[..] {
+                    return Err("centers not first".into());
+                }
+                // plus and minus shifts average back to the center
+                let j = est.n_nodes();
+                for i in 0..*n {
+                    for jj in 0..j {
+                        for k in 0..*d {
+                            let p = big[(*n + i * j + jj) * d + k];
+                            let m = big[(*n + n * j + i * j + jj) * d + k];
+                            let c = x[i * d + k];
+                            if (0.5 * (p + m) - c).abs() > 1e-12 {
+                                return Err(format!("shift mismatch at {i},{jj},{k}"));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

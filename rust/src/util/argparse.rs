@@ -1,0 +1,119 @@
+//! Tiny CLI argument parser (clap is not in the vendored registry).
+//!
+//! Grammar: `opinn <subcommand> [positional...] [--key value | --flag]`.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got {s:?}"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects a number, got {s:?}"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.get_usize(name, default as usize)? as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("train bs tt");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.positional, vec!["bs", "tt"]);
+    }
+
+    #[test]
+    fn options_both_styles() {
+        let a = parse("train --epochs 100 --lr=1e-3 --quiet");
+        assert_eq!(a.get("epochs"), Some("100"));
+        assert_eq!(a.get("lr"), Some("1e-3"));
+        assert!(a.flag("quiet"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("x --n 5 --mu 0.01");
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_f64("mu", 0.0).unwrap(), 0.01);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(parse("x --n five").get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --fast --seed 3");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("seed"), Some("3"));
+    }
+}

@@ -1,0 +1,392 @@
+//! Minimal JSON codec (serde is not in the vendored registry).
+//!
+//! Supports the full JSON grammar; numbers are f64 (adequate for every
+//! interchange file in this repo: artifact manifests, quadrature dumps,
+//! checkpoints, experiment records).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::{Error, Result};
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(Error::Json(format!("trailing data at byte {}", p.i)));
+        }
+        Ok(v)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Json> {
+        Json::parse(&std::fs::read_to_string(path)?)
+    }
+
+    // ---- accessors --------------------------------------------------------
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// `obj["a"]["b"]` style access; errors carry the path for diagnostics.
+    pub fn req(&self, key: &str) -> Result<&Json> {
+        self.get(key)
+            .ok_or_else(|| Error::Json(format!("missing key {key:?}")))
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            _ => Err(Error::Json(format!("expected number, got {self:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            return Err(Error::Json(format!("expected unsigned integer, got {x}")));
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => Err(Error::Json(format!("expected string, got {self:?}"))),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => Err(Error::Json(format!("expected array, got {self:?}"))),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => Err(Error::Json(format!("expected object, got {self:?}"))),
+        }
+    }
+
+    /// Array of numbers -> Vec<f64>.
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
+    // ---- constructors ------------------------------------------------------
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr_f64(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    // ---- serialization -----------------------------------------------------
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 1e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    // Round-trippable f64 formatting.
+                    let _ = write!(out, "{x:e}");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| Error::Json("unexpected end of input".into()))
+    }
+
+    fn eat(&mut self, lit: &str) -> Result<()> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(Error::Json(format!("expected {lit:?} at byte {}", self.i)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'n' => self.eat("null").map(|_| Json::Null),
+            b't' => self.eat("true").map(|_| Json::Bool(true)),
+            b'f' => self.eat("false").map(|_| Json::Bool(false)),
+            b'"' => self.string().map(Json::Str),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            _ => self.number(),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|e| Error::Json(e.to_string()))?;
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| Error::Json(format!("bad number {s:?} at byte {start}")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat("\"")?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(Error::Json("truncated \\u escape".into()));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|e| Error::Json(e.to_string()))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| Error::Json(format!("bad \\u{hex}")))?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(Error::Json(format!("bad escape \\{}", e as char))),
+                    }
+                }
+                c => {
+                    // Re-decode UTF-8 from the byte stream.
+                    let len = match c {
+                        0x00..=0x7f => 0,
+                        0xc0..=0xdf => 1,
+                        0xe0..=0xef => 2,
+                        _ => 3,
+                    };
+                    let start = self.i - 1;
+                    self.i += len;
+                    let s = std::str::from_utf8(&self.b[start..self.i])
+                        .map_err(|e| Error::Json(e.to_string()))?;
+                    out.push_str(s);
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat("[")?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.skip_ws();
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                c => return Err(Error::Json(format!("expected , or ] got {}", c as char))),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat("{")?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(":")?;
+            self.skip_ws();
+            let v = self.value()?;
+            out.insert(k, v);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                c => return Err(Error::Json(format!("expected , or }} got {}", c as char))),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse(" -1.5e3 ").unwrap(), Json::Num(-1500.0));
+        assert_eq!(Json::parse(r#""a\nb""#).unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        assert_eq!(v.req("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            v.req("a").unwrap().as_arr().unwrap()[2]
+                .req("b")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "x"
+        );
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = r#"{"name":"bs_tt","nums":[1,2.5,-3e-4],"ok":true,"nul":null,"s":"q\"uote"}"#;
+        let v = Json::parse(src).unwrap();
+        let v2 = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn roundtrip_extreme_floats() {
+        for x in [1e-308, 1.7976931348623157e308, 0.1 + 0.2, -0.0, 123456789.123] {
+            let v = Json::Num(x);
+            let back = Json::parse(&v.to_string()).unwrap().as_f64().unwrap();
+            assert_eq!(back, x, "{x}");
+        }
+    }
+
+    #[test]
+    fn unicode_strings() {
+        let v = Json::parse(r#""é-中""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "é-中");
+        let raw = Json::parse("\"héllo 世界\"").unwrap();
+        assert_eq!(raw.as_str().unwrap(), "héllo 世界");
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("nulL").is_err());
+        assert!(Json::Num(1.0).as_str().is_err());
+        assert!(Json::Null.req("x").is_err());
+        assert!(Json::Num(1.5).as_usize().is_err());
+        assert!(Json::Num(-2.0).as_usize().is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Infrastructure substrates.
+//!
+//! The vendored crate registry ships only the `xla` dependency closure, so
+//! the usual ecosystem crates (rand, serde, clap, criterion, proptest) are
+//! rebuilt here as small, audited, std-only modules (see DESIGN.md §4).
+
+pub mod argparse;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,77 @@
+//! Property-based testing helper (proptest is not in the vendored
+//! registry).
+//!
+//! Deterministic: case `i` of a named property derives its RNG from
+//! `fnv(name) ^ i`, so a reported failure seed reproduces exactly.
+//! No shrinking — cases are kept small instead.
+
+use super::rng::Rng;
+
+fn fnv(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Run `cases` random trials of a property. The generator receives a
+/// per-case RNG; the property returns `Err(reason)` to fail.
+pub fn check<T, G, P>(name: &str, cases: u64, gen: G, prop: P)
+where
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let base = fnv(name);
+    for i in 0..cases {
+        let mut rng = Rng::new(base ^ i);
+        let case = gen(&mut rng);
+        if let Err(reason) = prop(&case) {
+            panic!("property {name:?} failed on case {i} (seed {:#x}): {reason}", base ^ i);
+        }
+    }
+}
+
+/// Assert two f64 slices are element-wise close.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("u in [0,1)", 64, |r| r.uniform(), |u| {
+            if (0.0..1.0).contains(u) {
+                Ok(())
+            } else {
+                Err(format!("{u} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_reports_failures() {
+        check("always fails", 4, |r| r.uniform(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-9).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Summary statistics and paper-style number formatting.
+
+/// Streaming mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn std(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Relative l2 error ||pred - ref|| / ||ref|| — the paper's metric.
+pub fn rel_l2(pred: &[f64], reference: &[f64]) -> f64 {
+    assert_eq!(pred.len(), reference.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (p, r) in pred.iter().zip(reference) {
+        num += (p - r) * (p - r);
+        den += r * r;
+    }
+    (num / den.max(f64::MIN_POSITIVE)).sqrt()
+}
+
+/// Paper-style scientific notation: 5.28E-02.
+pub fn sci(x: f64) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    if x == 0.0 {
+        return "0.00E+00".to_string();
+    }
+    let exp = x.abs().log10().floor() as i32;
+    let mant = x / 10f64.powi(exp);
+    format!("{mant:.2}E{exp:+03}")
+}
+
+/// "mean ± std" in paper notation: (5.28±0.05)E-02.
+pub fn sci_pm(mean: f64, std: f64) -> String {
+    if mean == 0.0 {
+        return format!("(0.00±{:.2})E+00", std);
+    }
+    let exp = mean.abs().log10().floor() as i32;
+    let scale = 10f64.powi(exp);
+    format!("({:.2}±{:.2})E{exp:+03}", mean / scale, std / scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.5];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 16.5);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_l2_basic() {
+        assert_eq!(rel_l2(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        let e = rel_l2(&[1.1, 2.0], &[1.0, 2.0]);
+        assert!((e - 0.1 / 5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sci_formatting() {
+        assert_eq!(sci(5.28e-2), "5.28E-02");
+        assert_eq!(sci(8.16e-4), "8.16E-04");
+        assert_eq!(sci(1.74), "1.74E+00");
+        assert_eq!(sci(-3.5e3), "-3.50E+03");
+        assert_eq!(sci_pm(5.28e-2, 5e-4), "(5.28±0.05)E-02");
+    }
+}

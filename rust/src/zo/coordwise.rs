@@ -1,0 +1,97 @@
+//! Coordinate-wise gradient estimation (DeepZero-style, Chen et al. 2023)
+//! — the Fig. 3 efficiency baseline.
+//!
+//! Central finite differences per coordinate over a (possibly random)
+//! coordinate subset: deterministic, low-variance, but 2·|S| loss queries
+//! per step — the paper reports ~200x more forwards than RGE to converge.
+
+use crate::util::rng::Rng;
+use crate::Result;
+
+pub struct CoordwiseEstimator {
+    pub mu: f64,
+    /// Coordinates updated per step (None = all).
+    pub coords_per_step: Option<usize>,
+    theta: Vec<f64>,
+    pub loss_evals: u64,
+}
+
+impl CoordwiseEstimator {
+    pub fn new(mu: f64, dim: usize, coords_per_step: Option<usize>) -> CoordwiseEstimator {
+        CoordwiseEstimator { mu, coords_per_step, theta: vec![0.0; dim], loss_evals: 0 }
+    }
+
+    /// Estimate the gradient on the chosen coordinate subset (zeros
+    /// elsewhere — pairs with a sparse optimizer step).
+    pub fn estimate(
+        &mut self,
+        params: &[f64],
+        grad: &mut [f64],
+        rng: &mut Rng,
+        loss: &mut dyn FnMut(&[f64]) -> Result<f64>,
+    ) -> Result<()> {
+        let d = params.len();
+        grad.fill(0.0);
+        self.theta.copy_from_slice(params);
+        let coords: Vec<usize> = match self.coords_per_step {
+            None => (0..d).collect(),
+            Some(k) => {
+                let mut idx: Vec<usize> = (0..d).collect();
+                rng.shuffle(&mut idx);
+                idx.truncate(k.min(d));
+                idx
+            }
+        };
+        for &i in &coords {
+            let orig = self.theta[i];
+            self.theta[i] = orig + self.mu;
+            let lp = loss(&self.theta)?;
+            self.theta[i] = orig - self.mu;
+            let lm = loss(&self.theta)?;
+            self.theta[i] = orig;
+            self.loss_evals += 2;
+            grad[i] = (lp - lm) / (2.0 * self.mu);
+        }
+        Ok(())
+    }
+
+    pub fn queries_per_step(&self, dim: usize) -> usize {
+        2 * self.coords_per_step.map_or(dim, |k| k.min(dim))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_coordinate_sweep_is_exact_for_quadratic() {
+        let params = vec![1.0, -2.0, 0.5];
+        let mut grad = vec![0.0; 3];
+        let mut est = CoordwiseEstimator::new(1e-5, 3, None);
+        let mut rng = Rng::new(0);
+        est.estimate(&params, &mut grad, &mut rng, &mut |p| {
+            Ok(p.iter().map(|x| x * x).sum())
+        })
+        .unwrap();
+        for (g, p) in grad.iter().zip(&params) {
+            assert!((g - 2.0 * p).abs() < 1e-8, "{g} vs {}", 2.0 * p);
+        }
+        assert_eq!(est.loss_evals, 6);
+    }
+
+    #[test]
+    fn subset_mode_touches_k_coords() {
+        let params = vec![1.0; 10];
+        let mut grad = vec![0.0; 10];
+        let mut est = CoordwiseEstimator::new(1e-5, 10, Some(3));
+        let mut rng = Rng::new(1);
+        est.estimate(&params, &mut grad, &mut rng, &mut |p| {
+            Ok(p.iter().map(|x| x * x).sum())
+        })
+        .unwrap();
+        let touched = grad.iter().filter(|g| g.abs() > 1e-9).count();
+        assert_eq!(touched, 3);
+        assert_eq!(est.queries_per_step(10), 6);
+    }
+}

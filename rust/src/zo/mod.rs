@@ -1,0 +1,11 @@
+//! Zeroth-order optimization (paper §2, §3.2): randomized gradient
+//! estimation, DeepZero-style coordinate-wise estimation, and the ZO/FO
+//! training loops.
+
+pub mod coordwise;
+pub mod rge;
+pub mod trainer;
+
+pub use coordwise::CoordwiseEstimator;
+pub use rge::{Perturbation, RgeConfig, RgeEstimator};
+pub use trainer::{train, History, TrainConfig, TrainMethod};

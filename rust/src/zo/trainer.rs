@@ -1,0 +1,209 @@
+//! Training loops: FO (BP baseline via AOT grad artifacts) and BP-free ZO
+//! (RGE / coordinate-wise), with photonic-forward accounting.
+
+use crate::engine::{rel_l2_eval, Engine};
+use crate::net::ParamEntry;
+use crate::optim::{Adam, Optimizer};
+use crate::util::rng::Rng;
+use crate::Result;
+
+use super::coordwise::CoordwiseEstimator;
+use super::rge::{RgeConfig, RgeEstimator};
+
+/// Gradient source for training.
+#[derive(Debug, Clone)]
+pub enum TrainMethod {
+    /// First-order (BP) via the compiled `jax.value_and_grad` artifact.
+    Fo,
+    /// Zeroth-order randomized gradient estimation (the paper's method).
+    ZoRge(RgeConfig),
+    /// DeepZero-style coordinate-wise estimation (Fig. 3 baseline).
+    ZoCoordwise { mu: f64, coords_per_step: Option<usize> },
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub method: TrainMethod,
+    pub epochs: usize,
+    pub lr: f64,
+    pub eval_every: usize,
+    pub seed: u64,
+    /// Parameter layout for tensor-wise RGE (empty -> joint perturbation).
+    pub layout: Vec<ParamEntry>,
+    /// Stop once this many photonic forwards have been consumed (Fig. 3
+    /// fixed-budget comparisons).
+    pub max_forwards: Option<u64>,
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    pub fn zo(epochs: usize) -> TrainConfig {
+        TrainConfig {
+            method: TrainMethod::ZoRge(RgeConfig::default()),
+            epochs,
+            lr: 1e-3,
+            eval_every: (epochs / 20).max(1),
+            seed: 0,
+            layout: Vec::new(),
+            max_forwards: None,
+            verbose: false,
+        }
+    }
+
+    pub fn fo(epochs: usize) -> TrainConfig {
+        TrainConfig { method: TrainMethod::Fo, ..TrainConfig::zo(epochs) }
+    }
+}
+
+/// Training curve + totals.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub steps: Vec<usize>,
+    pub losses: Vec<f64>,
+    pub errors: Vec<f64>,
+    /// Cumulative photonic forward queries at each eval point.
+    pub forwards: Vec<u64>,
+    pub final_error: f64,
+    pub total_forwards: u64,
+    pub wall_secs: f64,
+}
+
+impl History {
+    /// Best (minimum) recorded relative-l2 error.
+    pub fn best_error(&self) -> f64 {
+        self.errors.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Run a training session; `params` is updated in place.
+pub fn train(engine: &mut dyn Engine, params: &mut [f64], cfg: &TrainConfig) -> Result<History> {
+    let t0 = std::time::Instant::now();
+    let d = params.len();
+    let mut opt = Adam::new(d, cfg.lr);
+    let mut rng = Rng::new(cfg.seed);
+    let mut hist = History::default();
+    let mut grad = vec![0.0; d];
+    let fpl = engine.forwards_per_loss() as u64;
+    let mut forwards: u64 = 0;
+
+    let mut rge = match &cfg.method {
+        TrainMethod::ZoRge(rc) => Some(RgeEstimator::new(rc.clone(), d, &cfg.layout)),
+        _ => None,
+    };
+    let mut cw = match &cfg.method {
+        TrainMethod::ZoCoordwise { mu, coords_per_step } => {
+            Some(CoordwiseEstimator::new(*mu, d, *coords_per_step))
+        }
+        _ => None,
+    };
+
+    for epoch in 0..cfg.epochs {
+        engine.resample(&mut rng);
+        let pts = engine.pde().sample_points(&mut rng);
+        match &cfg.method {
+            TrainMethod::Fo => {
+                let (loss, g) = engine.loss_grad(params, &pts)?;
+                grad.copy_from_slice(&g);
+                forwards += fpl; // one forward sweep feeds the backward too
+                if loss.is_finite() {
+                    opt.step(params, &grad);
+                }
+            }
+            TrainMethod::ZoRge(_) => {
+                let est = rge.as_mut().unwrap();
+                let mut calls = 0u64;
+                est.estimate(params, &mut grad, &mut rng, &mut |p| {
+                    calls += 1;
+                    engine.loss(p, &pts)
+                })?;
+                forwards += calls * fpl;
+                opt.step(params, &grad);
+            }
+            TrainMethod::ZoCoordwise { .. } => {
+                let est = cw.as_mut().unwrap();
+                let mut calls = 0u64;
+                est.estimate(params, &mut grad, &mut rng, &mut |p| {
+                    calls += 1;
+                    engine.loss(p, &pts)
+                })?;
+                forwards += calls * fpl;
+                opt.step(params, &grad);
+            }
+        }
+
+        let last = epoch + 1 == cfg.epochs;
+        let budget_hit = cfg.max_forwards.map(|m| forwards >= m).unwrap_or(false);
+        if epoch % cfg.eval_every == 0 || last || budget_hit {
+            // fresh RNG with a fixed seed -> identical eval cloud each time
+            let mut erng = Rng::new(cfg.seed ^ 0x5eed_e4a1);
+            let err = rel_l2_eval(engine, params, &mut erng)?;
+            let loss = {
+                // fixed collocation set so the logged loss curve is smooth
+                let mut lrng = Rng::new(cfg.seed ^ 0x1055);
+                let lpts = engine.pde().sample_points(&mut lrng);
+                engine.loss(params, &lpts)?
+            };
+            hist.steps.push(epoch);
+            hist.losses.push(loss);
+            hist.errors.push(err);
+            hist.forwards.push(forwards);
+            if cfg.verbose {
+                eprintln!(
+                    "epoch {epoch:>6}  loss {loss:10.4e}  rel_l2 {err:9.3e}  forwards {forwards}"
+                );
+            }
+        }
+        if budget_hit {
+            break;
+        }
+    }
+    hist.final_error = *hist.errors.last().unwrap_or(&f64::NAN);
+    hist.total_forwards = forwards;
+    hist.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(hist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+
+    #[test]
+    fn zo_training_reduces_error_on_bs_tt() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut params = eng.model.init_flat(0);
+        let layout = eng.model.param_layout();
+        let mut cfg = TrainConfig::zo(60);
+        cfg.layout = layout;
+        cfg.eval_every = 59;
+        cfg.lr = 3e-3;
+        let hist = train(&mut eng, &mut params, &cfg).unwrap();
+        assert!(hist.errors.len() >= 2);
+        let first = hist.errors[0];
+        let last = hist.final_error;
+        assert!(last.is_finite());
+        // 60 epochs won't converge, but must not diverge
+        assert!(last < first * 2.0, "{first} -> {last}");
+        assert!(hist.total_forwards > 0);
+    }
+
+    #[test]
+    fn budget_mode_stops_early() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut params = eng.model.init_flat(0);
+        let mut cfg = TrainConfig::zo(10_000);
+        cfg.max_forwards = Some(50_000);
+        cfg.eval_every = 1_000_000; // only budget/last evals
+        let hist = train(&mut eng, &mut params, &cfg).unwrap();
+        assert!(hist.total_forwards >= 50_000);
+        assert!(hist.total_forwards < 50_000 + 20 * 2 * 2760 as u64);
+    }
+
+    #[test]
+    fn fo_on_native_engine_errors_cleanly() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut params = eng.model.init_flat(0);
+        let cfg = TrainConfig::fo(3);
+        assert!(train(&mut eng, &mut params, &cfg).is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! System-level tests: coordinator + photonic + experiment harness
+//! composition, including failure injection. Native-engine based, so they
+//! run without artifacts.
+
+use optical_pinn::coordinator::{load_params, save_params, BatcherConfig, InferenceServer};
+use optical_pinn::engine::{rel_l2_eval, Engine, NativeEngine};
+use optical_pinn::experiments::{make_engine, Backend, RunSpec};
+use optical_pinn::net::build_model;
+use optical_pinn::photonic::training::PhaseTrainConfig;
+use optical_pinn::photonic::{train_phase_domain, PhaseProtocol, PhotonicModel, PhotonicVariant};
+use optical_pinn::util::rng::Rng;
+use optical_pinn::zo::rge::RgeConfig;
+use optical_pinn::zo::{train, TrainConfig, TrainMethod};
+
+#[test]
+fn batched_frontend_serves_a_real_model() {
+    let native = NativeEngine::new("bs", "tt").unwrap();
+    let params = native.model.init_flat(0);
+    let reference = native.forward_f(&params, &[100.0, 0.5, 40.0, 0.1], 2);
+    let srv = InferenceServer::start(2, BatcherConfig::default(), move |pts, n| {
+        native.forward_f(&params, pts, n)
+    });
+    // concurrent clients get consistent answers
+    let srv = std::sync::Arc::new(srv);
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let s = std::sync::Arc::clone(&srv);
+        let want = reference.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..20 {
+                let got = s.infer(&[100.0, 0.5, 40.0, 0.1], 2).unwrap();
+                assert_eq!(got, want);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_through_training() {
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    let model = build_model("bs", "tt", 2, None).unwrap();
+    let mut params = model.init_flat(0);
+    let mut cfg = TrainConfig::zo(10);
+    cfg.layout = model.param_layout();
+    train(&mut eng, &mut params, &cfg).unwrap();
+    let dir = std::env::temp_dir().join("opinn_sys_ckpt");
+    let path = dir.join("bs_tt.json");
+    save_params(&path, "bs_tt", 10, &params).unwrap();
+    let (name, step, loaded) = load_params(&path).unwrap();
+    assert_eq!((name.as_str(), step), ("bs_tt", 10));
+    assert_eq!(loaded, params);
+    // the restored params evaluate identically
+    let mut r1 = Rng::new(0);
+    let mut r2 = Rng::new(0);
+    let e1 = rel_l2_eval(&mut eng, &params, &mut r1).unwrap();
+    let e2 = rel_l2_eval(&mut eng, &loaded, &mut r2).unwrap();
+    assert_eq!(e1, e2);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn phase_domain_protocols_compose_with_native_engine() {
+    // ours on TONN + flops on ONN, tiny budgets: must run, stay finite,
+    // and use vastly different trainable counts.
+    let mut eng_tt = NativeEngine::new("bs", "tt").unwrap();
+    let mut tonn = PhotonicModel::new("bs", PhotonicVariant::Tonn, 3).unwrap();
+    let cfg = PhaseTrainConfig { epochs: 5, eval_every: 4, ..Default::default() };
+    let (phi, hist) =
+        train_phase_domain(&mut tonn, &mut eng_tt, PhaseProtocol::Ours, &cfg).unwrap();
+    assert_eq!(phi.len(), tonn.n_trainable());
+    assert!(hist.final_error.is_finite());
+
+    let mut eng_std = NativeEngine::new("bs", "std").unwrap();
+    let mut onn = PhotonicModel::new("bs", PhotonicVariant::Onn, 3).unwrap();
+    let (phi2, _) =
+        train_phase_domain(&mut onn, &mut eng_std, PhaseProtocol::Flops, &cfg).unwrap();
+    assert!(phi2.len() > 10 * phi.len(), "ONN should have >>10x the phases");
+}
+
+#[test]
+fn experiment_runner_native_backend_smoke() {
+    let spec = RunSpec::new("bs", "tt", "sg");
+    let mut engine = make_engine(&spec, Backend::Native).unwrap();
+    assert_eq!(engine.backend(), "native");
+    assert_eq!(engine.n_params(), 833);
+    let model = build_model("bs", "tt", 2, None).unwrap();
+    let mut params = model.init_flat(0);
+    let mut cfg = TrainConfig::zo(5);
+    cfg.method = TrainMethod::ZoRge(RgeConfig { n_queries: 2, ..Default::default() });
+    cfg.layout = model.param_layout();
+    let hist = train(engine.as_mut(), &mut params, &cfg).unwrap();
+    assert!(hist.total_forwards > 0);
+}
+
+#[test]
+fn make_engine_rejects_ad_on_native() {
+    let spec = RunSpec::new("bs", "std", "ad");
+    assert!(make_engine(&spec, Backend::Native).is_err());
+}
+
+#[test]
+fn chip_seed_changes_nonideal_realization_but_not_architecture() {
+    let mut a = PhotonicModel::new("bs", PhotonicVariant::Tonn, 1).unwrap();
+    let mut b = PhotonicModel::new("bs", PhotonicVariant::Tonn, 2).unwrap();
+    assert_eq!(a.n_mzis(), b.n_mzis());
+    assert_eq!(a.n_trainable(), b.n_trainable());
+    let phi = a.init_phases(0);
+    let pa = a.realize(&phi);
+    let pb = b.realize(&phi);
+    assert_ne!(pa, pb, "different chips must realize different weights");
+}
+
+#[test]
+fn hw_model_consistency_with_photonic_simulator() {
+    // Table 4's ONN-SM row models only the 128x128 hidden layer; the
+    // simulator's full-model count must strictly dominate it.
+    let onn = PhotonicModel::new("bs", PhotonicVariant::Onn, 0).unwrap();
+    assert!(onn.n_mzis() >= optical_pinn::hw::Layout::OnnSm.n_mzis());
+}
