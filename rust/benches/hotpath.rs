@@ -16,6 +16,7 @@ use optical_pinn::quadrature::smolyak_sparse_grid;
 use optical_pinn::stein::SteinEstimator;
 use optical_pinn::util::json::Json;
 use optical_pinn::util::rng::Rng;
+use optical_pinn::zo::rge::{RgeConfig, RgeEstimator};
 
 fn main() {
     let mut table = Table::new("§Perf hot paths", &["op", "mean ms", "throughput"]);
@@ -98,6 +99,47 @@ fn main() {
         black_box(std_model.forward(&std_params, &xs, 2730, threads));
     });
     table.row(vec!["Std-MLP fwd 2730 pts".into(), format!("{:.3}", t.per_iter_ms()), format!("{:.1} kpts/s", 2.73 / t.mean_s)]);
+
+    // 6. Probe-batched ZO step: one full tensor-wise RGE gradient estimate
+    //    (plan -> loss_many -> assemble), sequential vs probe-parallel.
+    //    This is the training-loop outer op the probe-batching PR targets.
+    for (pde, variant) in [("bs", "tt"), ("hjb20", "tt")] {
+        let mut eng = NativeEngine::new(pde, variant).unwrap();
+        let params = eng.model.init_flat(0);
+        let layout = eng.model.param_layout();
+        let mut prng = Rng::new(2);
+        let pts = eng.pde().sample_points(&mut prng);
+        let mut est = RgeEstimator::new(RgeConfig::default(), params.len(), &layout);
+        let mut grad = vec![0.0; params.len()];
+        let probes = est.queries_per_step() as f64;
+        let iters = if pde == "bs" { 10 } else { 3 };
+        let mut seq_mean: Option<f64> = None;
+        let mut thread_cases = vec![1usize];
+        if threads > 1 {
+            thread_cases.push(threads);
+        }
+        for t in thread_cases {
+            eng.set_probe_threads(t);
+            let mut rng = Rng::new(3);
+            let timing = bench(&format!("zo_step_{pde}_{t}"), 1, iters, || {
+                est.estimate(&params, &mut grad, &mut rng, &mut |pb| {
+                    eng.loss_many(pb, &pts)
+                })
+                .unwrap();
+            });
+            let label = if seq_mean.is_none() {
+                format!("zo_step {pde}/{variant} seq ({probes:.0} probes)")
+            } else {
+                format!("zo_step {pde}/{variant} {t} threads")
+            };
+            let mut thr = format!("{:.1} probes/s", probes / timing.mean_s);
+            match seq_mean {
+                Some(seq) => thr.push_str(&format!("  ({:.2}x speedup)", seq / timing.mean_s)),
+                None => seq_mean = Some(timing.mean_s),
+            }
+            table.row(vec![label, format!("{:.2}", timing.per_iter_ms()), thr]);
+        }
+    }
 
     table.print();
     record("hotpath", table.to_json());

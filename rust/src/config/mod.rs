@@ -27,6 +27,9 @@ pub struct ExperimentConfig {
     pub artifacts_dir: String,
     pub mu: f64,
     pub n_queries: usize,
+    /// Worker threads for probe-batched ZO loss evaluation
+    /// (`Engine::loss_many`); 0 keeps the engine default.
+    pub probe_threads: usize,
     pub verbose: bool,
 }
 
@@ -47,6 +50,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: std::env::var("OPINN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
             mu: 0.01,
             n_queries: 1,
+            probe_threads: 0,
             verbose: false,
         }
     }
@@ -91,6 +95,7 @@ impl ExperimentConfig {
                 "artifacts_dir" => c.artifacts_dir = v.as_str()?.to_string(),
                 "mu" => c.mu = v.as_f64()?,
                 "n_queries" => c.n_queries = v.as_usize()?,
+                "probe_threads" => c.probe_threads = v.as_usize()?,
                 "verbose" => c.verbose = matches!(v, Json::Bool(true)),
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
             }
@@ -132,6 +137,7 @@ impl ExperimentConfig {
         }
         self.mu = args.get_f64("mu", self.mu)?;
         self.n_queries = args.get_usize("queries", self.n_queries)?;
+        self.probe_threads = args.get_usize("probe-threads", self.probe_threads)?;
         if args.flag("verbose") {
             self.verbose = true;
         }
@@ -180,7 +186,7 @@ mod tests {
         assert_eq!(c.epochs, 500);
         // first token is the subcommand (as in `opinn train burgers tt ...`)
         let args = Args::parse(
-            ["train", "burgers", "tt", "--epochs", "99", "--verbose"]
+            ["train", "burgers", "tt", "--epochs", "99", "--probe-threads", "4", "--verbose"]
                 .iter()
                 .map(|s| s.to_string()),
         );
@@ -188,6 +194,7 @@ mod tests {
         assert_eq!(c.pde, "burgers");
         assert_eq!(c.variant, "tt");
         assert_eq!(c.epochs, 99);
+        assert_eq!(c.probe_threads, 4);
         assert!(c.verbose);
         c.validate().unwrap();
     }

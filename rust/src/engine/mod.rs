@@ -20,6 +20,96 @@ use crate::util::rng::Rng;
 use crate::util::stats::rel_l2;
 use crate::Result;
 
+/// A flat `(n_probes x dim)` matrix of candidate parameter vectors — the
+/// unit of work of the probe-batched ZO evaluation pipeline.
+///
+/// Zeroth-order estimators (`zo::rge`, `zo::coordwise`) generate their
+/// whole per-step probe plan as one `ProbeBatch`, hand it to
+/// [`Engine::loss_many`], and assemble the gradient from the returned
+/// loss vector. Rows are stored contiguously so engines can fan them out
+/// to worker threads (native) or batched device graphs (future PJRT)
+/// without reshaping.
+#[derive(Debug, Clone)]
+pub struct ProbeBatch {
+    dim: usize,
+    data: Vec<f64>,
+}
+
+impl ProbeBatch {
+    /// Empty batch of `dim`-dimensional probes.
+    pub fn new(dim: usize) -> ProbeBatch {
+        Self::with_capacity(dim, 0)
+    }
+
+    /// Empty batch with room for `n_probes` rows.
+    pub fn with_capacity(dim: usize, n_probes: usize) -> ProbeBatch {
+        assert!(dim > 0, "probe dimension must be positive");
+        ProbeBatch { dim, data: Vec::with_capacity(dim * n_probes) }
+    }
+
+    /// Probe dimensionality (columns).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of probe rows currently in the batch.
+    pub fn n_probes(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Drop all rows, keeping the allocation.
+    pub fn clear(&mut self) {
+        self.data.clear();
+    }
+
+    /// Append a probe row; returns its row index.
+    pub fn push(&mut self, probe: &[f64]) -> usize {
+        assert_eq!(probe.len(), self.dim, "probe length mismatch");
+        self.data.extend_from_slice(probe);
+        self.n_probes() - 1
+    }
+
+    /// Append a copy of `base` and return the new row mutably, so callers
+    /// can apply a sparse perturbation in place without a scratch vector.
+    pub fn push_perturbed(&mut self, base: &[f64]) -> &mut [f64] {
+        let i = self.push(base);
+        self.probe_mut(i)
+    }
+
+    /// Row `i` as a parameter slice.
+    pub fn probe(&self, i: usize) -> &[f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Row `i`, mutable.
+    pub fn probe_mut(&mut self, i: usize) -> &mut [f64] {
+        let d = self.dim;
+        &mut self.data[i * d..(i + 1) * d]
+    }
+
+    /// Iterate over probe rows in order.
+    pub fn iter(&self) -> std::slice::Chunks<'_, f64> {
+        self.data.chunks(self.dim)
+    }
+
+    /// The raw row-major `(n_probes x dim)` storage.
+    pub fn as_flat(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+impl<'a> IntoIterator for &'a ProbeBatch {
+    type Item = &'a [f64];
+    type IntoIter = std::slice::Chunks<'a, f64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
 /// A loss/forward evaluation backend for one (pde, model) pair.
 pub trait Engine {
     /// The PDE benchmark this engine is bound to.
@@ -28,6 +118,22 @@ pub trait Engine {
     fn n_params(&self) -> usize;
     /// PINN loss at `params` over the collocation set.
     fn loss(&mut self, params: &[f64], pts: &PointSet) -> Result<f64>;
+    /// PINN loss at every probe of the batch over the same collocation
+    /// set, in row order. The sequential default evaluates one probe per
+    /// [`Engine::loss`] call; engines with a parallel path (native) or a
+    /// batched device graph (future PJRT) override it. Implementations
+    /// must return results that are bitwise-identical to the sequential
+    /// path at any level of internal parallelism.
+    fn loss_many(&mut self, probes: &ProbeBatch, pts: &PointSet) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(probes.n_probes());
+        for i in 0..probes.n_probes() {
+            out.push(self.loss(probes.probe(i), pts)?);
+        }
+        Ok(out)
+    }
+    /// Probe-level parallelism hint for [`Engine::loss_many`]
+    /// (0 = engine default). No-op on engines without a parallel path.
+    fn set_probe_threads(&mut self, _threads: usize) {}
     /// (loss, d loss / d params) — only available where a grad artifact
     /// exists (FO baselines); native engines return Unsupported.
     fn loss_grad(&mut self, params: &[f64], pts: &PointSet) -> Result<(f64, Vec<f64>)>;
@@ -49,4 +155,33 @@ pub fn rel_l2_eval(engine: &mut dyn Engine, params: &[f64], rng: &mut Rng) -> Re
     let pred = engine.forward_u(params, &pts, n)?;
     let exact = engine.pde().exact(&pts, n);
     Ok(rel_l2(&pred, &exact))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ProbeBatch;
+
+    #[test]
+    fn probe_batch_roundtrip() {
+        let mut pb = ProbeBatch::with_capacity(3, 2);
+        assert!(pb.is_empty());
+        assert_eq!(pb.push(&[1.0, 2.0, 3.0]), 0);
+        let row = pb.push_perturbed(&[4.0, 5.0, 6.0]);
+        row[1] += 0.5;
+        assert_eq!(pb.n_probes(), 2);
+        assert_eq!(pb.probe(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(pb.probe(1), &[4.0, 5.5, 6.0]);
+        assert_eq!(pb.iter().count(), 2);
+        assert_eq!(pb.as_flat().len(), 6);
+        pb.clear();
+        assert!(pb.is_empty());
+        assert_eq!(pb.n_probes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "probe length mismatch")]
+    fn probe_batch_rejects_bad_rows() {
+        let mut pb = ProbeBatch::new(3);
+        pb.push(&[1.0, 2.0]);
+    }
 }

@@ -1,11 +1,44 @@
-//! Pure-rust engine: multithreaded forward + BP-free loss.
+//! Pure-rust engine: multithreaded forward + BP-free loss, with a
+//! probe-parallel [`Engine::loss_many`] that fans independent ZO probes
+//! across a pool of workers, each owning a reusable [`Workspace`].
 
-use super::Engine;
-use crate::loss::{DerivMethod, PinnLoss};
-use crate::net::{build_model, Model};
+use super::{Engine, ProbeBatch};
+use crate::loss::{DerivMethod, LossWorkspace, PinnLoss};
+use crate::net::{build_model, FwdScratch, Model};
 use crate::pde::{get_pde, Pde, PointSet};
 use crate::util::rng::Rng;
 use crate::{err, Result};
+
+/// Per-worker scratch for probe-batched loss evaluation: the forward
+/// ping-pong buffers plus the loss-side Stein batch/values/bundle. Kept
+/// alive inside the engine across `loss_many` calls, so the steady-state
+/// hot path performs no allocation.
+#[derive(Debug, Clone, Default)]
+pub struct Workspace {
+    fwd: FwdScratch,
+    loss: LossWorkspace,
+}
+
+/// One full PINN loss evaluation at `params`, entirely inside `ws`.
+/// Single-threaded by construction — `loss_many` parallelizes across
+/// probes, not inside a forward — and bitwise-identical to the engine's
+/// sequential [`Engine::loss`] path.
+fn eval_probe(
+    model: &Model,
+    loss_fn: &PinnLoss,
+    pde: &dyn Pde,
+    params: &[f64],
+    pts: &PointSet,
+    ws: &mut Workspace,
+) -> f64 {
+    let Workspace { fwd, loss } = ws;
+    loss_fn.eval_with(
+        pde,
+        pts,
+        &mut |x, n, out| model.forward_into(params, x, n, fwd, out),
+        loss,
+    )
+}
 
 /// Engine that evaluates the model and the SG/SE loss natively.
 pub struct NativeEngine {
@@ -13,6 +46,10 @@ pub struct NativeEngine {
     pde: Box<dyn Pde>,
     pub loss_fn: PinnLoss,
     pub threads: usize,
+    /// Worker count for probe-batched `loss_many` (>= 1).
+    pub probe_threads: usize,
+    /// Persistent per-worker scratch (lazily grown to `probe_threads`).
+    workspaces: Vec<Workspace>,
 }
 
 impl NativeEngine {
@@ -41,7 +78,16 @@ impl NativeEngine {
                 PinnLoss::se(pde.as_ref(), opts.mc_samples.unwrap_or(pde.mc_samples()), &mut rng)
             }
         };
-        Ok(NativeEngine { model, pde, loss_fn, threads: opts.threads })
+        let probe_threads =
+            if opts.probe_threads == 0 { default_threads() } else { opts.probe_threads };
+        Ok(NativeEngine {
+            model,
+            pde,
+            loss_fn,
+            threads: opts.threads,
+            probe_threads,
+            workspaces: Vec::new(),
+        })
     }
 
     /// Raw network forward (the quantity the photonic chip measures).
@@ -59,6 +105,8 @@ pub struct NativeOptions {
     pub mc_samples: Option<usize>,
     pub se_seed: u64,
     pub threads: usize,
+    /// Workers for probe-batched `loss_many` (0 = engine default).
+    pub probe_threads: usize,
 }
 
 impl Default for NativeOptions {
@@ -70,6 +118,7 @@ impl Default for NativeOptions {
             mc_samples: None,
             se_seed: 0,
             threads: default_threads(),
+            probe_threads: default_threads(),
         }
     }
 }
@@ -96,6 +145,56 @@ impl Engine for NativeEngine {
         Ok(self
             .loss_fn
             .eval(self.pde.as_ref(), pts, &mut |x, n| model.forward(params, x, n, threads)))
+    }
+
+    fn loss_many(&mut self, probes: &ProbeBatch, pts: &PointSet) -> Result<Vec<f64>> {
+        let n = probes.n_probes();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if probes.dim() != self.model.n_params() {
+            return Err(err(format!(
+                "probe dim {} != model n_params {}",
+                probes.dim(),
+                self.model.n_params()
+            )));
+        }
+        let t = self.probe_threads.max(1).min(n);
+        if self.workspaces.len() < t {
+            self.workspaces.resize_with(t, Workspace::default);
+        }
+        let model = &self.model;
+        let loss_fn = &self.loss_fn;
+        let pde = self.pde.as_ref();
+        let mut out = vec![0.0; n];
+        if t == 1 {
+            let ws = &mut self.workspaces[0];
+            for (i, slot) in out.iter_mut().enumerate() {
+                *slot = eval_probe(model, loss_fn, pde, probes.probe(i), pts, ws);
+            }
+            return Ok(out);
+        }
+        // Contiguous static partition: every probe is one full loss
+        // evaluation over the same point set, so the load is uniform and
+        // the deterministic split keeps results independent of scheduling.
+        let per = n.div_ceil(t);
+        std::thread::scope(|s| {
+            for (ci, (chunk, ws)) in
+                out.chunks_mut(per).zip(self.workspaces.iter_mut()).enumerate()
+            {
+                s.spawn(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        let p = probes.probe(ci * per + j);
+                        *slot = eval_probe(model, loss_fn, pde, p, pts, ws);
+                    }
+                });
+            }
+        });
+        Ok(out)
+    }
+
+    fn set_probe_threads(&mut self, threads: usize) {
+        self.probe_threads = if threads == 0 { default_threads() } else { threads };
     }
 
     fn loss_grad(&mut self, _params: &[f64], _pts: &PointSet) -> Result<(f64, Vec<f64>)> {
@@ -151,6 +250,37 @@ mod tests {
         let mut rng = Rng::new(0);
         let e = rel_l2_eval(&mut eng, &params, &mut rng).unwrap();
         assert!(e > 0.1 && e < 10.0, "rel l2 {e}");
+    }
+
+    #[test]
+    fn loss_many_matches_sequential_loss_bitwise() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(1);
+        let pts = eng.pde().sample_points(&mut rng);
+        let mut probes = crate::engine::ProbeBatch::new(params.len());
+        for i in 0..5 {
+            let row = probes.push_perturbed(&params);
+            row[i * 7] += 0.01 * (i as f64 + 1.0);
+        }
+        let want: Vec<f64> = (0..probes.n_probes())
+            .map(|i| eng.loss(probes.probe(i), &pts).unwrap())
+            .collect();
+        for t in [1usize, 2, 8] {
+            eng.set_probe_threads(t);
+            let got = eng.loss_many(&probes, &pts).unwrap();
+            assert_eq!(got, want, "probe_threads = {t}");
+        }
+    }
+
+    #[test]
+    fn probe_dim_mismatch_is_an_error() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut rng = Rng::new(0);
+        let pts = eng.pde().sample_points(&mut rng);
+        let mut probes = crate::engine::ProbeBatch::new(3);
+        probes.push(&[0.0, 0.0, 0.0]);
+        assert!(eng.loss_many(&probes, &pts).is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@ use super::Engine;
 use crate::pde::{get_pde, Pde, PointSet};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::xla;
 use crate::{err, Error, Result};
 
 /// Shared runtime: one PJRT client + a compile cache keyed by artifact
@@ -261,6 +262,11 @@ impl Engine for PjrtEngine {
         let out = self.rt.exec(&name, &inputs)?;
         Ok(out[0][0])
     }
+
+    // `loss_many` keeps the trait's sequential fallback: the compiled loss
+    // graph takes one parameter vector, so probes execute back to back. A
+    // (n_probes x d)-batched HLO graph is the planned upgrade (see ROADMAP
+    // "Open items").
 
     fn loss_grad(&mut self, params: &[f64], pts: &PointSet) -> Result<(f64, Vec<f64>)> {
         let name = self

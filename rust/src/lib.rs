@@ -29,6 +29,30 @@
 //! * [`coordinator`] — batched inference dispatcher, metrics, checkpoints;
 //! * [`bench_harness`] — the in-tree micro-benchmark runner used by
 //!   `cargo bench` (criterion is not available in the vendored registry).
+//!
+//! ## The probe-batched ZO evaluation pipeline
+//!
+//! Training cost is dominated by zeroth-order loss queries: a tensor-wise
+//! RGE step issues `2·N·K` independent loss evaluations (one per ±μξ
+//! block perturbation, Eq. (6)). The hot-path contract is therefore
+//! *plan-shaped*, not scalar:
+//!
+//! 1. an estimator ([`zo::RgeEstimator`], [`zo::CoordwiseEstimator`])
+//!    generates its whole per-step probe plan as an
+//!    [`engine::ProbeBatch`] — a flat `(n_probes x d)` parameter matrix —
+//!    drawing each probe pair's ξ from a counter-derived RNG stream;
+//! 2. the engine evaluates the plan via [`engine::Engine::loss_many`].
+//!    `NativeEngine` fans probes across a persistent worker pool
+//!    (`--probe-threads` on the CLI, `probe_threads` in config JSON,
+//!    [`engine::Engine::set_probe_threads`] in code), each worker reusing
+//!    an allocation-free forward/loss workspace
+//!    ([`net::Model::forward_into`], [`loss::PinnLoss::eval_with`]);
+//!    `PjrtEngine` currently falls back to sequential execution;
+//! 3. the estimator assembles the returned loss vector into the gradient.
+//!
+//! Results are bitwise-identical to the sequential path at any thread
+//! count: the plan is fixed before evaluation, every probe's loss is
+//! deterministic, and assembly order never depends on scheduling.
 
 pub mod bench_harness;
 pub mod config;
@@ -46,23 +70,47 @@ pub mod photonic;
 pub mod quadrature;
 pub mod stein;
 pub mod util;
+pub mod xla;
 pub mod zo;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled: the crate builds with zero
+/// external dependencies, so no `thiserror`).
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json error: {0}")]
+    Io(std::io::Error),
     Json(String),
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("shape error: {0}")]
     Shape(String),
-    #[error("config error: {0}")]
     Config(String),
-    #[error("{0}")]
     Other(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {

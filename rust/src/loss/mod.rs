@@ -7,8 +7,21 @@
 
 use crate::pde::{Pde, PointSet};
 use crate::quadrature::smolyak_sparse_grid;
-use crate::stein::SteinEstimator;
+use crate::stein::{Bundle, SteinEstimator};
 use crate::util::rng::Rng;
+
+/// Reusable buffers for one loss evaluation: the fused Stein batch, the
+/// raw forward values over it, the contracted derivative bundle, and a
+/// small scratch for the data-term forwards. One `LossWorkspace` per
+/// worker thread makes [`PinnLoss::eval_with`] allocation-free after
+/// warm-up — the property the probe-batched ZO pipeline relies on.
+#[derive(Debug, Clone, Default)]
+pub struct LossWorkspace {
+    batch: Vec<f64>,
+    vals: Vec<f64>,
+    bundle: Bundle,
+    fvals: Vec<f64>,
+}
 
 /// Derivative backend for the loss.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,17 +88,6 @@ impl PinnLoss {
         self.estimator = SteinEstimator::from_nodes(self.dim, &nodes, &w, self.sigma);
     }
 
-    /// Current MC nodes (row-major), for feeding the PJRT `loss_se` graph.
-    pub fn mc_nodes(&self) -> Option<Vec<f64>> {
-        match self.method {
-            DerivMethod::Se => {
-                // reconstruct nodes from the estimator's stored grad weights
-                None // not needed: PjrtEngine keeps its own node buffer
-            }
-            DerivMethod::Sg => None,
-        }
-    }
-
     /// Forward queries needed for one loss evaluation.
     pub fn queries(&self, pde: &dyn Pde) -> usize {
         let n_res = pde.point_inputs()[0].1;
@@ -94,21 +96,48 @@ impl PinnLoss {
     }
 
     /// Evaluate the loss through a batched raw-network oracle
-    /// `fwd(points, n) -> f values`.
+    /// `fwd(points, n) -> f values`. Thin wrapper over
+    /// [`eval_with`](Self::eval_with) with a throwaway workspace.
     pub fn eval(
         &self,
         pde: &dyn Pde,
         pts: &PointSet,
         fwd: &mut dyn FnMut(&[f64], usize) -> Vec<f64>,
     ) -> f64 {
+        let mut ws = LossWorkspace::default();
+        self.eval_with(
+            pde,
+            pts,
+            &mut |p, m, out| *out = fwd(p, m),
+            &mut ws,
+        )
+    }
+
+    /// Workspace-backed loss evaluation: the oracle writes the raw forward
+    /// values into its `out` buffer, and every intermediate lives in `ws`,
+    /// so repeated calls (one per ZO probe) allocate nothing after the
+    /// first. Numerics are identical to [`eval`](Self::eval) — both run
+    /// through this code path.
+    pub fn eval_with(
+        &self,
+        pde: &dyn Pde,
+        pts: &PointSet,
+        fwd: &mut dyn FnMut(&[f64], usize, &mut Vec<f64>),
+        ws: &mut LossWorkspace,
+    ) -> f64 {
         let x_res = pts.get("pts_res").expect("pts_res block");
         let n = x_res.len() / pde.d_in();
-        let fb = self.estimator.bundle(|p, m| fwd(p, m), x_res, n);
-        let ub = pde.compose(x_res, &fb);
+        let LossWorkspace { batch, vals, bundle, fvals } = ws;
+        self.estimator
+            .bundle_with(|p, m, out| fwd(p, m, out), x_res, n, batch, vals, bundle);
+        let ub = pde.compose(x_res, bundle);
         let r = pde.residual(x_res, &ub);
         let mut loss =
             r.iter().map(|v| (v * self.res_scale).powi(2)).sum::<f64>() / n as f64;
-        let mut u_of = |p: &[f64], m: usize| pde.transform(p, &fwd(p, m));
+        let mut u_of = |p: &[f64], m: usize| {
+            fwd(p, m, fvals);
+            pde.transform(p, fvals)
+        };
         loss += pde.data_loss(pts, &mut u_of);
         loss
     }

@@ -16,6 +16,7 @@
 
 use optical_pinn::config::ExperimentConfig;
 use optical_pinn::coordinator::{save_params, Metrics};
+use optical_pinn::engine::Engine;
 use optical_pinn::experiments::{self, Backend, RunSpec};
 use optical_pinn::hw;
 use optical_pinn::mnist;
@@ -66,7 +67,9 @@ fn run(args: &Args) -> Result<()> {
 const HELP: &str = "usage: opinn <train|train-phase|tables|hw-report|info> [options]
   train <pde> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
         [--lr F] [--seed N] [--backend pjrt|native] [--out ckpt.json]
+        [--probe-threads N]   ZO probe-batch workers (0 = engine default)
   train-phase <pde> [--protocol ours|flops|l2ight] [--epochs N]
+        [--probe-threads N]
   tables <t1|t2|t3|t456|fig3|tt_rank|width|grid|mc_samples|sg_level|sigma|mu|queries|mnist>
   hw-report [--epochs N]
   info";
@@ -97,6 +100,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         width: cfg.width,
     };
     let mut engine = experiments::make_engine(&spec, backend_of(&cfg))?;
+    if cfg.probe_threads > 0 {
+        engine.set_probe_threads(cfg.probe_threads);
+    }
     let model = build_model(&cfg.pde, &cfg.variant, cfg.rank, cfg.width)?;
     let mut params = model.init_flat(cfg.seed);
     let tc = TrainConfig {
@@ -147,6 +153,9 @@ fn cmd_train_phase(args: &Args) -> Result<()> {
     };
     let spec = RunSpec::new(&cfg.pde, variant, "sg");
     let mut engine = experiments::make_engine(&spec, backend_of(&cfg))?;
+    if cfg.probe_threads > 0 {
+        engine.set_probe_threads(cfg.probe_threads);
+    }
     let mut pm = PhotonicModel::new(&cfg.pde, pv, cfg.seed)?;
     println!(
         "photonic model: {} MZIs, {} trainable scalars",

@@ -278,8 +278,12 @@ pub fn train_zo(
     for e in 0..epochs {
         let idx: Vec<usize> = (0..batch).map(|_| rng.below(data.len())).collect();
         let (x, y) = data.batch(&idx);
-        est.estimate(flat, &mut grad, &mut rng, &mut |p| {
-            Ok(cross_entropy(&logits(model, p, &x, batch, threads), &y))
+        est.estimate(flat, &mut grad, &mut rng, &mut |pb| {
+            let mut losses = Vec::with_capacity(pb.n_probes());
+            for p in pb.iter() {
+                losses.push(cross_entropy(&logits(model, p, &x, batch, threads), &y));
+            }
+            Ok(losses)
         })?;
         opt.step(flat, &grad);
         if e % 10 == 0 {

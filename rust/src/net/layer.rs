@@ -4,6 +4,20 @@ use super::activation::Act;
 use crate::linalg::gemm::{gemm, matmul_parallel};
 use crate::util::rng::Rng;
 
+/// Reusable scratch buffers for allocation-free layer forwards
+/// ([`Layer::forward_into`]). One instance per worker thread; all three
+/// buffers keep their capacity across calls, so the probe-batched ZO hot
+/// path stops allocating after the first evaluation.
+#[derive(Debug, Clone, Default)]
+pub struct LayerScratch {
+    /// Permuted carry (B·rest2·macc x r_in·n_k) for the TT contraction.
+    perm: Vec<f64>,
+    /// Core reshaped to a (r_in·n_k x m_k·r_out) GEMM operand.
+    core: Vec<f64>,
+    /// Ping-pong partner of the output carry.
+    carry: Vec<f64>,
+}
+
 /// Dense layer: `y = act(x @ A + b)` with `A` (n_in x n_out) row-major
 /// (the transpose of the paper's `W`).
 #[derive(Debug, Clone)]
@@ -98,15 +112,31 @@ impl TTLayer {
     /// TT matrix-vector product over a batch: x (B x N) -> (B x M),
     /// identical contraction order to `kernels/ref.py::tt_contract_ref`.
     pub fn contract(&self, cores_flat: &[f64], x: &[f64], batch: usize) -> Vec<f64> {
+        let mut out = Vec::new();
+        let mut ws = LayerScratch::default();
+        self.contract_into(cores_flat, x, batch, &mut out, &mut ws);
+        out
+    }
+
+    /// Allocation-free variant of [`contract`](Self::contract): the carry
+    /// ping-pongs between `out` and `ws.carry`, and the permute/reshape
+    /// intermediates live in `ws`. Bitwise-identical results.
+    pub fn contract_into(
+        &self,
+        cores_flat: &[f64],
+        x: &[f64],
+        batch: usize,
+        out: &mut Vec<f64>,
+        ws: &mut LayerScratch,
+    ) {
         let n_total = self.n_in();
         debug_assert_eq!(x.len(), batch * n_total);
         let mut rest = n_total;
         let mut macc = 1usize;
         // carry: (B, rest, macc * r), r starts at 1.
-        let mut carry = x.to_vec();
         let mut r_cur = 1usize;
         let mut off = 0;
-        let mut scratch: Vec<f64> = Vec::new();
+        let mut first = true;
         for (r_in, m_k, n_k, r_out) in self.core_shapes() {
             let core = &cores_flat[off..off + r_in * m_k * n_k * r_out];
             off += core.len();
@@ -115,8 +145,9 @@ impl TTLayer {
             // Permute carry (B, n_k, rest2, macc, r_in) -> (B, rest2, macc, r_in, n_k)
             let rows = batch * rest2 * macc;
             let inner = r_in * n_k;
-            scratch.clear();
-            scratch.resize(rows * inner, 0.0);
+            ws.perm.clear();
+            ws.perm.resize(rows * inner, 0.0);
+            let carry: &[f64] = if first { x } else { out };
             for b in 0..batch {
                 for jn in 0..n_k {
                     for r2 in 0..rest2 {
@@ -124,7 +155,7 @@ impl TTLayer {
                             let src = (((b * n_k + jn) * rest2 + r2) * macc + ma) * r_in;
                             let dst_row = (b * rest2 + r2) * macc + ma;
                             for ri in 0..r_in {
-                                scratch[dst_row * inner + ri * n_k + jn] = carry[src + ri];
+                                ws.perm[dst_row * inner + ri * n_k + jn] = carry[src + ri];
                             }
                         }
                     }
@@ -132,27 +163,30 @@ impl TTLayer {
             }
             // Core reshaped (r_in, n_k, m_k, r_out) -> (inner x m_k*r_out)
             let outc = m_k * r_out;
-            let mut g = vec![0.0; inner * outc];
+            ws.core.clear();
+            ws.core.resize(inner * outc, 0.0);
             for ri in 0..r_in {
                 for mm in 0..m_k {
                     for nn in 0..n_k {
                         for ro in 0..r_out {
-                            g[(ri * n_k + nn) * outc + mm * r_out + ro] =
+                            ws.core[(ri * n_k + nn) * outc + mm * r_out + ro] =
                                 core[((ri * m_k + mm) * n_k + nn) * r_out + ro];
                         }
                     }
                 }
             }
-            let mut out = vec![0.0; rows * outc];
-            gemm(rows, inner, outc, &scratch, &g, &mut out);
-            carry = out; // logical (B, rest2, macc*m_k*r_out)
+            ws.carry.clear();
+            ws.carry.resize(rows * outc, 0.0);
+            gemm(rows, inner, outc, &ws.perm, &ws.core, &mut ws.carry);
+            std::mem::swap(&mut ws.carry, out); // logical (B, rest2, macc*m_k*r_out)
+            first = false;
             rest = rest2;
             macc *= m_k;
             r_cur = r_out;
         }
         debug_assert_eq!(rest, 1);
         debug_assert_eq!(r_cur, 1);
-        carry // (B x M)
+        // out: (B x M)
     }
 }
 
@@ -271,6 +305,48 @@ impl Layer {
         self.act().apply(&mut y);
         y
     }
+
+    /// Allocation-free forward: writes act(x @ W + b) into `out` using the
+    /// caller's scratch. Single-threaded on purpose — on the probe-batched
+    /// ZO path the parallelism lives *across* probes, where the per-layer
+    /// GEMMs are too small to amortize thread spawn. Bitwise-identical to
+    /// [`forward`](Self::forward) at any thread count (the row-split GEMM
+    /// preserves per-row accumulation order).
+    pub fn forward_into(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        batch: usize,
+        out: &mut Vec<f64>,
+        ws: &mut LayerScratch,
+    ) {
+        debug_assert_eq!(params.len(), self.n_params());
+        match self {
+            Layer::Dense(l) => {
+                let a = &params[..l.n_in * l.n_out];
+                let b = &params[l.n_in * l.n_out..];
+                out.clear();
+                out.resize(batch * l.n_out, 0.0);
+                gemm(batch, l.n_in, l.n_out, x, a, out);
+                for row in out.chunks_mut(l.n_out) {
+                    for (v, bv) in row.iter_mut().zip(b) {
+                        *v += bv;
+                    }
+                }
+            }
+            Layer::TT(l) => {
+                let ncore = l.n_core_params();
+                let b = &params[ncore..];
+                l.contract_into(&params[..ncore], x, batch, out, ws);
+                for row in out.chunks_mut(l.n_out()) {
+                    for (v, bv) in row.iter_mut().zip(b) {
+                        *v += bv;
+                    }
+                }
+            }
+        }
+        self.act().apply(out);
+    }
 }
 
 #[cfg(test)]
@@ -327,6 +403,27 @@ mod tests {
                 assert_close(&got, &want, 1e-10)
             },
         );
+    }
+
+    #[test]
+    fn forward_into_matches_forward_for_both_layer_kinds() {
+        let mut rng = Rng::new(4);
+        let layers = [
+            Layer::dense(6, 9, Act::Tanh),
+            Layer::TT(TTLayer::new(vec![2, 3], vec![3, 2], vec![1, 2, 1], Act::Sine)),
+        ];
+        for l in layers {
+            let mut params = vec![0.0; l.n_params()];
+            rng.fill_normal(&mut params);
+            let batch = 5;
+            let mut x = vec![0.0; batch * l.n_in()];
+            rng.fill_normal(&mut x);
+            let want = l.forward(&params, &x, batch, 2);
+            let mut ws = LayerScratch::default();
+            let mut got = Vec::new();
+            l.forward_into(&params, &x, batch, &mut got, &mut ws);
+            assert_eq!(got, want);
+        }
     }
 
     #[test]

@@ -1,10 +1,20 @@
 //! Model assembly + the flat-parameter interchange contract.
 
 use super::activation::Act;
-use super::layer::{Layer, TTLayer};
+use super::layer::{Layer, LayerScratch, TTLayer};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
+
+/// Reusable buffers for allocation-free model forwards
+/// ([`Model::forward_into`]). The two activation buffers ping-pong
+/// through the layer stack; one instance per worker thread.
+#[derive(Debug, Clone, Default)]
+pub struct FwdScratch {
+    h: Vec<f64>,
+    h2: Vec<f64>,
+    layer: LayerScratch,
+}
 
 /// One entry of the flat parameter layout (mirrors manifest.json).
 #[derive(Debug, Clone, PartialEq)]
@@ -120,6 +130,45 @@ impl Model {
         // (B x 1) -> (B,)
         debug_assert_eq!(h.len(), batch);
         h
+    }
+
+    /// Allocation-free forward into `out`: every intermediate lives in the
+    /// caller's [`FwdScratch`], so repeated evaluations (one per ZO probe)
+    /// stop allocating after warm-up. Single-threaded — the probe-batched
+    /// pipeline parallelizes across probes instead — and bitwise-identical
+    /// to [`forward`](Self::forward) at any thread count.
+    pub fn forward_into(
+        &self,
+        flat: &[f64],
+        x: &[f64],
+        batch: usize,
+        ws: &mut FwdScratch,
+        out: &mut Vec<f64>,
+    ) {
+        assert_eq!(flat.len(), self.n_params(), "param length mismatch");
+        let d = self.d_in();
+        assert_eq!(x.len(), batch * d, "input shape mismatch");
+        let FwdScratch { h, h2, layer: lws } = ws;
+        // input normalization to [-1, 1]
+        h.clear();
+        h.resize(batch * d, 0.0);
+        for i in 0..batch {
+            for k in 0..d {
+                let (lo, hi) = (self.in_lo[k], self.in_hi[k]);
+                h[i * d + k] = (x[i * d + k] - lo) / (hi - lo) * 2.0 - 1.0;
+            }
+        }
+        let mut off = 0;
+        for layer in &self.layers {
+            let p = &flat[off..off + layer.n_params()];
+            off += layer.n_params();
+            layer.forward_into(p, h, batch, h2, lws);
+            std::mem::swap(h, h2);
+        }
+        // (B x 1) -> (B,)
+        debug_assert_eq!(h.len(), batch);
+        out.clear();
+        out.extend_from_slice(h);
     }
 }
 
@@ -290,6 +339,27 @@ mod tests {
         assert_eq!(y.len(), 3);
         for v in y {
             assert!(v.is_finite() && v.abs() < 10.0);
+        }
+    }
+
+    #[test]
+    fn forward_into_matches_forward_bitwise() {
+        for (pde, variant) in [("bs", "tt"), ("bs", "std"), ("hjb20", "tt"), ("burgers", "tt")] {
+            let m = build_model(pde, variant, 2, None).unwrap();
+            let flat = m.init_flat(5);
+            let d = m.d_in();
+            let batch = 17;
+            let mut rng = Rng::new(9);
+            let mut x = vec![0.0; batch * d];
+            rng.fill_uniform(&mut x, 0.1, 0.9);
+            let want = m.forward(&flat, &x, batch, 4);
+            let mut ws = FwdScratch::default();
+            let mut got = Vec::new();
+            // twice through the same scratch: warm-up must not change results
+            for _ in 0..2 {
+                m.forward_into(&flat, &x, batch, &mut ws, &mut got);
+                assert_eq!(got, want, "{pde}/{variant}");
+            }
         }
     }
 

@@ -13,7 +13,7 @@ use super::{Pde, PointSet};
 use crate::quadrature::gauss_hermite;
 use crate::stein::Bundle;
 use crate::util::rng::Rng;
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 pub const NU: f64 = 0.01 / std::f64::consts::PI;
 const GH_N: usize = 96;
@@ -21,8 +21,12 @@ const GH_N: usize = 96;
 /// Probabilists' GH rule reused for the Cole–Hopf integral; any constant
 /// weight normalization cancels in the numerator/denominator ratio, and
 /// the physicists' substitution η = x - sqrt(4νt)·z_phys maps to
-/// z_phys = node/√2.
-static GH: Lazy<(Vec<f64>, Vec<f64>)> = Lazy::new(|| gauss_hermite(GH_N));
+/// z_phys = node/√2. (std `OnceLock` — the crate has zero external deps.)
+static GH: OnceLock<(Vec<f64>, Vec<f64>)> = OnceLock::new();
+
+fn gh() -> &'static (Vec<f64>, Vec<f64>) {
+    GH.get_or_init(|| gauss_hermite(GH_N))
+}
 
 /// Cole–Hopf exact solution.
 pub fn exact_solution(x: f64, t: f64) -> f64 {
@@ -30,7 +34,7 @@ pub fn exact_solution(x: f64, t: f64) -> f64 {
     if t <= 1e-12 {
         return -(PI * x).sin();
     }
-    let (nodes, weights) = (&GH.0, &GH.1);
+    let (nodes, weights) = (&gh().0, &gh().1);
     let s = (4.0 * NU * t).sqrt();
     // log-sum-exp over the shared exponent
     let mut max_e = f64::NEG_INFINITY;

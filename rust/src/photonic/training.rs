@@ -15,7 +15,7 @@
 //!   over the (much smaller) TT-core phase vector.
 
 use super::model::PhotonicModel;
-use crate::engine::{rel_l2_eval, Engine};
+use crate::engine::{rel_l2_eval, Engine, ProbeBatch};
 use crate::optim::{Adam, Optimizer};
 use crate::util::rng::Rng;
 use crate::zo::rge::{Perturbation, RgeConfig, RgeEstimator};
@@ -108,14 +108,18 @@ pub fn train_phase_domain(
         let pts = engine.pde().sample_points(&mut rng);
         match protocol {
             PhaseProtocol::Flops | PhaseProtocol::Ours => {
+                // Plan over phases, realize each phase probe into weight
+                // space, then evaluate the whole weight batch through the
+                // engine's probe-parallel loss_many.
                 let est = rge.as_mut().unwrap();
-                let mut calls = 0u64;
-                est.estimate(&phi, &mut grad, &mut rng, &mut |p| {
-                    calls += 1;
-                    let params = pm.realize(p);
-                    engine.loss(&params, &pts)
-                })?;
-                forwards += calls * fpl;
+                let plan = est.plan(&phi, &mut rng);
+                let mut realized = ProbeBatch::with_capacity(engine.n_params(), plan.n_probes());
+                for p in plan.iter() {
+                    realized.push(&pm.realize(p));
+                }
+                let losses = engine.loss_many(&realized, &pts)?;
+                forwards += realized.n_probes() as u64 * fpl;
+                est.assemble(&losses, &mut grad)?;
                 opt.step(&mut phi, &grad);
             }
             PhaseProtocol::L2ight => {

@@ -13,7 +13,7 @@
 use crate::quadrature::SparseGrid;
 
 /// Derivative bundle at `n` points of dimension `d`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct Bundle {
     pub n: usize,
     pub d: usize,
@@ -82,28 +82,46 @@ impl SteinEstimator {
     /// Assemble the fused evaluation batch `[x; x+σδ; x-σδ]`:
     /// rows 0..n are the centers, then n·J plus-shifts, then n·J minus.
     pub fn build_batch(&self, x: &[f64], n: usize) -> Vec<f64> {
+        let mut big = Vec::new();
+        self.build_batch_into(x, n, &mut big);
+        big
+    }
+
+    /// Allocation-free variant of [`build_batch`](Self::build_batch):
+    /// writes the fused batch into `out` (cleared first; the capacity is
+    /// reused across calls on the probe-batched hot path).
+    pub fn build_batch_into(&self, x: &[f64], n: usize, out: &mut Vec<f64>) {
         let d = self.dim;
         debug_assert_eq!(x.len(), n * d);
         let j = self.n_nodes();
-        let mut big = Vec::with_capacity((n + 2 * n * j) * d);
-        big.extend_from_slice(x);
+        out.clear();
+        out.reserve((n + 2 * n * j) * d);
+        out.extend_from_slice(x);
         for sign in [1.0f64, -1.0] {
             for i in 0..n {
                 let xi = &x[i * d..(i + 1) * d];
                 for jj in 0..j {
                     let node = &self.nodes[jj * d..(jj + 1) * d];
                     for k in 0..d {
-                        big.push(xi[k] + sign * self.sigma * node[k]);
+                        out.push(xi[k] + sign * self.sigma * node[k]);
                     }
                 }
             }
         }
-        big
     }
 
     /// Contract forward values over the fused batch into the bundle.
     /// `vals` has length n·(2J+1) in the order produced by [`build_batch`].
     pub fn contract(&self, vals: &[f64], n: usize) -> Bundle {
+        let mut out = Bundle::default();
+        self.contract_into(vals, n, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`contract`](Self::contract): the bundle's
+    /// vectors are resized in place so a per-worker bundle can be reused
+    /// across probes.
+    pub fn contract_into(&self, vals: &[f64], n: usize, out: &mut Bundle) {
         let d = self.dim;
         let j = self.n_nodes();
         assert_eq!(vals.len(), n * (2 * j + 1));
@@ -111,9 +129,14 @@ impl SteinEstimator {
         let gp = &vals[n..n + n * j];
         let gm = &vals[n + n * j..];
 
-        let mut value = vec![0.0; n];
-        let mut grad = vec![0.0; n * d];
-        let mut diag = vec![0.0; n * d];
+        out.n = n;
+        out.d = d;
+        out.value.clear();
+        out.value.resize(n, 0.0);
+        out.grad.clear();
+        out.grad.resize(n * d, 0.0);
+        out.diag_hess.clear();
+        out.diag_hess.resize(n * d, 0.0);
         for i in 0..n {
             let gpi = &gp[i * j..(i + 1) * j];
             let gmi = &gm[i * j..(i + 1) * j];
@@ -125,16 +148,15 @@ impl SteinEstimator {
                 let even = sum - 2.0 * g0[i];
                 let gw = &self.grad_w[jj * d..(jj + 1) * d];
                 let hw = &self.hess_w[jj * d..(jj + 1) * d];
-                let gr = &mut grad[i * d..(i + 1) * d];
-                let dh = &mut diag[i * d..(i + 1) * d];
+                let gr = &mut out.grad[i * d..(i + 1) * d];
+                let dh = &mut out.diag_hess[i * d..(i + 1) * d];
                 for k in 0..d {
                     gr[k] += gw[k] * dif;
                     dh[k] += hw[k] * even;
                 }
             }
-            value[i] = u;
+            out.value[i] = u;
         }
-        Bundle { n, d, value, grad, diag_hess: diag }
     }
 
     /// One-shot helper: estimate the bundle through a batched oracle
@@ -143,11 +165,34 @@ impl SteinEstimator {
     where
         F: FnOnce(&[f64], usize) -> Vec<f64>,
     {
-        let big = self.build_batch(x, n);
+        let mut batch = Vec::new();
+        let mut vals = Vec::new();
+        let mut out = Bundle::default();
+        self.bundle_with(|p, m, dst| *dst = f(p, m), x, n, &mut batch, &mut vals, &mut out);
+        out
+    }
+
+    /// Workspace-backed bundle estimation: the fused batch, the forward
+    /// values, and the output bundle all live in caller-owned buffers, so
+    /// the probe-batched loss path performs no per-probe allocation after
+    /// warm-up. The oracle writes the forward values into its `out`
+    /// argument (cleared by the oracle).
+    pub fn bundle_with<F>(
+        &self,
+        f: F,
+        x: &[f64],
+        n: usize,
+        batch: &mut Vec<f64>,
+        vals: &mut Vec<f64>,
+        out: &mut Bundle,
+    ) where
+        F: FnOnce(&[f64], usize, &mut Vec<f64>),
+    {
+        self.build_batch_into(x, n, batch);
         let total = n * self.queries_per_point();
-        let vals = f(&big, total);
+        f(batch, total, vals);
         assert_eq!(vals.len(), total, "oracle returned wrong count");
-        self.contract(&vals, n)
+        self.contract_into(vals, n, out);
     }
 }
 

@@ -6,6 +6,10 @@
 //! property the paper relies on when it reports mean +- std over three
 //! seeds.
 
+/// Stream-derivation multiplier shared by [`Rng::fork`] and the ZO
+/// estimators' counter-derived per-probe streams (`zo::rge`).
+pub const STREAM_MUL: u64 = 0xA24B_AED4_963E_E407;
+
 /// xoshiro256++ PRNG seeded via SplitMix64.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -32,7 +36,7 @@ impl Rng {
 
     /// Derive an independent child stream (for per-thread / per-epoch use).
     pub fn fork(&mut self, stream: u64) -> Rng {
-        Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(STREAM_MUL))
     }
 
     #[inline]

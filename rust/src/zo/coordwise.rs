@@ -4,35 +4,49 @@
 //! Central finite differences per coordinate over a (possibly random)
 //! coordinate subset: deterministic, low-variance, but 2·|S| loss queries
 //! per step — the paper reports ~200x more forwards than RGE to converge.
+//!
+//! Probes are issued through the batched `Engine::loss_many` contract in
+//! chunks of [`CoordwiseEstimator::max_pairs_per_batch`] pairs, which
+//! bounds plan memory on full-sweep runs (a full sweep over a standard
+//! MLP would otherwise materialize a 2d x d probe matrix).
 
+use crate::engine::ProbeBatch;
 use crate::util::rng::Rng;
-use crate::Result;
+use crate::{err, Result};
 
 pub struct CoordwiseEstimator {
     pub mu: f64,
     /// Coordinates updated per step (None = all).
     pub coords_per_step: Option<usize>,
-    theta: Vec<f64>,
+    /// Probe pairs per `loss_many` call (memory bound for full sweeps).
+    pub max_pairs_per_batch: usize,
     pub loss_evals: u64,
 }
 
 impl CoordwiseEstimator {
     pub fn new(mu: f64, dim: usize, coords_per_step: Option<usize>) -> CoordwiseEstimator {
-        CoordwiseEstimator { mu, coords_per_step, theta: vec![0.0; dim], loss_evals: 0 }
+        CoordwiseEstimator {
+            mu,
+            coords_per_step,
+            max_pairs_per_batch: 128.min(dim.max(1)),
+            loss_evals: 0,
+        }
     }
 
     /// Estimate the gradient on the chosen coordinate subset (zeros
-    /// elsewhere — pairs with a sparse optimizer step).
+    /// elsewhere — pairs with a sparse optimizer step). Coordinates are
+    /// drawn from `rng` up front; the probe batches themselves are
+    /// deterministic, so results do not depend on how the engine
+    /// parallelizes `loss_many`.
     pub fn estimate(
         &mut self,
         params: &[f64],
         grad: &mut [f64],
         rng: &mut Rng,
-        loss: &mut dyn FnMut(&[f64]) -> Result<f64>,
+        loss_many: &mut dyn FnMut(&ProbeBatch) -> Result<Vec<f64>>,
     ) -> Result<()> {
         let d = params.len();
         grad.fill(0.0);
-        self.theta.copy_from_slice(params);
         let coords: Vec<usize> = match self.coords_per_step {
             None => (0..d).collect(),
             Some(k) => {
@@ -42,15 +56,27 @@ impl CoordwiseEstimator {
                 idx
             }
         };
-        for &i in &coords {
-            let orig = self.theta[i];
-            self.theta[i] = orig + self.mu;
-            let lp = loss(&self.theta)?;
-            self.theta[i] = orig - self.mu;
-            let lm = loss(&self.theta)?;
-            self.theta[i] = orig;
-            self.loss_evals += 2;
-            grad[i] = (lp - lm) / (2.0 * self.mu);
+        let mut batch = ProbeBatch::new(d);
+        for chunk in coords.chunks(self.max_pairs_per_batch.max(1)) {
+            batch.clear();
+            for &i in chunk {
+                for sign in [1.0f64, -1.0] {
+                    let row = batch.push_perturbed(params);
+                    row[i] = params[i] + sign * self.mu;
+                }
+            }
+            let losses = loss_many(&batch)?;
+            if losses.len() != 2 * chunk.len() {
+                return Err(err(format!(
+                    "coordwise: batch has {} probes, got {} losses",
+                    2 * chunk.len(),
+                    losses.len()
+                )));
+            }
+            for (j, &i) in chunk.iter().enumerate() {
+                grad[i] = (losses[2 * j] - losses[2 * j + 1]) / (2.0 * self.mu);
+                self.loss_evals += 2;
+            }
         }
         Ok(())
     }
@@ -64,15 +90,21 @@ impl CoordwiseEstimator {
 mod tests {
     use super::*;
 
+    fn batched(
+        f: impl Fn(&[f64]) -> f64,
+    ) -> impl FnMut(&ProbeBatch) -> Result<Vec<f64>> {
+        move |pb| Ok(pb.iter().map(&f).collect())
+    }
+
     #[test]
     fn full_coordinate_sweep_is_exact_for_quadratic() {
         let params = vec![1.0, -2.0, 0.5];
         let mut grad = vec![0.0; 3];
         let mut est = CoordwiseEstimator::new(1e-5, 3, None);
         let mut rng = Rng::new(0);
-        est.estimate(&params, &mut grad, &mut rng, &mut |p| {
-            Ok(p.iter().map(|x| x * x).sum())
-        })
+        est.estimate(&params, &mut grad, &mut rng, &mut batched(|p| {
+            p.iter().map(|x| x * x).sum()
+        }))
         .unwrap();
         for (g, p) in grad.iter().zip(&params) {
             assert!((g - 2.0 * p).abs() < 1e-8, "{g} vs {}", 2.0 * p);
@@ -86,12 +118,29 @@ mod tests {
         let mut grad = vec![0.0; 10];
         let mut est = CoordwiseEstimator::new(1e-5, 10, Some(3));
         let mut rng = Rng::new(1);
-        est.estimate(&params, &mut grad, &mut rng, &mut |p| {
-            Ok(p.iter().map(|x| x * x).sum())
-        })
+        est.estimate(&params, &mut grad, &mut rng, &mut batched(|p| {
+            p.iter().map(|x| x * x).sum()
+        }))
         .unwrap();
         let touched = grad.iter().filter(|g| g.abs() > 1e-9).count();
         assert_eq!(touched, 3);
         assert_eq!(est.queries_per_step(10), 6);
+    }
+
+    #[test]
+    fn chunked_batches_match_one_shot() {
+        // The chunked probe stream must produce the same gradient as a
+        // single giant batch.
+        let f = |p: &[f64]| p.iter().enumerate().map(|(i, x)| (i + 1) as f64 * x * x).sum::<f64>();
+        let params: Vec<f64> = (0..9).map(|i| 0.1 * i as f64 - 0.4).collect();
+        let run = |max_pairs: usize| {
+            let mut est = CoordwiseEstimator::new(1e-6, 9, None);
+            est.max_pairs_per_batch = max_pairs;
+            let mut grad = vec![0.0; 9];
+            let mut rng = Rng::new(3);
+            est.estimate(&params, &mut grad, &mut rng, &mut batched(f)).unwrap();
+            grad
+        };
+        assert_eq!(run(2), run(64));
     }
 }

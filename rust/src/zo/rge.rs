@@ -5,10 +5,19 @@
 //! mode perturbs one parameter block at a time, which reduces the
 //! dimension factor of the variance from d to max_k d_k at the cost of
 //! 2·N·K loss queries per step (the paper uses N = 1, tensor-wise).
+//!
+//! The estimator is probe-batched: [`RgeEstimator::plan`] generates the
+//! whole per-step probe plan (all ±μξ block perturbations) as one
+//! [`ProbeBatch`], the engine evaluates it through `Engine::loss_many`,
+//! and [`RgeEstimator::assemble`] contracts the returned losses into the
+//! gradient. Each probe pair draws its ξ from a counter-derived RNG
+//! stream, so the plan — and therefore the whole training trajectory —
+//! is bitwise-identical at any probe-thread count.
 
+use crate::engine::ProbeBatch;
 use crate::net::ParamEntry;
-use crate::util::rng::Rng;
-use crate::Result;
+use crate::util::rng::{Rng, STREAM_MUL};
+use crate::{err, Result};
 
 /// Perturbation distribution (zero mean, unit variance).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,8 +49,10 @@ pub struct RgeEstimator {
     pub cfg: RgeConfig,
     /// Parameter blocks for tensor-wise mode (from the model layout).
     blocks: Vec<(usize, usize)>, // (offset, len)
+    /// Per-pair ξ values of the current plan, one contiguous run per pair.
     xi: Vec<f64>,
-    theta: Vec<f64>,
+    /// Per-pair (block offset, block len, offset into `xi`).
+    pairs: Vec<(usize, usize, usize)>,
     /// loss evaluations performed so far (efficiency metric, Fig. 3)
     pub loss_evals: u64,
 }
@@ -53,51 +64,83 @@ impl RgeEstimator {
         } else {
             vec![(0, dim)]
         };
-        RgeEstimator { cfg, blocks, xi: vec![0.0; dim], theta: vec![0.0; dim], loss_evals: 0 }
+        RgeEstimator { cfg, blocks, xi: Vec::new(), pairs: Vec::new(), loss_evals: 0 }
     }
 
-    fn fill(&mut self, rng: &mut Rng, lo: usize, len: usize) {
-        match self.cfg.dist {
-            Perturbation::Rademacher => rng.fill_rademacher(&mut self.xi[lo..lo + len]),
-            Perturbation::Gaussian => rng.fill_normal(&mut self.xi[lo..lo + len]),
+    /// Generate the full per-step probe plan: for each of the N queries
+    /// and each parameter block, a (θ+μξ, θ−μξ) probe pair in row order.
+    /// The main `rng` advances by exactly one draw per call (the step
+    /// seed); each pair then fills its ξ from its own counter-derived
+    /// stream, so the plan does not depend on evaluation order.
+    pub fn plan(&mut self, params: &[f64], rng: &mut Rng) -> ProbeBatch {
+        let d = params.len();
+        let mu = self.cfg.mu;
+        let n = self.cfg.n_queries.max(1);
+        let mut batch = ProbeBatch::with_capacity(d, 2 * n * self.blocks.len());
+        self.pairs.clear();
+        self.xi.clear();
+        let step_seed = rng.next_u64();
+        let mut pair_idx: u64 = 0;
+        for _ in 0..n {
+            for &(off, len) in &self.blocks {
+                let mut prng = Rng::new(step_seed ^ (pair_idx + 1).wrapping_mul(STREAM_MUL));
+                let xi_off = self.xi.len();
+                self.xi.resize(xi_off + len, 0.0);
+                match self.cfg.dist {
+                    Perturbation::Rademacher => prng.fill_rademacher(&mut self.xi[xi_off..]),
+                    Perturbation::Gaussian => prng.fill_normal(&mut self.xi[xi_off..]),
+                }
+                self.pairs.push((off, len, xi_off));
+                for sign in [1.0f64, -1.0] {
+                    let row = batch.push_perturbed(params);
+                    for k in 0..len {
+                        row[off + k] = params[off + k] + sign * mu * self.xi[xi_off + k];
+                    }
+                }
+                pair_idx += 1;
+            }
         }
+        batch
     }
 
-    /// Estimate the gradient at `params` through a loss oracle.
-    /// Central two-point RGE: ĝ = Σ_i (L(θ+μξ_i) − L(θ−μξ_i)) ξ_i / (2 N μ).
+    /// Contract the losses of the current plan (in probe row order) into
+    /// the central two-point RGE gradient:
+    /// ĝ = Σ_i (L(θ+μξ_i) − L(θ−μξ_i)) ξ_i / (2 N μ).
+    pub fn assemble(&mut self, losses: &[f64], grad: &mut [f64]) -> Result<()> {
+        if losses.len() != 2 * self.pairs.len() {
+            return Err(err(format!(
+                "rge: plan has {} probes, got {} losses",
+                2 * self.pairs.len(),
+                losses.len()
+            )));
+        }
+        grad.fill(0.0);
+        let mu = self.cfg.mu;
+        let n = self.cfg.n_queries.max(1);
+        for (j, &(off, len, xi_off)) in self.pairs.iter().enumerate() {
+            let (lp, lm) = (losses[2 * j], losses[2 * j + 1]);
+            let scale = (lp - lm) / (2.0 * n as f64 * mu);
+            for k in 0..len {
+                grad[off + k] += scale * self.xi[xi_off + k];
+            }
+            self.loss_evals += 2;
+        }
+        Ok(())
+    }
+
+    /// Estimate the gradient at `params` through a probe-batched loss
+    /// oracle: plan, evaluate, assemble.
     pub fn estimate(
         &mut self,
         params: &[f64],
         grad: &mut [f64],
         rng: &mut Rng,
-        loss: &mut dyn FnMut(&[f64]) -> Result<f64>,
+        loss_many: &mut dyn FnMut(&ProbeBatch) -> Result<Vec<f64>>,
     ) -> Result<()> {
-        let d = params.len();
-        assert_eq!(grad.len(), d);
-        grad.fill(0.0);
-        let mu = self.cfg.mu;
-        let n = self.cfg.n_queries.max(1);
-        let blocks = self.blocks.clone();
-        for _ in 0..n {
-            for &(off, len) in &blocks {
-                self.fill(rng, off, len);
-                self.theta.copy_from_slice(params);
-                for k in off..off + len {
-                    self.theta[k] = params[k] + mu * self.xi[k];
-                }
-                let lp = loss(&self.theta)?;
-                for k in off..off + len {
-                    self.theta[k] = params[k] - mu * self.xi[k];
-                }
-                let lm = loss(&self.theta)?;
-                self.loss_evals += 2;
-                let scale = (lp - lm) / (2.0 * n as f64 * mu);
-                for k in off..off + len {
-                    grad[k] += scale * self.xi[k];
-                }
-            }
-        }
-        Ok(())
+        assert_eq!(grad.len(), params.len());
+        let batch = self.plan(params, rng);
+        let losses = loss_many(&batch)?;
+        self.assemble(&losses, grad)
     }
 
     /// Loss queries per estimate() call.
@@ -114,6 +157,13 @@ mod tests {
         p.iter().enumerate().map(|(i, x)| (i + 1) as f64 * x * x).sum()
     }
 
+    /// Batched oracle over a scalar test function.
+    fn batched(
+        f: impl Fn(&[f64]) -> f64,
+    ) -> impl FnMut(&ProbeBatch) -> Result<Vec<f64>> {
+        move |pb| Ok(pb.iter().map(&f).collect())
+    }
+
     #[test]
     fn rge_points_downhill_on_quadratic() {
         let d = 16;
@@ -122,7 +172,7 @@ mod tests {
         let cfg = RgeConfig { n_queries: 64, mu: 1e-4, dist: Perturbation::Rademacher, tensor_wise: false };
         let mut est = RgeEstimator::new(cfg, d, &[]);
         let mut rng = Rng::new(0);
-        est.estimate(&params, &mut grad, &mut rng, &mut |p| Ok(quad_loss(p))).unwrap();
+        est.estimate(&params, &mut grad, &mut rng, &mut batched(quad_loss)).unwrap();
         // cosine similarity with the true gradient should be high
         let true_g: Vec<f64> = params.iter().enumerate().map(|(i, x)| 2.0 * (i + 1) as f64 * x).collect();
         let dot: f64 = grad.iter().zip(&true_g).map(|(a, b)| a * b).sum();
@@ -154,7 +204,7 @@ mod tests {
             let mut est = RgeEstimator::new(cfg, d, &layout);
             let mut rng = Rng::new(seed);
             let mut g = vec![0.0; d];
-            est.estimate(&params, &mut g, &mut rng, &mut |p| Ok(quad_loss(p))).unwrap();
+            est.estimate(&params, &mut g, &mut rng, &mut batched(quad_loss)).unwrap();
             g.iter().zip(&true_g).map(|(a, b)| (a - b) * (a - b)).sum::<f64>()
         };
         let mut err_tw = 0.0;
@@ -177,7 +227,7 @@ mod tests {
         let params = vec![0.0; 12];
         let mut g = vec![0.0; 12];
         let mut rng = Rng::new(1);
-        est.estimate(&params, &mut g, &mut rng, &mut |p| Ok(quad_loss(p))).unwrap();
+        est.estimate(&params, &mut g, &mut rng, &mut batched(quad_loss)).unwrap();
         assert_eq!(est.loss_evals, 12);
     }
 
@@ -191,14 +241,40 @@ mod tests {
         let mut g = vec![0.0; 8];
         let mut rng = Rng::new(2);
         let mut seen = Vec::new();
-        est.estimate(&params, &mut g, &mut rng, &mut |p| {
-            seen.push(p.to_vec());
-            Ok(0.0)
+        est.estimate(&params, &mut g, &mut rng, &mut |pb| {
+            for probe in pb.iter() {
+                seen.push(probe.to_vec());
+            }
+            Ok(vec![0.0; pb.n_probes()])
         })
         .unwrap();
+        assert!(!seen.is_empty());
         for probe in seen {
             for (p, orig) in probe.iter().zip(&params) {
                 assert!(((p - orig).abs() - 0.01).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_probe_count_matches() {
+        let layout: Vec<crate::net::ParamEntry> = (0..3)
+            .map(|b| crate::net::ParamEntry { name: format!("b{b}"), shape: vec![4], offset: b * 4, len: 4 })
+            .collect();
+        let cfg = RgeConfig { n_queries: 2, mu: 0.01, dist: Perturbation::Rademacher, tensor_wise: true };
+        let params: Vec<f64> = (0..12).map(|i| i as f64 * 0.25).collect();
+        let mut a = RgeEstimator::new(cfg.clone(), 12, &layout);
+        let mut b = RgeEstimator::new(cfg, 12, &layout);
+        let pa = a.plan(&params, &mut Rng::new(7));
+        let pb = b.plan(&params, &mut Rng::new(7));
+        assert_eq!(pa.n_probes(), a.queries_per_step());
+        assert_eq!(pa.as_flat(), pb.as_flat(), "same seed must give the same plan");
+        // probe pairs are mirrored around the base point
+        for j in 0..pa.n_probes() / 2 {
+            let (p, m) = (pa.probe(2 * j), pa.probe(2 * j + 1));
+            for (k, base) in params.iter().enumerate() {
+                let mid = 0.5 * (p[k] + m[k]);
+                assert!((mid - base).abs() < 1e-12, "pair {j} coord {k}");
             }
         }
     }

@@ -110,23 +110,22 @@ pub fn train(engine: &mut dyn Engine, params: &mut [f64], cfg: &TrainConfig) -> 
                 }
             }
             TrainMethod::ZoRge(_) => {
+                // Probe-batched step: generate the whole plan, evaluate it
+                // through the engine's parallel loss_many, assemble.
                 let est = rge.as_mut().unwrap();
-                let mut calls = 0u64;
-                est.estimate(params, &mut grad, &mut rng, &mut |p| {
-                    calls += 1;
-                    engine.loss(p, &pts)
-                })?;
-                forwards += calls * fpl;
+                let plan = est.plan(params, &mut rng);
+                let losses = engine.loss_many(&plan, &pts)?;
+                forwards += plan.n_probes() as u64 * fpl;
+                est.assemble(&losses, &mut grad)?;
                 opt.step(params, &grad);
             }
             TrainMethod::ZoCoordwise { .. } => {
                 let est = cw.as_mut().unwrap();
-                let mut calls = 0u64;
-                est.estimate(params, &mut grad, &mut rng, &mut |p| {
-                    calls += 1;
-                    engine.loss(p, &pts)
+                let evals0 = est.loss_evals;
+                est.estimate(params, &mut grad, &mut rng, &mut |pb| {
+                    engine.loss_many(pb, &pts)
                 })?;
-                forwards += calls * fpl;
+                forwards += (est.loss_evals - evals0) * fpl;
                 opt.step(params, &grad);
             }
         }

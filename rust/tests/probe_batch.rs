@@ -1,0 +1,74 @@
+//! Determinism contract of the probe-batched ZO evaluation pipeline:
+//! `Engine::loss_many` must be bitwise-identical to the sequential
+//! `Engine::loss` path at any probe-thread count, and whole training
+//! trajectories must not depend on `probe_threads`. Native-engine based,
+//! so these run without artifacts.
+
+use optical_pinn::engine::{Engine, NativeEngine, ProbeBatch};
+use optical_pinn::pde::ALL_PDES;
+use optical_pinn::util::rng::Rng;
+use optical_pinn::zo::{train, TrainConfig};
+
+/// A small deterministic probe batch around the init point.
+fn make_probes(params: &[f64], n_probes: usize) -> ProbeBatch {
+    let mut probes = ProbeBatch::with_capacity(params.len(), n_probes);
+    let mut rng = Rng::new(0xbeef);
+    for _ in 0..n_probes {
+        let row = probes.push_perturbed(params);
+        let i = rng.below(params.len());
+        row[i] += rng.uniform_in(-0.01, 0.01);
+    }
+    probes
+}
+
+#[test]
+fn loss_many_bitwise_equals_sequential_for_every_pde() {
+    for name in ALL_PDES {
+        let mut eng = NativeEngine::new(name, "tt").unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(7);
+        let pts = eng.pde().sample_points(&mut rng);
+        let probes = make_probes(&params, 4);
+        let want: Vec<f64> = (0..probes.n_probes())
+            .map(|i| eng.loss(probes.probe(i), &pts).unwrap())
+            .collect();
+        assert!(want.iter().all(|l| l.is_finite()), "{name}");
+        for t in [1usize, 2, 8] {
+            eng.set_probe_threads(t);
+            let got = eng.loss_many(&probes, &pts).unwrap();
+            assert_eq!(got, want, "{name}: probe_threads = {t} diverged");
+        }
+    }
+}
+
+#[test]
+fn zo_trajectory_is_independent_of_probe_threads() {
+    let run = |probe_threads: usize| {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        eng.set_probe_threads(probe_threads);
+        let mut params = eng.model.init_flat(0);
+        let mut cfg = TrainConfig::zo(50);
+        cfg.layout = eng.model.param_layout();
+        cfg.eval_every = 10;
+        let hist = train(&mut eng, &mut params, &cfg).unwrap();
+        (params, hist)
+    };
+    let (params1, hist1) = run(1);
+    for t in [2usize, 4] {
+        let (params_t, hist_t) = run(t);
+        assert_eq!(params1, params_t, "final params diverged at {t} threads");
+        assert_eq!(hist1.losses, hist_t.losses, "loss curve diverged at {t} threads");
+        assert_eq!(hist1.errors, hist_t.errors, "error curve diverged at {t} threads");
+        assert_eq!(hist1.total_forwards, hist_t.total_forwards);
+    }
+}
+
+#[test]
+fn empty_batch_is_a_no_op() {
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    let params = eng.model.init_flat(0);
+    let mut rng = Rng::new(0);
+    let pts = eng.pde().sample_points(&mut rng);
+    let probes = ProbeBatch::new(params.len());
+    assert!(eng.loss_many(&probes, &pts).unwrap().is_empty());
+}
