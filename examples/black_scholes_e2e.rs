@@ -18,8 +18,8 @@ use optical_pinn::coordinator::{BatcherConfig, InferenceServer, Metrics};
 use optical_pinn::engine::{rel_l2_eval, Engine, NativeEngine};
 use optical_pinn::experiments::{make_engine, runner::artifacts_dir, Backend, RunSpec};
 use optical_pinn::hw::{Layout, TrainingLatency};
-use optical_pinn::photonic::training::PhaseTrainConfig;
-use optical_pinn::photonic::{train_phase_domain, PhaseProtocol, PhotonicModel, PhotonicVariant};
+use optical_pinn::photonic::{PhaseProtocol, PhaseTrainConfig, PhotonicModel, PhotonicVariant};
+use optical_pinn::session;
 use optical_pinn::util::stats::sci;
 
 fn main() -> optical_pinn::Result<()> {
@@ -64,7 +64,7 @@ fn main() -> optical_pinn::Result<()> {
         ..Default::default()
     };
     let (phi_final, hist) = metrics.time("train", || {
-        train_phase_domain(&mut pm, engine.as_mut(), PhaseProtocol::Ours, &cfg)
+        session::run_phase_domain(&mut pm, engine.as_mut(), PhaseProtocol::Ours, &cfg)
     })?;
     for ((s, e), l) in hist.steps.iter().zip(&hist.errors).zip(&hist.losses) {
         metrics.curve_point(*s, &[("rel_l2", *e), ("loss", *l)]);

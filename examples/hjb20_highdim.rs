@@ -13,9 +13,10 @@ use optical_pinn::engine::rel_l2_eval;
 use optical_pinn::experiments::{make_engine, runner::artifacts_dir, Backend, RunSpec};
 use optical_pinn::net::build_model;
 use optical_pinn::quadrature::smolyak_sparse_grid;
+use optical_pinn::session;
 use optical_pinn::util::rng::Rng;
 use optical_pinn::util::stats::sci;
-use optical_pinn::zo::{train, TrainConfig};
+use optical_pinn::zo::TrainConfig;
 
 fn main() -> optical_pinn::Result<()> {
     let grid = smolyak_sparse_grid(21, 3);
@@ -45,7 +46,7 @@ fn main() -> optical_pinn::Result<()> {
     cfg.layout = tt.param_layout();
     cfg.eval_every = (epochs / 10).max(1);
     cfg.verbose = true;
-    let hist = train(engine.as_mut(), &mut params, &cfg)?;
+    let hist = session::run_weight(engine.as_mut(), &mut params, &cfg)?;
     println!(
         "\nZO TT after {epochs} epochs: rel_l2 = {} (best {})",
         sci(hist.final_error),

@@ -10,9 +10,10 @@
 use optical_pinn::engine::{rel_l2_eval, Engine};
 use optical_pinn::experiments::{make_engine, runner::artifacts_dir, Backend, RunSpec};
 use optical_pinn::net::build_model;
+use optical_pinn::session::SessionBuilder;
 use optical_pinn::util::rng::Rng;
 use optical_pinn::util::stats::sci;
-use optical_pinn::zo::{train, TrainConfig};
+use optical_pinn::zo::{RgeConfig, TrainMethod};
 
 fn main() -> optical_pinn::Result<()> {
     let backend = if artifacts_dir().is_some() {
@@ -34,17 +35,20 @@ fn main() -> optical_pinn::Result<()> {
     println!("initial rel_l2 = {}", sci(e0));
 
     // BP-free: tensor-wise ZO-RGE (N=1, Rademacher) + sparse-grid Stein
-    // loss — zero backprop anywhere in the stack.
-    let mut cfg = TrainConfig::zo(1500);
-    cfg.layout = model.param_layout();
-    cfg.lr = 2e-3;
-    cfg.eval_every = 150;
-    cfg.verbose = true;
-    let hist = train(engine.as_mut(), &mut params, &cfg)?;
+    // loss — zero backprop anywhere in the stack, one unified session
+    // driver for every training domain.
+    let epochs = 1500;
+    let hist = SessionBuilder::new(epochs)
+        .lr(2e-3)
+        .eval_every(150)
+        .verbose(true)
+        .method(TrainMethod::ZoRge(RgeConfig::default()), model.param_layout())
+        .build(engine.as_mut())?
+        .run(&mut params)?;
 
     println!(
         "\nafter {} epochs: rel_l2 = {} (best {}), {} photonic forwards, {:.1}s wall",
-        cfg.epochs,
+        epochs,
         sci(hist.final_error),
         sci(hist.best_error()),
         hist.total_forwards,

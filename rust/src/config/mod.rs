@@ -27,6 +27,10 @@ pub struct ExperimentConfig {
     pub artifacts_dir: String,
     pub mu: f64,
     pub n_queries: usize,
+    /// Stop once this many training forward queries have been consumed
+    /// (uniform across weight-, phase- and data-domain sessions;
+    /// eval-time queries are excluded from the budget).
+    pub max_forwards: Option<u64>,
     /// Worker threads for probe-batched ZO loss evaluation
     /// (`Engine::loss_many`); 0 keeps the engine default.
     pub probe_threads: usize,
@@ -50,6 +54,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: std::env::var("OPINN_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
             mu: 0.01,
             n_queries: 1,
+            max_forwards: None,
             probe_threads: 0,
             verbose: false,
         }
@@ -95,6 +100,7 @@ impl ExperimentConfig {
                 "artifacts_dir" => c.artifacts_dir = v.as_str()?.to_string(),
                 "mu" => c.mu = v.as_f64()?,
                 "n_queries" => c.n_queries = v.as_usize()?,
+                "max_forwards" => c.max_forwards = Some(v.as_usize()? as u64),
                 "probe_threads" => c.probe_threads = v.as_usize()?,
                 "verbose" => c.verbose = matches!(v, Json::Bool(true)),
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
@@ -137,6 +143,12 @@ impl ExperimentConfig {
         }
         self.mu = args.get_f64("mu", self.mu)?;
         self.n_queries = args.get_usize("queries", self.n_queries)?;
+        if let Some(s) = args.get("max-forwards") {
+            let v: u64 = s
+                .parse()
+                .map_err(|_| Error::Config(format!("--max-forwards expects an integer, got {s:?}")))?;
+            self.max_forwards = Some(v);
+        }
         self.probe_threads = args.get_usize("probe-threads", self.probe_threads)?;
         if args.flag("verbose") {
             self.verbose = true;
@@ -178,23 +190,36 @@ mod tests {
     #[test]
     fn json_roundtrip_and_overrides() {
         let j = Json::parse(
-            r#"{"pde":"hjb20","variant":"std","train":"fo","epochs":500,"lr":0.002}"#,
+            r#"{"pde":"hjb20","variant":"std","train":"fo","epochs":500,"lr":0.002,"max_forwards":9000}"#,
         )
         .unwrap();
         let mut c = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c.pde, "hjb20");
         assert_eq!(c.epochs, 500);
+        assert_eq!(c.max_forwards, Some(9000));
         // first token is the subcommand (as in `opinn train burgers tt ...`)
         let args = Args::parse(
-            ["train", "burgers", "tt", "--epochs", "99", "--probe-threads", "4", "--verbose"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "train",
+                "burgers",
+                "tt",
+                "--epochs",
+                "99",
+                "--probe-threads",
+                "4",
+                "--max-forwards",
+                "123456",
+                "--verbose",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         );
         c.apply_args(&args).unwrap();
         assert_eq!(c.pde, "burgers");
         assert_eq!(c.variant, "tt");
         assert_eq!(c.epochs, 99);
         assert_eq!(c.probe_threads, 4);
+        assert_eq!(c.max_forwards, Some(123_456));
         assert!(c.verbose);
         c.validate().unwrap();
     }

@@ -80,6 +80,16 @@ impl ProbeBatch {
         self.probe_mut(i)
     }
 
+    /// Append a zero-initialized row and return it mutably, so callers
+    /// can realize a probe directly into batch storage (the session
+    /// driver's allocation-free phase-domain path).
+    pub fn push_zeroed(&mut self) -> &mut [f64] {
+        let len = self.data.len();
+        self.data.resize(len + self.dim, 0.0);
+        let i = self.n_probes() - 1;
+        self.probe_mut(i)
+    }
+
     /// Row `i` as a parameter slice.
     pub fn probe(&self, i: usize) -> &[f64] {
         &self.data[i * self.dim..(i + 1) * self.dim]
@@ -173,9 +183,16 @@ mod tests {
         assert_eq!(pb.probe(1), &[4.0, 5.5, 6.0]);
         assert_eq!(pb.iter().count(), 2);
         assert_eq!(pb.as_flat().len(), 6);
+        let zrow = pb.push_zeroed();
+        assert_eq!(zrow, &[0.0, 0.0, 0.0]);
+        zrow[2] = 9.0;
+        assert_eq!(pb.n_probes(), 3);
+        assert_eq!(pb.probe(2), &[0.0, 0.0, 9.0]);
         pb.clear();
         assert!(pb.is_empty());
         assert_eq!(pb.n_probes(), 0);
+        // reused storage must come back zeroed, not with stale rows
+        assert_eq!(pb.push_zeroed(), &[0.0, 0.0, 0.0]);
     }
 
     #[test]

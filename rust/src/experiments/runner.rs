@@ -3,8 +3,9 @@
 use crate::engine::{Engine, NativeEngine, PjrtEngine};
 use crate::engine::native::NativeOptions;
 use crate::loss::DerivMethod;
-use crate::zo::{train, History, TrainConfig};
 use crate::net::build_model;
+use crate::session;
+use crate::zo::{History, TrainConfig};
 use crate::Result;
 
 /// Which execution backend to use.
@@ -93,7 +94,8 @@ pub fn make_engine(spec: &RunSpec, backend: Backend) -> Result<Box<dyn Engine>> 
     }
 }
 
-/// Train once from a fresh init; returns the history.
+/// Train once from a fresh init through the unified session driver;
+/// returns the history.
 pub fn run_once(spec: &RunSpec, backend: Backend, cfg: &TrainConfig) -> Result<History> {
     let mut engine = make_engine(spec, backend)?;
     let model = build_model(&spec.pde, &spec.variant, spec.rank, spec.width)?;
@@ -102,7 +104,7 @@ pub fn run_once(spec: &RunSpec, backend: Backend, cfg: &TrainConfig) -> Result<H
     if cfg.layout.is_empty() {
         cfg.layout = model.param_layout();
     }
-    train(engine.as_mut(), &mut params, &cfg)
+    session::run_weight(engine.as_mut(), &mut params, &cfg)
 }
 
 /// Mean ± std of final errors across seeds.

@@ -3,10 +3,9 @@
 use crate::bench_harness::{full_scale, n_seeds, record, Table};
 use crate::engine::Engine;
 use crate::hw::{FootprintBreakdown, LatencyBreakdown, Layout, TrainingLatency};
-use crate::photonic::{
-    train_phase_domain, PhaseProtocol, PhotonicModel, PhotonicVariant,
-};
 use crate::photonic::training::PhaseTrainConfig;
+use crate::photonic::{PhaseProtocol, PhotonicModel, PhotonicVariant};
+use crate::session;
 use crate::util::json::Json;
 use crate::util::stats::{sci, sci_pm};
 use crate::zo::rge::RgeConfig;
@@ -163,7 +162,7 @@ pub fn table3(backend: Backend, pdes: &[&str]) -> Result<Table> {
                 eval_every: (epochs / 10).max(1),
                 ..Default::default()
             };
-            let res = train_phase_domain(&mut pm, engine.as_mut(), protocol, &cfg);
+            let res = session::run_phase_domain(&mut pm, engine.as_mut(), protocol, &cfg);
             match res {
                 Ok((_, hist)) => {
                     dump_curves(&format!("fig4_{pde}_{protocol:?}"), &[hist.clone()]);
@@ -391,7 +390,7 @@ pub fn ablation(which: &str, backend: Backend) -> Result<Table> {
             let mut params = model.init_flat(0);
             let mut c = cfg.clone();
             c.layout = model.param_layout();
-            crate::zo::train(engine.as_mut(), &mut params, &c)?;
+            session::run_weight(engine.as_mut(), &mut params, &c)?;
             for n in [100usize, 300, 1000] {
                 let mut pts = Vec::with_capacity(n * n * 2);
                 for i in 0..n {
@@ -466,7 +465,7 @@ fn run_seeds_named(
                 if c.layout.is_empty() {
                     c.layout = model.param_layout();
                 }
-                let h = crate::zo::train(&mut engine, &mut params, &c)?;
+                let h = session::run_weight(&mut engine, &mut params, &c)?;
                 errs.push(h.best_error());
                 hists.push(h);
             }

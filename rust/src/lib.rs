@@ -22,9 +22,16 @@
 //! * [`net`] — dense and tensor-train network forward passes (§3.2);
 //! * [`pde`] — Black–Scholes, 20-d HJB, Burgers, Darcy + reference solvers;
 //! * [`engine`] — `NativeEngine` (pure rust) and `PjrtEngine` (XLA/PJRT);
-//! * [`zo`] / [`optim`] — RGE zeroth-order estimators, ZO/FO trainers, Adam;
+//! * [`zo`] / [`optim`] — RGE zeroth-order estimators, training configs,
+//!   Adam;
+//! * [`session`] — the **unified training driver**: one budget-aware
+//!   session loop (`SessionBuilder` → `Session::run`) behind the
+//!   weight-domain, phase-domain and classifier entry points, composed
+//!   from `ParamSpace` × `GradientSource` × `Observer`;
 //! * [`photonic`] — MZI meshes, non-idealities, TONN cores, on-chip
 //!   training protocols (FLOPS, L²ight, ours);
+//! * [`mnist`] — the App. G classifier workload + its session engine
+//!   adapter;
 //! * [`hw`] — footprint/latency model (Eq. 14–16, Tables 4–6);
 //! * [`coordinator`] — batched inference dispatcher, metrics, checkpoints;
 //! * [`bench_harness`] — the in-tree micro-benchmark runner used by
@@ -53,6 +60,22 @@
 //! Results are bitwise-identical to the sequential path at any thread
 //! count: the plan is fixed before evaluation, every probe's loss is
 //! deterministic, and assembly order never depends on scheduling.
+//!
+//! ## The unified session driver
+//!
+//! All three training entry points — weight-domain ZO/FO
+//! ([`session::run_weight`]), on-chip phase-domain protocols
+//! ([`session::phase_session`]) and the classifier workload
+//! ([`mnist::train_zo`] / [`mnist::train_fo`]) — are one drive loop:
+//! [`session::Session`]. A session composes an [`engine::Engine`] (the
+//! loss oracle), a [`session::ParamSpace`] (identity, or Φ through the
+//! photonic non-ideality pipeline), a [`session::GradientSource`] (FO /
+//! RGE / coordinate-wise / L²ight subspace-FO) and an
+//! [`session::Observer`] (eval scheduling, curve capture, periodic
+//! checkpointing). `max_forwards` budgets are enforced uniformly in every
+//! domain; eval-time queries are excluded from the budget. Trajectories
+//! are pinned bitwise against frozen copies of the pre-session loops in
+//! `rust/tests/session_parity.rs`.
 
 pub mod bench_harness;
 pub mod config;
@@ -68,6 +91,7 @@ pub mod optim;
 pub mod pde;
 pub mod photonic;
 pub mod quadrature;
+pub mod session;
 pub mod stein;
 pub mod util;
 pub mod xla;

@@ -8,11 +8,16 @@
 //!   hw-report    print the pre-silicon footprint/latency model
 //!   info         artifact manifest summary
 //!
+//! All training subcommands drive the unified `session` API: one
+//! budget-aware loop for weight-, phase- and data-domain BP-free runs.
+//!
 //! Examples:
 //!   opinn train bs tt --train zo --epochs 2000 --backend pjrt
-//!   opinn train-phase bs --protocol ours --epochs 500
+//!   opinn train-phase bs --protocol ours --epochs 500 --queries 2
 //!   opinn tables t2
 //!   OPINN_FULL=1 opinn tables t3
+
+use std::path::PathBuf;
 
 use optical_pinn::config::ExperimentConfig;
 use optical_pinn::coordinator::{save_params, Metrics};
@@ -21,13 +26,12 @@ use optical_pinn::experiments::{self, Backend, RunSpec};
 use optical_pinn::hw;
 use optical_pinn::mnist;
 use optical_pinn::net::build_model;
-use optical_pinn::photonic::training::PhaseTrainConfig;
-use optical_pinn::photonic::{train_phase_domain, PhaseProtocol, PhotonicModel, PhotonicVariant};
+use optical_pinn::photonic::{PhaseProtocol, PhaseTrainConfig, PhotonicModel, PhotonicVariant};
+use optical_pinn::session::{self, SessionBuilder};
 use optical_pinn::util::argparse::Args;
-use optical_pinn::util::rng::Rng;
 use optical_pinn::util::stats::sci;
 use optical_pinn::zo::rge::RgeConfig;
-use optical_pinn::zo::{train, TrainConfig, TrainMethod};
+use optical_pinn::zo::TrainMethod;
 use optical_pinn::Result;
 
 fn main() {
@@ -66,13 +70,29 @@ fn run(args: &Args) -> Result<()> {
 
 const HELP: &str = "usage: opinn <train|train-phase|tables|hw-report|info> [options]
   train <pde> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
-        [--lr F] [--seed N] [--backend pjrt|native] [--out ckpt.json]
-        [--probe-threads N]   ZO probe-batch workers (0 = engine default)
-  train-phase <pde> [--protocol ours|flops|l2ight] [--epochs N]
-        [--probe-threads N]
+        [--lr F] [--seed N] [--rank N] [--width N] [--mu F] [--queries N]
+        [--eval-every N] [--max-forwards N] [--backend pjrt|native]
+        [--probe-threads N] [--verbose] [--out ckpt.json] [--ckpt-every N]
+        [--curve curve.csv]
+  train-phase <pde> [--protocol ours|flops|l2ight] [--epochs N] [--lr F]
+        [--seed N] [--mu F] [--queries N] [--eval-every N]
+        [--max-forwards N] [--backend pjrt|native] [--probe-threads N]
+        [--verbose] [--out phases.json]
   tables <t1|t2|t3|t456|fig3|tt_rank|width|grid|mc_samples|sg_level|sigma|mu|queries|mnist>
   hw-report [--epochs N]
-  info";
+  info
+options:
+  --mu F             ZO smoothing radius (default 0.01; train-phase
+                     defaults to the 8-bit phase resolution 2pi/256)
+  --queries N        RGE query count per step (default 1)
+  --max-forwards N   stop once N training forward queries are consumed;
+                     enforced uniformly in every domain (eval-time
+                     loss/rel-l2 queries are excluded from the budget)
+  --probe-threads N  ZO probe-batch workers (0 = engine default)
+  --ckpt-every N     with --out: checkpoint every N epochs, not just at
+                     the end
+  --curve FILE       write the eval curve as CSV (train)
+  --out FILE         save final params (train) / phases (train-phase)";
 
 fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = ExperimentConfig::default();
@@ -105,18 +125,23 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let model = build_model(&cfg.pde, &cfg.variant, cfg.rank, cfg.width)?;
     let mut params = model.init_flat(cfg.seed);
-    let tc = TrainConfig {
-        method,
-        epochs: cfg.epochs,
-        lr: cfg.lr,
-        eval_every: cfg.eval_every,
-        seed: cfg.seed,
-        layout: model.param_layout(),
-        max_forwards: None,
-        verbose: true,
-    };
+    let mut builder = SessionBuilder::new(cfg.epochs)
+        .lr(cfg.lr)
+        .seed(cfg.seed)
+        .eval_every(cfg.eval_every)
+        .max_forwards(cfg.max_forwards)
+        .verbose(true)
+        .method(method, model.param_layout());
+    let ckpt_every = args.get_usize("ckpt-every", 0)?;
+    if ckpt_every > 0 {
+        let out = args.get("out").ok_or_else(|| {
+            optical_pinn::err("--ckpt-every requires --out <ckpt.json>")
+        })?;
+        builder = builder.checkpoint_every(PathBuf::from(out), ckpt_every, model.name.clone());
+    }
+    let session = builder.build(engine.as_mut())?;
     let mut metrics = Metrics::new();
-    let hist = metrics.time("train", || train(engine.as_mut(), &mut params, &tc))?;
+    let hist = metrics.time("train", || session.run(&mut params))?;
     for ((s, e), l) in hist.steps.iter().zip(&hist.errors).zip(&hist.losses) {
         metrics.curve_point(*s, &[("rel_l2", *e), ("loss", *l)]);
     }
@@ -162,15 +187,25 @@ fn cmd_train_phase(args: &Args) -> Result<()> {
         pm.n_mzis(),
         pm.n_trainable()
     );
-    let pc = PhaseTrainConfig {
+    let mut pc = PhaseTrainConfig {
         epochs: cfg.epochs,
         lr: cfg.lr,
         eval_every: cfg.eval_every,
         seed: cfg.seed,
+        max_forwards: cfg.max_forwards,
         verbose: true,
         ..Default::default()
     };
-    let (phi, hist) = train_phase_domain(&mut pm, engine.as_mut(), protocol, &pc)?;
+    // --mu / --queries override the protocol defaults only when given
+    // explicitly (the phase-domain default mu is the 2pi/256 control
+    // resolution, not the weight-domain 0.01).
+    if args.get("mu").is_some() {
+        pc.mu = cfg.mu;
+    }
+    if args.get("queries").is_some() {
+        pc.n_queries = cfg.n_queries;
+    }
+    let (phi, hist) = session::run_phase_domain(&mut pm, engine.as_mut(), protocol, &pc)?;
     println!(
         "final rel_l2 = {} (best {})  forwards = {}",
         sci(hist.final_error),
@@ -228,19 +263,11 @@ fn cmd_mnist() -> Result<()> {
         "Table 23 — MNIST-like validation accuracy (weight domain)",
         &["Method", "Params", "Val. accuracy (%)"],
     );
-    // FO std via manual backprop
+    // FO std via manual backprop, through the session driver
     {
         let model = mnist::build_classifier("std")?;
         let mut flat = model.init_flat(0);
-        let mut rng = Rng::new(0);
-        let mut opt = optical_pinn::optim::Adam::new(flat.len(), 1e-3);
-        use optical_pinn::optim::Optimizer;
-        for _ in 0..epochs {
-            let idx: Vec<usize> = (0..128).map(|_| rng.below(train_set.len())).collect();
-            let (x, y) = train_set.batch(&idx);
-            let (_, g) = mnist::fo_loss_grad(&model, &flat, &x, &y, threads)?;
-            opt.step(&mut flat, &g);
-        }
+        mnist::train_fo(&model, &mut flat, &train_set, epochs, 128, 0, threads)?;
         let acc = mnist::accuracy(&model, &flat, &test_set, threads);
         t.row(vec![
             "Standard, FO".into(),

@@ -8,10 +8,16 @@
 //! fold (7,4,4,7)x(8,4,4,8) / rank (1,6,6,6,1) with 3,962 parameters, ZO
 //! vs FO training, and the photonic phase-domain mapping.
 
+use crate::engine::Engine;
 use crate::net::{Act, Layer, Model, TTLayer};
-use crate::optim::{Adam, Optimizer};
+use crate::pde::{Pde, PointSet};
+use crate::session::{
+    FoSource, NullObserver, Observer, RgeSource, SessionBuilder, StepCtx,
+};
+use crate::stein::Bundle;
 use crate::util::rng::Rng;
 use crate::zo::rge::{RgeConfig, RgeEstimator};
+use crate::zo::trainer::History;
 use crate::Result;
 
 pub const IMG: usize = 28 * 28;
@@ -258,7 +264,148 @@ pub fn fo_loss_grad(
     Ok((loss, grad))
 }
 
-/// ZO training (Table 23 setup: N = 10, mu = 0.01, batch 200 scaled).
+/// Minimal [`Pde`] stand-in for the classification workload. The session
+/// driver "samples collocation points" each epoch; for the classifier the
+/// actual minibatch is drawn in [`Engine::resample`] and the point set is
+/// empty — crucially, `sample_points` consumes no RNG draws, so
+/// trajectories stay bitwise-identical to the legacy loop.
+struct ClassifierPde;
+
+impl Pde for ClassifierPde {
+    fn name(&self) -> &'static str {
+        "mnist"
+    }
+    fn d_in(&self) -> usize {
+        IMG
+    }
+    fn sigma_stein(&self) -> f64 {
+        0.0
+    }
+    fn point_inputs(&self) -> Vec<(&'static str, usize)> {
+        Vec::new()
+    }
+    fn sample_points(&self, _rng: &mut Rng) -> PointSet {
+        PointSet { blocks: Vec::new() }
+    }
+    fn transform(&self, _x: &[f64], f: &[f64]) -> Vec<f64> {
+        f.to_vec()
+    }
+    fn compose(&self, _x: &[f64], f: &Bundle) -> Bundle {
+        f.clone()
+    }
+    fn residual(&self, _x: &[f64], _u: &Bundle) -> Vec<f64> {
+        Vec::new()
+    }
+    fn data_loss(
+        &self,
+        _pts: &PointSet,
+        _u_of: &mut dyn FnMut(&[f64], usize) -> Vec<f64>,
+    ) -> f64 {
+        0.0
+    }
+    fn exact(&self, _x: &[f64], n: usize) -> Vec<f64> {
+        vec![0.0; n]
+    }
+    fn eval_points(&self, _rng: &mut Rng) -> Vec<f64> {
+        Vec::new()
+    }
+}
+
+/// [`Engine`] adapter for the App. G classifier: the "loss" is the mean
+/// cross-entropy of the current minibatch, which is redrawn on every
+/// [`Engine::resample`] call. This is what lets the MNIST workload run
+/// through the same [`crate::session::Session`] driver as the PINN
+/// domains (including ZO probe batching and `max_forwards` budgets, with
+/// one budget unit per minibatch loss query).
+pub struct ClassifierEngine<'d> {
+    pub model: &'d Model,
+    data: &'d MnistLike,
+    batch: usize,
+    threads: usize,
+    pde: ClassifierPde,
+    x: Vec<f64>,
+    y: Vec<usize>,
+}
+
+impl<'d> ClassifierEngine<'d> {
+    pub fn new(
+        model: &'d Model,
+        data: &'d MnistLike,
+        batch: usize,
+        threads: usize,
+    ) -> ClassifierEngine<'d> {
+        ClassifierEngine {
+            model,
+            data,
+            batch,
+            threads,
+            pde: ClassifierPde,
+            x: Vec::new(),
+            y: Vec::new(),
+        }
+    }
+}
+
+impl Engine for ClassifierEngine<'_> {
+    fn pde(&self) -> &dyn Pde {
+        &self.pde
+    }
+
+    fn n_params(&self) -> usize {
+        self.model.n_params()
+    }
+
+    fn loss(&mut self, params: &[f64], _pts: &PointSet) -> Result<f64> {
+        Ok(cross_entropy(
+            &logits(self.model, params, &self.x, self.batch, self.threads),
+            &self.y,
+        ))
+    }
+
+    fn loss_grad(&mut self, params: &[f64], _pts: &PointSet) -> Result<(f64, Vec<f64>)> {
+        fo_loss_grad(self.model, params, &self.x, &self.y, self.threads)
+    }
+
+    fn forward_u(&mut self, params: &[f64], x: &[f64], n: usize) -> Result<Vec<f64>> {
+        Ok(logits(self.model, params, x, n, self.threads))
+    }
+
+    fn forwards_per_loss(&self) -> usize {
+        1
+    }
+
+    fn resample(&mut self, rng: &mut Rng) {
+        let idx: Vec<usize> = (0..self.batch).map(|_| rng.below(self.data.len())).collect();
+        let (x, y) = self.data.batch(&idx);
+        self.x = x;
+        self.y = y;
+    }
+
+    fn backend(&self) -> &'static str {
+        "classifier"
+    }
+}
+
+/// Records the post-step training cross-entropy on the current minibatch
+/// every `every` epochs (the legacy `train_zo` curve semantics).
+pub struct CurveObserver {
+    pub every: usize,
+}
+
+impl Observer for CurveObserver {
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, hist: &mut History) -> Result<()> {
+        if ctx.info.epoch % self.every == 0 {
+            let loss = ctx.engine.loss(ctx.params, ctx.pts)?;
+            hist.steps.push(ctx.info.epoch);
+            hist.losses.push(loss);
+        }
+        Ok(())
+    }
+}
+
+/// ZO training (Table 23 setup: N = 10, mu = 0.01, batch 200 scaled),
+/// driven by the unified session driver; returns the every-10-epochs
+/// training cross-entropy curve.
 pub fn train_zo(
     model: &Model,
     flat: &mut [f64],
@@ -268,29 +415,47 @@ pub fn train_zo(
     seed: u64,
     threads: usize,
 ) -> Result<Vec<f64>> {
-    let mut rng = Rng::new(seed);
+    if epochs == 0 {
+        return Ok(Vec::new());
+    }
     let cfg = RgeConfig { n_queries: 10, mu: 0.01, ..Default::default() };
     let layout = model.param_layout();
-    let mut est = RgeEstimator::new(cfg, flat.len(), &layout);
-    let mut opt = Adam::new(flat.len(), 1e-3);
-    let mut grad = vec![0.0; flat.len()];
-    let mut curve = Vec::new();
-    for e in 0..epochs {
-        let idx: Vec<usize> = (0..batch).map(|_| rng.below(data.len())).collect();
-        let (x, y) = data.batch(&idx);
-        est.estimate(flat, &mut grad, &mut rng, &mut |pb| {
-            let mut losses = Vec::with_capacity(pb.n_probes());
-            for p in pb.iter() {
-                losses.push(cross_entropy(&logits(model, p, &x, batch, threads), &y));
-            }
-            Ok(losses)
-        })?;
-        opt.step(flat, &grad);
-        if e % 10 == 0 {
-            curve.push(cross_entropy(&logits(model, flat, &x, batch, threads), &y));
-        }
+    let est = RgeEstimator::new(cfg, flat.len(), &layout);
+    let mut engine = ClassifierEngine::new(model, data, batch, threads);
+    let hist = SessionBuilder::new(epochs)
+        .lr(1e-3)
+        .seed(seed)
+        .observer(Box::new(CurveObserver { every: 10 }))
+        .gradient_source(Box::new(RgeSource::new(est)))
+        .build(&mut engine)?
+        .run(flat)?;
+    Ok(hist.losses)
+}
+
+/// FO training of the dense classifier (manual backprop via
+/// [`fo_loss_grad`]) through the same session driver — the Table 23
+/// "Standard, FO" baseline.
+pub fn train_fo(
+    model: &Model,
+    flat: &mut [f64],
+    data: &MnistLike,
+    epochs: usize,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<()> {
+    if epochs == 0 {
+        return Ok(());
     }
-    Ok(curve)
+    let mut engine = ClassifierEngine::new(model, data, batch, threads);
+    SessionBuilder::new(epochs)
+        .lr(1e-3)
+        .seed(seed)
+        .observer(Box::new(NullObserver))
+        .gradient_source(Box::new(FoSource { skip_nonfinite: false, mask: None }))
+        .build(&mut engine)?
+        .run(flat)?;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -351,6 +516,29 @@ mod tests {
             let fd = (lp - lm) / (2.0 * h);
             assert!((g[probe] - fd).abs() < 1e-6 * (1.0 + fd.abs()), "{probe}: {} vs {fd}", g[probe]);
         }
+    }
+
+    #[test]
+    fn fo_training_runs_via_session() {
+        let model = build_classifier("std").unwrap();
+        let mut flat = model.init_flat(0);
+        let data = MnistLike::generate(64, 2);
+        train_fo(&model, &mut flat, &data, 2, 16, 0, 2).unwrap();
+        assert!(flat.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn classifier_engine_draws_batch_on_resample() {
+        let model = build_classifier("tt").unwrap();
+        let data = MnistLike::generate(32, 3);
+        let mut eng = ClassifierEngine::new(&model, &data, 8, 1);
+        let mut rng = Rng::new(0);
+        eng.resample(&mut rng);
+        let pts = eng.pde().sample_points(&mut rng);
+        assert!(pts.blocks.is_empty());
+        let flat = model.init_flat(0);
+        let l = eng.loss(&flat, &pts).unwrap();
+        assert!(l.is_finite() && l > 0.0);
     }
 
     #[test]

@@ -27,4 +27,6 @@ pub use clements::ClementsMesh;
 pub use model::{PhotonicModel, PhotonicVariant};
 pub use nonideal::NonIdeality;
 pub use svd_block::SvdMesh;
-pub use training::{train_phase_domain, PhaseProtocol};
+#[allow(deprecated)]
+pub use training::train_phase_domain;
+pub use training::{PhaseProtocol, PhaseTrainConfig};

@@ -225,8 +225,19 @@ impl PhotonicModel {
     /// Realize Φ into the flat parameter vector of the logical model,
     /// applying the non-ideality pipeline to the optical section.
     pub fn realize(&mut self, phi: &[f64]) -> Vec<f64> {
-        assert_eq!(phi.len(), self.n_trainable());
         let mut params = vec![0.0; self.model.n_params()];
+        self.realize_into(phi, &mut params);
+        params
+    }
+
+    /// Allocation-free [`PhotonicModel::realize`]: overwrite `params`
+    /// (length [`Model::n_params`]) with the realization of Φ. The
+    /// session driver reuses one buffer per probe row, so phase-domain
+    /// probe batches stop allocating a fresh vector per probe.
+    pub fn realize_into(&mut self, phi: &[f64], params: &mut [f64]) {
+        assert_eq!(phi.len(), self.n_trainable());
+        assert_eq!(params.len(), self.model.n_params());
+        params.fill(0.0);
         self.nonideal.apply(&phi[..self.n_phases], &mut self.scratch_eff);
         for g in &self.groups {
             let p = &self.scratch_eff[g.phase_off..g.phase_off + g.mesh.n_phases()];
@@ -252,7 +263,6 @@ impl PhotonicModel {
             params[b.param_off..b.param_off + b.len]
                 .copy_from_slice(&phi[b.phi_off..b.phi_off + b.len]);
         }
-        params
     }
 
     /// L²ight chain rule: map dL/dparams (from the AOT grad artifact,

@@ -2,7 +2,7 @@
 //!
 //! All three protocols optimize MZI phases Φ against the hardware-
 //! restricted loss `L(W(Ω Γ Q(Φ) + Φ_b))` evaluated through an engine
-//! (native or AOT/PJRT), and share the sparse-grid loss computation:
+//! (native or AOT/PJRT):
 //!
 //! * **FLOPS** (Gu et al. 2020) — joint ZO-RGE over *all* phases of the
 //!   standard ONN; the dimension-dependent variance is what makes it fail
@@ -13,12 +13,15 @@
 //!   their random initialization.
 //! * **Ours** — the paper's method: TONN hardware + tensor-wise ZO-RGE
 //!   over the (much smaller) TT-core phase vector.
+//!
+//! The drive loop itself is the unified [`crate::session`] driver: Φ maps
+//! through [`crate::session::PhotonicSpace`], each protocol is one
+//! [`crate::session::GradientSource`], and `max_forwards` budgets apply
+//! exactly as in the weight domain (eval-time queries excluded).
+//! [`train_phase_domain`] remains as a thin deprecated shim.
 
 use super::model::PhotonicModel;
-use crate::engine::{rel_l2_eval, Engine, ProbeBatch};
-use crate::optim::{Adam, Optimizer};
-use crate::util::rng::Rng;
-use crate::zo::rge::{Perturbation, RgeConfig, RgeEstimator};
+use crate::engine::Engine;
 use crate::zo::trainer::History;
 use crate::Result;
 
@@ -44,6 +47,11 @@ pub struct PhaseTrainConfig {
     pub n_queries: usize,
     pub eval_every: usize,
     pub seed: u64,
+    /// Stop once this many photonic forwards have been consumed — the
+    /// same uniform budget the weight domain honors (eval-time
+    /// `loss`/`rel_l2` queries are intentionally excluded; see
+    /// [`crate::session::SessionBuilder::max_forwards`]).
+    pub max_forwards: Option<u64>,
     pub verbose: bool,
 }
 
@@ -56,114 +64,28 @@ impl Default for PhaseTrainConfig {
             n_queries: 1,
             eval_every: 40,
             seed: 0,
+            max_forwards: None,
             verbose: false,
         }
     }
 }
 
 /// Train MZI phases on-chip; returns (final phases, history).
+///
+/// Thin shim over the unified session driver; prefer
+/// [`crate::session::phase_session`] for new code.
+#[deprecated(note = "use session::phase_session (or session::run_phase_domain)")]
 pub fn train_phase_domain(
     pm: &mut PhotonicModel,
     engine: &mut dyn Engine,
     protocol: PhaseProtocol,
     cfg: &PhaseTrainConfig,
 ) -> Result<(Vec<f64>, History)> {
-    let t0 = std::time::Instant::now();
-    let mut phi = pm.init_phases(cfg.seed);
-    let d = phi.len();
-    let mut opt = Adam::new(d, cfg.lr);
-    let mut rng = Rng::new(cfg.seed ^ 0x0071c5);
-    let mut hist = History::default();
-    let fpl = engine.forwards_per_loss() as u64;
-    let mut forwards = 0u64;
-    let mut grad = vec![0.0; d];
-
-    let mut rge = match protocol {
-        PhaseProtocol::Flops => Some(RgeEstimator::new(
-            RgeConfig {
-                n_queries: cfg.n_queries,
-                mu: cfg.mu,
-                dist: Perturbation::Rademacher,
-                tensor_wise: false,
-            },
-            d,
-            &[],
-        )),
-        PhaseProtocol::Ours => Some(RgeEstimator::new(
-            RgeConfig {
-                n_queries: cfg.n_queries,
-                mu: cfg.mu,
-                dist: Perturbation::Rademacher,
-                tensor_wise: true,
-            },
-            d,
-            &pm.phase_layout(),
-        )),
-        PhaseProtocol::L2ight => None,
-    };
-    let l2_idx = (protocol == PhaseProtocol::L2ight).then(|| pm.l2ight_trainable());
-
-    for epoch in 0..cfg.epochs {
-        engine.resample(&mut rng);
-        let pts = engine.pde().sample_points(&mut rng);
-        match protocol {
-            PhaseProtocol::Flops | PhaseProtocol::Ours => {
-                // Plan over phases, realize each phase probe into weight
-                // space, then evaluate the whole weight batch through the
-                // engine's probe-parallel loss_many.
-                let est = rge.as_mut().unwrap();
-                let plan = est.plan(&phi, &mut rng);
-                let mut realized = ProbeBatch::with_capacity(engine.n_params(), plan.n_probes());
-                for p in plan.iter() {
-                    realized.push(&pm.realize(p));
-                }
-                let losses = engine.loss_many(&realized, &pts)?;
-                forwards += realized.n_probes() as u64 * fpl;
-                est.assemble(&losses, &mut grad)?;
-                opt.step(&mut phi, &grad);
-            }
-            PhaseProtocol::L2ight => {
-                let params = pm.realize(&phi);
-                let (_, dl_dp) = engine.loss_grad(&params, &pts)?;
-                forwards += fpl;
-                let full = pm.sigma_chain_grad(&phi, &dl_dp);
-                // zero out the frozen coordinates (U/V phases)
-                grad.fill(0.0);
-                for &i in l2_idx.as_ref().unwrap() {
-                    grad[i] = full[i];
-                }
-                opt.step(&mut phi, &grad);
-            }
-        }
-
-        let last = epoch + 1 == cfg.epochs;
-        if epoch % cfg.eval_every == 0 || last {
-            let params = pm.realize(&phi);
-            let mut erng = Rng::new(cfg.seed ^ 0x5eed_e4a1);
-            let err = rel_l2_eval(engine, &params, &mut erng)?;
-            let loss = {
-                let mut lrng = Rng::new(cfg.seed ^ 0x1055);
-                let lpts = engine.pde().sample_points(&mut lrng);
-                engine.loss(&params, &lpts)?
-            };
-            hist.steps.push(epoch);
-            hist.losses.push(loss);
-            hist.errors.push(err);
-            hist.forwards.push(forwards);
-            if cfg.verbose {
-                eprintln!(
-                    "[{protocol:?}] epoch {epoch:>6} loss {loss:10.4e} rel_l2 {err:9.3e}"
-                );
-            }
-        }
-    }
-    hist.final_error = *hist.errors.last().unwrap_or(&f64::NAN);
-    hist.total_forwards = forwards;
-    hist.wall_secs = t0.elapsed().as_secs_f64();
-    Ok((phi, hist))
+    crate::session::run_phase_domain(pm, engine, protocol, cfg)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::engine::NativeEngine;
@@ -198,5 +120,25 @@ mod tests {
         let mut eng = NativeEngine::new("bs", "std").unwrap();
         let cfg = PhaseTrainConfig { epochs: 2, ..Default::default() };
         assert!(train_phase_domain(&mut pm, &mut eng, PhaseProtocol::L2ight, &cfg).is_err());
+    }
+
+    #[test]
+    fn phase_budget_stops_early() {
+        // max_forwards is now honored in the phase domain too.
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let cfg = PhaseTrainConfig {
+            epochs: 10_000,
+            eval_every: 1_000_000,
+            max_forwards: Some(50_000),
+            ..Default::default()
+        };
+        let (_, hist) = train_phase_domain(&mut pm, &mut eng, PhaseProtocol::Ours, &cfg).unwrap();
+        assert!(hist.total_forwards >= 50_000);
+        assert!(
+            hist.steps.last().copied().unwrap_or(0) < 9_999,
+            "budget must terminate before the epoch cap"
+        );
+        assert!(!hist.errors.is_empty(), "budget-hit epoch must still eval");
     }
 }

@@ -1,0 +1,567 @@
+//! Unified, budget-aware training sessions — the one digital control loop
+//! behind every BP-free workload (paper §4).
+//!
+//! The accelerator is a single control system driving many workloads:
+//! weight-domain ZO/FO PINN training, on-chip phase-domain protocols and
+//! the App. G classifier. This module is that loop in code. A
+//! [`Session`] composes four orthogonal pieces:
+//!
+//! * an [`engine::Engine`](crate::engine::Engine) — the loss oracle
+//!   (native, PJRT, or the in-crate classifier engine);
+//! * a [`ParamSpace`] — the map from the trainable vector into engine
+//!   parameter space ([`IdentitySpace`] for weight-domain,
+//!   [`PhotonicSpace`] for Φ through the non-ideality pipeline);
+//! * a [`GradientSource`] — the plan/assemble step contract
+//!   ([`FoSource`], [`RgeSource`], [`CoordwiseSource`], and L²ight as
+//!   subspace-FO via [`FoSource::subspace`]);
+//! * an [`Observer`] — eval scheduling, verbose logging, curve capture
+//!   and periodic checkpointing ([`EvalObserver`], [`CheckpointObserver`]).
+//!
+//! [`SessionBuilder`] subsumes the legacy `TrainConfig` /
+//! `PhaseTrainConfig` split and enforces `max_forwards` budgets uniformly
+//! in every domain: the budget counts *training* loss queries only;
+//! eval-time queries are excluded (see [`observer`]). Trajectories are
+//! bitwise-identical to the pre-session loops at any `--probe-threads`
+//! setting (`rust/tests/session_parity.rs` pins this against frozen
+//! copies of the legacy loops).
+//!
+//! ```no_run
+//! use optical_pinn::engine::NativeEngine;
+//! use optical_pinn::net::build_model;
+//! use optical_pinn::session::SessionBuilder;
+//! use optical_pinn::zo::{RgeConfig, TrainMethod};
+//!
+//! # fn main() -> optical_pinn::Result<()> {
+//! let mut engine = NativeEngine::new("bs", "tt")?;
+//! let model = build_model("bs", "tt", 2, None)?;
+//! let mut params = model.init_flat(0);
+//! let hist = SessionBuilder::new(500)
+//!     .lr(2e-3)
+//!     .eval_every(50)
+//!     .method(TrainMethod::ZoRge(RgeConfig::default()), model.param_layout())
+//!     .build(&mut engine)?
+//!     .run(&mut params)?;
+//! println!("final rel_l2 = {}", hist.final_error);
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod observer;
+pub mod source;
+pub mod space;
+
+pub use observer::{CheckpointObserver, EvalObserver, MultiObserver, NullObserver, Observer};
+pub use source::{CoordwiseSource, FoSource, GradientSource, RgeSource, StepReport};
+pub use space::{IdentitySpace, ParamSpace, PhotonicSpace};
+
+pub use crate::zo::trainer::History;
+
+use std::path::PathBuf;
+
+use crate::engine::{Engine, ProbeBatch};
+use crate::net::ParamEntry;
+use crate::optim::{Adam, Optimizer};
+use crate::pde::PointSet;
+use crate::photonic::training::{PhaseProtocol, PhaseTrainConfig};
+use crate::photonic::PhotonicModel;
+use crate::util::rng::Rng;
+use crate::zo::rge::{Perturbation, RgeConfig, RgeEstimator};
+use crate::zo::trainer::{TrainConfig, TrainMethod};
+use crate::{Error, Result};
+
+/// Progress flags handed to observers after every step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepInfo {
+    /// Epoch index of the step just applied (0-based).
+    pub epoch: usize,
+    /// Total scheduled epochs.
+    pub epochs: usize,
+    /// This was the final scheduled epoch.
+    pub last: bool,
+    /// The `max_forwards` budget is exhausted; the loop stops after the
+    /// observers run.
+    pub budget_hit: bool,
+    /// Cumulative training forward queries so far.
+    pub forwards: u64,
+}
+
+/// Everything an observer may touch after a step.
+pub struct StepCtx<'c> {
+    pub engine: &'c mut dyn Engine,
+    pub space: &'c mut dyn ParamSpace,
+    /// The trainable vector (post-update).
+    pub params: &'c [f64],
+    /// This epoch's collocation points.
+    pub pts: &'c PointSet,
+    pub ws: &'c mut SessionWorkspace,
+    pub info: StepInfo,
+}
+
+/// Reusable per-session scratch, sized once so the hot loop never
+/// allocates on the session side: the realized parameter vector, the
+/// realized probe batch and the FO pullback buffer.
+pub struct SessionWorkspace {
+    /// Engine-space image of the trainable vector.
+    pub realized: Vec<f64>,
+    /// Engine-space image of a whole probe plan.
+    pub realized_batch: ProbeBatch,
+    /// Trainable-space FO gradient scratch.
+    pub pullback: Vec<f64>,
+}
+
+impl SessionWorkspace {
+    pub fn new(out_dim: usize, trainable_dim: usize) -> SessionWorkspace {
+        SessionWorkspace {
+            realized: vec![0.0; out_dim],
+            realized_batch: ProbeBatch::new(out_dim),
+            pullback: vec![0.0; trainable_dim],
+        }
+    }
+}
+
+/// A fully-assembled training session; consume it with [`Session::run`].
+pub struct Session<'a> {
+    engine: &'a mut dyn Engine,
+    space: Box<dyn ParamSpace + 'a>,
+    source: Box<dyn GradientSource + 'a>,
+    observer: Box<dyn Observer + 'a>,
+    epochs: usize,
+    lr: f64,
+    train_seed: u64,
+    max_forwards: Option<u64>,
+}
+
+impl Session<'_> {
+    /// Drive the session; `params` (the trainable vector) is updated in
+    /// place and the recorded [`History`] is returned.
+    pub fn run(self, params: &mut [f64]) -> Result<History> {
+        let Session {
+            engine,
+            mut space,
+            mut source,
+            mut observer,
+            epochs,
+            lr,
+            train_seed,
+            max_forwards,
+        } = self;
+        let t0 = std::time::Instant::now();
+        let d = params.len();
+        let mut opt = Adam::new(d, lr);
+        let mut rng = Rng::new(train_seed);
+        let mut hist = History::default();
+        let mut grad = vec![0.0; d];
+        let mut ws = SessionWorkspace::new(space.out_dim(), d);
+        let mut forwards: u64 = 0;
+
+        for epoch in 0..epochs {
+            engine.resample(&mut rng);
+            let pts = engine.pde().sample_points(&mut rng);
+            let report = source.step(
+                &mut *engine,
+                space.as_mut(),
+                params,
+                &pts,
+                &mut rng,
+                &mut grad,
+                &mut ws,
+            )?;
+            forwards += report.forwards;
+            if report.apply {
+                opt.step(params, &grad);
+            }
+
+            let last = epoch + 1 == epochs;
+            let budget_hit = max_forwards.map(|m| forwards >= m).unwrap_or(false);
+            let mut ctx = StepCtx {
+                engine: &mut *engine,
+                space: space.as_mut(),
+                params: &*params,
+                pts: &pts,
+                ws: &mut ws,
+                info: StepInfo { epoch, epochs, last, budget_hit, forwards },
+            };
+            observer.after_step(&mut ctx, &mut hist)?;
+            if budget_hit {
+                break;
+            }
+        }
+        hist.final_error = *hist.errors.last().unwrap_or(&f64::NAN);
+        hist.total_forwards = forwards;
+        hist.wall_secs = t0.elapsed().as_secs_f64();
+        Ok(hist)
+    }
+}
+
+/// Builder for [`Session`]: one config surface for weight-, phase- and
+/// data-domain runs. Either pick a high-level [`TrainMethod`] (validated:
+/// tensor-wise RGE demands a layout) or inject a custom
+/// [`GradientSource`] / [`Observer`].
+pub struct SessionBuilder {
+    epochs: usize,
+    lr: f64,
+    seed: u64,
+    train_rng_seed: Option<u64>,
+    eval_every: usize,
+    max_forwards: Option<u64>,
+    verbose: bool,
+    tag: Option<String>,
+    method: Option<(TrainMethod, Vec<ParamEntry>)>,
+    source: Option<Box<dyn GradientSource>>,
+    observer: Option<Box<dyn Observer>>,
+    checkpoint: Option<(PathBuf, usize, String)>,
+}
+
+impl SessionBuilder {
+    /// A session scheduled for `epochs` optimizer steps (paper defaults:
+    /// Adam at `lr = 1e-3`, eval every `max(epochs/20, 1)` epochs).
+    pub fn new(epochs: usize) -> SessionBuilder {
+        SessionBuilder {
+            epochs,
+            lr: 1e-3,
+            seed: 0,
+            train_rng_seed: None,
+            eval_every: (epochs / 20).max(1),
+            max_forwards: None,
+            verbose: false,
+            tag: None,
+            method: None,
+            source: None,
+            observer: None,
+            checkpoint: None,
+        }
+    }
+
+    pub fn lr(mut self, lr: f64) -> SessionBuilder {
+        self.lr = lr;
+        self
+    }
+
+    /// Base seed: initializes the training RNG stream (unless overridden
+    /// by [`SessionBuilder::train_rng_seed`]) and the fixed eval clouds.
+    pub fn seed(mut self, seed: u64) -> SessionBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Override the training RNG stream seed while keeping `seed` for the
+    /// eval clouds (the phase-domain loop salts its stream).
+    pub fn train_rng_seed(mut self, seed: u64) -> SessionBuilder {
+        self.train_rng_seed = Some(seed);
+        self
+    }
+
+    pub fn eval_every(mut self, every: usize) -> SessionBuilder {
+        self.eval_every = every;
+        self
+    }
+
+    /// Stop once this many *training* forward queries have been consumed
+    /// (Fig. 3 fixed-budget comparisons). Enforced identically in every
+    /// domain; eval-time queries are intentionally excluded — they
+    /// measure convergence rather than drive it.
+    pub fn max_forwards(mut self, budget: Option<u64>) -> SessionBuilder {
+        self.max_forwards = budget;
+        self
+    }
+
+    pub fn verbose(mut self, verbose: bool) -> SessionBuilder {
+        self.verbose = verbose;
+        self
+    }
+
+    /// Progress-line tag (phase-domain protocols log as `[{tag}] ...`).
+    pub fn tag(mut self, tag: impl Into<String>) -> SessionBuilder {
+        self.tag = Some(tag.into());
+        self
+    }
+
+    /// High-level method selection; `layout` is the trainable-space block
+    /// layout required by tensor-wise RGE.
+    pub fn method(mut self, method: TrainMethod, layout: Vec<ParamEntry>) -> SessionBuilder {
+        self.method = Some((method, layout));
+        self
+    }
+
+    /// Inject a pre-built gradient source (bypasses method validation;
+    /// the legacy shims use this to preserve joint-RGE fallback).
+    pub fn gradient_source(mut self, source: Box<dyn GradientSource>) -> SessionBuilder {
+        self.source = Some(source);
+        self
+    }
+
+    /// Replace the default [`EvalObserver`] (e.g. the classifier curve
+    /// recorder). The custom observer then owns the whole eval policy.
+    pub fn observer(mut self, observer: Box<dyn Observer>) -> SessionBuilder {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Checkpoint the trainable vector to `path` every `every` epochs
+    /// (plus the final/budget-hit epoch).
+    pub fn checkpoint_every(
+        mut self,
+        path: PathBuf,
+        every: usize,
+        name: impl Into<String>,
+    ) -> SessionBuilder {
+        self.checkpoint = Some((path, every, name.into()));
+        self
+    }
+
+    /// Validate the configuration without building.
+    pub fn validate(&self) -> Result<()> {
+        if self.epochs == 0 {
+            return Err(Error::Config("session: epochs must be positive".into()));
+        }
+        if self.method.is_none() && self.source.is_none() {
+            return Err(Error::Config(
+                "session: no gradient source (call .method(...) or .gradient_source(...))".into(),
+            ));
+        }
+        if self.method.is_some() && self.source.is_some() {
+            return Err(Error::Config(
+                "session: .method(...) and .gradient_source(...) are mutually exclusive".into(),
+            ));
+        }
+        if let Some((TrainMethod::ZoRge(rc), layout)) = &self.method {
+            if rc.tensor_wise && layout.is_empty() {
+                return Err(Error::Config(
+                    "session: tensor-wise RGE requires a parameter layout".into(),
+                ));
+            }
+        }
+        if self.observer.is_none() && self.eval_every == 0 {
+            return Err(Error::Config("session: eval_every must be positive".into()));
+        }
+        if let Some((_, every, _)) = &self.checkpoint {
+            if *every == 0 {
+                return Err(Error::Config("session: checkpoint interval must be positive".into()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a weight-domain session: the trainable vector is the engine
+    /// parameter vector.
+    pub fn build<'a>(self, engine: &'a mut dyn Engine) -> Result<Session<'a>> {
+        let d = engine.n_params();
+        self.build_in(engine, Box::new(IdentitySpace::new(d)), d)
+    }
+
+    /// Build a session over an explicit parameter space;
+    /// `trainable_dim` is the dimensionality of the vector being
+    /// optimized (e.g. `PhotonicModel::n_trainable`).
+    pub fn build_in<'a>(
+        self,
+        engine: &'a mut dyn Engine,
+        space: Box<dyn ParamSpace + 'a>,
+        trainable_dim: usize,
+    ) -> Result<Session<'a>> {
+        self.validate()?;
+        let SessionBuilder {
+            epochs,
+            lr,
+            seed,
+            train_rng_seed,
+            eval_every,
+            max_forwards,
+            verbose,
+            tag,
+            method,
+            source,
+            observer,
+            checkpoint,
+        } = self;
+        let source: Box<dyn GradientSource> = match (source, method) {
+            (Some(s), _) => s,
+            (None, Some((m, layout))) => match m {
+                TrainMethod::Fo => Box::new(FoSource::full()),
+                TrainMethod::ZoRge(rc) => {
+                    Box::new(RgeSource::new(RgeEstimator::new(rc, trainable_dim, &layout)))
+                }
+                TrainMethod::ZoCoordwise { mu, coords_per_step } => {
+                    Box::new(CoordwiseSource::new(mu, trainable_dim, coords_per_step))
+                }
+            },
+            (None, None) => unreachable!("validate() rejects sourceless sessions"),
+        };
+        let mut observers: Vec<Box<dyn Observer>> = Vec::new();
+        match observer {
+            Some(o) => observers.push(o),
+            None => observers.push(Box::new(EvalObserver { eval_every, seed, verbose, tag })),
+        }
+        if let Some((path, every, name)) = checkpoint {
+            observers.push(Box::new(CheckpointObserver { path, every, name }));
+        }
+        let observer: Box<dyn Observer> = if observers.len() == 1 {
+            observers.pop().unwrap()
+        } else {
+            Box::new(MultiObserver { observers })
+        };
+        Ok(Session {
+            engine,
+            space,
+            source,
+            observer,
+            epochs,
+            lr,
+            train_seed: train_rng_seed.unwrap_or(seed),
+            max_forwards,
+        })
+    }
+}
+
+/// Assemble the weight-domain session equivalent to a legacy
+/// [`TrainConfig`] (the `zo::train` shim and the experiment runners go
+/// through here).
+pub fn weight_session<'a>(engine: &'a mut dyn Engine, cfg: &TrainConfig) -> Result<Session<'a>> {
+    let d = engine.n_params();
+    let source: Box<dyn GradientSource> = match &cfg.method {
+        TrainMethod::Fo => Box::new(FoSource::full()),
+        // constructed directly (not via .method) to preserve the legacy
+        // silent fallback to joint RGE when the layout is empty
+        TrainMethod::ZoRge(rc) => {
+            Box::new(RgeSource::new(RgeEstimator::new(rc.clone(), d, &cfg.layout)))
+        }
+        TrainMethod::ZoCoordwise { mu, coords_per_step } => {
+            Box::new(CoordwiseSource::new(*mu, d, *coords_per_step))
+        }
+    };
+    SessionBuilder::new(cfg.epochs)
+        .lr(cfg.lr)
+        .seed(cfg.seed)
+        .eval_every(cfg.eval_every)
+        .max_forwards(cfg.max_forwards)
+        .verbose(cfg.verbose)
+        .gradient_source(source)
+        .build(engine)
+}
+
+/// One-call weight-domain run (legacy `zo::train` semantics).
+pub fn run_weight(
+    engine: &mut dyn Engine,
+    params: &mut [f64],
+    cfg: &TrainConfig,
+) -> Result<History> {
+    weight_session(engine, cfg)?.run(params)
+}
+
+/// Assemble the phase-domain session for one on-chip protocol: Φ through
+/// [`PhotonicSpace`], the protocol's gradient source, and the phase-tagged
+/// eval observer.
+pub fn phase_session<'a>(
+    pm: &'a mut PhotonicModel,
+    engine: &'a mut dyn Engine,
+    protocol: PhaseProtocol,
+    cfg: &PhaseTrainConfig,
+) -> Result<Session<'a>> {
+    let d = pm.n_trainable();
+    let source: Box<dyn GradientSource> = match protocol {
+        PhaseProtocol::Flops => Box::new(RgeSource::new(RgeEstimator::new(
+            RgeConfig {
+                n_queries: cfg.n_queries,
+                mu: cfg.mu,
+                dist: Perturbation::Rademacher,
+                tensor_wise: false,
+            },
+            d,
+            &[],
+        ))),
+        PhaseProtocol::Ours => Box::new(RgeSource::new(RgeEstimator::new(
+            RgeConfig {
+                n_queries: cfg.n_queries,
+                mu: cfg.mu,
+                dist: Perturbation::Rademacher,
+                tensor_wise: true,
+            },
+            d,
+            &pm.phase_layout(),
+        ))),
+        PhaseProtocol::L2ight => Box::new(FoSource::subspace(pm.l2ight_trainable())),
+    };
+    SessionBuilder::new(cfg.epochs)
+        .lr(cfg.lr)
+        .seed(cfg.seed)
+        .train_rng_seed(cfg.seed ^ 0x0071c5)
+        .eval_every(cfg.eval_every)
+        .max_forwards(cfg.max_forwards)
+        .verbose(cfg.verbose)
+        .tag(format!("{protocol:?}"))
+        .gradient_source(source)
+        .build_in(engine, Box::new(PhotonicSpace::new(pm)), d)
+}
+
+/// One-call phase-domain run (legacy `train_phase_domain` semantics):
+/// initializes Φ from the config seed and returns (final phases, history).
+pub fn run_phase_domain(
+    pm: &mut PhotonicModel,
+    engine: &mut dyn Engine,
+    protocol: PhaseProtocol,
+    cfg: &PhaseTrainConfig,
+) -> Result<(Vec<f64>, History)> {
+    let mut phi = pm.init_phases(cfg.seed);
+    let hist = phase_session(pm, engine, protocol, cfg)?.run(&mut phi)?;
+    Ok((phi, hist))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeEngine;
+
+    #[test]
+    fn builder_rejects_zero_epochs() {
+        let b = SessionBuilder::new(0).method(TrainMethod::Fo, Vec::new());
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_tensor_wise_without_layout() {
+        let b = SessionBuilder::new(10).method(
+            TrainMethod::ZoRge(RgeConfig { tensor_wise: true, ..Default::default() }),
+            Vec::new(),
+        );
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_missing_source() {
+        assert!(SessionBuilder::new(10).validate().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_zero_eval_every() {
+        let b = SessionBuilder::new(10)
+            .eval_every(0)
+            .method(TrainMethod::Fo, Vec::new());
+        assert!(b.validate().is_err());
+    }
+
+    #[test]
+    fn joint_rge_without_layout_is_accepted() {
+        let b = SessionBuilder::new(10).method(
+            TrainMethod::ZoRge(RgeConfig { tensor_wise: false, ..Default::default() }),
+            Vec::new(),
+        );
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn session_trains_and_respects_budget() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut params = eng.model.init_flat(0);
+        let layout = eng.model.param_layout();
+        let hist = SessionBuilder::new(10_000)
+            .eval_every(1_000_000)
+            .max_forwards(Some(50_000))
+            .method(TrainMethod::ZoRge(RgeConfig::default()), layout)
+            .build(&mut eng)
+            .unwrap()
+            .run(&mut params)
+            .unwrap();
+        assert!(hist.total_forwards >= 50_000);
+        assert!(hist.total_forwards < 50_000 + 20 * 2 * 2760u64);
+        assert!(!hist.errors.is_empty(), "budget-hit epoch must still eval");
+    }
+}

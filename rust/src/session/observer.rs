@@ -1,0 +1,123 @@
+//! [`Observer`]: eval scheduling, verbose logging, curve capture and
+//! periodic checkpointing, decoupled from the drive loop.
+//!
+//! The driver calls [`Observer::after_step`] once per epoch *after* the
+//! optimizer update; the observer decides whether to evaluate and what to
+//! record into the [`History`]. Eval-time loss/error queries are
+//! intentionally **excluded** from the `max_forwards` training budget —
+//! they measure convergence, they don't drive it (matching the legacy
+//! weight-domain loop's accounting).
+
+use std::path::PathBuf;
+
+use crate::coordinator::checkpoint::save_params;
+use crate::engine::rel_l2_eval;
+use crate::util::rng::Rng;
+use crate::zo::trainer::History;
+use crate::Result;
+
+use super::StepCtx;
+
+/// Per-epoch hook driven by the session loop.
+pub trait Observer {
+    /// Called after every optimizer step (including budget-terminated and
+    /// final epochs, flagged in `ctx.info`).
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, hist: &mut History) -> Result<()>;
+}
+
+/// An observer that records nothing (headless runs).
+pub struct NullObserver;
+
+impl Observer for NullObserver {
+    fn after_step(&mut self, _ctx: &mut StepCtx<'_>, _hist: &mut History) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The standard PINN eval schedule: every `eval_every` epochs (plus the
+/// final and budget-hit epochs) evaluate the relative-l2 error on the
+/// fixed eval cloud and the loss on a fixed collocation set, append both
+/// to the history, and optionally log a progress line.
+///
+/// `tag = None` prints the weight-domain format (with forward counts);
+/// `tag = Some(protocol)` prints the phase-domain format.
+pub struct EvalObserver {
+    pub eval_every: usize,
+    pub seed: u64,
+    pub verbose: bool,
+    pub tag: Option<String>,
+}
+
+impl Observer for EvalObserver {
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, hist: &mut History) -> Result<()> {
+        let info = ctx.info;
+        if !(info.epoch % self.eval_every == 0 || info.last || info.budget_hit) {
+            return Ok(());
+        }
+        if !ctx.space.is_identity() {
+            ctx.space.realize_into(ctx.params, &mut ctx.ws.realized);
+        }
+        let at: &[f64] = if ctx.space.is_identity() { ctx.params } else { &ctx.ws.realized };
+        // fresh RNG with a fixed seed -> identical eval cloud each time
+        let mut erng = Rng::new(self.seed ^ 0x5eed_e4a1);
+        let err = rel_l2_eval(ctx.engine, at, &mut erng)?;
+        let loss = {
+            // fixed collocation set so the logged loss curve is smooth
+            let mut lrng = Rng::new(self.seed ^ 0x1055);
+            let lpts = ctx.engine.pde().sample_points(&mut lrng);
+            ctx.engine.loss(at, &lpts)?
+        };
+        hist.steps.push(info.epoch);
+        hist.losses.push(loss);
+        hist.errors.push(err);
+        hist.forwards.push(info.forwards);
+        if self.verbose {
+            let epoch = info.epoch;
+            match &self.tag {
+                Some(tag) => {
+                    eprintln!("[{tag}] epoch {epoch:>6} loss {loss:10.4e} rel_l2 {err:9.3e}")
+                }
+                None => {
+                    let forwards = info.forwards;
+                    eprintln!(
+                        "epoch {epoch:>6}  loss {loss:10.4e}  rel_l2 {err:9.3e}  forwards {forwards}"
+                    )
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Periodic checkpointing of the trainable vector via
+/// [`crate::coordinator::checkpoint`]. Saves every `every` epochs and at
+/// the final/budget-hit epoch, overwriting `path` each time.
+pub struct CheckpointObserver {
+    pub path: PathBuf,
+    pub every: usize,
+    pub name: String,
+}
+
+impl Observer for CheckpointObserver {
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, _hist: &mut History) -> Result<()> {
+        let info = ctx.info;
+        if info.epoch % self.every == 0 || info.last || info.budget_hit {
+            save_params(&self.path, &self.name, info.epoch, ctx.params)?;
+        }
+        Ok(())
+    }
+}
+
+/// Fan one step notification out to several observers, in order.
+pub struct MultiObserver {
+    pub observers: Vec<Box<dyn Observer>>,
+}
+
+impl Observer for MultiObserver {
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, hist: &mut History) -> Result<()> {
+        for obs in &mut self.observers {
+            obs.after_step(ctx, hist)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,196 @@
+//! [`GradientSource`]: the per-step plan/assemble contract that produces
+//! a gradient in the *trainable* space from probe-batched loss queries
+//! (or an exact first-order oracle) in *engine* space.
+//!
+//! One implementation per training method: [`FoSource`] (exact gradients
+//! via `Engine::loss_grad`, optionally restricted to a trainable
+//! subspace — the L²ight protocol), [`RgeSource`] (randomized gradient
+//! estimation, joint or tensor-wise) and [`CoordwiseSource`] (DeepZero
+//! coordinate-wise finite differences).
+
+use crate::engine::Engine;
+use crate::pde::PointSet;
+use crate::util::rng::Rng;
+use crate::zo::coordwise::CoordwiseEstimator;
+use crate::zo::rge::RgeEstimator;
+use crate::Result;
+
+use super::space::ParamSpace;
+use super::SessionWorkspace;
+
+/// What one gradient step consumed and whether to apply it.
+#[derive(Debug, Clone, Copy)]
+pub struct StepReport {
+    /// Photonic forward queries consumed by this step (training budget).
+    pub forwards: u64,
+    /// Apply the optimizer update (false e.g. on a non-finite FO loss).
+    pub apply: bool,
+}
+
+/// A per-step gradient oracle over an engine + parameter space.
+pub trait GradientSource {
+    /// Write the gradient at `params` (trainable space) into `grad` and
+    /// report the forward queries consumed. The driver applies the
+    /// optimizer step when the report says so.
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &mut self,
+        engine: &mut dyn Engine,
+        space: &mut dyn ParamSpace,
+        params: &[f64],
+        pts: &PointSet,
+        rng: &mut Rng,
+        grad: &mut [f64],
+        ws: &mut SessionWorkspace,
+    ) -> Result<StepReport>;
+}
+
+/// Exact first-order gradients via `Engine::loss_grad` (AOT grad
+/// artifact), pulled back through the parameter space. With a `mask`,
+/// only the listed trainable coordinates receive gradient — the L²ight
+/// subspace-FO protocol (Σ phases + digital biases).
+pub struct FoSource {
+    /// Skip the optimizer update when the loss is non-finite (the
+    /// weight-domain FO loop's divergence guard).
+    pub skip_nonfinite: bool,
+    /// Trainable coordinates that receive gradient (None = all).
+    pub mask: Option<Vec<usize>>,
+}
+
+impl FoSource {
+    /// Full-space FO with the weight-domain divergence guard.
+    pub fn full() -> FoSource {
+        FoSource { skip_nonfinite: true, mask: None }
+    }
+
+    /// Subspace FO over the given trainable coordinates (L²ight).
+    pub fn subspace(mask: Vec<usize>) -> FoSource {
+        FoSource { skip_nonfinite: false, mask: Some(mask) }
+    }
+}
+
+impl GradientSource for FoSource {
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &mut self,
+        engine: &mut dyn Engine,
+        space: &mut dyn ParamSpace,
+        params: &[f64],
+        pts: &PointSet,
+        _rng: &mut Rng,
+        grad: &mut [f64],
+        ws: &mut SessionWorkspace,
+    ) -> Result<StepReport> {
+        let fpl = engine.forwards_per_loss() as u64;
+        let (loss, g) = if space.is_identity() {
+            engine.loss_grad(params, pts)?
+        } else {
+            space.realize_into(params, &mut ws.realized);
+            engine.loss_grad(&ws.realized, pts)?
+        };
+        if space.is_identity() && self.mask.is_none() {
+            grad.copy_from_slice(&g);
+        } else {
+            space.pullback(params, &g, &mut ws.pullback)?;
+            match &self.mask {
+                None => grad.copy_from_slice(&ws.pullback),
+                Some(idx) => {
+                    grad.fill(0.0);
+                    for &i in idx {
+                        grad[i] = ws.pullback[i];
+                    }
+                }
+            }
+        }
+        Ok(StepReport { forwards: fpl, apply: !(self.skip_nonfinite && !loss.is_finite()) })
+    }
+}
+
+/// Randomized gradient estimation: plan the whole ±μξ probe batch in the
+/// trainable space, realize it through the parameter space into the
+/// session's reusable probe buffer, evaluate via `Engine::loss_many`,
+/// assemble.
+pub struct RgeSource {
+    pub est: RgeEstimator,
+}
+
+impl RgeSource {
+    pub fn new(est: RgeEstimator) -> RgeSource {
+        RgeSource { est }
+    }
+}
+
+impl GradientSource for RgeSource {
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &mut self,
+        engine: &mut dyn Engine,
+        space: &mut dyn ParamSpace,
+        params: &[f64],
+        pts: &PointSet,
+        rng: &mut Rng,
+        grad: &mut [f64],
+        ws: &mut SessionWorkspace,
+    ) -> Result<StepReport> {
+        let fpl = engine.forwards_per_loss() as u64;
+        let plan = self.est.plan(params, rng);
+        let n_probes = plan.n_probes() as u64;
+        let losses = if space.is_identity() {
+            engine.loss_many(&plan, pts)?
+        } else {
+            let batch = &mut ws.realized_batch;
+            batch.clear();
+            for p in plan.iter() {
+                let row = batch.push_zeroed();
+                space.realize_into(p, row);
+            }
+            engine.loss_many(batch, pts)?
+        };
+        self.est.assemble(&losses, grad)?;
+        Ok(StepReport { forwards: n_probes * fpl, apply: true })
+    }
+}
+
+/// DeepZero-style coordinate-wise central differences, chunk-streamed
+/// through `Engine::loss_many` (and through the parameter space when
+/// training a non-identity domain).
+pub struct CoordwiseSource {
+    pub est: CoordwiseEstimator,
+}
+
+impl CoordwiseSource {
+    pub fn new(mu: f64, dim: usize, coords_per_step: Option<usize>) -> CoordwiseSource {
+        CoordwiseSource { est: CoordwiseEstimator::new(mu, dim, coords_per_step) }
+    }
+}
+
+impl GradientSource for CoordwiseSource {
+    #[allow(clippy::too_many_arguments)]
+    fn step(
+        &mut self,
+        engine: &mut dyn Engine,
+        space: &mut dyn ParamSpace,
+        params: &[f64],
+        pts: &PointSet,
+        rng: &mut Rng,
+        grad: &mut [f64],
+        ws: &mut SessionWorkspace,
+    ) -> Result<StepReport> {
+        let fpl = engine.forwards_per_loss() as u64;
+        let evals0 = self.est.loss_evals;
+        if space.is_identity() {
+            self.est.estimate(params, grad, rng, &mut |pb| engine.loss_many(pb, pts))?;
+        } else {
+            let batch = &mut ws.realized_batch;
+            self.est.estimate(params, grad, rng, &mut |pb| {
+                batch.clear();
+                for p in pb.iter() {
+                    let row = batch.push_zeroed();
+                    space.realize_into(p, row);
+                }
+                engine.loss_many(batch, pts)
+            })?;
+        }
+        Ok(StepReport { forwards: (self.est.loss_evals - evals0) * fpl, apply: true })
+    }
+}

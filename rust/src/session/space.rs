@@ -1,0 +1,126 @@
+//! [`ParamSpace`]: the map from the trainable vector into engine
+//! parameter space.
+//!
+//! The session driver optimizes a *trainable* vector (network weights,
+//! MZI phases Φ, ...) while the engine evaluates losses in *engine
+//! parameter space* (the flat weight vector of the logical model). A
+//! `ParamSpace` is that map: the identity for weight-domain training and
+//! the photonic realization `W(Ω Γ Q(Φ) + Φ_b)` for phase-domain
+//! training. `realize_into` writes into caller-provided storage so the
+//! per-step realized probe batch never allocates.
+
+use crate::photonic::PhotonicModel;
+use crate::Result;
+
+/// Map from the trainable vector into engine parameter space.
+pub trait ParamSpace {
+    /// Engine-space dimensionality (length `realize_into` writes).
+    fn out_dim(&self) -> usize;
+
+    /// True when the trainable vector *is* the engine parameter vector,
+    /// letting the driver skip the realize copy entirely.
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Realize the trainable vector into engine parameter space,
+    /// overwriting `out` (`out.len() == self.out_dim()`). Allocation-free.
+    fn realize_into(&mut self, trainable: &[f64], out: &mut [f64]);
+
+    /// Pull an engine-space gradient back into the trainable space (the
+    /// first-order path). Errors when the space has no differentiable
+    /// pullback.
+    fn pullback(&mut self, trainable: &[f64], dl_dout: &[f64], grad: &mut [f64]) -> Result<()>;
+}
+
+/// Weight-domain space: the trainable vector is the parameter vector.
+#[derive(Debug, Clone, Copy)]
+pub struct IdentitySpace {
+    dim: usize,
+}
+
+impl IdentitySpace {
+    pub fn new(dim: usize) -> IdentitySpace {
+        IdentitySpace { dim }
+    }
+}
+
+impl ParamSpace for IdentitySpace {
+    fn out_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+
+    fn realize_into(&mut self, trainable: &[f64], out: &mut [f64]) {
+        out.copy_from_slice(trainable);
+    }
+
+    fn pullback(&mut self, _trainable: &[f64], dl_dout: &[f64], grad: &mut [f64]) -> Result<()> {
+        grad.copy_from_slice(dl_dout);
+        Ok(())
+    }
+}
+
+/// Phase-domain space: Φ through the non-ideality pipeline to the flat
+/// parameter vector of the logical model
+/// ([`PhotonicModel::realize_into`]). The pullback is the L²ight
+/// straight-through Σ chain rule ([`PhotonicModel::sigma_chain_grad`]).
+pub struct PhotonicSpace<'m> {
+    pm: &'m mut PhotonicModel,
+}
+
+impl<'m> PhotonicSpace<'m> {
+    pub fn new(pm: &'m mut PhotonicModel) -> PhotonicSpace<'m> {
+        PhotonicSpace { pm }
+    }
+}
+
+impl ParamSpace for PhotonicSpace<'_> {
+    fn out_dim(&self) -> usize {
+        self.pm.model.n_params()
+    }
+
+    fn realize_into(&mut self, trainable: &[f64], out: &mut [f64]) {
+        self.pm.realize_into(trainable, out);
+    }
+
+    fn pullback(&mut self, trainable: &[f64], dl_dout: &[f64], grad: &mut [f64]) -> Result<()> {
+        let full = self.pm.sigma_chain_grad(trainable, dl_dout);
+        grad.copy_from_slice(&full);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::photonic::PhotonicVariant;
+
+    #[test]
+    fn identity_space_roundtrips() {
+        let mut sp = IdentitySpace::new(3);
+        assert!(sp.is_identity());
+        assert_eq!(sp.out_dim(), 3);
+        let mut out = vec![0.0; 3];
+        sp.realize_into(&[1.0, 2.0, 3.0], &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        let mut g = vec![0.0; 3];
+        sp.pullback(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0], &mut g).unwrap();
+        assert_eq!(g, [4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn photonic_space_matches_model_realize() {
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 1).unwrap();
+        let phi = pm.init_phases(0);
+        let want = pm.realize(&phi);
+        let mut sp = PhotonicSpace::new(&mut pm);
+        assert!(!sp.is_identity());
+        let mut out = vec![f64::NAN; sp.out_dim()];
+        sp.realize_into(&phi, &mut out);
+        assert_eq!(out, want, "realize_into must be bitwise-identical to realize");
+    }
+}

@@ -1,6 +1,7 @@
 //! Zeroth-order optimization (paper §2, §3.2): randomized gradient
 //! estimation, DeepZero-style coordinate-wise estimation, and the ZO/FO
-//! training loops.
+//! training configuration. The drive loop itself lives in
+//! [`crate::session`]; [`trainer::train`] remains as a deprecated shim.
 
 pub mod coordwise;
 pub mod rge;
@@ -8,4 +9,6 @@ pub mod trainer;
 
 pub use coordwise::CoordwiseEstimator;
 pub use rge::{Perturbation, RgeConfig, RgeEstimator};
-pub use trainer::{train, History, TrainConfig, TrainMethod};
+#[allow(deprecated)]
+pub use trainer::train;
+pub use trainer::{History, TrainConfig, TrainMethod};

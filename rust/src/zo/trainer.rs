@@ -1,14 +1,18 @@
-//! Training loops: FO (BP baseline via AOT grad artifacts) and BP-free ZO
-//! (RGE / coordinate-wise), with photonic-forward accounting.
+//! Weight-domain training configuration ([`TrainConfig`] /
+//! [`TrainMethod`]) and the recorded [`History`].
+//!
+//! The training loop itself lives in [`crate::session`]: one budget-aware
+//! driver shared by the weight-, phase- and data-domain entry points.
+//! [`train`] remains as a thin deprecated shim over
+//! [`crate::session::run_weight`] so external call sites and benches keep
+//! compiling; trajectories are bitwise-identical to the legacy loop
+//! (`rust/tests/session_parity.rs`).
 
-use crate::engine::{rel_l2_eval, Engine};
+use crate::engine::Engine;
 use crate::net::ParamEntry;
-use crate::optim::{Adam, Optimizer};
-use crate::util::rng::Rng;
 use crate::Result;
 
-use super::coordwise::CoordwiseEstimator;
-use super::rge::{RgeConfig, RgeEstimator};
+use super::rge::RgeConfig;
 
 /// Gradient source for training.
 #[derive(Debug, Clone)]
@@ -31,7 +35,8 @@ pub struct TrainConfig {
     /// Parameter layout for tensor-wise RGE (empty -> joint perturbation).
     pub layout: Vec<ParamEntry>,
     /// Stop once this many photonic forwards have been consumed (Fig. 3
-    /// fixed-budget comparisons).
+    /// fixed-budget comparisons). Eval-time queries are excluded — see
+    /// [`crate::session::SessionBuilder::max_forwards`].
     pub max_forwards: Option<u64>,
     pub verbose: bool,
 }
@@ -75,94 +80,17 @@ impl History {
     }
 }
 
-/// Run a training session; `params` is updated in place.
+/// Run a weight-domain training session; `params` is updated in place.
+///
+/// Thin shim over the unified session driver; prefer
+/// [`crate::session::SessionBuilder`] for new code.
+#[deprecated(note = "use session::SessionBuilder (or session::run_weight)")]
 pub fn train(engine: &mut dyn Engine, params: &mut [f64], cfg: &TrainConfig) -> Result<History> {
-    let t0 = std::time::Instant::now();
-    let d = params.len();
-    let mut opt = Adam::new(d, cfg.lr);
-    let mut rng = Rng::new(cfg.seed);
-    let mut hist = History::default();
-    let mut grad = vec![0.0; d];
-    let fpl = engine.forwards_per_loss() as u64;
-    let mut forwards: u64 = 0;
-
-    let mut rge = match &cfg.method {
-        TrainMethod::ZoRge(rc) => Some(RgeEstimator::new(rc.clone(), d, &cfg.layout)),
-        _ => None,
-    };
-    let mut cw = match &cfg.method {
-        TrainMethod::ZoCoordwise { mu, coords_per_step } => {
-            Some(CoordwiseEstimator::new(*mu, d, *coords_per_step))
-        }
-        _ => None,
-    };
-
-    for epoch in 0..cfg.epochs {
-        engine.resample(&mut rng);
-        let pts = engine.pde().sample_points(&mut rng);
-        match &cfg.method {
-            TrainMethod::Fo => {
-                let (loss, g) = engine.loss_grad(params, &pts)?;
-                grad.copy_from_slice(&g);
-                forwards += fpl; // one forward sweep feeds the backward too
-                if loss.is_finite() {
-                    opt.step(params, &grad);
-                }
-            }
-            TrainMethod::ZoRge(_) => {
-                // Probe-batched step: generate the whole plan, evaluate it
-                // through the engine's parallel loss_many, assemble.
-                let est = rge.as_mut().unwrap();
-                let plan = est.plan(params, &mut rng);
-                let losses = engine.loss_many(&plan, &pts)?;
-                forwards += plan.n_probes() as u64 * fpl;
-                est.assemble(&losses, &mut grad)?;
-                opt.step(params, &grad);
-            }
-            TrainMethod::ZoCoordwise { .. } => {
-                let est = cw.as_mut().unwrap();
-                let evals0 = est.loss_evals;
-                est.estimate(params, &mut grad, &mut rng, &mut |pb| {
-                    engine.loss_many(pb, &pts)
-                })?;
-                forwards += (est.loss_evals - evals0) * fpl;
-                opt.step(params, &grad);
-            }
-        }
-
-        let last = epoch + 1 == cfg.epochs;
-        let budget_hit = cfg.max_forwards.map(|m| forwards >= m).unwrap_or(false);
-        if epoch % cfg.eval_every == 0 || last || budget_hit {
-            // fresh RNG with a fixed seed -> identical eval cloud each time
-            let mut erng = Rng::new(cfg.seed ^ 0x5eed_e4a1);
-            let err = rel_l2_eval(engine, params, &mut erng)?;
-            let loss = {
-                // fixed collocation set so the logged loss curve is smooth
-                let mut lrng = Rng::new(cfg.seed ^ 0x1055);
-                let lpts = engine.pde().sample_points(&mut lrng);
-                engine.loss(params, &lpts)?
-            };
-            hist.steps.push(epoch);
-            hist.losses.push(loss);
-            hist.errors.push(err);
-            hist.forwards.push(forwards);
-            if cfg.verbose {
-                eprintln!(
-                    "epoch {epoch:>6}  loss {loss:10.4e}  rel_l2 {err:9.3e}  forwards {forwards}"
-                );
-            }
-        }
-        if budget_hit {
-            break;
-        }
-    }
-    hist.final_error = *hist.errors.last().unwrap_or(&f64::NAN);
-    hist.total_forwards = forwards;
-    hist.wall_secs = t0.elapsed().as_secs_f64();
-    Ok(hist)
+    crate::session::run_weight(engine, params, cfg)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::engine::NativeEngine;
@@ -195,7 +123,7 @@ mod tests {
         cfg.eval_every = 1_000_000; // only budget/last evals
         let hist = train(&mut eng, &mut params, &cfg).unwrap();
         assert!(hist.total_forwards >= 50_000);
-        assert!(hist.total_forwards < 50_000 + 20 * 2 * 2760 as u64);
+        assert!(hist.total_forwards < 50_000 + 20 * 2 * 2760u64);
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //! These tests require `make artifacts`; they are skipped (with a loud
 //! message) when the artifacts directory is missing.
 
+// these tests intentionally exercise the deprecated legacy shims
+#![allow(deprecated)]
+
 use optical_pinn::engine::{rel_l2_eval, Engine, NativeEngine, PjrtEngine, PjrtRuntime};
 use optical_pinn::net::build_model;
 use optical_pinn::pde::{get_pde, ALL_PDES};

@@ -4,6 +4,9 @@
 //! trajectories must not depend on `probe_threads`. Native-engine based,
 //! so these run without artifacts.
 
+// exercises the deprecated legacy shim on purpose (same trajectory contract)
+#![allow(deprecated)]
+
 use optical_pinn::engine::{Engine, NativeEngine, ProbeBatch};
 use optical_pinn::pde::ALL_PDES;
 use optical_pinn::util::rng::Rng;

@@ -1,0 +1,436 @@
+//! Golden parity contract of the unified `session` driver: for every
+//! training domain, the new driver must reproduce the legacy hand-rolled
+//! loops **bitwise** — same `History` curves, same forward accounting,
+//! same final parameters — at any probe-thread setting.
+//!
+//! The oracles below are frozen verbatim copies of the pre-session loops
+//! (`zo/trainer.rs::train`, `photonic/training.rs::train_phase_domain`,
+//! `mnist/mod.rs::train_zo` and the Table-23 FO loop) as they stood
+//! before the refactor. Do not "fix" or modernize them: their whole value
+//! is that they pin the legacy trajectories.
+
+use optical_pinn::engine::{rel_l2_eval, Engine, NativeEngine, ProbeBatch};
+use optical_pinn::mnist::{self, MnistLike};
+use optical_pinn::net::Model;
+use optical_pinn::optim::{Adam, Optimizer};
+use optical_pinn::photonic::{PhaseProtocol, PhaseTrainConfig, PhotonicModel, PhotonicVariant};
+use optical_pinn::session;
+use optical_pinn::util::rng::Rng;
+use optical_pinn::zo::{
+    CoordwiseEstimator, History, Perturbation, RgeConfig, RgeEstimator, TrainConfig, TrainMethod,
+};
+use optical_pinn::Result;
+
+// ---------------------------------------------------------------------
+// frozen legacy loops (pre-session oracles)
+// ---------------------------------------------------------------------
+
+/// Verbatim copy of the pre-session weight-domain loop.
+fn legacy_weight_train(
+    engine: &mut dyn Engine,
+    params: &mut [f64],
+    cfg: &TrainConfig,
+) -> Result<History> {
+    let d = params.len();
+    let mut opt = Adam::new(d, cfg.lr);
+    let mut rng = Rng::new(cfg.seed);
+    let mut hist = History::default();
+    let mut grad = vec![0.0; d];
+    let fpl = engine.forwards_per_loss() as u64;
+    let mut forwards: u64 = 0;
+
+    let mut rge = match &cfg.method {
+        TrainMethod::ZoRge(rc) => Some(RgeEstimator::new(rc.clone(), d, &cfg.layout)),
+        _ => None,
+    };
+    let mut cw = match &cfg.method {
+        TrainMethod::ZoCoordwise { mu, coords_per_step } => {
+            Some(CoordwiseEstimator::new(*mu, d, *coords_per_step))
+        }
+        _ => None,
+    };
+
+    for epoch in 0..cfg.epochs {
+        engine.resample(&mut rng);
+        let pts = engine.pde().sample_points(&mut rng);
+        match &cfg.method {
+            TrainMethod::Fo => {
+                let (loss, g) = engine.loss_grad(params, &pts)?;
+                grad.copy_from_slice(&g);
+                forwards += fpl;
+                if loss.is_finite() {
+                    opt.step(params, &grad);
+                }
+            }
+            TrainMethod::ZoRge(_) => {
+                let est = rge.as_mut().unwrap();
+                let plan = est.plan(params, &mut rng);
+                let losses = engine.loss_many(&plan, &pts)?;
+                forwards += plan.n_probes() as u64 * fpl;
+                est.assemble(&losses, &mut grad)?;
+                opt.step(params, &grad);
+            }
+            TrainMethod::ZoCoordwise { .. } => {
+                let est = cw.as_mut().unwrap();
+                let evals0 = est.loss_evals;
+                est.estimate(params, &mut grad, &mut rng, &mut |pb| {
+                    engine.loss_many(pb, &pts)
+                })?;
+                forwards += (est.loss_evals - evals0) * fpl;
+                opt.step(params, &grad);
+            }
+        }
+
+        let last = epoch + 1 == cfg.epochs;
+        let budget_hit = cfg.max_forwards.map(|m| forwards >= m).unwrap_or(false);
+        if epoch % cfg.eval_every == 0 || last || budget_hit {
+            let mut erng = Rng::new(cfg.seed ^ 0x5eed_e4a1);
+            let err = rel_l2_eval(engine, params, &mut erng)?;
+            let loss = {
+                let mut lrng = Rng::new(cfg.seed ^ 0x1055);
+                let lpts = engine.pde().sample_points(&mut lrng);
+                engine.loss(params, &lpts)?
+            };
+            hist.steps.push(epoch);
+            hist.losses.push(loss);
+            hist.errors.push(err);
+            hist.forwards.push(forwards);
+        }
+        if budget_hit {
+            break;
+        }
+    }
+    hist.final_error = *hist.errors.last().unwrap_or(&f64::NAN);
+    hist.total_forwards = forwards;
+    Ok(hist)
+}
+
+/// Verbatim copy of the pre-session phase-domain loop.
+fn legacy_phase_train(
+    pm: &mut PhotonicModel,
+    engine: &mut dyn Engine,
+    protocol: PhaseProtocol,
+    cfg: &PhaseTrainConfig,
+) -> Result<(Vec<f64>, History)> {
+    let mut phi = pm.init_phases(cfg.seed);
+    let d = phi.len();
+    let mut opt = Adam::new(d, cfg.lr);
+    let mut rng = Rng::new(cfg.seed ^ 0x0071c5);
+    let mut hist = History::default();
+    let fpl = engine.forwards_per_loss() as u64;
+    let mut forwards = 0u64;
+    let mut grad = vec![0.0; d];
+
+    let mut rge = match protocol {
+        PhaseProtocol::Flops => Some(RgeEstimator::new(
+            RgeConfig {
+                n_queries: cfg.n_queries,
+                mu: cfg.mu,
+                dist: Perturbation::Rademacher,
+                tensor_wise: false,
+            },
+            d,
+            &[],
+        )),
+        PhaseProtocol::Ours => Some(RgeEstimator::new(
+            RgeConfig {
+                n_queries: cfg.n_queries,
+                mu: cfg.mu,
+                dist: Perturbation::Rademacher,
+                tensor_wise: true,
+            },
+            d,
+            &pm.phase_layout(),
+        )),
+        PhaseProtocol::L2ight => None,
+    };
+    let l2_idx = (protocol == PhaseProtocol::L2ight).then(|| pm.l2ight_trainable());
+
+    for epoch in 0..cfg.epochs {
+        engine.resample(&mut rng);
+        let pts = engine.pde().sample_points(&mut rng);
+        match protocol {
+            PhaseProtocol::Flops | PhaseProtocol::Ours => {
+                let est = rge.as_mut().unwrap();
+                let plan = est.plan(&phi, &mut rng);
+                let mut realized = ProbeBatch::with_capacity(engine.n_params(), plan.n_probes());
+                for p in plan.iter() {
+                    realized.push(&pm.realize(p));
+                }
+                let losses = engine.loss_many(&realized, &pts)?;
+                forwards += realized.n_probes() as u64 * fpl;
+                est.assemble(&losses, &mut grad)?;
+                opt.step(&mut phi, &grad);
+            }
+            PhaseProtocol::L2ight => {
+                let params = pm.realize(&phi);
+                let (_, dl_dp) = engine.loss_grad(&params, &pts)?;
+                forwards += fpl;
+                let full = pm.sigma_chain_grad(&phi, &dl_dp);
+                grad.fill(0.0);
+                for &i in l2_idx.as_ref().unwrap() {
+                    grad[i] = full[i];
+                }
+                opt.step(&mut phi, &grad);
+            }
+        }
+
+        let last = epoch + 1 == cfg.epochs;
+        if epoch % cfg.eval_every == 0 || last {
+            let params = pm.realize(&phi);
+            let mut erng = Rng::new(cfg.seed ^ 0x5eed_e4a1);
+            let err = rel_l2_eval(engine, &params, &mut erng)?;
+            let loss = {
+                let mut lrng = Rng::new(cfg.seed ^ 0x1055);
+                let lpts = engine.pde().sample_points(&mut lrng);
+                engine.loss(&params, &lpts)?
+            };
+            hist.steps.push(epoch);
+            hist.losses.push(loss);
+            hist.errors.push(err);
+            hist.forwards.push(forwards);
+        }
+    }
+    hist.final_error = *hist.errors.last().unwrap_or(&f64::NAN);
+    hist.total_forwards = forwards;
+    Ok((phi, hist))
+}
+
+/// Verbatim copy of the pre-session MNIST ZO loop.
+fn legacy_mnist_zo(
+    model: &Model,
+    flat: &mut [f64],
+    data: &MnistLike,
+    epochs: usize,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    let cfg = RgeConfig { n_queries: 10, mu: 0.01, ..Default::default() };
+    let layout = model.param_layout();
+    let mut est = RgeEstimator::new(cfg, flat.len(), &layout);
+    let mut opt = Adam::new(flat.len(), 1e-3);
+    let mut grad = vec![0.0; flat.len()];
+    let mut curve = Vec::new();
+    for e in 0..epochs {
+        let idx: Vec<usize> = (0..batch).map(|_| rng.below(data.len())).collect();
+        let (x, y) = data.batch(&idx);
+        est.estimate(flat, &mut grad, &mut rng, &mut |pb| {
+            let mut losses = Vec::with_capacity(pb.n_probes());
+            for p in pb.iter() {
+                losses.push(mnist::cross_entropy(
+                    &mnist::logits(model, p, &x, batch, threads),
+                    &y,
+                ));
+            }
+            Ok(losses)
+        })?;
+        opt.step(flat, &grad);
+        if e % 10 == 0 {
+            curve.push(mnist::cross_entropy(
+                &mnist::logits(model, flat, &x, batch, threads),
+                &y,
+            ));
+        }
+    }
+    Ok(curve)
+}
+
+/// Verbatim copy of the pre-session Table-23 FO loop.
+fn legacy_mnist_fo(
+    model: &Model,
+    flat: &mut [f64],
+    data: &MnistLike,
+    epochs: usize,
+    batch: usize,
+    seed: u64,
+    threads: usize,
+) -> Result<()> {
+    let mut rng = Rng::new(seed);
+    let mut opt = Adam::new(flat.len(), 1e-3);
+    for _ in 0..epochs {
+        let idx: Vec<usize> = (0..batch).map(|_| rng.below(data.len())).collect();
+        let (x, y) = data.batch(&idx);
+        let (_, g) = mnist::fo_loss_grad(model, flat, &x, &y, threads)?;
+        opt.step(flat, &g);
+    }
+    Ok(())
+}
+
+fn assert_hist_eq(legacy: &History, new: &History, what: &str) {
+    assert_eq!(legacy.steps, new.steps, "{what}: eval steps diverged");
+    assert_eq!(legacy.losses, new.losses, "{what}: loss curve diverged");
+    assert_eq!(legacy.errors, new.errors, "{what}: error curve diverged");
+    assert_eq!(legacy.forwards, new.forwards, "{what}: forward curve diverged");
+    assert_eq!(
+        legacy.total_forwards, new.total_forwards,
+        "{what}: total forwards diverged"
+    );
+}
+
+// ---------------------------------------------------------------------
+// parity tests
+// ---------------------------------------------------------------------
+
+#[test]
+fn weight_domain_rge_matches_legacy_bitwise_at_any_probe_threads() {
+    let mut cfg = TrainConfig::zo(50);
+    cfg.eval_every = 10;
+    let mut first_params: Option<Vec<f64>> = None;
+    for threads in [1usize, 2, 4] {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        eng.set_probe_threads(threads);
+        cfg.layout = eng.model.param_layout();
+        let mut p_legacy = eng.model.init_flat(0);
+        let h_legacy = legacy_weight_train(&mut eng, &mut p_legacy, &cfg).unwrap();
+
+        let mut eng2 = NativeEngine::new("bs", "tt").unwrap();
+        eng2.set_probe_threads(threads);
+        let mut p_new = eng2.model.init_flat(0);
+        let h_new = session::run_weight(&mut eng2, &mut p_new, &cfg).unwrap();
+
+        assert_eq!(p_legacy, p_new, "params diverged at {threads} probe threads");
+        assert_hist_eq(&h_legacy, &h_new, &format!("weight rge, {threads} threads"));
+        if let Some(p1) = &first_params {
+            assert_eq!(
+                p1, &p_new,
+                "session trajectory depends on probe threads ({threads})"
+            );
+        } else {
+            first_params = Some(p_new);
+        }
+    }
+}
+
+#[test]
+fn weight_domain_coordwise_matches_legacy_bitwise() {
+    let mut cfg = TrainConfig::zo(10);
+    cfg.method = TrainMethod::ZoCoordwise { mu: 1e-3, coords_per_step: Some(8) };
+    cfg.eval_every = 3;
+
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    cfg.layout = eng.model.param_layout();
+    let mut p_legacy = eng.model.init_flat(0);
+    let h_legacy = legacy_weight_train(&mut eng, &mut p_legacy, &cfg).unwrap();
+
+    let mut eng2 = NativeEngine::new("bs", "tt").unwrap();
+    let mut p_new = eng2.model.init_flat(0);
+    let h_new = session::run_weight(&mut eng2, &mut p_new, &cfg).unwrap();
+
+    assert_eq!(p_legacy, p_new);
+    assert_hist_eq(&h_legacy, &h_new, "weight coordwise");
+}
+
+#[test]
+fn weight_domain_budget_matches_legacy_bitwise() {
+    let mut cfg = TrainConfig::zo(10_000);
+    cfg.max_forwards = Some(30_000);
+    cfg.eval_every = 1_000_000; // only budget/last evals
+
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    let mut p_legacy = eng.model.init_flat(0);
+    let h_legacy = legacy_weight_train(&mut eng, &mut p_legacy, &cfg).unwrap();
+
+    let mut eng2 = NativeEngine::new("bs", "tt").unwrap();
+    let mut p_new = eng2.model.init_flat(0);
+    let h_new = session::run_weight(&mut eng2, &mut p_new, &cfg).unwrap();
+
+    assert!(h_new.total_forwards >= 30_000, "budget must terminate the run");
+    assert_eq!(p_legacy, p_new);
+    assert_hist_eq(&h_legacy, &h_new, "weight budget");
+}
+
+#[test]
+fn weight_domain_fo_errors_identically_on_native() {
+    let cfg = TrainConfig::fo(3);
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    let mut p = eng.model.init_flat(0);
+    assert!(legacy_weight_train(&mut eng, &mut p, &cfg).is_err());
+    let mut eng2 = NativeEngine::new("bs", "tt").unwrap();
+    let mut p2 = eng2.model.init_flat(0);
+    assert!(session::run_weight(&mut eng2, &mut p2, &cfg).is_err());
+}
+
+#[test]
+fn phase_domain_ours_matches_legacy_bitwise() {
+    let cfg = PhaseTrainConfig { epochs: 30, eval_every: 7, ..Default::default() };
+
+    let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    let (phi_legacy, h_legacy) =
+        legacy_phase_train(&mut pm, &mut eng, PhaseProtocol::Ours, &cfg).unwrap();
+
+    let mut pm2 = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+    let mut eng2 = NativeEngine::new("bs", "tt").unwrap();
+    let (phi_new, h_new) =
+        session::run_phase_domain(&mut pm2, &mut eng2, PhaseProtocol::Ours, &cfg).unwrap();
+
+    assert_eq!(phi_legacy, phi_new, "phase trajectories diverged");
+    assert_hist_eq(&h_legacy, &h_new, "phase ours");
+}
+
+#[test]
+fn phase_domain_ours_is_probe_thread_independent() {
+    let cfg = PhaseTrainConfig { epochs: 12, eval_every: 5, ..Default::default() };
+    let run = |threads: usize| {
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        eng.set_probe_threads(threads);
+        session::run_phase_domain(&mut pm, &mut eng, PhaseProtocol::Ours, &cfg).unwrap()
+    };
+    let (phi1, h1) = run(1);
+    for t in [2usize, 4] {
+        let (phit, ht) = run(t);
+        assert_eq!(phi1, phit, "phase params diverged at {t} probe threads");
+        assert_hist_eq(&h1, &ht, &format!("phase ours, {t} threads"));
+    }
+}
+
+#[test]
+fn phase_domain_flops_matches_legacy_bitwise() {
+    let cfg = PhaseTrainConfig { epochs: 3, eval_every: 2, ..Default::default() };
+
+    let mut pm = PhotonicModel::new("bs", PhotonicVariant::Onn, 0).unwrap();
+    let mut eng = NativeEngine::new("bs", "std").unwrap();
+    let (phi_legacy, h_legacy) =
+        legacy_phase_train(&mut pm, &mut eng, PhaseProtocol::Flops, &cfg).unwrap();
+
+    let mut pm2 = PhotonicModel::new("bs", PhotonicVariant::Onn, 0).unwrap();
+    let mut eng2 = NativeEngine::new("bs", "std").unwrap();
+    let (phi_new, h_new) =
+        session::run_phase_domain(&mut pm2, &mut eng2, PhaseProtocol::Flops, &cfg).unwrap();
+
+    assert_eq!(phi_legacy, phi_new);
+    assert_hist_eq(&h_legacy, &h_new, "phase flops");
+}
+
+#[test]
+fn mnist_zo_matches_legacy_bitwise() {
+    let model = mnist::build_classifier("tt").unwrap();
+    let data = MnistLike::generate(128, 0);
+
+    let mut flat_legacy = model.init_flat(0);
+    let curve_legacy =
+        legacy_mnist_zo(&model, &mut flat_legacy, &data, 30, 64, 0, 2).unwrap();
+
+    let mut flat_new = model.init_flat(0);
+    let curve_new = mnist::train_zo(&model, &mut flat_new, &data, 30, 64, 0, 2).unwrap();
+
+    assert_eq!(curve_legacy, curve_new, "training curves diverged");
+    assert_eq!(flat_legacy, flat_new, "final weights diverged");
+}
+
+#[test]
+fn mnist_fo_matches_legacy_bitwise() {
+    let model = mnist::build_classifier("std").unwrap();
+    let data = MnistLike::generate(64, 1);
+
+    let mut flat_legacy = model.init_flat(0);
+    legacy_mnist_fo(&model, &mut flat_legacy, &data, 2, 16, 0, 2).unwrap();
+
+    let mut flat_new = model.init_flat(0);
+    mnist::train_fo(&model, &mut flat_new, &data, 2, 16, 0, 2).unwrap();
+
+    assert_eq!(flat_legacy, flat_new, "final weights diverged");
+}

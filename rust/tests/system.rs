@@ -2,6 +2,9 @@
 //! composition, including failure injection. Native-engine based, so they
 //! run without artifacts.
 
+// these tests intentionally exercise the deprecated legacy shims
+#![allow(deprecated)]
+
 use optical_pinn::coordinator::{load_params, save_params, BatcherConfig, InferenceServer};
 use optical_pinn::engine::{rel_l2_eval, Engine, NativeEngine};
 use optical_pinn::experiments::{make_engine, Backend, RunSpec};
