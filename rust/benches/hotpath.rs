@@ -7,7 +7,7 @@
 
 use optical_pinn::bench_harness::{bench, black_box, record, Table};
 use optical_pinn::engine::native::default_threads;
-use optical_pinn::engine::{Engine, NativeEngine, PjrtEngine};
+use optical_pinn::engine::{Engine, NativeEngine, PjrtEngine, ProbeBatch};
 use optical_pinn::experiments::runner::artifacts_dir;
 use optical_pinn::linalg::gemm::{matmul, matmul_parallel};
 use optical_pinn::net::build_model;
@@ -101,8 +101,9 @@ fn main() {
     table.row(vec!["Std-MLP fwd 2730 pts".into(), format!("{:.3}", t.per_iter_ms()), format!("{:.1} kpts/s", 2.73 / t.mean_s)]);
 
     // 6. Probe-batched ZO step: one full tensor-wise RGE gradient estimate
-    //    (plan -> loss_many -> assemble), sequential vs probe-parallel.
-    //    This is the training-loop outer op the probe-batching PR targets.
+    //    (plan -> loss_many -> assemble), sequential vs probe-parallel vs
+    //    pipelined (async probe streams: the next step's plan is drawn
+    //    while the current batch is in flight).
     for (pde, variant) in [("bs", "tt"), ("hjb20", "tt")] {
         let mut eng = NativeEngine::new(pde, variant).unwrap();
         let params = eng.model.init_flat(0);
@@ -139,6 +140,35 @@ fn main() {
             }
             table.row(vec![label, format!("{:.2}", timing.per_iter_ms()), thr]);
         }
+
+        // Pipelined steady state: one iteration = wait for the in-flight
+        // batch, assemble, re-base the (pre-drawn) next plan, reissue.
+        eng.set_probe_threads(threads);
+        let mut rng = Rng::new(3);
+        est.draw_plan(&mut rng);
+        est.promote_plan();
+        let mut buf = ProbeBatch::new(params.len());
+        est.materialize_into(&params, &mut buf);
+        let mut pending = Some(eng.loss_many_async(buf, &pts));
+        let timing = bench(&format!("zo_step_pipelined_{pde}"), 1, iters, || {
+            est.draw_plan(&mut rng); // overlapped with the in-flight eval
+            let (mut b, losses) = pending.take().unwrap().wait();
+            est.assemble(&losses.unwrap(), &mut grad).unwrap();
+            est.promote_plan();
+            est.materialize_into(&params, &mut b);
+            pending = Some(eng.loss_many_async(b, &pts));
+        });
+        let (_, tail) = pending.take().unwrap().wait();
+        tail.unwrap();
+        let mut thr = format!("{:.1} probes/s", probes / timing.mean_s);
+        if let Some(seq) = seq_mean {
+            thr.push_str(&format!("  ({:.2}x speedup)", seq / timing.mean_s));
+        }
+        table.row(vec![
+            format!("zo_step {pde}/{variant} pipelined x{threads}"),
+            format!("{:.2}", timing.per_iter_ms()),
+            thr,
+        ]);
     }
 
     table.print();

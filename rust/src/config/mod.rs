@@ -34,6 +34,11 @@ pub struct ExperimentConfig {
     /// Worker threads for probe-batched ZO loss evaluation
     /// (`Engine::loss_many`); 0 keeps the engine default.
     pub probe_threads: usize,
+    /// Probe-evaluation pipeline depth: 1 = blocking, 2 = async probe
+    /// streams (overlap next-step plan generation with the in-flight
+    /// `loss_many` evaluation). Trajectories are bitwise-identical at
+    /// either depth.
+    pub pipeline_depth: usize,
     pub verbose: bool,
 }
 
@@ -56,6 +61,7 @@ impl Default for ExperimentConfig {
             n_queries: 1,
             max_forwards: None,
             probe_threads: 0,
+            pipeline_depth: 1,
             verbose: false,
         }
     }
@@ -102,6 +108,7 @@ impl ExperimentConfig {
                 "n_queries" => c.n_queries = v.as_usize()?,
                 "max_forwards" => c.max_forwards = Some(v.as_usize()? as u64),
                 "probe_threads" => c.probe_threads = v.as_usize()?,
+                "pipeline_depth" => c.pipeline_depth = v.as_usize()?,
                 "verbose" => c.verbose = matches!(v, Json::Bool(true)),
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
             }
@@ -150,6 +157,7 @@ impl ExperimentConfig {
             self.max_forwards = Some(v);
         }
         self.probe_threads = args.get_usize("probe-threads", self.probe_threads)?;
+        self.pipeline_depth = args.get_usize("pipeline-depth", self.pipeline_depth)?;
         if args.flag("verbose") {
             self.verbose = true;
         }
@@ -173,6 +181,12 @@ impl ExperimentConfig {
         }
         if !["pjrt", "native"].contains(&self.backend.as_str()) {
             return Err(Error::Config(format!("unknown backend {:?}", self.backend)));
+        }
+        if !(1..=2).contains(&self.pipeline_depth) {
+            return Err(Error::Config(format!(
+                "pipeline_depth must be 1 or 2, got {}",
+                self.pipeline_depth
+            )));
         }
         Ok(())
     }
@@ -207,6 +221,8 @@ mod tests {
                 "99",
                 "--probe-threads",
                 "4",
+                "--pipeline-depth",
+                "2",
                 "--max-forwards",
                 "123456",
                 "--verbose",
@@ -219,6 +235,7 @@ mod tests {
         assert_eq!(c.variant, "tt");
         assert_eq!(c.epochs, 99);
         assert_eq!(c.probe_threads, 4);
+        assert_eq!(c.pipeline_depth, 2);
         assert_eq!(c.max_forwards, Some(123_456));
         assert!(c.verbose);
         c.validate().unwrap();
@@ -238,6 +255,9 @@ mod tests {
         let mut c2 = ExperimentConfig::default();
         c2.backend = "cuda".into();
         assert!(c2.validate().is_err());
+        let mut c3 = ExperimentConfig::default();
+        c3.pipeline_depth = 3;
+        assert!(c3.validate().is_err());
     }
 
     #[test]

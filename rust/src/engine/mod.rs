@@ -8,6 +8,13 @@
 //! rust; it cross-checks the artifacts, drives the photonic phase-domain
 //! simulation when artifacts are absent, and serves as the reference for
 //! the §Perf comparisons.
+//!
+//! Probe evaluation has two shapes: the blocking [`Engine::loss_many`]
+//! and the non-blocking [`Engine::loss_many_async`], which returns a
+//! [`PendingLosses`] handle so the session driver can overlap next-step
+//! plan generation with the in-flight evaluation (async probe streams).
+
+#![deny(missing_docs)]
 
 pub mod native;
 pub mod pjrt;
@@ -57,6 +64,7 @@ impl ProbeBatch {
         self.data.len() / self.dim
     }
 
+    /// True when the batch holds no probe rows.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
@@ -120,6 +128,63 @@ impl<'a> IntoIterator for &'a ProbeBatch {
     }
 }
 
+/// A non-blocking handle to an in-flight [`Engine::loss_many_async`]
+/// evaluation.
+///
+/// [`PendingLosses::wait`] blocks until the evaluation finishes and
+/// returns the probe batch (so the caller can recycle its allocation —
+/// the session driver's double-buffered probe streams) together with the
+/// loss vector, in probe row order. Engines without a background path
+/// return an already-complete handle, so callers never need to know which
+/// kind they got.
+pub struct PendingLosses {
+    inner: Pending,
+}
+
+enum Pending {
+    /// Evaluation already finished (sequential/default engines).
+    Ready(ProbeBatch, Result<Vec<f64>>),
+    /// Evaluation running on a background thread (native engine).
+    InFlight(std::thread::JoinHandle<(ProbeBatch, Result<Vec<f64>>)>),
+}
+
+impl PendingLosses {
+    /// An already-complete handle (the default [`Engine::loss_many_async`]
+    /// path: evaluate synchronously, wrap the result).
+    pub fn ready(probes: ProbeBatch, result: Result<Vec<f64>>) -> PendingLosses {
+        PendingLosses { inner: Pending::Ready(probes, result) }
+    }
+
+    /// A handle over a background evaluation thread. The thread must
+    /// return the probe batch it was given along with the losses.
+    pub fn in_flight(
+        handle: std::thread::JoinHandle<(ProbeBatch, Result<Vec<f64>>)>,
+    ) -> PendingLosses {
+        PendingLosses { inner: Pending::InFlight(handle) }
+    }
+
+    /// True while the evaluation is still running on a background thread.
+    pub fn is_in_flight(&self) -> bool {
+        match &self.inner {
+            Pending::Ready(..) => false,
+            Pending::InFlight(h) => !h.is_finished(),
+        }
+    }
+
+    /// Block until the evaluation completes; returns the probe batch (for
+    /// buffer reuse) and the losses in probe row order. Panics on the
+    /// caller thread if the background evaluation panicked.
+    pub fn wait(self) -> (ProbeBatch, Result<Vec<f64>>) {
+        match self.inner {
+            Pending::Ready(probes, result) => (probes, result),
+            Pending::InFlight(handle) => match handle.join() {
+                Ok(pair) => pair,
+                Err(panic) => std::panic::resume_unwind(panic),
+            },
+        }
+    }
+}
+
 /// A loss/forward evaluation backend for one (pde, model) pair.
 pub trait Engine {
     /// The PDE benchmark this engine is bound to.
@@ -141,6 +206,20 @@ pub trait Engine {
         }
         Ok(out)
     }
+    /// Non-blocking probe-batch evaluation: take ownership of the batch,
+    /// start evaluating, and return a [`PendingLosses`] handle
+    /// immediately. The default evaluates synchronously via
+    /// [`Engine::loss_many`] and returns an already-complete handle, so
+    /// engines without a background path (PJRT, classifier) behave
+    /// exactly as before. The native engine overrides this to hand the
+    /// batch to its probe worker pool and return while the evaluation is
+    /// in flight. Results must be bitwise-identical to
+    /// [`Engine::loss_many`] on the same batch.
+    fn loss_many_async(&mut self, probes: ProbeBatch, pts: &PointSet) -> PendingLosses {
+        let result = self.loss_many(&probes, pts);
+        PendingLosses::ready(probes, result)
+    }
+
     /// Probe-level parallelism hint for [`Engine::loss_many`]
     /// (0 = engine default). No-op on engines without a parallel path.
     fn set_probe_threads(&mut self, _threads: usize) {}
@@ -153,6 +232,16 @@ pub trait Engine {
     fn forwards_per_loss(&self) -> usize;
     /// Refresh any per-step stochastic state (SE backend's MC nodes).
     fn resample(&mut self, _rng: &mut Rng) {}
+    /// True when [`Engine::resample`] consumes RNG draws or mutates state
+    /// the loss depends on (SE MC nodes, classifier minibatches). The
+    /// pipelined session driver pre-samples the next epoch's RNG work
+    /// while an evaluation is in flight, which is only trajectory-
+    /// preserving when `resample` is a no-op — engines that resample
+    /// stochastically report `true` here and the driver falls back to the
+    /// blocking loop.
+    fn has_stochastic_resample(&self) -> bool {
+        false
+    }
     /// Human-readable backend tag ("native" / "pjrt").
     fn backend(&self) -> &'static str;
 }
@@ -169,7 +258,28 @@ pub fn rel_l2_eval(engine: &mut dyn Engine, params: &[f64], rng: &mut Rng) -> Re
 
 #[cfg(test)]
 mod tests {
-    use super::ProbeBatch;
+    use super::{PendingLosses, ProbeBatch};
+
+    #[test]
+    fn ready_handle_round_trips_batch_and_losses() {
+        let mut pb = ProbeBatch::new(2);
+        pb.push(&[1.0, 2.0]);
+        let pending = PendingLosses::ready(pb, Ok(vec![0.5]));
+        assert!(!pending.is_in_flight());
+        let (pb, losses) = pending.wait();
+        assert_eq!(losses.unwrap(), vec![0.5]);
+        assert_eq!(pb.n_probes(), 1);
+    }
+
+    #[test]
+    fn in_flight_handle_joins_background_thread() {
+        let pb = ProbeBatch::new(3);
+        let handle = std::thread::spawn(move || (pb, Ok(vec![1.0, 2.0])));
+        let pending = PendingLosses::in_flight(handle);
+        let (pb, losses) = pending.wait();
+        assert_eq!(losses.unwrap(), vec![1.0, 2.0]);
+        assert_eq!(pb.dim(), 3);
+    }
 
     #[test]
     fn probe_batch_roundtrip() {

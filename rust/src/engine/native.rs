@@ -1,8 +1,13 @@
 //! Pure-rust engine: multithreaded forward + BP-free loss, with a
 //! probe-parallel [`Engine::loss_many`] that fans independent ZO probes
-//! across a pool of workers, each owning a reusable [`Workspace`].
+//! across a pool of workers, each owning a reusable [`Workspace`], and a
+//! non-blocking [`Engine::loss_many_async`] that runs the same fan-out on
+//! a background thread so the session driver can overlap next-step plan
+//! generation with the in-flight evaluation.
 
-use super::{Engine, ProbeBatch};
+use std::sync::{Arc, Mutex};
+
+use super::{Engine, PendingLosses, ProbeBatch};
 use crate::loss::{DerivMethod, LossWorkspace, PinnLoss};
 use crate::net::{build_model, FwdScratch, Model};
 use crate::pde::{get_pde, Pde, PointSet};
@@ -40,16 +45,64 @@ fn eval_probe(
     )
 }
 
+/// Evaluate every probe of `probes` into `out` using the given worker
+/// scratch: one worker = sequential, several = the contiguous static
+/// partition (every probe is one full loss evaluation over the same point
+/// set, so the load is uniform and the deterministic split keeps results
+/// independent of scheduling). Shared by the blocking [`Engine::loss_many`]
+/// and the background thread behind [`Engine::loss_many_async`], so both
+/// paths are bitwise-identical by construction.
+fn eval_batch_into(
+    model: &Model,
+    loss_fn: &PinnLoss,
+    pde: &dyn Pde,
+    probes: &ProbeBatch,
+    pts: &PointSet,
+    workspaces: &mut [Workspace],
+    out: &mut [f64],
+) {
+    let n = probes.n_probes();
+    let t = workspaces.len().min(n).max(1);
+    if t == 1 {
+        let ws = &mut workspaces[0];
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = eval_probe(model, loss_fn, pde, probes.probe(i), pts, ws);
+        }
+        return;
+    }
+    let per = n.div_ceil(t);
+    std::thread::scope(|s| {
+        for (ci, (chunk, ws)) in out.chunks_mut(per).zip(workspaces.iter_mut()).enumerate() {
+            s.spawn(move || {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    let p = probes.probe(ci * per + j);
+                    *slot = eval_probe(model, loss_fn, pde, p, pts, ws);
+                }
+            });
+        }
+    });
+}
+
 /// Engine that evaluates the model and the SG/SE loss natively.
 pub struct NativeEngine {
-    pub model: Model,
-    pde: Box<dyn Pde>,
+    /// The body network every probe evaluates. Behind an `Arc` so
+    /// in-flight async evaluations share it with the engine (the
+    /// architecture is immutable after construction).
+    pub model: Arc<Model>,
+    pde: Arc<dyn Pde>,
+    /// The PINN loss (SG or SE). In-flight async evaluations snapshot a
+    /// clone at issue time, so mutating it (e.g. [`PinnLoss::resample_mc`])
+    /// never races a running batch.
     pub loss_fn: PinnLoss,
+    /// Row-parallelism inside one forward pass.
     pub threads: usize,
     /// Worker count for probe-batched `loss_many` (>= 1).
     pub probe_threads: usize,
     /// Persistent per-worker scratch (lazily grown to `probe_threads`).
     workspaces: Vec<Workspace>,
+    /// Per-worker scratch for the background `loss_many_async` path,
+    /// shared with the evaluation thread and reused across steps.
+    async_workspaces: Arc<Mutex<Vec<Workspace>>>,
 }
 
 impl NativeEngine {
@@ -58,6 +111,8 @@ impl NativeEngine {
         Self::with_options(pde_name, variant, 2, None, NativeOptions::default())
     }
 
+    /// Build with explicit loss method, architecture and threading
+    /// options (ablations, SE baselines, bench harnesses).
     pub fn with_options(
         pde_name: &str,
         variant: &str,
@@ -81,12 +136,13 @@ impl NativeEngine {
         let probe_threads =
             if opts.probe_threads == 0 { default_threads() } else { opts.probe_threads };
         Ok(NativeEngine {
-            model,
-            pde,
+            model: Arc::new(model),
+            pde: Arc::from(pde),
             loss_fn,
             threads: opts.threads,
             probe_threads,
             workspaces: Vec::new(),
+            async_workspaces: Arc::new(Mutex::new(Vec::new())),
         })
     }
 
@@ -99,11 +155,17 @@ impl NativeEngine {
 /// Construction options for [`NativeEngine`].
 #[derive(Debug, Clone)]
 pub struct NativeOptions {
+    /// Derivative backend for the loss (sparse-grid Stein or MC Stein).
     pub method: DerivMethod,
+    /// Sparse-grid accuracy level override (None = the pde's default).
     pub level: Option<usize>,
+    /// Stein smoothing radius override (None = the pde's default).
     pub sigma: Option<f64>,
+    /// MC sample count for the SE baseline (None = the pde's default).
     pub mc_samples: Option<usize>,
+    /// Seed for the SE backend's initial MC node draw.
     pub se_seed: u64,
+    /// Row-parallelism inside one forward pass.
     pub threads: usize,
     /// Workers for probe-batched `loss_many` (0 = engine default).
     pub probe_threads: usize,
@@ -163,34 +225,57 @@ impl Engine for NativeEngine {
         if self.workspaces.len() < t {
             self.workspaces.resize_with(t, Workspace::default);
         }
-        let model = &self.model;
-        let loss_fn = &self.loss_fn;
-        let pde = self.pde.as_ref();
         let mut out = vec![0.0; n];
-        if t == 1 {
-            let ws = &mut self.workspaces[0];
-            for (i, slot) in out.iter_mut().enumerate() {
-                *slot = eval_probe(model, loss_fn, pde, probes.probe(i), pts, ws);
-            }
-            return Ok(out);
-        }
-        // Contiguous static partition: every probe is one full loss
-        // evaluation over the same point set, so the load is uniform and
-        // the deterministic split keeps results independent of scheduling.
-        let per = n.div_ceil(t);
-        std::thread::scope(|s| {
-            for (ci, (chunk, ws)) in
-                out.chunks_mut(per).zip(self.workspaces.iter_mut()).enumerate()
-            {
-                s.spawn(move || {
-                    for (j, slot) in chunk.iter_mut().enumerate() {
-                        let p = probes.probe(ci * per + j);
-                        *slot = eval_probe(model, loss_fn, pde, p, pts, ws);
-                    }
-                });
-            }
-        });
+        eval_batch_into(
+            &self.model,
+            &self.loss_fn,
+            self.pde.as_ref(),
+            probes,
+            pts,
+            &mut self.workspaces[..t],
+            &mut out,
+        );
         Ok(out)
+    }
+
+    fn loss_many_async(&mut self, probes: ProbeBatch, pts: &PointSet) -> PendingLosses {
+        let n = probes.n_probes();
+        if n == 0 {
+            return PendingLosses::ready(probes, Ok(Vec::new()));
+        }
+        if probes.dim() != self.model.n_params() {
+            let e = err(format!(
+                "probe dim {} != model n_params {}",
+                probes.dim(),
+                self.model.n_params()
+            ));
+            return PendingLosses::ready(probes, Err(e));
+        }
+        // Snapshot everything the evaluation reads: the model/pde are
+        // immutable (shared via Arc), the loss is cloned so a subsequent
+        // `resample` cannot race the in-flight batch, and the points are
+        // copied because the caller may drop them before waiting. The
+        // clone + thread spawn happen once per *step* (not per probe),
+        // amortized over the batch's ~1e5 point-forwards; per-probe
+        // scratch stays pooled in `async_workspaces`.
+        let model = Arc::clone(&self.model);
+        let pde = Arc::clone(&self.pde);
+        let loss_fn = self.loss_fn.clone();
+        let pts = pts.clone();
+        let t = self.probe_threads.max(1).min(n);
+        let pool = Arc::clone(&self.async_workspaces);
+        let handle = std::thread::spawn(move || {
+            let mut guard = pool.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+            if guard.len() < t {
+                guard.resize_with(t, Workspace::default);
+            }
+            let mut out = vec![0.0; n];
+            let ws = &mut guard[..t];
+            eval_batch_into(&model, &loss_fn, pde.as_ref(), &probes, &pts, ws, &mut out);
+            drop(guard);
+            (probes, Ok(out))
+        });
+        PendingLosses::in_flight(handle)
     }
 
     fn set_probe_threads(&mut self, threads: usize) {
@@ -216,6 +301,10 @@ impl Engine for NativeEngine {
         if self.loss_fn.method == DerivMethod::Se {
             self.loss_fn.resample_mc(rng);
         }
+    }
+
+    fn has_stochastic_resample(&self) -> bool {
+        self.loss_fn.method == DerivMethod::Se
     }
 
     fn backend(&self) -> &'static str {
@@ -271,6 +360,62 @@ mod tests {
             let got = eng.loss_many(&probes, &pts).unwrap();
             assert_eq!(got, want, "probe_threads = {t}");
         }
+    }
+
+    #[test]
+    fn loss_many_async_matches_blocking_bitwise() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(1);
+        let pts = eng.pde().sample_points(&mut rng);
+        let mut probes = crate::engine::ProbeBatch::new(params.len());
+        for i in 0..5 {
+            let row = probes.push_perturbed(&params);
+            row[i * 3] -= 0.02 * (i as f64 + 1.0);
+        }
+        let want = eng.loss_many(&probes, &pts).unwrap();
+        for t in [1usize, 4] {
+            eng.set_probe_threads(t);
+            let pending = eng.loss_many_async(probes.clone(), &pts);
+            let (back, got) = pending.wait();
+            assert_eq!(got.unwrap(), want, "probe_threads = {t}");
+            assert_eq!(back.as_flat(), probes.as_flat(), "batch must round-trip");
+        }
+    }
+
+    #[test]
+    fn loss_many_async_overlaps_with_engine_use() {
+        // While a batch is in flight, the engine itself must stay usable
+        // (the driver samples next-step points and evaluates observers).
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(2);
+        let pts = eng.pde().sample_points(&mut rng);
+        let mut probes = crate::engine::ProbeBatch::new(params.len());
+        probes.push(&params);
+        let want = eng.loss(&params, &pts).unwrap();
+        let pending = eng.loss_many_async(probes, &pts);
+        // concurrent blocking use of the engine
+        let during = eng.loss(&params, &pts).unwrap();
+        let (_, got) = pending.wait();
+        assert_eq!(got.unwrap(), vec![want]);
+        assert_eq!(during, want);
+    }
+
+    #[test]
+    fn async_empty_and_mismatched_batches_resolve_immediately() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut rng = Rng::new(0);
+        let pts = eng.pde().sample_points(&mut rng);
+        let empty = crate::engine::ProbeBatch::new(eng.n_params());
+        let pending = eng.loss_many_async(empty, &pts);
+        assert!(!pending.is_in_flight());
+        assert!(pending.wait().1.unwrap().is_empty());
+        let mut bad = crate::engine::ProbeBatch::new(3);
+        bad.push(&[0.0, 0.0, 0.0]);
+        let pending = eng.loss_many_async(bad, &pts);
+        assert!(!pending.is_in_flight());
+        assert!(pending.wait().1.is_err());
     }
 
     #[test]

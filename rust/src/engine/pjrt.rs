@@ -20,6 +20,7 @@ use crate::{err, Error, Result};
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The parsed `manifest.json` of the artifacts directory.
     pub manifest: Json,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
     /// executions performed (telemetry for the coordinator)
@@ -135,6 +136,7 @@ impl PjrtRuntime {
 pub struct PjrtEngine {
     rt: PjrtRuntime,
     pde: Box<dyn Pde>,
+    /// Model key in the artifact manifest (e.g. `bs_tt`).
     pub model_key: String,
     loss_name: String,
     grad_name: Option<String>,
@@ -266,7 +268,9 @@ impl Engine for PjrtEngine {
     // `loss_many` keeps the trait's sequential fallback: the compiled loss
     // graph takes one parameter vector, so probes execute back to back. A
     // (n_probes x d)-batched HLO graph is the planned upgrade (see ROADMAP
-    // "Open items").
+    // "Open items"). `loss_many_async` likewise keeps the trait's
+    // trivially-complete default, so pipelined sessions degrade to the
+    // blocking schedule on this engine.
 
     fn loss_grad(&mut self, params: &[f64], pts: &PointSet) -> Result<(f64, Vec<f64>)> {
         let name = self
@@ -311,6 +315,10 @@ impl Engine for PjrtEngine {
         if let Some(mc) = &mut self.mc_nodes {
             rng.fill_normal(mc);
         }
+    }
+
+    fn has_stochastic_resample(&self) -> bool {
+        self.mc_nodes.is_some()
     }
 
     fn backend(&self) -> &'static str {

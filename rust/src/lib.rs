@@ -61,6 +61,39 @@
 //! count: the plan is fixed before evaluation, every probe's loss is
 //! deterministic, and assembly order never depends on scheduling.
 //!
+//! The contract also has a non-blocking form:
+//! [`engine::Engine::loss_many_async`] takes ownership of the batch and
+//! returns an [`engine::PendingLosses`] handle immediately (the native
+//! engine evaluates on a background worker pool; other engines return an
+//! already-complete handle). The session driver's **async probe streams**
+//! (`--pipeline-depth 2`) use it to draw step *k+1*'s probe plan while
+//! step *k* is still in flight — bitwise-identical trajectories either
+//! way, because speculative plans are re-based on the post-step
+//! parameters before they are committed.
+//!
+//! ```
+//! use optical_pinn::engine::{Engine, NativeEngine, ProbeBatch};
+//! use optical_pinn::util::rng::Rng;
+//!
+//! # fn main() -> optical_pinn::Result<()> {
+//! let mut engine = NativeEngine::new("bs", "tt")?;
+//! let params = engine.model.init_flat(0);
+//! let mut rng = Rng::new(0);
+//! let pts = engine.pde().sample_points(&mut rng);
+//! // plan two probes, evaluate them as one batch
+//! let mut plan = ProbeBatch::new(params.len());
+//! plan.push(&params);
+//! plan.push(&params);
+//! let losses = engine.loss_many(&plan, &pts)?;
+//! assert_eq!(losses.len(), 2);
+//! // or without blocking: hand the batch to the engine's worker pool
+//! let pending = engine.loss_many_async(plan, &pts);
+//! let (_plan, async_losses) = pending.wait();
+//! assert_eq!(async_losses?, losses);
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! ## The unified session driver
 //!
 //! All three training entry points — weight-domain ZO/FO
@@ -73,9 +106,11 @@
 //! RGE / coordinate-wise / L²ight subspace-FO) and an
 //! [`session::Observer`] (eval scheduling, curve capture, periodic
 //! checkpointing). `max_forwards` budgets are enforced uniformly in every
-//! domain; eval-time queries are excluded from the budget. Trajectories
-//! are pinned bitwise against frozen copies of the pre-session loops in
-//! `rust/tests/session_parity.rs`.
+//! domain; eval-time queries are excluded from the budget, and
+//! [`session::SessionBuilder::pipeline_depth`] selects blocking vs
+//! async-probe-stream scheduling. Trajectories are pinned bitwise against
+//! frozen copies of the pre-session loops — at any probe-thread count and
+//! any pipeline depth — in `rust/tests/session_parity.rs`.
 
 pub mod bench_harness;
 pub mod config;

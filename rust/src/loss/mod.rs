@@ -33,6 +33,12 @@ pub enum DerivMethod {
 }
 
 /// The full PINN loss for one PDE benchmark.
+///
+/// `Clone` is part of the async probe-stream contract: the native
+/// engine's [`crate::engine::Engine::loss_many_async`] snapshots the loss
+/// at issue time, so a subsequent [`PinnLoss::resample_mc`] never races an
+/// in-flight batch.
+#[derive(Clone)]
 pub struct PinnLoss {
     pub method: DerivMethod,
     pub estimator: SteinEstimator,

@@ -72,12 +72,12 @@ const HELP: &str = "usage: opinn <train|train-phase|tables|hw-report|info> [opti
   train <pde> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
         [--lr F] [--seed N] [--rank N] [--width N] [--mu F] [--queries N]
         [--eval-every N] [--max-forwards N] [--backend pjrt|native]
-        [--probe-threads N] [--verbose] [--out ckpt.json] [--ckpt-every N]
-        [--curve curve.csv]
+        [--probe-threads N] [--pipeline-depth 1|2] [--verbose]
+        [--out ckpt.json] [--ckpt-every N] [--curve curve.csv]
   train-phase <pde> [--protocol ours|flops|l2ight] [--epochs N] [--lr F]
         [--seed N] [--mu F] [--queries N] [--eval-every N]
         [--max-forwards N] [--backend pjrt|native] [--probe-threads N]
-        [--verbose] [--out phases.json]
+        [--pipeline-depth 1|2] [--verbose] [--out phases.json]
   tables <t1|t2|t3|t456|fig3|tt_rank|width|grid|mc_samples|sg_level|sigma|mu|queries|mnist>
   hw-report [--epochs N]
   info
@@ -89,6 +89,10 @@ options:
                      enforced uniformly in every domain (eval-time
                      loss/rel-l2 queries are excluded from the budget)
   --probe-threads N  ZO probe-batch workers (0 = engine default)
+  --pipeline-depth N 1 = blocking probe evaluation (default); 2 = async
+                     probe streams: generate the next step's probe plan
+                     while the current batch is in flight (bitwise-
+                     identical trajectories either way)
   --ckpt-every N     with --out: checkpoint every N epochs, not just at
                      the end
   --curve FILE       write the eval curve as CSV (train)
@@ -130,6 +134,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .seed(cfg.seed)
         .eval_every(cfg.eval_every)
         .max_forwards(cfg.max_forwards)
+        .pipeline_depth(cfg.pipeline_depth)
         .verbose(true)
         .method(method, model.param_layout());
     let ckpt_every = args.get_usize("ckpt-every", 0)?;
@@ -193,6 +198,7 @@ fn cmd_train_phase(args: &Args) -> Result<()> {
         eval_every: cfg.eval_every,
         seed: cfg.seed,
         max_forwards: cfg.max_forwards,
+        pipeline_depth: cfg.pipeline_depth,
         verbose: true,
         ..Default::default()
     };

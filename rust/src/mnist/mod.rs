@@ -381,6 +381,12 @@ impl Engine for ClassifierEngine<'_> {
         self.y = y;
     }
 
+    // The minibatch redraw consumes RNG and changes the loss: pipelined
+    // sessions must keep the blocking schedule on this engine.
+    fn has_stochastic_resample(&self) -> bool {
+        true
+    }
+
     fn backend(&self) -> &'static str {
         "classifier"
     }

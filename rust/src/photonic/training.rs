@@ -39,19 +39,28 @@ pub enum PhaseProtocol {
 /// Configuration for a phase-domain run.
 #[derive(Debug, Clone)]
 pub struct PhaseTrainConfig {
+    /// Scheduled optimizer steps.
     pub epochs: usize,
+    /// Adam learning rate.
     pub lr: f64,
     /// ZO smoothing μ — the paper sets it to the minimum phase control
     /// resolution (2π/256 for 8-bit control).
     pub mu: f64,
+    /// RGE query count per step.
     pub n_queries: usize,
+    /// Evaluate the rel-l2/loss curves every this many epochs.
     pub eval_every: usize,
+    /// Base seed: Φ initialization, eval clouds and (salted) train RNG.
     pub seed: u64,
     /// Stop once this many photonic forwards have been consumed — the
     /// same uniform budget the weight domain honors (eval-time
     /// `loss`/`rel_l2` queries are intentionally excluded; see
     /// [`crate::session::SessionBuilder::max_forwards`]).
     pub max_forwards: Option<u64>,
+    /// Probe-evaluation pipeline depth (1 = blocking, 2 = async probe
+    /// streams); see [`crate::session::SessionBuilder::pipeline_depth`].
+    pub pipeline_depth: usize,
+    /// Log a progress line at every eval epoch.
     pub verbose: bool,
 }
 
@@ -65,6 +74,7 @@ impl Default for PhaseTrainConfig {
             eval_every: 40,
             seed: 0,
             max_forwards: None,
+            pipeline_depth: 1,
             verbose: false,
         }
     }
@@ -72,9 +82,30 @@ impl Default for PhaseTrainConfig {
 
 /// Train MZI phases on-chip; returns (final phases, history).
 ///
-/// Thin shim over the unified session driver; prefer
-/// [`crate::session::phase_session`] for new code.
-#[deprecated(note = "use session::phase_session (or session::run_phase_domain)")]
+/// Thin shim over the unified session driver. Migrate call sites to
+/// [`crate::session::run_phase_domain`] — it takes the exact same
+/// arguments (including the Φ initialization from `cfg.seed`) and returns
+/// the bitwise-identical trajectory — or to
+/// [`crate::session::phase_session`] when you want to drive a
+/// pre-initialized Φ vector yourself:
+///
+/// ```
+/// use optical_pinn::engine::NativeEngine;
+/// use optical_pinn::photonic::{PhaseProtocol, PhaseTrainConfig, PhotonicModel, PhotonicVariant};
+/// use optical_pinn::session;
+///
+/// # fn main() -> optical_pinn::Result<()> {
+/// let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0)?;
+/// let mut engine = NativeEngine::new("bs", "tt")?;
+/// let cfg = PhaseTrainConfig { epochs: 2, eval_every: 1, ..Default::default() };
+/// // before: photonic::train_phase_domain(&mut pm, &mut engine, PhaseProtocol::Ours, &cfg)?
+/// let (phi, hist) = session::run_phase_domain(&mut pm, &mut engine, PhaseProtocol::Ours, &cfg)?;
+/// assert_eq!(phi.len(), pm.n_trainable());
+/// assert!(hist.final_error.is_finite());
+/// # Ok(())
+/// # }
+/// ```
+#[deprecated(note = "use session::run_phase_domain (same arguments) or session::phase_session")]
 pub fn train_phase_domain(
     pm: &mut PhotonicModel,
     engine: &mut dyn Engine,

@@ -20,31 +20,53 @@
 //! [`SessionBuilder`] subsumes the legacy `TrainConfig` /
 //! `PhaseTrainConfig` split and enforces `max_forwards` budgets uniformly
 //! in every domain: the budget counts *training* loss queries only;
-//! eval-time queries are excluded (see [`observer`]). Trajectories are
-//! bitwise-identical to the pre-session loops at any `--probe-threads`
-//! setting (`rust/tests/session_parity.rs` pins this against frozen
-//! copies of the legacy loops).
+//! eval-time queries are excluded (see [`observer`]).
 //!
-//! ```no_run
+//! ## Async probe streams
+//!
+//! At [`SessionBuilder::pipeline_depth`] 2 the driver runs the
+//! double-buffered probe-stream schedule: while the engine evaluates the
+//! step-*k* [`ProbeBatch`] in flight
+//! ([`Engine::loss_many_async`](crate::engine::Engine::loss_many_async)),
+//! the driver draws step *k+1*'s stochastic plan on its own thread. Drawn
+//! plans are **speculative** — their probe positions are re-based on the
+//! post-step parameters before being committed to the engine
+//! ("re-plan-or-commit", see [`GradientSource::materialize`]) — so
+//! trajectories are bitwise-identical to the blocking schedule.
+//!
+//! ## Determinism contract
+//!
+//! Trajectories are bitwise-identical to the pre-session loops at any
+//! `--probe-threads` and any `--pipeline-depth` setting
+//! (`rust/tests/session_parity.rs` pins both against frozen copies of the
+//! legacy loops). The ingredients: probe plans draw their ξ from
+//! counter-derived RNG streams, engines evaluate plans independently of
+//! scheduling, and the pipelined driver preserves the exact main-RNG draw
+//! order of the blocking loop.
+//!
+//! ```
 //! use optical_pinn::engine::NativeEngine;
-//! use optical_pinn::net::build_model;
 //! use optical_pinn::session::SessionBuilder;
 //! use optical_pinn::zo::{RgeConfig, TrainMethod};
 //!
 //! # fn main() -> optical_pinn::Result<()> {
 //! let mut engine = NativeEngine::new("bs", "tt")?;
-//! let model = build_model("bs", "tt", 2, None)?;
-//! let mut params = model.init_flat(0);
-//! let hist = SessionBuilder::new(500)
+//! let mut params = engine.model.init_flat(0);
+//! let layout = engine.model.param_layout();
+//! let hist = SessionBuilder::new(2) // a 2-epoch smoke run
 //!     .lr(2e-3)
-//!     .eval_every(50)
-//!     .method(TrainMethod::ZoRge(RgeConfig::default()), model.param_layout())
+//!     .eval_every(1)
+//!     .pipeline_depth(2) // async probe streams
+//!     .method(TrainMethod::ZoRge(RgeConfig::default()), layout)
 //!     .build(&mut engine)?
 //!     .run(&mut params)?;
-//! println!("final rel_l2 = {}", hist.final_error);
+//! assert!(hist.final_error.is_finite());
+//! assert!(hist.total_forwards > 0);
 //! # Ok(())
 //! # }
 //! ```
+
+#![deny(missing_docs)]
 
 pub mod observer;
 pub mod source;
@@ -58,7 +80,7 @@ pub use crate::zo::trainer::History;
 
 use std::path::PathBuf;
 
-use crate::engine::{Engine, ProbeBatch};
+use crate::engine::{Engine, PendingLosses, ProbeBatch};
 use crate::net::ParamEntry;
 use crate::optim::{Adam, Optimizer};
 use crate::pde::PointSet;
@@ -87,33 +109,45 @@ pub struct StepInfo {
 
 /// Everything an observer may touch after a step.
 pub struct StepCtx<'c> {
+    /// The session's engine (free for eval queries at observe time — the
+    /// pipelined driver never has a batch in flight across `after_step`).
     pub engine: &'c mut dyn Engine,
+    /// The session's parameter space.
     pub space: &'c mut dyn ParamSpace,
     /// The trainable vector (post-update).
     pub params: &'c [f64],
     /// This epoch's collocation points.
     pub pts: &'c PointSet,
+    /// The session's reusable scratch buffers.
     pub ws: &'c mut SessionWorkspace,
+    /// Progress flags for the step just applied.
     pub info: StepInfo,
 }
 
 /// Reusable per-session scratch, sized once so the hot loop never
 /// allocates on the session side: the realized parameter vector, the
-/// realized probe batch and the FO pullback buffer.
+/// realized probe batch, the trainable-space plan buffer and the FO
+/// pullback buffer.
 pub struct SessionWorkspace {
     /// Engine-space image of the trainable vector.
     pub realized: Vec<f64>,
     /// Engine-space image of a whole probe plan.
     pub realized_batch: ProbeBatch,
+    /// Trainable-space probe plan scratch (the pipelined driver
+    /// materializes here before realizing through a non-identity space).
+    pub plan_batch: ProbeBatch,
     /// Trainable-space FO gradient scratch.
     pub pullback: Vec<f64>,
 }
 
 impl SessionWorkspace {
+    /// Scratch for an engine-space dimensionality of `out_dim` and a
+    /// trainable vector of length `trainable_dim`.
     pub fn new(out_dim: usize, trainable_dim: usize) -> SessionWorkspace {
         SessionWorkspace {
             realized: vec![0.0; out_dim],
             realized_batch: ProbeBatch::new(out_dim),
+            plan_batch: ProbeBatch::new(trainable_dim),
             pullback: vec![0.0; trainable_dim],
         }
     }
@@ -129,11 +163,18 @@ pub struct Session<'a> {
     lr: f64,
     train_seed: u64,
     max_forwards: Option<u64>,
+    pipeline_depth: usize,
 }
 
 impl Session<'_> {
     /// Drive the session; `params` (the trainable vector) is updated in
     /// place and the recorded [`History`] is returned.
+    ///
+    /// At pipeline depth 2 the async probe-stream schedule is used when
+    /// the gradient source supports the three-phase contract **and** the
+    /// engine's `resample` is a no-op; otherwise the driver silently
+    /// degrades to the blocking schedule (the trajectory is identical
+    /// either way).
     pub fn run(self, params: &mut [f64]) -> Result<History> {
         let Session {
             engine,
@@ -144,53 +185,210 @@ impl Session<'_> {
             lr,
             train_seed,
             max_forwards,
+            pipeline_depth,
         } = self;
         let t0 = std::time::Instant::now();
-        let d = params.len();
-        let mut opt = Adam::new(d, lr);
-        let mut rng = Rng::new(train_seed);
+        let pipelined = pipeline_depth >= 2
+            && source.supports_pipelining()
+            && !engine.has_stochastic_resample();
         let mut hist = History::default();
-        let mut grad = vec![0.0; d];
-        let mut ws = SessionWorkspace::new(space.out_dim(), d);
-        let mut forwards: u64 = 0;
-
-        for epoch in 0..epochs {
-            engine.resample(&mut rng);
-            let pts = engine.pde().sample_points(&mut rng);
-            let report = source.step(
-                &mut *engine,
+        let forwards = if pipelined {
+            run_pipelined(
+                engine,
                 space.as_mut(),
+                source.as_mut(),
+                observer.as_mut(),
+                epochs,
+                lr,
+                train_seed,
+                max_forwards,
                 params,
-                &pts,
-                &mut rng,
-                &mut grad,
-                &mut ws,
-            )?;
-            forwards += report.forwards;
-            if report.apply {
-                opt.step(params, &grad);
-            }
-
-            let last = epoch + 1 == epochs;
-            let budget_hit = max_forwards.map(|m| forwards >= m).unwrap_or(false);
-            let mut ctx = StepCtx {
-                engine: &mut *engine,
-                space: space.as_mut(),
-                params: &*params,
-                pts: &pts,
-                ws: &mut ws,
-                info: StepInfo { epoch, epochs, last, budget_hit, forwards },
-            };
-            observer.after_step(&mut ctx, &mut hist)?;
-            if budget_hit {
-                break;
-            }
-        }
+                &mut hist,
+            )?
+        } else {
+            run_blocking(
+                engine,
+                space.as_mut(),
+                source.as_mut(),
+                observer.as_mut(),
+                epochs,
+                lr,
+                train_seed,
+                max_forwards,
+                params,
+                &mut hist,
+            )?
+        };
         hist.final_error = *hist.errors.last().unwrap_or(&f64::NAN);
         hist.total_forwards = forwards;
         hist.wall_secs = t0.elapsed().as_secs_f64();
         Ok(hist)
     }
+}
+
+/// The blocking (pipeline depth 1) drive loop; returns the training
+/// forwards consumed.
+#[allow(clippy::too_many_arguments)]
+fn run_blocking(
+    engine: &mut dyn Engine,
+    space: &mut dyn ParamSpace,
+    source: &mut dyn GradientSource,
+    observer: &mut dyn Observer,
+    epochs: usize,
+    lr: f64,
+    train_seed: u64,
+    max_forwards: Option<u64>,
+    params: &mut [f64],
+    hist: &mut History,
+) -> Result<u64> {
+    let d = params.len();
+    let mut opt = Adam::new(d, lr);
+    let mut rng = Rng::new(train_seed);
+    let mut grad = vec![0.0; d];
+    let mut ws = SessionWorkspace::new(space.out_dim(), d);
+    let mut forwards: u64 = 0;
+
+    for epoch in 0..epochs {
+        engine.resample(&mut rng);
+        let pts = engine.pde().sample_points(&mut rng);
+        let report =
+            source.step(&mut *engine, &mut *space, params, &pts, &mut rng, &mut grad, &mut ws)?;
+        forwards += report.forwards;
+        if report.apply {
+            opt.step(params, &grad);
+        }
+
+        let last = epoch + 1 == epochs;
+        let budget_hit = max_forwards.map(|m| forwards >= m).unwrap_or(false);
+        let mut ctx = StepCtx {
+            engine: &mut *engine,
+            space: &mut *space,
+            params: &*params,
+            pts: &pts,
+            ws: &mut ws,
+            info: StepInfo { epoch, epochs, last, budget_hit, forwards },
+        };
+        observer.after_step(&mut ctx, hist)?;
+        if budget_hit {
+            break;
+        }
+    }
+    Ok(forwards)
+}
+
+/// Materialize the current drawn plan around `params`, realize it through
+/// the parameter space, and hand it to the engine without blocking.
+/// `eval_buf` is the recycled engine-space batch of the double buffer;
+/// ownership moves into the returned handle and comes back on `wait`.
+fn materialize_and_issue(
+    source: &mut dyn GradientSource,
+    space: &mut dyn ParamSpace,
+    engine: &mut dyn Engine,
+    params: &[f64],
+    pts: &PointSet,
+    ws: &mut SessionWorkspace,
+    mut eval_buf: ProbeBatch,
+) -> Result<PendingLosses> {
+    if space.is_identity() {
+        source.materialize(params, &mut eval_buf)?;
+    } else {
+        let plan = &mut ws.plan_batch;
+        source.materialize(params, plan)?;
+        eval_buf.clear();
+        for p in plan.iter() {
+            space.realize_into(p, eval_buf.push_zeroed());
+        }
+    }
+    Ok(engine.loss_many_async(eval_buf, pts))
+}
+
+/// The async probe-stream drive loop (pipeline depth 2): while the
+/// step-*k* batch is in flight, draw step *k+1*'s stochastic plan and
+/// collocation points on the driver thread, preserving the blocking
+/// loop's exact main-RNG draw order. On step application the speculative
+/// plan is re-based on the updated parameters ("re-plan-or-commit") and
+/// committed to the engine. Bitwise-identical to [`run_blocking`];
+/// `rust/tests/session_parity.rs` pins this.
+#[allow(clippy::too_many_arguments)]
+fn run_pipelined(
+    engine: &mut dyn Engine,
+    space: &mut dyn ParamSpace,
+    source: &mut dyn GradientSource,
+    observer: &mut dyn Observer,
+    epochs: usize,
+    lr: f64,
+    train_seed: u64,
+    max_forwards: Option<u64>,
+    params: &mut [f64],
+    hist: &mut History,
+) -> Result<u64> {
+    let d = params.len();
+    let mut opt = Adam::new(d, lr);
+    let mut rng = Rng::new(train_seed);
+    let mut grad = vec![0.0; d];
+    let mut ws = SessionWorkspace::new(space.out_dim(), d);
+    let fpl = engine.forwards_per_loss() as u64;
+    let mut forwards: u64 = 0;
+
+    if epochs == 0 {
+        return Ok(0);
+    }
+
+    // Prologue: draw, materialize and issue epoch 0.
+    engine.resample(&mut rng);
+    let mut pts = engine.pde().sample_points(&mut rng);
+    source.draw(&mut rng)?;
+    source.advance_plan()?;
+    let eval_buf = ProbeBatch::new(space.out_dim());
+    let mut pending = Some(materialize_and_issue(
+        source, space, engine, params, &pts, &mut ws, eval_buf,
+    )?);
+    let mut pts_next: Option<PointSet> = None;
+
+    for epoch in 0..epochs {
+        let last = epoch + 1 == epochs;
+        // Overlap window: while epoch `epoch`'s batch is in flight, do
+        // epoch+1's parameter-independent work. The draw lands in the
+        // source's *staged* plan slot, so the in-flight plan stays intact
+        // for assembly. The engine is safe to touch (resample is a no-op
+        // here — checked at dispatch — and the native async path
+        // snapshots its loss state at issue time), and observers never
+        // consume the main RNG, so the draw order matches the blocking
+        // loop exactly.
+        if !last {
+            engine.resample(&mut rng);
+            pts_next = Some(engine.pde().sample_points(&mut rng));
+            source.draw(&mut rng)?;
+        }
+        let (buf, losses) = pending.take().expect("a batch is always in flight here").wait();
+        let losses = losses?;
+        let report = source.assemble(&losses, fpl, &mut grad)?;
+        forwards += report.forwards;
+        if report.apply {
+            opt.step(params, &grad);
+        }
+
+        let budget_hit = max_forwards.map(|m| forwards >= m).unwrap_or(false);
+        let mut ctx = StepCtx {
+            engine: &mut *engine,
+            space: &mut *space,
+            params: &*params,
+            pts: &pts,
+            ws: &mut ws,
+            info: StepInfo { epoch, epochs, last, budget_hit, forwards },
+        };
+        observer.after_step(&mut ctx, hist)?;
+        if budget_hit || last {
+            break;
+        }
+        // Commit the speculative epoch+1 plan: promote it to active,
+        // re-base its probe rows on the post-step parameters and hand it
+        // back to the engine, recycling the returned batch buffer.
+        pts = pts_next.take().expect("drawn in the overlap window");
+        source.advance_plan()?;
+        pending = Some(materialize_and_issue(source, space, engine, params, &pts, &mut ws, buf)?);
+    }
+    Ok(forwards)
 }
 
 /// Builder for [`Session`]: one config surface for weight-, phase- and
@@ -204,6 +402,7 @@ pub struct SessionBuilder {
     train_rng_seed: Option<u64>,
     eval_every: usize,
     max_forwards: Option<u64>,
+    pipeline_depth: usize,
     verbose: bool,
     tag: Option<String>,
     method: Option<(TrainMethod, Vec<ParamEntry>)>,
@@ -223,6 +422,7 @@ impl SessionBuilder {
             train_rng_seed: None,
             eval_every: (epochs / 20).max(1),
             max_forwards: None,
+            pipeline_depth: 1,
             verbose: false,
             tag: None,
             method: None,
@@ -232,6 +432,7 @@ impl SessionBuilder {
         }
     }
 
+    /// Adam learning rate (default 1e-3).
     pub fn lr(mut self, lr: f64) -> SessionBuilder {
         self.lr = lr;
         self
@@ -251,8 +452,24 @@ impl SessionBuilder {
         self
     }
 
+    /// Evaluate the rel-l2/loss curves every `every` epochs (plus the
+    /// final and budget-hit epochs).
     pub fn eval_every(mut self, every: usize) -> SessionBuilder {
         self.eval_every = every;
+        self
+    }
+
+    /// Probe-evaluation pipeline depth: 1 = blocking (default), 2 = async
+    /// probe streams — while one step's [`ProbeBatch`] is evaluated in
+    /// flight, the next step's plan is drawn on the driver thread, using
+    /// double-buffered plan/loss pairs and the non-blocking
+    /// [`Engine::loss_many_async`](crate::engine::Engine::loss_many_async)
+    /// handle. Trajectories are bitwise-identical at either depth; depth
+    /// 2 silently degrades to the blocking schedule for sources or
+    /// engines outside the pipelining contract (FO sources, oversized
+    /// coordinate sweeps, stochastically-resampling engines).
+    pub fn pipeline_depth(mut self, depth: usize) -> SessionBuilder {
+        self.pipeline_depth = depth;
         self
     }
 
@@ -265,6 +482,7 @@ impl SessionBuilder {
         self
     }
 
+    /// Log a progress line at every eval epoch.
     pub fn verbose(mut self, verbose: bool) -> SessionBuilder {
         self.verbose = verbose;
         self
@@ -339,6 +557,12 @@ impl SessionBuilder {
                 return Err(Error::Config("session: checkpoint interval must be positive".into()));
             }
         }
+        if !(1..=2).contains(&self.pipeline_depth) {
+            return Err(Error::Config(format!(
+                "session: pipeline depth must be 1 (blocking) or 2 (async probe streams), got {}",
+                self.pipeline_depth
+            )));
+        }
         Ok(())
     }
 
@@ -366,6 +590,7 @@ impl SessionBuilder {
             train_rng_seed,
             eval_every,
             max_forwards,
+            pipeline_depth,
             verbose,
             tag,
             method,
@@ -408,6 +633,7 @@ impl SessionBuilder {
             lr,
             train_seed: train_rng_seed.unwrap_or(seed),
             max_forwards,
+            pipeline_depth,
         })
     }
 }
@@ -433,6 +659,7 @@ pub fn weight_session<'a>(engine: &'a mut dyn Engine, cfg: &TrainConfig) -> Resu
         .seed(cfg.seed)
         .eval_every(cfg.eval_every)
         .max_forwards(cfg.max_forwards)
+        .pipeline_depth(cfg.pipeline_depth)
         .verbose(cfg.verbose)
         .gradient_source(source)
         .build(engine)
@@ -486,6 +713,7 @@ pub fn phase_session<'a>(
         .train_rng_seed(cfg.seed ^ 0x0071c5)
         .eval_every(cfg.eval_every)
         .max_forwards(cfg.max_forwards)
+        .pipeline_depth(cfg.pipeline_depth)
         .verbose(cfg.verbose)
         .tag(format!("{protocol:?}"))
         .gradient_source(source)
@@ -545,6 +773,41 @@ mod tests {
             Vec::new(),
         );
         b.validate().unwrap();
+    }
+
+    #[test]
+    fn builder_rejects_bad_pipeline_depth() {
+        for depth in [0usize, 3] {
+            let b = SessionBuilder::new(10)
+                .pipeline_depth(depth)
+                .method(TrainMethod::Fo, Vec::new());
+            assert!(b.validate().is_err(), "depth {depth} must be rejected");
+        }
+        for depth in [1usize, 2] {
+            let b = SessionBuilder::new(10)
+                .pipeline_depth(depth)
+                .method(TrainMethod::Fo, Vec::new());
+            b.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn pipelined_session_respects_budget() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut params = eng.model.init_flat(0);
+        let layout = eng.model.param_layout();
+        let hist = SessionBuilder::new(10_000)
+            .eval_every(1_000_000)
+            .max_forwards(Some(50_000))
+            .pipeline_depth(2)
+            .method(TrainMethod::ZoRge(RgeConfig::default()), layout)
+            .build(&mut eng)
+            .unwrap()
+            .run(&mut params)
+            .unwrap();
+        assert!(hist.total_forwards >= 50_000);
+        assert!(hist.total_forwards < 50_000 + 20 * 2 * 2760u64);
+        assert!(!hist.errors.is_empty(), "budget-hit epoch must still eval");
     }
 
     #[test]

@@ -42,9 +42,13 @@ impl Observer for NullObserver {
 /// `tag = None` prints the weight-domain format (with forward counts);
 /// `tag = Some(protocol)` prints the phase-domain format.
 pub struct EvalObserver {
+    /// Evaluate every this many epochs.
     pub eval_every: usize,
+    /// Seed for the fixed eval cloud and collocation set.
     pub seed: u64,
+    /// Log a progress line at every eval.
     pub verbose: bool,
+    /// Progress-line format: None = weight-domain, Some = phase-domain.
     pub tag: Option<String>,
 }
 
@@ -93,8 +97,11 @@ impl Observer for EvalObserver {
 /// [`crate::coordinator::checkpoint`]. Saves every `every` epochs and at
 /// the final/budget-hit epoch, overwriting `path` each time.
 pub struct CheckpointObserver {
+    /// Checkpoint file path (overwritten on every save).
     pub path: PathBuf,
+    /// Save every this many epochs.
     pub every: usize,
+    /// Model name recorded in the checkpoint.
     pub name: String,
 }
 
@@ -110,6 +117,7 @@ impl Observer for CheckpointObserver {
 
 /// Fan one step notification out to several observers, in order.
 pub struct MultiObserver {
+    /// The observers to notify, in order.
     pub observers: Vec<Box<dyn Observer>>,
 }
 

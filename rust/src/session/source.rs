@@ -7,13 +7,23 @@
 //! subspace — the L²ight protocol), [`RgeSource`] (randomized gradient
 //! estimation, joint or tensor-wise) and [`CoordwiseSource`] (DeepZero
 //! coordinate-wise finite differences).
+//!
+//! Probe-based sources additionally implement the **three-phase
+//! pipelining contract** ([`GradientSource::draw`] →
+//! [`GradientSource::materialize`] → [`GradientSource::assemble`]) that
+//! the async probe-stream driver uses to overlap plan generation with
+//! in-flight evaluation. The key invariant: `draw` fixes only the
+//! stochastic part of the plan (the RNG draws); the probe *positions* are
+//! speculative until `materialize` re-bases them on the parameters that
+//! will actually be probed — the driver re-plans-or-commits on every step
+//! application.
 
-use crate::engine::Engine;
+use crate::engine::{Engine, ProbeBatch};
 use crate::pde::PointSet;
 use crate::util::rng::Rng;
 use crate::zo::coordwise::CoordwiseEstimator;
 use crate::zo::rge::RgeEstimator;
-use crate::Result;
+use crate::{Error, Result};
 
 use super::space::ParamSpace;
 use super::SessionWorkspace;
@@ -43,6 +53,49 @@ pub trait GradientSource {
         grad: &mut [f64],
         ws: &mut SessionWorkspace,
     ) -> Result<StepReport>;
+
+    /// True when this source implements the three-phase pipelining
+    /// contract below; sources that don't (e.g. the exact-gradient
+    /// [`FoSource`], or chunk-streamed plans too large for one batch)
+    /// keep the blocking [`GradientSource::step`] schedule even at
+    /// `pipeline_depth = 2`.
+    fn supports_pipelining(&self) -> bool {
+        false
+    }
+
+    /// Phase 1 — draw the step's stochastic plan, consuming exactly the
+    /// main-RNG draws [`GradientSource::step`] would. Parameter-
+    /// independent, so the driver may call it for step *k+1* while step
+    /// *k*'s batch is still in flight. The drawn plan is **speculative**:
+    /// probe positions are not fixed until [`GradientSource::materialize`].
+    fn draw(&mut self, _rng: &mut Rng) -> Result<()> {
+        Err(Error::Config("gradient source does not support pipelining".into()))
+    }
+
+    /// Promote the most recently drawn (staged) plan to active. Plans are
+    /// double-buffered so a drawn-ahead plan never clobbers the in-flight
+    /// one; the driver advances exactly once per step, after the previous
+    /// plan has been assembled and before materializing the next.
+    fn advance_plan(&mut self) -> Result<()> {
+        Err(Error::Config("gradient source does not support pipelining".into()))
+    }
+
+    /// Phase 2 — materialize the active plan's probe rows around `params`
+    /// (trainable space), overwriting `batch`. May be called more than
+    /// once per drawn plan: the driver re-bases ("re-plans") speculative
+    /// plans on the post-step parameters before committing them to the
+    /// engine, which is what keeps pipelined trajectories bitwise-equal
+    /// to the blocking schedule.
+    fn materialize(&mut self, _params: &[f64], _batch: &mut ProbeBatch) -> Result<()> {
+        Err(Error::Config("gradient source does not support pipelining".into()))
+    }
+
+    /// Phase 3 — contract the evaluated plan's losses (probe row order)
+    /// into `grad`; `fpl` is the engine's forwards-per-loss factor for
+    /// budget accounting.
+    fn assemble(&mut self, _losses: &[f64], _fpl: u64, _grad: &mut [f64]) -> Result<StepReport> {
+        Err(Error::Config("gradient source does not support pipelining".into()))
+    }
 }
 
 /// Exact first-order gradients via `Engine::loss_grad` (AOT grad
@@ -111,10 +164,12 @@ impl GradientSource for FoSource {
 /// session's reusable probe buffer, evaluate via `Engine::loss_many`,
 /// assemble.
 pub struct RgeSource {
+    /// The underlying probe-batched estimator.
     pub est: RgeEstimator,
 }
 
 impl RgeSource {
+    /// Wrap a configured estimator as a session gradient source.
     pub fn new(est: RgeEstimator) -> RgeSource {
         RgeSource { est }
     }
@@ -149,16 +204,42 @@ impl GradientSource for RgeSource {
         self.est.assemble(&losses, grad)?;
         Ok(StepReport { forwards: n_probes * fpl, apply: true })
     }
+
+    fn supports_pipelining(&self) -> bool {
+        true
+    }
+
+    fn draw(&mut self, rng: &mut Rng) -> Result<()> {
+        self.est.draw_plan(rng);
+        Ok(())
+    }
+
+    fn advance_plan(&mut self) -> Result<()> {
+        self.est.promote_plan();
+        Ok(())
+    }
+
+    fn materialize(&mut self, params: &[f64], batch: &mut ProbeBatch) -> Result<()> {
+        self.est.materialize_into(params, batch);
+        Ok(())
+    }
+
+    fn assemble(&mut self, losses: &[f64], fpl: u64, grad: &mut [f64]) -> Result<StepReport> {
+        self.est.assemble(losses, grad)?;
+        Ok(StepReport { forwards: losses.len() as u64 * fpl, apply: true })
+    }
 }
 
 /// DeepZero-style coordinate-wise central differences, chunk-streamed
 /// through `Engine::loss_many` (and through the parameter space when
 /// training a non-identity domain).
 pub struct CoordwiseSource {
+    /// The underlying chunk-streamed estimator.
     pub est: CoordwiseEstimator,
 }
 
 impl CoordwiseSource {
+    /// Build a coordinate-wise source over `dim` trainable coordinates.
     pub fn new(mu: f64, dim: usize, coords_per_step: Option<usize>) -> CoordwiseSource {
         CoordwiseSource { est: CoordwiseEstimator::new(mu, dim, coords_per_step) }
     }
@@ -192,5 +273,31 @@ impl GradientSource for CoordwiseSource {
             })?;
         }
         Ok(StepReport { forwards: (self.est.loss_evals - evals0) * fpl, apply: true })
+    }
+
+    fn supports_pipelining(&self) -> bool {
+        // Pipelining commits the whole step as ONE in-flight batch; plans
+        // beyond the chunking bound keep the blocking chunk stream.
+        self.est.fits_one_batch()
+    }
+
+    fn draw(&mut self, rng: &mut Rng) -> Result<()> {
+        self.est.draw_coords(rng);
+        Ok(())
+    }
+
+    fn advance_plan(&mut self) -> Result<()> {
+        self.est.promote_coords();
+        Ok(())
+    }
+
+    fn materialize(&mut self, params: &[f64], batch: &mut ProbeBatch) -> Result<()> {
+        self.est.materialize_into(params, batch);
+        Ok(())
+    }
+
+    fn assemble(&mut self, losses: &[f64], fpl: u64, grad: &mut [f64]) -> Result<StepReport> {
+        self.est.assemble(losses, grad)?;
+        Ok(StepReport { forwards: losses.len() as u64 * fpl, apply: true })
     }
 }

@@ -40,6 +40,7 @@ pub struct IdentitySpace {
 }
 
 impl IdentitySpace {
+    /// Identity map over a `dim`-dimensional parameter vector.
     pub fn new(dim: usize) -> IdentitySpace {
         IdentitySpace { dim }
     }
@@ -73,6 +74,7 @@ pub struct PhotonicSpace<'m> {
 }
 
 impl<'m> PhotonicSpace<'m> {
+    /// Phase-domain space over the given photonic hardware model.
     pub fn new(pm: &'m mut PhotonicModel) -> PhotonicSpace<'m> {
         PhotonicSpace { pm }
     }

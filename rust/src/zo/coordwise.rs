@@ -14,23 +14,107 @@ use crate::engine::ProbeBatch;
 use crate::util::rng::Rng;
 use crate::{err, Result};
 
+/// The coordinate-wise estimator; tracks the drawn coordinate subset so
+/// the pipelined driver can split drawing from materialization.
 pub struct CoordwiseEstimator {
+    /// Central-difference half-width.
     pub mu: f64,
+    /// Trainable dimensionality (the full-sweep size).
+    pub dim: usize,
     /// Coordinates updated per step (None = all).
     pub coords_per_step: Option<usize>,
     /// Probe pairs per `loss_many` call (memory bound for full sweeps).
     pub max_pairs_per_batch: usize,
+    /// Coordinate subset of the active plan.
+    coords: Vec<usize>,
+    /// Coordinate subset of the staged (drawn-ahead) plan.
+    coords_staged: Vec<usize>,
+    /// Loss evaluations performed so far (efficiency metric, Fig. 3).
     pub loss_evals: u64,
 }
 
 impl CoordwiseEstimator {
+    /// Build an estimator over `dim` coordinates, touching
+    /// `coords_per_step` of them per step (None = full sweep).
     pub fn new(mu: f64, dim: usize, coords_per_step: Option<usize>) -> CoordwiseEstimator {
         CoordwiseEstimator {
             mu,
+            dim,
             coords_per_step,
             max_pairs_per_batch: 128.min(dim.max(1)),
+            coords: Vec::new(),
+            coords_staged: Vec::new(),
             loss_evals: 0,
         }
+    }
+
+    /// Select this step's coordinate subset, consuming exactly the `rng`
+    /// draws [`CoordwiseEstimator::estimate`] would (a shuffle in subset
+    /// mode, nothing in full-sweep mode).
+    fn select_coords(dim: usize, coords_per_step: Option<usize>, rng: &mut Rng) -> Vec<usize> {
+        match coords_per_step {
+            None => (0..dim).collect(),
+            Some(k) => {
+                let mut idx: Vec<usize> = (0..dim).collect();
+                rng.shuffle(&mut idx);
+                idx.truncate(k.min(dim));
+                idx
+            }
+        }
+    }
+
+    /// Draw a coordinate subset into the *staged* slot (pipelining phase
+    /// 1); parameter-independent and independent of the active plan, so
+    /// it can run while the previous step's batch is in flight.
+    pub fn draw_coords(&mut self, rng: &mut Rng) {
+        self.coords_staged = Self::select_coords(self.dim, self.coords_per_step, rng);
+    }
+
+    /// Promote the staged coordinate subset to active (swap). Call once
+    /// per drawn plan, after the previous plan has been assembled.
+    pub fn promote_coords(&mut self) {
+        std::mem::swap(&mut self.coords, &mut self.coords_staged);
+    }
+
+    /// Materialize the active subset's ±μ probe pairs around `params`
+    /// into `batch`, overwriting it (pipelining phase 2; callable
+    /// repeatedly — the driver re-bases speculative plans on the
+    /// post-step parameters).
+    pub fn materialize_into(&self, params: &[f64], batch: &mut ProbeBatch) {
+        batch.clear();
+        for &i in &self.coords {
+            for sign in [1.0f64, -1.0] {
+                let row = batch.push_perturbed(params);
+                row[i] = params[i] + sign * self.mu;
+            }
+        }
+    }
+
+    /// Contract the losses of the drawn plan into `grad` (zeros off the
+    /// subset — pipelining phase 3).
+    pub fn assemble(&mut self, losses: &[f64], grad: &mut [f64]) -> Result<()> {
+        if losses.len() != 2 * self.coords.len() {
+            return Err(err(format!(
+                "coordwise: plan has {} probes, got {} losses",
+                2 * self.coords.len(),
+                losses.len()
+            )));
+        }
+        grad.fill(0.0);
+        for (j, &i) in self.coords.iter().enumerate() {
+            grad[i] = (losses[2 * j] - losses[2 * j + 1]) / (2.0 * self.mu);
+        }
+        self.loss_evals += 2 * self.coords.len() as u64;
+        Ok(())
+    }
+
+    /// True when one step's whole probe plan fits in a single
+    /// `loss_many` batch — the precondition for pipelining this
+    /// estimator (full sweeps beyond the memory bound stay chunked and
+    /// blocking).
+    pub fn fits_one_batch(&self) -> bool {
+        let pairs = self.coords_per_step.map_or(self.dim, |k| k.min(self.dim));
+        pairs <= self.max_pairs_per_batch
     }
 
     /// Estimate the gradient on the chosen coordinate subset (zeros
@@ -47,15 +131,7 @@ impl CoordwiseEstimator {
     ) -> Result<()> {
         let d = params.len();
         grad.fill(0.0);
-        let coords: Vec<usize> = match self.coords_per_step {
-            None => (0..d).collect(),
-            Some(k) => {
-                let mut idx: Vec<usize> = (0..d).collect();
-                rng.shuffle(&mut idx);
-                idx.truncate(k.min(d));
-                idx
-            }
-        };
+        let coords = Self::select_coords(d, self.coords_per_step, rng);
         let mut batch = ProbeBatch::new(d);
         for chunk in coords.chunks(self.max_pairs_per_batch.max(1)) {
             batch.clear();
@@ -81,6 +157,7 @@ impl CoordwiseEstimator {
         Ok(())
     }
 
+    /// Loss queries per estimate() call over a `dim`-sized vector.
     pub fn queries_per_step(&self, dim: usize) -> usize {
         2 * self.coords_per_step.map_or(dim, |k| k.min(dim))
     }
@@ -125,6 +202,31 @@ mod tests {
         let touched = grad.iter().filter(|g| g.abs() > 1e-9).count();
         assert_eq!(touched, 3);
         assert_eq!(est.queries_per_step(10), 6);
+    }
+
+    #[test]
+    fn three_phase_split_matches_estimate_bitwise() {
+        // draw -> materialize -> assemble (the pipelined path) must
+        // reproduce estimate() exactly for single-chunk plans.
+        let f = |p: &[f64]| p.iter().enumerate().map(|(i, x)| (i + 1) as f64 * x * x).sum::<f64>();
+        let params: Vec<f64> = (0..10).map(|i| 0.2 * i as f64 - 0.7).collect();
+        let mut blocking = CoordwiseEstimator::new(1e-4, 10, Some(4));
+        let mut g_blocking = vec![0.0; 10];
+        blocking
+            .estimate(&params, &mut g_blocking, &mut Rng::new(9), &mut batched(f))
+            .unwrap();
+
+        let mut split = CoordwiseEstimator::new(1e-4, 10, Some(4));
+        assert!(split.fits_one_batch());
+        split.draw_coords(&mut Rng::new(9));
+        split.promote_coords();
+        let mut batch = ProbeBatch::new(10);
+        split.materialize_into(&params, &mut batch);
+        let losses: Vec<f64> = batch.iter().map(f).collect();
+        let mut g_split = vec![0.0; 10];
+        split.assemble(&losses, &mut g_split).unwrap();
+        assert_eq!(g_blocking, g_split);
+        assert_eq!(blocking.loss_evals, split.loss_evals);
     }
 
     #[test]

@@ -2,6 +2,13 @@
 //! estimation, DeepZero-style coordinate-wise estimation, and the ZO/FO
 //! training configuration. The drive loop itself lives in
 //! [`crate::session`]; [`trainer::train`] remains as a deprecated shim.
+//!
+//! Both estimators follow the three-phase probe-plan contract — draw
+//! (RNG-only), materialize (probe rows around the current parameters),
+//! assemble (losses → gradient) — which is what the session driver's
+//! async probe streams pipeline across steps.
+
+#![deny(missing_docs)]
 
 pub mod coordwise;
 pub mod rge;

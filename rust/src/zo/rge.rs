@@ -32,9 +32,13 @@ pub enum Perturbation {
 /// tensor-wise).
 #[derive(Debug, Clone)]
 pub struct RgeConfig {
+    /// Query count N: probe pairs per block per step (Eq. (6)).
     pub n_queries: usize,
+    /// Smoothing radius μ (the paper sets it to the phase resolution).
     pub mu: f64,
+    /// Perturbation distribution for ξ.
     pub dist: Perturbation,
+    /// Perturb one parameter block at a time (§5) instead of jointly.
     pub tensor_wise: bool,
 }
 
@@ -45,61 +49,114 @@ impl Default for RgeConfig {
 }
 
 /// The estimator; owns scratch buffers to avoid per-step allocation.
+///
+/// Plans are double-buffered: [`RgeEstimator::draw_plan`] fills the
+/// *staged* slot, [`RgeEstimator::promote_plan`] swaps it into the
+/// *active* slot that [`RgeEstimator::materialize_into`] and
+/// [`RgeEstimator::assemble`] read. This lets the pipelined session
+/// driver draw step *k+1*'s plan while step *k*'s active plan is still
+/// awaiting assembly.
 pub struct RgeEstimator {
+    /// The RGE configuration this estimator was built with.
     pub cfg: RgeConfig,
     /// Parameter blocks for tensor-wise mode (from the model layout).
     blocks: Vec<(usize, usize)>, // (offset, len)
-    /// Per-pair ξ values of the current plan, one contiguous run per pair.
+    /// Per-pair ξ values of the active plan, one contiguous run per pair.
     xi: Vec<f64>,
-    /// Per-pair (block offset, block len, offset into `xi`).
+    /// Per-pair (block offset, block len, offset into `xi`), active plan.
     pairs: Vec<(usize, usize, usize)>,
+    /// ξ values of the staged (drawn-ahead) plan.
+    xi_staged: Vec<f64>,
+    /// Pair table of the staged plan.
+    pairs_staged: Vec<(usize, usize, usize)>,
     /// loss evaluations performed so far (efficiency metric, Fig. 3)
     pub loss_evals: u64,
 }
 
 impl RgeEstimator {
+    /// Build an estimator over `dim` parameters; `layout` supplies the
+    /// block structure for tensor-wise mode (empty layout = joint).
     pub fn new(cfg: RgeConfig, dim: usize, layout: &[ParamEntry]) -> RgeEstimator {
         let blocks = if cfg.tensor_wise && !layout.is_empty() {
             layout.iter().map(|e| (e.offset, e.len)).collect()
         } else {
             vec![(0, dim)]
         };
-        RgeEstimator { cfg, blocks, xi: Vec::new(), pairs: Vec::new(), loss_evals: 0 }
+        RgeEstimator {
+            cfg,
+            blocks,
+            xi: Vec::new(),
+            pairs: Vec::new(),
+            xi_staged: Vec::new(),
+            pairs_staged: Vec::new(),
+            loss_evals: 0,
+        }
     }
 
-    /// Generate the full per-step probe plan: for each of the N queries
-    /// and each parameter block, a (θ+μξ, θ−μξ) probe pair in row order.
-    /// The main `rng` advances by exactly one draw per call (the step
-    /// seed); each pair then fills its ξ from its own counter-derived
-    /// stream, so the plan does not depend on evaluation order.
-    pub fn plan(&mut self, params: &[f64], rng: &mut Rng) -> ProbeBatch {
-        let d = params.len();
-        let mu = self.cfg.mu;
+    /// Draw a perturbation plan into the *staged* slot *without*
+    /// materializing probe rows: the main `rng` advances by exactly one
+    /// draw (the step seed), then every pair fills its ξ from its own
+    /// counter-derived stream. Parameter-independent and independent of
+    /// the active plan, which is what lets the pipelined session driver
+    /// draw step *k+1*'s plan while step *k* still awaits assembly.
+    pub fn draw_plan(&mut self, rng: &mut Rng) {
         let n = self.cfg.n_queries.max(1);
-        let mut batch = ProbeBatch::with_capacity(d, 2 * n * self.blocks.len());
-        self.pairs.clear();
-        self.xi.clear();
+        self.pairs_staged.clear();
+        self.xi_staged.clear();
         let step_seed = rng.next_u64();
         let mut pair_idx: u64 = 0;
         for _ in 0..n {
             for &(off, len) in &self.blocks {
                 let mut prng = Rng::new(step_seed ^ (pair_idx + 1).wrapping_mul(STREAM_MUL));
-                let xi_off = self.xi.len();
-                self.xi.resize(xi_off + len, 0.0);
+                let xi_off = self.xi_staged.len();
+                self.xi_staged.resize(xi_off + len, 0.0);
                 match self.cfg.dist {
-                    Perturbation::Rademacher => prng.fill_rademacher(&mut self.xi[xi_off..]),
-                    Perturbation::Gaussian => prng.fill_normal(&mut self.xi[xi_off..]),
+                    Perturbation::Rademacher => prng.fill_rademacher(&mut self.xi_staged[xi_off..]),
+                    Perturbation::Gaussian => prng.fill_normal(&mut self.xi_staged[xi_off..]),
                 }
-                self.pairs.push((off, len, xi_off));
-                for sign in [1.0f64, -1.0] {
-                    let row = batch.push_perturbed(params);
-                    for k in 0..len {
-                        row[off + k] = params[off + k] + sign * mu * self.xi[xi_off + k];
-                    }
-                }
+                self.pairs_staged.push((off, len, xi_off));
                 pair_idx += 1;
             }
         }
+    }
+
+    /// Promote the staged plan to active (swap, so the old active
+    /// buffers are recycled as the next staged slot). Call once per
+    /// drawn plan, after the previous plan has been assembled.
+    pub fn promote_plan(&mut self) {
+        std::mem::swap(&mut self.xi, &mut self.xi_staged);
+        std::mem::swap(&mut self.pairs, &mut self.pairs_staged);
+    }
+
+    /// Materialize the active plan's (θ+μξ, θ−μξ) probe pairs around
+    /// `params` into `batch`, overwriting it, in pair order. Callable
+    /// repeatedly for one plan: plans drawn ahead of time are
+    /// speculative, and the pipelined driver re-bases them on the
+    /// post-step parameters before committing them to the engine.
+    pub fn materialize_into(&self, params: &[f64], batch: &mut ProbeBatch) {
+        let mu = self.cfg.mu;
+        batch.clear();
+        for &(off, len, xi_off) in &self.pairs {
+            for sign in [1.0f64, -1.0] {
+                let row = batch.push_perturbed(params);
+                for k in 0..len {
+                    row[off + k] = params[off + k] + sign * mu * self.xi[xi_off + k];
+                }
+            }
+        }
+    }
+
+    /// Generate the full per-step probe plan: for each of the N queries
+    /// and each parameter block, a (θ+μξ, θ−μξ) probe pair in row order
+    /// ([`RgeEstimator::draw_plan`] + [`RgeEstimator::promote_plan`]
+    /// followed by [`RgeEstimator::materialize_into`] into a fresh
+    /// batch).
+    pub fn plan(&mut self, params: &[f64], rng: &mut Rng) -> ProbeBatch {
+        self.draw_plan(rng);
+        self.promote_plan();
+        let n_rows = 2 * self.cfg.n_queries.max(1) * self.blocks.len();
+        let mut batch = ProbeBatch::with_capacity(params.len(), n_rows);
+        self.materialize_into(params, &mut batch);
         batch
     }
 
@@ -254,6 +311,52 @@ mod tests {
                 assert!(((p - orig).abs() - 0.01).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn rebased_plan_matches_fresh_plan_bitwise() {
+        // The pipelined driver draws a plan speculatively, then re-bases
+        // it on the post-step params: the result must equal planning from
+        // scratch at those params with the same rng state.
+        let layout: Vec<crate::net::ParamEntry> = (0..2)
+            .map(|b| crate::net::ParamEntry { name: format!("b{b}"), shape: vec![3], offset: b * 3, len: 3 })
+            .collect();
+        let cfg = RgeConfig { n_queries: 1, mu: 0.01, dist: Perturbation::Rademacher, tensor_wise: true };
+        let stale: Vec<f64> = vec![0.1; 6];
+        let fresh: Vec<f64> = (0..6).map(|i| 0.3 * i as f64).collect();
+        let mut a = RgeEstimator::new(cfg.clone(), 6, &layout);
+        a.draw_plan(&mut Rng::new(11));
+        a.promote_plan();
+        let mut speculative = ProbeBatch::new(6);
+        a.materialize_into(&stale, &mut speculative); // stale rows
+        a.materialize_into(&fresh, &mut speculative); // re-based rows
+        let mut b = RgeEstimator::new(cfg, 6, &layout);
+        let want = b.plan(&fresh, &mut Rng::new(11));
+        assert_eq!(speculative.as_flat(), want.as_flat());
+    }
+
+    #[test]
+    fn staged_draw_does_not_clobber_active_plan() {
+        // The pipelined driver draws plan k+1 while plan k still awaits
+        // assembly: the active plan's xi must be untouched by the draw.
+        let d = 4;
+        let cfg = RgeConfig { n_queries: 1, mu: 0.01, dist: Perturbation::Gaussian, tensor_wise: false };
+        let params = vec![0.0; d];
+        let mut est = RgeEstimator::new(cfg, d, &[]);
+        let mut rng = Rng::new(5);
+        est.draw_plan(&mut rng);
+        est.promote_plan(); // plan k active
+        let mut before = ProbeBatch::new(d);
+        est.materialize_into(&params, &mut before);
+        est.draw_plan(&mut rng); // plan k+1 staged
+        let mut after = ProbeBatch::new(d);
+        est.materialize_into(&params, &mut after);
+        assert_eq!(before.as_flat(), after.as_flat());
+        // ...and promoting switches to the new plan
+        est.promote_plan();
+        let mut next = ProbeBatch::new(d);
+        est.materialize_into(&params, &mut next);
+        assert_ne!(before.as_flat(), next.as_flat());
     }
 
     #[test]

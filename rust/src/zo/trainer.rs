@@ -25,12 +25,18 @@ pub enum TrainMethod {
     ZoCoordwise { mu: f64, coords_per_step: Option<usize> },
 }
 
+/// Weight-domain training configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Gradient source (FO / RGE / coordinate-wise).
     pub method: TrainMethod,
+    /// Scheduled optimizer steps.
     pub epochs: usize,
+    /// Adam learning rate.
     pub lr: f64,
+    /// Evaluate the rel-l2/loss curves every this many epochs.
     pub eval_every: usize,
+    /// Base seed: training RNG stream + fixed eval clouds.
     pub seed: u64,
     /// Parameter layout for tensor-wise RGE (empty -> joint perturbation).
     pub layout: Vec<ParamEntry>,
@@ -38,10 +44,15 @@ pub struct TrainConfig {
     /// fixed-budget comparisons). Eval-time queries are excluded — see
     /// [`crate::session::SessionBuilder::max_forwards`].
     pub max_forwards: Option<u64>,
+    /// Probe-evaluation pipeline depth (1 = blocking, 2 = async probe
+    /// streams); see [`crate::session::SessionBuilder::pipeline_depth`].
+    pub pipeline_depth: usize,
+    /// Log a progress line at every eval epoch.
     pub verbose: bool,
 }
 
 impl TrainConfig {
+    /// Paper-default ZO configuration (tensor-wise RGE, Adam 1e-3).
     pub fn zo(epochs: usize) -> TrainConfig {
         TrainConfig {
             method: TrainMethod::ZoRge(RgeConfig::default()),
@@ -51,10 +62,12 @@ impl TrainConfig {
             seed: 0,
             layout: Vec::new(),
             max_forwards: None,
+            pipeline_depth: 1,
             verbose: false,
         }
     }
 
+    /// First-order baseline configuration (same schedule as ZO).
     pub fn fo(epochs: usize) -> TrainConfig {
         TrainConfig { method: TrainMethod::Fo, ..TrainConfig::zo(epochs) }
     }
@@ -63,13 +76,19 @@ impl TrainConfig {
 /// Training curve + totals.
 #[derive(Debug, Clone, Default)]
 pub struct History {
+    /// Epoch index of each eval point.
     pub steps: Vec<usize>,
+    /// Loss on the fixed collocation set at each eval point.
     pub losses: Vec<f64>,
+    /// Relative-l2 error on the fixed eval cloud at each eval point.
     pub errors: Vec<f64>,
     /// Cumulative photonic forward queries at each eval point.
     pub forwards: Vec<u64>,
+    /// Error at the last eval point (NaN when nothing was recorded).
     pub final_error: f64,
+    /// Training forward queries consumed by the whole run.
     pub total_forwards: u64,
+    /// Wall-clock duration of the run in seconds.
     pub wall_secs: f64,
 }
 
@@ -82,9 +101,29 @@ impl History {
 
 /// Run a weight-domain training session; `params` is updated in place.
 ///
-/// Thin shim over the unified session driver; prefer
-/// [`crate::session::SessionBuilder`] for new code.
-#[deprecated(note = "use session::SessionBuilder (or session::run_weight)")]
+/// Thin shim over the unified session driver. Migrate call sites to
+/// [`crate::session::run_weight`] — it takes the exact same arguments and
+/// returns the bitwise-identical trajectory — or to
+/// [`crate::session::SessionBuilder`] when you need observers,
+/// checkpointing or pipelining control:
+///
+/// ```
+/// use optical_pinn::engine::NativeEngine;
+/// use optical_pinn::session;
+/// use optical_pinn::zo::TrainConfig;
+///
+/// # fn main() -> optical_pinn::Result<()> {
+/// let mut engine = NativeEngine::new("bs", "tt")?;
+/// let mut params = engine.model.init_flat(0);
+/// let mut cfg = TrainConfig::zo(2);
+/// cfg.layout = engine.model.param_layout();
+/// // before: zo::train(&mut engine, &mut params, &cfg)?
+/// let hist = session::run_weight(&mut engine, &mut params, &cfg)?;
+/// assert!(hist.final_error.is_finite());
+/// # Ok(())
+/// # }
+/// ```
+#[deprecated(note = "use session::run_weight (same arguments) or session::SessionBuilder")]
 pub fn train(engine: &mut dyn Engine, params: &mut [f64], cfg: &TrainConfig) -> Result<History> {
     crate::session::run_weight(engine, params, cfg)
 }

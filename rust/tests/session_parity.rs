@@ -405,6 +405,100 @@ fn phase_domain_flops_matches_legacy_bitwise() {
     assert_hist_eq(&h_legacy, &h_new, "phase flops");
 }
 
+// ---------------------------------------------------------------------
+// async probe-stream parity: --pipeline-depth 2 must be bitwise-identical
+// to depth 1 (and therefore to the legacy loops) in every probe domain
+// ---------------------------------------------------------------------
+
+#[test]
+fn pipelined_weight_rge_matches_depth1_bitwise_at_any_probe_threads() {
+    for threads in [1usize, 4] {
+        let run = |depth: usize| {
+            let mut eng = NativeEngine::new("bs", "tt").unwrap();
+            eng.set_probe_threads(threads);
+            let mut cfg = TrainConfig::zo(40);
+            cfg.eval_every = 9;
+            cfg.layout = eng.model.param_layout();
+            cfg.pipeline_depth = depth;
+            let mut p = eng.model.init_flat(0);
+            let h = session::run_weight(&mut eng, &mut p, &cfg).unwrap();
+            (p, h)
+        };
+        let (p1, h1) = run(1);
+        let (p2, h2) = run(2);
+        assert_eq!(p1, p2, "params diverged at depth 2 ({threads} probe threads)");
+        assert_hist_eq(&h1, &h2, &format!("pipelined weight rge, {threads} threads"));
+    }
+}
+
+#[test]
+fn pipelined_weight_coordwise_matches_depth1_bitwise() {
+    let run = |depth: usize| {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut cfg = TrainConfig::zo(10);
+        cfg.method = TrainMethod::ZoCoordwise { mu: 1e-3, coords_per_step: Some(8) };
+        cfg.eval_every = 3;
+        cfg.pipeline_depth = depth;
+        let mut p = eng.model.init_flat(0);
+        let h = session::run_weight(&mut eng, &mut p, &cfg).unwrap();
+        (p, h)
+    };
+    let (p1, h1) = run(1);
+    let (p2, h2) = run(2);
+    assert_eq!(p1, p2, "coordwise params diverged at depth 2");
+    assert_hist_eq(&h1, &h2, "pipelined weight coordwise");
+}
+
+#[test]
+fn pipelined_weight_budget_matches_depth1_bitwise() {
+    let run = |depth: usize| {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut cfg = TrainConfig::zo(10_000);
+        cfg.max_forwards = Some(30_000);
+        cfg.eval_every = 1_000_000;
+        cfg.pipeline_depth = depth;
+        let mut p = eng.model.init_flat(0);
+        let h = session::run_weight(&mut eng, &mut p, &cfg).unwrap();
+        (p, h)
+    };
+    let (p1, h1) = run(1);
+    let (p2, h2) = run(2);
+    assert!(h2.total_forwards >= 30_000, "budget must terminate the pipelined run");
+    assert_eq!(p1, p2, "budget-terminated params diverged at depth 2");
+    assert_hist_eq(&h1, &h2, "pipelined weight budget");
+}
+
+#[test]
+fn pipelined_phase_domain_ours_matches_depth1_bitwise() {
+    let run = |depth: usize| {
+        let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        eng.set_probe_threads(2);
+        let cfg = PhaseTrainConfig {
+            epochs: 20,
+            eval_every: 7,
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        session::run_phase_domain(&mut pm, &mut eng, PhaseProtocol::Ours, &cfg).unwrap()
+    };
+    let (phi1, h1) = run(1);
+    let (phi2, h2) = run(2);
+    assert_eq!(phi1, phi2, "phase trajectories diverged at depth 2");
+    assert_hist_eq(&h1, &h2, "pipelined phase ours");
+}
+
+#[test]
+fn pipelined_run_with_unsupported_source_degrades_to_blocking() {
+    // FO has no probe plan: depth 2 must silently keep the blocking
+    // schedule and error identically on the gradient-free native engine.
+    let mut cfg = TrainConfig::fo(3);
+    cfg.pipeline_depth = 2;
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    let mut p = eng.model.init_flat(0);
+    assert!(session::run_weight(&mut eng, &mut p, &cfg).is_err());
+}
+
 #[test]
 fn mnist_zo_matches_legacy_bitwise() {
     let model = mnist::build_classifier("tt").unwrap();
