@@ -6,8 +6,9 @@
 //! EXPERIMENTS.md §Perf.
 
 use optical_pinn::bench_harness::{bench, black_box, record, Table};
-use optical_pinn::engine::native::default_threads;
+use optical_pinn::engine::native::{default_threads, NativeOptions};
 use optical_pinn::engine::{Engine, NativeEngine, PjrtEngine, ProbeBatch};
+use optical_pinn::shard::{InProcessTransport, ShardedEngine, Transport};
 use optical_pinn::experiments::runner::artifacts_dir;
 use optical_pinn::linalg::gemm::{matmul, matmul_parallel};
 use optical_pinn::net::build_model;
@@ -169,6 +170,67 @@ fn main() {
             format!("{:.2}", timing.per_iter_ms()),
             thr,
         ]);
+    }
+
+    // 7. Sharded ZO step: the same tensor-wise RGE estimate fanned
+    //    across in-process engine replicas (1/2/4 shards), vs the
+    //    single-engine sequential baseline. Every engine (baseline and
+    //    replicas) runs one probe worker, so the speedup column isolates
+    //    the fan-out across replicas from within-engine threading.
+    {
+        let (pde, variant) = ("bs", "tt");
+        let one_worker = || {
+            NativeEngine::with_options(
+                pde,
+                variant,
+                2,
+                None,
+                NativeOptions { probe_threads: 1, ..Default::default() },
+            )
+            .unwrap()
+        };
+        let mut eng = one_worker();
+        let params = eng.model.init_flat(0);
+        let layout = eng.model.param_layout();
+        let mut prng = Rng::new(2);
+        let pts = eng.pde().sample_points(&mut prng);
+        let mut est = RgeEstimator::new(RgeConfig::default(), params.len(), &layout);
+        let mut grad = vec![0.0; params.len()];
+        let probes = est.queries_per_step() as f64;
+        let iters = 10;
+        let mut rng = Rng::new(3);
+        let timing = bench("zo_step_sharded_seq", 1, iters, || {
+            est.estimate(&params, &mut grad, &mut rng, &mut |pb| eng.loss_many(pb, &pts))
+                .unwrap();
+        });
+        let seq_mean = timing.mean_s;
+        table.row(vec![
+            format!("zo_step {pde}/{variant} seq 1-worker shard baseline ({probes:.0} probes)"),
+            format!("{:.2}", timing.per_iter_ms()),
+            format!("{:.1} probes/s", probes / timing.mean_s),
+        ]);
+        for shards in [1usize, 2, 4] {
+            let replicas: Vec<Box<dyn Transport>> = (0..shards)
+                .map(|_| Box::new(InProcessTransport::new()) as Box<dyn Transport>)
+                .collect();
+            let mut sharded = ShardedEngine::new(one_worker(), replicas).unwrap();
+            let mut rng = Rng::new(3);
+            let timing = bench(&format!("zo_step_sharded_{shards}"), 1, iters, || {
+                est.estimate(&params, &mut grad, &mut rng, &mut |pb| {
+                    sharded.loss_many(pb, &pts)
+                })
+                .unwrap();
+            });
+            table.row(vec![
+                format!("zo_step {pde}/{variant} sharded x{shards}"),
+                format!("{:.2}", timing.per_iter_ms()),
+                format!(
+                    "{:.1} probes/s  ({:.2}x speedup)",
+                    probes / timing.mean_s,
+                    seq_mean / timing.mean_s
+                ),
+            ]);
+        }
     }
 
     table.print();

@@ -39,6 +39,14 @@ pub struct ExperimentConfig {
     /// `loss_many` evaluation). Trajectories are bitwise-identical at
     /// either depth.
     pub pipeline_depth: usize,
+    /// Engine replicas to fan probe batches across (0 = no sharding).
+    /// Replicas beyond `shard_hosts` run in-process; trajectories are
+    /// bitwise-identical at any shard count. Native backend only.
+    pub shards: usize,
+    /// TCP shard workers (`host:port` of `opinn shard-worker`
+    /// processes), one engine replica per entry; an unreachable worker
+    /// degrades to local evaluation with a logged warning.
+    pub shard_hosts: Vec<String>,
     pub verbose: bool,
 }
 
@@ -62,6 +70,8 @@ impl Default for ExperimentConfig {
             max_forwards: None,
             probe_threads: 0,
             pipeline_depth: 1,
+            shards: 0,
+            shard_hosts: Vec::new(),
             verbose: false,
         }
     }
@@ -109,6 +119,14 @@ impl ExperimentConfig {
                 "max_forwards" => c.max_forwards = Some(v.as_usize()? as u64),
                 "probe_threads" => c.probe_threads = v.as_usize()?,
                 "pipeline_depth" => c.pipeline_depth = v.as_usize()?,
+                "shards" => c.shards = v.as_usize()?,
+                "shard_hosts" => {
+                    c.shard_hosts = v
+                        .as_arr()?
+                        .iter()
+                        .map(|h| Ok(h.as_str()?.to_string()))
+                        .collect::<Result<Vec<_>>>()?
+                }
                 "verbose" => c.verbose = matches!(v, Json::Bool(true)),
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
             }
@@ -158,6 +176,15 @@ impl ExperimentConfig {
         }
         self.probe_threads = args.get_usize("probe-threads", self.probe_threads)?;
         self.pipeline_depth = args.get_usize("pipeline-depth", self.pipeline_depth)?;
+        self.shards = args.get_usize("shards", self.shards)?;
+        if let Some(hosts) = args.get("shard-hosts") {
+            self.shard_hosts = hosts
+                .split(',')
+                .map(str::trim)
+                .filter(|h| !h.is_empty())
+                .map(str::to_string)
+                .collect();
+        }
         if args.flag("verbose") {
             self.verbose = true;
         }
@@ -188,6 +215,13 @@ impl ExperimentConfig {
                 self.pipeline_depth
             )));
         }
+        if self.shards > 0 && self.shards < self.shard_hosts.len() {
+            return Err(Error::Config(format!(
+                "shards ({}) must be 0 or >= the {} shard_hosts entries",
+                self.shards,
+                self.shard_hosts.len()
+            )));
+        }
         Ok(())
     }
 }
@@ -204,13 +238,15 @@ mod tests {
     #[test]
     fn json_roundtrip_and_overrides() {
         let j = Json::parse(
-            r#"{"pde":"hjb20","variant":"std","train":"fo","epochs":500,"lr":0.002,"max_forwards":9000}"#,
+            r#"{"pde":"hjb20","variant":"std","train":"fo","epochs":500,"lr":0.002,"max_forwards":9000,"shards":2,"shard_hosts":["10.0.0.1:7001","10.0.0.2:7001"]}"#,
         )
         .unwrap();
         let mut c = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(c.pde, "hjb20");
         assert_eq!(c.epochs, 500);
         assert_eq!(c.max_forwards, Some(9000));
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.shard_hosts, vec!["10.0.0.1:7001", "10.0.0.2:7001"]);
         // first token is the subcommand (as in `opinn train burgers tt ...`)
         let args = Args::parse(
             [
@@ -225,6 +261,10 @@ mod tests {
                 "2",
                 "--max-forwards",
                 "123456",
+                "--shards",
+                "3",
+                "--shard-hosts",
+                "a:1, b:2,",
                 "--verbose",
             ]
             .iter()
@@ -237,6 +277,8 @@ mod tests {
         assert_eq!(c.probe_threads, 4);
         assert_eq!(c.pipeline_depth, 2);
         assert_eq!(c.max_forwards, Some(123_456));
+        assert_eq!(c.shards, 3);
+        assert_eq!(c.shard_hosts, vec!["a:1", "b:2"]);
         assert!(c.verbose);
         c.validate().unwrap();
     }
@@ -258,6 +300,10 @@ mod tests {
         let mut c3 = ExperimentConfig::default();
         c3.pipeline_depth = 3;
         assert!(c3.validate().is_err());
+        let mut c4 = ExperimentConfig::default();
+        c4.shards = 1;
+        c4.shard_hosts = vec!["a:1".into(), "b:2".into()];
+        assert!(c4.validate().is_err());
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod pjrt;
 pub use native::NativeEngine;
 pub use pjrt::{PjrtEngine, PjrtRuntime};
 
+use crate::loss::DerivMethod;
 use crate::pde::{Pde, PointSet};
 use crate::util::rng::Rng;
 use crate::util::stats::rel_l2;
@@ -118,6 +119,85 @@ impl ProbeBatch {
     pub fn as_flat(&self) -> &[f64] {
         &self.data
     }
+
+    /// Rebuild a batch from its row-major flat storage (the shard wire
+    /// decoder); `data.len()` must be a multiple of `dim`.
+    pub fn from_flat(dim: usize, data: Vec<f64>) -> ProbeBatch {
+        assert!(dim > 0, "probe dimension must be positive");
+        assert!(data.len() % dim == 0, "flat storage is not a whole number of rows");
+        ProbeBatch { dim, data }
+    }
+
+    /// Borrow the contiguous row range `[range.start, range.end)` as a
+    /// [`ProbeRows`] view — the unit the shard dispatcher sends to one
+    /// engine replica. No copy; the view indexes rows from zero.
+    pub fn rows(&self, range: std::ops::Range<usize>) -> ProbeRows<'_> {
+        let ok = range.start <= range.end && range.end <= self.n_probes();
+        assert!(ok, "row range out of bounds");
+        ProbeRows { dim: self.dim, data: &self.data[range.start * self.dim..range.end * self.dim] }
+    }
+
+    /// Append every row of a [`ProbeRows`] view (dims must match) — the
+    /// inverse of [`ProbeBatch::rows`], used to rebuild per-shard
+    /// sub-batches and to chunk-stream a materialized plan.
+    pub fn extend_from_rows(&mut self, rows: ProbeRows<'_>) {
+        assert_eq!(rows.dim(), self.dim, "probe dimension mismatch");
+        self.data.extend_from_slice(rows.as_flat());
+    }
+}
+
+/// A borrowed, contiguous row range of a [`ProbeBatch`] (see
+/// [`ProbeBatch::rows`]): same row-major layout, no ownership, rows
+/// re-indexed from zero.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeRows<'a> {
+    dim: usize,
+    data: &'a [f64],
+}
+
+impl<'a> ProbeRows<'a> {
+    /// Probe dimensionality (columns).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of rows in the view.
+    pub fn n_probes(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// True when the view holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row `i` of the view as a parameter slice.
+    pub fn probe(&self, i: usize) -> &'a [f64] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Iterate over the view's rows in order.
+    pub fn iter(&self) -> std::slice::Chunks<'a, f64> {
+        self.data.chunks(self.dim)
+    }
+
+    /// The raw row-major storage of the view.
+    pub fn as_flat(&self) -> &'a [f64] {
+        self.data
+    }
+
+    /// Copy the view into an owned [`ProbeBatch`].
+    pub fn to_batch(&self) -> ProbeBatch {
+        ProbeBatch::from_flat(self.dim, self.data.to_vec())
+    }
+}
+
+impl<'a, 'b> IntoIterator for &'b ProbeRows<'a> {
+    type Item = &'a [f64];
+    type IntoIter = std::slice::Chunks<'a, f64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
 }
 
 impl<'a> IntoIterator for &'a ProbeBatch {
@@ -185,6 +265,81 @@ impl PendingLosses {
     }
 }
 
+/// Everything needed to construct a bitwise-identical [`NativeEngine`]
+/// replica of an engine on another thread, process or host — the
+/// "problem spec" the shard wire protocol ships with every probe-range
+/// request (see [`crate::shard`]).
+///
+/// A replica built from a spec evaluates every probe row exactly as the
+/// original engine does, which is what makes multi-engine sharding
+/// trajectory-preserving.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineSpec {
+    /// PDE benchmark name (`bs` / `hjb20` / `burgers` / `darcy`).
+    pub pde: String,
+    /// Model variant (`std` / `tt`).
+    pub variant: String,
+    /// TT rank of the body network.
+    pub rank: usize,
+    /// Hidden-width override (None = the benchmark default).
+    pub width: Option<usize>,
+    /// Derivative backend for the loss (SG or SE).
+    pub method: DerivMethod,
+    /// Sparse-grid accuracy level override.
+    pub level: Option<usize>,
+    /// Stein smoothing radius override.
+    pub sigma: Option<f64>,
+    /// MC sample count for the SE baseline.
+    pub mc_samples: Option<usize>,
+    /// Seed for the SE backend's initial MC node draw.
+    pub se_seed: u64,
+    /// Row-parallelism inside one forward pass.
+    pub threads: usize,
+    /// Workers for probe-batched `loss_many`. 0 = the *replica host's*
+    /// default — deliberately left unresolved so a small dispatcher can
+    /// drive big workers at their full parallelism.
+    pub probe_threads: usize,
+}
+
+impl EngineSpec {
+    /// Build the described [`NativeEngine`] replica.
+    pub fn build(&self) -> Result<NativeEngine> {
+        NativeEngine::with_options(
+            &self.pde,
+            &self.variant,
+            self.rank,
+            self.width,
+            native::NativeOptions {
+                method: self.method,
+                level: self.level,
+                sigma: self.sigma,
+                mc_samples: self.mc_samples,
+                se_seed: self.se_seed,
+                threads: self.threads,
+                probe_threads: self.probe_threads,
+            },
+        )
+    }
+}
+
+/// One engine replica's cumulative dispatch accounting, surfaced by
+/// [`Engine::shard_stats`] (sharded engines only) and logged by the
+/// session's `EvalObserver` in verbose runs.
+#[derive(Debug, Clone)]
+pub struct ShardStat {
+    /// Replica index (row ranges are assigned in this order).
+    pub index: usize,
+    /// Transport label (`in-process` / `tcp://host:port`).
+    pub label: String,
+    /// Probe rows evaluated by this replica so far.
+    pub rows: u64,
+    /// Replica throughput: rows evaluated / seconds busy.
+    pub probes_per_s: f64,
+    /// Dispatches that degraded to local evaluation (worker unreachable
+    /// or a malformed reply).
+    pub fallbacks: u64,
+}
+
 /// A loss/forward evaluation backend for one (pde, model) pair.
 pub trait Engine {
     /// The PDE benchmark this engine is bound to.
@@ -244,6 +399,69 @@ pub trait Engine {
     }
     /// Human-readable backend tag ("native" / "pjrt").
     fn backend(&self) -> &'static str;
+    /// The spec a shard worker needs to build a bitwise-identical replica
+    /// of this engine, or `None` when the engine cannot be replicated
+    /// (PJRT devices, the classifier adapter). Engines returning `None`
+    /// cannot be wrapped by [`crate::shard::ShardedEngine`].
+    fn replica_spec(&self) -> Option<EngineSpec> {
+        None
+    }
+    /// Per-replica dispatch accounting, `Some` only on sharded engines.
+    /// Observers use the `None` default to keep single-engine log output
+    /// byte-identical to the unsharded driver.
+    fn shard_stats(&self) -> Option<Vec<ShardStat>> {
+        None
+    }
+}
+
+/// Forwarding impl so `&mut E` is itself an [`Engine`] — this is what
+/// lets [`crate::shard::ShardedEngine`] wrap the session's borrowed
+/// engine without taking ownership. Every method forwards explicitly so
+/// overridden defaults (`loss_many`, `loss_many_async`, ...) are
+/// preserved.
+impl<T: Engine + ?Sized> Engine for &mut T {
+    fn pde(&self) -> &dyn Pde {
+        (**self).pde()
+    }
+    fn n_params(&self) -> usize {
+        (**self).n_params()
+    }
+    fn loss(&mut self, params: &[f64], pts: &PointSet) -> Result<f64> {
+        (**self).loss(params, pts)
+    }
+    fn loss_many(&mut self, probes: &ProbeBatch, pts: &PointSet) -> Result<Vec<f64>> {
+        (**self).loss_many(probes, pts)
+    }
+    fn loss_many_async(&mut self, probes: ProbeBatch, pts: &PointSet) -> PendingLosses {
+        (**self).loss_many_async(probes, pts)
+    }
+    fn set_probe_threads(&mut self, threads: usize) {
+        (**self).set_probe_threads(threads)
+    }
+    fn loss_grad(&mut self, params: &[f64], pts: &PointSet) -> Result<(f64, Vec<f64>)> {
+        (**self).loss_grad(params, pts)
+    }
+    fn forward_u(&mut self, params: &[f64], x: &[f64], n: usize) -> Result<Vec<f64>> {
+        (**self).forward_u(params, x, n)
+    }
+    fn forwards_per_loss(&self) -> usize {
+        (**self).forwards_per_loss()
+    }
+    fn resample(&mut self, rng: &mut Rng) {
+        (**self).resample(rng)
+    }
+    fn has_stochastic_resample(&self) -> bool {
+        (**self).has_stochastic_resample()
+    }
+    fn backend(&self) -> &'static str {
+        (**self).backend()
+    }
+    fn replica_spec(&self) -> Option<EngineSpec> {
+        (**self).replica_spec()
+    }
+    fn shard_stats(&self) -> Option<Vec<ShardStat>> {
+        (**self).shard_stats()
+    }
 }
 
 /// Relative-l2 error of the engine's solution on the PDE's eval cloud.
@@ -310,5 +528,36 @@ mod tests {
     fn probe_batch_rejects_bad_rows() {
         let mut pb = ProbeBatch::new(3);
         pb.push(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn row_range_views_and_extension() {
+        let mut pb = ProbeBatch::new(2);
+        for i in 0..4 {
+            pb.push(&[i as f64, 10.0 + i as f64]);
+        }
+        let view = pb.rows(1..3);
+        assert_eq!(view.dim(), 2);
+        assert_eq!(view.n_probes(), 2);
+        assert_eq!(view.probe(0), &[1.0, 11.0]);
+        assert_eq!(view.probe(1), &[2.0, 12.0]);
+        assert_eq!(view.iter().count(), 2);
+        let mut dst = ProbeBatch::new(2);
+        dst.extend_from_rows(pb.rows(0..1));
+        dst.extend_from_rows(pb.rows(3..4));
+        assert_eq!(dst.n_probes(), 2);
+        assert_eq!(dst.probe(1), &[3.0, 13.0]);
+        assert!(pb.rows(2..2).is_empty());
+        let owned = pb.rows(0..4).to_batch();
+        assert_eq!(owned.as_flat(), pb.as_flat());
+        assert_eq!(ProbeBatch::from_flat(2, vec![5.0, 6.0]).probe(0), &[5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row range out of bounds")]
+    fn row_range_out_of_bounds_panics() {
+        let mut pb = ProbeBatch::new(2);
+        pb.push(&[0.0, 0.0]);
+        let _ = pb.rows(0..2);
     }
 }

@@ -7,7 +7,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use super::{Engine, PendingLosses, ProbeBatch};
+use super::{Engine, EngineSpec, PendingLosses, ProbeBatch};
 use crate::loss::{DerivMethod, LossWorkspace, PinnLoss};
 use crate::net::{build_model, FwdScratch, Model};
 use crate::pde::{get_pde, Pde, PointSet};
@@ -103,6 +103,9 @@ pub struct NativeEngine {
     /// Per-worker scratch for the background `loss_many_async` path,
     /// shared with the evaluation thread and reused across steps.
     async_workspaces: Arc<Mutex<Vec<Workspace>>>,
+    /// The construction spec, kept so shard workers can build
+    /// bitwise-identical replicas ([`Engine::replica_spec`]).
+    spec: EngineSpec,
 }
 
 impl NativeEngine {
@@ -135,6 +138,22 @@ impl NativeEngine {
         };
         let probe_threads =
             if opts.probe_threads == 0 { default_threads() } else { opts.probe_threads };
+        // the spec keeps the *unresolved* probe_threads: 0 must mean
+        // "replica default" on whatever host builds the replica, not
+        // this host's core count
+        let spec = EngineSpec {
+            pde: pde_name.to_string(),
+            variant: variant.to_string(),
+            rank,
+            width,
+            method: opts.method,
+            level: opts.level,
+            sigma: opts.sigma,
+            mc_samples: opts.mc_samples,
+            se_seed: opts.se_seed,
+            threads: opts.threads,
+            probe_threads: opts.probe_threads,
+        };
         Ok(NativeEngine {
             model: Arc::new(model),
             pde: Arc::from(pde),
@@ -143,6 +162,7 @@ impl NativeEngine {
             probe_threads,
             workspaces: Vec::new(),
             async_workspaces: Arc::new(Mutex::new(Vec::new())),
+            spec,
         })
     }
 
@@ -167,7 +187,10 @@ pub struct NativeOptions {
     pub se_seed: u64,
     /// Row-parallelism inside one forward pass.
     pub threads: usize,
-    /// Workers for probe-batched `loss_many` (0 = engine default).
+    /// Workers for probe-batched `loss_many` (0 = engine default,
+    /// resolved at construction on the host that builds the engine —
+    /// kept 0 in the default so shard replica specs let worker hosts
+    /// size themselves).
     pub probe_threads: usize,
 }
 
@@ -180,7 +203,7 @@ impl Default for NativeOptions {
             mc_samples: None,
             se_seed: 0,
             threads: default_threads(),
-            probe_threads: default_threads(),
+            probe_threads: 0,
         }
     }
 }
@@ -280,6 +303,8 @@ impl Engine for NativeEngine {
 
     fn set_probe_threads(&mut self, threads: usize) {
         self.probe_threads = if threads == 0 { default_threads() } else { threads };
+        // unresolved on purpose: 0 = "replica default" (see with_options)
+        self.spec.probe_threads = threads;
     }
 
     fn loss_grad(&mut self, _params: &[f64], _pts: &PointSet) -> Result<(f64, Vec<f64>)> {
@@ -309,6 +334,10 @@ impl Engine for NativeEngine {
 
     fn backend(&self) -> &'static str {
         "native"
+    }
+
+    fn replica_spec(&self) -> Option<EngineSpec> {
+        Some(self.spec.clone())
     }
 }
 
@@ -426,6 +455,18 @@ mod tests {
         let mut probes = crate::engine::ProbeBatch::new(3);
         probes.push(&[0.0, 0.0, 0.0]);
         assert!(eng.loss_many(&probes, &pts).is_err());
+    }
+
+    #[test]
+    fn replica_spec_builds_a_bitwise_identical_engine() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut replica = eng.replica_spec().unwrap().build().unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(3);
+        let pts = eng.pde().sample_points(&mut rng);
+        let want = eng.loss(&params, &pts).unwrap();
+        let got = replica.loss(&params, &pts).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits());
     }
 
     #[test]

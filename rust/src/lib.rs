@@ -28,6 +28,9 @@
 //!   session loop (`SessionBuilder` → `Session::run`) behind the
 //!   weight-domain, phase-domain and classifier entry points, composed
 //!   from `ParamSpace` × `GradientSource` × `Observer`;
+//! * [`shard`] — multi-engine probe sharding: fan one `ProbeBatch`
+//!   across engine replicas (in-process or TCP `opinn shard-worker`s)
+//!   behind the same `Engine` trait;
 //! * [`photonic`] — MZI meshes, non-idealities, TONN cores, on-chip
 //!   training protocols (FLOPS, L²ight, ours);
 //! * [`mnist`] — the App. G classifier workload + its session engine
@@ -94,6 +97,41 @@
 //! # }
 //! ```
 //!
+//! ## Multi-engine probe sharding
+//!
+//! When one process is not enough, [`shard::ShardedEngine`] fans a probe
+//! batch across engine replicas — worker threads over in-process
+//! `NativeEngine`s, TCP connections to `opinn shard-worker` processes,
+//! or a mix — and reassembles the loss vector in row order. It is an
+//! ordinary [`engine::Engine`], so sessions shard by configuration
+//! (`--shards` / `--shard-hosts`) with no structural changes, and an
+//! unreachable worker degrades to local evaluation with a logged
+//! warning, never a wrong or truncated loss vector:
+//!
+//! ```
+//! use optical_pinn::engine::{Engine, NativeEngine, ProbeBatch};
+//! use optical_pinn::shard::{InProcessTransport, ShardedEngine, Transport};
+//! use optical_pinn::util::rng::Rng;
+//!
+//! # fn main() -> optical_pinn::Result<()> {
+//! let local = NativeEngine::new("bs", "tt")?;
+//! let params = local.model.init_flat(0);
+//! // two in-process replicas; TcpTransport::new("host:port") joins the
+//! // same fan-out for remote `opinn shard-worker`s
+//! let replicas: Vec<Box<dyn Transport>> =
+//!     (0..2).map(|_| Box::new(InProcessTransport::new()) as Box<dyn Transport>).collect();
+//! let mut engine = ShardedEngine::new(local, replicas)?;
+//! let mut rng = Rng::new(0);
+//! let pts = engine.pde().sample_points(&mut rng);
+//! let mut plan = ProbeBatch::new(params.len());
+//! plan.push(&params);
+//! plan.push(&params);
+//! let losses = engine.loss_many(&plan, &pts)?; // one row range per replica
+//! assert_eq!(losses.len(), 2);
+//! # Ok(())
+//! # }
+//! ```
+//!
 //! ## The unified session driver
 //!
 //! All three training entry points — weight-domain ZO/FO
@@ -127,6 +165,7 @@ pub mod pde;
 pub mod photonic;
 pub mod quadrature;
 pub mod session;
+pub mod shard;
 pub mod stein;
 pub mod util;
 pub mod xla;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train        weight-domain training (FO via AOT grad / BP-free ZO)
 //!   train-phase  photonic phase-domain training (flops|l2ight|ours)
+//!   shard-worker host an engine replica serving probe ranges over TCP
 //!   tables       regenerate a paper table/figure (t1 t2 t3 t456 fig3
 //!                ablations mnist)
 //!   hw-report    print the pre-silicon footprint/latency model
@@ -58,6 +59,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(args),
         Some("train-phase") => cmd_train_phase(args),
+        Some("shard-worker") => cmd_shard_worker(args),
         Some("tables") => cmd_tables(args),
         Some("hw-report") => cmd_hw_report(args),
         Some("info") => cmd_info(args),
@@ -68,16 +70,21 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-const HELP: &str = "usage: opinn <train|train-phase|tables|hw-report|info> [options]
+const HELP: &str = "usage: opinn <train|train-phase|shard-worker|tables|hw-report|info> [options]
   train <pde> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
         [--lr F] [--seed N] [--rank N] [--width N] [--mu F] [--queries N]
         [--eval-every N] [--max-forwards N] [--backend pjrt|native]
-        [--probe-threads N] [--pipeline-depth 1|2] [--verbose]
+        [--probe-threads N] [--pipeline-depth 1|2] [--shards N]
+        [--shard-hosts H1,H2,...] [--verbose]
         [--out ckpt.json] [--ckpt-every N] [--curve curve.csv]
   train-phase <pde> [--protocol ours|flops|l2ight] [--epochs N] [--lr F]
         [--seed N] [--mu F] [--queries N] [--eval-every N]
         [--max-forwards N] [--backend pjrt|native] [--probe-threads N]
-        [--pipeline-depth 1|2] [--verbose] [--out phases.json]
+        [--pipeline-depth 1|2] [--shards N] [--shard-hosts H1,H2,...]
+        [--verbose] [--out phases.json]
+  shard-worker [--listen ADDR]   host an engine replica; serves probe
+        ranges to sharded sessions until each client disconnects
+        (default ADDR 127.0.0.1:7171)
   tables <t1|t2|t3|t456|fig3|tt_rank|width|grid|mc_samples|sg_level|sigma|mu|queries|mnist>
   hw-report [--epochs N]
   info
@@ -93,6 +100,13 @@ options:
                      probe streams: generate the next step's probe plan
                      while the current batch is in flight (bitwise-
                      identical trajectories either way)
+  --shards N         fan each probe batch across N engine replicas
+                     (native backend; bitwise-identical trajectories at
+                     any shard count); replicas beyond --shard-hosts run
+                     in-process
+  --shard-hosts LIST comma-separated host:port of running
+                     `opinn shard-worker`s; unreachable workers degrade
+                     to local evaluation with a logged warning
   --ckpt-every N     with --out: checkpoint every N epochs, not just at
                      the end
   --curve FILE       write the eval curve as CSV (train)
@@ -135,6 +149,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         .eval_every(cfg.eval_every)
         .max_forwards(cfg.max_forwards)
         .pipeline_depth(cfg.pipeline_depth)
+        .shards(cfg.shards)
+        .shard_hosts(cfg.shard_hosts.clone())
         .verbose(true)
         .method(method, model.param_layout());
     let ckpt_every = args.get_usize("ckpt-every", 0)?;
@@ -199,6 +215,8 @@ fn cmd_train_phase(args: &Args) -> Result<()> {
         seed: cfg.seed,
         max_forwards: cfg.max_forwards,
         pipeline_depth: cfg.pipeline_depth,
+        shards: cfg.shards,
+        shard_hosts: cfg.shard_hosts.clone(),
         verbose: true,
         ..Default::default()
     };
@@ -222,6 +240,13 @@ fn cmd_train_phase(args: &Args) -> Result<()> {
         save_params(std::path::Path::new(out), "phases", cfg.epochs, &phi)?;
     }
     Ok(())
+}
+
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let addr = args.get_or("listen", "127.0.0.1:7171");
+    let worker = optical_pinn::shard::ShardWorker::bind(&addr)?;
+    eprintln!("opinn shard-worker: listening on {}", worker.local_addr()?);
+    worker.serve_forever()
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {

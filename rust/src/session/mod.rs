@@ -34,6 +34,17 @@
 //! ("re-plan-or-commit", see [`GradientSource::materialize`]) — so
 //! trajectories are bitwise-identical to the blocking schedule.
 //!
+//! ## Multi-engine sharding
+//!
+//! [`SessionBuilder::shards`] / [`SessionBuilder::shard_hosts`] wrap the
+//! session's engine in a [`crate::shard::ShardedEngine`], fanning each
+//! probe batch across engine replicas (in-process worker threads and/or
+//! TCP `opinn shard-worker`s). Because the sharded engine is just
+//! another [`engine::Engine`](crate::engine::Engine), the driver,
+//! estimators and the pipelined path are untouched — and trajectories
+//! stay bitwise-identical at any shard count
+//! (`rust/tests/shard_parity.rs`).
+//!
 //! ## Determinism contract
 //!
 //! Trajectories are bitwise-identical to the pre-session loops at any
@@ -86,6 +97,7 @@ use crate::optim::{Adam, Optimizer};
 use crate::pde::PointSet;
 use crate::photonic::training::{PhaseProtocol, PhaseTrainConfig};
 use crate::photonic::PhotonicModel;
+use crate::shard::ShardedEngine;
 use crate::util::rng::Rng;
 use crate::zo::rge::{Perturbation, RgeConfig, RgeEstimator};
 use crate::zo::trainer::{TrainConfig, TrainMethod};
@@ -153,9 +165,27 @@ impl SessionWorkspace {
     }
 }
 
+/// The engine a session drives: the caller's engine directly, or that
+/// engine wrapped in a [`ShardedEngine`] when the builder's `--shards` /
+/// `--shard-hosts` configuration asks for multi-engine fan-out. The
+/// borrowed engine keeps serving scalar loss/eval queries either way.
+enum SessionEngine<'a> {
+    Direct(&'a mut dyn Engine),
+    Sharded(ShardedEngine<&'a mut (dyn Engine + 'a)>),
+}
+
+impl SessionEngine<'_> {
+    fn as_dyn(&mut self) -> &mut (dyn Engine + '_) {
+        match self {
+            SessionEngine::Direct(e) => &mut **e,
+            SessionEngine::Sharded(s) => s,
+        }
+    }
+}
+
 /// A fully-assembled training session; consume it with [`Session::run`].
 pub struct Session<'a> {
-    engine: &'a mut dyn Engine,
+    engine: SessionEngine<'a>,
     space: Box<dyn ParamSpace + 'a>,
     source: Box<dyn GradientSource + 'a>,
     observer: Box<dyn Observer + 'a>,
@@ -177,7 +207,7 @@ impl Session<'_> {
     /// either way).
     pub fn run(self, params: &mut [f64]) -> Result<History> {
         let Session {
-            engine,
+            engine: mut engine_slot,
             mut space,
             mut source,
             mut observer,
@@ -187,6 +217,7 @@ impl Session<'_> {
             max_forwards,
             pipeline_depth,
         } = self;
+        let engine = engine_slot.as_dyn();
         let t0 = std::time::Instant::now();
         let pipelined = pipeline_depth >= 2
             && source.supports_pipelining()
@@ -403,6 +434,8 @@ pub struct SessionBuilder {
     eval_every: usize,
     max_forwards: Option<u64>,
     pipeline_depth: usize,
+    shards: usize,
+    shard_hosts: Vec<String>,
     verbose: bool,
     tag: Option<String>,
     method: Option<(TrainMethod, Vec<ParamEntry>)>,
@@ -423,6 +456,8 @@ impl SessionBuilder {
             eval_every: (epochs / 20).max(1),
             max_forwards: None,
             pipeline_depth: 1,
+            shards: 0,
+            shard_hosts: Vec::new(),
             verbose: false,
             tag: None,
             method: None,
@@ -470,6 +505,25 @@ impl SessionBuilder {
     /// coordinate sweeps, stochastically-resampling engines).
     pub fn pipeline_depth(mut self, depth: usize) -> SessionBuilder {
         self.pipeline_depth = depth;
+        self
+    }
+
+    /// Fan probe batches across this many engine replicas (0 = no
+    /// sharding). Replicas beyond the [`SessionBuilder::shard_hosts`]
+    /// list run in-process; trajectories are bitwise-identical at any
+    /// shard count (`rust/tests/shard_parity.rs`). Requires an engine
+    /// with a replica spec (native backend).
+    pub fn shards(mut self, shards: usize) -> SessionBuilder {
+        self.shards = shards;
+        self
+    }
+
+    /// TCP shard workers (`host:port` of running
+    /// `opinn shard-worker --listen <addr>` processes), one replica per
+    /// entry. An unreachable worker degrades to local evaluation with a
+    /// logged warning — never a wrong or truncated loss vector.
+    pub fn shard_hosts(mut self, hosts: Vec<String>) -> SessionBuilder {
+        self.shard_hosts = hosts;
         self
     }
 
@@ -563,6 +617,13 @@ impl SessionBuilder {
                 self.pipeline_depth
             )));
         }
+        if self.shards > 0 && self.shards < self.shard_hosts.len() {
+            return Err(Error::Config(format!(
+                "session: --shards {} is smaller than the {} --shard-hosts entries",
+                self.shards,
+                self.shard_hosts.len()
+            )));
+        }
         Ok(())
     }
 
@@ -591,6 +652,8 @@ impl SessionBuilder {
             eval_every,
             max_forwards,
             pipeline_depth,
+            shards,
+            shard_hosts,
             verbose,
             tag,
             method,
@@ -623,6 +686,14 @@ impl SessionBuilder {
             observers.pop().unwrap()
         } else {
             Box::new(MultiObserver { observers })
+        };
+        // Multi-engine probe sharding: wrap the borrowed engine so
+        // `loss_many` / `loss_many_async` fan out across replicas while
+        // everything else still reaches the caller's engine.
+        let engine = if shards > 0 || !shard_hosts.is_empty() {
+            SessionEngine::Sharded(ShardedEngine::from_config(engine, shards, &shard_hosts)?)
+        } else {
+            SessionEngine::Direct(engine)
         };
         Ok(Session {
             engine,
@@ -660,6 +731,8 @@ pub fn weight_session<'a>(engine: &'a mut dyn Engine, cfg: &TrainConfig) -> Resu
         .eval_every(cfg.eval_every)
         .max_forwards(cfg.max_forwards)
         .pipeline_depth(cfg.pipeline_depth)
+        .shards(cfg.shards)
+        .shard_hosts(cfg.shard_hosts.clone())
         .verbose(cfg.verbose)
         .gradient_source(source)
         .build(engine)
@@ -714,6 +787,8 @@ pub fn phase_session<'a>(
         .eval_every(cfg.eval_every)
         .max_forwards(cfg.max_forwards)
         .pipeline_depth(cfg.pipeline_depth)
+        .shards(cfg.shards)
+        .shard_hosts(cfg.shard_hosts.clone())
         .verbose(cfg.verbose)
         .tag(format!("{protocol:?}"))
         .gradient_source(source)
@@ -789,6 +864,48 @@ mod tests {
                 .method(TrainMethod::Fo, Vec::new());
             b.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn builder_rejects_fewer_shards_than_hosts() {
+        let hosts = vec!["127.0.0.1:7001".to_string(), "127.0.0.1:7002".to_string()];
+        let b = SessionBuilder::new(10)
+            .shards(1)
+            .shard_hosts(hosts.clone())
+            .method(TrainMethod::Fo, Vec::new());
+        assert!(b.validate().is_err());
+        // shards >= hosts (mixed tcp + in-process) and shards-only are fine
+        for (shards, hosts) in [(2, hosts.clone()), (4, hosts), (3, Vec::new())] {
+            let b = SessionBuilder::new(10)
+                .shards(shards)
+                .shard_hosts(hosts)
+                .method(TrainMethod::Fo, Vec::new());
+            b.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn sharded_session_matches_unsharded_bitwise() {
+        let run = |shards: usize| {
+            let mut eng = NativeEngine::new("bs", "tt").unwrap();
+            let mut params = eng.model.init_flat(0);
+            let layout = eng.model.param_layout();
+            let hist = SessionBuilder::new(8)
+                .eval_every(3)
+                .shards(shards)
+                .method(TrainMethod::ZoRge(RgeConfig::default()), layout)
+                .build(&mut eng)
+                .unwrap()
+                .run(&mut params)
+                .unwrap();
+            (params, hist)
+        };
+        let (p0, h0) = run(0);
+        let (p2, h2) = run(2);
+        assert_eq!(p0, p2, "sharded trajectory diverged");
+        assert_eq!(h0.losses, h2.losses);
+        assert_eq!(h0.errors, h2.errors);
+        assert_eq!(h0.total_forwards, h2.total_forwards);
     }
 
     #[test]

@@ -40,7 +40,10 @@ impl Observer for NullObserver {
 /// to the history, and optionally log a progress line.
 ///
 /// `tag = None` prints the weight-domain format (with forward counts);
-/// `tag = Some(protocol)` prints the phase-domain format.
+/// `tag = Some(protocol)` prints the phase-domain format. On sharded
+/// engines (and only there — single-engine logs stay byte-identical), a
+/// verbose eval additionally prints one compact `shard[i]: ...`
+/// throughput line per replica.
 pub struct EvalObserver {
     /// Evaluate every this many epochs.
     pub eval_every: usize,
@@ -86,6 +89,16 @@ impl Observer for EvalObserver {
                     eprintln!(
                         "epoch {epoch:>6}  loss {loss:10.4e}  rel_l2 {err:9.3e}  forwards {forwards}"
                     )
+                }
+            }
+            // per-replica throughput, sharded engines only: single-engine
+            // runs return None and their logs stay byte-identical
+            if let Some(stats) = ctx.engine.shard_stats() {
+                for s in &stats {
+                    eprintln!(
+                        "  shard[{}] {}: rows {}  {:.1} probes/s  fallbacks {}",
+                        s.index, s.label, s.rows, s.probes_per_s, s.fallbacks
+                    );
                 }
             }
         }

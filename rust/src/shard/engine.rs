@@ -1,0 +1,592 @@
+//! [`ShardedEngine`]: one [`Engine`] facade over N engine replicas.
+//!
+//! `loss_many` / `loss_many_async` partition the probe batch into
+//! contiguous row ranges (`ceil(n / shards)` rows each, in shard order),
+//! dispatch every range to its replica concurrently — one thread per
+//! shard slot, each driving a blocking [`Transport`] — and reassemble the
+//! loss vector **in row order**, independent of reply arrival order. All
+//! other engine methods delegate to the wrapped local engine.
+//!
+//! ## Failure semantics
+//!
+//! A shard that cannot deliver a usable reply (unreachable worker,
+//! connection drop, error frame, wrong-length loss vector) degrades to
+//! **local evaluation of exactly its row range**, with a warning logged
+//! on the transition into the failed state, and then backs off
+//! (`RETRY_BACKOFF`, doubling per consecutive failure) before being
+//! probed again (so a hung worker costs at most one transport timeout
+//! per backoff window, not per dispatch, while a recovered worker is
+//! picked back up automatically). The
+//! assembled loss vector is therefore always complete and
+//! bitwise-identical to the single-engine result — never silently wrong
+//! or truncated.
+//!
+//! ## Determinism
+//!
+//! Replicas are built from the local engine's [`Engine::replica_spec`],
+//! so every probe row produces the bitwise-identical loss no matter
+//! which replica (or the local fallback) evaluates it; the contiguous
+//! static partition and in-order assembly do the rest. Sharded training
+//! trajectories are pinned against the single-engine path in
+//! `rust/tests/shard_parity.rs`.
+
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::transport::{InProcessTransport, TcpTransport, Transport};
+use super::wire;
+use crate::coordinator::Metrics;
+use crate::engine::{Engine, EngineSpec, NativeEngine, PendingLosses, ProbeBatch, ShardStat};
+use crate::pde::{Pde, PointSet};
+use crate::util::rng::Rng;
+use crate::{err, Error, Result};
+
+/// Base wall-clock backoff after a shard failure; doubled per
+/// consecutive failure up to [`MAX_BACKOFF_DOUBLINGS`]. Keeps a *hung*
+/// (not merely refused) worker from stalling training on every
+/// dispatch: after a failure the slot's ranges go straight to local
+/// fallback until the backoff elapses, then one probe dispatch tries
+/// the worker again (so a recovered worker is picked back up). Wall
+/// clock, not dispatch counts — chunk-streamed estimators issue many
+/// dispatches per step, and a hung worker must cost at most one
+/// transport timeout per backoff window. The exponential growth keeps a
+/// persistently-hung worker (each probe costs the 300 s transport I/O
+/// timeout) below ~25% stall time while still retrying transient blips
+/// within a minute.
+const RETRY_BACKOFF: std::time::Duration = std::time::Duration::from_secs(60);
+
+/// Cap on backoff doublings: 60 s · 2⁴ = 16 min maximum retry interval.
+const MAX_BACKOFF_DOUBLINGS: u32 = 4;
+
+/// One shard slot: a transport to a replica plus its failure latches.
+struct ShardSlot {
+    transport: Box<dyn Transport>,
+    label: String,
+    /// True after a logged failure; reset on the next success so a later
+    /// outage logs again (exactly one warning per failure streak).
+    warned: bool,
+    /// Consecutive failures (drives the exponential backoff).
+    failures: u32,
+    /// Skip dispatches until this instant after a failure (see
+    /// [`RETRY_BACKOFF`]); `None` = healthy.
+    retry_at: Option<Instant>,
+    /// How many replicas share this slot's host CPU (1 = a whole host).
+    /// Co-located ([`Transport::colocated`]) replicas get the request's
+    /// `probe_threads` divided by their count instead of oversubscribing
+    /// the local cores N-fold; loss values are thread-count-invariant,
+    /// so this never affects results.
+    dilution: usize,
+}
+
+/// The result of one shard's dispatch, timed for throughput accounting.
+struct RangeOutcome {
+    result: Result<Vec<f64>>,
+    secs: f64,
+}
+
+/// An [`Engine`] that fans probe batches across engine replicas.
+///
+/// Wraps any engine that can describe itself via
+/// [`Engine::replica_spec`] (currently [`NativeEngine`]); the wrapped
+/// engine keeps serving scalar `loss`, `forward_u` and eval queries, and
+/// is the fallback evaluator when a shard fails.
+pub struct ShardedEngine<E: Engine> {
+    local: E,
+    spec: EngineSpec,
+    /// Shard slots, behind `Arc<Mutex>` so the non-blocking dispatch
+    /// thread ([`Engine::loss_many_async`]) can drive them too.
+    shards: Arc<Mutex<Vec<ShardSlot>>>,
+    /// Per-shard dispatch accounting (rows, busy seconds, fallbacks).
+    metrics: Arc<Mutex<Metrics>>,
+    /// Lazily-built local replica used as the fallback evaluator on the
+    /// async dispatch thread, where the wrapped engine is out of reach.
+    async_fallback: Arc<Mutex<Option<NativeEngine>>>,
+}
+
+impl<E: Engine> ShardedEngine<E> {
+    /// Wrap `local`, fanning probe batches across `transports` (one
+    /// replica per transport). Errors when the engine cannot be
+    /// replicated ([`Engine::replica_spec`] is `None`), when it
+    /// resamples stochastic loss state (SE MC nodes cannot be kept in
+    /// sync across replicas), or when no transport is given.
+    pub fn new(local: E, transports: Vec<Box<dyn Transport>>) -> Result<ShardedEngine<E>> {
+        if transports.is_empty() {
+            return Err(Error::Config("sharding requires at least one transport".into()));
+        }
+        let spec = local.replica_spec().ok_or_else(|| {
+            Error::Config(format!(
+                "the {:?} backend cannot be sharded: it has no replica spec",
+                local.backend()
+            ))
+        })?;
+        if local.has_stochastic_resample() {
+            return Err(Error::Config(
+                "engines with stochastic resample (SE MC nodes) cannot be sharded".into(),
+            ));
+        }
+        // co-located replicas split the local probe-worker budget
+        // instead of oversubscribing the host N-fold
+        let n_colocated = transports.iter().filter(|t| t.colocated()).count();
+        let slots = transports
+            .into_iter()
+            .map(|t| ShardSlot {
+                label: t.label(),
+                warned: false,
+                failures: 0,
+                retry_at: None,
+                dilution: if t.colocated() { n_colocated.max(1) } else { 1 },
+                transport: t,
+            })
+            .collect();
+        Ok(ShardedEngine {
+            local,
+            spec,
+            shards: Arc::new(Mutex::new(slots)),
+            metrics: Arc::new(Mutex::new(Metrics::new())),
+            async_fallback: Arc::new(Mutex::new(None)),
+        })
+    }
+
+    /// Wrap `local` per the session/CLI shard configuration: one
+    /// [`TcpTransport`] per `hosts` entry, topped up with
+    /// [`InProcessTransport`] replicas to `shards` total (so
+    /// `shards = 4` with two hosts runs two TCP and two in-process
+    /// replicas). In-process replicas split the local engine's probe
+    /// worker budget between them ([`Transport::colocated`]); TCP
+    /// replicas keep the full count (their own hosts).
+    pub fn from_config(local: E, shards: usize, hosts: &[String]) -> Result<ShardedEngine<E>> {
+        let total = shards.max(hosts.len());
+        let mut transports: Vec<Box<dyn Transport>> = Vec::with_capacity(total);
+        for h in hosts {
+            transports.push(Box::new(TcpTransport::new(h.clone())));
+        }
+        while transports.len() < total {
+            transports.push(Box::new(InProcessTransport::new()));
+        }
+        Self::new(local, transports)
+    }
+
+    /// Number of shard replicas.
+    pub fn n_shards(&self) -> usize {
+        self.shards.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    /// The wrapped local engine.
+    pub fn local(&self) -> &E {
+        &self.local
+    }
+}
+
+/// Contiguous static partition of `n` rows over `s` shards (the same
+/// `ceil`-sized split the native probe pool uses, so the assignment is
+/// deterministic and independent of timing).
+fn ranges(n: usize, s: usize) -> Vec<Range<usize>> {
+    let per = n.div_ceil(s);
+    (0..s).map(|i| (i * per).min(n)..((i + 1) * per).min(n)).collect()
+}
+
+/// Dispatch one probe batch across the shard slots and assemble the loss
+/// vector in row order. Failed ranges are re-evaluated through
+/// `fallback` (the wrapped engine on the blocking path, the spec-built
+/// replica on the async path).
+fn shard_loss_many(
+    spec: &EngineSpec,
+    shards: &Mutex<Vec<ShardSlot>>,
+    metrics: &Mutex<Metrics>,
+    probes: &ProbeBatch,
+    pts: &PointSet,
+    fallback: &mut dyn FnMut(&ProbeBatch) -> Result<Vec<f64>>,
+) -> Result<Vec<f64>> {
+    let n = probes.n_probes();
+    let mut slots = shards.lock().unwrap_or_else(|p| p.into_inner());
+    let ranges = ranges(n, slots.len());
+    let mut outcomes: Vec<Option<RangeOutcome>> = (0..ranges.len()).map(|_| None).collect();
+    std::thread::scope(|sc| {
+        for ((slot, range), out) in slots.iter_mut().zip(&ranges).zip(outcomes.iter_mut()) {
+            if range.is_empty() {
+                continue;
+            }
+            if slot.retry_at.map(|t| Instant::now() < t).unwrap_or(false) {
+                // recently failed: go straight to local fallback instead
+                // of paying the transport timeout again (outcome stays
+                // None, handled below)
+                continue;
+            }
+            sc.spawn(move || {
+                let request = if slot.dilution > 1 {
+                    let mut diluted = spec.clone();
+                    let base = if diluted.probe_threads == 0 {
+                        crate::engine::native::default_threads()
+                    } else {
+                        diluted.probe_threads
+                    };
+                    diluted.probe_threads = (base / slot.dilution).max(1);
+                    wire::encode_eval_request(&diluted, probes.rows(range.clone()), pts)
+                } else {
+                    wire::encode_eval_request(spec, probes.rows(range.clone()), pts)
+                };
+                let t0 = Instant::now();
+                let result = slot
+                    .transport
+                    .round_trip(&request)
+                    .and_then(|reply| wire::decode_eval_reply(&reply));
+                *out = Some(RangeOutcome { result, secs: t0.elapsed().as_secs_f64() });
+            });
+        }
+    });
+
+    let mut out = vec![0.0; n];
+    let mut sub: Option<ProbeBatch> = None;
+    let mut m = metrics.lock().unwrap_or_else(|p| p.into_inner());
+    let it = slots.iter_mut().zip(&ranges).zip(outcomes).enumerate();
+    for (i, ((slot, range), outcome)) in it {
+        let rows = range.len();
+        if rows == 0 {
+            continue;
+        }
+        let failure = match outcome {
+            Some(RangeOutcome { result: Ok(losses), secs }) if losses.len() == rows => {
+                out[range.start..range.end].copy_from_slice(&losses);
+                slot.warned = false;
+                slot.failures = 0;
+                slot.retry_at = None;
+                m.inc(&format!("shard{i}.rows"), rows as u64);
+                let key = format!("shard{i}.secs");
+                let prev = m.gauge(&key).unwrap_or(0.0);
+                m.set_gauge(&key, prev + secs);
+                continue;
+            }
+            Some(RangeOutcome { result: Ok(losses), .. }) => {
+                format!("replied with {} losses for {rows} rows", losses.len())
+            }
+            Some(RangeOutcome { result: Err(e), .. }) => e.to_string(),
+            // not dispatched: the slot is backing off after a failure
+            None => String::new(),
+        };
+        if !failure.is_empty() {
+            let doublings = slot.failures.min(MAX_BACKOFF_DOUBLINGS);
+            slot.failures = slot.failures.saturating_add(1);
+            slot.retry_at = Some(Instant::now() + RETRY_BACKOFF * (1u32 << doublings));
+            if !slot.warned {
+                eprintln!(
+                    "shard[{i}] ({}): {failure}; falling back to local evaluation",
+                    slot.label
+                );
+                slot.warned = true;
+            }
+        }
+        m.inc(&format!("shard{i}.fallbacks"), 1);
+        let sb = sub.get_or_insert_with(|| ProbeBatch::new(probes.dim()));
+        sb.clear();
+        sb.extend_from_rows(probes.rows(range.clone()));
+        let losses = fallback(sb)?;
+        if losses.len() != rows {
+            return Err(err(format!(
+                "shard fallback returned {} losses for {rows} rows",
+                losses.len()
+            )));
+        }
+        out[range.start..range.end].copy_from_slice(&losses);
+    }
+    Ok(out)
+}
+
+impl<E: Engine> Engine for ShardedEngine<E> {
+    fn pde(&self) -> &dyn Pde {
+        self.local.pde()
+    }
+
+    fn n_params(&self) -> usize {
+        self.local.n_params()
+    }
+
+    fn loss(&mut self, params: &[f64], pts: &PointSet) -> Result<f64> {
+        self.local.loss(params, pts)
+    }
+
+    fn loss_many(&mut self, probes: &ProbeBatch, pts: &PointSet) -> Result<Vec<f64>> {
+        if probes.n_probes() == 0 {
+            return Ok(Vec::new());
+        }
+        let local = &mut self.local;
+        shard_loss_many(&self.spec, &self.shards, &self.metrics, probes, pts, &mut |pb| {
+            local.loss_many(pb, pts)
+        })
+    }
+
+    fn loss_many_async(&mut self, probes: ProbeBatch, pts: &PointSet) -> PendingLosses {
+        if probes.n_probes() == 0 {
+            return PendingLosses::ready(probes, Ok(Vec::new()));
+        }
+        // Snapshot everything the dispatch needs: the slots, metrics and
+        // fallback replica are shared via Arc, the spec and points are
+        // cloned. The wrapped engine stays free for concurrent scalar
+        // queries, exactly like the native engine's async path.
+        let spec = self.spec.clone();
+        let shards = Arc::clone(&self.shards);
+        let metrics = Arc::clone(&self.metrics);
+        let async_fallback = Arc::clone(&self.async_fallback);
+        let pts = pts.clone();
+        let handle = std::thread::spawn(move || {
+            let mut fb = |pb: &ProbeBatch| -> Result<Vec<f64>> {
+                let mut guard = async_fallback.lock().unwrap_or_else(|p| p.into_inner());
+                if guard.is_none() {
+                    *guard = Some(spec.build()?);
+                }
+                guard.as_mut().expect("built above").loss_many(pb, &pts)
+            };
+            let result = shard_loss_many(&spec, &shards, &metrics, &probes, &pts, &mut fb);
+            (probes, result)
+        });
+        PendingLosses::in_flight(handle)
+    }
+
+    fn set_probe_threads(&mut self, threads: usize) {
+        self.local.set_probe_threads(threads);
+        // keep replicas in step with the local engine's worker count
+        if let Some(spec) = self.local.replica_spec() {
+            self.spec = spec;
+        }
+    }
+
+    fn loss_grad(&mut self, params: &[f64], pts: &PointSet) -> Result<(f64, Vec<f64>)> {
+        self.local.loss_grad(params, pts)
+    }
+
+    fn forward_u(&mut self, params: &[f64], x: &[f64], n: usize) -> Result<Vec<f64>> {
+        self.local.forward_u(params, x, n)
+    }
+
+    fn forwards_per_loss(&self) -> usize {
+        self.local.forwards_per_loss()
+    }
+
+    fn resample(&mut self, rng: &mut Rng) {
+        self.local.resample(rng)
+    }
+
+    fn has_stochastic_resample(&self) -> bool {
+        self.local.has_stochastic_resample()
+    }
+
+    fn backend(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn shard_stats(&self) -> Option<Vec<ShardStat>> {
+        let slots = self.shards.lock().unwrap_or_else(|p| p.into_inner());
+        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        Some(
+            slots
+                .iter()
+                .enumerate()
+                .map(|(i, slot)| {
+                    let rows = m.counter(&format!("shard{i}.rows"));
+                    let secs = m.gauge(&format!("shard{i}.secs")).unwrap_or(0.0);
+                    ShardStat {
+                        index: i,
+                        label: slot.label.clone(),
+                        rows,
+                        probes_per_s: if secs > 0.0 { rows as f64 / secs } else { 0.0 },
+                        fallbacks: m.counter(&format!("shard{i}.fallbacks")),
+                    }
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::native::NativeOptions;
+    use crate::loss::DerivMethod;
+
+    fn probes_around(params: &[f64], n: usize) -> ProbeBatch {
+        let mut pb = ProbeBatch::with_capacity(params.len(), n);
+        for i in 0..n {
+            let row = pb.push_perturbed(params);
+            row[(i * 13) % params.len()] += 0.005 * (i as f64 + 1.0);
+        }
+        pb
+    }
+
+    fn in_process(n: usize) -> Vec<Box<dyn Transport>> {
+        (0..n).map(|_| Box::new(InProcessTransport::new()) as Box<dyn Transport>).collect()
+    }
+
+    #[test]
+    fn sharded_loss_many_matches_direct_bitwise() {
+        let mut direct = NativeEngine::new("bs", "tt").unwrap();
+        let params = direct.model.init_flat(0);
+        let mut rng = Rng::new(5);
+        let pts = direct.pde().sample_points(&mut rng);
+        let probes = probes_around(&params, 7);
+        let want = direct.loss_many(&probes, &pts).unwrap();
+        for n in [1usize, 2, 4, 9] {
+            let local = NativeEngine::new("bs", "tt").unwrap();
+            let mut sharded = ShardedEngine::new(local, in_process(n)).unwrap();
+            let got = sharded.loss_many(&probes, &pts).unwrap();
+            assert_eq!(got, want, "{n} shards diverged");
+            let stats = sharded.shard_stats().unwrap();
+            assert_eq!(stats.len(), n);
+            assert_eq!(stats.iter().map(|s| s.rows).sum::<u64>(), 7, "{n} shards");
+            assert!(stats.iter().all(|s| s.fallbacks == 0));
+        }
+    }
+
+    #[test]
+    fn sharded_async_matches_blocking_bitwise() {
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let params = local.model.init_flat(0);
+        let mut sharded = ShardedEngine::new(local, in_process(3)).unwrap();
+        let mut rng = Rng::new(6);
+        let pts = sharded.pde().sample_points(&mut rng);
+        let probes = probes_around(&params, 5);
+        let want = sharded.loss_many(&probes, &pts).unwrap();
+        let pending = sharded.loss_many_async(probes.clone(), &pts);
+        let (back, got) = pending.wait();
+        assert_eq!(got.unwrap(), want);
+        assert_eq!(back.as_flat(), probes.as_flat(), "batch must round-trip");
+    }
+
+    /// A transport whose replies are broken in a configurable way.
+    struct BrokenTransport {
+        mode: u8, // 0 = io error, 1 = error frame, 2 = wrong-length reply
+    }
+
+    impl Transport for BrokenTransport {
+        fn round_trip(&mut self, _request: &[u8]) -> Result<Vec<u8>> {
+            match self.mode {
+                0 => Err(err("simulated connection failure")),
+                1 => Ok(wire::encode_eval_error("simulated worker error")),
+                _ => Ok(wire::encode_eval_reply(&[0.125])),
+            }
+        }
+        fn label(&self) -> String {
+            format!("broken(mode {})", self.mode)
+        }
+    }
+
+    #[test]
+    fn broken_shards_fall_back_to_local_bitwise() {
+        let mut direct = NativeEngine::new("bs", "tt").unwrap();
+        let params = direct.model.init_flat(0);
+        let mut rng = Rng::new(7);
+        let pts = direct.pde().sample_points(&mut rng);
+        let probes = probes_around(&params, 6);
+        let want = direct.loss_many(&probes, &pts).unwrap();
+        for mode in 0u8..3 {
+            let local = NativeEngine::new("bs", "tt").unwrap();
+            let transports: Vec<Box<dyn Transport>> = vec![
+                Box::new(BrokenTransport { mode }),
+                Box::new(InProcessTransport::new()),
+            ];
+            let mut sharded = ShardedEngine::new(local, transports).unwrap();
+            let got = sharded.loss_many(&probes, &pts).unwrap();
+            assert_eq!(got, want, "mode {mode}: fallback must stay bitwise-identical");
+            let stats = sharded.shard_stats().unwrap();
+            assert_eq!(stats[0].fallbacks, 1, "mode {mode}");
+            assert_eq!(stats[0].rows, 0, "failed shards evaluate no rows");
+            assert_eq!(stats[1].rows, 3, "healthy shard keeps its range");
+        }
+    }
+
+    #[test]
+    fn async_fallback_also_stays_bitwise() {
+        let mut direct = NativeEngine::new("bs", "tt").unwrap();
+        let params = direct.model.init_flat(0);
+        let mut rng = Rng::new(8);
+        let pts = direct.pde().sample_points(&mut rng);
+        let probes = probes_around(&params, 4);
+        let want = direct.loss_many(&probes, &pts).unwrap();
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let transports: Vec<Box<dyn Transport>> =
+            vec![Box::new(BrokenTransport { mode: 0 }), Box::new(InProcessTransport::new())];
+        let mut sharded = ShardedEngine::new(local, transports).unwrap();
+        let (_, got) = sharded.loss_many_async(probes, &pts).wait();
+        assert_eq!(got.unwrap(), want);
+    }
+
+    #[test]
+    fn failed_shards_back_off_before_retry() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct Failing {
+            calls: Arc<AtomicUsize>,
+        }
+        impl Transport for Failing {
+            fn round_trip(&mut self, _request: &[u8]) -> Result<Vec<u8>> {
+                self.calls.fetch_add(1, Ordering::SeqCst);
+                Err(err("worker down"))
+            }
+            fn label(&self) -> String {
+                "failing".into()
+            }
+        }
+        let calls = Arc::new(AtomicUsize::new(0));
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let params = local.model.init_flat(0);
+        let transports: Vec<Box<dyn Transport>> =
+            vec![Box::new(Failing { calls: Arc::clone(&calls) })];
+        let mut sharded = ShardedEngine::new(local, transports).unwrap();
+        let mut rng = Rng::new(9);
+        let pts = sharded.pde().sample_points(&mut rng);
+        let mut probes = ProbeBatch::new(params.len());
+        probes.push(&params);
+        let mut direct = NativeEngine::new("bs", "tt").unwrap();
+        let want = direct.loss_many(&probes, &pts).unwrap();
+        for _ in 0..5 {
+            assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        }
+        // only the first dispatch paid the transport; the rest of the
+        // failure streak (well inside the retry backoff) went straight
+        // to local fallback
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        assert_eq!(sharded.shard_stats().unwrap()[0].fallbacks, 5);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let n_params = local.n_params();
+        let mut sharded = ShardedEngine::new(local, in_process(2)).unwrap();
+        let mut rng = Rng::new(0);
+        let pts = sharded.pde().sample_points(&mut rng);
+        let probes = ProbeBatch::new(n_params);
+        assert!(sharded.loss_many(&probes, &pts).unwrap().is_empty());
+        assert!(!sharded.loss_many_async(probes, &pts).is_in_flight());
+    }
+
+    #[test]
+    fn construction_rejects_bad_configs() {
+        // no transports
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        assert!(ShardedEngine::new(local, Vec::new()).is_err());
+        // stochastic resample (SE MC nodes)
+        let se = NativeEngine::with_options(
+            "bs",
+            "tt",
+            2,
+            None,
+            NativeOptions { method: DerivMethod::Se, ..Default::default() },
+        )
+        .unwrap();
+        assert!(ShardedEngine::new(se, in_process(2)).is_err());
+    }
+
+    #[test]
+    fn range_partition_is_contiguous_and_complete() {
+        for (n, s) in [(7usize, 3usize), (3, 4), (8, 2), (1, 1), (0, 2)] {
+            let rs = ranges(n, s);
+            assert_eq!(rs.len(), s);
+            let mut next = 0;
+            for r in &rs {
+                assert_eq!(r.start, next.min(n));
+                assert!(r.end >= r.start);
+                next = r.end;
+            }
+            assert_eq!(rs.last().unwrap().end, n, "n {n} s {s}");
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Multi-engine probe sharding: fan one [`ProbeBatch`] across engine
+//! replicas — in-process or over TCP — behind the ordinary
+//! [`Engine`](crate::engine::Engine) trait.
+//!
+//! PRs 1–3 turned the per-step probe plan into a serializable value that
+//! meets engines in exactly one place (the session driver). This module
+//! is the step from "one process, many threads" to "many engines, one
+//! probe plan": [`ShardedEngine`] splits a batch into contiguous row
+//! ranges, ships each range to a replica through a [`Transport`], and
+//! reassembles the loss vector in row order — so the session driver,
+//! estimators and the pipelined path need no structural changes.
+//!
+//! ```text
+//!            ProbeBatch (n rows)
+//!                   |
+//!            ShardedEngine::loss_many
+//!        ┌──────────┼──────────────┐
+//!   rows 0..a   rows a..b      rows b..n        (contiguous ranges)
+//!        |          |              |
+//!   InProcess    TcpTransport  TcpTransport     (one thread each)
+//!   replica      shard-worker  shard-worker
+//!        |          |              |
+//!        └──────────┼──────────────┘
+//!          losses assembled in row order
+//! ```
+//!
+//! The submodules:
+//!
+//! * [`wire`] — the zero-dependency, length-prefixed binary codec for
+//!   probe-range requests and loss-vector replies;
+//! * [`transport`] — the [`Transport`] trait with in-process and
+//!   blocking-TCP implementations;
+//! * [`worker`] — the request handler and the TCP server behind
+//!   `opinn shard-worker --listen <addr>`;
+//! * [`engine`] — [`ShardedEngine`] itself, with the deterministic
+//!   partition/assembly and the honest local fallback.
+//!
+//! Determinism: replicas are built from [`Engine::replica_spec`], so
+//! sharded trajectories are
+//! bitwise-identical to single-engine runs at any shard count, over
+//! either transport, at any pipeline depth — pinned by
+//! `rust/tests/shard_parity.rs`.
+//!
+//! [`ProbeBatch`]: crate::engine::ProbeBatch
+//! [`Engine::replica_spec`]: crate::engine::Engine::replica_spec
+
+#![deny(missing_docs)]
+
+pub mod engine;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use engine::ShardedEngine;
+pub use transport::{InProcessTransport, TcpTransport, Transport};
+pub use worker::{EngineCache, ShardWorker};

@@ -1,0 +1,172 @@
+//! [`Transport`]: how one shard slot reaches its engine replica.
+//!
+//! A transport is a blocking request/reply channel carrying the
+//! [`super::wire`] frames. Concurrency across shards comes from the
+//! dispatcher ([`super::ShardedEngine`]), which drives every slot's
+//! transport from its own thread — transports themselves stay simple and
+//! synchronous.
+//!
+//! * [`InProcessTransport`] — serves the request against a local
+//!   [`crate::engine::NativeEngine`] replica on the calling (dispatch)
+//!   thread. Used by tests and for single-host scale-up; goes through
+//!   the full encode/decode path so both transports exercise the same
+//!   codec.
+//! * [`TcpTransport`] — one blocking `std::net` connection to a
+//!   `opinn shard-worker`, lazily (re)connected, one in-flight request
+//!   at a time.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::wire;
+use super::worker::{handle_request, EngineCache};
+use crate::{err, Result};
+
+/// A blocking request/reply channel to one engine replica. `Send` so the
+/// dispatcher can drive each slot from its own thread.
+pub trait Transport: Send {
+    /// Send one request payload and block for the reply payload. Any
+    /// error means "this replica is unreachable for this dispatch" — the
+    /// dispatcher falls back to local evaluation for the slot's rows.
+    fn round_trip(&mut self, request: &[u8]) -> Result<Vec<u8>>;
+
+    /// Human-readable endpoint label for logs and shard stats.
+    fn label(&self) -> String;
+
+    /// True when the replica shares this process's host CPU (in-process
+    /// replicas). The dispatcher divides the probe-worker budget across
+    /// co-located replicas instead of oversubscribing the host N-fold;
+    /// remote transports keep the default `false` and their hosts' full
+    /// parallelism.
+    fn colocated(&self) -> bool {
+        false
+    }
+}
+
+/// An engine replica hosted in this process: requests are decoded and
+/// evaluated on the calling thread against a cached
+/// [`crate::engine::NativeEngine`] built from the request's spec.
+#[derive(Default)]
+pub struct InProcessTransport {
+    cache: EngineCache,
+}
+
+impl InProcessTransport {
+    /// A fresh in-process replica slot (the engine is built from the
+    /// first request's spec).
+    pub fn new() -> InProcessTransport {
+        InProcessTransport::default()
+    }
+}
+
+impl Transport for InProcessTransport {
+    fn round_trip(&mut self, request: &[u8]) -> Result<Vec<u8>> {
+        Ok(handle_request(request, &mut self.cache))
+    }
+
+    fn label(&self) -> String {
+        "in-process".to_string()
+    }
+
+    fn colocated(&self) -> bool {
+        true
+    }
+}
+
+/// How long a TCP shard connection attempt may take before the dispatch
+/// falls back to local evaluation.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(3);
+
+/// Per-request read/write bound on an established TCP shard connection.
+/// Generous (probe ranges can take minutes on big benchmarks), but
+/// finite: a worker that hangs mid-request (partition without RST,
+/// stopped process) must surface as a dispatch error — which degrades to
+/// local evaluation — rather than block the training loop forever.
+pub const IO_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// A lazily-connected blocking TCP channel to one `opinn shard-worker`.
+/// Connection errors surface as `Err` from [`Transport::round_trip`] and
+/// drop the socket; the next dispatch re-attempts the connection, so a
+/// worker that comes (back) up is picked up automatically.
+pub struct TcpTransport {
+    addr: String,
+    stream: Option<TcpStream>,
+}
+
+impl TcpTransport {
+    /// A transport to the worker at `addr` (`host:port`); connects on
+    /// first use.
+    pub fn new(addr: impl Into<String>) -> TcpTransport {
+        TcpTransport { addr: addr.into(), stream: None }
+    }
+
+    /// Connect to the first reachable resolved address (dual-stack hosts
+    /// may resolve to an IPv6 address the worker does not listen on).
+    fn connect(&self) -> Result<TcpStream> {
+        let mut last: Option<std::io::Error> = None;
+        for addr in self.addr.to_socket_addrs()? {
+            match TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT) {
+                Ok(stream) => return Ok(stream),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(match last {
+            Some(e) => e.into(),
+            None => err(format!("shard: cannot resolve {:?}", self.addr)),
+        })
+    }
+
+    fn try_round_trip(&mut self, request: &[u8]) -> Result<Vec<u8>> {
+        if self.stream.is_none() {
+            let stream = self.connect()?;
+            let _ = stream.set_nodelay(true);
+            stream.set_read_timeout(Some(IO_TIMEOUT))?;
+            stream.set_write_timeout(Some(IO_TIMEOUT))?;
+            self.stream = Some(stream);
+        }
+        let stream = self.stream.as_mut().expect("connected above");
+        wire::write_frame(stream, request)?;
+        match wire::read_frame(stream)? {
+            Some(reply) => Ok(reply),
+            None => Err(err(format!("shard: {} closed the connection mid-request", self.addr))),
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn round_trip(&mut self, request: &[u8]) -> Result<Vec<u8>> {
+        let out = self.try_round_trip(request);
+        if out.is_err() {
+            // drop the (possibly half-written) connection; reconnect on
+            // the next dispatch
+            self.stream = None;
+        }
+        out
+    }
+
+    fn label(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unreachable_tcp_worker_errors_cleanly() {
+        // port 1 is in the reserved range; connection is refused fast
+        let mut t = TcpTransport::new("127.0.0.1:1");
+        assert!(t.round_trip(b"ping").is_err());
+        assert!(t.stream.is_none(), "failed transports must drop the socket");
+        assert_eq!(t.label(), "tcp://127.0.0.1:1");
+    }
+
+    #[test]
+    fn in_process_transport_replies_to_garbage_with_error_frames() {
+        let mut t = InProcessTransport::new();
+        let reply = t.round_trip(b"garbage").unwrap();
+        assert!(super::super::wire::decode_eval_reply(&reply).is_err());
+        assert_eq!(t.label(), "in-process");
+    }
+}

@@ -1,0 +1,632 @@
+//! The shard wire format: a zero-dependency, length-prefixed binary codec
+//! for probe-range requests and loss-vector replies.
+//!
+//! ## Frame layout
+//!
+//! Every message is one *frame*: a little-endian `u32` payload length
+//! followed by that many payload bytes. Frames larger than [`MAX_FRAME`]
+//! are rejected on both ends (use the `*_with_limit` variants to tighten
+//! the bound). The payload starts with a one-byte tag:
+//!
+//! | tag | message | body |
+//! |-----|---------|------|
+//! | `1` | eval request | engine spec, probe rows, point set |
+//! | `2` | eval reply (ok) | `u64` count + that many `f64` losses |
+//! | `3` | eval reply (error) | UTF-8 message string |
+//!
+//! Primitives: `u64` and `u32` little-endian; `f64` as the little-endian
+//! bytes of [`f64::to_bits`] (bitwise round-trip, including NaN payloads
+//! and signed zeros — the codec must never perturb a loss value);
+//! strings as `u64` byte length + UTF-8 bytes; `Option<T>` as a `u8`
+//! presence flag + `T`.
+//!
+//! The encode/decode pair is pinned bitwise by the property tests at the
+//! bottom of this module (`util::proptest_lite`), including empty
+//! batches, empty point sets and the max-frame edge.
+
+use std::io::{Read, Write};
+
+use crate::engine::{EngineSpec, ProbeBatch, ProbeRows};
+use crate::loss::DerivMethod;
+use crate::pde::PointSet;
+use crate::{err, Result};
+
+/// Hard ceiling on one frame's payload size (256 MiB) — far above any
+/// real probe batch, small enough to reject corrupt length headers
+/// before allocating.
+pub const MAX_FRAME: usize = 256 << 20;
+
+/// Payload tag of a probe-range evaluation request.
+pub const TAG_EVAL_REQUEST: u8 = 1;
+/// Payload tag of a successful loss-vector reply.
+pub const TAG_EVAL_OK: u8 = 2;
+/// Payload tag of an error reply.
+pub const TAG_EVAL_ERR: u8 = 3;
+
+// ---------------------------------------------------------------------
+// frames
+// ---------------------------------------------------------------------
+
+/// Write one frame (length prefix + payload) with an explicit payload
+/// size limit.
+pub fn write_frame_with_limit(w: &mut impl Write, payload: &[u8], limit: usize) -> Result<()> {
+    if payload.len() > limit.min(u32::MAX as usize) {
+        return Err(err(format!(
+            "shard wire: {}-byte frame exceeds the {}-byte limit",
+            payload.len(),
+            limit.min(u32::MAX as usize)
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one frame with the default [`MAX_FRAME`] limit.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    write_frame_with_limit(w, payload, MAX_FRAME)
+}
+
+/// Read one frame with an explicit payload size limit. Returns `Ok(None)`
+/// on clean end-of-stream (EOF exactly at a frame boundary — how a shard
+/// worker knows its client is done); a mid-frame EOF is an error.
+pub fn read_frame_with_limit(r: &mut impl Read, limit: usize) -> Result<Option<Vec<u8>>> {
+    let mut head = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut head[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(err("shard wire: truncated frame header")),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(head) as usize;
+    if len > limit.min(u32::MAX as usize) {
+        return Err(err(format!(
+            "shard wire: {len}-byte frame exceeds the {}-byte limit",
+            limit.min(u32::MAX as usize)
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Read one frame with the default [`MAX_FRAME`] limit.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    read_frame_with_limit(r, MAX_FRAME)
+}
+
+// ---------------------------------------------------------------------
+// primitive writers / readers
+// ---------------------------------------------------------------------
+
+fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_f64s(buf: &mut Vec<u8>, vs: &[f64]) {
+    put_u64(buf, vs.len() as u64);
+    buf.reserve(vs.len() * 8);
+    for &v in vs {
+        put_f64(buf, v);
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_u64(buf: &mut Vec<u8>, v: Option<usize>) {
+    match v {
+        None => put_u8(buf, 0),
+        Some(x) => {
+            put_u8(buf, 1);
+            put_u64(buf, x as u64);
+        }
+    }
+}
+
+fn put_opt_f64(buf: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        None => put_u8(buf, 0),
+        Some(x) => {
+            put_u8(buf, 1);
+            put_f64(buf, x);
+        }
+    }
+}
+
+/// Strict cursor over a payload; every read is bounds-checked so corrupt
+/// or truncated payloads fail with an error instead of panicking.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(err("shard wire: truncated payload"));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn get_u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn get_usize(&mut self) -> Result<usize> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| err(format!("shard wire: count {v} overflows usize")))
+    }
+
+    fn get_f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_bits(u64::from_le_bytes(b.try_into().expect("8-byte slice"))))
+    }
+
+    fn get_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_usize()?;
+        // bound the allocation by what the payload can actually hold
+        if self.remaining() < n.saturating_mul(8) {
+            return Err(err("shard wire: f64 run longer than payload"));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f64()?);
+        }
+        Ok(out)
+    }
+
+    fn get_str(&mut self) -> Result<String> {
+        let n = self.get_usize()?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| err("shard wire: invalid UTF-8 string"))
+    }
+
+    fn get_opt_u64(&mut self) -> Result<Option<usize>> {
+        match self.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.get_usize()?)),
+            other => Err(err(format!("shard wire: bad option flag {other}"))),
+        }
+    }
+
+    fn get_opt_f64(&mut self) -> Result<Option<f64>> {
+        match self.get_u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.get_f64()?)),
+            other => Err(err(format!("shard wire: bad option flag {other}"))),
+        }
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(err(format!(
+                "shard wire: {} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// composite encodings
+// ---------------------------------------------------------------------
+
+/// Encode an [`EngineSpec`] (also used verbatim as the worker-side engine
+/// cache key, so equal specs share one replica).
+pub fn encode_spec(spec: &EngineSpec) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_str(&mut buf, &spec.pde);
+    put_str(&mut buf, &spec.variant);
+    put_u64(&mut buf, spec.rank as u64);
+    put_opt_u64(&mut buf, spec.width);
+    let method = match spec.method {
+        DerivMethod::Sg => 0u8,
+        DerivMethod::Se => 1,
+    };
+    put_u8(&mut buf, method);
+    put_opt_u64(&mut buf, spec.level);
+    put_opt_f64(&mut buf, spec.sigma);
+    put_opt_u64(&mut buf, spec.mc_samples);
+    put_u64(&mut buf, spec.se_seed);
+    put_u64(&mut buf, spec.threads as u64);
+    put_u64(&mut buf, spec.probe_threads as u64);
+    buf
+}
+
+fn decode_spec(r: &mut Reader<'_>) -> Result<EngineSpec> {
+    Ok(EngineSpec {
+        pde: r.get_str()?,
+        variant: r.get_str()?,
+        rank: r.get_usize()?,
+        width: r.get_opt_u64()?,
+        method: match r.get_u8()? {
+            0 => DerivMethod::Sg,
+            1 => DerivMethod::Se,
+            other => return Err(err(format!("shard wire: bad deriv method {other}"))),
+        },
+        level: r.get_opt_u64()?,
+        sigma: r.get_opt_f64()?,
+        mc_samples: r.get_opt_u64()?,
+        se_seed: r.get_u64()?,
+        threads: r.get_usize()?,
+        probe_threads: r.get_usize()?,
+    })
+}
+
+fn put_rows(buf: &mut Vec<u8>, rows: ProbeRows<'_>) {
+    put_u64(buf, rows.dim() as u64);
+    put_f64s(buf, rows.as_flat());
+}
+
+fn get_batch(r: &mut Reader<'_>) -> Result<ProbeBatch> {
+    let dim = r.get_usize()?;
+    if dim == 0 {
+        return Err(err("shard wire: zero probe dimension"));
+    }
+    let flat = r.get_f64s()?;
+    if flat.len() % dim != 0 {
+        return Err(err("shard wire: probe storage is not a whole number of rows"));
+    }
+    Ok(ProbeBatch::from_flat(dim, flat))
+}
+
+fn put_points(buf: &mut Vec<u8>, pts: &PointSet) {
+    put_u64(buf, pts.blocks.len() as u64);
+    for (name, vals) in &pts.blocks {
+        put_str(buf, name);
+        put_f64s(buf, vals);
+    }
+}
+
+fn get_points(r: &mut Reader<'_>) -> Result<PointSet> {
+    let n = r.get_usize()?;
+    let mut blocks = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        let name = r.get_str()?;
+        let vals = r.get_f64s()?;
+        blocks.push((name, vals));
+    }
+    Ok(PointSet { blocks })
+}
+
+/// A decoded probe-range evaluation request: build (or reuse) the
+/// replica described by `spec`, evaluate every row of `probes` over
+/// `pts`, reply with the loss vector in row order.
+pub struct EvalRequest {
+    /// How to construct the evaluating replica.
+    pub spec: EngineSpec,
+    /// The probe rows assigned to this shard, re-indexed from zero.
+    pub probes: ProbeBatch,
+    /// The collocation points every probe is evaluated over.
+    pub pts: PointSet,
+}
+
+/// Encode a probe-range evaluation request payload.
+pub fn encode_eval_request(spec: &EngineSpec, rows: ProbeRows<'_>, pts: &PointSet) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + 8 * rows.as_flat().len());
+    put_u8(&mut buf, TAG_EVAL_REQUEST);
+    let spec_bytes = encode_spec(spec);
+    put_u64(&mut buf, spec_bytes.len() as u64);
+    buf.extend_from_slice(&spec_bytes);
+    put_rows(&mut buf, rows);
+    put_points(&mut buf, pts);
+    buf
+}
+
+/// Decode a probe-range evaluation request payload (strict: trailing
+/// bytes are an error).
+pub fn decode_eval_request(payload: &[u8]) -> Result<EvalRequest> {
+    let mut r = Reader::new(payload);
+    match r.get_u8()? {
+        TAG_EVAL_REQUEST => {}
+        other => return Err(err(format!("shard wire: expected request, got tag {other}"))),
+    }
+    let spec_len = r.get_usize()?;
+    let mut spec_r = Reader::new(r.take(spec_len)?);
+    let spec = decode_spec(&mut spec_r)?;
+    spec_r.finish()?;
+    let probes = get_batch(&mut r)?;
+    let pts = get_points(&mut r)?;
+    r.finish()?;
+    Ok(EvalRequest { spec, probes, pts })
+}
+
+/// Encode a successful loss-vector reply payload.
+pub fn encode_eval_reply(losses: &[f64]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + 8 * losses.len());
+    put_u8(&mut buf, TAG_EVAL_OK);
+    put_f64s(&mut buf, losses);
+    buf
+}
+
+/// Encode an error reply payload.
+pub fn encode_eval_error(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + msg.len());
+    put_u8(&mut buf, TAG_EVAL_ERR);
+    put_str(&mut buf, msg);
+    buf
+}
+
+/// Decode a reply payload: `Ok(losses)` for a success frame, `Err` for an
+/// error frame (carrying the worker's message) or a malformed payload.
+pub fn decode_eval_reply(payload: &[u8]) -> Result<Vec<f64>> {
+    let mut r = Reader::new(payload);
+    match r.get_u8()? {
+        TAG_EVAL_OK => {
+            let losses = r.get_f64s()?;
+            r.finish()?;
+            Ok(losses)
+        }
+        TAG_EVAL_ERR => {
+            let msg = r.get_str()?;
+            r.finish()?;
+            Err(err(format!("shard worker error: {msg}")))
+        }
+        other => Err(err(format!("shard wire: expected reply, got tag {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+    use crate::util::rng::Rng;
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// An f64 stream that mixes ordinary values with the bitwise edge
+    /// cases a lossy codec would destroy.
+    fn edge_f64(rng: &mut Rng) -> f64 {
+        match rng.below(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f64::INFINITY,
+            3 => f64::NEG_INFINITY,
+            4 => f64::NAN,
+            5 => f64::MIN_POSITIVE / 2.0, // subnormal
+            _ => rng.normal() * 10f64.powi(rng.below(7) as i32 - 3),
+        }
+    }
+
+    fn rand_string(rng: &mut Rng) -> String {
+        let n = rng.below(12);
+        (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
+    }
+
+    fn rand_spec(rng: &mut Rng) -> EngineSpec {
+        EngineSpec {
+            pde: rand_string(rng),
+            variant: rand_string(rng),
+            rank: rng.below(8),
+            width: (rng.below(2) == 1).then(|| rng.below(256)),
+            method: if rng.below(2) == 0 { DerivMethod::Sg } else { DerivMethod::Se },
+            level: (rng.below(2) == 1).then(|| rng.below(5)),
+            sigma: (rng.below(2) == 1).then(|| edge_f64(rng)),
+            mc_samples: (rng.below(2) == 1).then(|| rng.below(4096)),
+            se_seed: rng.next_u64(),
+            threads: rng.below(16),
+            probe_threads: rng.below(16),
+        }
+    }
+
+    fn rand_batch(rng: &mut Rng) -> ProbeBatch {
+        let dim = 1 + rng.below(6);
+        let rows = rng.below(7); // includes empty batches
+        let mut pb = ProbeBatch::with_capacity(dim, rows);
+        for _ in 0..rows {
+            let row = pb.push_zeroed();
+            for v in row.iter_mut() {
+                *v = edge_f64(rng);
+            }
+        }
+        pb
+    }
+
+    fn rand_points(rng: &mut Rng) -> PointSet {
+        let n_blocks = rng.below(4); // includes empty point sets
+        let blocks = (0..n_blocks)
+            .map(|_| {
+                let name = rand_string(rng);
+                let vals = (0..rng.below(20)).map(|_| edge_f64(rng)).collect();
+                (name, vals)
+            })
+            .collect();
+        PointSet { blocks }
+    }
+
+    #[test]
+    fn request_round_trips_bitwise() {
+        check(
+            "eval request round-trip",
+            64,
+            |rng| (rand_spec(rng), rand_batch(rng), rand_points(rng)),
+            |(spec, probes, pts)| {
+                let payload = encode_eval_request(spec, probes.rows(0..probes.n_probes()), pts);
+                let req = decode_eval_request(&payload).map_err(|e| e.to_string())?;
+                // sigma is compared bitwise (it may be NaN in the fuzz
+                // stream); everything else through PartialEq
+                let sigma_same = match (req.spec.sigma, spec.sigma) {
+                    (None, None) => true,
+                    (Some(a), Some(b)) => a.to_bits() == b.to_bits(),
+                    _ => false,
+                };
+                let blank = EngineSpec { sigma: None, ..req.spec.clone() };
+                let want_blank = EngineSpec { sigma: None, ..spec.clone() };
+                if !sigma_same || blank != want_blank {
+                    return Err("spec diverged".into());
+                }
+                if req.probes.dim() != probes.dim()
+                    || bits(req.probes.as_flat()) != bits(probes.as_flat())
+                {
+                    return Err("probe rows diverged".into());
+                }
+                if req.pts.blocks.len() != pts.blocks.len() {
+                    return Err("block count diverged".into());
+                }
+                for ((an, av), (bn, bv)) in req.pts.blocks.iter().zip(&pts.blocks) {
+                    if an != bn || bits(av) != bits(bv) {
+                        return Err(format!("block {an:?} diverged"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sub_range_requests_carry_exactly_their_rows() {
+        check(
+            "sub-range request",
+            32,
+            |rng| {
+                let pb = rand_batch(rng);
+                let n = pb.n_probes();
+                let start = if n == 0 { 0 } else { rng.below(n + 1) };
+                let end = start + if n == start { 0 } else { rng.below(n - start + 1) };
+                (pb, start..end, rand_spec(rng), rand_points(rng))
+            },
+            |(pb, range, spec, pts)| {
+                let payload = encode_eval_request(spec, pb.rows(range.clone()), pts);
+                let req = decode_eval_request(&payload).map_err(|e| e.to_string())?;
+                if bits(req.probes.as_flat()) != bits(pb.rows(range.clone()).as_flat()) {
+                    return Err("sub-range rows diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn replies_round_trip_bitwise() {
+        check(
+            "eval reply round-trip",
+            64,
+            |rng| (0..rng.below(32)).map(|_| edge_f64(rng)).collect::<Vec<f64>>(),
+            |losses| {
+                let got =
+                    decode_eval_reply(&encode_eval_reply(losses)).map_err(|e| e.to_string())?;
+                if bits(&got) != bits(losses) {
+                    return Err("losses diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn error_replies_round_trip() {
+        let payload = encode_eval_error("engine exploded");
+        let e = decode_eval_reply(&payload).unwrap_err();
+        assert!(e.to_string().contains("engine exploded"));
+    }
+
+    #[test]
+    fn corrupt_payloads_error_instead_of_panicking() {
+        check(
+            "corrupt payload",
+            128,
+            |rng| {
+                let mut payload = encode_eval_request(
+                    &rand_spec(rng),
+                    rand_batch(rng).rows(0..0),
+                    &rand_points(rng),
+                );
+                // truncate, flip a byte, or append garbage
+                match rng.below(3) {
+                    0 => {
+                        let keep = rng.below(payload.len().max(1));
+                        payload.truncate(keep);
+                    }
+                    1 => {
+                        let i = rng.below(payload.len().max(1));
+                        if i < payload.len() {
+                            payload[i] ^= 0xff;
+                        }
+                    }
+                    _ => payload.push(0xaa),
+                }
+                payload
+            },
+            |payload| {
+                // must return (either way) without panicking
+                let _ = decode_eval_request(payload);
+                let _ = decode_eval_reply(payload);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn frames_round_trip_through_a_stream() {
+        let mut stream: Vec<u8> = Vec::new();
+        write_frame(&mut stream, b"hello").unwrap();
+        write_frame(&mut stream, b"").unwrap();
+        let mut cursor = &stream[..];
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut cursor).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut cursor).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn max_frame_edge_is_exact() {
+        // a payload exactly at the limit passes ...
+        let limit = 16usize;
+        let mut stream: Vec<u8> = Vec::new();
+        write_frame_with_limit(&mut stream, &[7u8; 16], limit).unwrap();
+        let mut cursor = &stream[..];
+        assert_eq!(read_frame_with_limit(&mut cursor, limit).unwrap().unwrap(), vec![7u8; 16]);
+        // ... one byte over is rejected by the writer ...
+        let mut sink: Vec<u8> = Vec::new();
+        assert!(write_frame_with_limit(&mut sink, &[7u8; 17], limit).is_err());
+        // ... and by the reader, before allocating the payload
+        let mut bad: Vec<u8> = Vec::new();
+        bad.extend_from_slice(&17u32.to_le_bytes());
+        bad.extend_from_slice(&[7u8; 17]);
+        let mut cursor = &bad[..];
+        assert!(read_frame_with_limit(&mut cursor, limit).is_err());
+    }
+
+    #[test]
+    fn truncated_header_and_payload_error() {
+        let mut stream: Vec<u8> = Vec::new();
+        write_frame(&mut stream, b"abcdef").unwrap();
+        let mut cursor = &stream[..3]; // mid-header
+        assert!(read_frame(&mut cursor).is_err());
+        let mut cursor = &stream[..7]; // mid-payload
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! The shard worker: hosts engine replicas and serves probe-range
+//! requests until its client hangs up.
+//!
+//! One worker serves any number of connections (one per shard slot of a
+//! [`crate::shard::ShardedEngine`]); each connection gets its own
+//! [`EngineCache`], so replicas are built once per connection and their
+//! warm evaluation workspaces are reused across steps. The same
+//! [`handle_request`] entry point backs the in-process transport, which
+//! is what keeps the two transports behaviorally identical.
+//!
+//! Run a standalone worker with `opinn shard-worker --listen <addr>`.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+
+use super::wire;
+use crate::engine::{Engine, EngineSpec, NativeEngine};
+use crate::Result;
+
+/// Replica engines keyed by their loss-relevant encoded [`EngineSpec`],
+/// built lazily from the first request that names them.
+#[derive(Default)]
+pub struct EngineCache {
+    engines: HashMap<Vec<u8>, NativeEngine>,
+}
+
+impl EngineCache {
+    /// An empty cache.
+    pub fn new() -> EngineCache {
+        EngineCache::default()
+    }
+
+    /// The replica for `spec`, building it on first use. Thread counts
+    /// are loss-invariant (the determinism contract), so they are
+    /// *applied* to the cached replica rather than keying it — a client
+    /// changing `--probe-threads` mid-stream must retune the existing
+    /// engine, not strand it behind a new cache entry.
+    pub fn engine_for(&mut self, spec: &EngineSpec) -> Result<&mut NativeEngine> {
+        let mut key_spec = spec.clone();
+        key_spec.threads = 0;
+        key_spec.probe_threads = 0;
+        let key = wire::encode_spec(&key_spec);
+        let engine = match self.engines.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(v) => v.insert(spec.build()?),
+        };
+        engine.threads = spec.threads.max(1);
+        engine.set_probe_threads(spec.probe_threads);
+        Ok(engine)
+    }
+}
+
+/// Serve one request payload: decode, evaluate the probe range on the
+/// spec's replica, encode the reply. Never fails — every error becomes an
+/// error reply frame, so the dispatcher can fall back to local
+/// evaluation instead of receiving a wrong or truncated loss vector.
+pub fn handle_request(payload: &[u8], cache: &mut EngineCache) -> Vec<u8> {
+    match handle_inner(payload, cache) {
+        Ok(losses) => wire::encode_eval_reply(&losses),
+        Err(e) => wire::encode_eval_error(&e.to_string()),
+    }
+}
+
+fn handle_inner(payload: &[u8], cache: &mut EngineCache) -> Result<Vec<f64>> {
+    let req = wire::decode_eval_request(payload)?;
+    let engine = cache.engine_for(&req.spec)?;
+    engine.loss_many(&req.probes, &req.pts)
+}
+
+/// A TCP shard worker bound to a listen address.
+pub struct ShardWorker {
+    listener: TcpListener,
+}
+
+impl ShardWorker {
+    /// Bind to `addr` (e.g. `127.0.0.1:0` for an ephemeral test port).
+    pub fn bind(addr: &str) -> Result<ShardWorker> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| crate::err(format!("shard worker: cannot resolve {addr:?}")))?;
+        Ok(ShardWorker { listener: TcpListener::bind(addr)? })
+    }
+
+    /// The actually-bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept connections forever, serving each on its own thread until
+    /// the client sends EOF. Transient accept errors (fd pressure,
+    /// aborted handshakes) are logged and survived — a long-lived worker
+    /// must not die because one accept failed.
+    pub fn serve_forever(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    std::thread::spawn(move || serve_connection(s));
+                }
+                Err(e) => {
+                    eprintln!("shard-worker: accept failed ({e}); continuing");
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Idle bound on one worker connection: a half-open socket (client host
+/// gone without RST) is reaped after this long instead of pinning its
+/// serving thread and engine cache forever. Healthy clients that go
+/// quiet longer simply reconnect on their next dispatch.
+pub const IDLE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(3600);
+
+/// Serve one client connection: read request frames, evaluate, reply —
+/// until clean EOF (or a connection error, which just ends the
+/// connection; the dispatcher side handles it as a fallback).
+pub fn serve_connection(mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let mut cache = EngineCache::new();
+    loop {
+        let payload = match wire::read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            // clean EOF = client is done; errors = broken connection, and
+            // the dispatcher side handles the re-dispatch either way
+            Ok(None) | Err(_) => return,
+        };
+        let reply = handle_request(&payload, &mut cache);
+        if wire::write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ProbeBatch;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn handle_request_evaluates_a_probe_range() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let spec = eng.replica_spec().unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(4);
+        let pts = eng.pde().sample_points(&mut rng);
+        let mut probes = ProbeBatch::new(params.len());
+        for i in 0..3 {
+            let row = probes.push_perturbed(&params);
+            row[i * 5] += 0.01;
+        }
+        let want = eng.loss_many(&probes, &pts).unwrap();
+
+        let mut cache = EngineCache::new();
+        let req = wire::encode_eval_request(&spec, probes.rows(1..3), &pts);
+        let reply = handle_request(&req, &mut cache);
+        let got = wire::decode_eval_reply(&reply).unwrap();
+        assert_eq!(got, want[1..3], "worker must match the local engine bitwise");
+        // second request reuses the cached replica
+        let req = wire::encode_eval_request(&spec, probes.rows(0..1), &pts);
+        let got = wire::decode_eval_reply(&handle_request(&req, &mut cache)).unwrap();
+        assert_eq!(got, want[0..1]);
+        assert_eq!(cache.engines.len(), 1, "one replica per spec");
+    }
+
+    #[test]
+    fn malformed_requests_become_error_replies() {
+        let mut cache = EngineCache::new();
+        let reply = handle_request(b"not a frame payload", &mut cache);
+        assert!(wire::decode_eval_reply(&reply).is_err());
+    }
+
+    #[test]
+    fn bad_specs_become_error_replies() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let mut spec = eng.replica_spec().unwrap();
+        spec.pde = "no-such-pde".into();
+        let mut rng = Rng::new(0);
+        let pts = eng.pde().sample_points(&mut rng);
+        let probes = ProbeBatch::new(eng.n_params());
+        let req = wire::encode_eval_request(&spec, probes.rows(0..0), &pts);
+        let mut cache = EngineCache::new();
+        assert!(wire::decode_eval_reply(&handle_request(&req, &mut cache)).is_err());
+    }
+}

@@ -76,34 +76,51 @@ impl CoordwiseEstimator {
         std::mem::swap(&mut self.coords, &mut self.coords_staged);
     }
 
+    /// Append the ±μ probe pair of every coordinate in `coords` around
+    /// `params` — the one pair-construction loop shared by the
+    /// whole-plan [`CoordwiseEstimator::materialize_into`] and the
+    /// chunk-streamed [`CoordwiseEstimator::estimate`].
+    fn push_pairs(params: &[f64], coords: &[usize], mu: f64, batch: &mut ProbeBatch) {
+        for &i in coords {
+            for sign in [1.0f64, -1.0] {
+                let row = batch.push_perturbed(params);
+                row[i] = params[i] + sign * mu;
+            }
+        }
+    }
+
     /// Materialize the active subset's ±μ probe pairs around `params`
     /// into `batch`, overwriting it (pipelining phase 2; callable
     /// repeatedly — the driver re-bases speculative plans on the
     /// post-step parameters).
     pub fn materialize_into(&self, params: &[f64], batch: &mut ProbeBatch) {
         batch.clear();
-        for &i in &self.coords {
-            for sign in [1.0f64, -1.0] {
-                let row = batch.push_perturbed(params);
-                row[i] = params[i] + sign * self.mu;
-            }
+        Self::push_pairs(params, &self.coords, self.mu, batch);
+    }
+
+    /// Contract a coordinate subset's ±μ pair losses into `grad` (zeros
+    /// off the subset) — the one contraction shared by the pipelined
+    /// [`CoordwiseEstimator::assemble`] and the blocking
+    /// [`CoordwiseEstimator::estimate`].
+    fn contract(mu: f64, coords: &[usize], losses: &[f64], grad: &mut [f64]) -> Result<()> {
+        if losses.len() != 2 * coords.len() {
+            return Err(err(format!(
+                "coordwise: plan has {} probes, got {} losses",
+                2 * coords.len(),
+                losses.len()
+            )));
         }
+        grad.fill(0.0);
+        for (j, &i) in coords.iter().enumerate() {
+            grad[i] = (losses[2 * j] - losses[2 * j + 1]) / (2.0 * mu);
+        }
+        Ok(())
     }
 
     /// Contract the losses of the drawn plan into `grad` (zeros off the
     /// subset — pipelining phase 3).
     pub fn assemble(&mut self, losses: &[f64], grad: &mut [f64]) -> Result<()> {
-        if losses.len() != 2 * self.coords.len() {
-            return Err(err(format!(
-                "coordwise: plan has {} probes, got {} losses",
-                2 * self.coords.len(),
-                losses.len()
-            )));
-        }
-        grad.fill(0.0);
-        for (j, &i) in self.coords.iter().enumerate() {
-            grad[i] = (losses[2 * j] - losses[2 * j + 1]) / (2.0 * self.mu);
-        }
+        Self::contract(self.mu, &self.coords, losses, grad)?;
         self.loss_evals += 2 * self.coords.len() as u64;
         Ok(())
     }
@@ -122,6 +139,15 @@ impl CoordwiseEstimator {
     /// drawn from `rng` up front; the probe batches themselves are
     /// deterministic, so results do not depend on how the engine
     /// parallelizes `loss_many`.
+    ///
+    /// Chunks are materialized on the fly (the same pair-construction
+    /// loop backs [`CoordwiseEstimator::materialize_into`]), so peak
+    /// plan memory stays bounded by
+    /// [`CoordwiseEstimator::max_pairs_per_batch`] even on full sweeps.
+    /// The staged/active plan slots of the pipelining API are left
+    /// untouched, and the sweep dimensionality is the parameter
+    /// vector's (the legacy contract — it agrees with `dim` everywhere
+    /// in-tree).
     pub fn estimate(
         &mut self,
         params: &[f64],
@@ -129,31 +155,24 @@ impl CoordwiseEstimator {
         rng: &mut Rng,
         loss_many: &mut dyn FnMut(&ProbeBatch) -> Result<Vec<f64>>,
     ) -> Result<()> {
-        let d = params.len();
-        grad.fill(0.0);
-        let coords = Self::select_coords(d, self.coords_per_step, rng);
-        let mut batch = ProbeBatch::new(d);
+        let coords = Self::select_coords(params.len(), self.coords_per_step, rng);
+        let mut batch = ProbeBatch::new(params.len());
+        let mut losses = Vec::with_capacity(2 * coords.len());
         for chunk in coords.chunks(self.max_pairs_per_batch.max(1)) {
             batch.clear();
-            for &i in chunk {
-                for sign in [1.0f64, -1.0] {
-                    let row = batch.push_perturbed(params);
-                    row[i] = params[i] + sign * self.mu;
-                }
-            }
-            let losses = loss_many(&batch)?;
-            if losses.len() != 2 * chunk.len() {
+            Self::push_pairs(params, chunk, self.mu, &mut batch);
+            let chunk_losses = loss_many(&batch)?;
+            if chunk_losses.len() != 2 * chunk.len() {
                 return Err(err(format!(
                     "coordwise: batch has {} probes, got {} losses",
                     2 * chunk.len(),
-                    losses.len()
+                    chunk_losses.len()
                 )));
             }
-            for (j, &i) in chunk.iter().enumerate() {
-                grad[i] = (losses[2 * j] - losses[2 * j + 1]) / (2.0 * self.mu);
-                self.loss_evals += 2;
-            }
+            losses.extend_from_slice(&chunk_losses);
         }
+        Self::contract(self.mu, &coords, &losses, grad)?;
+        self.loss_evals += 2 * coords.len() as u64;
         Ok(())
     }
 

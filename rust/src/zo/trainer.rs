@@ -47,6 +47,12 @@ pub struct TrainConfig {
     /// Probe-evaluation pipeline depth (1 = blocking, 2 = async probe
     /// streams); see [`crate::session::SessionBuilder::pipeline_depth`].
     pub pipeline_depth: usize,
+    /// Engine replicas to fan probe batches across (0 = no sharding);
+    /// see [`crate::session::SessionBuilder::shards`].
+    pub shards: usize,
+    /// TCP shard workers (`host:port`), one replica per entry; see
+    /// [`crate::session::SessionBuilder::shard_hosts`].
+    pub shard_hosts: Vec<String>,
     /// Log a progress line at every eval epoch.
     pub verbose: bool,
 }
@@ -63,6 +69,8 @@ impl TrainConfig {
             layout: Vec::new(),
             max_forwards: None,
             pipeline_depth: 1,
+            shards: 0,
+            shard_hosts: Vec::new(),
             verbose: false,
         }
     }

@@ -75,3 +75,44 @@ fn empty_batch_is_a_no_op() {
     let probes = ProbeBatch::new(params.len());
     assert!(eng.loss_many(&probes, &pts).unwrap().is_empty());
 }
+
+#[test]
+fn row_range_views_reassemble_the_batch() {
+    // the sharding contract: contiguous row ranges, re-joined in order,
+    // must reproduce the original batch bitwise
+    let probes = make_probes(&[0.5; 24], 10);
+    for split in [1usize, 2, 3, 10] {
+        let per = probes.n_probes().div_ceil(split);
+        let mut rebuilt = ProbeBatch::new(probes.dim());
+        for i in 0..split {
+            let range = (i * per).min(probes.n_probes())..((i + 1) * per).min(probes.n_probes());
+            rebuilt.extend_from_rows(probes.rows(range));
+        }
+        assert_eq!(rebuilt.n_probes(), probes.n_probes(), "{split} splits");
+        assert_eq!(rebuilt.as_flat(), probes.as_flat(), "{split} splits diverged");
+    }
+}
+
+#[test]
+fn row_range_views_window_correctly() {
+    let probes = make_probes(&[1.0; 6], 5);
+    let view = probes.rows(2..5);
+    assert_eq!(view.n_probes(), 3);
+    for (i, row) in view.iter().enumerate() {
+        assert_eq!(row, probes.probe(2 + i), "view row {i}");
+    }
+    assert_eq!(view.to_batch().as_flat(), view.as_flat());
+    // empty views at either edge are fine
+    assert!(probes.rows(0..0).is_empty());
+    assert!(probes.rows(5..5).is_empty());
+    // loss_many over a sub-range view equals the matching slice of the
+    // full evaluation
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    let params = eng.model.init_flat(0);
+    let mut rng = Rng::new(1);
+    let pts = eng.pde().sample_points(&mut rng);
+    let plan = make_probes(&params, 4);
+    let full = eng.loss_many(&plan, &pts).unwrap();
+    let sub = eng.loss_many(&plan.rows(1..3).to_batch(), &pts).unwrap();
+    assert_eq!(sub, full[1..3]);
+}

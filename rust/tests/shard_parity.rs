@@ -1,0 +1,213 @@
+//! Golden parity contract of multi-engine probe sharding: sharded
+//! sessions — at 1/2/4 shards, over the in-process and TCP-loopback
+//! transports, at pipeline depths 1 and 2 — must reproduce the
+//! single-engine trajectories **bitwise** (same `History` curves, same
+//! forward accounting, same final parameters) for weight-RGE, coordwise
+//! and phase-domain training. An unreachable worker must degrade to
+//! local evaluation, never to a wrong or truncated loss vector.
+//!
+//! Native-engine based, so these run without artifacts. TCP cases bind
+//! ephemeral loopback ports and leave their accept loops on detached
+//! threads (the test process exit reaps them).
+
+use optical_pinn::engine::{Engine, NativeEngine, ProbeBatch};
+use optical_pinn::photonic::{PhaseProtocol, PhaseTrainConfig, PhotonicModel, PhotonicVariant};
+use optical_pinn::session;
+use optical_pinn::shard::{ShardWorker, ShardedEngine, TcpTransport, Transport};
+use optical_pinn::util::rng::Rng;
+use optical_pinn::zo::{History, TrainConfig, TrainMethod};
+
+/// Spawn `n` TCP shard workers on ephemeral loopback ports; returns
+/// their addresses.
+fn spawn_workers(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|_| {
+            let worker = ShardWorker::bind("127.0.0.1:0").expect("bind loopback");
+            let addr = worker.local_addr().expect("bound addr").to_string();
+            std::thread::spawn(move || {
+                let _ = worker.serve_forever();
+            });
+            addr
+        })
+        .collect()
+}
+
+/// The shard configurations under test: `(shards, hosts)` pairs for
+/// in-process and TCP-loopback transports at 1/2/4 shards.
+fn shard_configs() -> Vec<(String, usize, Vec<String>)> {
+    let mut cfgs = Vec::new();
+    for s in [1usize, 2, 4] {
+        cfgs.push((format!("in-process x{s}"), s, Vec::new()));
+    }
+    for s in [1usize, 2, 4] {
+        cfgs.push((format!("tcp x{s}"), 0, spawn_workers(s)));
+    }
+    cfgs
+}
+
+fn assert_hist_eq(base: &History, got: &History, what: &str) {
+    assert_eq!(base.steps, got.steps, "{what}: eval steps diverged");
+    assert_eq!(base.losses, got.losses, "{what}: loss curve diverged");
+    assert_eq!(base.errors, got.errors, "{what}: error curve diverged");
+    assert_eq!(base.forwards, got.forwards, "{what}: forward curve diverged");
+    assert_eq!(base.total_forwards, got.total_forwards, "{what}: total forwards diverged");
+}
+
+// ---------------------------------------------------------------------
+// weight domain
+// ---------------------------------------------------------------------
+
+fn run_weight(
+    method: TrainMethod,
+    epochs: usize,
+    depth: usize,
+    shards: usize,
+    hosts: Vec<String>,
+) -> (Vec<f64>, History) {
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    eng.set_probe_threads(2);
+    let mut cfg = TrainConfig::zo(epochs);
+    cfg.method = method;
+    cfg.eval_every = 5;
+    cfg.layout = eng.model.param_layout();
+    cfg.pipeline_depth = depth;
+    cfg.shards = shards;
+    cfg.shard_hosts = hosts;
+    let mut params = eng.model.init_flat(0);
+    let hist = session::run_weight(&mut eng, &mut params, &cfg).unwrap();
+    (params, hist)
+}
+
+#[test]
+fn sharded_weight_rge_matches_single_engine_bitwise() {
+    let zo = || TrainMethod::ZoRge(Default::default());
+    let (p_base, h_base) = run_weight(zo(), 12, 1, 0, Vec::new());
+    for depth in [1usize, 2] {
+        for (label, shards, hosts) in shard_configs() {
+            let what = format!("weight rge, {label}, depth {depth}");
+            let (p, h) = run_weight(zo(), 12, depth, shards, hosts);
+            assert_eq!(p_base, p, "{what}: params diverged");
+            assert_hist_eq(&h_base, &h, &what);
+        }
+    }
+}
+
+#[test]
+fn sharded_weight_coordwise_matches_single_engine_bitwise() {
+    let cw = || TrainMethod::ZoCoordwise { mu: 1e-3, coords_per_step: Some(8) };
+    let (p_base, h_base) = run_weight(cw(), 8, 1, 0, Vec::new());
+    for depth in [1usize, 2] {
+        for (label, shards, hosts) in shard_configs() {
+            let what = format!("weight coordwise, {label}, depth {depth}");
+            let (p, h) = run_weight(cw(), 8, depth, shards, hosts);
+            assert_eq!(p_base, p, "{what}: params diverged");
+            assert_hist_eq(&h_base, &h, &what);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// phase domain
+// ---------------------------------------------------------------------
+
+fn run_phase(depth: usize, shards: usize, hosts: Vec<String>) -> (Vec<f64>, History) {
+    let mut pm = PhotonicModel::new("bs", PhotonicVariant::Tonn, 0).unwrap();
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    eng.set_probe_threads(2);
+    let cfg = PhaseTrainConfig {
+        epochs: 8,
+        eval_every: 3,
+        pipeline_depth: depth,
+        shards,
+        shard_hosts: hosts,
+        ..Default::default()
+    };
+    session::run_phase_domain(&mut pm, &mut eng, PhaseProtocol::Ours, &cfg).unwrap()
+}
+
+#[test]
+fn sharded_phase_domain_matches_single_engine_bitwise() {
+    let (phi_base, h_base) = run_phase(1, 0, Vec::new());
+    for depth in [1usize, 2] {
+        for (label, shards, hosts) in shard_configs() {
+            let what = format!("phase ours, {label}, depth {depth}");
+            let (phi, h) = run_phase(depth, shards, hosts);
+            assert_eq!(phi_base, phi, "{what}: phases diverged");
+            assert_hist_eq(&h_base, &h, &what);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// mixed transports and failure semantics
+// ---------------------------------------------------------------------
+
+#[test]
+fn mixed_tcp_and_in_process_shards_match_bitwise() {
+    let zo = || TrainMethod::ZoRge(Default::default());
+    let (p_base, h_base) = run_weight(zo(), 6, 1, 0, Vec::new());
+    // 3 shards over 1 TCP worker: shard 0 is TCP, shards 1-2 in-process
+    let hosts = spawn_workers(1);
+    let (p, h) = run_weight(zo(), 6, 2, 3, hosts);
+    assert_eq!(p_base, p, "mixed transports: params diverged");
+    assert_hist_eq(&h_base, &h, "mixed transports");
+}
+
+#[test]
+fn unreachable_worker_degrades_to_local_bitwise() {
+    let zo = || TrainMethod::ZoRge(Default::default());
+    let (p_base, h_base) = run_weight(zo(), 4, 1, 0, Vec::new());
+    // port 1 is reserved: connection refused on every dispatch, so every
+    // range of that shard must be evaluated locally — and the trajectory
+    // must still be bitwise-identical
+    let hosts = vec!["127.0.0.1:1".to_string()];
+    let (p, h) = run_weight(zo(), 4, 2, 0, hosts);
+    assert_eq!(p_base, p, "unreachable worker: params diverged");
+    assert_hist_eq(&h_base, &h, "unreachable worker");
+}
+
+#[test]
+fn unreachable_worker_is_counted_as_fallback() {
+    let local = NativeEngine::new("bs", "tt").unwrap();
+    let params = local.model.init_flat(0);
+    let transports: Vec<Box<dyn Transport>> = vec![Box::new(TcpTransport::new("127.0.0.1:1"))];
+    let mut sharded = ShardedEngine::new(local, transports).unwrap();
+    let mut rng = Rng::new(2);
+    let pts = sharded.pde().sample_points(&mut rng);
+    let mut probes = ProbeBatch::new(params.len());
+    probes.push(&params);
+    probes.push(&params);
+
+    let mut direct = NativeEngine::new("bs", "tt").unwrap();
+    let want = direct.loss_many(&probes, &pts).unwrap();
+    let got = sharded.loss_many(&probes, &pts).unwrap();
+    assert_eq!(got, want, "fallback losses must be bitwise-identical");
+    let stats = sharded.shard_stats().unwrap();
+    assert_eq!(stats[0].fallbacks, 1, "the dead worker must be logged as a fallback");
+    assert_eq!(stats[0].rows, 0);
+}
+
+#[test]
+fn tcp_worker_survives_reconnecting_clients() {
+    // one worker, two successive sharded engines (fresh connections):
+    // the worker must serve both, each connection to EOF
+    let hosts = spawn_workers(1);
+    let mut direct = NativeEngine::new("bs", "tt").unwrap();
+    let params = direct.model.init_flat(0);
+    let mut rng = Rng::new(3);
+    let pts = direct.pde().sample_points(&mut rng);
+    let mut probes = ProbeBatch::new(params.len());
+    for i in 0..3 {
+        let row = probes.push_perturbed(&params);
+        row[i * 11] += 0.01;
+    }
+    let want = direct.loss_many(&probes, &pts).unwrap();
+    for round in 0..2 {
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let mut sharded = ShardedEngine::from_config(local, 0, &hosts).unwrap();
+        let got = sharded.loss_many(&probes, &pts).unwrap();
+        assert_eq!(got, want, "round {round} diverged");
+        let stats = sharded.shard_stats().unwrap();
+        assert_eq!(stats[0].fallbacks, 0, "round {round} must not fall back");
+    }
+}
