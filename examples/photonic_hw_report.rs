@@ -17,7 +17,7 @@ fn main() -> optical_pinn::Result<()> {
     println!("## MZI budgets per benchmark (cf. Tables 19/20)\n");
     println!("| Problem | #MZIs ONN | trainable | #MZIs TONN (ours) | trainable |");
     println!("|---|---|---|---|---|");
-    for pde in optical_pinn::pde::ALL_PDES {
+    for pde in optical_pinn::pde::all_pdes() {
         let onn = PhotonicModel::new(pde, PhotonicVariant::Onn, 0)?;
         let tonn = PhotonicModel::new(pde, PhotonicVariant::Tonn, 0)?;
         println!(

@@ -104,8 +104,11 @@ fn main() {
     // 6. Probe-batched ZO step: one full tensor-wise RGE gradient estimate
     //    (plan -> loss_many -> assemble), sequential vs probe-parallel vs
     //    pipelined (async probe streams: the next step's plan is drawn
-    //    while the current batch is in flight).
-    for (pde, variant) in [("bs", "tt"), ("hjb20", "tt")] {
+    //    while the current batch is in flight). poisson?d=10 (221-node
+    //    grid) sits between bs (d=2, 13 nodes) and hjb20 (d=21, 925
+    //    nodes) so the perf trajectory covers the dimension sweep the
+    //    problem catalog enables.
+    for (pde, variant) in [("bs", "tt"), ("poisson?d=10", "tt"), ("hjb20", "tt")] {
         let mut eng = NativeEngine::new(pde, variant).unwrap();
         let params = eng.model.init_flat(0);
         let layout = eng.model.param_layout();

@@ -9,6 +9,9 @@ use crate::{Error, Result};
 /// A fully-resolved experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// Problem-spec string: a catalog family with optional typed
+    /// parameters (`bs`, `hjb20`, `hjb?d=50`, `bs?sigma=0.3&strike=110`);
+    /// validated against the [`crate::pde::registry`].
     pub pde: String,
     /// "std" | "tt"
     pub variant: String,
@@ -79,13 +82,12 @@ impl Default for ExperimentConfig {
 
 impl ExperimentConfig {
     /// Paper-default epochs per benchmark (App. C: 40k Burgers, 20k
-    /// Darcy, ~10k for BS/HJB; scaled by OPINN_FULL).
+    /// Darcy, ~10k elsewhere; scaled by OPINN_FULL). Owned by the
+    /// problem-catalog registry; unparseable specs fall back to 10k.
     pub fn paper_epochs(pde: &str) -> usize {
-        match pde {
-            "burgers" => 40_000,
-            "darcy" => 20_000,
-            _ => 10_000,
-        }
+        crate::pde::ProblemSpec::parse(pde)
+            .map(|s| s.paper_epochs())
+            .unwrap_or(10_000)
     }
 
     /// Parse config from a JSON object (missing keys keep defaults).
@@ -191,15 +193,17 @@ impl ExperimentConfig {
         Ok(())
     }
 
-    /// Model key in the artifact manifest.
+    /// Model key in the artifact manifest (`<canonical spec>_<variant>`,
+    /// so legacy spellings keep their legacy keys).
     pub fn model_key(&self) -> String {
-        format!("{}_{}", self.pde, self.variant)
+        format!("{}_{}", crate::pde::canonicalize_lossy(&self.pde), self.variant)
     }
 
     pub fn validate(&self) -> Result<()> {
-        if !crate::pde::ALL_PDES.contains(&self.pde.as_str()) {
-            return Err(Error::Config(format!("unknown pde {:?}", self.pde)));
-        }
+        // one registry error covers unknown families, unknown keys and
+        // out-of-range parameter values (the duplicate name list this
+        // module used to keep is gone)
+        crate::pde::ProblemSpec::parse(&self.pde)?;
         if !["std", "tt"].contains(&self.variant.as_str()) {
             return Err(Error::Config(format!("unknown variant {:?}", self.variant)));
         }
@@ -290,10 +294,25 @@ mod tests {
     }
 
     #[test]
+    fn parameterized_specs_validate() {
+        for pde in ["bs", "hjb20", "hjb?d=50", "poisson?d=10", "bs?sigma=0.3&strike=110"] {
+            let c = ExperimentConfig { pde: pde.into(), ..Default::default() };
+            c.validate().unwrap_or_else(|e| panic!("{pde}: {e}"));
+        }
+        let j = Json::parse(r#"{"pde":"poisson?d=6","backend":"native"}"#).unwrap();
+        let c = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(c.pde, "poisson?d=6");
+        c.validate().unwrap();
+    }
+
+    #[test]
     fn bad_values_rejected() {
         let mut c = ExperimentConfig::default();
         c.pde = "heat".into();
         assert!(c.validate().is_err());
+        // malformed spec parameters fail through the same registry error
+        let cp = ExperimentConfig { pde: "poisson?d=0".into(), ..Default::default() };
+        assert!(cp.validate().is_err());
         let mut c2 = ExperimentConfig::default();
         c2.backend = "cuda".into();
         assert!(c2.validate().is_err());
@@ -310,5 +329,8 @@ mod tests {
     fn paper_epochs() {
         assert_eq!(ExperimentConfig::paper_epochs("burgers"), 40_000);
         assert_eq!(ExperimentConfig::paper_epochs("bs"), 10_000);
+        assert_eq!(ExperimentConfig::paper_epochs("darcy"), 20_000);
+        // family defaults apply at any parameterization
+        assert_eq!(ExperimentConfig::paper_epochs("hjb?d=50"), 10_000);
     }
 }

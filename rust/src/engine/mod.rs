@@ -275,7 +275,10 @@ impl PendingLosses {
 /// trajectory-preserving.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineSpec {
-    /// PDE benchmark name (`bs` / `hjb20` / `burgers` / `darcy`).
+    /// Canonical problem-spec string (`bs`, `hjb20`, `poisson?d=6`,
+    /// `bs?sigma=0.3&strike=110`, ...) — see [`crate::pde::ProblemSpec`].
+    /// Engines store the canonical form, so value-equal specs written
+    /// differently (`hjb20` vs `hjb?d=20`) share worker replica caches.
     pub pde: String,
     /// Model variant (`std` / `tt`).
     pub variant: String,

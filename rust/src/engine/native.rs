@@ -9,8 +9,8 @@ use std::sync::{Arc, Mutex};
 
 use super::{Engine, EngineSpec, PendingLosses, ProbeBatch};
 use crate::loss::{DerivMethod, LossWorkspace, PinnLoss};
-use crate::net::{build_model, FwdScratch, Model};
-use crate::pde::{get_pde, Pde, PointSet};
+use crate::net::{build_model_spec, FwdScratch, Model};
+use crate::pde::{Pde, PointSet, ProblemSpec};
 use crate::util::rng::Rng;
 use crate::{err, Result};
 
@@ -109,7 +109,8 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
-    /// Build with the paper's default SG loss.
+    /// Build with the paper's default SG loss. `pde_name` is any problem
+    /// catalog spec string (`bs`, `hjb20`, `hjb?d=50`, `poisson?d=10`).
     pub fn new(pde_name: &str, variant: &str) -> Result<NativeEngine> {
         Self::with_options(pde_name, variant, 2, None, NativeOptions::default())
     }
@@ -123,8 +124,12 @@ impl NativeEngine {
         width: Option<usize>,
         opts: NativeOptions,
     ) -> Result<NativeEngine> {
-        let pde = get_pde(pde_name)?;
-        let model = build_model(pde_name, variant, rank, width)?;
+        // parse the spec once; the canonical form goes into the replica
+        // spec so value-equal specs (`hjb20` / `hjb?d=20`) share shard
+        // worker replica caches and compare equal on the wire
+        let problem = ProblemSpec::parse(pde_name)?;
+        let pde = problem.build()?;
+        let model = build_model_spec(&problem, variant, rank, width)?;
         let loss_fn = match opts.method {
             DerivMethod::Sg => PinnLoss::sg_with(
                 pde.as_ref(),
@@ -142,7 +147,7 @@ impl NativeEngine {
         // "replica default" on whatever host builds the replica, not
         // this host's core count
         let spec = EngineSpec {
-            pde: pde_name.to_string(),
+            pde: problem.canonical(),
             variant: variant.to_string(),
             rank,
             width,
@@ -348,7 +353,7 @@ mod tests {
 
     #[test]
     fn loss_and_eval_work_for_every_benchmark() {
-        for name in crate::pde::ALL_PDES {
+        for name in crate::pde::all_pdes() {
             // darcy's 241-grid CG solve is exercised in integration tests;
             // unit tests keep it cheap via the registry default only for
             // loss (no exact-solution call needed).
@@ -467,6 +472,23 @@ mod tests {
         let want = eng.loss(&params, &pts).unwrap();
         let got = replica.loss(&params, &pts).unwrap();
         assert_eq!(got.to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn parameterized_specs_build_engines_with_canonical_replica_specs() {
+        // the spec spelling never leaks into the replica spec: both
+        // spellings of the paper HJB produce the same canonical key
+        let eng = NativeEngine::new("hjb?d=20", "tt").unwrap();
+        assert_eq!(eng.replica_spec().unwrap().pde, "hjb20");
+        assert_eq!(eng.pde().name(), "hjb20");
+        // a genuinely parameterized problem trains the same machinery
+        let mut eng = NativeEngine::new("poisson?d=4", "std").unwrap();
+        assert_eq!(eng.replica_spec().unwrap().pde, "poisson?d=4");
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(0);
+        let pts = eng.pde().sample_points(&mut rng);
+        let l = eng.loss(&params, &pts).unwrap();
+        assert!(l.is_finite() && l >= 0.0);
     }
 
     #[test]

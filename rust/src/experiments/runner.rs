@@ -55,10 +55,12 @@ impl RunSpec {
         }
     }
 
+    /// Artifact model key: `<canonical spec>_<variant>` unless overridden
+    /// (canonicalizing keeps `hjb?d=20` on the legacy `hjb20_tt` key).
     pub fn key(&self) -> String {
-        self.model_key
-            .clone()
-            .unwrap_or_else(|| format!("{}_{}", self.pde, self.variant))
+        self.model_key.clone().unwrap_or_else(|| {
+            format!("{}_{}", crate::pde::canonicalize_lossy(&self.pde), self.variant)
+        })
     }
 }
 

@@ -19,7 +19,7 @@ use super::runner::{make_engine, run_seeds, Backend, RunSpec};
 /// is ~48 GFLOP per evaluation — far beyond a CI budget on small boxes).
 fn bench_pdes() -> Vec<&'static str> {
     if full_scale() {
-        crate::pde::ALL_PDES.to_vec()
+        crate::pde::all_pdes()
     } else {
         vec!["bs"]
     }
@@ -34,9 +34,13 @@ fn scaled(full: usize, quick: usize) -> usize {
 }
 
 fn base_cfg(pde: &str, method: TrainMethod) -> TrainConfig {
-    // hjb20's 925-node grid makes each loss ~9 GFLOP; keep quick runs tiny
-    let quick = if pde == "hjb20" { 30 } else { 150 };
-    let epochs = scaled(crate::config::ExperimentConfig::paper_epochs(pde), quick);
+    // both epoch budgets come from the registry: the family owns its
+    // paper scale and its CI-quick scale (tiny for HJB, whose 925-node
+    // grid makes each loss ~9 GFLOP at the paper dimension)
+    let (paper, quick) = crate::pde::ProblemSpec::parse(pde)
+        .map(|s| (s.paper_epochs(), s.quick_epochs()))
+        .unwrap_or((10_000, 150));
+    let epochs = scaled(paper, quick);
     let mut cfg = TrainConfig::zo(epochs);
     cfg.method = method;
     cfg.eval_every = (epochs / 10).max(1);

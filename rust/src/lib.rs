@@ -20,7 +20,11 @@
 //! * [`quadrature`] — Gauss–Hermite rules + Smolyak sparse grids (§3.1.2);
 //! * [`stein`] — the sparse-grid Stein derivative estimator (Eq. 12);
 //! * [`net`] — dense and tensor-train network forward passes (§3.2);
-//! * [`pde`] — Black–Scholes, 20-d HJB, Burgers, Darcy + reference solvers;
+//! * [`pde`] — the **problem catalog**: a [`pde::ProblemSpec`] registry
+//!   of parameterized benchmark families (Black–Scholes with
+//!   σ/strike/rate, d-dimensional HJB and Poisson, Burgers, Darcy) with
+//!   reference solvers; every legacy bare name (`bs`, `hjb20`, ...) still
+//!   parses, and `hjb?d=20` *is* `hjb20`, bitwise;
 //! * [`engine`] — `NativeEngine` (pure rust) and `PjrtEngine` (XLA/PJRT);
 //! * [`zo`] / [`optim`] — RGE zeroth-order estimators, training configs,
 //!   Adam;
@@ -74,12 +78,20 @@
 //! way, because speculative plans are re-based on the post-step
 //! parameters before they are committed.
 //!
+//! Engines are built from a **problem-spec string** — a catalog family
+//! plus typed parameters (`bs`, `hjb20`, `hjb?d=50`, `poisson?d=4`,
+//! `bs?sigma=0.3&strike=110`) — so a new scenario is one string, not a
+//! recompile:
+//!
 //! ```
 //! use optical_pinn::engine::{Engine, NativeEngine, ProbeBatch};
 //! use optical_pinn::util::rng::Rng;
 //!
 //! # fn main() -> optical_pinn::Result<()> {
-//! let mut engine = NativeEngine::new("bs", "tt")?;
+//! // a 4-dimensional Poisson problem from the catalog; `bs` or
+//! // `hjb?d=50` work the same way
+//! let mut engine = NativeEngine::new("poisson?d=4", "std")?;
+//! assert_eq!(engine.pde().d_in(), 4);
 //! let params = engine.model.init_flat(0);
 //! let mut rng = Rng::new(0);
 //! let pts = engine.pde().sample_points(&mut rng);

@@ -157,7 +157,7 @@ mod tests {
 
     #[test]
     fn sg_loss_is_finite_for_all_benchmarks() {
-        for name in crate::pde::ALL_PDES {
+        for name in crate::pde::all_pdes() {
             let pde = get_pde(name).unwrap();
             let model = build_model(name, "std", 2, None).unwrap();
             let flat = model.init_flat(0);

@@ -12,8 +12,14 @@
 //! All training subcommands drive the unified `session` API: one
 //! budget-aware loop for weight-, phase- and data-domain BP-free runs.
 //!
+//! Training subcommands take a problem-catalog spec (family name plus
+//! optional typed parameters, e.g. `hjb?d=50`); every legacy bare name
+//! (`bs`, `hjb20`, `burgers`, `darcy`) still parses. See the HELP
+//! catalog (derived from `pde::registry`) for families and parameters.
+//!
 //! Examples:
 //!   opinn train bs tt --train zo --epochs 2000 --backend pjrt
+//!   opinn train 'poisson?d=10' std --train zo --backend native
 //!   opinn train-phase bs --protocol ours --epochs 500 --queries 2
 //!   opinn tables t2
 //!   OPINN_FULL=1 opinn tables t3
@@ -64,20 +70,49 @@ fn run(args: &Args) -> Result<()> {
         Some("hw-report") => cmd_hw_report(args),
         Some("info") => cmd_info(args),
         _ => {
-            eprintln!("{HELP}");
+            eprintln!("{}", help());
             Ok(())
         }
     }
 }
 
+/// The HELP text with the problem catalog appended — the catalog is
+/// derived from the `pde::registry`, so a newly registered family shows
+/// up here (and in config validation errors) with no CLI edit.
+fn help() -> String {
+    let mut out = String::from(HELP);
+    out.push_str(
+        "\nproblems (<problem> is a spec: family[?key=value&...]; quote specs —\n\
+         ? and & are shell metacharacters):\n",
+    );
+    for family in optical_pinn::pde::registry() {
+        let alias = family
+            .legacy_alias
+            .map(|a| format!(" (alias: {a})"))
+            .unwrap_or_default();
+        out.push_str(&format!("  {:<10} {}{alias}\n", family.name, family.summary));
+        for p in family.params {
+            out.push_str(&format!(
+                "    {:<12} {} (default {})\n",
+                format!("{}=", p.key),
+                p.doc,
+                p.default
+            ));
+        }
+    }
+    out.push_str("  e.g. `opinn train hjb20 tt`, `opinn train 'bs?sigma=0.3&strike=110' std`,\n");
+    out.push_str("       `opinn train 'poisson?d=10' std --backend native`");
+    out
+}
+
 const HELP: &str = "usage: opinn <train|train-phase|shard-worker|tables|hw-report|info> [options]
-  train <pde> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
+  train <problem> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
         [--lr F] [--seed N] [--rank N] [--width N] [--mu F] [--queries N]
         [--eval-every N] [--max-forwards N] [--backend pjrt|native]
         [--probe-threads N] [--pipeline-depth 1|2] [--shards N]
         [--shard-hosts H1,H2,...] [--verbose]
         [--out ckpt.json] [--ckpt-every N] [--curve curve.csv]
-  train-phase <pde> [--protocol ours|flops|l2ight] [--epochs N] [--lr F]
+  train-phase <problem> [--protocol ours|flops|l2ight] [--epochs N] [--lr F]
         [--seed N] [--mu F] [--queries N] [--eval-every N]
         [--max-forwards N] [--backend pjrt|native] [--probe-threads N]
         [--pipeline-depth 1|2] [--shards N] [--shard-hosts H1,H2,...]
@@ -264,7 +299,7 @@ fn cmd_tables(args: &Args) -> Result<()> {
         "t1" => experiments::record_table("t1", &experiments::table1(backend)?),
         "t2" => experiments::record_table("t2", &experiments::table2(backend)?),
         "t3" => {
-            let t = experiments::table3(backend, &["bs", "hjb20", "burgers", "darcy"])?;
+            let t = experiments::table3(backend, &optical_pinn::pde::all_pdes())?;
             experiments::record_table("t3", &t)
         }
         "t456" => {

@@ -272,7 +272,7 @@ pub fn fo_loss_grad(
 struct ClassifierPde;
 
 impl Pde for ClassifierPde {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "mnist"
     }
     fn d_in(&self) -> usize {

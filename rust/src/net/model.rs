@@ -2,6 +2,7 @@
 
 use super::activation::Act;
 use super::layer::{Layer, LayerScratch, TTLayer};
+use crate::pde::ProblemSpec;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
@@ -172,14 +173,38 @@ impl Model {
     }
 }
 
-/// Construct the paper's baseline network for a PDE benchmark
-/// (exact mirror of `build_model` in model.py).
+/// Construct the paper's baseline network for a problem-spec string
+/// (exact mirror of `build_model` in model.py for the paper specs).
+/// Accepts any catalog spec (`bs`, `hjb?d=50`, `poisson?d=10`, ...);
+/// see [`build_model_spec`] for the per-family architectures.
 pub fn build_model(pde: &str, variant: &str, rank: usize, width: Option<usize>) -> Result<Model> {
+    build_model_spec(&ProblemSpec::parse(pde)?, variant, rank, width)
+}
+
+/// Construct the baseline network for a parsed [`ProblemSpec`]. The
+/// model name is `<canonical spec>_<variant>`, so legacy specs keep
+/// their legacy model keys (`hjb?d=20` -> `hjb20_tt`).
+///
+/// Architectures:
+/// * `bs` — 128-wide tanh MLP / TT fold of the 128x128 hidden layer; the
+///   input normalization tracks the strike (domain [0, 2K] x [0, 1]);
+/// * `hjb` — 512-wide sine MLP at any d; the paper's TT fold factorizes
+///   the 21 inputs, so `tt` is defined only at d = 20;
+/// * `burgers` / `darcy` — 100-wide 4-layer tanh MLP / three TT folds;
+/// * `poisson` — 64-wide tanh MLP at any d (`std`), or the bs-style
+///   dense-in + 128x128 TT fold + dense-out stack (`tt`).
+pub fn build_model_spec(
+    spec: &ProblemSpec,
+    variant: &str,
+    rank: usize,
+    width: Option<usize>,
+) -> Result<Model> {
     let tt = match variant {
         "std" => false,
         "tt" => true,
         other => return Err(Error::Config(format!("unknown variant {other:?}"))),
     };
+    let name = format!("{}_{variant}", spec.canonical());
     let hidden100 = || {
         Layer::TT(TTLayer::new(
             vec![4, 5, 5],
@@ -188,7 +213,16 @@ pub fn build_model(pde: &str, variant: &str, rank: usize, width: Option<usize>) 
             Act::Tanh,
         ))
     };
-    let model = match pde {
+    // the bs/poisson TT hidden block: a TT fold of the 128x128 layer
+    let hidden128 = |rank: usize| {
+        Layer::TT(TTLayer::new(
+            vec![4, 4, 8],
+            vec![8, 4, 4],
+            vec![1, rank, rank, 1],
+            Act::Tanh,
+        ))
+    };
+    let model = match spec.family_name() {
         "bs" => {
             let w = width.unwrap_or(128);
             let layers = if !tt {
@@ -203,31 +237,34 @@ pub fn build_model(pde: &str, variant: &str, rank: usize, width: Option<usize>) 
                 }
                 vec![
                     Layer::dense(2, 128, Act::Tanh),
-                    Layer::TT(TTLayer::new(
-                        vec![4, 4, 8],
-                        vec![8, 4, 4],
-                        vec![1, rank, rank, 1],
-                        Act::Tanh,
-                    )),
+                    hidden128(rank),
                     Layer::dense(128, 1, Act::Identity),
                 ]
             };
             Model {
-                name: format!("bs_{variant}"),
+                name,
                 layers,
                 in_lo: vec![0.0, 0.0],
-                in_hi: vec![200.0, 1.0],
+                in_hi: vec![2.0 * spec.float("strike"), 1.0],
             }
         }
-        "hjb20" => {
+        "hjb" => {
+            let d = spec.dim("d");
+            let d1 = d + 1;
             let w = width.unwrap_or(512);
             let layers = if !tt {
                 vec![
-                    Layer::dense(21, w, Act::Sine),
+                    Layer::dense(d1, w, Act::Sine),
                     Layer::dense(w, w, Act::Sine),
                     Layer::dense(w, 1, Act::Identity),
                 ]
             } else {
+                if d != crate::pde::hjb::PAPER_D {
+                    return Err(Error::Config(format!(
+                        "the hjb TT input fold factorizes 21 inputs (d=20); \
+                         use variant \"std\" for hjb?d={d}"
+                    )));
+                }
                 if w != 512 {
                     return Err(Error::Config("TT fold is defined for width 512".into()));
                 }
@@ -248,10 +285,10 @@ pub fn build_model(pde: &str, variant: &str, rank: usize, width: Option<usize>) 
                 ]
             };
             Model {
-                name: format!("hjb20_{variant}"),
+                name,
                 layers,
-                in_lo: vec![0.0; 21],
-                in_hi: vec![1.0; 21],
+                in_lo: vec![0.0; d1],
+                in_hi: vec![1.0; d1],
             }
         }
         "burgers" | "darcy" => {
@@ -276,15 +313,46 @@ pub fn build_model(pde: &str, variant: &str, rank: usize, width: Option<usize>) 
                     Layer::dense(100, 1, Act::Identity),
                 ]
             };
-            let lo = if pde == "burgers" { vec![-1.0, 0.0] } else { vec![0.0, 0.0] };
+            let lo = if spec.family_name() == "burgers" { vec![-1.0, 0.0] } else { vec![0.0, 0.0] };
             Model {
-                name: format!("{pde}_{variant}"),
+                name,
                 layers,
                 in_lo: lo,
                 in_hi: vec![1.0, 1.0],
             }
         }
-        other => return Err(Error::Config(format!("unknown pde {other:?}"))),
+        "poisson" => {
+            let d = spec.dim("d");
+            let layers = if !tt {
+                let w = width.unwrap_or(64);
+                vec![
+                    Layer::dense(d, w, Act::Tanh),
+                    Layer::dense(w, w, Act::Tanh),
+                    Layer::dense(w, 1, Act::Identity),
+                ]
+            } else {
+                let w = width.unwrap_or(128);
+                if w != 128 {
+                    return Err(Error::Config("TT fold is defined for width 128".into()));
+                }
+                vec![
+                    Layer::dense(d, 128, Act::Tanh),
+                    hidden128(rank),
+                    Layer::dense(128, 1, Act::Identity),
+                ]
+            };
+            Model {
+                name,
+                layers,
+                in_lo: vec![0.0; d],
+                in_hi: vec![1.0; d],
+            }
+        }
+        other => {
+            // a family registered in pde::spec but not given a model
+            // recipe here — a registry bug, not a user error
+            return Err(Error::Config(format!("no model recipe for family {other:?}")))
+        }
     };
     Ok(model)
 }
@@ -375,5 +443,37 @@ mod tests {
         assert!(build_model("heat", "std", 2, None).is_err());
         assert!(build_model("bs", "cp", 2, None).is_err());
         assert!(build_model("bs", "tt", 2, Some(64)).is_err());
+        // the hjb TT fold is pinned to the paper dimension
+        assert!(build_model("hjb?d=50", "tt", 2, None).is_err());
+        assert!(build_model("poisson?d=6", "tt", 2, Some(64)).is_err());
+    }
+
+    #[test]
+    fn parameterized_specs_build_models() {
+        // hjb at any d (std), input layer tracks the dimension
+        let m = build_model("hjb?d=50", "std", 2, Some(32)).unwrap();
+        assert_eq!(m.d_in(), 51);
+        assert_eq!(m.name, "hjb?d=50_std");
+        // poisson at any d, both variants
+        let m = build_model("poisson?d=6", "std", 2, None).unwrap();
+        assert_eq!(m.d_in(), 6);
+        assert_eq!(m.n_params(), 6 * 64 + 64 + 64 * 64 + 64 + 64 + 1);
+        let m = build_model("poisson?d=6", "tt", 2, None).unwrap();
+        assert_eq!(m.d_in(), 6);
+        // the bs strike moves the input normalization with the domain
+        let m = build_model("bs?strike=50", "std", 2, None).unwrap();
+        assert_eq!(m.in_hi[0], 100.0);
+        assert_eq!(m.name, "bs?strike=50_std");
+    }
+
+    #[test]
+    fn spec_aliases_keep_legacy_model_names() {
+        // canonical naming: hjb?d=20 is the paper model, byte-identical key
+        let legacy = build_model("hjb20", "tt", 2, None).unwrap();
+        let spec = build_model("hjb?d=20", "tt", 2, None).unwrap();
+        assert_eq!(legacy.name, "hjb20_tt");
+        assert_eq!(spec.name, "hjb20_tt");
+        assert_eq!(legacy.n_params(), spec.n_params());
+        assert_eq!(legacy.init_flat(0), spec.init_flat(0));
     }
 }

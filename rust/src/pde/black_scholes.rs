@@ -1,41 +1,104 @@
-//! 1-d Black–Scholes call-option benchmark (App. C.1, Eq. (19)–(21)).
+//! 1-d Black–Scholes call-option benchmark (App. C.1, Eq. (19)–(21)),
+//! parameterized over volatility / strike / rate via the problem catalog
+//! (`bs?sigma=0.3&strike=110&rate=0.02`; bare `bs` is the paper setup).
 //!
-//! Terminal-value problem on (x, t) in [0, 200] x [0, 1]:
+//! Terminal-value problem on (x, t) in [0, 2K] x [0, 1]:
 //! `u_t + 0.5 σ² x² u_xx + r x u_x - r u = 0`, `u(x, T) = max(x - K, 0)`,
-//! `u(0, t) = 0`, `u(200, t) = 200 - K e^{-r(T-t)}`.
+//! `u(0, t) = 0`, `u(2K, t) = 2K - K e^{-r(T-t)}`. The exact price
+//! formula (Eq. (20)) tracks the parameters, and network outputs are
+//! rescaled by K so they stay O(1) at any strike.
 
 use super::special::norm_cdf;
 use super::{Pde, PointSet};
 use crate::stein::Bundle;
 use crate::util::rng::Rng;
 
+/// Paper-default volatility.
 pub const SIGMA: f64 = 0.2;
+/// Paper-default risk-free rate.
 pub const RATE: f64 = 0.05;
+/// Paper-default strike.
 pub const STRIKE: f64 = 100.0;
+/// Option expiry (fixed; the time axis is always [0, 1]).
 pub const T_END: f64 = 1.0;
+/// Paper-default domain upper edge (2 · STRIKE).
 pub const X_MAX: f64 = 200.0;
-/// Net outputs are O(1); prices are O(100) (matches model.py).
+/// Paper-default output scale (net outputs are O(1); prices are O(100),
+/// matches model.py). For parameterized instances the scale is the
+/// strike.
 pub const OUT_SCALE: f64 = 100.0;
 
-pub struct BlackScholes;
+/// The Black–Scholes benchmark; construct via the problem catalog
+/// (`get_pde("bs?sigma=0.3")`) or [`BlackScholes::paper`].
+pub struct BlackScholes {
+    /// Volatility σ.
+    pub sigma: f64,
+    /// Strike K; the spatial domain is [0, 2K] and the output scale K.
+    pub strike: f64,
+    /// Risk-free rate r.
+    pub rate: f64,
+    name: String,
+}
 
-/// Analytic call price (Eq. (20)); handles t -> T and x -> 0 limits.
-pub fn exact_price(x: f64, t: f64) -> f64 {
+impl BlackScholes {
+    /// Instance with explicit parameters, carrying its canonical spec
+    /// name (the registry's `bs` build hook).
+    pub fn with_params(sigma: f64, strike: f64, rate: f64, name: String) -> BlackScholes {
+        assert!(sigma > 0.0 && strike > 0.0 && rate >= 0.0, "bad bs parameters");
+        BlackScholes { sigma, strike, rate, name }
+    }
+
+    /// The paper's setup: σ = 0.2, K = 100, r = 0.05 (spec `bs`).
+    pub fn paper() -> BlackScholes {
+        Self::with_params(SIGMA, STRIKE, RATE, "bs".to_string())
+    }
+
+    /// Domain upper edge 2K (200 for the paper setup).
+    pub fn x_max(&self) -> f64 {
+        2.0 * self.strike
+    }
+
+    /// Output scale K: `u = K · f` keeps network outputs O(1).
+    pub fn out_scale(&self) -> f64 {
+        self.strike
+    }
+
+    /// Analytic call price (Eq. (20)) at this instance's parameters;
+    /// handles the t -> T and x -> 0 limits.
+    pub fn price(&self, x: f64, t: f64) -> f64 {
+        price_with(self.sigma, self.strike, self.rate, x, t)
+    }
+}
+
+impl Default for BlackScholes {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+/// Analytic call price (Eq. (20)) at explicit parameters; handles the
+/// t -> T and x -> 0 limits. Pure arithmetic — no instance needed.
+pub fn price_with(sigma: f64, strike: f64, rate: f64, x: f64, t: f64) -> f64 {
     if T_END - t < 1e-9 {
-        return (x - STRIKE).max(0.0);
+        return (x - strike).max(0.0);
     }
     if x <= 1e-12 {
         return 0.0;
     }
     let tau = T_END - t;
-    let d1 = ((x / STRIKE).ln() + (RATE + 0.5 * SIGMA * SIGMA) * tau) / (SIGMA * tau.sqrt());
-    let d2 = d1 - SIGMA * tau.sqrt();
-    x * norm_cdf(d1) - STRIKE * (-RATE * tau).exp() * norm_cdf(d2)
+    let d1 = ((x / strike).ln() + (rate + 0.5 * sigma * sigma) * tau) / (sigma * tau.sqrt());
+    let d2 = d1 - sigma * tau.sqrt();
+    x * norm_cdf(d1) - strike * (-rate * tau).exp() * norm_cdf(d2)
+}
+
+/// Analytic call price at the paper parameters (legacy free function).
+pub fn exact_price(x: f64, t: f64) -> f64 {
+    price_with(SIGMA, STRIKE, RATE, x, t)
 }
 
 impl Pde for BlackScholes {
-    fn name(&self) -> &'static str {
-        "bs"
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn d_in(&self) -> usize {
@@ -47,7 +110,7 @@ impl Pde for BlackScholes {
     }
 
     fn res_scale(&self) -> f64 {
-        1.0 / OUT_SCALE
+        1.0 / self.out_scale()
     }
 
     fn point_inputs(&self) -> Vec<(&'static str, usize)> {
@@ -55,19 +118,20 @@ impl Pde for BlackScholes {
     }
 
     fn sample_points(&self, rng: &mut Rng) -> PointSet {
+        let x_max = self.x_max();
         let mut res = Vec::with_capacity(200);
         for _ in 0..100 {
-            res.push(rng.uniform_in(0.0, X_MAX));
+            res.push(rng.uniform_in(0.0, x_max));
             res.push(rng.uniform_in(0.0, T_END));
         }
         let mut term = Vec::with_capacity(20);
         for _ in 0..10 {
-            term.push(rng.uniform_in(0.0, X_MAX));
+            term.push(rng.uniform_in(0.0, x_max));
             term.push(T_END);
         }
         let mut bnd = Vec::with_capacity(40);
         for i in 0..20 {
-            bnd.push(if i < 10 { 0.0 } else { X_MAX });
+            bnd.push(if i < 10 { 0.0 } else { x_max });
             bnd.push(rng.uniform_in(0.0, T_END));
         }
         PointSet {
@@ -80,16 +144,18 @@ impl Pde for BlackScholes {
     }
 
     fn transform(&self, _x: &[f64], f: &[f64]) -> Vec<f64> {
-        f.iter().map(|v| OUT_SCALE * v).collect()
+        let s = self.out_scale();
+        f.iter().map(|v| s * v).collect()
     }
 
     fn compose(&self, _x: &[f64], f: &Bundle) -> Bundle {
+        let s = self.out_scale();
         Bundle {
             n: f.n,
             d: f.d,
-            value: f.value.iter().map(|v| OUT_SCALE * v).collect(),
-            grad: f.grad.iter().map(|v| OUT_SCALE * v).collect(),
-            diag_hess: f.diag_hess.iter().map(|v| OUT_SCALE * v).collect(),
+            value: f.value.iter().map(|v| s * v).collect(),
+            grad: f.grad.iter().map(|v| s * v).collect(),
+            diag_hess: f.diag_hess.iter().map(|v| s * v).collect(),
         }
     }
 
@@ -100,7 +166,8 @@ impl Pde for BlackScholes {
                 let u_x = u.grad[i * 2];
                 let u_t = u.grad[i * 2 + 1];
                 let u_xx = u.diag_hess[i * 2];
-                u_t + 0.5 * SIGMA * SIGMA * s * s * u_xx + RATE * s * u_x - RATE * u.value[i]
+                u_t + 0.5 * self.sigma * self.sigma * s * s * u_xx + self.rate * s * u_x
+                    - self.rate * u.value[i]
             })
             .collect()
     }
@@ -117,33 +184,36 @@ impl Pde for BlackScholes {
         let ub = u_of(bnd, nb);
         let mut lt = 0.0;
         for i in 0..nt {
-            let target = (term[i * 2] - STRIKE).max(0.0);
+            let target = (term[i * 2] - self.strike).max(0.0);
             lt += (ut[i] - target).powi(2);
         }
         let mut lb = 0.0;
         for i in 0..nb {
             let (xb, tb) = (bnd[i * 2], bnd[i * 2 + 1]);
-            let target = if xb < 1.0 {
+            // boundary samples sit exactly on x = 0 or x = x_max
+            let target = if xb <= 0.0 {
                 0.0
             } else {
-                X_MAX - STRIKE * (-RATE * (T_END - tb)).exp()
+                self.x_max() - self.strike * (-self.rate * (T_END - tb)).exp()
             };
             lb += (ub[i] - target).powi(2);
         }
-        (lt / nt as f64 + lb / nb as f64) / (OUT_SCALE * OUT_SCALE)
+        let sc = self.out_scale();
+        (lt / nt as f64 + lb / nb as f64) / (sc * sc)
     }
 
     fn exact(&self, x: &[f64], n: usize) -> Vec<f64> {
-        (0..n).map(|i| exact_price(x[i * 2], x[i * 2 + 1])).collect()
+        (0..n).map(|i| self.price(x[i * 2], x[i * 2 + 1])).collect()
     }
 
     fn eval_points(&self, _rng: &mut Rng) -> Vec<f64> {
         // 100 x 100 space-time grid (paper Table 11 base resolution).
         let n = 100;
+        let x_max = self.x_max();
         let mut pts = Vec::with_capacity(n * n * 2);
         for i in 0..n {
             for j in 0..n {
-                pts.push(X_MAX * i as f64 / (n - 1) as f64);
+                pts.push(x_max * i as f64 / (n - 1) as f64);
                 pts.push(T_END * j as f64 / (n - 1) as f64);
             }
         }
@@ -165,24 +235,27 @@ mod tests {
         assert!((deep - intrinsic).abs() < 0.05, "{deep} vs {intrinsic}");
     }
 
+    /// The exact formula satisfies the PDE for non-paper parameters too.
     #[test]
     fn exact_satisfies_pde_by_finite_difference() {
-        let bs = BlackScholes;
-        let h = 1e-4;
-        for &(x, t) in &[(80.0, 0.3), (120.0, 0.6), (100.0, 0.1)] {
-            let u = exact_price(x, t);
-            let u_x = (exact_price(x + h, t) - exact_price(x - h, t)) / (2.0 * h);
-            let u_t = (exact_price(x, t + h) - exact_price(x, t - h)) / (2.0 * h);
-            let u_xx = (exact_price(x + h, t) + exact_price(x - h, t) - 2.0 * u) / (h * h);
-            let r = u_t + 0.5 * SIGMA * SIGMA * x * x * u_xx + RATE * x * u_x - RATE * u;
-            assert!(r.abs() < 1e-3, "residual {r} at ({x},{t})");
-            let _ = &bs;
+        for (sigma, strike, rate) in [(SIGMA, STRIKE, RATE), (0.35, 80.0, 0.01)] {
+            let bs = BlackScholes::with_params(sigma, strike, rate, "bs-test".into());
+            let h = 1e-4;
+            for &(frac, t) in &[(0.8, 0.3), (1.2, 0.6), (1.0, 0.1)] {
+                let x = frac * strike;
+                let u = bs.price(x, t);
+                let u_x = (bs.price(x + h, t) - bs.price(x - h, t)) / (2.0 * h);
+                let u_t = (bs.price(x, t + h) - bs.price(x, t - h)) / (2.0 * h);
+                let u_xx = (bs.price(x + h, t) + bs.price(x - h, t) - 2.0 * u) / (h * h);
+                let r = u_t + 0.5 * sigma * sigma * x * x * u_xx + rate * x * u_x - rate * u;
+                assert!(r.abs() < 1e-3, "residual {r} at ({x},{t}), sigma={sigma}");
+            }
         }
     }
 
     #[test]
     fn compose_scales_everything() {
-        let bs = BlackScholes;
+        let bs = BlackScholes::paper();
         let b = Bundle {
             n: 1,
             d: 2,
@@ -198,40 +271,54 @@ mod tests {
 
     #[test]
     fn sample_points_respect_domain() {
-        let bs = BlackScholes;
-        let mut rng = Rng::new(0);
-        let pts = bs.sample_points(&mut rng);
-        let term = pts.get("pts_term").unwrap();
-        for c in term.chunks(2) {
-            assert_eq!(c[1], T_END);
-        }
-        let bnd = pts.get("pts_bnd").unwrap();
-        for c in bnd.chunks(2) {
-            assert!(c[0] == 0.0 || c[0] == X_MAX);
+        // strike moves the domain edge with it
+        for strike in [STRIKE, 50.0] {
+            let bs = BlackScholes::with_params(SIGMA, strike, RATE, "bs-test".into());
+            let mut rng = Rng::new(0);
+            let pts = bs.sample_points(&mut rng);
+            let term = pts.get("pts_term").unwrap();
+            for c in term.chunks(2) {
+                assert_eq!(c[1], T_END);
+                assert!(c[0] <= 2.0 * strike);
+            }
+            let bnd = pts.get("pts_bnd").unwrap();
+            for c in bnd.chunks(2) {
+                assert!(c[0] == 0.0 || c[0] == 2.0 * strike);
+            }
         }
     }
 
     #[test]
     fn residual_of_exact_bundle_is_zero() {
-        // Feed exact derivatives into the residual directly.
-        let bs = BlackScholes;
-        let (x, t) = (90.0, 0.4);
+        // Feed exact derivatives into the residual directly, at
+        // non-default parameters.
+        let bs = BlackScholes::with_params(0.3, 110.0, 0.02, "bs-test".into());
+        let (x, t) = (95.0, 0.4);
         let h = 1e-4;
-        let u = exact_price(x, t);
+        let u = bs.price(x, t);
         let bundle = Bundle {
             n: 1,
             d: 2,
             value: vec![u],
             grad: vec![
-                (exact_price(x + h, t) - exact_price(x - h, t)) / (2.0 * h),
-                (exact_price(x, t + h) - exact_price(x, t - h)) / (2.0 * h),
+                (bs.price(x + h, t) - bs.price(x - h, t)) / (2.0 * h),
+                (bs.price(x, t + h) - bs.price(x, t - h)) / (2.0 * h),
             ],
             diag_hess: vec![
-                (exact_price(x + h, t) + exact_price(x - h, t) - 2.0 * u) / (h * h),
+                (bs.price(x + h, t) + bs.price(x - h, t) - 2.0 * u) / (h * h),
                 0.0,
             ],
         };
         let r = bs.residual(&[x, t], &bundle);
         assert!(r[0].abs() < 1e-3, "{}", r[0]);
+    }
+
+    #[test]
+    fn paper_instance_matches_legacy_constants() {
+        let bs = BlackScholes::paper();
+        assert_eq!(bs.x_max().to_bits(), X_MAX.to_bits());
+        assert_eq!(bs.out_scale().to_bits(), OUT_SCALE.to_bits());
+        assert_eq!(bs.res_scale().to_bits(), (1.0 / OUT_SCALE).to_bits());
+        assert_eq!(bs.name(), "bs");
     }
 }

@@ -57,7 +57,7 @@ pub fn exact_solution(x: f64, t: f64) -> f64 {
 pub struct Burgers;
 
 impl Pde for Burgers {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "burgers"
     }
 

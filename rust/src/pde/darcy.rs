@@ -136,7 +136,7 @@ impl Darcy {
 }
 
 impl Pde for Darcy {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "darcy"
     }
 

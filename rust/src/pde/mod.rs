@@ -1,27 +1,43 @@
-//! The paper's PDE benchmark suite (App. C.1) with reference solvers.
+//! The PDE benchmark problem catalog (paper App. C.1) with reference
+//! solvers.
 //!
-//! Each benchmark implements [`Pde`]: collocation sampling (App. C.4), the
-//! solution ansatz (`transform` + its analytic chain rule `compose`), the
-//! residual (Eq. (2)), soft data losses, and the exact/reference solution
-//! used for the relative-l2 metric. The derivative bundle entering
-//! `compose` is always that of the **raw body network** — the quantity the
-//! photonic chip measures — so hard constraints never pass through the
-//! Stein smoothing (mirrors `python/compile/pdes.py`).
+//! Problems are selected by a [`ProblemSpec`] string — a family name plus
+//! typed `key=value` parameters (`bs`, `hjb20`, `hjb?d=50`,
+//! `poisson?d=10`, `bs?sigma=0.3&strike=110`) — parsed and validated by
+//! the [`spec`] registry, which owns per-family defaults (Stein radius
+//! scaling with dimension, paper epochs, sweep membership) and
+//! constructs the boxed [`Pde`]. Every consumer (config validation, the
+//! CLI catalog, experiment sweeps, shard replica specs) derives its
+//! problem list from that one registry.
+//!
+//! Each benchmark implements [`Pde`]: collocation sampling (App. C.4),
+//! the solution ansatz (`transform` + its analytic chain rule `compose`),
+//! the residual (Eq. (2)), soft data losses, and the exact/reference
+//! solution used for the relative-l2 metric. The derivative bundle
+//! entering `compose` is always that of the **raw body network** — the
+//! quantity the photonic chip measures — so hard constraints never pass
+//! through the Stein smoothing (mirrors `python/compile/pdes.py`).
 
 pub mod black_scholes;
 pub mod burgers;
 pub mod darcy;
-pub mod hjb20;
+pub mod hjb;
+pub mod poisson;
+pub mod spec;
 pub mod special;
 
 use crate::stein::Bundle;
 use crate::util::rng::Rng;
-use crate::{Error, Result};
+use crate::Result;
 
 pub use black_scholes::BlackScholes;
 pub use burgers::Burgers;
 pub use darcy::Darcy;
-pub use hjb20::Hjb20;
+pub use hjb::Hjb;
+pub use poisson::Poisson;
+pub use spec::{
+    all_pdes, canonicalize_lossy, registry, FamilyInfo, ParamDef, ParamValue, ProblemSpec,
+};
 
 /// Named collocation blocks, in the order the AOT loss artifacts expect.
 #[derive(Debug, Clone)]
@@ -50,7 +66,8 @@ impl PointSet {
 
 /// A PDE benchmark.
 pub trait Pde: Send + Sync {
-    fn name(&self) -> &'static str;
+    /// Canonical problem-spec string (`bs`, `hjb20`, `poisson?d=6`, ...).
+    fn name(&self) -> &str;
     /// Network input dimension (space [+ time]).
     fn d_in(&self) -> usize;
     /// Stein smoothing radius (raw input units; paper App. C.2).
@@ -90,41 +107,83 @@ pub trait Pde: Send + Sync {
     fn eval_points(&self, rng: &mut Rng) -> Vec<f64>;
 }
 
-/// Look up a benchmark by name.
-pub fn get_pde(name: &str) -> Result<Box<dyn Pde>> {
-    match name {
-        "bs" => Ok(Box::new(BlackScholes)),
-        "hjb20" => Ok(Box::new(Hjb20)),
-        "burgers" => Ok(Box::new(Burgers)),
-        "darcy" => Ok(Box::new(Darcy::production())),
-        other => Err(Error::Config(format!(
-            "unknown pde {other:?}; have bs|hjb20|burgers|darcy"
-        ))),
-    }
+/// Construct a benchmark from a problem-spec string (family name +
+/// optional `?key=value&...` parameters; every legacy bare name still
+/// parses). One registry error covers unknown families, unknown keys and
+/// out-of-range values.
+pub fn get_pde(spec: &str) -> Result<Box<dyn Pde>> {
+    ProblemSpec::parse(spec)?.build()
 }
-
-/// All benchmark names, in paper order.
-pub const ALL_PDES: [&str; 4] = ["bs", "hjb20", "burgers", "darcy"];
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Per-family invariants that hold for any registered family at any
+    /// valid parameters — the replacement for the old closed-enum check
+    /// that hard-coded `d_in == 2 || d_in == 21`.
+    fn check_invariants(p: &dyn Pde, what: &str) {
+        assert!(p.d_in() >= 1, "{what}: d_in");
+        assert!(
+            p.sigma_stein() > 0.0 && p.sigma_stein().is_finite(),
+            "{what}: sigma_stein"
+        );
+        assert_eq!(p.sg_level(), 3, "{what}: sg_level");
+        assert!(p.res_scale() > 0.0, "{what}: res_scale");
+        assert!(p.mc_samples() > 0, "{what}: mc_samples");
+        let decl = p.point_inputs();
+        assert!(!decl.is_empty(), "{what}: point_inputs");
+        assert_eq!(decl[0].0, "pts_res", "{what}: first block is the residual set");
+        // the canonical name round-trips through the registry to an
+        // equal problem (same dims, same declared blocks)
+        let again = get_pde(p.name()).unwrap();
+        assert_eq!(again.name(), p.name(), "{what}: name round-trip");
+        assert_eq!(again.d_in(), p.d_in(), "{what}: d_in round-trip");
+        assert_eq!(
+            again.sigma_stein().to_bits(),
+            p.sigma_stein().to_bits(),
+            "{what}: sigma round-trip"
+        );
+    }
+
     #[test]
-    fn registry_complete() {
-        for name in ALL_PDES {
+    fn registry_families_satisfy_invariants() {
+        // every family at defaults ...
+        for family in registry() {
+            let spec = family.default_spec();
+            let p = spec.build().unwrap();
+            assert_eq!(p.name(), spec.canonical(), "{}", family.name);
+            check_invariants(p.as_ref(), family.name);
+        }
+        // ... and at non-default parameters
+        for s in ["hjb?d=3", "hjb?d=50", "poisson?d=2", "poisson?d=25", "bs?sigma=0.4&strike=50"] {
+            let p = get_pde(s).unwrap();
+            assert_eq!(p.name(), ProblemSpec::parse(s).unwrap().canonical(), "{s}");
+            check_invariants(p.as_ref(), s);
+        }
+        // parameterized dims track the spec
+        assert_eq!(get_pde("hjb?d=50").unwrap().d_in(), 51);
+        assert_eq!(get_pde("poisson?d=7").unwrap().d_in(), 7);
+        // unknown families still fail with the one registry error
+        assert!(get_pde("heat").is_err());
+    }
+
+    #[test]
+    fn sweep_set_matches_registry() {
+        assert_eq!(all_pdes(), vec!["bs", "hjb20", "burgers", "darcy"]);
+        for name in all_pdes() {
             let p = get_pde(name).unwrap();
             assert_eq!(p.name(), name);
-            assert!(p.d_in() == 2 || p.d_in() == 21);
-            assert_eq!(p.sg_level(), 3);
         }
-        assert!(get_pde("poisson").is_err());
     }
 
     #[test]
     fn sampled_points_match_declared_shapes() {
         let mut rng = Rng::new(0);
-        for name in ALL_PDES {
+        let mut cases: Vec<String> = all_pdes().iter().map(|s| s.to_string()).collect();
+        cases.push("poisson?d=6".into());
+        cases.push("hjb?d=9".into());
+        for name in &cases {
             let p = get_pde(name).unwrap();
             let pts = p.sample_points(&mut rng);
             let decl = p.point_inputs();

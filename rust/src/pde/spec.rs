@@ -1,0 +1,675 @@
+//! The problem catalog: [`ProblemSpec`] (family name + typed `key=value`
+//! parameters) and the family registry behind [`crate::pde::get_pde`].
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec    := family [ "?" param ( "&" param )* ]
+//! param   := key "=" value
+//! family  := registered family name, or a legacy bare-name alias
+//! value   := positive integer (dimension params) | finite float
+//! ```
+//!
+//! Examples: `bs`, `hjb20`, `hjb?d=50`, `poisson?d=10`,
+//! `bs?sigma=0.3&strike=110`. Unknown families, unknown keys, duplicate
+//! keys, malformed or out-of-range values are all rejected with one
+//! registry error (the config layer and the CLI no longer keep their own
+//! name lists). Note for shell users: quote parameterized specs — `?`
+//! and `&` are glob/control characters in most shells.
+//!
+//! ## Canonical form
+//!
+//! [`ProblemSpec::canonical`] prints the family name followed by only the
+//! **non-default** parameters, in declared order — so every pre-existing
+//! bare name round-trips unchanged, and value-equal specs compare equal
+//! however they were written. A family may register a *legacy alias* for
+//! its all-default spec: `hjb?d=20` canonicalizes to `hjb20`, which keeps
+//! model keys, artifact names and shard-worker replica cache keys
+//! byte-identical to the pre-catalog enum. `parse(canonical(s)) == s` is
+//! property-fuzzed in this module's tests.
+//!
+//! ## Registering a new family
+//!
+//! Add a [`FamilyInfo`] entry to [`REGISTRY`]: name, one-line summary,
+//! parameter table ([`ParamDef`] — the default value fixes each key's
+//! type), a range check, a `build` constructor returning the boxed
+//! [`Pde`], the paper/quick epoch defaults, and whether the family
+//! belongs to the paper-order sweep set ([`all_pdes`]) — then give it a
+//! model recipe in `net::build_model_spec`. Every other layer — config
+//! validation, the CLI HELP catalog, `experiments::tables` sweeps, the
+//! shard wire — picks the new family up from the registry.
+
+use super::Pde;
+use crate::{Error, Result};
+
+/// One typed parameter value of a [`ProblemSpec`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ParamValue {
+    /// A positive integer (dimension-like) parameter.
+    Dim(usize),
+    /// A finite floating-point parameter.
+    Float(f64),
+}
+
+impl std::fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // f64 Display is the shortest round-tripping decimal, which
+            // is what makes canonical -> parse a bitwise fixpoint
+            ParamValue::Dim(d) => write!(f, "{d}"),
+            ParamValue::Float(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// Declaration of one `key=value` parameter a family accepts. The
+/// default's [`ParamValue`] variant fixes the key's type.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamDef {
+    /// Parameter key as written in specs (`d`, `sigma`, ...).
+    pub key: &'static str,
+    /// Default value, used when the key is omitted and elided from the
+    /// canonical form when matched.
+    pub default: ParamValue,
+    /// One-line description for the CLI catalog and docs.
+    pub doc: &'static str,
+}
+
+/// One registered problem family: everything the rest of the stack needs
+/// to parse, validate, describe and construct its benchmarks.
+pub struct FamilyInfo {
+    /// Family name (the part of a spec before `?`).
+    pub name: &'static str,
+    /// One-line description for the CLI catalog and docs.
+    pub summary: &'static str,
+    /// Bare-name alias for the all-default spec, kept for backward
+    /// compatibility (`hjb20` for `hjb?d=20`). The alias is also the
+    /// canonical form of that spec, so legacy model keys survive.
+    pub legacy_alias: Option<&'static str>,
+    /// Accepted parameters, in canonical emission order.
+    pub params: &'static [ParamDef],
+    /// Whether the family's default spec belongs to the paper-order
+    /// benchmark sweep ([`all_pdes`]).
+    pub sweep: bool,
+    /// Paper-default training epochs (App. C).
+    pub paper_epochs: usize,
+    /// Quick-mode (CI-budget) training epochs — small for families whose
+    /// per-loss cost is large (the HJB grid is ~9 GFLOP per evaluation
+    /// at the paper dimension).
+    pub quick_epochs: usize,
+    /// Family-specific parameter range validation.
+    check: fn(&ProblemSpec) -> Result<()>,
+    /// Benchmark constructor.
+    build: fn(&ProblemSpec) -> Result<Box<dyn Pde>>,
+}
+
+impl std::fmt::Debug for FamilyInfo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FamilyInfo")
+            .field("name", &self.name)
+            .field("params", &self.params)
+            .finish_non_exhaustive()
+    }
+}
+
+impl FamilyInfo {
+    /// The spec selecting this family with every parameter at its
+    /// default.
+    pub fn default_spec(&'static self) -> ProblemSpec {
+        ProblemSpec {
+            family: self,
+            values: self.params.iter().map(|p| p.default).collect(),
+        }
+    }
+
+    /// The canonical name of the all-default spec (`hjb20`, not `hjb`).
+    pub fn sweep_name(&self) -> &'static str {
+        self.legacy_alias.unwrap_or(self.name)
+    }
+}
+
+fn check_ok(_: &ProblemSpec) -> Result<()> {
+    Ok(())
+}
+
+/// Dimension params are capped so a typo cannot ask for a terabyte of
+/// collocation points; the bound is far above anything trainable.
+const MAX_DIM: usize = 256;
+
+fn check_dim(spec: &ProblemSpec) -> Result<()> {
+    let d = spec.dim("d");
+    if !(1..=MAX_DIM).contains(&d) {
+        return Err(Error::Config(format!(
+            "{}: d must be in 1..={MAX_DIM}, got {d}",
+            spec.family_name()
+        )));
+    }
+    Ok(())
+}
+
+fn check_bs(spec: &ProblemSpec) -> Result<()> {
+    let (sigma, strike, rate) =
+        (spec.float("sigma"), spec.float("strike"), spec.float("rate"));
+    if !(sigma > 0.0 && sigma <= 2.0) {
+        return Err(Error::Config(format!("bs: sigma must be in (0, 2], got {sigma}")));
+    }
+    if !(1.0..=1e6).contains(&strike) {
+        return Err(Error::Config(format!("bs: strike must be in [1, 1e6], got {strike}")));
+    }
+    if !(0.0..=1.0).contains(&rate) {
+        return Err(Error::Config(format!("bs: rate must be in [0, 1], got {rate}")));
+    }
+    Ok(())
+}
+
+fn build_bs(spec: &ProblemSpec) -> Result<Box<dyn Pde>> {
+    Ok(Box::new(super::BlackScholes::with_params(
+        spec.float("sigma"),
+        spec.float("strike"),
+        spec.float("rate"),
+        spec.canonical(),
+    )))
+}
+
+fn build_hjb(spec: &ProblemSpec) -> Result<Box<dyn Pde>> {
+    Ok(Box::new(super::Hjb::new(spec.dim("d"), spec.canonical())))
+}
+
+fn build_poisson(spec: &ProblemSpec) -> Result<Box<dyn Pde>> {
+    Ok(Box::new(super::Poisson::new(spec.dim("d"), spec.canonical())))
+}
+
+fn build_burgers(_: &ProblemSpec) -> Result<Box<dyn Pde>> {
+    Ok(Box::new(super::Burgers))
+}
+
+fn build_darcy(_: &ProblemSpec) -> Result<Box<dyn Pde>> {
+    Ok(Box::new(super::Darcy::production()))
+}
+
+/// The problem catalog, in paper order (sweep families first; the
+/// paper-order sweep set is derived from it by [`all_pdes`]).
+pub static REGISTRY: [FamilyInfo; 5] = [
+    FamilyInfo {
+        name: "bs",
+        summary: "1-d Black-Scholes call option (App. C.1, Eq. 19-21)",
+        legacy_alias: None,
+        params: &[
+            ParamDef {
+                key: "sigma",
+                default: ParamValue::Float(super::black_scholes::SIGMA),
+                doc: "volatility, in (0, 2]",
+            },
+            ParamDef {
+                key: "strike",
+                default: ParamValue::Float(super::black_scholes::STRIKE),
+                doc: "strike price K; the domain is [0, 2K], in [1, 1e6]",
+            },
+            ParamDef {
+                key: "rate",
+                default: ParamValue::Float(super::black_scholes::RATE),
+                doc: "risk-free rate, in [0, 1]",
+            },
+        ],
+        sweep: true,
+        paper_epochs: 10_000,
+        quick_epochs: 150,
+        check: check_bs,
+        build: build_bs,
+    },
+    FamilyInfo {
+        name: "hjb",
+        summary: "d-dimensional Hamilton-Jacobi-Bellman (App. C.1, Eq. 22; paper: d=20)",
+        legacy_alias: Some("hjb20"),
+        params: &[ParamDef {
+            key: "d",
+            default: ParamValue::Dim(super::hjb::PAPER_D),
+            doc: "spatial dimension (inputs are d space + 1 time), in 1..=256",
+        }],
+        sweep: true,
+        paper_epochs: 10_000,
+        quick_epochs: 30,
+        check: check_dim,
+        build: build_hjb,
+    },
+    FamilyInfo {
+        name: "burgers",
+        summary: "1-d viscous Burgers with Cole-Hopf reference (App. C.1, Eq. 23-25)",
+        legacy_alias: None,
+        params: &[],
+        sweep: true,
+        paper_epochs: 40_000,
+        quick_epochs: 150,
+        check: check_ok,
+        build: build_burgers,
+    },
+    FamilyInfo {
+        name: "darcy",
+        summary: "2-d Darcy flow with FD/CG reference solver (App. C.1, Eq. 26-27)",
+        legacy_alias: None,
+        params: &[],
+        sweep: true,
+        paper_epochs: 20_000,
+        quick_epochs: 150,
+        check: check_ok,
+        build: build_darcy,
+    },
+    FamilyInfo {
+        name: "poisson",
+        summary: "d-dimensional Poisson with exact manufactured solution",
+        legacy_alias: None,
+        params: &[ParamDef {
+            key: "d",
+            default: ParamValue::Dim(super::poisson::DEFAULT_D),
+            doc: "spatial dimension, in 1..=256",
+        }],
+        sweep: false,
+        paper_epochs: 10_000,
+        quick_epochs: 150,
+        check: check_dim,
+        build: build_poisson,
+    },
+];
+
+/// The registered families, in paper order.
+pub fn registry() -> &'static [FamilyInfo] {
+    &REGISTRY
+}
+
+/// Look up a family by name (not by alias).
+pub fn find_family(name: &str) -> Option<&'static FamilyInfo> {
+    REGISTRY.iter().find(|f| f.name == name)
+}
+
+/// Benchmark sweep set, in paper order: the canonical name of every
+/// sweep family's default spec (`bs`, `hjb20`, `burgers`, `darcy`).
+pub fn all_pdes() -> Vec<&'static str> {
+    REGISTRY.iter().filter(|f| f.sweep).map(|f| f.sweep_name()).collect()
+}
+
+/// Canonicalize a spec string, passing unparseable input through
+/// unchanged — the one shared rule for derived names like artifact
+/// model keys (`<canonical>_<variant>`), where an invalid spec should
+/// surface as a lookup miss rather than a second validation error.
+pub fn canonicalize_lossy(spec: &str) -> String {
+    ProblemSpec::parse(spec)
+        .map(|s| s.canonical())
+        .unwrap_or_else(|_| spec.to_string())
+}
+
+/// `name|alias|...` of everything [`ProblemSpec::parse`] accepts, for
+/// error messages and the CLI HELP catalog.
+pub fn known_problems() -> String {
+    let mut names = Vec::new();
+    for f in &REGISTRY {
+        if let Some(alias) = f.legacy_alias {
+            names.push(alias);
+        }
+        names.push(f.name);
+    }
+    names.join("|")
+}
+
+/// A parsed, validated problem selection: one registered family with a
+/// full set of typed parameter values (defaults filled in).
+///
+/// The canonical string form ([`ProblemSpec::canonical`] / `Display`) is
+/// what travels through configs, the CLI, [`crate::engine::EngineSpec`]
+/// and the shard wire; [`ProblemSpec::parse`] is its inverse.
+#[derive(Debug, Clone)]
+pub struct ProblemSpec {
+    family: &'static FamilyInfo,
+    /// One value per `family.params` entry, in declared order.
+    values: Vec<ParamValue>,
+}
+
+impl PartialEq for ProblemSpec {
+    fn eq(&self, other: &Self) -> bool {
+        std::ptr::eq(self.family, other.family) && self.values == other.values
+    }
+}
+
+impl std::fmt::Display for ProblemSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.canonical())
+    }
+}
+
+impl ProblemSpec {
+    /// Parse and validate a spec string (see the module docs for the
+    /// grammar). Every registered bare name and legacy alias parses as
+    /// the family's default-parameter spec.
+    pub fn parse(s: &str) -> Result<ProblemSpec> {
+        let s = s.trim();
+        let (head, query) = match s.split_once('?') {
+            Some((h, q)) => (h, Some(q)),
+            None => (s, None),
+        };
+        let family = match find_family(head) {
+            Some(f) => f,
+            None => match REGISTRY.iter().find(|f| f.legacy_alias == Some(head)) {
+                Some(f) => {
+                    if query.is_some() {
+                        return Err(Error::Config(format!(
+                            "legacy problem name {head:?} takes no parameters; \
+                             use {}?... instead",
+                            f.name
+                        )));
+                    }
+                    f
+                }
+                None => {
+                    return Err(Error::Config(format!(
+                        "unknown problem {head:?}; have {}",
+                        known_problems()
+                    )))
+                }
+            },
+        };
+        let mut values: Vec<ParamValue> =
+            family.params.iter().map(|p| p.default).collect();
+        if let Some(q) = query {
+            let mut seen = vec![false; family.params.len()];
+            if q.is_empty() {
+                return Err(Error::Config(format!(
+                    "problem spec {s:?}: empty parameter list after '?'"
+                )));
+            }
+            for pair in q.split('&') {
+                let (k, v) = pair.split_once('=').ok_or_else(|| {
+                    Error::Config(format!(
+                        "problem spec {s:?}: expected key=value, got {pair:?}"
+                    ))
+                })?;
+                let idx = family
+                    .params
+                    .iter()
+                    .position(|p| p.key == k)
+                    .ok_or_else(|| {
+                        let keys: Vec<_> =
+                            family.params.iter().map(|p| p.key).collect();
+                        Error::Config(format!(
+                            "problem family {:?} has no parameter {k:?}; have [{}]",
+                            family.name,
+                            keys.join(", ")
+                        ))
+                    })?;
+                if seen[idx] {
+                    return Err(Error::Config(format!(
+                        "problem spec {s:?}: duplicate parameter {k:?}"
+                    )));
+                }
+                seen[idx] = true;
+                values[idx] = match family.params[idx].default {
+                    ParamValue::Dim(_) => {
+                        let d: usize = v.parse().map_err(|_| {
+                            Error::Config(format!(
+                                "problem spec {s:?}: {k} expects a positive integer, got {v:?}"
+                            ))
+                        })?;
+                        if d == 0 {
+                            return Err(Error::Config(format!(
+                                "problem spec {s:?}: {k} must be positive"
+                            )));
+                        }
+                        ParamValue::Dim(d)
+                    }
+                    ParamValue::Float(_) => {
+                        let x: f64 = v.parse().map_err(|_| {
+                            Error::Config(format!(
+                                "problem spec {s:?}: {k} expects a number, got {v:?}"
+                            ))
+                        })?;
+                        if !x.is_finite() {
+                            return Err(Error::Config(format!(
+                                "problem spec {s:?}: {k} must be finite, got {v:?}"
+                            )));
+                        }
+                        ParamValue::Float(x)
+                    }
+                };
+            }
+        }
+        let spec = ProblemSpec { family, values };
+        (family.check)(&spec)?;
+        Ok(spec)
+    }
+
+    /// The family this spec selects.
+    pub fn family(&self) -> &'static FamilyInfo {
+        self.family
+    }
+
+    /// The family name (`hjb`, not the `hjb20` alias).
+    pub fn family_name(&self) -> &'static str {
+        self.family.name
+    }
+
+    /// Canonical string form: family name + non-default parameters in
+    /// declared order, or the legacy alias for an all-default spec that
+    /// has one. `parse(canonical()) == self`.
+    pub fn canonical(&self) -> String {
+        let mut q = String::new();
+        for (def, val) in self.family.params.iter().zip(&self.values) {
+            if *val != def.default {
+                if !q.is_empty() {
+                    q.push('&');
+                }
+                q.push_str(def.key);
+                q.push('=');
+                q.push_str(&val.to_string());
+            }
+        }
+        if q.is_empty() {
+            self.family.sweep_name().to_string()
+        } else {
+            format!("{}?{q}", self.family.name)
+        }
+    }
+
+    /// Value of a dimension parameter. Panics if the family does not
+    /// declare `key` as a [`ParamValue::Dim`] — a registry bug, not an
+    /// input error (inputs are rejected in [`ProblemSpec::parse`]).
+    pub fn dim(&self, key: &str) -> usize {
+        match self.value(key) {
+            ParamValue::Dim(d) => d,
+            other => panic!("{}: {key} is not a dim param ({other:?})", self.family.name),
+        }
+    }
+
+    /// Value of a float parameter. Panics if the family does not declare
+    /// `key` as a [`ParamValue::Float`] (registry bug, as above).
+    pub fn float(&self, key: &str) -> f64 {
+        match self.value(key) {
+            ParamValue::Float(v) => v,
+            other => panic!("{}: {key} is not a float param ({other:?})", self.family.name),
+        }
+    }
+
+    fn value(&self, key: &str) -> ParamValue {
+        let idx = self
+            .family
+            .params
+            .iter()
+            .position(|p| p.key == key)
+            .unwrap_or_else(|| panic!("{}: no param {key:?}", self.family.name));
+        self.values[idx]
+    }
+
+    /// Construct the described benchmark.
+    pub fn build(&self) -> Result<Box<dyn Pde>> {
+        (self.family.build)(self)
+    }
+
+    /// Paper-default training epochs for this problem (App. C).
+    pub fn paper_epochs(&self) -> usize {
+        self.family.paper_epochs
+    }
+
+    /// Quick-mode (CI-budget) training epochs for this problem.
+    pub fn quick_epochs(&self) -> usize {
+        self.family.quick_epochs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bare_names_and_aliases_parse_as_default_specs() {
+        for name in ["bs", "hjb20", "hjb", "burgers", "darcy", "poisson"] {
+            let spec = ProblemSpec::parse(name).unwrap();
+            let def = spec.family().default_spec();
+            assert_eq!(spec, def, "{name}");
+        }
+        // the legacy alias is the canonical form of the default hjb spec
+        for s in ["hjb", "hjb20", "hjb?d=20"] {
+            assert_eq!(ProblemSpec::parse(s).unwrap().canonical(), "hjb20", "{s}");
+        }
+        assert_eq!(ProblemSpec::parse("bs").unwrap().canonical(), "bs");
+        assert_eq!(ProblemSpec::parse("poisson?d=10").unwrap().canonical(), "poisson");
+    }
+
+    #[test]
+    fn parameterized_specs_round_trip() {
+        let cases = [
+            ("hjb?d=50", "hjb?d=50"),
+            ("poisson?d=6", "poisson?d=6"),
+            ("bs?strike=110&sigma=0.3", "bs?sigma=0.3&strike=110"),
+            ("bs?rate=0.05", "bs"), // default-valued params are elided
+            (" bs ", "bs"),
+        ];
+        for (input, canonical) in cases {
+            let spec = ProblemSpec::parse(input).unwrap();
+            assert_eq!(spec.canonical(), canonical, "{input}");
+            assert_eq!(ProblemSpec::parse(canonical).unwrap(), spec, "{input}");
+        }
+        let s = ProblemSpec::parse("bs?sigma=0.3&strike=110").unwrap();
+        assert_eq!(s.float("sigma"), 0.3);
+        assert_eq!(s.float("strike"), 110.0);
+        assert_eq!(s.float("rate"), super::super::black_scholes::RATE);
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        let bad = [
+            "",                    // empty
+            "heat",                // unknown family
+            "poisson?",            // empty param list
+            "poisson?d",           // no '='
+            "poisson?d=",          // empty value
+            "poisson?d=two",       // not an integer
+            "poisson?d=0",         // zero dim
+            "poisson?d=100000",    // over MAX_DIM
+            "poisson?n=4",         // unknown key
+            "poisson?d=4&d=5",     // duplicate key
+            "hjb20?d=50",          // params on a legacy alias
+            "bs?sigma=nan",        // non-finite float
+            "bs?sigma=-0.5",       // family range check
+            "bs?strike=0.5",       // family range check
+            "bs?rate=2",           // family range check
+        ];
+        for s in bad {
+            assert!(ProblemSpec::parse(s).is_err(), "{s:?} should be rejected");
+        }
+        // the unknown-family error carries the catalog
+        let e = ProblemSpec::parse("heat").unwrap_err().to_string();
+        for name in ["bs", "hjb20", "burgers", "darcy", "poisson"] {
+            assert!(e.contains(name), "{e}");
+        }
+    }
+
+    #[test]
+    fn sweep_set_is_paper_order() {
+        assert_eq!(all_pdes(), vec!["bs", "hjb20", "burgers", "darcy"]);
+        assert_eq!(REGISTRY.len(), 5);
+    }
+
+    #[test]
+    fn paper_epochs_from_registry() {
+        assert_eq!(ProblemSpec::parse("burgers").unwrap().paper_epochs(), 40_000);
+        assert_eq!(ProblemSpec::parse("darcy").unwrap().paper_epochs(), 20_000);
+        assert_eq!(ProblemSpec::parse("hjb?d=50").unwrap().paper_epochs(), 10_000);
+        assert_eq!(ProblemSpec::parse("bs").unwrap().paper_epochs(), 10_000);
+    }
+
+    /// Generate a random *valid* spec string for `family` by sampling a
+    /// random subset of its params with random in-range values.
+    fn rand_spec_string(rng: &mut Rng) -> String {
+        let family = &REGISTRY[rng.below(REGISTRY.len())];
+        let mut parts = Vec::new();
+        for def in family.params {
+            if rng.below(2) == 0 {
+                continue;
+            }
+            let v = match def.default {
+                ParamValue::Dim(_) => format!("{}", 1 + rng.below(64)),
+                ParamValue::Float(d) => {
+                    // perturb around the default so family range checks pass
+                    let scale = 1.0 + 0.5 * (rng.uniform() - 0.5);
+                    format!("{}", d * scale)
+                }
+            };
+            parts.push(format!("{}={v}", def.key));
+        }
+        if parts.is_empty() {
+            family.name.to_string()
+        } else {
+            // shuffle key order: canonicalization must not depend on it
+            rng.shuffle(&mut parts);
+            format!("{}?{}", family.name, parts.join("&"))
+        }
+    }
+
+    #[test]
+    fn fuzz_parse_canonical_parse_is_a_fixpoint() {
+        check(
+            "problem spec round-trip",
+            256,
+            |rng| rand_spec_string(rng),
+            |s| {
+                let spec = ProblemSpec::parse(s).map_err(|e| e.to_string())?;
+                let canon = spec.canonical();
+                let spec2 = ProblemSpec::parse(&canon).map_err(|e| e.to_string())?;
+                if spec2 != spec {
+                    return Err(format!("{s} -> {canon}: value changed"));
+                }
+                if spec2.canonical() != canon {
+                    return Err(format!("{canon} is not a canonical fixpoint"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fuzz_mangled_specs_error_instead_of_panicking() {
+        check(
+            "mangled spec rejection",
+            256,
+            |rng| {
+                let mut s = rand_spec_string(rng).into_bytes();
+                // flip, truncate, or append junk
+                match rng.below(3) {
+                    0 => {
+                        if !s.is_empty() {
+                            let i = rng.below(s.len());
+                            s[i] = b"?&=#xz9"[rng.below(7)];
+                        }
+                    }
+                    1 => s.truncate(rng.below(s.len() + 1)),
+                    _ => s.extend_from_slice(b"&&"),
+                }
+                String::from_utf8_lossy(&s).into_owned()
+            },
+            |s| {
+                // must return either way, never panic
+                let _ = ProblemSpec::parse(s);
+                Ok(())
+            },
+        );
+    }
+}

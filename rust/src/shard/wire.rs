@@ -427,9 +427,25 @@ mod tests {
         (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect()
     }
 
+    /// A pde field that mixes arbitrary strings with problem-catalog
+    /// spec shapes (`family?key=value&key=value`) — the codec must carry
+    /// parameterized specs verbatim, punctuation and all.
+    fn rand_pde_string(rng: &mut Rng) -> String {
+        match rng.below(3) {
+            0 => rand_string(rng),
+            1 => format!("{}?d={}", rand_string(rng), rng.below(512)),
+            _ => format!(
+                "{}?sigma={}&strike={}",
+                rand_string(rng),
+                edge_f64(rng),
+                rng.below(1000)
+            ),
+        }
+    }
+
     fn rand_spec(rng: &mut Rng) -> EngineSpec {
         EngineSpec {
-            pde: rand_string(rng),
+            pde: rand_pde_string(rng),
             variant: rand_string(rng),
             rank: rng.below(8),
             width: (rng.below(2) == 1).then(|| rng.below(256)),

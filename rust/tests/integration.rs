@@ -12,7 +12,7 @@
 
 use optical_pinn::engine::{rel_l2_eval, Engine, NativeEngine, PjrtEngine, PjrtRuntime};
 use optical_pinn::net::build_model;
-use optical_pinn::pde::{get_pde, ALL_PDES};
+use optical_pinn::pde::{all_pdes, get_pde};
 use optical_pinn::quadrature::{smolyak_sparse_grid, SparseGrid};
 use optical_pinn::util::json::Json;
 use optical_pinn::util::rng::Rng;
@@ -68,7 +68,7 @@ fn quadrature_matches_python_dumps() {
 fn model_layouts_match_manifest() {
     let dir = require_artifacts!();
     let rt = PjrtRuntime::new(&dir).unwrap();
-    for pde in ALL_PDES {
+    for pde in all_pdes() {
         for variant in ["std", "tt"] {
             let model = build_model(pde, variant, 2, None).unwrap();
             let entry = rt.manifest.req("models").unwrap().req(&format!("{pde}_{variant}")).unwrap();
@@ -80,7 +80,7 @@ fn model_layouts_match_manifest() {
 #[test]
 fn native_loss_matches_pjrt_loss_for_all_benchmarks() {
     let dir = require_artifacts!();
-    for pde_name in ALL_PDES {
+    for pde_name in all_pdes() {
         for variant in ["std", "tt"] {
             let mut native = NativeEngine::new(pde_name, variant).unwrap();
             let mut pjrt =

@@ -8,7 +8,7 @@
 #![allow(deprecated)]
 
 use optical_pinn::engine::{Engine, NativeEngine, ProbeBatch};
-use optical_pinn::pde::ALL_PDES;
+use optical_pinn::pde::all_pdes;
 use optical_pinn::util::rng::Rng;
 use optical_pinn::zo::{train, TrainConfig};
 
@@ -26,7 +26,7 @@ fn make_probes(params: &[f64], n_probes: usize) -> ProbeBatch {
 
 #[test]
 fn loss_many_bitwise_equals_sequential_for_every_pde() {
-    for name in ALL_PDES {
+    for name in all_pdes() {
         let mut eng = NativeEngine::new(name, "tt").unwrap();
         let params = eng.model.init_flat(0);
         let mut rng = Rng::new(7);

@@ -1,0 +1,174 @@
+//! Backward-compatibility and parity contract of the problem-catalog
+//! API redesign:
+//!
+//! * every pre-existing CLI invocation and config JSON keeps working
+//!   unchanged (bare names parse as default-parameter specs);
+//! * `hjb?d=20` is the legacy `hjb20` benchmark **bitwise** — same
+//!   sampled points, same residuals, same training trajectory;
+//! * genuinely parameterized problems (`poisson?d=10`, `hjb?d=50`)
+//!   train end-to-end through the unified session driver.
+//!
+//! Native-engine based, so these run without artifacts. The heavy
+//! high-dimensional cases use small widths and a level-2 Stein grid to
+//! stay inside a debug-build CI budget — parity claims are unaffected
+//! (both sides of every comparison share the exact same options).
+
+use optical_pinn::config::ExperimentConfig;
+use optical_pinn::engine::native::{NativeEngine, NativeOptions};
+use optical_pinn::engine::Engine;
+use optical_pinn::pde::{get_pde, Pde, ProblemSpec};
+use optical_pinn::session;
+use optical_pinn::util::argparse::Args;
+use optical_pinn::util::rng::Rng;
+use optical_pinn::zo::{History, TrainConfig};
+
+// ---------------------------------------------------------------------
+// legacy invocations keep working unchanged
+// ---------------------------------------------------------------------
+
+#[test]
+fn legacy_cli_invocations_parse_unchanged() {
+    // the exact token streams pre-catalog CLIs produced
+    let legacy_cases = [
+        vec!["train", "bs", "tt", "--train", "zo", "--epochs", "2000"],
+        vec!["train", "hjb20", "tt", "--train", "zo", "--max-forwards", "2000000"],
+        vec!["train", "burgers", "std", "--method", "se"],
+        vec!["train", "darcy", "tt", "--backend", "native"],
+    ];
+    for tokens in legacy_cases {
+        let mut cfg = ExperimentConfig::default();
+        let args = Args::parse(tokens.iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        cfg.validate().unwrap_or_else(|e| panic!("{tokens:?}: {e}"));
+        // the bare name is exactly the family's default-parameter spec
+        let spec = ProblemSpec::parse(&cfg.pde).unwrap();
+        assert_eq!(spec, spec.family().default_spec(), "{tokens:?}");
+        assert_eq!(spec.canonical(), cfg.pde, "{tokens:?}: bare names are canonical");
+    }
+    // parameterized specs ride the same positional slot
+    let args = Args::parse(
+        ["train", "poisson?d=6", "std", "--backend", "native"].iter().map(|s| s.to_string()),
+    );
+    let mut cfg = ExperimentConfig::default();
+    cfg.apply_args(&args).unwrap();
+    cfg.validate().unwrap();
+    assert_eq!(cfg.pde, "poisson?d=6");
+}
+
+#[test]
+fn legacy_config_json_parses_unchanged() {
+    let j = optical_pinn::util::json::Json::parse(
+        r#"{"pde":"hjb20","variant":"tt","train":"zo","epochs":500,"backend":"native"}"#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_json(&j).unwrap();
+    cfg.validate().unwrap();
+    assert_eq!(cfg.pde, "hjb20");
+    assert_eq!(cfg.model_key(), "hjb20_tt");
+}
+
+// ---------------------------------------------------------------------
+// hjb?d=20 == hjb20, bitwise
+// ---------------------------------------------------------------------
+
+#[test]
+fn hjb_spec_pde_is_bitwise_identical_to_legacy_name() {
+    let legacy = get_pde("hjb20").unwrap();
+    let spec = get_pde("hjb?d=20").unwrap();
+    assert_eq!(legacy.name(), spec.name(), "canonicalization must unify them");
+    assert_eq!(legacy.d_in(), spec.d_in());
+    assert_eq!(legacy.sigma_stein().to_bits(), spec.sigma_stein().to_bits());
+
+    // identical RNG consumption and point values
+    let (mut ra, mut rb) = (Rng::new(7), Rng::new(7));
+    let (pa, pb) = (legacy.sample_points(&mut ra), spec.sample_points(&mut rb));
+    assert_eq!(pa.blocks.len(), pb.blocks.len());
+    for ((na, va), (nb, vb)) in pa.blocks.iter().zip(&pb.blocks) {
+        assert_eq!(na, nb);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(va), bits(vb), "sampled points diverged");
+    }
+
+    // identical ansatz chain rule and residual on a synthetic bundle
+    let x = pa.get("pts_res").unwrap();
+    let n = x.len() / legacy.d_in();
+    let mut rng = Rng::new(9);
+    let mut value = vec![0.0; n];
+    let mut grad = vec![0.0; n * legacy.d_in()];
+    let mut diag = vec![0.0; n * legacy.d_in()];
+    rng.fill_normal(&mut value);
+    rng.fill_normal(&mut grad);
+    rng.fill_normal(&mut diag);
+    let f = optical_pinn::stein::Bundle {
+        n,
+        d: legacy.d_in(),
+        value,
+        grad,
+        diag_hess: diag,
+    };
+    let (ua, ub) = (legacy.compose(x, &f), spec.compose(x, &f));
+    assert_eq!(ua.value, ub.value, "compose values diverged");
+    assert_eq!(ua.grad, ub.grad, "compose grads diverged");
+    assert_eq!(ua.diag_hess, ub.diag_hess, "compose hessians diverged");
+    assert_eq!(legacy.residual(x, &ua), spec.residual(x, &ub), "residuals diverged");
+    assert_eq!(legacy.exact(x, n), spec.exact(x, n), "exact solutions diverged");
+}
+
+/// Short training run at identical options; the small width + level-2
+/// grid keep the 21-dim workload cheap without weakening the claim.
+fn run_hjb_session(pde: &str) -> (Vec<f64>, History) {
+    let opts = NativeOptions { level: Some(2), ..Default::default() };
+    let mut eng = NativeEngine::with_options(pde, "std", 2, Some(32), opts).unwrap();
+    eng.set_probe_threads(2);
+    let mut cfg = TrainConfig::zo(3);
+    cfg.eval_every = 1;
+    cfg.layout = eng.model.param_layout();
+    let mut params = eng.model.init_flat(0);
+    let hist = session::run_weight(&mut eng, &mut params, &cfg).unwrap();
+    (params, hist)
+}
+
+#[test]
+fn hjb_spec_training_trajectory_is_bitwise_identical_to_legacy_name() {
+    let (p_legacy, h_legacy) = run_hjb_session("hjb20");
+    let (p_spec, h_spec) = run_hjb_session("hjb?d=20");
+    assert_eq!(p_legacy, p_spec, "final params diverged");
+    assert_eq!(h_legacy.steps, h_spec.steps);
+    assert_eq!(h_legacy.losses, h_spec.losses, "loss curve diverged");
+    assert_eq!(h_legacy.errors, h_spec.errors, "error curve diverged");
+    assert_eq!(h_legacy.forwards, h_spec.forwards);
+    assert_eq!(h_legacy.total_forwards, h_spec.total_forwards);
+}
+
+// ---------------------------------------------------------------------
+// parameterized problems train end-to-end
+// ---------------------------------------------------------------------
+
+fn train_short(pde: &str, width: usize, epochs: usize) -> History {
+    let opts = NativeOptions { level: Some(2), ..Default::default() };
+    let mut eng = NativeEngine::with_options(pde, "std", 2, Some(width), opts).unwrap();
+    eng.set_probe_threads(2);
+    let mut cfg = TrainConfig::zo(epochs);
+    cfg.eval_every = epochs.max(1);
+    cfg.layout = eng.model.param_layout();
+    let mut params = eng.model.init_flat(0);
+    session::run_weight(&mut eng, &mut params, &cfg).unwrap()
+}
+
+#[test]
+fn poisson_d10_trains_end_to_end() {
+    let hist = train_short("poisson?d=10", 16, 3);
+    assert!(!hist.errors.is_empty());
+    assert!(hist.final_error.is_finite() && hist.final_error > 0.0);
+    assert!(hist.losses.iter().all(|l| l.is_finite()));
+    assert!(hist.total_forwards > 0);
+}
+
+#[test]
+fn hjb_d50_trains_end_to_end() {
+    let hist = train_short("hjb?d=50", 16, 2);
+    assert!(!hist.errors.is_empty());
+    assert!(hist.final_error.is_finite() && hist.final_error > 0.0);
+    assert!(hist.losses.iter().all(|l| l.is_finite()));
+    assert!(hist.total_forwards > 0);
+}

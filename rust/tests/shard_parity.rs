@@ -139,6 +139,47 @@ fn sharded_phase_domain_matches_single_engine_bitwise() {
 }
 
 // ---------------------------------------------------------------------
+// parameterized problems (the catalog spec travels the wire)
+// ---------------------------------------------------------------------
+
+/// A parameterized catalog problem must shard exactly like the legacy
+/// names: the `poisson?d=6` spec ships inside `EngineSpec` over the TCP
+/// wire, the worker reconstructs the d=6 replica from it, and the
+/// trajectory stays bitwise-identical to the single-engine run.
+#[test]
+fn sharded_parameterized_problem_matches_single_engine_bitwise() {
+    use optical_pinn::engine::native::NativeOptions;
+
+    let run = |shards: usize, hosts: Vec<String>| -> (Vec<f64>, History) {
+        // small width keeps the 85-node d=6 Stein grid affordable here
+        let mut eng = NativeEngine::with_options(
+            "poisson?d=6",
+            "std",
+            2,
+            Some(16),
+            NativeOptions::default(),
+        )
+        .unwrap();
+        eng.set_probe_threads(2);
+        let mut cfg = TrainConfig::zo(4);
+        cfg.eval_every = 2;
+        cfg.layout = eng.model.param_layout();
+        cfg.shards = shards;
+        cfg.shard_hosts = hosts;
+        let mut params = eng.model.init_flat(0);
+        let hist = session::run_weight(&mut eng, &mut params, &cfg).unwrap();
+        (params, hist)
+    };
+    let (p_base, h_base) = run(0, Vec::new());
+    let (p, h) = run(2, Vec::new());
+    assert_eq!(p_base, p, "poisson?d=6 in-process x2: params diverged");
+    assert_hist_eq(&h_base, &h, "poisson?d=6 in-process x2");
+    let (p, h) = run(0, spawn_workers(2));
+    assert_eq!(p_base, p, "poisson?d=6 tcp x2: params diverged");
+    assert_hist_eq(&h_base, &h, "poisson?d=6 tcp x2");
+}
+
+// ---------------------------------------------------------------------
 // mixed transports and failure semantics
 // ---------------------------------------------------------------------
 
