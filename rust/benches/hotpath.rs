@@ -2,16 +2,21 @@
 //! loop, measured at realistic shapes, plus the native-vs-PJRT loss
 //! latency comparison that drives the backend choice.
 //!
-//! Before/after numbers from the optimization pass are recorded in
-//! EXPERIMENTS.md §Perf.
+//! The kernel design under test (packed register-tiled GEMM, fused TT
+//! contraction, opt-in f32 evaluation) and the old-kernel baselines the
+//! rows compare against are documented in docs/ARCHITECTURE.md
+//! §Evaluation kernels. Besides the usual `bench_out/hotpath.json`
+//! append-log, this target writes the latest comparison table to
+//! `BENCH_hotpath.json` at the repo root — machine-readable, uploaded as
+//! a CI artifact by the bench-smoke job.
 
 use optical_pinn::bench_harness::{bench, black_box, record, Table};
 use optical_pinn::engine::native::{default_threads, NativeOptions};
-use optical_pinn::engine::{Engine, NativeEngine, PjrtEngine, ProbeBatch};
+use optical_pinn::engine::{Engine, EvalPrecision, NativeEngine, PjrtEngine, ProbeBatch};
 use optical_pinn::shard::{InProcessTransport, ShardedEngine, Transport};
 use optical_pinn::experiments::runner::artifacts_dir;
-use optical_pinn::linalg::gemm::{matmul, matmul_parallel};
-use optical_pinn::net::build_model;
+use optical_pinn::linalg::gemm::{gemm, gemm_ref, matmul_parallel};
+use optical_pinn::net::{build_model, Act, FwdScratch, LayerScratch, TTLayer};
 use optical_pinn::photonic::{PhotonicModel, PhotonicVariant};
 use optical_pinn::quadrature::smolyak_sparse_grid;
 use optical_pinn::stein::SteinEstimator;
@@ -24,20 +29,51 @@ fn main() {
     let mut rng = Rng::new(0);
     let threads = default_threads();
 
-    // 1. GEMM at the BS Stein-batch shape: (2730 x 128) x (128 x 128)
+    // 1. GEMM at the BS Stein-batch shape: (2730 x 128) x (128 x 128) —
+    //    the frozen pre-optimization `ikj` kernel vs the packed
+    //    register-tiled kernel, same single thread, printed side by side.
     let (m, k, n) = (2730, 128, 128);
     let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
     let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut c = vec![0.0; m * n];
+    let t_old = bench("gemm_old", 3, 20, || {
+        gemm_ref(m, k, n, &a, &b, &mut c);
+        black_box(&c);
+    });
+    let gflops = 2.0 * (m * k * n) as f64 / t_old.mean_s / 1e9;
+    table.row(vec!["gemm 2730x128x128 old ikj kernel".into(), format!("{:.3}", t_old.per_iter_ms()), format!("{gflops:.2} GFLOP/s")]);
     let t = bench("gemm_serial", 3, 20, || {
-        black_box(matmul(m, k, n, &a, &b));
+        gemm(m, k, n, &a, &b, &mut c);
+        black_box(&c);
     });
     let gflops = 2.0 * (m * k * n) as f64 / t.mean_s / 1e9;
-    table.row(vec!["gemm 2730x128x128 serial".into(), format!("{:.3}", t.per_iter_ms()), format!("{gflops:.2} GFLOP/s")]);
+    table.row(vec!["gemm 2730x128x128 packed serial".into(), format!("{:.3}", t.per_iter_ms()), format!("{gflops:.2} GFLOP/s  ({:.2}x vs old)", t_old.mean_s / t.mean_s)]);
     let t = bench("gemm_parallel", 3, 20, || {
         black_box(matmul_parallel(m, k, n, &a, &b, threads));
     });
     let gflops = 2.0 * (m * k * n) as f64 / t.mean_s / 1e9;
-    table.row(vec![format!("gemm 2730x128x128 x{threads} threads"), format!("{:.3}", t.per_iter_ms()), format!("{gflops:.2} GFLOP/s")]);
+    table.row(vec![format!("gemm 2730x128x128 packed x{threads} threads"), format!("{:.3}", t.per_iter_ms()), format!("{gflops:.2} GFLOP/s")]);
+
+    // 1b. TT contraction at the paper BS fold (128x128 as 3 cores, 192
+    //     core params): old permute+GEMM path vs the fused strip-mined
+    //     kernel that never materializes the permute buffer.
+    let fold = TTLayer::new(vec![4, 4, 8], vec![8, 4, 4], vec![1, 2, 2, 1], Act::Identity);
+    let mut cores = vec![0.0; fold.n_core_params()];
+    rng.fill_normal(&mut cores);
+    let tt_batch = 2730;
+    let mut xt = vec![0.0; tt_batch * fold.n_in()];
+    rng.fill_normal(&mut xt);
+    let t_old = bench("tt_contract_unfused", 3, 20, || {
+        black_box(fold.contract_unfused(&cores, &xt, tt_batch));
+    });
+    table.row(vec!["tt contract bs-fold 2730 pts unfused".into(), format!("{:.3}", t_old.per_iter_ms()), String::new()]);
+    let mut lws = LayerScratch::default();
+    let mut yt = Vec::new();
+    let t = bench("tt_contract_fused", 3, 20, || {
+        fold.contract_into(&cores, &xt, tt_batch, &mut yt, &mut lws);
+        black_box(&yt);
+    });
+    table.row(vec!["tt contract bs-fold 2730 pts fused".into(), format!("{:.3}", t.per_iter_ms()), format!("{:.2}x vs unfused", t_old.mean_s / t.mean_s)]);
 
     // 2. Stein batch assembly + contraction (no forward)
     let grid = smolyak_sparse_grid(2, 3);
@@ -86,14 +122,24 @@ fn main() {
     });
     table.row(vec!["ONN realize (bs, 18k MZIs)".into(), format!("{:.3}", t.per_iter_ms()), String::new()]);
 
-    // 5. TT contraction vs dense forward at the hidden-layer shape
+    // 5. Single-probe forward at the hidden-layer shape: old kernels
+    //    (reference ikj GEMM + unfused TT) vs the packed/fused production
+    //    path, same single thread, side by side — the per-probe unit of
+    //    work on the ZO hot path.
     let tt_model = build_model("bs", "tt", 2, None).unwrap();
     let tt_params = tt_model.init_flat(0);
     let xs: Vec<f64> = (0..2730 * 2).map(|_| rng.uniform_in(0.0, 1.0)).collect();
-    let t = bench("tt_forward", 3, 20, || {
-        black_box(tt_model.forward(&tt_params, &xs, 2730, threads));
+    let t_old = bench("tt_forward_old", 3, 20, || {
+        black_box(tt_model.forward_reference(&tt_params, &xs, 2730));
     });
-    table.row(vec!["TT-MLP fwd 2730 pts".into(), format!("{:.3}", t.per_iter_ms()), format!("{:.1} kpts/s", 2.73 / t.mean_s)]);
+    table.row(vec!["TT-MLP fwd 2730 pts old kernels".into(), format!("{:.3}", t_old.per_iter_ms()), format!("{:.1} kpts/s", 2.73 / t_old.mean_s)]);
+    let mut fws = FwdScratch::default();
+    let mut fout = Vec::new();
+    let t = bench("tt_forward", 3, 20, || {
+        tt_model.forward_into(&tt_params, &xs, 2730, &mut fws, &mut fout);
+        black_box(&fout);
+    });
+    table.row(vec!["TT-MLP fwd 2730 pts new kernels".into(), format!("{:.3}", t.per_iter_ms()), format!("{:.1} kpts/s  ({:.2}x vs old)", 2.73 / t.mean_s, t_old.mean_s / t.mean_s)]);
     let std_model = build_model("bs", "std", 2, None).unwrap();
     let std_params = std_model.init_flat(0);
     let t = bench("std_forward", 3, 20, || {
@@ -119,6 +165,7 @@ fn main() {
         let probes = est.queries_per_step() as f64;
         let iters = if pde == "bs" { 10 } else { 3 };
         let mut seq_mean: Option<f64> = None;
+        let mut f64_mean = f64::NAN;
         let mut thread_cases = vec![1usize];
         if threads > 1 {
             thread_cases.push(threads);
@@ -142,8 +189,32 @@ fn main() {
                 Some(seq) => thr.push_str(&format!("  ({:.2}x speedup)", seq / timing.mean_s)),
                 None => seq_mean = Some(timing.mean_s),
             }
+            f64_mean = timing.mean_s;
             table.row(vec![label, format!("{:.2}", timing.per_iter_ms()), thr]);
         }
+
+        // f32 evaluation at the same thread count: params narrowed once
+        // per probe, points once per call, losses still composed in f64
+        // (--eval-precision f32; see docs/ARCHITECTURE.md §Evaluation
+        // kernels for the precision contract)
+        eng.set_eval_precision(EvalPrecision::F32);
+        let mut rng = Rng::new(3);
+        let timing = bench(&format!("zo_step_f32_{pde}"), 1, iters, || {
+            est.estimate(&params, &mut grad, &mut rng, &mut |pb| {
+                eng.loss_many(pb, &pts)
+            })
+            .unwrap();
+        });
+        table.row(vec![
+            format!("zo_step {pde}/{variant} f32 x{threads}"),
+            format!("{:.2}", timing.per_iter_ms()),
+            format!(
+                "{:.1} probes/s  ({:.2}x vs f64 same threads)",
+                probes / timing.mean_s,
+                f64_mean / timing.mean_s
+            ),
+        ]);
+        eng.set_eval_precision(EvalPrecision::F64);
 
         // Pipelined steady state: one iteration = wait for the in-flight
         // batch, assemble, re-base the (pre-drawn) next plan, reissue.
@@ -238,5 +309,31 @@ fn main() {
 
     table.print();
     record("hotpath", table.to_json());
-    let _ = Json::Null;
+    write_repo_root_record(&table);
+}
+
+/// Write the latest comparison table to `BENCH_hotpath.json` at the repo
+/// root — the same JSON shape `bench_harness::record` appends under
+/// `bench_out/` (a one-element array of `{title, header, rows}`), but
+/// overwritten each run so the file is always the newest numbers. CI runs
+/// bench targets from `rust/`, so walk up to the `.git` toplevel; outside
+/// a checkout, fall back to the current directory.
+fn write_repo_root_record(table: &Table) {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let mut root = cwd.clone();
+    let mut dir = cwd;
+    loop {
+        if dir.join(".git").exists() {
+            root = dir;
+            break;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    let path = root.join("BENCH_hotpath.json");
+    match std::fs::write(&path, Json::Arr(vec![table.to_json()]).to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

@@ -1,6 +1,7 @@
 //! Experiment configuration: JSON files + CLI overrides + named presets
 //! for every paper table/figure (the launcher reads these).
 
+use crate::engine::EvalPrecision;
 use crate::loss::DerivMethod;
 use crate::util::argparse::Args;
 use crate::util::json::Json;
@@ -50,6 +51,11 @@ pub struct ExperimentConfig {
     /// processes), one engine replica per entry; an unreachable worker
     /// degrades to local evaluation with a logged warning.
     pub shard_hosts: Vec<String>,
+    /// Evaluation kernel precision (`--eval-precision f64|f32`). The f32
+    /// kernel set is native-backend only; losses are still composed and
+    /// returned as f64. Part of the engine replica spec, so sharded
+    /// workers always run the same kernels.
+    pub eval_precision: EvalPrecision,
     pub verbose: bool,
 }
 
@@ -75,6 +81,7 @@ impl Default for ExperimentConfig {
             pipeline_depth: 1,
             shards: 0,
             shard_hosts: Vec::new(),
+            eval_precision: EvalPrecision::F64,
             verbose: false,
         }
     }
@@ -129,6 +136,7 @@ impl ExperimentConfig {
                         .map(|h| Ok(h.as_str()?.to_string()))
                         .collect::<Result<Vec<_>>>()?
                 }
+                "eval_precision" => c.eval_precision = EvalPrecision::parse(v.as_str()?)?,
                 "verbose" => c.verbose = matches!(v, Json::Bool(true)),
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
             }
@@ -187,6 +195,9 @@ impl ExperimentConfig {
                 .map(str::to_string)
                 .collect();
         }
+        if let Some(p) = args.get("eval-precision") {
+            self.eval_precision = EvalPrecision::parse(p)?;
+        }
         if args.flag("verbose") {
             self.verbose = true;
         }
@@ -225,6 +236,13 @@ impl ExperimentConfig {
                 self.shards,
                 self.shard_hosts.len()
             )));
+        }
+        if self.eval_precision == EvalPrecision::F32 && self.backend != "native" {
+            return Err(Error::Config(
+                "--eval-precision f32 requires --backend native (the PJRT \
+                 graphs are compiled at a fixed precision)"
+                    .into(),
+            ));
         }
         Ok(())
     }
@@ -269,6 +287,10 @@ mod tests {
                 "3",
                 "--shard-hosts",
                 "a:1, b:2,",
+                "--backend",
+                "native",
+                "--eval-precision",
+                "f32",
                 "--verbose",
             ]
             .iter()
@@ -283,6 +305,7 @@ mod tests {
         assert_eq!(c.max_forwards, Some(123_456));
         assert_eq!(c.shards, 3);
         assert_eq!(c.shard_hosts, vec!["a:1", "b:2"]);
+        assert_eq!(c.eval_precision, EvalPrecision::F32);
         assert!(c.verbose);
         c.validate().unwrap();
     }
@@ -323,6 +346,15 @@ mod tests {
         c4.shards = 1;
         c4.shard_hosts = vec!["a:1".into(), "b:2".into()];
         assert!(c4.validate().is_err());
+        // f32 kernels exist only in the native engine
+        let mut c5 = ExperimentConfig::default();
+        c5.eval_precision = EvalPrecision::F32;
+        assert!(c5.validate().is_err());
+        c5.backend = "native".into();
+        c5.validate().unwrap();
+        // unknown precision strings are rejected at parse time
+        let j = Json::parse(r#"{"eval_precision":"f16"}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -26,7 +26,46 @@ use crate::loss::DerivMethod;
 use crate::pde::{Pde, PointSet};
 use crate::util::rng::Rng;
 use crate::util::stats::rel_l2;
-use crate::Result;
+use crate::{Error, Result};
+
+/// Numeric precision of the evaluation kernels (`--eval-precision`).
+///
+/// At [`EvalPrecision::F32`] the engine narrows params once per probe and
+/// collocation points once per call, runs the whole forward stack through
+/// the f32 kernel set, and widens network outputs back to f64 — loss
+/// composition (residual reduction, weighting) always stays f64. The
+/// choice is part of [`EngineSpec`], so sharded replicas always agree;
+/// all bitwise invariants hold *within* a precision choice (see
+/// docs/ARCHITECTURE.md §Evaluation kernels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvalPrecision {
+    /// Full double precision end to end (the default).
+    #[default]
+    F64,
+    /// f32 forward kernels; losses still composed and returned as f64.
+    F32,
+}
+
+impl EvalPrecision {
+    /// Parse a `--eval-precision` value (`"f64"` / `"f32"`).
+    pub fn parse(s: &str) -> Result<EvalPrecision> {
+        match s {
+            "f64" => Ok(EvalPrecision::F64),
+            "f32" => Ok(EvalPrecision::F32),
+            other => Err(Error::Config(format!(
+                "unknown eval precision {other:?} (expected \"f64\" or \"f32\")"
+            ))),
+        }
+    }
+
+    /// Canonical flag value (`"f64"` / `"f32"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            EvalPrecision::F64 => "f64",
+            EvalPrecision::F32 => "f32",
+        }
+    }
+}
 
 /// A flat `(n_probes x dim)` matrix of candidate parameter vectors — the
 /// unit of work of the probe-batched ZO evaluation pipeline.
@@ -302,6 +341,10 @@ pub struct EngineSpec {
     /// default — deliberately left unresolved so a small dispatcher can
     /// drive big workers at their full parallelism.
     pub probe_threads: usize,
+    /// Kernel precision of the evaluation path. Part of the spec (and of
+    /// the shard wire codec) so every replica runs the same kernels —
+    /// mixing precisions across shards would break the trajectory.
+    pub precision: EvalPrecision,
 }
 
 impl EngineSpec {
@@ -320,6 +363,7 @@ impl EngineSpec {
                 se_seed: self.se_seed,
                 threads: self.threads,
                 probe_threads: self.probe_threads,
+                precision: self.precision,
             },
         )
     }
@@ -381,6 +425,10 @@ pub trait Engine {
     /// Probe-level parallelism hint for [`Engine::loss_many`]
     /// (0 = engine default). No-op on engines without a parallel path.
     fn set_probe_threads(&mut self, _threads: usize) {}
+    /// Select the evaluation kernel precision (see [`EvalPrecision`]).
+    /// No-op on engines without a reduced-precision path (PJRT,
+    /// classifier) — those always evaluate at their native precision.
+    fn set_eval_precision(&mut self, _precision: EvalPrecision) {}
     /// (loss, d loss / d params) — only available where a grad artifact
     /// exists (FO baselines); native engines return Unsupported.
     fn loss_grad(&mut self, params: &[f64], pts: &PointSet) -> Result<(f64, Vec<f64>)>;
@@ -440,6 +488,9 @@ impl<T: Engine + ?Sized> Engine for &mut T {
     }
     fn set_probe_threads(&mut self, threads: usize) {
         (**self).set_probe_threads(threads)
+    }
+    fn set_eval_precision(&mut self, precision: EvalPrecision) {
+        (**self).set_eval_precision(precision)
     }
     fn loss_grad(&mut self, params: &[f64], pts: &PointSet) -> Result<(f64, Vec<f64>)> {
         (**self).loss_grad(params, pts)

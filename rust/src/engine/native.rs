@@ -7,9 +7,9 @@
 
 use std::sync::{Arc, Mutex};
 
-use super::{Engine, EngineSpec, PendingLosses, ProbeBatch};
+use super::{Engine, EngineSpec, EvalPrecision, PendingLosses, ProbeBatch};
 use crate::loss::{DerivMethod, LossWorkspace, PinnLoss};
-use crate::net::{build_model_spec, FwdScratch, Model};
+use crate::net::{build_model_spec, FwdScratch, FwdScratchT, Model};
 use crate::pde::{Pde, PointSet, ProblemSpec};
 use crate::util::rng::Rng;
 use crate::{err, Result};
@@ -17,32 +17,66 @@ use crate::{err, Result};
 /// Per-worker scratch for probe-batched loss evaluation: the forward
 /// ping-pong buffers plus the loss-side Stein batch/values/bundle. Kept
 /// alive inside the engine across `loss_many` calls, so the steady-state
-/// hot path performs no allocation.
+/// hot path performs no allocation. The f32 buffers stay empty (and cost
+/// nothing) unless the engine runs at [`EvalPrecision::F32`].
 #[derive(Debug, Clone, Default)]
 pub struct Workspace {
     fwd: FwdScratch,
     loss: LossWorkspace,
+    /// f32 forward scratch for `--eval-precision f32`.
+    fwd32: FwdScratchT<f32>,
+    /// Probe params narrowed once per probe (not once per forward call).
+    params32: Vec<f32>,
+    /// Collocation points narrowed once per forward call.
+    x32: Vec<f32>,
+    /// f32 network outputs, widened to f64 before loss composition.
+    out32: Vec<f32>,
 }
 
 /// One full PINN loss evaluation at `params`, entirely inside `ws`.
 /// Single-threaded by construction — `loss_many` parallelizes across
 /// probes, not inside a forward — and bitwise-identical to the engine's
-/// sequential [`Engine::loss`] path.
+/// sequential [`Engine::loss`] path (which routes through this same
+/// function whenever the precision is not the plain-f64 default).
+///
+/// At [`EvalPrecision::F32`] the probe params are narrowed once here (the
+/// engine boundary), each point block is narrowed per forward call, the
+/// whole network stack runs in f32, and outputs are widened back to f64 —
+/// loss composition always stays f64.
 fn eval_probe(
     model: &Model,
     loss_fn: &PinnLoss,
     pde: &dyn Pde,
     params: &[f64],
     pts: &PointSet,
+    precision: EvalPrecision,
     ws: &mut Workspace,
 ) -> f64 {
-    let Workspace { fwd, loss } = ws;
-    loss_fn.eval_with(
-        pde,
-        pts,
-        &mut |x, n, out| model.forward_into(params, x, n, fwd, out),
-        loss,
-    )
+    let Workspace { fwd, loss, fwd32, params32, x32, out32 } = ws;
+    match precision {
+        EvalPrecision::F64 => loss_fn.eval_with(
+            pde,
+            pts,
+            &mut |x, n, out| model.forward_into(params, x, n, fwd, out),
+            loss,
+        ),
+        EvalPrecision::F32 => {
+            params32.clear();
+            params32.extend(params.iter().map(|&v| v as f32));
+            loss_fn.eval_with(
+                pde,
+                pts,
+                &mut |x, n, out| {
+                    x32.clear();
+                    x32.extend(x.iter().map(|&v| v as f32));
+                    model.forward_into_s(params32, x32, n, fwd32, out32);
+                    out.clear();
+                    out.extend(out32.iter().map(|&v| v as f64));
+                },
+                loss,
+            )
+        }
+    }
 }
 
 /// Evaluate every probe of `probes` into `out` using the given worker
@@ -52,12 +86,14 @@ fn eval_probe(
 /// independent of scheduling). Shared by the blocking [`Engine::loss_many`]
 /// and the background thread behind [`Engine::loss_many_async`], so both
 /// paths are bitwise-identical by construction.
+#[allow(clippy::too_many_arguments)]
 fn eval_batch_into(
     model: &Model,
     loss_fn: &PinnLoss,
     pde: &dyn Pde,
     probes: &ProbeBatch,
     pts: &PointSet,
+    precision: EvalPrecision,
     workspaces: &mut [Workspace],
     out: &mut [f64],
 ) {
@@ -66,7 +102,7 @@ fn eval_batch_into(
     if t == 1 {
         let ws = &mut workspaces[0];
         for (i, slot) in out.iter_mut().enumerate() {
-            *slot = eval_probe(model, loss_fn, pde, probes.probe(i), pts, ws);
+            *slot = eval_probe(model, loss_fn, pde, probes.probe(i), pts, precision, ws);
         }
         return;
     }
@@ -76,7 +112,7 @@ fn eval_batch_into(
             s.spawn(move || {
                 for (j, slot) in chunk.iter_mut().enumerate() {
                     let p = probes.probe(ci * per + j);
-                    *slot = eval_probe(model, loss_fn, pde, p, pts, ws);
+                    *slot = eval_probe(model, loss_fn, pde, p, pts, precision, ws);
                 }
             });
         }
@@ -98,6 +134,8 @@ pub struct NativeEngine {
     pub threads: usize,
     /// Worker count for probe-batched `loss_many` (>= 1).
     pub probe_threads: usize,
+    /// Kernel precision of the evaluation path (`--eval-precision`).
+    precision: EvalPrecision,
     /// Persistent per-worker scratch (lazily grown to `probe_threads`).
     workspaces: Vec<Workspace>,
     /// Per-worker scratch for the background `loss_many_async` path,
@@ -158,6 +196,7 @@ impl NativeEngine {
             se_seed: opts.se_seed,
             threads: opts.threads,
             probe_threads: opts.probe_threads,
+            precision: opts.precision,
         };
         Ok(NativeEngine {
             model: Arc::new(model),
@@ -165,6 +204,7 @@ impl NativeEngine {
             loss_fn,
             threads: opts.threads,
             probe_threads,
+            precision: opts.precision,
             workspaces: Vec::new(),
             async_workspaces: Arc::new(Mutex::new(Vec::new())),
             spec,
@@ -197,6 +237,8 @@ pub struct NativeOptions {
     /// kept 0 in the default so shard replica specs let worker hosts
     /// size themselves).
     pub probe_threads: usize,
+    /// Kernel precision of the evaluation path (default f64).
+    pub precision: EvalPrecision,
 }
 
 impl Default for NativeOptions {
@@ -209,6 +251,7 @@ impl Default for NativeOptions {
             se_seed: 0,
             threads: default_threads(),
             probe_threads: 0,
+            precision: EvalPrecision::F64,
         }
     }
 }
@@ -230,6 +273,23 @@ impl Engine for NativeEngine {
     }
 
     fn loss(&mut self, params: &[f64], pts: &PointSet) -> Result<f64> {
+        if self.precision != EvalPrecision::F64 {
+            // route through the same workspace path as loss_many, so the
+            // sequential and probe-batched evaluations stay bitwise-
+            // identical at every precision
+            if self.workspaces.is_empty() {
+                self.workspaces.push(Workspace::default());
+            }
+            return Ok(eval_probe(
+                &self.model,
+                &self.loss_fn,
+                self.pde.as_ref(),
+                params,
+                pts,
+                self.precision,
+                &mut self.workspaces[0],
+            ));
+        }
         let model = &self.model;
         let threads = self.threads;
         Ok(self
@@ -260,6 +320,7 @@ impl Engine for NativeEngine {
             self.pde.as_ref(),
             probes,
             pts,
+            self.precision,
             &mut self.workspaces[..t],
             &mut out,
         );
@@ -291,6 +352,7 @@ impl Engine for NativeEngine {
         let loss_fn = self.loss_fn.clone();
         let pts = pts.clone();
         let t = self.probe_threads.max(1).min(n);
+        let precision = self.precision;
         let pool = Arc::clone(&self.async_workspaces);
         let handle = std::thread::spawn(move || {
             let mut guard = pool.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
@@ -299,7 +361,7 @@ impl Engine for NativeEngine {
             }
             let mut out = vec![0.0; n];
             let ws = &mut guard[..t];
-            eval_batch_into(&model, &loss_fn, pde.as_ref(), &probes, &pts, ws, &mut out);
+            eval_batch_into(&model, &loss_fn, pde.as_ref(), &probes, &pts, precision, ws, &mut out);
             drop(guard);
             (probes, Ok(out))
         });
@@ -310,6 +372,11 @@ impl Engine for NativeEngine {
         self.probe_threads = if threads == 0 { default_threads() } else { threads };
         // unresolved on purpose: 0 = "replica default" (see with_options)
         self.spec.probe_threads = threads;
+    }
+
+    fn set_eval_precision(&mut self, precision: EvalPrecision) {
+        self.precision = precision;
+        self.spec.precision = precision;
     }
 
     fn loss_grad(&mut self, _params: &[f64], _pts: &PointSet) -> Result<(f64, Vec<f64>)> {
@@ -489,6 +556,35 @@ mod tests {
         let pts = eng.pde().sample_points(&mut rng);
         let l = eng.loss(&params, &pts).unwrap();
         assert!(l.is_finite() && l >= 0.0);
+    }
+
+    #[test]
+    fn f32_precision_paths_agree_bitwise_and_track_f64() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(1);
+        let pts = eng.pde().sample_points(&mut rng);
+        let f64_loss = eng.loss(&params, &pts).unwrap();
+        eng.set_eval_precision(EvalPrecision::F32);
+        assert_eq!(eng.replica_spec().unwrap().precision, EvalPrecision::F32);
+        let l = eng.loss(&params, &pts).unwrap();
+        // losses are still composed in f64 and only the forward narrows
+        let rel = (l - f64_loss).abs() / (1.0 + f64_loss.abs());
+        assert!(rel < 1e-3, "f32 loss drifted: {l} vs {f64_loss}");
+        // within the f32 choice, every evaluation shape is bitwise equal
+        let mut probes = crate::engine::ProbeBatch::new(params.len());
+        probes.push(&params);
+        for t in [1usize, 4] {
+            eng.set_probe_threads(t);
+            let got = eng.loss_many(&probes, &pts).unwrap();
+            assert_eq!(got[0].to_bits(), l.to_bits(), "probe_threads = {t}");
+            let (_, agot) = eng.loss_many_async(probes.clone(), &pts).wait();
+            assert_eq!(agot.unwrap()[0].to_bits(), l.to_bits(), "async, probe_threads = {t}");
+        }
+        // a replica built from the spec carries the precision with it
+        let mut replica = eng.replica_spec().unwrap().build().unwrap();
+        let got = replica.loss(&params, &pts).unwrap();
+        assert_eq!(got.to_bits(), l.to_bits());
     }
 
     #[test]

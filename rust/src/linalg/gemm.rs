@@ -1,13 +1,258 @@
-//! Blocked GEMM kernels (row-major f64).
+//! Packed, register-tiled GEMM kernels (row-major; f64 plus an f32 twin
+//! behind the [`Scalar`] abstraction for `--eval-precision f32`).
 //!
-//! `gemm` is the single-threaded cache-blocked `ikj` kernel;
-//! `matmul_parallel` splits output rows across std threads when the
-//! problem is large enough to amortize spawn cost. Block sizes were tuned
-//! in the §Perf pass (see EXPERIMENTS.md §Perf / L3).
+//! `gemm_acc` is a BLIS-style MC/KC/NC cache-blocked kernel: A and B are
+//! packed into zero-padded panel buffers and the innermost fixed-size
+//! MR x NR micro-kernel is a register tile the autovectorizer turns into
+//! FMA lanes. The pre-optimization `ikj` kernel survives verbatim as
+//! [`gemm_acc_ref`] — the semantic reference the property tests and the
+//! hotpath bench compare against. The blocking scheme and the
+//! accumulation-order contract are documented in docs/ARCHITECTURE.md
+//! §Evaluation kernels.
+
+use std::cell::RefCell;
+
+/// Rows per micro-tile (register blocking over A). Shared with the
+/// fused TT contraction in `net::layer`, which gathers its A strips
+/// into the same panel layout.
+pub(crate) const MR: usize = 4;
+/// Columns per micro-tile (8 f64 = two AVX2 vectors / one AVX-512).
+pub(crate) const NR: usize = 8;
+/// Rows of A per cache block (packed A panel is MC x KC).
+const MC: usize = 64;
+/// Shared-dimension depth per cache block.
+const KC: usize = 256;
+/// Columns of B per cache block (packed B panel is KC x NC).
+const NC: usize = 256;
+
+thread_local! {
+    static PACK_F64: RefCell<(Vec<f64>, Vec<f64>)> = RefCell::new((Vec::new(), Vec::new()));
+    static PACK_F32: RefCell<(Vec<f32>, Vec<f32>)> = RefCell::new((Vec::new(), Vec::new()));
+}
+
+/// Element type of the evaluation kernel set: `f64` (the bitwise
+/// reference precision) or `f32` (the opt-in reduced-precision path,
+/// `--eval-precision f32`). Besides arithmetic, the trait carries the
+/// three activation primitives the network needs and access to the
+/// per-thread, per-type GEMM packing scratch — `gemm_acc`'s public
+/// signature has no scratch parameter, and the panels (up to
+/// KC·NC elements) are too large to live on the stack.
+pub trait Scalar:
+    Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + std::fmt::Debug
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::MulAssign
+    + Send
+    + Sync
+    + 'static
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Narrow (f32) or pass through (f64) an f64 value.
+    fn from_f64(v: f64) -> Self;
+    /// Widen back to f64 (exact for both implementors).
+    fn to_f64(self) -> f64;
+    /// Hyperbolic tangent (the `tanh` activation).
+    fn s_tanh(self) -> Self;
+    /// Sine (the `sine` activation).
+    fn s_sin(self) -> Self;
+    /// `max(x, 0)` (the `relu` activation).
+    fn s_relu(self) -> Self;
+    /// Run `f` with this thread's (A panel, B panel) packing scratch.
+    /// Never call a packing GEMM from inside `f` — the scratch is a
+    /// single `RefCell` per thread and type.
+    fn with_pack<R>(f: impl FnOnce(&mut Vec<Self>, &mut Vec<Self>) -> R) -> R;
+}
+
+impl Scalar for f64 {
+    const ZERO: f64 = 0.0;
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn s_tanh(self) -> f64 {
+        f64::tanh(self)
+    }
+    #[inline(always)]
+    fn s_sin(self) -> f64 {
+        f64::sin(self)
+    }
+    #[inline(always)]
+    fn s_relu(self) -> f64 {
+        self.max(0.0)
+    }
+    fn with_pack<R>(f: impl FnOnce(&mut Vec<f64>, &mut Vec<f64>) -> R) -> R {
+        PACK_F64.with(|p| {
+            let (a, b) = &mut *p.borrow_mut();
+            f(a, b)
+        })
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: f32 = 0.0;
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn s_tanh(self) -> f32 {
+        f32::tanh(self)
+    }
+    #[inline(always)]
+    fn s_sin(self) -> f32 {
+        f32::sin(self)
+    }
+    #[inline(always)]
+    fn s_relu(self) -> f32 {
+        self.max(0.0)
+    }
+    fn with_pack<R>(f: impl FnOnce(&mut Vec<f32>, &mut Vec<f32>) -> R) -> R {
+        PACK_F32.with(|p| {
+            let (a, b) = &mut *p.borrow_mut();
+            f(a, b)
+        })
+    }
+}
+
+/// The MR x NR register tile: accumulate `acc += Ap @ Bp` over a packed
+/// depth-`kc` A panel (column-major, MR-tall) and B panel (row-major,
+/// NR-wide). Fixed trip counts on the two inner loops let the
+/// autovectorizer keep `acc` entirely in vector registers.
+#[inline(always)]
+pub(crate) fn micro_kernel<S: Scalar>(kc: usize, ap: &[S], bp: &[S], acc: &mut [[S; NR]; MR]) {
+    for p in 0..kc {
+        let arow = &ap[p * MR..p * MR + MR];
+        let brow = &bp[p * NR..p * NR + NR];
+        for r in 0..MR {
+            let av = arow[r];
+            for j in 0..NR {
+                acc[r][j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/// C += A @ B with A (m x k), B (k x n), C (m x n), all row-major —
+/// the generic packed kernel shared by the f64 and f32 entry points.
+///
+/// Accumulation-order contract: each C element receives its KC blocks in
+/// order, k ascending within a block, *independent of the element's
+/// position in the row/column tiling* (edge tiles are zero-padded, and a
+/// `+ 0.0·x` term never lands on a kept accumulator lane's sum — padded
+/// lanes are discarded at write-back). This is what keeps the row-split
+/// [`matmul_parallel`] bitwise-identical to the serial kernel at any
+/// thread count.
+pub fn gemm_acc_s<S: Scalar>(m: usize, k: usize, n: usize, a: &[S], b: &[S], c: &mut [S]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    S::with_pack(|apack, bpack| {
+        if apack.len() < MC * KC {
+            apack.resize(MC * KC, S::ZERO);
+        }
+        if bpack.len() < KC * NC {
+            bpack.resize(KC * NC, S::ZERO);
+        }
+        for jc in (0..n).step_by(NC) {
+            let nc = NC.min(n - jc);
+            let n_panels = nc.div_ceil(NR);
+            for pc in (0..k).step_by(KC) {
+                let kc = KC.min(k - pc);
+                // pack B (kc x nc) into NR-wide column panels, zero-padded
+                for t in 0..n_panels {
+                    let panel = &mut bpack[t * kc * NR..(t + 1) * kc * NR];
+                    for p in 0..kc {
+                        let brow = &b[(pc + p) * n + jc..(pc + p) * n + jc + nc];
+                        let dst = &mut panel[p * NR..p * NR + NR];
+                        for (j, d) in dst.iter_mut().enumerate() {
+                            let col = t * NR + j;
+                            *d = if col < nc { brow[col] } else { S::ZERO };
+                        }
+                    }
+                }
+                for ic in (0..m).step_by(MC) {
+                    let mc = MC.min(m - ic);
+                    let m_panels = mc.div_ceil(MR);
+                    // pack A (mc x kc) into MR-tall row panels, zero-padded
+                    for s in 0..m_panels {
+                        let panel = &mut apack[s * kc * MR..(s + 1) * kc * MR];
+                        for p in 0..kc {
+                            let dst = &mut panel[p * MR..p * MR + MR];
+                            for (r, d) in dst.iter_mut().enumerate() {
+                                let row = s * MR + r;
+                                *d = if row < mc {
+                                    a[(ic + row) * k + pc + p]
+                                } else {
+                                    S::ZERO
+                                };
+                            }
+                        }
+                    }
+                    for s in 0..m_panels {
+                        let mr_act = MR.min(mc - s * MR);
+                        let ap = &apack[s * kc * MR..(s + 1) * kc * MR];
+                        for t in 0..n_panels {
+                            let nr_act = NR.min(nc - t * NR);
+                            let bp = &bpack[t * kc * NR..(t + 1) * kc * NR];
+                            let mut acc = [[S::ZERO; NR]; MR];
+                            micro_kernel(kc, ap, bp, &mut acc);
+                            for (r, arow) in acc.iter().enumerate().take(mr_act) {
+                                let base = (ic + s * MR + r) * n + jc + t * NR;
+                                let crow = &mut c[base..base + nr_act];
+                                for (cv, av) in crow.iter_mut().zip(arow) {
+                                    *cv += *av;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// C = A @ B (zeroing C first) — generic over the kernel precision.
+pub fn gemm_s<S: Scalar>(m: usize, k: usize, n: usize, a: &[S], b: &[S], c: &mut [S]) {
+    c.fill(S::ZERO);
+    gemm_acc_s(m, k, n, a, b, c);
+}
 
 /// C += A @ B with A (m x k), B (k x n), C (m x n), all row-major.
 /// C must be zeroed by the caller if a plain product is wanted.
 pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    gemm_acc_s(m, k, n, a, b, c);
+}
+
+/// C = A @ B (zeroing C first).
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+    gemm_s(m, k, n, a, b, c);
+}
+
+/// C += A @ B — the pre-optimization cache-blocked `ikj` kernel, kept
+/// verbatim as the semantic reference for the packed kernel: the
+/// property tests pin `gemm_acc == gemm_acc_ref` (1e-11) and the hotpath
+/// bench reports old-vs-new side by side. Not on any production path.
+pub fn gemm_acc_ref(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -26,7 +271,6 @@ pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64
                         continue;
                     }
                     let brow = &b[p * n..(p + 1) * n];
-                    // The autovectorizer turns this into AVX fma.
                     for (cv, bv) in crow.iter_mut().zip(brow) {
                         *cv += aip * bv;
                     }
@@ -36,13 +280,15 @@ pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64
     }
 }
 
-/// C = A @ B (zeroing C first).
-pub fn gemm(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
+/// C = A @ B through the reference `ikj` kernel (zeroing C first).
+pub fn gemm_ref(m: usize, k: usize, n: usize, a: &[f64], b: &[f64], c: &mut [f64]) {
     c.fill(0.0);
-    gemm_acc(m, k, n, a, b, c);
+    gemm_acc_ref(m, k, n, a, b, c);
 }
 
-/// C = A @ B^T with B (n x k) row-major — dot-product form, good locality.
+/// C = A @ B^T with B (n x k) row-major — dot-product form. No caller on
+/// the production path (and no longer re-exported from `linalg`); kept as
+/// a layout oracle for tests and experiments.
 pub fn gemm_bt(m: usize, k: usize, n: usize, a: &[f64], b_t: &[f64], c: &mut [f64]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b_t.len(), n * k);
@@ -69,7 +315,9 @@ pub fn matmul(m: usize, k: usize, n: usize, a: &[f64], b: &[f64]) -> Vec<f64> {
 }
 
 /// Row-parallel GEMM across std threads. Falls back to single-threaded
-/// below ~2 MFLOP where spawn cost dominates.
+/// below ~2 MFLOP where spawn cost dominates. Bitwise-identical to
+/// [`matmul`] at any thread count: the packed kernel's per-element
+/// accumulation order does not depend on the row partition.
 pub fn matmul_parallel(
     m: usize,
     k: usize,
@@ -137,6 +385,41 @@ mod tests {
     }
 
     #[test]
+    fn packed_matches_reference_kernel_property() {
+        // The accumulate form (C starts non-zero) against the frozen ikj
+        // reference — the packed kernel must be a drop-in for gemm_acc.
+        check(
+            "gemm_acc == gemm_acc_ref",
+            30,
+            |r| {
+                let (m, k, n) = (1 + r.below(70), 1 + r.below(70), 1 + r.below(70));
+                let a = rand_mat(r, m * k);
+                let b = rand_mat(r, k * n);
+                let c0 = rand_mat(r, m * n);
+                (m, k, n, a, b, c0)
+            },
+            |(m, k, n, a, b, c0)| {
+                let mut c_new = c0.clone();
+                let mut c_ref = c0.clone();
+                gemm_acc(*m, *k, *n, a, b, &mut c_new);
+                gemm_acc_ref(*m, *k, *n, a, b, &mut c_ref);
+                assert_close(&c_new, &c_ref, 1e-11)
+            },
+        );
+    }
+
+    #[test]
+    fn cache_block_edges_match_naive() {
+        // Cross every blocking boundary at once: m over MC, k over KC,
+        // n over NC, none a multiple of its tile.
+        let mut r = Rng::new(7);
+        let (m, k, n) = (MC * 2 + 3, KC + 5, NC + 1);
+        let a = rand_mat(&mut r, m * k);
+        let b = rand_mat(&mut r, k * n);
+        assert_close(&matmul(m, k, n, &a, &b), &naive(m, k, n, &a, &b), 1e-10).unwrap();
+    }
+
+    #[test]
     fn gemm_bt_matches_naive_property() {
         check(
             "gemm_bt == naive",
@@ -171,7 +454,27 @@ mod tests {
         let serial = matmul(m, k, n, &a, &b);
         for threads in [2, 4, 8] {
             let par = matmul_parallel(m, k, n, &a, &b, threads);
-            assert_close(&par, &serial, 1e-12).unwrap();
+            // bitwise, not just close: the accumulation-order contract
+            assert_eq!(par, serial, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn f32_kernel_matches_f64_within_precision() {
+        let mut r = Rng::new(3);
+        let (m, k, n) = (37, 41, 29);
+        let a = rand_mat(&mut r, m * k);
+        let b = rand_mat(&mut r, k * n);
+        let want = naive(m, k, n, &a, &b);
+        let a32: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let mut c32 = vec![0.0f32; m * n];
+        gemm_s(m, k, n, &a32, &b32, &mut c32);
+        for (got, want) in c32.iter().zip(&want) {
+            assert!(
+                (got.to_f64() - want).abs() < 1e-3,
+                "f32 gemm drifted: {got} vs {want}"
+            );
         }
     }
 
@@ -179,5 +482,10 @@ mod tests {
     fn degenerate_shapes() {
         assert_eq!(matmul(1, 1, 1, &[3.0], &[4.0]), vec![12.0]);
         assert_eq!(matmul(2, 1, 1, &[1.0, 2.0], &[5.0]), vec![5.0, 10.0]);
+        // empty operands are a no-op, not a panic
+        assert_eq!(matmul(0, 3, 3, &[], &[0.0; 9]), Vec::<f64>::new());
+        let mut c = vec![7.0; 4];
+        gemm_acc(2, 0, 2, &[], &[], &mut c);
+        assert_eq!(c, vec![7.0; 4]);
     }
 }

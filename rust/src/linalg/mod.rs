@@ -1,9 +1,10 @@
 //! Dense linear algebra substrate (std-only; no BLAS in this environment).
 //!
 //! Sizes in this system are small-to-medium (layers <= 512 wide, photonic
-//! meshes <= 64x64, Stein batches up to ~3x10^4 rows), so a cache-blocked
-//! `ikj` GEMM with optional std::thread row-parallelism is sufficient; the
-//! §Perf pass tunes the block sizes against roofline (EXPERIMENTS.md).
+//! meshes <= 64x64, Stein batches up to ~3x10^4 rows), so a packed,
+//! register-tiled GEMM with optional std::thread row-parallelism is
+//! sufficient; the blocking scheme and its accumulation-order contract
+//! are documented in docs/ARCHITECTURE.md §Evaluation kernels.
 //!
 //! Also hosts the two tiny eigensolvers the system needs: symmetric
 //! tridiagonal QL (Golub–Welsch for Gauss–Hermite nodes) and a one-sided
@@ -14,7 +15,11 @@ pub mod gemm;
 pub mod svd;
 
 pub use eigen::symmetric_tridiagonal_eigen;
-pub use gemm::{gemm, gemm_bt, matmul, matmul_parallel};
+// `gemm_bt` is deliberately not re-exported: it has no production
+// callers (see the API audit in docs/ARCHITECTURE.md §Evaluation
+// kernels); reach it as `linalg::gemm::gemm_bt` if an experiment needs
+// the transposed-operand form.
+pub use gemm::{gemm, matmul, matmul_parallel, Scalar};
 pub use svd::jacobi_svd;
 
 /// Row-major f64 matrix.

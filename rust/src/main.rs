@@ -110,13 +110,13 @@ const HELP: &str = "usage: opinn <train|train-phase|shard-worker|tables|hw-repor
         [--lr F] [--seed N] [--rank N] [--width N] [--mu F] [--queries N]
         [--eval-every N] [--max-forwards N] [--backend pjrt|native]
         [--probe-threads N] [--pipeline-depth 1|2] [--shards N]
-        [--shard-hosts H1,H2,...] [--verbose]
+        [--shard-hosts H1,H2,...] [--eval-precision f64|f32] [--verbose]
         [--out ckpt.json] [--ckpt-every N] [--curve curve.csv]
   train-phase <problem> [--protocol ours|flops|l2ight] [--epochs N] [--lr F]
         [--seed N] [--mu F] [--queries N] [--eval-every N]
         [--max-forwards N] [--backend pjrt|native] [--probe-threads N]
         [--pipeline-depth 1|2] [--shards N] [--shard-hosts H1,H2,...]
-        [--verbose] [--out phases.json]
+        [--eval-precision f64|f32] [--verbose] [--out phases.json]
   shard-worker [--listen ADDR]   host an engine replica; serves probe
         ranges to sharded sessions until each client disconnects
         (default ADDR 127.0.0.1:7171)
@@ -142,6 +142,9 @@ options:
   --shard-hosts LIST comma-separated host:port of running
                      `opinn shard-worker`s; unreachable workers degrade
                      to local evaluation with a logged warning
+  --eval-precision P evaluation kernel precision: f64 (default, bitwise-
+                     reference) or f32 (native backend only; ~2x packed
+                     kernel throughput, losses still returned as f64)
   --ckpt-every N     with --out: checkpoint every N epochs, not just at
                      the end
   --curve FILE       write the eval curve as CSV (train)
@@ -186,6 +189,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .pipeline_depth(cfg.pipeline_depth)
         .shards(cfg.shards)
         .shard_hosts(cfg.shard_hosts.clone())
+        .eval_precision(cfg.eval_precision)
         .verbose(true)
         .method(method, model.param_layout());
     let ckpt_every = args.get_usize("ckpt-every", 0)?;
@@ -252,6 +256,7 @@ fn cmd_train_phase(args: &Args) -> Result<()> {
         pipeline_depth: cfg.pipeline_depth,
         shards: cfg.shards,
         shard_hosts: cfg.shard_hosts.clone(),
+        eval_precision: cfg.eval_precision,
         verbose: true,
         ..Default::default()
     };

@@ -1,5 +1,7 @@
 //! Layer activations (paper: tanh for BS/Burgers/Darcy, sine for HJB).
 
+use crate::linalg::gemm::Scalar;
+
 /// Elementwise activation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Act {
@@ -20,6 +22,19 @@ impl Act {
         }
     }
 
+    /// [`eval`](Self::eval) at the generic kernel precision. For
+    /// `S = f64` this calls the same std functions as `eval`, so the
+    /// generic forward stays bitwise-identical to the f64 one.
+    #[inline]
+    pub fn eval_s<S: Scalar>(self, x: S) -> S {
+        match self {
+            Act::Tanh => x.s_tanh(),
+            Act::Sine => x.s_sin(),
+            Act::Relu => x.s_relu(),
+            Act::Identity => x,
+        }
+    }
+
     /// Apply in place over a buffer.
     pub fn apply(self, xs: &mut [f64]) {
         if self == Act::Identity {
@@ -27,6 +42,16 @@ impl Act {
         }
         for v in xs.iter_mut() {
             *v = self.eval(*v);
+        }
+    }
+
+    /// [`apply`](Self::apply) at the generic kernel precision.
+    pub fn apply_s<S: Scalar>(self, xs: &mut [S]) {
+        if self == Act::Identity {
+            return;
+        }
+        for v in xs.iter_mut() {
+            *v = self.eval_s(*v);
         }
     }
 
@@ -58,5 +83,15 @@ mod tests {
         let mut xs = vec![-1.0, 0.0, 2.0];
         Act::Relu.apply(&mut xs);
         assert_eq!(xs, vec![0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn generic_precision_matches_scalar() {
+        for act in [Act::Tanh, Act::Sine, Act::Relu, Act::Identity] {
+            // f64 generic path is the same std call — bitwise
+            assert_eq!(act.eval_s(0.3f64).to_bits(), act.eval(0.3).to_bits());
+            // f32 path agrees to single precision
+            assert!((act.eval_s(0.3f32) as f64 - act.eval(0.3)).abs() < 1e-6);
+        }
     }
 }

@@ -1,22 +1,37 @@
 //! Layers: dense affine and tensor-train factorized (paper Eq. (13)).
+//!
+//! The TT contraction is *fused*: each core is contracted directly from
+//! the strided carry layout through a register-tiled micro-kernel, with
+//! the (small) core packed once and kept resident — the rust analogue of
+//! `python/compile/kernels/tt_matvec.py`, which keeps all L cores "in
+//! flight" per batch tile. The pre-optimization permute-then-GEMM path
+//! survives as [`TTLayer::contract_unfused`] for the property tests and
+//! the hotpath bench. See docs/ARCHITECTURE.md §Evaluation kernels.
 
 use super::activation::Act;
-use crate::linalg::gemm::{gemm, matmul_parallel};
+use crate::linalg::gemm::{
+    gemm_acc_ref, gemm_s, matmul_parallel, micro_kernel, Scalar, MR, NR,
+};
 use crate::util::rng::Rng;
 
 /// Reusable scratch buffers for allocation-free layer forwards
-/// ([`Layer::forward_into`]). One instance per worker thread; all three
-/// buffers keep their capacity across calls, so the probe-batched ZO hot
-/// path stops allocating after the first evaluation.
+/// ([`Layer::forward_into`]), generic over the kernel precision. One
+/// instance per worker thread; all buffers keep their capacity across
+/// calls, so the probe-batched ZO hot path stops allocating after the
+/// first evaluation.
 #[derive(Debug, Clone, Default)]
-pub struct LayerScratch {
-    /// Permuted carry (B·rest2·macc x r_in·n_k) for the TT contraction.
-    perm: Vec<f64>,
-    /// Core reshaped to a (r_in·n_k x m_k·r_out) GEMM operand.
-    core: Vec<f64>,
+pub struct LayerScratchT<S> {
+    /// The current core packed into NR-wide column panels (resident for
+    /// a whole row sweep of the fused contraction).
+    core: Vec<S>,
+    /// One MR-row gather strip of the carry (column-major, L1-resident).
+    pack: Vec<S>,
     /// Ping-pong partner of the output carry.
-    carry: Vec<f64>,
+    carry: Vec<S>,
 }
+
+/// The f64 layer scratch (the historical name; see [`LayerScratchT`]).
+pub type LayerScratch = LayerScratchT<f64>;
 
 /// Dense layer: `y = act(x @ A + b)` with `A` (n_in x n_out) row-major
 /// (the transpose of the paper's `W`).
@@ -38,6 +53,106 @@ pub struct TTLayer {
     pub n: Vec<usize>,
     pub ranks: Vec<usize>,
     pub act: Act,
+}
+
+/// Pack one TT core `G` (r_in, m_k, n_k, r_out) as the fused kernel's B
+/// operand: a (r_in·n_k x m_k·r_out) matrix stored as NR-wide column
+/// panels, zero-padded in the last panel. Every kept slot is written, so
+/// the destination needs no zero-fill.
+fn pack_core<S: Scalar>(
+    core: &[S],
+    r_in: usize,
+    m_k: usize,
+    n_k: usize,
+    r_out: usize,
+    dst: &mut Vec<S>,
+) {
+    let inner = r_in * n_k;
+    let outc = m_k * r_out;
+    let n_panels = outc.div_ceil(NR);
+    dst.resize(n_panels * inner * NR, S::ZERO);
+    for t in 0..n_panels {
+        let panel = &mut dst[t * inner * NR..(t + 1) * inner * NR];
+        for ri in 0..r_in {
+            for jn in 0..n_k {
+                let p = ri * n_k + jn;
+                let prow = &mut panel[p * NR..p * NR + NR];
+                for (j, slot) in prow.iter_mut().enumerate() {
+                    let col = t * NR + j;
+                    *slot = if col < outc {
+                        core[((ri * m_k + col / r_out) * n_k + jn) * r_out + col % r_out]
+                    } else {
+                        S::ZERO
+                    };
+                }
+            }
+        }
+    }
+}
+
+/// One fused core contraction:
+/// `dst[row, col] = sum_p A[row, p] · B[p, col]` over `p = ri·n_k + jn`,
+/// where `A` is gathered on the fly from the strided carry layout
+/// (`carry[(((b·n_k + jn)·rest2 + r2)·macc + ma)·r_in + ri]` for output
+/// row `(b·rest2 + r2)·macc + ma`) into an L1-resident MR-row strip, and
+/// `B` is the packed resident core. Neither the old permute buffer nor
+/// the reshaped core matrix is ever materialized, and `dst` is written
+/// with `=` (full sums), so it needs no zero-fill.
+#[allow(clippy::too_many_arguments)]
+fn fused_core<S: Scalar>(
+    carry: &[S],
+    rows: usize,
+    rest2: usize,
+    macc: usize,
+    r_in: usize,
+    n_k: usize,
+    outc: usize,
+    core_packed: &[S],
+    pack: &mut Vec<S>,
+    dst: &mut [S],
+) {
+    let inner = r_in * n_k;
+    let stride_jn = rest2 * macc * r_in;
+    let n_panels = outc.div_ceil(NR);
+    if pack.len() < inner * MR {
+        pack.resize(inner * MR, S::ZERO);
+    }
+    let pack = &mut pack[..inner * MR];
+    let mut row0 = 0;
+    while row0 < rows {
+        let mr_act = MR.min(rows - row0);
+        for r in 0..MR {
+            if r < mr_act {
+                let row = row0 + r;
+                let ma = row % macc;
+                let t2 = row / macc;
+                let base = (t2 / rest2) * n_k * stride_jn + ((t2 % rest2) * macc + ma) * r_in;
+                for ri in 0..r_in {
+                    for jn in 0..n_k {
+                        pack[(ri * n_k + jn) * MR + r] = carry[base + jn * stride_jn + ri];
+                    }
+                }
+            } else {
+                // pad the strip; padded lanes are dropped at write-back
+                for p in 0..inner {
+                    pack[p * MR + r] = S::ZERO;
+                }
+            }
+        }
+        for t in 0..n_panels {
+            let nr_act = NR.min(outc - t * NR);
+            let bp = &core_packed[t * inner * NR..(t + 1) * inner * NR];
+            let mut acc = [[S::ZERO; NR]; MR];
+            micro_kernel(inner, pack, bp, &mut acc);
+            for (r, arow) in acc.iter().enumerate().take(mr_act) {
+                let base = (row0 + r) * outc + t * NR;
+                for (d, av) in dst[base..base + nr_act].iter_mut().zip(arow) {
+                    *d = *av;
+                }
+            }
+        }
+        row0 += MR;
+    }
 }
 
 impl TTLayer {
@@ -119,8 +234,8 @@ impl TTLayer {
     }
 
     /// Allocation-free variant of [`contract`](Self::contract): the carry
-    /// ping-pongs between `out` and `ws.carry`, and the permute/reshape
-    /// intermediates live in `ws`. Bitwise-identical results.
+    /// ping-pongs between `out` and `ws.carry`. Bitwise-identical to
+    /// [`contract`](Self::contract) (same fused kernel).
     pub fn contract_into(
         &self,
         cores_flat: &[f64],
@@ -128,6 +243,23 @@ impl TTLayer {
         batch: usize,
         out: &mut Vec<f64>,
         ws: &mut LayerScratch,
+    ) {
+        self.contract_into_s(cores_flat, x, batch, out, ws);
+    }
+
+    /// The fused core-by-core contraction at either kernel precision
+    /// (f64 production path / f32 under `--eval-precision f32`). Per
+    /// core: pack the core once (it stays resident), then sweep the
+    /// carry in MR-row strips gathered directly from its strided layout
+    /// — no permute buffer, no reshaped core matrix, no zero-fill of
+    /// fully-overwritten outputs.
+    pub fn contract_into_s<S: Scalar>(
+        &self,
+        cores_flat: &[S],
+        x: &[S],
+        batch: usize,
+        out: &mut Vec<S>,
+        ws: &mut LayerScratchT<S>,
     ) {
         let n_total = self.n_in();
         debug_assert_eq!(x.len(), batch * n_total);
@@ -142,42 +274,17 @@ impl TTLayer {
             off += core.len();
             debug_assert_eq!(r_in, r_cur);
             let rest2 = rest / n_k;
-            // Permute carry (B, n_k, rest2, macc, r_in) -> (B, rest2, macc, r_in, n_k)
             let rows = batch * rest2 * macc;
-            let inner = r_in * n_k;
-            ws.perm.clear();
-            ws.perm.resize(rows * inner, 0.0);
-            let carry: &[f64] = if first { x } else { out };
-            for b in 0..batch {
-                for jn in 0..n_k {
-                    for r2 in 0..rest2 {
-                        for ma in 0..macc {
-                            let src = (((b * n_k + jn) * rest2 + r2) * macc + ma) * r_in;
-                            let dst_row = (b * rest2 + r2) * macc + ma;
-                            for ri in 0..r_in {
-                                ws.perm[dst_row * inner + ri * n_k + jn] = carry[src + ri];
-                            }
-                        }
-                    }
-                }
-            }
-            // Core reshaped (r_in, n_k, m_k, r_out) -> (inner x m_k*r_out)
             let outc = m_k * r_out;
-            ws.core.clear();
-            ws.core.resize(inner * outc, 0.0);
-            for ri in 0..r_in {
-                for mm in 0..m_k {
-                    for nn in 0..n_k {
-                        for ro in 0..r_out {
-                            ws.core[(ri * n_k + nn) * outc + mm * r_out + ro] =
-                                core[((ri * m_k + mm) * n_k + nn) * r_out + ro];
-                        }
-                    }
-                }
-            }
-            ws.carry.clear();
-            ws.carry.resize(rows * outc, 0.0);
-            gemm(rows, inner, outc, &ws.perm, &ws.core, &mut ws.carry);
+            pack_core(core, r_in, m_k, n_k, r_out, &mut ws.core);
+            // contents fully overwritten by fused_core — resize only
+            // adjusts the length, no redundant zero-fill
+            ws.carry.resize(rows * outc, S::ZERO);
+            let carry: &[S] = if first { x } else { out };
+            fused_core(
+                carry, rows, rest2, macc, r_in, n_k, outc, &ws.core, &mut ws.pack,
+                &mut ws.carry,
+            );
             std::mem::swap(&mut ws.carry, out); // logical (B, rest2, macc*m_k*r_out)
             first = false;
             rest = rest2;
@@ -186,7 +293,72 @@ impl TTLayer {
         }
         debug_assert_eq!(rest, 1);
         debug_assert_eq!(r_cur, 1);
+        out.truncate(batch * self.n_out());
         // out: (B x M)
+    }
+
+    /// The pre-optimization contraction, frozen as the semantic
+    /// reference: per core, permute the carry into a (rows x r_in·n_k)
+    /// buffer, reshape the core into a (r_in·n_k x m_k·r_out) matrix,
+    /// and multiply through the reference `ikj` GEMM. The property tests
+    /// pin `contract == contract_unfused` and the hotpath bench reports
+    /// unfused-vs-fused side by side. Not on any production path.
+    pub fn contract_unfused(&self, cores_flat: &[f64], x: &[f64], batch: usize) -> Vec<f64> {
+        let n_total = self.n_in();
+        debug_assert_eq!(x.len(), batch * n_total);
+        let mut rest = n_total;
+        let mut macc = 1usize;
+        let mut r_cur = 1usize;
+        let mut off = 0;
+        let mut out: Vec<f64> = Vec::new();
+        let mut first = true;
+        for (r_in, m_k, n_k, r_out) in self.core_shapes() {
+            let core = &cores_flat[off..off + r_in * m_k * n_k * r_out];
+            off += core.len();
+            debug_assert_eq!(r_in, r_cur);
+            let rest2 = rest / n_k;
+            // Permute carry (B, n_k, rest2, macc, r_in) -> (B, rest2, macc, r_in, n_k)
+            let rows = batch * rest2 * macc;
+            let inner = r_in * n_k;
+            let mut perm = vec![0.0; rows * inner];
+            let carry: &[f64] = if first { x } else { &out };
+            for b in 0..batch {
+                for jn in 0..n_k {
+                    for r2 in 0..rest2 {
+                        for ma in 0..macc {
+                            let src = (((b * n_k + jn) * rest2 + r2) * macc + ma) * r_in;
+                            let dst_row = (b * rest2 + r2) * macc + ma;
+                            for ri in 0..r_in {
+                                perm[dst_row * inner + ri * n_k + jn] = carry[src + ri];
+                            }
+                        }
+                    }
+                }
+            }
+            // Core reshaped (r_in, n_k, m_k, r_out) -> (inner x m_k*r_out)
+            let outc = m_k * r_out;
+            let mut coremat = vec![0.0; inner * outc];
+            for ri in 0..r_in {
+                for mm in 0..m_k {
+                    for nn in 0..n_k {
+                        for ro in 0..r_out {
+                            coremat[(ri * n_k + nn) * outc + mm * r_out + ro] =
+                                core[((ri * m_k + mm) * n_k + nn) * r_out + ro];
+                        }
+                    }
+                }
+            }
+            let mut carry2 = vec![0.0; rows * outc];
+            gemm_acc_ref(rows, inner, outc, &perm, &coremat, &mut carry2);
+            out = carry2;
+            first = false;
+            rest = rest2;
+            macc *= m_k;
+            r_cur = r_out;
+        }
+        debug_assert_eq!(rest, 1);
+        debug_assert_eq!(r_cur, 1);
+        out
     }
 }
 
@@ -306,12 +478,47 @@ impl Layer {
         y
     }
 
+    /// Forward through the frozen pre-optimization kernels
+    /// ([`gemm_acc_ref`] for dense, [`TTLayer::contract_unfused`] for
+    /// TT) — the old-kernel baseline the hotpath bench prints next to
+    /// the production path. Not a production path itself.
+    pub fn forward_reference(&self, params: &[f64], x: &[f64], batch: usize) -> Vec<f64> {
+        debug_assert_eq!(params.len(), self.n_params());
+        let mut y = match self {
+            Layer::Dense(l) => {
+                let a = &params[..l.n_in * l.n_out];
+                let b = &params[l.n_in * l.n_out..];
+                let mut y = vec![0.0; batch * l.n_out];
+                gemm_acc_ref(batch, l.n_in, l.n_out, x, a, &mut y);
+                for row in y.chunks_mut(l.n_out) {
+                    for (v, bv) in row.iter_mut().zip(b) {
+                        *v += bv;
+                    }
+                }
+                y
+            }
+            Layer::TT(l) => {
+                let ncore = l.n_core_params();
+                let b = &params[ncore..];
+                let mut y = l.contract_unfused(&params[..ncore], x, batch);
+                for row in y.chunks_mut(l.n_out()) {
+                    for (v, bv) in row.iter_mut().zip(b) {
+                        *v += bv;
+                    }
+                }
+                y
+            }
+        };
+        self.act().apply(&mut y);
+        y
+    }
+
     /// Allocation-free forward: writes act(x @ W + b) into `out` using the
     /// caller's scratch. Single-threaded on purpose — on the probe-batched
     /// ZO path the parallelism lives *across* probes, where the per-layer
     /// GEMMs are too small to amortize thread spawn. Bitwise-identical to
-    /// [`forward`](Self::forward) at any thread count (the row-split GEMM
-    /// preserves per-row accumulation order).
+    /// [`forward`](Self::forward) at any thread count (the packed GEMM's
+    /// per-element accumulation order is independent of the row split).
     pub fn forward_into(
         &self,
         params: &[f64],
@@ -320,32 +527,45 @@ impl Layer {
         out: &mut Vec<f64>,
         ws: &mut LayerScratch,
     ) {
+        self.forward_into_s(params, x, batch, out, ws);
+    }
+
+    /// [`forward_into`](Self::forward_into) at either kernel precision —
+    /// the f32 instantiation is the `--eval-precision f32` evaluation
+    /// path (params and inputs already narrowed by the engine boundary).
+    pub fn forward_into_s<S: Scalar>(
+        &self,
+        params: &[S],
+        x: &[S],
+        batch: usize,
+        out: &mut Vec<S>,
+        ws: &mut LayerScratchT<S>,
+    ) {
         debug_assert_eq!(params.len(), self.n_params());
         match self {
             Layer::Dense(l) => {
                 let a = &params[..l.n_in * l.n_out];
                 let b = &params[l.n_in * l.n_out..];
-                out.clear();
-                out.resize(batch * l.n_out, 0.0);
-                gemm(batch, l.n_in, l.n_out, x, a, out);
+                out.resize(batch * l.n_out, S::ZERO);
+                gemm_s(batch, l.n_in, l.n_out, x, a, out);
                 for row in out.chunks_mut(l.n_out) {
                     for (v, bv) in row.iter_mut().zip(b) {
-                        *v += bv;
+                        *v += *bv;
                     }
                 }
             }
             Layer::TT(l) => {
                 let ncore = l.n_core_params();
                 let b = &params[ncore..];
-                l.contract_into(&params[..ncore], x, batch, out, ws);
+                l.contract_into_s(&params[..ncore], x, batch, out, ws);
                 for row in out.chunks_mut(l.n_out()) {
                     for (v, bv) in row.iter_mut().zip(b) {
-                        *v += bv;
+                        *v += *bv;
                     }
                 }
             }
         }
-        self.act().apply(out);
+        self.act().apply_s(out);
     }
 }
 
@@ -363,28 +583,30 @@ mod tests {
         assert_eq!(y, vec![14.0, 26.0]);
     }
 
+    fn rand_tt(r: &mut Rng) -> (TTLayer, Vec<f64>, Vec<f64>, usize) {
+        let ell = 2 + r.below(3);
+        let m: Vec<usize> = (0..ell).map(|_| 1 + r.below(4)).collect();
+        let n: Vec<usize> = (0..ell).map(|_| 1 + r.below(4)).collect();
+        let mut ranks = vec![1usize];
+        for _ in 1..ell {
+            ranks.push(1 + r.below(3));
+        }
+        ranks.push(1);
+        let tt = TTLayer::new(m, n, ranks, Act::Identity);
+        let mut cores = vec![0.0; tt.n_core_params()];
+        r.fill_normal(&mut cores);
+        let batch = 1 + r.below(7);
+        let mut x = vec![0.0; batch * tt.n_in()];
+        r.fill_normal(&mut x);
+        (tt, cores, x, batch)
+    }
+
     #[test]
     fn tt_contract_matches_full_matrix_property() {
         check(
             "tt contract == dense",
             25,
-            |r| {
-                let ell = 2 + r.below(3);
-                let m: Vec<usize> = (0..ell).map(|_| 1 + r.below(4)).collect();
-                let n: Vec<usize> = (0..ell).map(|_| 1 + r.below(4)).collect();
-                let mut ranks = vec![1usize];
-                for _ in 1..ell {
-                    ranks.push(1 + r.below(3));
-                }
-                ranks.push(1);
-                let tt = TTLayer::new(m, n, ranks, Act::Identity);
-                let mut cores = vec![0.0; tt.n_core_params()];
-                r.fill_normal(&mut cores);
-                let batch = 1 + r.below(7);
-                let mut x = vec![0.0; batch * tt.n_in()];
-                r.fill_normal(&mut x);
-                (tt, cores, x, batch)
-            },
+            |r| rand_tt(r),
             |(tt, cores, x, batch)| {
                 let got = tt.contract(cores, x, *batch);
                 // dense reference: y = x @ W^T
@@ -400,9 +622,39 @@ mod tests {
                         want[bi * m_out + i] = acc;
                     }
                 }
-                assert_close(&got, &want, 1e-10)
+                assert_close(&got, &want, 1e-11)
             },
         );
+    }
+
+    #[test]
+    fn fused_matches_unfused_reference_property() {
+        check(
+            "tt fused == unfused",
+            25,
+            |r| rand_tt(r),
+            |(tt, cores, x, batch)| {
+                let fused = tt.contract(cores, x, *batch);
+                let unfused = tt.contract_unfused(cores, x, *batch);
+                assert_close(&fused, &unfused, 1e-11)
+            },
+        );
+    }
+
+    #[test]
+    fn f32_contraction_tracks_f64() {
+        let mut r = Rng::new(11);
+        let (tt, cores, x, batch) = rand_tt(&mut r);
+        let want = tt.contract(&cores, &x, batch);
+        let cores32: Vec<f32> = cores.iter().map(|&v| v as f32).collect();
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut got = Vec::new();
+        let mut ws = LayerScratchT::<f32>::default();
+        tt.contract_into_s(&cores32, &x32, batch, &mut got, &mut ws);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((*g as f64 - w).abs() < 1e-3, "f32 contraction drifted: {g} vs {w}");
+        }
     }
 
     #[test]
@@ -423,6 +675,27 @@ mod tests {
             let mut got = Vec::new();
             l.forward_into(&params, &x, batch, &mut got, &mut ws);
             assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn forward_reference_matches_forward_within_reassociation() {
+        // old kernels vs new kernels: same math, different accumulation
+        // order — close, not bitwise
+        let mut rng = Rng::new(6);
+        let layers = [
+            Layer::dense(16, 24, Act::Tanh),
+            Layer::TT(TTLayer::new(vec![4, 4, 8], vec![8, 4, 4], vec![1, 2, 2, 1], Act::Tanh)),
+        ];
+        for l in layers {
+            let mut params = vec![0.0; l.n_params()];
+            rng.fill_normal(&mut params);
+            let batch = 9;
+            let mut x = vec![0.0; batch * l.n_in()];
+            rng.fill_normal(&mut x);
+            let new = l.forward(&params, &x, batch, 1);
+            let old = l.forward_reference(&params, &x, batch);
+            assert_close(&new, &old, 1e-11).unwrap();
         }
     }
 

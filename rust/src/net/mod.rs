@@ -11,5 +11,5 @@ pub mod layer;
 pub mod model;
 
 pub use activation::Act;
-pub use layer::{DenseLayer, Layer, LayerScratch, TTLayer};
-pub use model::{build_model, FwdScratch, Model, ParamEntry};
+pub use layer::{DenseLayer, Layer, LayerScratch, LayerScratchT, TTLayer};
+pub use model::{build_model, build_model_spec, FwdScratch, FwdScratchT, Model, ParamEntry};

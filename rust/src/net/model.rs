@@ -1,21 +1,26 @@
 //! Model assembly + the flat-parameter interchange contract.
 
 use super::activation::Act;
-use super::layer::{Layer, LayerScratch, TTLayer};
+use super::layer::{Layer, LayerScratchT, TTLayer};
+use crate::linalg::Scalar;
 use crate::pde::ProblemSpec;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::{Error, Result};
 
 /// Reusable buffers for allocation-free model forwards
-/// ([`Model::forward_into`]). The two activation buffers ping-pong
-/// through the layer stack; one instance per worker thread.
+/// ([`Model::forward_into`]), generic over the kernel precision. The two
+/// activation buffers ping-pong through the layer stack; one instance
+/// per worker thread.
 #[derive(Debug, Clone, Default)]
-pub struct FwdScratch {
-    h: Vec<f64>,
-    h2: Vec<f64>,
-    layer: LayerScratch,
+pub struct FwdScratchT<S> {
+    h: Vec<S>,
+    h2: Vec<S>,
+    layer: LayerScratchT<S>,
 }
+
+/// The f64 forward scratch (the historical name; see [`FwdScratchT`]).
+pub type FwdScratch = FwdScratchT<f64>;
 
 /// One entry of the flat parameter layout (mirrors manifest.json).
 #[derive(Debug, Clone, PartialEq)]
@@ -146,13 +151,61 @@ impl Model {
         ws: &mut FwdScratch,
         out: &mut Vec<f64>,
     ) {
+        self.forward_into_s(flat, x, batch, ws, out);
+    }
+
+    /// [`forward_into`](Self::forward_into) at either kernel precision.
+    /// The f32 instantiation is the `--eval-precision f32` evaluation
+    /// path: the engine boundary narrows params once per probe and
+    /// points once per call, runs the whole stack in f32, and widens the
+    /// outputs back to f64 for loss composition. For `S = f64` every
+    /// operation is the same as the historical f64 forward, so it stays
+    /// bitwise-identical to [`forward`](Self::forward).
+    pub fn forward_into_s<S: Scalar>(
+        &self,
+        flat: &[S],
+        x: &[S],
+        batch: usize,
+        ws: &mut FwdScratchT<S>,
+        out: &mut Vec<S>,
+    ) {
         assert_eq!(flat.len(), self.n_params(), "param length mismatch");
         let d = self.d_in();
         assert_eq!(x.len(), batch * d, "input shape mismatch");
-        let FwdScratch { h, h2, layer: lws } = ws;
+        let FwdScratchT { h, h2, layer: lws } = ws;
         // input normalization to [-1, 1]
         h.clear();
-        h.resize(batch * d, 0.0);
+        h.resize(batch * d, S::ZERO);
+        let (two, one) = (S::from_f64(2.0), S::from_f64(1.0));
+        for i in 0..batch {
+            for k in 0..d {
+                let (lo, hi) = (S::from_f64(self.in_lo[k]), S::from_f64(self.in_hi[k]));
+                h[i * d + k] = (x[i * d + k] - lo) / (hi - lo) * two - one;
+            }
+        }
+        let mut off = 0;
+        for layer in &self.layers {
+            let p = &flat[off..off + layer.n_params()];
+            off += layer.n_params();
+            layer.forward_into_s(p, h, batch, h2, lws);
+            std::mem::swap(h, h2);
+        }
+        // (B x 1) -> (B,)
+        debug_assert_eq!(h.len(), batch);
+        out.clear();
+        out.extend_from_slice(h);
+    }
+
+    /// Forward through the frozen pre-optimization kernels (reference
+    /// `ikj` GEMM, unfused TT contraction) — the old-kernel baseline the
+    /// hotpath bench prints next to the production path. Same math as
+    /// [`forward`](Self::forward) up to accumulation order; not a
+    /// production path.
+    pub fn forward_reference(&self, flat: &[f64], x: &[f64], batch: usize) -> Vec<f64> {
+        assert_eq!(flat.len(), self.n_params(), "param length mismatch");
+        let d = self.d_in();
+        assert_eq!(x.len(), batch * d, "input shape mismatch");
+        let mut h = vec![0.0; batch * d];
         for i in 0..batch {
             for k in 0..d {
                 let (lo, hi) = (self.in_lo[k], self.in_hi[k]);
@@ -163,13 +216,10 @@ impl Model {
         for layer in &self.layers {
             let p = &flat[off..off + layer.n_params()];
             off += layer.n_params();
-            layer.forward_into(p, h, batch, h2, lws);
-            std::mem::swap(h, h2);
+            h = layer.forward_reference(p, &h, batch);
         }
-        // (B x 1) -> (B,)
         debug_assert_eq!(h.len(), batch);
-        out.clear();
-        out.extend_from_slice(h);
+        h
     }
 }
 
@@ -427,6 +477,35 @@ mod tests {
             for _ in 0..2 {
                 m.forward_into(&flat, &x, batch, &mut ws, &mut got);
                 assert_eq!(got, want, "{pde}/{variant}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_reference_and_f32_track_forward() {
+        for (pde, variant) in [("bs", "tt"), ("hjb20", "tt"), ("burgers", "std")] {
+            let m = build_model(pde, variant, 2, None).unwrap();
+            let flat = m.init_flat(3);
+            let d = m.d_in();
+            let batch = 11;
+            let mut rng = Rng::new(13);
+            let mut x = vec![0.0; batch * d];
+            rng.fill_uniform(&mut x, 0.1, 0.9);
+            let want = m.forward(&flat, &x, batch, 1);
+            // old kernels: same math, different accumulation order
+            let old = m.forward_reference(&flat, &x, batch);
+            for (a, b) in old.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-11, "{pde}/{variant}: {a} vs {b}");
+            }
+            // f32 instantiation tracks to single precision
+            let flat32: Vec<f32> = flat.iter().map(|&v| v as f32).collect();
+            let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let mut ws = FwdScratchT::<f32>::default();
+            let mut got = Vec::new();
+            m.forward_into_s(&flat32, &x32, batch, &mut ws, &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                let rel = (*a as f64 - b).abs() / (1.0 + b.abs());
+                assert!(rel < 1e-3, "{pde}/{variant}: f32 {a} vs f64 {b}");
             }
         }
     }

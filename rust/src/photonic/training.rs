@@ -66,6 +66,9 @@ pub struct PhaseTrainConfig {
     /// TCP shard workers (`host:port`), one replica per entry; see
     /// [`crate::session::SessionBuilder::shard_hosts`].
     pub shard_hosts: Vec<String>,
+    /// Evaluation kernel precision; see
+    /// [`crate::session::SessionBuilder::eval_precision`].
+    pub eval_precision: crate::engine::EvalPrecision,
     /// Log a progress line at every eval epoch.
     pub verbose: bool,
 }
@@ -83,6 +86,7 @@ impl Default for PhaseTrainConfig {
             pipeline_depth: 1,
             shards: 0,
             shard_hosts: Vec::new(),
+            eval_precision: crate::engine::EvalPrecision::F64,
             verbose: false,
         }
     }

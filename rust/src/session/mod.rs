@@ -91,7 +91,7 @@ pub use crate::zo::trainer::History;
 
 use std::path::PathBuf;
 
-use crate::engine::{Engine, PendingLosses, ProbeBatch};
+use crate::engine::{Engine, EvalPrecision, PendingLosses, ProbeBatch};
 use crate::net::ParamEntry;
 use crate::optim::{Adam, Optimizer};
 use crate::pde::PointSet;
@@ -436,6 +436,7 @@ pub struct SessionBuilder {
     pipeline_depth: usize,
     shards: usize,
     shard_hosts: Vec<String>,
+    eval_precision: EvalPrecision,
     verbose: bool,
     tag: Option<String>,
     method: Option<(TrainMethod, Vec<ParamEntry>)>,
@@ -458,6 +459,7 @@ impl SessionBuilder {
             pipeline_depth: 1,
             shards: 0,
             shard_hosts: Vec::new(),
+            eval_precision: EvalPrecision::F64,
             verbose: false,
             tag: None,
             method: None,
@@ -524,6 +526,16 @@ impl SessionBuilder {
     /// logged warning — never a wrong or truncated loss vector.
     pub fn shard_hosts(mut self, hosts: Vec<String>) -> SessionBuilder {
         self.shard_hosts = hosts;
+        self
+    }
+
+    /// Evaluation kernel precision (default [`EvalPrecision::F64`]).
+    /// Applied to the engine before any shard wrapping, so replica specs
+    /// always carry the precision with them and every shard runs the
+    /// same kernels. See docs/ARCHITECTURE.md §Evaluation kernels for
+    /// the precision/determinism semantics.
+    pub fn eval_precision(mut self, precision: EvalPrecision) -> SessionBuilder {
+        self.eval_precision = precision;
         self
     }
 
@@ -654,6 +666,7 @@ impl SessionBuilder {
             pipeline_depth,
             shards,
             shard_hosts,
+            eval_precision,
             verbose,
             tag,
             method,
@@ -661,6 +674,9 @@ impl SessionBuilder {
             observer,
             checkpoint,
         } = self;
+        // Select the kernel precision before any shard wrapping, so the
+        // engine's refreshed replica spec carries it to every worker.
+        engine.set_eval_precision(eval_precision);
         let source: Box<dyn GradientSource> = match (source, method) {
             (Some(s), _) => s,
             (None, Some((m, layout))) => match m {
@@ -733,6 +749,7 @@ pub fn weight_session<'a>(engine: &'a mut dyn Engine, cfg: &TrainConfig) -> Resu
         .pipeline_depth(cfg.pipeline_depth)
         .shards(cfg.shards)
         .shard_hosts(cfg.shard_hosts.clone())
+        .eval_precision(cfg.eval_precision)
         .verbose(cfg.verbose)
         .gradient_source(source)
         .build(engine)
@@ -789,6 +806,7 @@ pub fn phase_session<'a>(
         .pipeline_depth(cfg.pipeline_depth)
         .shards(cfg.shards)
         .shard_hosts(cfg.shard_hosts.clone())
+        .eval_precision(cfg.eval_precision)
         .verbose(cfg.verbose)
         .tag(format!("{protocol:?}"))
         .gradient_source(source)

@@ -37,7 +37,9 @@ use std::time::Instant;
 use super::transport::{InProcessTransport, TcpTransport, Transport};
 use super::wire;
 use crate::coordinator::Metrics;
-use crate::engine::{Engine, EngineSpec, NativeEngine, PendingLosses, ProbeBatch, ShardStat};
+use crate::engine::{
+    Engine, EngineSpec, EvalPrecision, NativeEngine, PendingLosses, ProbeBatch, ShardStat,
+};
 use crate::pde::{Pde, PointSet};
 use crate::util::rng::Rng;
 use crate::{err, Error, Result};
@@ -345,6 +347,15 @@ impl<E: Engine> Engine for ShardedEngine<E> {
     fn set_probe_threads(&mut self, threads: usize) {
         self.local.set_probe_threads(threads);
         // keep replicas in step with the local engine's worker count
+        if let Some(spec) = self.local.replica_spec() {
+            self.spec = spec;
+        }
+    }
+
+    fn set_eval_precision(&mut self, precision: EvalPrecision) {
+        self.local.set_eval_precision(precision);
+        // replicas must run the same kernels as the local engine — a
+        // precision mismatch across shards would change the trajectory
         if let Some(spec) = self.local.replica_spec() {
             self.spec = spec;
         }

@@ -26,7 +26,7 @@
 
 use std::io::{Read, Write};
 
-use crate::engine::{EngineSpec, ProbeBatch, ProbeRows};
+use crate::engine::{EngineSpec, EvalPrecision, ProbeBatch, ProbeRows};
 use crate::loss::DerivMethod;
 use crate::pde::PointSet;
 use crate::{err, Result};
@@ -262,6 +262,11 @@ pub fn encode_spec(spec: &EngineSpec) -> Vec<u8> {
     put_u64(&mut buf, spec.se_seed);
     put_u64(&mut buf, spec.threads as u64);
     put_u64(&mut buf, spec.probe_threads as u64);
+    let precision = match spec.precision {
+        EvalPrecision::F64 => 0u8,
+        EvalPrecision::F32 => 1,
+    };
+    put_u8(&mut buf, precision);
     buf
 }
 
@@ -282,6 +287,11 @@ fn decode_spec(r: &mut Reader<'_>) -> Result<EngineSpec> {
         se_seed: r.get_u64()?,
         threads: r.get_usize()?,
         probe_threads: r.get_usize()?,
+        precision: match r.get_u8()? {
+            0 => EvalPrecision::F64,
+            1 => EvalPrecision::F32,
+            other => return Err(err(format!("shard wire: bad eval precision {other}"))),
+        },
     })
 }
 
@@ -456,6 +466,7 @@ mod tests {
             se_seed: rng.next_u64(),
             threads: rng.below(16),
             probe_threads: rng.below(16),
+            precision: if rng.below(2) == 0 { EvalPrecision::F64 } else { EvalPrecision::F32 },
         }
     }
 

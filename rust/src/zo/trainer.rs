@@ -8,7 +8,7 @@
 //! compiling; trajectories are bitwise-identical to the legacy loop
 //! (`rust/tests/session_parity.rs`).
 
-use crate::engine::Engine;
+use crate::engine::{Engine, EvalPrecision};
 use crate::net::ParamEntry;
 use crate::Result;
 
@@ -53,6 +53,9 @@ pub struct TrainConfig {
     /// TCP shard workers (`host:port`), one replica per entry; see
     /// [`crate::session::SessionBuilder::shard_hosts`].
     pub shard_hosts: Vec<String>,
+    /// Evaluation kernel precision; see
+    /// [`crate::session::SessionBuilder::eval_precision`].
+    pub eval_precision: EvalPrecision,
     /// Log a progress line at every eval epoch.
     pub verbose: bool,
 }
@@ -71,6 +74,7 @@ impl TrainConfig {
             pipeline_depth: 1,
             shards: 0,
             shard_hosts: Vec::new(),
+            eval_precision: EvalPrecision::F64,
             verbose: false,
         }
     }

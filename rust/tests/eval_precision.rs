@@ -1,0 +1,120 @@
+//! Fidelity and determinism contract of `--eval-precision f32`
+//! (docs/ARCHITECTURE.md §Evaluation kernels): the f32 kernels must track
+//! the f64 reference within a documented relative-error envelope, and
+//! every bitwise cross-config invariant (sequential-vs-batched,
+//! probe-thread count, shard count) must keep holding *within* the f32
+//! precision choice, exactly as it does at f64.
+
+use optical_pinn::engine::{Engine, EvalPrecision, NativeEngine, ProbeBatch};
+use optical_pinn::session;
+use optical_pinn::shard::{InProcessTransport, ShardedEngine, Transport};
+use optical_pinn::util::rng::Rng;
+use optical_pinn::zo::TrainConfig;
+
+/// A small deterministic probe batch around the init point.
+fn make_probes(params: &[f64], n_probes: usize) -> ProbeBatch {
+    let mut probes = ProbeBatch::with_capacity(params.len(), n_probes);
+    let mut rng = Rng::new(0xbeef);
+    for _ in 0..n_probes {
+        let row = probes.push_perturbed(params);
+        let i = rng.below(params.len());
+        row[i] += rng.uniform_in(-0.01, 0.01);
+    }
+    probes
+}
+
+/// The documented fidelity number: on both the paper BS fold and the
+/// catalog's 10-d Poisson problem the f32 loss tracks f64 to a relative
+/// error well under 1e-2 (observed ~1e-5..1e-4; the Stein contraction
+/// divides by the 1e-3 smoothing scale, which amplifies the ~1e-7 f32
+/// rounding of the forward by a few orders of magnitude). The bound here
+/// is the conservative envelope the contract promises, not the typical
+/// error.
+#[test]
+fn f32_loss_tracks_f64_within_documented_envelope() {
+    for (pde, variant) in [("bs", "tt"), ("poisson?d=10", "tt")] {
+        let mut eng = NativeEngine::new(pde, variant).unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(7);
+        let pts = eng.pde().sample_points(&mut rng);
+        let l64 = eng.loss(&params, &pts).unwrap();
+        eng.set_eval_precision(EvalPrecision::F32);
+        let l32 = eng.loss(&params, &pts).unwrap();
+        assert!(l32.is_finite(), "{pde}: f32 loss not finite");
+        let rel = (l32 - l64).abs() / l64.abs().max(1e-30);
+        println!("{pde}/{variant}: f64 loss {l64:.9e}, f32 loss {l32:.9e}, rel err {rel:.3e}");
+        assert!(rel < 1e-2, "{pde}: f32 drifted {rel:.3e} from f64 ({l32} vs {l64})");
+    }
+}
+
+/// Within the f32 precision choice, `loss_many` must stay bitwise equal
+/// to the sequential `loss` path at every probe-thread count — the same
+/// invariant `rust/tests/probe_batch.rs` pins for f64.
+#[test]
+fn f32_loss_many_bitwise_equals_sequential() {
+    for (pde, variant) in [("bs", "tt"), ("poisson?d=10", "tt")] {
+        let mut eng = NativeEngine::new(pde, variant).unwrap();
+        eng.set_eval_precision(EvalPrecision::F32);
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(7);
+        let pts = eng.pde().sample_points(&mut rng);
+        let probes = make_probes(&params, 4);
+        let want: Vec<f64> = (0..probes.n_probes())
+            .map(|i| eng.loss(probes.probe(i), &pts).unwrap())
+            .collect();
+        assert!(want.iter().all(|l| l.is_finite()), "{pde}");
+        for t in [1usize, 2, 8] {
+            eng.set_probe_threads(t);
+            let got = eng.loss_many(&probes, &pts).unwrap();
+            assert_eq!(got, want, "{pde}: f32 probe_threads = {t} diverged");
+        }
+    }
+}
+
+/// Sharded f32 evaluation must agree bitwise with the unsharded engine:
+/// the precision rides in the replica spec (and the wire codec), so every
+/// replica runs the same kernels as the local engine.
+#[test]
+fn f32_sharded_matches_unsharded_bitwise() {
+    let mut plain = NativeEngine::new("bs", "tt").unwrap();
+    plain.set_eval_precision(EvalPrecision::F32);
+    let params = plain.model.init_flat(0);
+    let mut rng = Rng::new(3);
+    let pts = plain.pde().sample_points(&mut rng);
+    let probes = make_probes(&params, 6);
+    let want = plain.loss_many(&probes, &pts).unwrap();
+    for shards in [1usize, 3] {
+        let replicas: Vec<Box<dyn Transport>> = (0..shards)
+            .map(|_| Box::new(InProcessTransport::new()) as Box<dyn Transport>)
+            .collect();
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let mut sharded = ShardedEngine::new(local, replicas).unwrap();
+        sharded.set_eval_precision(EvalPrecision::F32);
+        let got = sharded.loss_many(&probes, &pts).unwrap();
+        assert_eq!(got, want, "f32 diverged at {shards} shards");
+    }
+}
+
+/// End-to-end through the session driver: an f32 training run completes,
+/// stays finite, and its trajectory is independent of probe_threads —
+/// the probe-threads invariant holds within the precision choice.
+#[test]
+fn f32_trajectory_is_finite_and_thread_independent() {
+    let run = |probe_threads: usize| {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        eng.set_probe_threads(probe_threads);
+        let mut params = eng.model.init_flat(0);
+        let mut cfg = TrainConfig::zo(30);
+        cfg.layout = eng.model.param_layout();
+        cfg.eval_every = 10;
+        cfg.eval_precision = EvalPrecision::F32;
+        let hist = session::run_weight(&mut eng, &mut params, &cfg).unwrap();
+        (params, hist)
+    };
+    let (params1, hist1) = run(1);
+    assert!(hist1.final_error.is_finite());
+    assert!(hist1.losses.iter().all(|l| l.is_finite()));
+    let (params4, hist4) = run(4);
+    assert_eq!(params1, params4, "f32 final params diverged across probe threads");
+    assert_eq!(hist1.losses, hist4.losses, "f32 loss curve diverged across probe threads");
+}
