@@ -307,6 +307,146 @@ fn main() {
         }
     }
 
+    // 8. Elastic fleet ZO step: the same estimate with the replica set
+    //    resolved from a shared membership table on every dispatch
+    //    (1/2/4 in-process members), a mid-bench kill, and the
+    //    point-cloud digest cache's effect on steady-state wire bytes.
+    //    Speedups compare against section 7's 1-worker baseline shape,
+    //    re-measured here so the rows stand alone.
+    {
+        use optical_pinn::fleet::{FleetDirectory, MembershipTable, IN_PROCESS_MEMBER};
+        use std::sync::{Arc, Mutex};
+        use std::time::{Duration, Instant};
+
+        let (pde, variant) = ("bs", "tt");
+        let one_worker = || {
+            NativeEngine::with_options(
+                pde,
+                variant,
+                2,
+                None,
+                NativeOptions { probe_threads: 1, ..Default::default() },
+            )
+            .unwrap()
+        };
+        let mut eng = one_worker();
+        let params = eng.model.init_flat(0);
+        let layout = eng.model.param_layout();
+        let mut prng = Rng::new(2);
+        let pts = eng.pde().sample_points(&mut prng);
+        let mut est = RgeEstimator::new(RgeConfig::default(), params.len(), &layout);
+        let mut grad = vec![0.0; params.len()];
+        let probes = est.queries_per_step() as f64;
+        let iters = 10;
+        let mut rng = Rng::new(3);
+        let timing = bench("zo_step_fleet_seq", 1, iters, || {
+            est.estimate(&params, &mut grad, &mut rng, &mut |pb| eng.loss_many(pb, &pts))
+                .unwrap();
+        });
+        let seq_mean = timing.mean_s;
+        table.row(vec![
+            format!("zo_step {pde}/{variant} seq 1-worker fleet baseline ({probes:.0} probes)"),
+            format!("{:.2}", timing.per_iter_ms()),
+            format!("{:.1} probes/s", probes / timing.mean_s),
+        ]);
+        let fleet_table = |members: usize| {
+            let mut t = MembershipTable::new(Duration::from_secs(3600));
+            for i in 0..members {
+                let addr = if i == 0 {
+                    IN_PROCESS_MEMBER.to_string()
+                } else {
+                    format!("{IN_PROCESS_MEMBER}#{}", i + 1)
+                };
+                t.register(&addr, Instant::now());
+            }
+            Arc::new(Mutex::new(t))
+        };
+        for members in [1usize, 2, 4] {
+            let mut fleet = ShardedEngine::from_directory(
+                one_worker(),
+                FleetDirectory::shared(fleet_table(members)),
+            )
+            .unwrap();
+            let mut rng = Rng::new(3);
+            let timing = bench(&format!("zo_step_fleet_{members}"), 1, iters, || {
+                est.estimate(&params, &mut grad, &mut rng, &mut |pb| {
+                    fleet.loss_many(pb, &pts)
+                })
+                .unwrap();
+            });
+            table.row(vec![
+                format!("zo_step {pde}/{variant} fleet x{members}"),
+                format!("{:.2}", timing.per_iter_ms()),
+                format!(
+                    "{:.1} probes/s  ({:.2}x speedup)",
+                    probes / timing.mean_s,
+                    seq_mean / timing.mean_s
+                ),
+            ]);
+        }
+
+        // Mid-bench kill: start with two members, deregister one halfway
+        // through the timed loop. The uncovered rows fall back to the
+        // local engine; the run must stay never-wrong, just slower.
+        let shared = fleet_table(2);
+        let mut fleet =
+            ShardedEngine::from_directory(one_worker(), FleetDirectory::shared(shared.clone()))
+                .unwrap();
+        let mut rng = Rng::new(3);
+        let mut step = 0usize;
+        let timing = bench("zo_step_fleet_kill", 1, iters, || {
+            step += 1;
+            if step == iters / 2 {
+                shared.lock().unwrap().deregister(&format!("{IN_PROCESS_MEMBER}#2"));
+            }
+            est.estimate(&params, &mut grad, &mut rng, &mut |pb| {
+                fleet.loss_many(pb, &pts)
+            })
+            .unwrap();
+        });
+        table.row(vec![
+            format!("zo_step {pde}/{variant} fleet x2 mid-bench kill"),
+            format!("{:.2}", timing.per_iter_ms()),
+            format!(
+                "{:.1} probes/s  ({:.2}x speedup)",
+                probes / timing.mean_s,
+                seq_mean / timing.mean_s
+            ),
+        ]);
+
+        // Steady-state wire bytes: the first dispatch ships the full
+        // point cloud; subsequent ones ship a 16-byte digest per slot.
+        // Rows report tx bytes per step with the cache warm vs disabled.
+        let mut fleet = ShardedEngine::from_directory(
+            one_worker(),
+            FleetDirectory::shared(fleet_table(2)),
+        )
+        .unwrap();
+        let mut rng = Rng::new(3);
+        est.estimate(&params, &mut grad, &mut rng, &mut |pb| fleet.loss_many(pb, &pts))
+            .unwrap();
+        let (cold_tx, _) = fleet.wire_bytes();
+        est.estimate(&params, &mut grad, &mut rng, &mut |pb| fleet.loss_many(pb, &pts))
+            .unwrap();
+        let (warm_tx, _) = fleet.wire_bytes();
+        fleet.set_point_cache(false);
+        est.estimate(&params, &mut grad, &mut rng, &mut |pb| fleet.loss_many(pb, &pts))
+            .unwrap();
+        let (off_tx, _) = fleet.wire_bytes();
+        let warm_step = warm_tx - cold_tx;
+        let off_step = off_tx - warm_tx;
+        table.row(vec![
+            format!("zo_step {pde}/{variant} fleet x2 wire tx/step"),
+            String::new(),
+            format!(
+                "{:.1} KiB cached vs {:.1} KiB uncached ({:.1}x less)",
+                warm_step as f64 / 1024.0,
+                off_step as f64 / 1024.0,
+                off_step as f64 / warm_step.max(1) as f64
+            ),
+        ]);
+    }
+
     table.print();
     record("hotpath", table.to_json());
     write_repo_root_record(&table);

@@ -51,6 +51,10 @@ pub struct ExperimentConfig {
     /// processes), one engine replica per entry; an unreachable worker
     /// degrades to local evaluation with a logged warning.
     pub shard_hosts: Vec<String>,
+    /// Elastic fleet mode (`--registry host:port`): resolve the replica
+    /// set from an `opinn registry` every step instead of wiring it
+    /// statically. Mutually exclusive with `shards`/`shard_hosts`.
+    pub registry: Option<String>,
     /// Evaluation kernel precision (`--eval-precision f64|f32`). The f32
     /// kernel set is native-backend only; losses are still composed and
     /// returned as f64. Part of the engine replica spec, so sharded
@@ -81,6 +85,7 @@ impl Default for ExperimentConfig {
             pipeline_depth: 1,
             shards: 0,
             shard_hosts: Vec::new(),
+            registry: None,
             eval_precision: EvalPrecision::F64,
             verbose: false,
         }
@@ -136,6 +141,7 @@ impl ExperimentConfig {
                         .map(|h| Ok(h.as_str()?.to_string()))
                         .collect::<Result<Vec<_>>>()?
                 }
+                "registry" => c.registry = Some(v.as_str()?.to_string()),
                 "eval_precision" => c.eval_precision = EvalPrecision::parse(v.as_str()?)?,
                 "verbose" => c.verbose = matches!(v, Json::Bool(true)),
                 other => return Err(Error::Config(format!("unknown config key {other:?}"))),
@@ -195,6 +201,9 @@ impl ExperimentConfig {
                 .map(str::to_string)
                 .collect();
         }
+        if let Some(r) = args.get("registry") {
+            self.registry = Some(r.to_string());
+        }
         if let Some(p) = args.get("eval-precision") {
             self.eval_precision = EvalPrecision::parse(p)?;
         }
@@ -237,6 +246,13 @@ impl ExperimentConfig {
                 self.shard_hosts.len()
             )));
         }
+        if self.registry.is_some() && (self.shards > 0 || !self.shard_hosts.is_empty()) {
+            return Err(Error::Config(
+                "registry (elastic fleet) and shards/shard_hosts (static replica set) \
+                 are mutually exclusive"
+                    .into(),
+            ));
+        }
         if self.eval_precision == EvalPrecision::F32 && self.backend != "native" {
             return Err(Error::Config(
                 "--eval-precision f32 requires --backend native (the PJRT \
@@ -269,6 +285,10 @@ mod tests {
         assert_eq!(c.max_forwards, Some(9000));
         assert_eq!(c.shards, 2);
         assert_eq!(c.shard_hosts, vec!["10.0.0.1:7001", "10.0.0.2:7001"]);
+        let jr = Json::parse(r#"{"registry":"10.0.0.9:7171"}"#).unwrap();
+        let cr = ExperimentConfig::from_json(&jr).unwrap();
+        assert_eq!(cr.registry.as_deref(), Some("10.0.0.9:7171"));
+        cr.validate().unwrap();
         // first token is the subcommand (as in `opinn train burgers tt ...`)
         let args = Args::parse(
             [
@@ -346,6 +366,15 @@ mod tests {
         c4.shards = 1;
         c4.shard_hosts = vec!["a:1".into(), "b:2".into()];
         assert!(c4.validate().is_err());
+        // elastic and static sharding cannot be combined
+        let mut c6 = ExperimentConfig::default();
+        c6.registry = Some("127.0.0.1:7171".into());
+        c6.validate().unwrap();
+        c6.shards = 2;
+        assert!(c6.validate().is_err());
+        c6.shards = 0;
+        c6.shard_hosts = vec!["a:1".into()];
+        assert!(c6.validate().is_err());
         // f32 kernels exist only in the native engine
         let mut c5 = ExperimentConfig::default();
         c5.eval_precision = EvalPrecision::F32;

@@ -1,0 +1,265 @@
+//! Client side of the fleet: the registry RPC wrapper, the worker's
+//! background [`Heartbeater`], and the [`FleetDirectory`] a dispatcher
+//! resolves its replica set from.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::membership::MembershipTable;
+use crate::shard::wire::{self, RegistryReply, RegistryRequest};
+use crate::shard::{TcpTransport, Transport};
+use crate::{err, Result};
+
+/// Member address the dispatcher treats as a local in-process replica
+/// instead of a TCP worker. Lets tests, benches and single-host
+/// scale-up run a fleet without sockets: seed the membership table with
+/// this address as many times as you want local replicas (suffixed to
+/// stay unique, e.g. `in-process#2`).
+pub const IN_PROCESS_MEMBER: &str = "in-process";
+
+/// True when `addr` names an in-process replica rather than a TCP
+/// endpoint (the bare [`IN_PROCESS_MEMBER`] or any `#`-suffixed copy).
+pub fn is_in_process(addr: &str) -> bool {
+    addr == IN_PROCESS_MEMBER || addr.starts_with("in-process#")
+}
+
+/// A blocking RPC client to one `opinn registry`, lazily (re)connected
+/// through the same [`TcpTransport`] the shard slots use — a registry
+/// that restarts is picked up on the next call.
+pub struct RegistryClient {
+    transport: TcpTransport,
+}
+
+impl RegistryClient {
+    /// A client for the registry at `addr` (`host:port`); connects on
+    /// first use.
+    pub fn new(addr: impl Into<String>) -> RegistryClient {
+        RegistryClient { transport: TcpTransport::new(addr) }
+    }
+
+    /// Endpoint label for logs (`tcp://host:port`).
+    pub fn label(&self) -> String {
+        self.transport.label()
+    }
+
+    fn call(&mut self, req: &RegistryRequest) -> Result<RegistryReply> {
+        let reply = self.transport.round_trip(&wire::encode_registry_request(req))?;
+        wire::decode_registry_reply(&reply)
+    }
+
+    fn ack(&mut self, req: RegistryRequest) -> Result<bool> {
+        match self.call(&req)? {
+            RegistryReply::Ack(known) => Ok(known),
+            RegistryReply::Members(_) => Err(err("registry: expected an ack, got members")),
+        }
+    }
+
+    /// Register `member` (`host:port`). Returns whether it was already
+    /// known.
+    pub fn register(&mut self, member: &str) -> Result<bool> {
+        self.ack(RegistryRequest::Register(member.to_string()))
+    }
+
+    /// Heartbeat `member`. Returns whether it was already known (`false`
+    /// means the registry had forgotten it and this call re-registered).
+    pub fn heartbeat(&mut self, member: &str) -> Result<bool> {
+        self.ack(RegistryRequest::Heartbeat(member.to_string()))
+    }
+
+    /// Deregister `member`. Returns whether it was present.
+    pub fn deregister(&mut self, member: &str) -> Result<bool> {
+        self.ack(RegistryRequest::Deregister(member.to_string()))
+    }
+
+    /// The current live membership, oldest join first.
+    pub fn resolve(&mut self) -> Result<Vec<String>> {
+        match self.call(&RegistryRequest::Resolve)? {
+            RegistryReply::Members(members) => Ok(members),
+            RegistryReply::Ack(_) => Err(err("registry: expected members, got an ack")),
+        }
+    }
+}
+
+/// A background thread keeping one worker endpoint registered and live:
+/// register on start, heartbeat every interval, best-effort deregister
+/// on [`Heartbeater::stop`]. Heartbeat failures are logged and retried
+/// forever — the worker keeps serving; the registry declaring it dead
+/// is the dispatcher's problem (it stops routing there), and the next
+/// successful heartbeat re-registers it.
+pub struct Heartbeater {
+    stop: Arc<AtomicBool>,
+    graceful: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Heartbeater {
+    /// Register `member` with the registry at `registry_addr` and keep
+    /// it alive with heartbeats every `interval`.
+    pub fn spawn(registry_addr: &str, member: &str, interval: Duration) -> Heartbeater {
+        let stop = Arc::new(AtomicBool::new(false));
+        let graceful = Arc::new(AtomicBool::new(true));
+        let stop_flag = stop.clone();
+        let graceful_flag = graceful.clone();
+        let registry_addr = registry_addr.to_string();
+        let member = member.to_string();
+        let handle = std::thread::spawn(move || {
+            let mut client = RegistryClient::new(registry_addr.clone());
+            match client.register(&member) {
+                Ok(_) => eprintln!("shard-worker: registered {member} with {registry_addr}"),
+                Err(e) => eprintln!(
+                    "shard-worker: register with {registry_addr} failed ({e}); heartbeats will keep trying"
+                ),
+            }
+            while !stop_flag.load(Ordering::Relaxed) {
+                // sleep in short slices so stop() stays prompt even with
+                // multi-second heartbeat intervals
+                let mut slept = Duration::ZERO;
+                while slept < interval && !stop_flag.load(Ordering::Relaxed) {
+                    let slice = (interval - slept).min(Duration::from_millis(20));
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+                if stop_flag.load(Ordering::Relaxed) {
+                    break;
+                }
+                if let Err(e) = client.heartbeat(&member) {
+                    eprintln!("shard-worker: heartbeat to {registry_addr} failed ({e}); retrying");
+                }
+            }
+            if graceful_flag.load(Ordering::Relaxed) {
+                let _ = client.deregister(&member);
+            }
+        });
+        Heartbeater { stop, graceful, handle: Some(handle) }
+    }
+
+    /// Stop heartbeating, best-effort deregister, and join the thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    /// Stop heartbeating WITHOUT deregistering — the member lapses via
+    /// its TTL exactly as if the worker had crashed. Exists for churn
+    /// tests; production shutdown wants [`Heartbeater::stop`].
+    pub fn abandon(mut self) {
+        self.graceful.store(false, Ordering::Relaxed);
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Heartbeater {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Where a dispatcher learns the live replica set each step.
+pub enum FleetDirectory {
+    /// Resolve from an `opinn registry` over TCP.
+    Registry(RegistryClient),
+    /// Share a [`MembershipTable`] in-process (tests, benches,
+    /// single-process scale-up) — same semantics, no sockets.
+    Shared(Arc<Mutex<MembershipTable>>),
+}
+
+impl FleetDirectory {
+    /// A directory backed by the registry at `addr`.
+    pub fn registry(addr: impl Into<String>) -> FleetDirectory {
+        FleetDirectory::Registry(RegistryClient::new(addr))
+    }
+
+    /// A directory sharing `table` in-process.
+    pub fn shared(table: Arc<Mutex<MembershipTable>>) -> FleetDirectory {
+        FleetDirectory::Shared(table)
+    }
+
+    /// The live member addresses, oldest join first.
+    pub fn resolve(&mut self) -> Result<Vec<String>> {
+        match self {
+            FleetDirectory::Registry(client) => client.resolve(),
+            FleetDirectory::Shared(table) => {
+                Ok(table.lock().expect("membership lock").live(Instant::now()))
+            }
+        }
+    }
+
+    /// Human-readable source label for logs.
+    pub fn label(&self) -> String {
+        match self {
+            FleetDirectory::Registry(client) => client.label(),
+            FleetDirectory::Shared(_) => "shared-table".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::registry::{FleetConfig, Registry};
+
+    #[test]
+    fn in_process_members_are_recognized() {
+        assert!(is_in_process("in-process"));
+        assert!(is_in_process("in-process#3"));
+        assert!(!is_in_process("10.0.0.1:7171"));
+        assert!(!is_in_process("in-processor:1"));
+    }
+
+    #[test]
+    fn client_round_trips_against_a_live_registry() {
+        let registry = Registry::bind("127.0.0.1:0", FleetConfig::default()).unwrap();
+        let addr = registry.local_addr().unwrap().to_string();
+        std::thread::spawn(move || registry.serve_forever());
+
+        let mut client = RegistryClient::new(addr);
+        assert!(!client.register("w:1").unwrap());
+        assert!(client.heartbeat("w:1").unwrap());
+        assert!(!client.heartbeat("w:2").unwrap(), "heartbeat upserts");
+        assert_eq!(client.resolve().unwrap(), vec!["w:1".to_string(), "w:2".to_string()]);
+        assert!(client.deregister("w:1").unwrap());
+        assert_eq!(client.resolve().unwrap(), vec!["w:2".to_string()]);
+    }
+
+    #[test]
+    fn unreachable_registry_errors_cleanly() {
+        let mut client = RegistryClient::new("127.0.0.1:1");
+        assert!(client.resolve().is_err());
+        let mut dir = FleetDirectory::registry("127.0.0.1:1");
+        assert!(dir.resolve().is_err());
+    }
+
+    #[test]
+    fn heartbeater_registers_heartbeats_and_deregisters() {
+        let registry = Registry::bind("127.0.0.1:0", FleetConfig::default()).unwrap();
+        let addr = registry.local_addr().unwrap().to_string();
+        let table = registry.table();
+        std::thread::spawn(move || registry.serve_forever());
+
+        let hb = Heartbeater::spawn(&addr, "w:9", Duration::from_millis(10));
+        // wait for the registration to land (bounded spin, no fixed sleep)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while table.lock().unwrap().is_empty() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(table.lock().unwrap().len(), 1, "heartbeater registered");
+        hb.stop();
+        assert!(table.lock().unwrap().is_empty(), "graceful stop deregisters");
+
+        // an abandoned heartbeater leaves the member to lapse via TTL
+        let hb = Heartbeater::spawn(&addr, "w:10", Duration::from_millis(10));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while table.lock().unwrap().is_empty() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        hb.abandon();
+        assert_eq!(table.lock().unwrap().len(), 1, "abandon leaves the member registered");
+    }
+}

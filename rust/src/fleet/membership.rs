@@ -1,0 +1,159 @@
+//! TTL-based fleet membership: which worker endpoints are alive, in
+//! stable join order.
+//!
+//! The table is deliberately passive — no timer thread. Every operation
+//! takes the caller's `now` ([`std::time::Instant`], monotonic, immune
+//! to wall-clock steps), and expiry happens by pruning on access. That
+//! keeps the table trivially testable with fabricated clocks and means
+//! an idle registry does no work.
+
+use std::time::{Duration, Instant};
+
+/// One tracked worker endpoint.
+struct Member {
+    addr: String,
+    deadline: Instant,
+}
+
+/// The registry's view of the fleet: endpoints with liveness deadlines.
+///
+/// A member is live until `ttl` after its last register/heartbeat;
+/// [`MembershipTable::prune`] drops everyone whose deadline has passed.
+/// Join order is preserved across heartbeats (a refresh never reorders),
+/// so [`MembershipTable::live`] gives every dispatcher the same stable
+/// ordering — which keeps shard labels meaningful across steps.
+pub struct MembershipTable {
+    members: Vec<Member>,
+    ttl: Duration,
+}
+
+impl MembershipTable {
+    /// An empty table whose members stay live for `ttl` past their last
+    /// register/heartbeat.
+    pub fn new(ttl: Duration) -> MembershipTable {
+        MembershipTable { members: Vec::new(), ttl }
+    }
+
+    /// The liveness window members must heartbeat within.
+    pub fn ttl(&self) -> Duration {
+        self.ttl
+    }
+
+    /// Add `addr` (at the back of the join order) or refresh its
+    /// deadline if already present. Returns `true` when the endpoint
+    /// was already known.
+    pub fn register(&mut self, addr: &str, now: Instant) -> bool {
+        let deadline = now + self.ttl;
+        match self.members.iter_mut().find(|m| m.addr == addr) {
+            Some(m) => {
+                m.deadline = deadline;
+                true
+            }
+            None => {
+                self.members.push(Member { addr: addr.to_string(), deadline });
+                false
+            }
+        }
+    }
+
+    /// Refresh `addr`'s deadline, upserting when unknown — so a
+    /// restarted registry re-learns its whole fleet from heartbeats
+    /// alone, without workers noticing. Returns `true` when the
+    /// endpoint was already known.
+    pub fn heartbeat(&mut self, addr: &str, now: Instant) -> bool {
+        self.register(addr, now)
+    }
+
+    /// Remove `addr` immediately (graceful worker shutdown). Returns
+    /// `true` when it was present.
+    pub fn deregister(&mut self, addr: &str) -> bool {
+        let before = self.members.len();
+        self.members.retain(|m| m.addr != addr);
+        self.members.len() != before
+    }
+
+    /// Drop every member whose deadline has passed, returning the
+    /// expired addresses so the caller can log them.
+    pub fn prune(&mut self, now: Instant) -> Vec<String> {
+        let mut expired = Vec::new();
+        self.members.retain(|m| {
+            if now >= m.deadline {
+                expired.push(m.addr.clone());
+                false
+            } else {
+                true
+            }
+        });
+        expired
+    }
+
+    /// The live member addresses (pruning first), oldest join first.
+    pub fn live(&mut self, now: Instant) -> Vec<String> {
+        self.prune(now);
+        self.members.iter().map(|m| m.addr.clone()).collect()
+    }
+
+    /// Number of tracked (not necessarily still-live) members.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// True when no members are tracked.
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn register_heartbeat_and_join_order() {
+        let mut t = MembershipTable::new(100 * MS);
+        let t0 = Instant::now();
+        assert!(!t.register("a:1", t0), "first register is new");
+        assert!(!t.register("b:2", t0 + MS));
+        assert!(t.heartbeat("a:1", t0 + 2 * MS), "heartbeat of a known member");
+        // refreshing must not reorder: a joined first, stays first
+        assert_eq!(t.live(t0 + 3 * MS), vec!["a:1".to_string(), "b:2".to_string()]);
+        assert!(!t.heartbeat("c:3", t0 + 3 * MS), "heartbeat upserts unknown members");
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn members_expire_exactly_at_their_deadline() {
+        let mut t = MembershipTable::new(100 * MS);
+        let t0 = Instant::now();
+        t.register("a:1", t0);
+        assert_eq!(t.live(t0 + 99 * MS).len(), 1, "inside the TTL");
+        let mut t2 = MembershipTable::new(100 * MS);
+        t2.register("a:1", t0);
+        assert_eq!(t2.prune(t0 + 100 * MS), vec!["a:1".to_string()], "at the deadline");
+        assert!(t2.is_empty());
+    }
+
+    #[test]
+    fn heartbeats_extend_the_deadline() {
+        let mut t = MembershipTable::new(100 * MS);
+        let t0 = Instant::now();
+        t.register("a:1", t0);
+        t.heartbeat("a:1", t0 + 80 * MS);
+        assert_eq!(t.live(t0 + 150 * MS).len(), 1, "refreshed deadline holds");
+        assert!(t.live(t0 + 180 * MS).is_empty(), "until it lapses too");
+    }
+
+    #[test]
+    fn deregister_is_immediate_and_rejoin_moves_to_the_back() {
+        let mut t = MembershipTable::new(100 * MS);
+        let t0 = Instant::now();
+        t.register("a:1", t0);
+        t.register("b:2", t0);
+        assert!(t.deregister("a:1"));
+        assert!(!t.deregister("a:1"), "double deregister reports absence");
+        t.register("a:1", t0 + MS);
+        assert_eq!(t.live(t0 + 2 * MS), vec!["b:2".to_string(), "a:1".to_string()]);
+    }
+}

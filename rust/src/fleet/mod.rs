@@ -1,0 +1,50 @@
+//! Worker fleet: service discovery and TTL liveness for elastic probe
+//! sharding.
+//!
+//! The static `--shard-hosts` mode wires a replica set at session start
+//! and keeps it for the whole run. This module is the elastic
+//! alternative: a zero-dependency registry daemon
+//! (`opinn registry --listen <addr>`) tracks `shard-worker` endpoints,
+//! workers announce themselves (`shard-worker --registry <addr>`) and
+//! heartbeat on a background thread, and the dispatcher re-resolves the
+//! live set every step — so workers can join, leave and crash mid-run
+//! and sharding degrades instead of failing.
+//!
+//! ```text
+//!   shard-worker ──register/heartbeat──▶ opinn registry
+//!   shard-worker ──register/heartbeat──▶   (MembershipTable,
+//!                                           TTL = heartbeat × budget)
+//!                                              ▲
+//!   trainer (ShardedEngine) ──resolve, 1/step──┘
+//!            │
+//!            └──▶ eval requests to the live workers (work-stealing
+//!                 chunks; failed or missing rows fall back to local)
+//! ```
+//!
+//! The pieces:
+//!
+//! * [`membership`] — the passive [`MembershipTable`] with
+//!   monotonic-clock deadlines and prune-on-access expiry;
+//! * [`registry`] — [`FleetConfig`] (heartbeat interval × miss budget)
+//!   and the [`Registry`] TCP daemon;
+//! * [`client`] — [`RegistryClient`] RPCs, the worker-side
+//!   [`Heartbeater`], and the [`FleetDirectory`] a
+//!   [`ShardedEngine`](crate::shard::ShardedEngine) resolves its
+//!   replica set from (TCP registry or in-process shared table).
+//!
+//! Determinism: losses are row-wise independent and every replica is
+//! built from the same [`replica_spec`](crate::engine::Engine::replica_spec),
+//! so *any* assignment of rows to live workers — including
+//! timing-dependent work stealing and mid-run churn — assembles the
+//! same loss vector bitwise. That contract is pinned end-to-end by
+//! `rust/tests/fleet_parity.rs`.
+
+#![deny(missing_docs)]
+
+pub mod client;
+pub mod membership;
+pub mod registry;
+
+pub use client::{is_in_process, FleetDirectory, Heartbeater, RegistryClient, IN_PROCESS_MEMBER};
+pub use membership::MembershipTable;
+pub use registry::{FleetConfig, Registry};

@@ -1,0 +1,205 @@
+//! The fleet registry daemon behind `opinn registry --listen <addr>`.
+//!
+//! A registry is a [`MembershipTable`] served over the shard wire
+//! protocol (tags 16..=21 of [`crate::shard::wire`]): workers register
+//! and heartbeat, dispatchers resolve. Liveness is pure TTL — a member
+//! stays live for `heartbeat × miss_budget` past its last
+//! register/heartbeat, measured on the monotonic clock, and expires by
+//! being pruned on the next request that observes the lapse. There is
+//! no gossip, no leader, no persistence: a restarted registry re-learns
+//! its fleet from the next round of heartbeats.
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::membership::MembershipTable;
+use crate::shard::wire::{self, RegistryReply, RegistryRequest};
+use crate::Result;
+
+/// Heartbeat cadence and miss tolerance shared by workers and the
+/// registry. The TTL is their product: a worker may miss
+/// `miss_budget - 1` consecutive heartbeats before it is declared dead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// How often a worker heartbeats its registry.
+    pub heartbeat: Duration,
+    /// How many heartbeat intervals may elapse without contact before a
+    /// member expires.
+    pub miss_budget: u32,
+}
+
+impl Default for FleetConfig {
+    /// 2 s heartbeats with a budget of 3 → a crashed worker is dropped
+    /// within 6 s, while one slow GC pause or dropped packet is
+    /// forgiven.
+    fn default() -> FleetConfig {
+        FleetConfig { heartbeat: Duration::from_secs(2), miss_budget: 3 }
+    }
+}
+
+impl FleetConfig {
+    /// The liveness window: `heartbeat × miss_budget` (budget clamped to
+    /// at least 1 so a zero budget cannot make every member dead on
+    /// arrival).
+    pub fn ttl(&self) -> Duration {
+        self.heartbeat * self.miss_budget.max(1)
+    }
+}
+
+/// A TCP registry bound to a listen address.
+pub struct Registry {
+    listener: TcpListener,
+    table: Arc<Mutex<MembershipTable>>,
+}
+
+impl Registry {
+    /// Bind to `addr` (e.g. `127.0.0.1:0` for an ephemeral test port).
+    pub fn bind(addr: &str, config: FleetConfig) -> Result<Registry> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| crate::err(format!("registry: cannot resolve {addr:?}")))?;
+        Ok(Registry {
+            listener: TcpListener::bind(addr)?,
+            table: Arc::new(Mutex::new(MembershipTable::new(config.ttl()))),
+        })
+    }
+
+    /// The actually-bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// The shared membership table — lets tests and in-process fleets
+    /// observe or drive membership without a socket.
+    pub fn table(&self) -> Arc<Mutex<MembershipTable>> {
+        self.table.clone()
+    }
+
+    /// Accept connections forever, serving each on its own thread until
+    /// the client sends EOF. Transient accept errors are logged and
+    /// survived, mirroring the shard worker's accept loop.
+    pub fn serve_forever(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    let table = self.table.clone();
+                    std::thread::spawn(move || serve_connection(s, table));
+                }
+                Err(e) => {
+                    eprintln!("registry: accept failed ({e}); continuing");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Apply one registry request to the membership table, pruning expired
+/// members first so every reply reflects current liveness.
+pub fn handle_registry_request(
+    req: &RegistryRequest,
+    table: &Mutex<MembershipTable>,
+) -> RegistryReply {
+    let now = Instant::now();
+    let mut t = table.lock().expect("registry membership lock");
+    for addr in t.prune(now) {
+        eprintln!("registry: {addr} missed its heartbeat budget; dropped");
+    }
+    match req {
+        RegistryRequest::Register(addr) => {
+            let known = t.register(addr, now);
+            if !known {
+                eprintln!("registry: {addr} joined");
+            }
+            RegistryReply::Ack(known)
+        }
+        RegistryRequest::Heartbeat(addr) => {
+            let known = t.heartbeat(addr, now);
+            if !known {
+                eprintln!("registry: {addr} joined via heartbeat");
+            }
+            RegistryReply::Ack(known)
+        }
+        RegistryRequest::Deregister(addr) => {
+            let known = t.deregister(addr);
+            if known {
+                eprintln!("registry: {addr} left");
+            }
+            RegistryReply::Ack(known)
+        }
+        RegistryRequest::Resolve => RegistryReply::Members(t.live(now)),
+    }
+}
+
+/// Serve one client connection: read registry frames, apply, reply —
+/// until clean EOF. A malformed frame ends the connection (the registry
+/// protocol has no error reply; a confused client should reconnect).
+pub fn serve_connection(mut stream: TcpStream, table: Arc<Mutex<MembershipTable>>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(crate::shard::worker::IDLE_TIMEOUT));
+    loop {
+        let payload = match wire::read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) | Err(_) => return,
+        };
+        let req = match wire::decode_registry_request(&payload) {
+            Ok(req) => req,
+            Err(e) => {
+                eprintln!("registry: malformed request ({e}); closing connection");
+                return;
+            }
+        };
+        let reply = handle_registry_request(&req, &table);
+        if wire::write_frame(&mut stream, &wire::encode_registry_reply(&reply)).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_ttl_is_heartbeat_times_budget() {
+        let cfg = FleetConfig::default();
+        assert_eq!(cfg.ttl(), cfg.heartbeat * cfg.miss_budget);
+        let zero = FleetConfig { heartbeat: Duration::from_secs(1), miss_budget: 0 };
+        assert_eq!(zero.ttl(), Duration::from_secs(1), "zero budget clamps to one interval");
+    }
+
+    #[test]
+    fn handle_covers_the_full_request_surface() {
+        let table = Mutex::new(MembershipTable::new(Duration::from_secs(60)));
+        let reg = |a: &str| RegistryRequest::Register(a.to_string());
+        assert_eq!(handle_registry_request(&reg("a:1"), &table), RegistryReply::Ack(false));
+        assert_eq!(handle_registry_request(&reg("a:1"), &table), RegistryReply::Ack(true));
+        assert_eq!(
+            handle_registry_request(&RegistryRequest::Heartbeat("b:2".into()), &table),
+            RegistryReply::Ack(false),
+            "heartbeat upserts"
+        );
+        assert_eq!(
+            handle_registry_request(&RegistryRequest::Resolve, &table),
+            RegistryReply::Members(vec!["a:1".into(), "b:2".into()])
+        );
+        assert_eq!(
+            handle_registry_request(&RegistryRequest::Deregister("a:1".into()), &table),
+            RegistryReply::Ack(true)
+        );
+        assert_eq!(
+            handle_registry_request(&RegistryRequest::Resolve, &table),
+            RegistryReply::Members(vec!["b:2".into()])
+        );
+    }
+
+    #[test]
+    fn bind_resolves_ephemeral_ports() {
+        let reg = Registry::bind("127.0.0.1:0", FleetConfig::default()).unwrap();
+        assert_ne!(reg.local_addr().unwrap().port(), 0);
+        assert!(reg.table().lock().unwrap().is_empty());
+    }
+}

@@ -35,6 +35,9 @@
 //! * [`shard`] — multi-engine probe sharding: fan one `ProbeBatch`
 //!   across engine replicas (in-process or TCP `opinn shard-worker`s)
 //!   behind the same `Engine` trait;
+//! * [`fleet`] — elastic worker fleets: the `opinn registry` discovery
+//!   daemon with TTL heartbeat liveness, and the per-step membership
+//!   resolution that lets workers join, leave and crash mid-run;
 //! * [`photonic`] — MZI meshes, non-idealities, TONN cores, on-chip
 //!   training protocols (FLOPS, L²ight, ours);
 //! * [`mnist`] — the App. G classifier workload + its session engine
@@ -167,6 +170,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod experiments;
+pub mod fleet;
 pub mod hw;
 pub mod linalg;
 pub mod loss;

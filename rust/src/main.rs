@@ -4,6 +4,8 @@
 //!   train        weight-domain training (FO via AOT grad / BP-free ZO)
 //!   train-phase  photonic phase-domain training (flops|l2ight|ours)
 //!   shard-worker host an engine replica serving probe ranges over TCP
+//!   registry     fleet discovery daemon: shard-workers register and
+//!                heartbeat, training sessions resolve the live set
 //!   tables       regenerate a paper table/figure (t1 t2 t3 t456 fig3
 //!                ablations mnist)
 //!   hw-report    print the pre-silicon footprint/latency model
@@ -30,6 +32,7 @@ use optical_pinn::config::ExperimentConfig;
 use optical_pinn::coordinator::{save_params, Metrics};
 use optical_pinn::engine::Engine;
 use optical_pinn::experiments::{self, Backend, RunSpec};
+use optical_pinn::fleet::{FleetConfig, Heartbeater, Registry};
 use optical_pinn::hw;
 use optical_pinn::mnist;
 use optical_pinn::net::build_model;
@@ -66,6 +69,7 @@ fn run(args: &Args) -> Result<()> {
         Some("train") => cmd_train(args),
         Some("train-phase") => cmd_train_phase(args),
         Some("shard-worker") => cmd_shard_worker(args),
+        Some("registry") => cmd_registry(args),
         Some("tables") => cmd_tables(args),
         Some("hw-report") => cmd_hw_report(args),
         Some("info") => cmd_info(args),
@@ -105,21 +109,31 @@ fn help() -> String {
     out
 }
 
-const HELP: &str = "usage: opinn <train|train-phase|shard-worker|tables|hw-report|info> [options]
+const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables|hw-report|info> [options]
   train <problem> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
         [--lr F] [--seed N] [--rank N] [--width N] [--mu F] [--queries N]
         [--eval-every N] [--max-forwards N] [--backend pjrt|native]
         [--probe-threads N] [--pipeline-depth 1|2] [--shards N]
-        [--shard-hosts H1,H2,...] [--eval-precision f64|f32] [--verbose]
+        [--shard-hosts H1,H2,...] [--registry ADDR]
+        [--eval-precision f64|f32] [--verbose]
         [--out ckpt.json] [--ckpt-every N] [--curve curve.csv]
   train-phase <problem> [--protocol ours|flops|l2ight] [--epochs N] [--lr F]
         [--seed N] [--mu F] [--queries N] [--eval-every N]
         [--max-forwards N] [--backend pjrt|native] [--probe-threads N]
         [--pipeline-depth 1|2] [--shards N] [--shard-hosts H1,H2,...]
-        [--eval-precision f64|f32] [--verbose] [--out phases.json]
-  shard-worker [--listen ADDR]   host an engine replica; serves probe
-        ranges to sharded sessions until each client disconnects
-        (default ADDR 127.0.0.1:7171)
+        [--registry ADDR] [--eval-precision f64|f32] [--verbose]
+        [--out phases.json]
+  shard-worker [--listen ADDR] [--registry ADDR] [--advertise ADDR]
+        host an engine replica; serves probe ranges to sharded sessions
+        until each client disconnects (default ADDR 127.0.0.1:7171).
+        With --registry: register + heartbeat the worker so elastic
+        sessions discover it (--advertise overrides the announced
+        address when workers sit behind NAT/port maps)
+  registry [--listen ADDR] [--heartbeat-secs N] [--miss-budget N]
+        fleet discovery daemon (default ADDR 127.0.0.1:7271): workers
+        register and heartbeat, sessions resolve the live set each
+        step; a member that misses its heartbeat budget (default 2 s
+        x 3) is dropped until it re-registers
   tables <t1|t2|t3|t456|fig3|tt_rank|width|grid|mc_samples|sg_level|sigma|mu|queries|mnist>
   hw-report [--epochs N]
   info
@@ -142,6 +156,11 @@ options:
   --shard-hosts LIST comma-separated host:port of running
                      `opinn shard-worker`s; unreachable workers degrade
                      to local evaluation with a logged warning
+  --registry ADDR    elastic fleet mode: resolve the replica set from
+                     the `opinn registry` at ADDR every step, so
+                     workers join/leave/crash mid-run (mutually
+                     exclusive with --shards/--shard-hosts; zero
+                     registered workers trains locally)
   --eval-precision P evaluation kernel precision: f64 (default, bitwise-
                      reference) or f32 (native backend only; ~2x packed
                      kernel throughput, losses still returned as f64)
@@ -189,6 +208,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .pipeline_depth(cfg.pipeline_depth)
         .shards(cfg.shards)
         .shard_hosts(cfg.shard_hosts.clone())
+        .registry(cfg.registry.clone())
         .eval_precision(cfg.eval_precision)
         .verbose(true)
         .method(method, model.param_layout());
@@ -256,6 +276,7 @@ fn cmd_train_phase(args: &Args) -> Result<()> {
         pipeline_depth: cfg.pipeline_depth,
         shards: cfg.shards,
         shard_hosts: cfg.shard_hosts.clone(),
+        registry: cfg.registry.clone(),
         eval_precision: cfg.eval_precision,
         verbose: true,
         ..Default::default()
@@ -285,8 +306,38 @@ fn cmd_train_phase(args: &Args) -> Result<()> {
 fn cmd_shard_worker(args: &Args) -> Result<()> {
     let addr = args.get_or("listen", "127.0.0.1:7171");
     let worker = optical_pinn::shard::ShardWorker::bind(&addr)?;
-    eprintln!("opinn shard-worker: listening on {}", worker.local_addr()?);
+    let local = worker.local_addr()?;
+    eprintln!("opinn shard-worker: listening on {local}");
+    // --registry: announce this worker to the fleet registry and keep it
+    // live with background heartbeats for as long as we serve. The
+    // advertised address defaults to the bound one; --advertise covers
+    // NAT/port-mapped workers whose reachable address differs.
+    let _heartbeater = args.get("registry").map(|registry| {
+        let advertise = args.get_or("advertise", &local.to_string());
+        Heartbeater::spawn(registry, &advertise, FleetConfig::default().heartbeat)
+    });
     worker.serve_forever()
+}
+
+fn cmd_registry(args: &Args) -> Result<()> {
+    let addr = args.get_or("listen", "127.0.0.1:7271");
+    let heartbeat = args.get_u64("heartbeat-secs", 2)?;
+    let miss_budget = args.get_usize("miss-budget", 3)?;
+    if heartbeat == 0 || miss_budget == 0 {
+        return Err(optical_pinn::err(
+            "registry: --heartbeat-secs and --miss-budget must be positive",
+        ));
+    }
+    let config = FleetConfig {
+        heartbeat: std::time::Duration::from_secs(heartbeat),
+        miss_budget: miss_budget as u32,
+    };
+    let registry = Registry::bind(&addr, config)?;
+    eprintln!(
+        "opinn registry: listening on {} (heartbeat {heartbeat}s, miss budget {miss_budget})",
+        registry.local_addr()?
+    );
+    registry.serve_forever()
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {

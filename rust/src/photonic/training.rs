@@ -66,6 +66,10 @@ pub struct PhaseTrainConfig {
     /// TCP shard workers (`host:port`), one replica per entry; see
     /// [`crate::session::SessionBuilder::shard_hosts`].
     pub shard_hosts: Vec<String>,
+    /// Elastic fleet mode: resolve the replica set from the
+    /// `opinn registry` at this address every step; see
+    /// [`crate::session::SessionBuilder::registry`].
+    pub registry: Option<String>,
     /// Evaluation kernel precision; see
     /// [`crate::session::SessionBuilder::eval_precision`].
     pub eval_precision: crate::engine::EvalPrecision,
@@ -86,6 +90,7 @@ impl Default for PhaseTrainConfig {
             pipeline_depth: 1,
             shards: 0,
             shard_hosts: Vec::new(),
+            registry: None,
             eval_precision: crate::engine::EvalPrecision::F64,
             verbose: false,
         }

@@ -43,7 +43,11 @@
 //! another [`engine::Engine`](crate::engine::Engine), the driver,
 //! estimators and the pipelined path are untouched — and trajectories
 //! stay bitwise-identical at any shard count
-//! (`rust/tests/shard_parity.rs`).
+//! (`rust/tests/shard_parity.rs`). [`SessionBuilder::registry`] is the
+//! elastic variant: the replica set is re-resolved from an
+//! `opinn registry` every dispatch, so workers join, leave and crash
+//! mid-run without touching the trajectory
+//! (`rust/tests/fleet_parity.rs`).
 //!
 //! ## Determinism contract
 //!
@@ -97,6 +101,7 @@ use crate::optim::{Adam, Optimizer};
 use crate::pde::PointSet;
 use crate::photonic::training::{PhaseProtocol, PhaseTrainConfig};
 use crate::photonic::PhotonicModel;
+use crate::fleet::FleetDirectory;
 use crate::shard::ShardedEngine;
 use crate::util::rng::Rng;
 use crate::zo::rge::{Perturbation, RgeConfig, RgeEstimator};
@@ -436,6 +441,8 @@ pub struct SessionBuilder {
     pipeline_depth: usize,
     shards: usize,
     shard_hosts: Vec<String>,
+    registry: Option<String>,
+    fleet_directory: Option<FleetDirectory>,
     eval_precision: EvalPrecision,
     verbose: bool,
     tag: Option<String>,
@@ -459,6 +466,8 @@ impl SessionBuilder {
             pipeline_depth: 1,
             shards: 0,
             shard_hosts: Vec::new(),
+            registry: None,
+            fleet_directory: None,
             eval_precision: EvalPrecision::F64,
             verbose: false,
             tag: None,
@@ -526,6 +535,27 @@ impl SessionBuilder {
     /// logged warning — never a wrong or truncated loss vector.
     pub fn shard_hosts(mut self, hosts: Vec<String>) -> SessionBuilder {
         self.shard_hosts = hosts;
+        self
+    }
+
+    /// Elastic fleet sharding: resolve the replica set from the
+    /// `opinn registry` at `addr` (`host:port`) once per dispatch, so
+    /// `shard-worker`s can join, leave and crash mid-run. Mutually
+    /// exclusive with the static [`SessionBuilder::shards`] /
+    /// [`SessionBuilder::shard_hosts`] mode; zero registered workers is
+    /// fine (everything evaluates locally until they appear).
+    /// Trajectories stay bitwise-identical to the single-engine path
+    /// through arbitrary churn (`rust/tests/fleet_parity.rs`).
+    pub fn registry(mut self, addr: Option<String>) -> SessionBuilder {
+        self.registry = addr;
+        self
+    }
+
+    /// Resolve the replica set from an explicit [`FleetDirectory`] —
+    /// the in-process hook behind [`SessionBuilder::registry`], used by
+    /// tests and benches to drive fleet membership without sockets.
+    pub fn fleet_directory(mut self, directory: FleetDirectory) -> SessionBuilder {
+        self.fleet_directory = Some(directory);
         self
     }
 
@@ -636,6 +666,19 @@ impl SessionBuilder {
                 self.shard_hosts.len()
             )));
         }
+        let elastic = self.registry.is_some() || self.fleet_directory.is_some();
+        if elastic && (self.shards > 0 || !self.shard_hosts.is_empty()) {
+            return Err(Error::Config(
+                "session: --registry (elastic fleet) and --shards/--shard-hosts (static \
+                 replica set) are mutually exclusive"
+                    .into(),
+            ));
+        }
+        if self.registry.is_some() && self.fleet_directory.is_some() {
+            return Err(Error::Config(
+                "session: .registry(...) and .fleet_directory(...) are mutually exclusive".into(),
+            ));
+        }
         Ok(())
     }
 
@@ -666,6 +709,8 @@ impl SessionBuilder {
             pipeline_depth,
             shards,
             shard_hosts,
+            registry,
+            fleet_directory,
             eval_precision,
             verbose,
             tag,
@@ -705,8 +750,13 @@ impl SessionBuilder {
         };
         // Multi-engine probe sharding: wrap the borrowed engine so
         // `loss_many` / `loss_many_async` fan out across replicas while
-        // everything else still reaches the caller's engine.
-        let engine = if shards > 0 || !shard_hosts.is_empty() {
+        // everything else still reaches the caller's engine. The fleet
+        // modes resolve the replica set per dispatch; the static mode
+        // wires it here once.
+        let directory = fleet_directory.or_else(|| registry.map(FleetDirectory::registry));
+        let engine = if let Some(directory) = directory {
+            SessionEngine::Sharded(ShardedEngine::from_directory(engine, directory)?)
+        } else if shards > 0 || !shard_hosts.is_empty() {
             SessionEngine::Sharded(ShardedEngine::from_config(engine, shards, &shard_hosts)?)
         } else {
             SessionEngine::Direct(engine)
@@ -749,6 +799,7 @@ pub fn weight_session<'a>(engine: &'a mut dyn Engine, cfg: &TrainConfig) -> Resu
         .pipeline_depth(cfg.pipeline_depth)
         .shards(cfg.shards)
         .shard_hosts(cfg.shard_hosts.clone())
+        .registry(cfg.registry.clone())
         .eval_precision(cfg.eval_precision)
         .verbose(cfg.verbose)
         .gradient_source(source)
@@ -806,6 +857,7 @@ pub fn phase_session<'a>(
         .pipeline_depth(cfg.pipeline_depth)
         .shards(cfg.shards)
         .shard_hosts(cfg.shard_hosts.clone())
+        .registry(cfg.registry.clone())
         .eval_precision(cfg.eval_precision)
         .verbose(cfg.verbose)
         .tag(format!("{protocol:?}"))
@@ -900,6 +952,50 @@ mod tests {
                 .method(TrainMethod::Fo, Vec::new());
             b.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn builder_rejects_registry_combined_with_static_sharding() {
+        let b = SessionBuilder::new(10)
+            .shards(2)
+            .registry(Some("127.0.0.1:7171".into()))
+            .method(TrainMethod::Fo, Vec::new());
+        assert!(b.validate().is_err());
+        let b = SessionBuilder::new(10)
+            .shard_hosts(vec!["127.0.0.1:7001".into()])
+            .registry(Some("127.0.0.1:7171".into()))
+            .method(TrainMethod::Fo, Vec::new());
+        assert!(b.validate().is_err());
+        let b = SessionBuilder::new(10)
+            .registry(Some("127.0.0.1:7171".into()))
+            .method(TrainMethod::Fo, Vec::new());
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_session_with_an_empty_directory_matches_direct_bitwise() {
+        use crate::fleet::MembershipTable;
+        use std::sync::{Arc, Mutex};
+        let run = |dir: Option<FleetDirectory>| {
+            let mut eng = NativeEngine::new("bs", "tt").unwrap();
+            let mut params = eng.model.init_flat(0);
+            let layout = eng.model.param_layout();
+            let mut b = SessionBuilder::new(6)
+                .eval_every(3)
+                .method(TrainMethod::ZoRge(RgeConfig::default()), layout);
+            if let Some(dir) = dir {
+                b = b.fleet_directory(dir);
+            }
+            let hist = b.build(&mut eng).unwrap().run(&mut params).unwrap();
+            (params, hist)
+        };
+        let (p0, h0) = run(None);
+        // zero registered workers: every dispatch degrades to local
+        let table =
+            Arc::new(Mutex::new(MembershipTable::new(std::time::Duration::from_secs(3600))));
+        let (p1, h1) = run(Some(FleetDirectory::shared(table)));
+        assert_eq!(p0, p1, "empty-fleet trajectory diverged");
+        assert_eq!(h0.losses, h1.losses);
     }
 
     #[test]

@@ -1,45 +1,74 @@
 //! [`ShardedEngine`]: one [`Engine`] facade over N engine replicas.
 //!
-//! `loss_many` / `loss_many_async` partition the probe batch into
-//! contiguous row ranges (`ceil(n / shards)` rows each, in shard order),
-//! dispatch every range to its replica concurrently — one thread per
-//! shard slot, each driving a blocking [`Transport`] — and reassemble the
-//! loss vector **in row order**, independent of reply arrival order. All
-//! other engine methods delegate to the wrapped local engine.
+//! Two replica-set modes share the same dispatcher:
+//!
+//! * **Static** (`--shards` / `--shard-hosts`): the replica set is wired
+//!   at construction. `loss_many` partitions the batch into contiguous
+//!   row ranges (`ceil(n / shards)` rows each, in shard order), one
+//!   thread per slot driving its blocking [`Transport`].
+//! * **Fleet** (`--registry`, [`ShardedEngine::from_directory`]): the
+//!   replica set is re-resolved from a [`FleetDirectory`] on every
+//!   dispatch, so workers join, leave and crash mid-run. Rows are split
+//!   into small contiguous chunks claimed from a shared counter
+//!   (work stealing): a slow or dying shard strands at most its current
+//!   chunk, and the healthy shards absorb the rest.
+//!
+//! Either way the loss vector is reassembled **in row order**,
+//! independent of reply arrival order and of which replica evaluated
+//! which row. All other engine methods delegate to the wrapped local
+//! engine.
 //!
 //! ## Failure semantics
 //!
 //! A shard that cannot deliver a usable reply (unreachable worker,
 //! connection drop, error frame, wrong-length loss vector) degrades to
-//! **local evaluation of exactly its row range**, with a warning logged
-//! on the transition into the failed state, and then backs off
+//! **local evaluation of exactly its unevaluated rows**, with a warning
+//! logged on the transition into the failed state, and then backs off
 //! (`RETRY_BACKOFF`, doubling per consecutive failure) before being
 //! probed again (so a hung worker costs at most one transport timeout
-//! per backoff window, not per dispatch, while a recovered worker is
-//! picked back up automatically). The
-//! assembled loss vector is therefore always complete and
-//! bitwise-identical to the single-engine result — never silently wrong
-//! or truncated.
+//! per backoff window, not per dispatch). The first success after a
+//! failure ends the streak — a recovered worker restarts at the base
+//! backoff, not its old streak. The assembled loss vector is therefore
+//! always complete and bitwise-identical to the single-engine result —
+//! never silently wrong or truncated.
+//!
+//! ## Steady-state point-cloud cache
+//!
+//! The dispatcher encodes each step's [`PointSet`] once, digests the
+//! bytes, and keeps a per-slot mirror of the digests that connection
+//! has already been sent. A mirrored cloud is named by its 16-byte
+//! digest (wire tag `4`) instead of re-shipped; a replica that lost it
+//! (reconnect, cache eviction) answers need-points and the dispatcher
+//! re-sends in full — one extra round trip, never a wrong evaluation.
+//! [`ShardedEngine::wire_bytes`] exposes the cumulative request/reply
+//! payload bytes; [`ShardedEngine::set_point_cache`] disables the cache
+//! for baseline measurements.
 //!
 //! ## Determinism
 //!
 //! Replicas are built from the local engine's [`Engine::replica_spec`],
 //! so every probe row produces the bitwise-identical loss no matter
-//! which replica (or the local fallback) evaluates it; the contiguous
-//! static partition and in-order assembly do the rest. Sharded training
-//! trajectories are pinned against the single-engine path in
-//! `rust/tests/shard_parity.rs`.
+//! which replica (or the local fallback) evaluates it. Losses are
+//! row-wise independent, so even the timing-dependent fleet assignment
+//! assembles the identical vector. Sharded training trajectories are
+//! pinned against the single-engine path in
+//! `rust/tests/shard_parity.rs` and, with mid-run churn, in
+//! `rust/tests/fleet_parity.rs`.
 
+use std::borrow::Cow;
 use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::transport::{InProcessTransport, TcpTransport, Transport};
 use super::wire;
+use super::worker::POINT_CACHE_CAP;
 use crate::coordinator::Metrics;
 use crate::engine::{
     Engine, EngineSpec, EvalPrecision, NativeEngine, PendingLosses, ProbeBatch, ShardStat,
 };
+use crate::fleet::{is_in_process, FleetDirectory};
 use crate::pde::{Pde, PointSet};
 use crate::util::rng::Rng;
 use crate::{err, Error, Result};
@@ -79,12 +108,240 @@ struct ShardSlot {
     /// the local cores N-fold; loss values are thread-count-invariant,
     /// so this never affects results.
     dilution: usize,
+    /// Digests of the point clouds this connection has been sent (MRU
+    /// first, mirroring the worker-side cache capacity). A mirrored
+    /// cloud is requested by digest; anything else ships in full.
+    mirror: Vec<wire::PointsDigest>,
+}
+
+impl ShardSlot {
+    fn new(transport: Box<dyn Transport>, dilution: usize) -> ShardSlot {
+        ShardSlot {
+            label: transport.label(),
+            warned: false,
+            failures: 0,
+            retry_at: None,
+            dilution,
+            mirror: Vec::new(),
+            transport,
+        }
+    }
+
+    /// True while the slot is inside its post-failure backoff window.
+    fn backing_off(&self) -> bool {
+        self.retry_at.map(|t| Instant::now() < t).unwrap_or(false)
+    }
+
+    /// Record a successful dispatch: the failure streak ends, so the
+    /// next outage restarts at the base backoff instead of inheriting
+    /// the old streak's doubling.
+    fn note_success(&mut self) {
+        if self.warned {
+            eprintln!("shard[{}]: recovered; resuming remote dispatch", self.label);
+        }
+        self.warned = false;
+        self.failures = 0;
+        self.retry_at = None;
+    }
+
+    /// Record a failed dispatch: extend the exponential backoff and log
+    /// once per streak.
+    fn note_failure(&mut self, what: &str) {
+        let doublings = self.failures.min(MAX_BACKOFF_DOUBLINGS);
+        self.failures = self.failures.saturating_add(1);
+        self.retry_at = Some(Instant::now() + RETRY_BACKOFF * (1u32 << doublings));
+        if !self.warned {
+            eprintln!("shard[{}]: {what}; falling back to local evaluation", self.label);
+            self.warned = true;
+        }
+    }
+
+    /// MRU-record that this connection now holds the digested cloud.
+    fn note_sent_digest(&mut self, digest: wire::PointsDigest) {
+        self.mirror.retain(|d| *d != digest);
+        self.mirror.insert(0, digest);
+        self.mirror.truncate(POINT_CACHE_CAP);
+    }
 }
 
 /// The result of one shard's dispatch, timed for throughput accounting.
 struct RangeOutcome {
     result: Result<Vec<f64>>,
     secs: f64,
+    /// Request/reply payload bytes exchanged during this dispatch.
+    tx: u64,
+    rx: u64,
+}
+
+/// One step's point cloud, encoded once and digested for the cache.
+struct PointsWire {
+    bytes: Vec<u8>,
+    digest: wire::PointsDigest,
+}
+
+impl PointsWire {
+    fn new(pts: &PointSet) -> PointsWire {
+        let bytes = wire::encode_points(pts);
+        let digest = wire::points_digest(&bytes);
+        PointsWire { bytes, digest }
+    }
+}
+
+/// The request spec a slot actually receives: co-located replicas get
+/// the probe-thread budget divided by their count.
+fn effective_spec<'a>(spec: &'a EngineSpec, dilution: usize) -> Cow<'a, EngineSpec> {
+    if dilution > 1 {
+        let mut diluted = spec.clone();
+        let base = if diluted.probe_threads == 0 {
+            crate::engine::native::default_threads()
+        } else {
+            diluted.probe_threads
+        };
+        diluted.probe_threads = (base / dilution).max(1);
+        Cow::Owned(diluted)
+    } else {
+        Cow::Borrowed(spec)
+    }
+}
+
+/// Evaluate one row range on one slot, driving the digest-mirror
+/// protocol: hashed request when the mirror says the connection holds
+/// the cloud (full re-send on a need-points miss), full request
+/// otherwise. A transport error clears the mirror — a reconnected
+/// worker connection starts with an empty cache.
+fn eval_range(
+    slot: &mut ShardSlot,
+    spec: &EngineSpec,
+    probes: &ProbeBatch,
+    range: Range<usize>,
+    pw: &PointsWire,
+    use_cache: bool,
+    bytes: &mut (u64, u64),
+) -> Result<Vec<f64>> {
+    if use_cache && slot.mirror.contains(&pw.digest) {
+        let request = wire::encode_eval_request_hashed(spec, probes.rows(range.clone()), pw.digest);
+        bytes.0 += request.len() as u64;
+        let reply = match slot.transport.round_trip(&request) {
+            Ok(reply) => reply,
+            Err(e) => {
+                slot.mirror.clear();
+                return Err(e);
+            }
+        };
+        bytes.1 += reply.len() as u64;
+        match wire::decode_worker_reply(&reply)? {
+            wire::EvalReply::Losses(losses) => {
+                slot.note_sent_digest(pw.digest);
+                return Ok(losses);
+            }
+            // stale mirror (worker restarted, cache evicted): re-send in
+            // full below
+            wire::EvalReply::NeedPoints(_) => slot.mirror.clear(),
+        }
+    }
+    let request = wire::encode_eval_request_precoded(spec, probes.rows(range), &pw.bytes);
+    bytes.0 += request.len() as u64;
+    let reply = match slot.transport.round_trip(&request) {
+        Ok(reply) => reply,
+        Err(e) => {
+            slot.mirror.clear();
+            return Err(e);
+        }
+    };
+    bytes.1 += reply.len() as u64;
+    match wire::decode_worker_reply(&reply)? {
+        wire::EvalReply::Losses(losses) => {
+            if use_cache {
+                slot.note_sent_digest(pw.digest);
+            }
+            Ok(losses)
+        }
+        wire::EvalReply::NeedPoints(_) => {
+            slot.mirror.clear();
+            Err(err("shard: replica demanded points it was just sent"))
+        }
+    }
+}
+
+/// The dispatcher's replica set: wired once (static) or re-resolved
+/// every dispatch (fleet).
+enum Replicas {
+    /// A fixed slot list from `--shards` / `--shard-hosts`.
+    Static(Vec<ShardSlot>),
+    /// A directory-resolved slot list that changes between steps.
+    Fleet(FleetState),
+}
+
+/// Fleet-mode state: the directory plus warm slots keyed by member
+/// address, carried across resolves so transports, backoff latches and
+/// digest mirrors survive membership refreshes.
+struct FleetState {
+    directory: FleetDirectory,
+    slots: Vec<(String, ShardSlot)>,
+    /// One warning per continuous stretch of failed resolves.
+    resolve_warned: bool,
+}
+
+/// The transport for a fleet member address ([`is_in_process`] members
+/// evaluate locally; everything else is a TCP worker endpoint).
+fn transport_for(addr: &str) -> Box<dyn Transport> {
+    if is_in_process(addr) {
+        Box::new(InProcessTransport::new())
+    } else {
+        Box::new(TcpTransport::new(addr.to_string()))
+    }
+}
+
+impl FleetState {
+    /// Resolve the live membership and sync the slot set: members we
+    /// already track keep their warm slot (transport, backoff state,
+    /// mirror), departed members are dropped, new members get fresh
+    /// slots at their join position. A dead registry keeps the previous
+    /// membership (warned once); an empty membership empties the slots,
+    /// which degrades the whole dispatch to local evaluation.
+    fn sync(&mut self) {
+        match self.directory.resolve() {
+            Ok(members) => {
+                if self.resolve_warned {
+                    eprintln!("fleet: {} reachable again", self.directory.label());
+                    self.resolve_warned = false;
+                }
+                let mut old = std::mem::take(&mut self.slots);
+                for addr in members {
+                    let slot = match old.iter().position(|(a, _)| *a == addr) {
+                        Some(i) => old.remove(i).1,
+                        None => {
+                            let mut slot = ShardSlot::new(transport_for(&addr), 1);
+                            // stats and logs name the member, not the
+                            // transport (several in-process members would
+                            // otherwise collide)
+                            slot.label = addr.clone();
+                            slot
+                        }
+                    };
+                    self.slots.push((addr, slot));
+                }
+                // departed members' slots drop here (with their
+                // connections); re-derive co-location dilution for the
+                // current set
+                let n_colocated =
+                    self.slots.iter().filter(|(_, s)| s.transport.colocated()).count().max(1);
+                for (_, slot) in &mut self.slots {
+                    slot.dilution = if slot.transport.colocated() { n_colocated } else { 1 };
+                }
+            }
+            Err(e) => {
+                if !self.resolve_warned {
+                    eprintln!(
+                        "fleet: resolve via {} failed ({e}); keeping the last {} member(s)",
+                        self.directory.label(),
+                        self.slots.len()
+                    );
+                    self.resolve_warned = true;
+                }
+            }
+        }
+    }
 }
 
 /// An [`Engine`] that fans probe batches across engine replicas.
@@ -96,14 +353,34 @@ struct RangeOutcome {
 pub struct ShardedEngine<E: Engine> {
     local: E,
     spec: EngineSpec,
-    /// Shard slots, behind `Arc<Mutex>` so the non-blocking dispatch
-    /// thread ([`Engine::loss_many_async`]) can drive them too.
-    shards: Arc<Mutex<Vec<ShardSlot>>>,
-    /// Per-shard dispatch accounting (rows, busy seconds, fallbacks).
+    /// The replica set, behind `Arc<Mutex>` so the non-blocking dispatch
+    /// thread ([`Engine::loss_many_async`]) can drive it too.
+    replicas: Arc<Mutex<Replicas>>,
+    /// Per-shard dispatch accounting (rows, busy seconds, fallbacks,
+    /// wire bytes).
     metrics: Arc<Mutex<Metrics>>,
     /// Lazily-built local replica used as the fallback evaluator on the
     /// async dispatch thread, where the wrapped engine is out of reach.
     async_fallback: Arc<Mutex<Option<NativeEngine>>>,
+    /// Steady-state point-cloud cache switch (on by default); off ships
+    /// every request with its full cloud — the bench baseline.
+    point_cache: Arc<AtomicBool>,
+}
+
+/// The replica spec + shardability checks shared by both constructors.
+fn shardable_spec<E: Engine>(local: &E) -> Result<EngineSpec> {
+    let spec = local.replica_spec().ok_or_else(|| {
+        Error::Config(format!(
+            "the {:?} backend cannot be sharded: it has no replica spec",
+            local.backend()
+        ))
+    })?;
+    if local.has_stochastic_resample() {
+        return Err(Error::Config(
+            "engines with stochastic resample (SE MC nodes) cannot be sharded".into(),
+        ));
+    }
+    Ok(spec)
 }
 
 impl<E: Engine> ShardedEngine<E> {
@@ -116,37 +393,43 @@ impl<E: Engine> ShardedEngine<E> {
         if transports.is_empty() {
             return Err(Error::Config("sharding requires at least one transport".into()));
         }
-        let spec = local.replica_spec().ok_or_else(|| {
-            Error::Config(format!(
-                "the {:?} backend cannot be sharded: it has no replica spec",
-                local.backend()
-            ))
-        })?;
-        if local.has_stochastic_resample() {
-            return Err(Error::Config(
-                "engines with stochastic resample (SE MC nodes) cannot be sharded".into(),
-            ));
-        }
+        let spec = shardable_spec(&local)?;
         // co-located replicas split the local probe-worker budget
         // instead of oversubscribing the host N-fold
         let n_colocated = transports.iter().filter(|t| t.colocated()).count();
         let slots = transports
             .into_iter()
-            .map(|t| ShardSlot {
-                label: t.label(),
-                warned: false,
-                failures: 0,
-                retry_at: None,
-                dilution: if t.colocated() { n_colocated.max(1) } else { 1 },
-                transport: t,
+            .map(|t| {
+                let dilution = if t.colocated() { n_colocated.max(1) } else { 1 };
+                ShardSlot::new(t, dilution)
             })
             .collect();
         Ok(ShardedEngine {
             local,
             spec,
-            shards: Arc::new(Mutex::new(slots)),
+            replicas: Arc::new(Mutex::new(Replicas::Static(slots))),
             metrics: Arc::new(Mutex::new(Metrics::new())),
             async_fallback: Arc::new(Mutex::new(None)),
+            point_cache: Arc::new(AtomicBool::new(true)),
+        })
+    }
+
+    /// Wrap `local` in fleet mode: the replica set is re-resolved from
+    /// `directory` on every dispatch, so zero members now is fine —
+    /// dispatches degrade to local evaluation until workers register.
+    pub fn from_directory(local: E, directory: FleetDirectory) -> Result<ShardedEngine<E>> {
+        let spec = shardable_spec(&local)?;
+        Ok(ShardedEngine {
+            local,
+            spec,
+            replicas: Arc::new(Mutex::new(Replicas::Fleet(FleetState {
+                directory,
+                slots: Vec::new(),
+                resolve_warned: false,
+            }))),
+            metrics: Arc::new(Mutex::new(Metrics::new())),
+            async_fallback: Arc::new(Mutex::new(None)),
+            point_cache: Arc::new(AtomicBool::new(true)),
         })
     }
 
@@ -169,14 +452,55 @@ impl<E: Engine> ShardedEngine<E> {
         Self::new(local, transports)
     }
 
-    /// Number of shard replicas.
+    /// Number of shard replicas (in fleet mode: the members seen at the
+    /// last resolve).
     pub fn n_shards(&self) -> usize {
-        self.shards.lock().unwrap_or_else(|p| p.into_inner()).len()
+        match &*self.replicas.lock().unwrap_or_else(|p| p.into_inner()) {
+            Replicas::Static(slots) => slots.len(),
+            Replicas::Fleet(state) => state.slots.len(),
+        }
     }
 
     /// The wrapped local engine.
     pub fn local(&self) -> &E {
         &self.local
+    }
+
+    /// Enable or disable the steady-state point-cloud cache (on by
+    /// default). Off forces every request to carry its full cloud —
+    /// the baseline for measuring the cache's wire savings.
+    pub fn set_point_cache(&mut self, enabled: bool) {
+        self.point_cache.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Cumulative `(tx, rx)` request/reply payload bytes exchanged with
+    /// replicas across all dispatches (both modes, both transports).
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        (m.counter("wire.tx_bytes"), m.counter("wire.rx_bytes"))
+    }
+
+    /// Per-slot consecutive-failure counts, in slot order (tests).
+    #[cfg(test)]
+    fn failure_streaks(&self) -> Vec<u32> {
+        match &*self.replicas.lock().unwrap_or_else(|p| p.into_inner()) {
+            Replicas::Static(slots) => slots.iter().map(|s| s.failures).collect(),
+            Replicas::Fleet(state) => state.slots.iter().map(|(_, s)| s.failures).collect(),
+        }
+    }
+
+    /// Clear every slot's backoff window so the next dispatch retries
+    /// its transport immediately (tests — real backoff is 60 s+).
+    #[cfg(test)]
+    fn force_retry_now(&self) {
+        let mut guard = self.replicas.lock().unwrap_or_else(|p| p.into_inner());
+        let slots: Vec<&mut ShardSlot> = match &mut *guard {
+            Replicas::Static(slots) => slots.iter_mut().collect(),
+            Replicas::Fleet(state) => state.slots.iter_mut().map(|(_, s)| s).collect(),
+        };
+        for slot in slots {
+            slot.retry_at = None;
+        }
     }
 }
 
@@ -188,20 +512,49 @@ fn ranges(n: usize, s: usize) -> Vec<Range<usize>> {
     (0..s).map(|i| (i * per).min(n)..((i + 1) * per).min(n)).collect()
 }
 
-/// Dispatch one probe batch across the shard slots and assemble the loss
-/// vector in row order. Failed ranges are re-evaluated through
+/// Target number of work-stealing chunks per dispatchable fleet slot: a
+/// slow or dying shard strands at most `1/(slots × this)` of the batch
+/// for the others to absorb, while the per-chunk round-trip overhead
+/// stays amortized.
+const STEAL_CHUNKS_PER_SLOT: usize = 4;
+
+/// Dispatch one probe batch across the replica set and assemble the
+/// loss vector in row order. Failed rows are re-evaluated through
 /// `fallback` (the wrapped engine on the blocking path, the spec-built
 /// replica on the async path).
 fn shard_loss_many(
     spec: &EngineSpec,
-    shards: &Mutex<Vec<ShardSlot>>,
+    replicas: &Mutex<Replicas>,
     metrics: &Mutex<Metrics>,
     probes: &ProbeBatch,
     pts: &PointSet,
+    use_cache: bool,
+    fallback: &mut dyn FnMut(&ProbeBatch) -> Result<Vec<f64>>,
+) -> Result<Vec<f64>> {
+    let mut guard = replicas.lock().unwrap_or_else(|p| p.into_inner());
+    let pw = PointsWire::new(pts);
+    match &mut *guard {
+        Replicas::Static(slots) => {
+            static_loss_many(spec, slots, metrics, probes, &pw, use_cache, fallback)
+        }
+        Replicas::Fleet(state) => {
+            fleet_loss_many(spec, state, metrics, probes, &pw, use_cache, fallback)
+        }
+    }
+}
+
+/// The static-mode dispatch: one contiguous `ceil(n / shards)` range per
+/// slot, one thread per slot.
+fn static_loss_many(
+    spec: &EngineSpec,
+    slots: &mut [ShardSlot],
+    metrics: &Mutex<Metrics>,
+    probes: &ProbeBatch,
+    pw: &PointsWire,
+    use_cache: bool,
     fallback: &mut dyn FnMut(&ProbeBatch) -> Result<Vec<f64>>,
 ) -> Result<Vec<f64>> {
     let n = probes.n_probes();
-    let mut slots = shards.lock().unwrap_or_else(|p| p.into_inner());
     let ranges = ranges(n, slots.len());
     let mut outcomes: Vec<Option<RangeOutcome>> = (0..ranges.len()).map(|_| None).collect();
     std::thread::scope(|sc| {
@@ -209,31 +562,31 @@ fn shard_loss_many(
             if range.is_empty() {
                 continue;
             }
-            if slot.retry_at.map(|t| Instant::now() < t).unwrap_or(false) {
+            if slot.backing_off() {
                 // recently failed: go straight to local fallback instead
                 // of paying the transport timeout again (outcome stays
                 // None, handled below)
                 continue;
             }
             sc.spawn(move || {
-                let request = if slot.dilution > 1 {
-                    let mut diluted = spec.clone();
-                    let base = if diluted.probe_threads == 0 {
-                        crate::engine::native::default_threads()
-                    } else {
-                        diluted.probe_threads
-                    };
-                    diluted.probe_threads = (base / slot.dilution).max(1);
-                    wire::encode_eval_request(&diluted, probes.rows(range.clone()), pts)
-                } else {
-                    wire::encode_eval_request(spec, probes.rows(range.clone()), pts)
-                };
+                let eff = effective_spec(spec, slot.dilution);
                 let t0 = Instant::now();
-                let result = slot
-                    .transport
-                    .round_trip(&request)
-                    .and_then(|reply| wire::decode_eval_reply(&reply));
-                *out = Some(RangeOutcome { result, secs: t0.elapsed().as_secs_f64() });
+                let mut bytes = (0u64, 0u64);
+                let result = eval_range(
+                    slot,
+                    eff.as_ref(),
+                    probes,
+                    range.clone(),
+                    pw,
+                    use_cache,
+                    &mut bytes,
+                );
+                *out = Some(RangeOutcome {
+                    result,
+                    secs: t0.elapsed().as_secs_f64(),
+                    tx: bytes.0,
+                    rx: bytes.1,
+                });
             });
         }
     });
@@ -247,12 +600,14 @@ fn shard_loss_many(
         if rows == 0 {
             continue;
         }
+        if let Some(RangeOutcome { tx, rx, .. }) = &outcome {
+            m.inc("wire.tx_bytes", *tx);
+            m.inc("wire.rx_bytes", *rx);
+        }
         let failure = match outcome {
-            Some(RangeOutcome { result: Ok(losses), secs }) if losses.len() == rows => {
+            Some(RangeOutcome { result: Ok(losses), secs, .. }) if losses.len() == rows => {
                 out[range.start..range.end].copy_from_slice(&losses);
-                slot.warned = false;
-                slot.failures = 0;
-                slot.retry_at = None;
+                slot.note_success();
                 m.inc(&format!("shard{i}.rows"), rows as u64);
                 let key = format!("shard{i}.secs");
                 let prev = m.gauge(&key).unwrap_or(0.0);
@@ -267,16 +622,7 @@ fn shard_loss_many(
             None => String::new(),
         };
         if !failure.is_empty() {
-            let doublings = slot.failures.min(MAX_BACKOFF_DOUBLINGS);
-            slot.failures = slot.failures.saturating_add(1);
-            slot.retry_at = Some(Instant::now() + RETRY_BACKOFF * (1u32 << doublings));
-            if !slot.warned {
-                eprintln!(
-                    "shard[{i}] ({}): {failure}; falling back to local evaluation",
-                    slot.label
-                );
-                slot.warned = true;
-            }
+            slot.note_failure(&failure);
         }
         m.inc(&format!("shard{i}.fallbacks"), 1);
         let sb = sub.get_or_insert_with(|| ProbeBatch::new(probes.dim()));
@@ -290,6 +636,156 @@ fn shard_loss_many(
             )));
         }
         out[range.start..range.end].copy_from_slice(&losses);
+    }
+    Ok(out)
+}
+
+/// What one fleet slot accomplished during a dispatch.
+struct SlotRun {
+    /// Completed chunks: `(chunk index, losses)`.
+    done: Vec<(usize, Vec<f64>)>,
+    /// The first failure (the thread stops claiming chunks at its first
+    /// failure, so a dead worker fails fast and the others steal the
+    /// rest).
+    failure: Option<String>,
+    secs: f64,
+    tx: u64,
+    rx: u64,
+}
+
+/// The fleet-mode dispatch: re-resolve membership, then let every live
+/// slot claim small contiguous row chunks from a shared counter until
+/// none remain. Chunks nobody completed (failed slots, empty fleet) are
+/// evaluated through `fallback`.
+fn fleet_loss_many(
+    spec: &EngineSpec,
+    state: &mut FleetState,
+    metrics: &Mutex<Metrics>,
+    probes: &ProbeBatch,
+    pw: &PointsWire,
+    use_cache: bool,
+    fallback: &mut dyn FnMut(&ProbeBatch) -> Result<Vec<f64>>,
+) -> Result<Vec<f64>> {
+    state.sync();
+    let n = probes.n_probes();
+    let dispatchable = state.slots.iter().filter(|(_, s)| !s.backing_off()).count();
+    let chunk_rows = n.div_ceil(dispatchable.max(1) * STEAL_CHUNKS_PER_SLOT).max(1);
+    let chunks: Vec<Range<usize>> =
+        (0..n).step_by(chunk_rows).map(|s| s..(s + chunk_rows).min(n)).collect();
+    let next = AtomicUsize::new(0);
+    let mut runs: Vec<Option<SlotRun>> = (0..state.slots.len()).map(|_| None).collect();
+    if dispatchable > 0 {
+        std::thread::scope(|sc| {
+            for ((_, slot), out) in state.slots.iter_mut().zip(runs.iter_mut()) {
+                if slot.backing_off() {
+                    continue;
+                }
+                let chunks = &chunks;
+                let next = &next;
+                sc.spawn(move || {
+                    let eff = effective_spec(spec, slot.dilution);
+                    let t0 = Instant::now();
+                    let mut run =
+                        SlotRun { done: Vec::new(), failure: None, secs: 0.0, tx: 0, rx: 0 };
+                    loop {
+                        let ci = next.fetch_add(1, Ordering::SeqCst);
+                        if ci >= chunks.len() {
+                            break;
+                        }
+                        let range = chunks[ci].clone();
+                        let mut bytes = (0u64, 0u64);
+                        let result = eval_range(
+                            slot,
+                            eff.as_ref(),
+                            probes,
+                            range.clone(),
+                            pw,
+                            use_cache,
+                            &mut bytes,
+                        );
+                        run.tx += bytes.0;
+                        run.rx += bytes.1;
+                        match result {
+                            Ok(losses) if losses.len() == range.len() => {
+                                run.done.push((ci, losses));
+                            }
+                            Ok(losses) => {
+                                run.failure = Some(format!(
+                                    "replied with {} losses for {} rows",
+                                    losses.len(),
+                                    range.len()
+                                ));
+                                break;
+                            }
+                            Err(e) => {
+                                run.failure = Some(e.to_string());
+                                break;
+                            }
+                        }
+                    }
+                    run.secs = t0.elapsed().as_secs_f64();
+                    *out = Some(run);
+                });
+            }
+        });
+    }
+
+    let mut out = vec![0.0; n];
+    let mut covered = vec![false; chunks.len()];
+    let mut m = metrics.lock().unwrap_or_else(|p| p.into_inner());
+    for ((_, slot), run) in state.slots.iter_mut().zip(runs) {
+        let Some(run) = run else { continue }; // backing off this dispatch
+        m.inc("wire.tx_bytes", run.tx);
+        m.inc("wire.rx_bytes", run.rx);
+        let mut rows = 0u64;
+        for (ci, losses) in run.done {
+            let range = &chunks[ci];
+            out[range.start..range.end].copy_from_slice(&losses);
+            covered[ci] = true;
+            rows += range.len() as u64;
+        }
+        if rows > 0 {
+            m.inc(&format!("fleet.{}.rows", slot.label), rows);
+            let key = format!("fleet.{}.secs", slot.label);
+            let prev = m.gauge(&key).unwrap_or(0.0);
+            m.set_gauge(&key, prev + run.secs);
+        }
+        match run.failure {
+            Some(what) => {
+                slot.note_failure(&what);
+                m.inc(&format!("fleet.{}.fallbacks", slot.label), 1);
+            }
+            // a slot that claimed nothing (lost every race) is neither a
+            // success nor a failure
+            None if rows > 0 => slot.note_success(),
+            None => {}
+        }
+    }
+
+    // whatever nobody completed — failed chunks, an empty or fully
+    // backing-off fleet — is evaluated locally, never dropped
+    let mut sub: Option<ProbeBatch> = None;
+    let mut local_rows = 0u64;
+    for (ci, range) in chunks.iter().enumerate() {
+        if covered[ci] || range.is_empty() {
+            continue;
+        }
+        let sb = sub.get_or_insert_with(|| ProbeBatch::new(probes.dim()));
+        sb.clear();
+        sb.extend_from_rows(probes.rows(range.clone()));
+        let losses = fallback(sb)?;
+        if losses.len() != range.len() {
+            return Err(err(format!(
+                "shard fallback returned {} losses for {} rows",
+                losses.len(),
+                range.len()
+            )));
+        }
+        out[range.start..range.end].copy_from_slice(&losses);
+        local_rows += range.len() as u64;
+    }
+    if local_rows > 0 {
+        m.inc("fleet.local.rows", local_rows);
     }
     Ok(out)
 }
@@ -312,9 +808,9 @@ impl<E: Engine> Engine for ShardedEngine<E> {
             return Ok(Vec::new());
         }
         let local = &mut self.local;
-        shard_loss_many(&self.spec, &self.shards, &self.metrics, probes, pts, &mut |pb| {
-            local.loss_many(pb, pts)
-        })
+        let use_cache = self.point_cache.load(Ordering::Relaxed);
+        let fallback = &mut |pb: &ProbeBatch| local.loss_many(pb, pts);
+        shard_loss_many(&self.spec, &self.replicas, &self.metrics, probes, pts, use_cache, fallback)
     }
 
     fn loss_many_async(&mut self, probes: ProbeBatch, pts: &PointSet) -> PendingLosses {
@@ -326,9 +822,10 @@ impl<E: Engine> Engine for ShardedEngine<E> {
         // cloned. The wrapped engine stays free for concurrent scalar
         // queries, exactly like the native engine's async path.
         let spec = self.spec.clone();
-        let shards = Arc::clone(&self.shards);
+        let replicas = Arc::clone(&self.replicas);
         let metrics = Arc::clone(&self.metrics);
         let async_fallback = Arc::clone(&self.async_fallback);
+        let use_cache = self.point_cache.load(Ordering::Relaxed);
         let pts = pts.clone();
         let handle = std::thread::spawn(move || {
             let mut fb = |pb: &ProbeBatch| -> Result<Vec<f64>> {
@@ -338,7 +835,8 @@ impl<E: Engine> Engine for ShardedEngine<E> {
                 }
                 guard.as_mut().expect("built above").loss_many(pb, &pts)
             };
-            let result = shard_loss_many(&spec, &shards, &metrics, &probes, &pts, &mut fb);
+            let result =
+                shard_loss_many(&spec, &replicas, &metrics, &probes, &pts, use_cache, &mut fb);
             (probes, result)
         });
         PendingLosses::in_flight(handle)
@@ -386,25 +884,32 @@ impl<E: Engine> Engine for ShardedEngine<E> {
     }
 
     fn shard_stats(&self) -> Option<Vec<ShardStat>> {
-        let slots = self.shards.lock().unwrap_or_else(|p| p.into_inner());
+        let guard = self.replicas.lock().unwrap_or_else(|p| p.into_inner());
         let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
-        Some(
-            slots
+        let stat = |i: usize, label: &str, key: &str| {
+            let rows = m.counter(&format!("{key}.rows"));
+            let secs = m.gauge(&format!("{key}.secs")).unwrap_or(0.0);
+            ShardStat {
+                index: i,
+                label: label.to_string(),
+                rows,
+                probes_per_s: if secs > 0.0 { rows as f64 / secs } else { 0.0 },
+                fallbacks: m.counter(&format!("{key}.fallbacks")),
+            }
+        };
+        Some(match &*guard {
+            Replicas::Static(slots) => slots
                 .iter()
                 .enumerate()
-                .map(|(i, slot)| {
-                    let rows = m.counter(&format!("shard{i}.rows"));
-                    let secs = m.gauge(&format!("shard{i}.secs")).unwrap_or(0.0);
-                    ShardStat {
-                        index: i,
-                        label: slot.label.clone(),
-                        rows,
-                        probes_per_s: if secs > 0.0 { rows as f64 / secs } else { 0.0 },
-                        fallbacks: m.counter(&format!("shard{i}.fallbacks")),
-                    }
-                })
+                .map(|(i, slot)| stat(i, &slot.label, &format!("shard{i}")))
                 .collect(),
-        )
+            Replicas::Fleet(state) => state
+                .slots
+                .iter()
+                .enumerate()
+                .map(|(i, (addr, _))| stat(i, addr, &format!("fleet.{addr}")))
+                .collect(),
+        })
     }
 }
 
@@ -599,5 +1104,166 @@ mod tests {
             }
             assert_eq!(rs.last().unwrap().end, n, "n {n} s {s}");
         }
+    }
+
+    /// A transport that fails or serves depending on a shared switch.
+    struct Switchable {
+        ok: Arc<std::sync::atomic::AtomicBool>,
+        inner: InProcessTransport,
+    }
+
+    impl Transport for Switchable {
+        fn round_trip(&mut self, request: &[u8]) -> Result<Vec<u8>> {
+            if self.ok.load(Ordering::SeqCst) {
+                self.inner.round_trip(request)
+            } else {
+                Err(err("switched off"))
+            }
+        }
+        fn label(&self) -> String {
+            "switchable".into()
+        }
+    }
+
+    #[test]
+    fn recovery_resets_the_backoff_streak() {
+        let ok = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let params = local.model.init_flat(0);
+        let transports: Vec<Box<dyn Transport>> =
+            vec![Box::new(Switchable { ok: Arc::clone(&ok), inner: InProcessTransport::new() })];
+        let mut sharded = ShardedEngine::new(local, transports).unwrap();
+        let mut rng = Rng::new(10);
+        let pts = sharded.pde().sample_points(&mut rng);
+        let probes = probes_around(&params, 3);
+        let mut direct = NativeEngine::new("bs", "tt").unwrap();
+        let want = direct.loss_many(&probes, &pts).unwrap();
+
+        // two failures grow the streak (backoff cleared between
+        // dispatches: real backoff is 60 s+)
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        assert_eq!(sharded.failure_streaks(), vec![1]);
+        sharded.force_retry_now();
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        assert_eq!(sharded.failure_streaks(), vec![2]);
+
+        // one success ends the streak entirely
+        ok.store(true, Ordering::SeqCst);
+        sharded.force_retry_now();
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        assert_eq!(sharded.failure_streaks(), vec![0], "success must reset the streak");
+
+        // the next outage starts a fresh streak at 1, not at 3
+        ok.store(false, Ordering::SeqCst);
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        assert_eq!(sharded.failure_streaks(), vec![1], "recovered slots restart at base backoff");
+    }
+
+    fn fleet_table(ttl_secs: u64) -> Arc<Mutex<crate::fleet::MembershipTable>> {
+        Arc::new(Mutex::new(crate::fleet::MembershipTable::new(
+            std::time::Duration::from_secs(ttl_secs),
+        )))
+    }
+
+    #[test]
+    fn fleet_dispatch_matches_direct_bitwise_at_any_size() {
+        let mut direct = NativeEngine::new("bs", "tt").unwrap();
+        let params = direct.model.init_flat(0);
+        let mut rng = Rng::new(11);
+        let pts = direct.pde().sample_points(&mut rng);
+        let probes = probes_around(&params, 9);
+        let want = direct.loss_many(&probes, &pts).unwrap();
+        for n in [1usize, 2, 4] {
+            let table = fleet_table(3600);
+            {
+                let mut t = table.lock().unwrap();
+                let now = Instant::now();
+                for i in 0..n {
+                    t.register(&format!("in-process#{i}"), now);
+                }
+            }
+            let local = NativeEngine::new("bs", "tt").unwrap();
+            let mut sharded =
+                ShardedEngine::from_directory(local, FleetDirectory::shared(table)).unwrap();
+            let got = sharded.loss_many(&probes, &pts).unwrap();
+            assert_eq!(got, want, "{n} fleet members diverged");
+            assert_eq!(sharded.n_shards(), n);
+        }
+    }
+
+    #[test]
+    fn fleet_membership_churn_between_steps_stays_bitwise() {
+        let mut direct = NativeEngine::new("bs", "tt").unwrap();
+        let params = direct.model.init_flat(0);
+        let mut rng = Rng::new(12);
+        let pts = direct.pde().sample_points(&mut rng);
+        let probes = probes_around(&params, 9);
+        let want = direct.loss_many(&probes, &pts).unwrap();
+
+        let table = fleet_table(3600);
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let mut sharded =
+            ShardedEngine::from_directory(local, FleetDirectory::shared(Arc::clone(&table)))
+                .unwrap();
+
+        // an empty fleet degrades the whole batch to local evaluation
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        assert_eq!(sharded.n_shards(), 0);
+
+        // the first worker joins mid-run
+        table.lock().unwrap().register(crate::fleet::IN_PROCESS_MEMBER, Instant::now());
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        assert_eq!(sharded.n_shards(), 1);
+
+        // a second joins; keep dispatching until the work stealing has
+        // demonstrably routed rows to it (bounded — chunks race freely)
+        table.lock().unwrap().register("in-process#2", Instant::now());
+        for _ in 0..20 {
+            assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+            let stats = sharded.shard_stats().unwrap();
+            assert_eq!(stats.len(), 2);
+            if stats.iter().any(|s| s.label == "in-process#2" && s.rows > 0) {
+                break;
+            }
+        }
+        let stats = sharded.shard_stats().unwrap();
+        assert!(
+            stats.iter().any(|s| s.label == "in-process#2" && s.rows > 0),
+            "the late joiner must end up evaluating rows"
+        );
+
+        // the first leaves; the survivor carries the batch
+        table.lock().unwrap().deregister(crate::fleet::IN_PROCESS_MEMBER);
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        assert_eq!(sharded.n_shards(), 1);
+        assert_eq!(sharded.shard_stats().unwrap()[0].label, "in-process#2");
+    }
+
+    #[test]
+    fn point_cache_cuts_steady_state_bytes() {
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let params = local.model.init_flat(0);
+        let mut sharded = ShardedEngine::new(local, in_process(1)).unwrap();
+        let mut rng = Rng::new(13);
+        let pts = sharded.pde().sample_points(&mut rng);
+        let probes = probes_around(&params, 3);
+        let mut direct = NativeEngine::new("bs", "tt").unwrap();
+        let want = direct.loss_many(&probes, &pts).unwrap();
+
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        let (cold, _) = sharded.wire_bytes();
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        let (after_warm, _) = sharded.wire_bytes();
+        let warm = after_warm - cold;
+        assert!(
+            warm < cold,
+            "steady-state hashed request ({warm} B) must undercut the cold full request ({cold} B)"
+        );
+
+        // cache off re-ships the identical full request
+        sharded.set_point_cache(false);
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        let (after_off, _) = sharded.wire_bytes();
+        assert_eq!(after_off - after_warm, cold, "cache off re-ships the full cloud");
     }
 }

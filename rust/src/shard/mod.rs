@@ -35,11 +35,19 @@
 //! * [`engine`] — [`ShardedEngine`] itself, with the deterministic
 //!   partition/assembly and the honest local fallback.
 //!
+//! The static replica set above (`--shards` / `--shard-hosts`) is one of
+//! two modes: with `--registry` the replica set is instead re-resolved
+//! every step from an `opinn registry` daemon, so workers join, leave
+//! and crash mid-run ([`crate::fleet`] has the discovery pieces;
+//! [`ShardedEngine::from_directory`](engine::ShardedEngine::from_directory)
+//! is the entry point).
+//!
 //! Determinism: replicas are built from [`Engine::replica_spec`], so
 //! sharded trajectories are
 //! bitwise-identical to single-engine runs at any shard count, over
 //! either transport, at any pipeline depth — pinned by
-//! `rust/tests/shard_parity.rs`.
+//! `rust/tests/shard_parity.rs` (static) and `rust/tests/fleet_parity.rs`
+//! (elastic, with mid-run churn).
 //!
 //! [`ProbeBatch`]: crate::engine::ProbeBatch
 //! [`Engine::replica_spec`]: crate::engine::Engine::replica_spec

@@ -13,6 +13,22 @@
 //! | `1` | eval request | engine spec, probe rows, point set |
 //! | `2` | eval reply (ok) | `u64` count + that many `f64` losses |
 //! | `3` | eval reply (error) | UTF-8 message string |
+//! | `4` | eval request (hashed points) | engine spec, probe rows, [`PointsDigest`] |
+//! | `5` | need-points reply | the [`PointsDigest`] the replica is missing |
+//! | `16` | register | worker `host:port` string |
+//! | `17` | heartbeat | worker `host:port` string |
+//! | `18` | deregister | worker `host:port` string |
+//! | `19` | resolve | (empty) |
+//! | `20` | members reply | `u64` count + that many `host:port` strings |
+//! | `21` | ack reply | `u8` flag (request-specific; see [`RegistryReply::Ack`]) |
+//!
+//! Tags `1`–`5` are the shard-worker evaluation protocol (tag `4`/`5`
+//! are the steady-state point-cloud cache: the dispatcher ships a
+//! 16-byte content digest instead of the full [`PointSet`], and a
+//! replica that does not hold the cloud answers `5` so the dispatcher
+//! re-sends the full request — a cache miss is one extra round trip,
+//! never a wrong evaluation). Tags `16`–`21` are the fleet registry
+//! protocol served by `opinn registry` (see [`crate::fleet`]).
 //!
 //! Primitives: `u64` and `u32` little-endian; `f64` as the little-endian
 //! bytes of [`f64::to_bits`] (bitwise round-trip, including NaN payloads
@@ -22,7 +38,8 @@
 //!
 //! The encode/decode pair is pinned bitwise by the property tests at the
 //! bottom of this module (`util::proptest_lite`), including empty
-//! batches, empty point sets and the max-frame edge.
+//! batches, empty point sets, empty membership lists and the max-frame
+//! edge.
 
 use std::io::{Read, Write};
 
@@ -42,6 +59,47 @@ pub const TAG_EVAL_REQUEST: u8 = 1;
 pub const TAG_EVAL_OK: u8 = 2;
 /// Payload tag of an error reply.
 pub const TAG_EVAL_ERR: u8 = 3;
+/// Payload tag of an evaluation request that names its point set by
+/// content digest instead of carrying it.
+pub const TAG_EVAL_HASHED: u8 = 4;
+/// Payload tag of the cache-miss reply to a [`TAG_EVAL_HASHED`]
+/// request: the replica does not hold the digested cloud, re-send the
+/// full request.
+pub const TAG_NEED_POINTS: u8 = 5;
+
+/// Payload tag of a fleet-registry register request.
+pub const TAG_REGISTER: u8 = 16;
+/// Payload tag of a fleet-registry heartbeat request.
+pub const TAG_HEARTBEAT: u8 = 17;
+/// Payload tag of a fleet-registry deregister request.
+pub const TAG_DEREGISTER: u8 = 18;
+/// Payload tag of a fleet-registry resolve request.
+pub const TAG_RESOLVE: u8 = 19;
+/// Payload tag of a fleet-registry membership reply.
+pub const TAG_MEMBERS: u8 = 20;
+/// Payload tag of a fleet-registry acknowledgment reply.
+pub const TAG_ACK: u8 = 21;
+
+/// A 128-bit content digest of a [`PointSet`]'s canonical wire encoding
+/// (two independently-seeded FNV-1a streams over [`encode_points`]
+/// bytes). Used as the replica-side point-cloud cache key; 128 bits
+/// keeps an accidental collision — which would silently evaluate the
+/// wrong cloud — far below any realistic dispatch count.
+pub type PointsDigest = [u64; 2];
+
+/// Digest a canonical point-set encoding (the bytes [`encode_points`]
+/// produces). Both ends hash the identical byte string, so equal clouds
+/// — bitwise, block names included — always agree on the key.
+pub fn points_digest(bytes: &[u8]) -> PointsDigest {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut a: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+    let mut b: u64 = a ^ 0x9e37_79b9_7f4a_7c15; // independently seeded
+    for &x in bytes {
+        a = (a ^ x as u64).wrapping_mul(PRIME);
+        b = (b ^ x as u64).wrapping_mul(PRIME);
+    }
+    [a, b]
+}
 
 // ---------------------------------------------------------------------
 // frames
@@ -345,14 +403,7 @@ pub struct EvalRequest {
 
 /// Encode a probe-range evaluation request payload.
 pub fn encode_eval_request(spec: &EngineSpec, rows: ProbeRows<'_>, pts: &PointSet) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(64 + 8 * rows.as_flat().len());
-    put_u8(&mut buf, TAG_EVAL_REQUEST);
-    let spec_bytes = encode_spec(spec);
-    put_u64(&mut buf, spec_bytes.len() as u64);
-    buf.extend_from_slice(&spec_bytes);
-    put_rows(&mut buf, rows);
-    put_points(&mut buf, pts);
-    buf
+    encode_eval_request_precoded(spec, rows, &encode_points(pts))
 }
 
 /// Decode a probe-range evaluation request payload (strict: trailing
@@ -406,6 +457,261 @@ pub fn decode_eval_reply(payload: &[u8]) -> Result<Vec<f64>> {
         }
         other => Err(err(format!("shard wire: expected reply, got tag {other}"))),
     }
+}
+
+// ---------------------------------------------------------------------
+// point-cloud cache frames (tags 4/5)
+// ---------------------------------------------------------------------
+
+/// Encode a [`PointSet`] alone, in the exact byte layout an eval request
+/// embeds. The dispatcher encodes each cloud once, digests the bytes
+/// with [`points_digest`], and splices them into every per-shard
+/// request instead of re-encoding per shard.
+pub fn encode_points(pts: &PointSet) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_points(&mut buf, pts);
+    buf
+}
+
+/// Encode a full evaluation request around a pre-encoded point set (the
+/// bytes [`encode_points`] produced).
+pub fn encode_eval_request_precoded(
+    spec: &EngineSpec,
+    rows: ProbeRows<'_>,
+    pts_bytes: &[u8],
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64 + 8 * rows.as_flat().len() + pts_bytes.len());
+    put_u8(&mut buf, TAG_EVAL_REQUEST);
+    let spec_bytes = encode_spec(spec);
+    put_u64(&mut buf, spec_bytes.len() as u64);
+    buf.extend_from_slice(&spec_bytes);
+    put_rows(&mut buf, rows);
+    buf.extend_from_slice(pts_bytes);
+    buf
+}
+
+/// Encode an evaluation request that names its point cloud by digest
+/// (tag [`TAG_EVAL_HASHED`]) instead of carrying the cloud. Only valid
+/// when the dispatcher has already shipped the digested cloud on this
+/// connection; a replica that dropped it answers [`TAG_NEED_POINTS`].
+pub fn encode_eval_request_hashed(
+    spec: &EngineSpec,
+    rows: ProbeRows<'_>,
+    digest: PointsDigest,
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(80 + 8 * rows.as_flat().len());
+    put_u8(&mut buf, TAG_EVAL_HASHED);
+    let spec_bytes = encode_spec(spec);
+    put_u64(&mut buf, spec_bytes.len() as u64);
+    buf.extend_from_slice(&spec_bytes);
+    put_rows(&mut buf, rows);
+    put_u64(&mut buf, digest[0]);
+    put_u64(&mut buf, digest[1]);
+    buf
+}
+
+/// A decoded shard-worker request: either a full request (tag `1`,
+/// carrying its cloud) or a hashed one (tag `4`, naming the cloud by
+/// digest).
+pub enum WorkerRequest {
+    /// A full request plus the digest of its embedded point bytes, so
+    /// the worker can install the cloud in its cache without
+    /// re-encoding it.
+    Full(EvalRequest, PointsDigest),
+    /// A request whose cloud is named by digest; the worker must hold
+    /// it already or reply [`TAG_NEED_POINTS`].
+    Hashed {
+        /// How to construct the evaluating replica.
+        spec: EngineSpec,
+        /// The probe rows assigned to this shard, re-indexed from zero.
+        probes: ProbeBatch,
+        /// Cache key of the collocation cloud to evaluate over.
+        digest: PointsDigest,
+    },
+}
+
+/// Decode either request form (strict: trailing bytes are an error).
+/// For a full request the digest is computed over the raw point-byte
+/// span of the payload — the identical bytes the dispatcher digested —
+/// so no re-encoding happens on the worker.
+pub fn decode_worker_request(payload: &[u8]) -> Result<WorkerRequest> {
+    let mut r = Reader::new(payload);
+    let tag = r.get_u8()?;
+    if tag != TAG_EVAL_REQUEST && tag != TAG_EVAL_HASHED {
+        return Err(err(format!("shard wire: expected request, got tag {tag}")));
+    }
+    let spec_len = r.get_usize()?;
+    let mut spec_r = Reader::new(r.take(spec_len)?);
+    let spec = decode_spec(&mut spec_r)?;
+    spec_r.finish()?;
+    let probes = get_batch(&mut r)?;
+    if tag == TAG_EVAL_REQUEST {
+        let start = r.pos;
+        let pts = get_points(&mut r)?;
+        let digest = points_digest(&r.buf[start..r.pos]);
+        r.finish()?;
+        Ok(WorkerRequest::Full(EvalRequest { spec, probes, pts }, digest))
+    } else {
+        let digest = [r.get_u64()?, r.get_u64()?];
+        r.finish()?;
+        Ok(WorkerRequest::Hashed { spec, probes, digest })
+    }
+}
+
+/// Encode the cache-miss reply to a hashed request.
+pub fn encode_need_points(digest: PointsDigest) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(17);
+    put_u8(&mut buf, TAG_NEED_POINTS);
+    put_u64(&mut buf, digest[0]);
+    put_u64(&mut buf, digest[1]);
+    buf
+}
+
+/// A decoded shard-worker reply, including the cache-miss form the
+/// legacy [`decode_eval_reply`] treats as an error.
+pub enum EvalReply {
+    /// Per-row losses, in request row order.
+    Losses(Vec<f64>),
+    /// The replica does not hold this cloud — re-send the full request.
+    NeedPoints(PointsDigest),
+}
+
+/// Decode a reply payload including the [`TAG_NEED_POINTS`] form.
+/// Worker error frames still decode to `Err` carrying the message.
+pub fn decode_worker_reply(payload: &[u8]) -> Result<EvalReply> {
+    let mut r = Reader::new(payload);
+    match r.get_u8()? {
+        TAG_EVAL_OK => {
+            let losses = r.get_f64s()?;
+            r.finish()?;
+            Ok(EvalReply::Losses(losses))
+        }
+        TAG_NEED_POINTS => {
+            let digest = [r.get_u64()?, r.get_u64()?];
+            r.finish()?;
+            Ok(EvalReply::NeedPoints(digest))
+        }
+        TAG_EVAL_ERR => {
+            let msg = r.get_str()?;
+            r.finish()?;
+            Err(err(format!("shard worker error: {msg}")))
+        }
+        other => Err(err(format!("shard wire: expected reply, got tag {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// fleet registry frames (tags 16..=21)
+// ---------------------------------------------------------------------
+
+/// A request to the fleet registry (`opinn registry`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryRequest {
+    /// Add a worker endpoint (`host:port`) to the membership, or
+    /// refresh its liveness deadline if already present.
+    Register(String),
+    /// Refresh a worker's liveness deadline. Upserts when the endpoint
+    /// is unknown, so a restarted registry re-learns its fleet from
+    /// heartbeats alone.
+    Heartbeat(String),
+    /// Remove a worker endpoint immediately (graceful shutdown).
+    Deregister(String),
+    /// Ask for the current live membership.
+    Resolve,
+}
+
+/// A reply from the fleet registry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryReply {
+    /// Reply to register/heartbeat/deregister: `true` when the endpoint
+    /// was already known before this request, `false` when the request
+    /// introduced it (register/heartbeat upsert) or it was absent
+    /// (deregister of an unknown endpoint).
+    Ack(bool),
+    /// Reply to resolve: live worker endpoints, oldest registration
+    /// first (stable join order).
+    Members(Vec<String>),
+}
+
+/// Encode a registry request payload.
+pub fn encode_registry_request(req: &RegistryRequest) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match req {
+        RegistryRequest::Register(addr) => {
+            put_u8(&mut buf, TAG_REGISTER);
+            put_str(&mut buf, addr);
+        }
+        RegistryRequest::Heartbeat(addr) => {
+            put_u8(&mut buf, TAG_HEARTBEAT);
+            put_str(&mut buf, addr);
+        }
+        RegistryRequest::Deregister(addr) => {
+            put_u8(&mut buf, TAG_DEREGISTER);
+            put_str(&mut buf, addr);
+        }
+        RegistryRequest::Resolve => put_u8(&mut buf, TAG_RESOLVE),
+    }
+    buf
+}
+
+/// Decode a registry request payload (strict: trailing bytes are an
+/// error).
+pub fn decode_registry_request(payload: &[u8]) -> Result<RegistryRequest> {
+    let mut r = Reader::new(payload);
+    let req = match r.get_u8()? {
+        TAG_REGISTER => RegistryRequest::Register(r.get_str()?),
+        TAG_HEARTBEAT => RegistryRequest::Heartbeat(r.get_str()?),
+        TAG_DEREGISTER => RegistryRequest::Deregister(r.get_str()?),
+        TAG_RESOLVE => RegistryRequest::Resolve,
+        other => {
+            return Err(err(format!("shard wire: expected registry request, got tag {other}")))
+        }
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+/// Encode a registry reply payload.
+pub fn encode_registry_reply(reply: &RegistryReply) -> Vec<u8> {
+    let mut buf = Vec::new();
+    match reply {
+        RegistryReply::Ack(known) => {
+            put_u8(&mut buf, TAG_ACK);
+            put_u8(&mut buf, u8::from(*known));
+        }
+        RegistryReply::Members(members) => {
+            put_u8(&mut buf, TAG_MEMBERS);
+            put_u64(&mut buf, members.len() as u64);
+            for m in members {
+                put_str(&mut buf, m);
+            }
+        }
+    }
+    buf
+}
+
+/// Decode a registry reply payload (strict: trailing bytes are an
+/// error).
+pub fn decode_registry_reply(payload: &[u8]) -> Result<RegistryReply> {
+    let mut r = Reader::new(payload);
+    let reply = match r.get_u8()? {
+        TAG_ACK => match r.get_u8()? {
+            0 => RegistryReply::Ack(false),
+            1 => RegistryReply::Ack(true),
+            other => return Err(err(format!("shard wire: bad ack flag {other}"))),
+        },
+        TAG_MEMBERS => {
+            let n = r.get_usize()?;
+            let mut members = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                members.push(r.get_str()?);
+            }
+            RegistryReply::Members(members)
+        }
+        other => return Err(err(format!("shard wire: expected registry reply, got tag {other}"))),
+    };
+    r.finish()?;
+    Ok(reply)
 }
 
 #[cfg(test)]
@@ -655,5 +961,246 @@ mod tests {
         assert!(read_frame(&mut cursor).is_err());
         let mut cursor = &stream[..7]; // mid-payload
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    // -- point-cloud cache frames (tags 4/5) --------------------------
+
+    fn rand_digest(rng: &mut Rng) -> PointsDigest {
+        [rng.next_u64(), rng.next_u64()]
+    }
+
+    /// Spec equality with sigma compared bitwise (it may be NaN in the
+    /// fuzz stream).
+    fn specs_match(a: &EngineSpec, b: &EngineSpec) -> bool {
+        let sigma_same = match (a.sigma, b.sigma) {
+            (None, None) => true,
+            (Some(x), Some(y)) => x.to_bits() == y.to_bits(),
+            _ => false,
+        };
+        let blank_a = EngineSpec { sigma: None, ..a.clone() };
+        let blank_b = EngineSpec { sigma: None, ..b.clone() };
+        sigma_same && blank_a == blank_b
+    }
+
+    #[test]
+    fn hashed_requests_round_trip_bitwise() {
+        check(
+            "hashed request round-trip",
+            64,
+            |rng| (rand_spec(rng), rand_batch(rng), rand_digest(rng)),
+            |(spec, probes, digest)| {
+                let payload =
+                    encode_eval_request_hashed(spec, probes.rows(0..probes.n_probes()), *digest);
+                match decode_worker_request(&payload).map_err(|e| e.to_string())? {
+                    WorkerRequest::Hashed { spec: got_spec, probes: got_probes, digest: got } => {
+                        if !specs_match(&got_spec, spec) {
+                            return Err("spec diverged".into());
+                        }
+                        if got_probes.dim() != probes.dim()
+                            || bits(got_probes.as_flat()) != bits(probes.as_flat())
+                        {
+                            return Err("probe rows diverged".into());
+                        }
+                        if got != *digest {
+                            return Err("digest diverged".into());
+                        }
+                        Ok(())
+                    }
+                    WorkerRequest::Full(..) => Err("hashed request decoded as full".into()),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn full_requests_decode_with_the_points_digest() {
+        check(
+            "full request digest",
+            32,
+            |rng| (rand_spec(rng), rand_batch(rng), rand_points(rng)),
+            |(spec, probes, pts)| {
+                let pts_bytes = encode_points(pts);
+                let payload = encode_eval_request_precoded(
+                    spec,
+                    probes.rows(0..probes.n_probes()),
+                    &pts_bytes,
+                );
+                // splicing pre-encoded bytes must be byte-identical to
+                // the direct encoder (same digestable span)
+                if payload != encode_eval_request(spec, probes.rows(0..probes.n_probes()), pts) {
+                    return Err("precoded and direct encodings diverged".into());
+                }
+                match decode_worker_request(&payload).map_err(|e| e.to_string())? {
+                    WorkerRequest::Full(req, digest) => {
+                        if digest != points_digest(&pts_bytes) {
+                            return Err("worker digest diverged from dispatcher digest".into());
+                        }
+                        if req.pts.blocks.len() != pts.blocks.len() {
+                            return Err("block count diverged".into());
+                        }
+                        Ok(())
+                    }
+                    WorkerRequest::Hashed { .. } => Err("full request decoded as hashed".into()),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn worker_replies_round_trip_bitwise() {
+        check(
+            "worker reply round-trip",
+            64,
+            |rng| {
+                let losses: Vec<f64> = (0..rng.below(32)).map(|_| edge_f64(rng)).collect();
+                (losses, rand_digest(rng))
+            },
+            |(losses, digest)| {
+                match decode_worker_reply(&encode_eval_reply(losses)).map_err(|e| e.to_string())? {
+                    EvalReply::Losses(got) if bits(&got) == bits(losses) => {}
+                    _ => return Err("losses diverged".into()),
+                }
+                let need = decode_worker_reply(&encode_need_points(*digest));
+                match need.map_err(|e| e.to_string())? {
+                    EvalReply::NeedPoints(got) if got == *digest => {}
+                    _ => return Err("need-points digest diverged".into()),
+                }
+                // the legacy strict decoder must reject a need-points
+                // frame as an error, never report losses for it
+                if decode_eval_reply(&encode_need_points(*digest)).is_ok() {
+                    return Err("legacy decoder accepted a need-points frame".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn points_digest_is_stable_and_collision_averse() {
+        check(
+            "points digest",
+            64,
+            rand_points,
+            |pts| {
+                let bytes = encode_points(pts);
+                if points_digest(&bytes) != points_digest(&bytes) {
+                    return Err("digest not deterministic".into());
+                }
+                let mut flipped = bytes.clone();
+                let last = flipped.len() - 1; // never empty: n_blocks u64
+                flipped[last] ^= 1;
+                if points_digest(&flipped) == points_digest(&bytes) {
+                    return Err("single-bit flip collided".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    // -- fleet registry frames (tags 16..=21) -------------------------
+
+    fn rand_addr(rng: &mut Rng) -> String {
+        format!("{}.example:{}", rand_string(rng), rng.below(65536))
+    }
+
+    #[test]
+    fn registry_frames_round_trip() {
+        check(
+            "registry frame round-trip",
+            128,
+            |rng| {
+                let req = match rng.below(4) {
+                    0 => RegistryRequest::Register(rand_addr(rng)),
+                    1 => RegistryRequest::Heartbeat(rand_addr(rng)),
+                    2 => RegistryRequest::Deregister(rand_addr(rng)),
+                    _ => RegistryRequest::Resolve,
+                };
+                let reply = match rng.below(3) {
+                    0 => RegistryReply::Ack(rng.below(2) == 1),
+                    // below(4) includes 0 → the empty-membership edge
+                    _ => {
+                        let n = rng.below(4);
+                        RegistryReply::Members((0..n).map(|_| rand_addr(rng)).collect())
+                    }
+                };
+                (req, reply)
+            },
+            |(req, reply)| {
+                let got = decode_registry_request(&encode_registry_request(req))
+                    .map_err(|e| e.to_string())?;
+                if got != *req {
+                    return Err("registry request diverged".into());
+                }
+                let got = decode_registry_reply(&encode_registry_reply(reply))
+                    .map_err(|e| e.to_string())?;
+                if got != *reply {
+                    return Err("registry reply diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_membership_round_trips() {
+        let reply = RegistryReply::Members(Vec::new());
+        assert_eq!(decode_registry_reply(&encode_registry_reply(&reply)).unwrap(), reply);
+    }
+
+    #[test]
+    fn corrupt_registry_payloads_error_instead_of_panicking() {
+        check(
+            "corrupt registry payload",
+            128,
+            |rng| {
+                let mut payload = if rng.below(2) == 0 {
+                    encode_registry_request(&RegistryRequest::Register(rand_addr(rng)))
+                } else {
+                    encode_registry_reply(&RegistryReply::Members(
+                        (0..rng.below(3)).map(|_| rand_addr(rng)).collect(),
+                    ))
+                };
+                match rng.below(3) {
+                    0 => {
+                        let keep = rng.below(payload.len().max(1));
+                        payload.truncate(keep);
+                    }
+                    1 => {
+                        let i = rng.below(payload.len().max(1));
+                        if i < payload.len() {
+                            payload[i] ^= 0xff;
+                        }
+                    }
+                    _ => payload.push(0xaa),
+                }
+                payload
+            },
+            |payload| {
+                // every decoder must return (either way) without panicking
+                let _ = decode_registry_request(payload);
+                let _ = decode_registry_reply(payload);
+                let _ = decode_worker_request(payload);
+                let _ = decode_worker_reply(payload);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn registry_frames_respect_the_exact_frame_limit() {
+        // a members reply exactly at a tightened limit passes; one byte
+        // less of budget is rejected by both the writer and the reader
+        let reply = RegistryReply::Members(vec!["a:1".into(), "b:2".into()]);
+        let payload = encode_registry_reply(&reply);
+        let limit = payload.len();
+        let mut stream: Vec<u8> = Vec::new();
+        write_frame_with_limit(&mut stream, &payload, limit).unwrap();
+        let mut cursor = &stream[..];
+        let got = read_frame_with_limit(&mut cursor, limit).unwrap().unwrap();
+        assert_eq!(decode_registry_reply(&got).unwrap(), reply);
+        let mut sink: Vec<u8> = Vec::new();
+        assert!(write_frame_with_limit(&mut sink, &payload, limit - 1).is_err());
+        let mut cursor = &stream[..];
+        assert!(read_frame_with_limit(&mut cursor, limit - 1).is_err());
     }
 }

@@ -4,30 +4,64 @@
 //! One worker serves any number of connections (one per shard slot of a
 //! [`crate::shard::ShardedEngine`]); each connection gets its own
 //! [`EngineCache`], so replicas are built once per connection and their
-//! warm evaluation workspaces are reused across steps. The same
+//! warm evaluation workspaces are reused across steps. The cache also
+//! holds the last few collocation clouds by content digest, so
+//! steady-state requests can name their cloud with 16 bytes (tag `4`)
+//! instead of re-shipping it; an unknown digest answers need-points
+//! (tag `5`) and the dispatcher re-sends in full. The same
 //! [`handle_request`] entry point backs the in-process transport, which
 //! is what keeps the two transports behaviorally identical.
 //!
-//! Run a standalone worker with `opinn shard-worker --listen <addr>`.
+//! Run a standalone worker with `opinn shard-worker --listen <addr>`
+//! (add `--registry <addr>` to join a fleet; see [`crate::fleet`]).
 
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
 
 use super::wire;
 use crate::engine::{Engine, EngineSpec, NativeEngine};
+use crate::pde::PointSet;
 use crate::Result;
 
+/// Point clouds a connection keeps for hashed requests, most recently
+/// used first. Small on purpose: a dispatcher reuses at most a handful
+/// of clouds concurrently (one per in-flight step plus the evaluation
+/// cloud), and a stale entry costs one need-points round trip, never a
+/// wrong answer.
+pub const POINT_CACHE_CAP: usize = 4;
+
 /// Replica engines keyed by their loss-relevant encoded [`EngineSpec`],
-/// built lazily from the first request that names them.
+/// built lazily from the first request that names them — plus the
+/// most-recent point clouds keyed by content digest.
 #[derive(Default)]
 pub struct EngineCache {
     engines: HashMap<Vec<u8>, NativeEngine>,
+    points: Vec<(wire::PointsDigest, Arc<PointSet>)>,
 }
 
 impl EngineCache {
     /// An empty cache.
     pub fn new() -> EngineCache {
         EngineCache::default()
+    }
+
+    /// The cached cloud for `digest`, refreshing its MRU position on a
+    /// hit.
+    pub fn points_for(&mut self, digest: wire::PointsDigest) -> Option<Arc<PointSet>> {
+        let idx = self.points.iter().position(|(d, _)| *d == digest)?;
+        let entry = self.points.remove(idx);
+        let pts = entry.1.clone();
+        self.points.insert(0, entry);
+        Some(pts)
+    }
+
+    /// Install a cloud under its digest, evicting the least-recently
+    /// used entry beyond [`POINT_CACHE_CAP`].
+    pub fn install_points(&mut self, digest: wire::PointsDigest, pts: Arc<PointSet>) {
+        self.points.retain(|(d, _)| *d != digest);
+        self.points.insert(0, (digest, pts));
+        self.points.truncate(POINT_CACHE_CAP);
     }
 
     /// The replica for `spec`, building it on first use. Thread counts
@@ -53,18 +87,31 @@ impl EngineCache {
 /// Serve one request payload: decode, evaluate the probe range on the
 /// spec's replica, encode the reply. Never fails — every error becomes an
 /// error reply frame, so the dispatcher can fall back to local
-/// evaluation instead of receiving a wrong or truncated loss vector.
+/// evaluation instead of receiving a wrong or truncated loss vector. A
+/// hashed request whose cloud is not cached yields a need-points reply
+/// (a protocol outcome, not an error).
 pub fn handle_request(payload: &[u8], cache: &mut EngineCache) -> Vec<u8> {
     match handle_inner(payload, cache) {
-        Ok(losses) => wire::encode_eval_reply(&losses),
+        Ok(reply) => reply,
         Err(e) => wire::encode_eval_error(&e.to_string()),
     }
 }
 
-fn handle_inner(payload: &[u8], cache: &mut EngineCache) -> Result<Vec<f64>> {
-    let req = wire::decode_eval_request(payload)?;
-    let engine = cache.engine_for(&req.spec)?;
-    engine.loss_many(&req.probes, &req.pts)
+fn handle_inner(payload: &[u8], cache: &mut EngineCache) -> Result<Vec<u8>> {
+    let (spec, probes, pts) = match wire::decode_worker_request(payload)? {
+        wire::WorkerRequest::Full(req, digest) => {
+            let pts = Arc::new(req.pts);
+            cache.install_points(digest, pts.clone());
+            (req.spec, req.probes, pts)
+        }
+        wire::WorkerRequest::Hashed { spec, probes, digest } => match cache.points_for(digest) {
+            Some(pts) => (spec, probes, pts),
+            None => return Ok(wire::encode_need_points(digest)),
+        },
+    };
+    let engine = cache.engine_for(&spec)?;
+    let losses = engine.loss_many(&probes, &pts)?;
+    Ok(wire::encode_eval_reply(&losses))
 }
 
 /// A TCP shard worker bound to a listen address.
@@ -171,6 +218,56 @@ mod tests {
         let mut cache = EngineCache::new();
         let reply = handle_request(b"not a frame payload", &mut cache);
         assert!(wire::decode_eval_reply(&reply).is_err());
+    }
+
+    #[test]
+    fn hashed_requests_hit_the_point_cache() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let spec = eng.replica_spec().unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(9);
+        let pts = eng.pde().sample_points(&mut rng);
+        let mut probes = ProbeBatch::new(params.len());
+        for _ in 0..2 {
+            probes.push_perturbed(&params);
+        }
+        let want = eng.loss_many(&probes, &pts).unwrap();
+
+        let digest = wire::points_digest(&wire::encode_points(&pts));
+        let mut cache = EngineCache::new();
+        // hashed before the cloud is known → need-points, not an error
+        let hashed = wire::encode_eval_request_hashed(&spec, probes.rows(0..2), digest);
+        match wire::decode_worker_reply(&handle_request(&hashed, &mut cache)).unwrap() {
+            wire::EvalReply::NeedPoints(d) => assert_eq!(d, digest),
+            wire::EvalReply::Losses(_) => panic!("cache hit on an empty cache"),
+        }
+        // a full request installs the cloud and evaluates ...
+        let full = wire::encode_eval_request(&spec, probes.rows(0..2), &pts);
+        match wire::decode_worker_reply(&handle_request(&full, &mut cache)).unwrap() {
+            wire::EvalReply::Losses(got) => assert_eq!(got, want),
+            wire::EvalReply::NeedPoints(_) => panic!("full request must evaluate"),
+        }
+        // ... and the same hashed request now matches bitwise
+        match wire::decode_worker_reply(&handle_request(&hashed, &mut cache)).unwrap() {
+            wire::EvalReply::Losses(got) => assert_eq!(got, want),
+            wire::EvalReply::NeedPoints(_) => panic!("hashed request must hit after a full send"),
+        }
+    }
+
+    #[test]
+    fn point_cache_evicts_least_recently_used() {
+        let mut cache = EngineCache::new();
+        let digest_of = |i: usize| {
+            let pts = PointSet { blocks: vec![(format!("b{i}"), vec![i as f64])] };
+            wire::points_digest(&wire::encode_points(&pts))
+        };
+        for i in 0..(POINT_CACHE_CAP + 1) {
+            let pts = PointSet { blocks: vec![(format!("b{i}"), vec![i as f64])] };
+            cache.install_points(digest_of(i), Arc::new(pts));
+        }
+        assert_eq!(cache.points.len(), POINT_CACHE_CAP);
+        assert!(cache.points_for(digest_of(0)).is_none(), "oldest entry evicted");
+        assert!(cache.points_for(digest_of(POINT_CACHE_CAP)).is_some(), "newest entry kept");
     }
 
     #[test]

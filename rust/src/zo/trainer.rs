@@ -53,6 +53,10 @@ pub struct TrainConfig {
     /// TCP shard workers (`host:port`), one replica per entry; see
     /// [`crate::session::SessionBuilder::shard_hosts`].
     pub shard_hosts: Vec<String>,
+    /// Elastic fleet mode: resolve the replica set from the
+    /// `opinn registry` at this address every step; see
+    /// [`crate::session::SessionBuilder::registry`].
+    pub registry: Option<String>,
     /// Evaluation kernel precision; see
     /// [`crate::session::SessionBuilder::eval_precision`].
     pub eval_precision: EvalPrecision,
@@ -74,6 +78,7 @@ impl TrainConfig {
             pipeline_depth: 1,
             shards: 0,
             shard_hosts: Vec::new(),
+            registry: None,
             eval_precision: EvalPrecision::F64,
             verbose: false,
         }

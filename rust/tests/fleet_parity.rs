@@ -1,0 +1,275 @@
+//! Golden parity contract of elastic fleet sharding: a weight-RGE
+//! session resolving its replica set from a fleet directory — in-process
+//! shared table or a real TCP `opinn registry` — must reproduce the
+//! single-engine trajectory **bitwise** while workers join mid-run, miss
+//! their heartbeat budget, and rejoin. Row-wise-independent losses plus
+//! spec-identical replicas make ANY assignment of rows to live workers
+//! (including timing-dependent work stealing and churn) assemble the
+//! same loss vector.
+//!
+//! Native-engine based, so these run without artifacts. TCP cases bind
+//! ephemeral loopback ports and leave their accept loops on detached
+//! threads (the test process exit reaps them).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use optical_pinn::engine::NativeEngine;
+use optical_pinn::fleet::{
+    FleetConfig, FleetDirectory, Heartbeater, MembershipTable, Registry, RegistryClient,
+};
+use optical_pinn::session::{EvalObserver, MultiObserver, Observer, SessionBuilder, StepCtx};
+use optical_pinn::shard::ShardWorker;
+use optical_pinn::zo::rge::RgeConfig;
+use optical_pinn::zo::{History, TrainMethod};
+use optical_pinn::Result;
+
+const EPOCHS: usize = 10;
+const EVAL_EVERY: usize = 4;
+
+/// Cumulative per-replica rows recorded at the final epoch.
+type FinalStats = Arc<Mutex<Vec<(String, u64)>>>;
+
+/// 8 probes per step (4 query pairs) so every dispatch has enough
+/// work-stealing chunks for both replicas to claim some.
+fn rge() -> TrainMethod {
+    TrainMethod::ZoRge(RgeConfig { n_queries: 4, ..Default::default() })
+}
+
+/// Run one weight-RGE session; `directory` enables fleet sharding and
+/// `churn` (an extra observer) drives membership changes between steps.
+fn run_session(
+    directory: Option<FleetDirectory>,
+    churn: Option<Box<dyn Observer>>,
+) -> (Vec<f64>, History) {
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    eng.set_probe_threads(2);
+    let layout = eng.model.param_layout();
+    let mut params = eng.model.init_flat(0);
+    let mut builder = SessionBuilder::new(EPOCHS).eval_every(EVAL_EVERY).method(rge(), layout);
+    if let Some(directory) = directory {
+        builder = builder.fleet_directory(directory);
+    }
+    if let Some(churn) = churn {
+        // same eval policy as the default observer, plus the churn hook
+        builder = builder.observer(Box::new(MultiObserver {
+            observers: vec![
+                Box::new(EvalObserver {
+                    eval_every: EVAL_EVERY,
+                    seed: 0,
+                    verbose: false,
+                    tag: None,
+                }),
+                churn,
+            ],
+        }));
+    }
+    let hist = builder.build(&mut eng).unwrap().run(&mut params).unwrap();
+    (params, hist)
+}
+
+fn assert_hist_eq(base: &History, got: &History, what: &str) {
+    assert_eq!(base.steps, got.steps, "{what}: eval steps diverged");
+    assert_eq!(base.losses, got.losses, "{what}: loss curve diverged");
+    assert_eq!(base.errors, got.errors, "{what}: error curve diverged");
+    assert_eq!(base.forwards, got.forwards, "{what}: forward curve diverged");
+    assert_eq!(base.total_forwards, got.total_forwards, "{what}: total forwards diverged");
+}
+
+/// Record the sharded engine's cumulative per-replica stats at the last
+/// epoch (the engine is out of reach once the session returns).
+fn record_final_stats(ctx: &mut StepCtx<'_>, into: &FinalStats) {
+    if ctx.info.last {
+        if let Some(stats) = ctx.engine.shard_stats() {
+            *into.lock().unwrap() = stats.into_iter().map(|s| (s.label, s.rows)).collect();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// in-process: a shared membership table driven between steps
+// ---------------------------------------------------------------------
+
+struct TableChurn {
+    table: Arc<Mutex<MembershipTable>>,
+    finals: FinalStats,
+}
+
+impl Observer for TableChurn {
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, _hist: &mut History) -> Result<()> {
+        {
+            let now = Instant::now();
+            let mut t = self.table.lock().unwrap();
+            match ctx.info.epoch {
+                // first worker joins mid-run, a second follows, the
+                // first leaves, then rejoins at the back of the order
+                1 => {
+                    t.register("in-process", now);
+                }
+                3 => {
+                    t.register("in-process#2", now);
+                }
+                5 => {
+                    t.deregister("in-process");
+                }
+                7 => {
+                    t.register("in-process", now);
+                }
+                _ => {}
+            }
+        }
+        record_final_stats(ctx, &self.finals);
+        Ok(())
+    }
+}
+
+#[test]
+fn in_process_fleet_churn_matches_single_engine_bitwise() {
+    let (p_base, h_base) = run_session(None, None);
+
+    // the fleet starts EMPTY: the first dispatches run fully local
+    let table = Arc::new(Mutex::new(MembershipTable::new(Duration::from_secs(3600))));
+    let finals: FinalStats = Arc::new(Mutex::new(Vec::new()));
+    let churn =
+        Box::new(TableChurn { table: Arc::clone(&table), finals: Arc::clone(&finals) });
+    let (p, h) = run_session(Some(FleetDirectory::shared(table)), Some(churn));
+
+    assert_eq!(p_base, p, "in-process fleet churn: params diverged");
+    assert_hist_eq(&h_base, &h, "in-process fleet churn");
+    let finals = finals.lock().unwrap();
+    let labels: Vec<&str> = finals.iter().map(|(l, _)| l.as_str()).collect();
+    assert_eq!(
+        labels,
+        vec!["in-process#2", "in-process"],
+        "final membership must reflect the leave/rejoin order"
+    );
+    assert!(
+        finals.iter().any(|(l, rows)| l == "in-process#2" && *rows > 0),
+        "the mid-run joiner must end up evaluating rows, got {finals:?}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// TCP loopback: a real registry, real workers, heartbeat-miss expiry
+// ---------------------------------------------------------------------
+
+/// Spawn one TCP shard worker on an ephemeral loopback port; returns its
+/// address (the accept loop stays on a detached thread).
+fn spawn_worker() -> String {
+    let worker = ShardWorker::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = worker.local_addr().expect("bound addr").to_string();
+    std::thread::spawn(move || {
+        let _ = worker.serve_forever();
+    });
+    addr
+}
+
+/// Spin until the registry's resolved membership satisfies `pred`, so
+/// churn is committed before the next training step dispatches.
+fn await_membership(registry_addr: &str, what: &str, pred: impl Fn(&[String]) -> bool) {
+    let mut client = RegistryClient::new(registry_addr);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if pred(&client.resolve().expect("registry resolve")) {
+            return;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+struct RegistryChurn {
+    registry_addr: String,
+    config: FleetConfig,
+    worker_a: Option<(String, Heartbeater)>,
+    // held only so B keeps heartbeating until the run ends
+    _worker_b: Option<(String, Heartbeater)>,
+    finals: FinalStats,
+    a_addr: Arc<Mutex<String>>,
+    b_addr: Arc<Mutex<String>>,
+}
+
+impl Observer for RegistryChurn {
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, _hist: &mut History) -> Result<()> {
+        match ctx.info.epoch {
+            // worker A joins the initially-empty fleet
+            1 => {
+                let addr = spawn_worker();
+                let hb = Heartbeater::spawn(&self.registry_addr, &addr, self.config.heartbeat);
+                let want = addr.clone();
+                await_membership(&self.registry_addr, "worker A to join", move |m| {
+                    m.contains(&want)
+                });
+                *self.a_addr.lock().unwrap() = addr.clone();
+                self.worker_a = Some((addr, hb));
+            }
+            // A stops heartbeating WITHOUT deregistering (crash
+            // simulation); its TTL lapses and the registry drops it
+            4 => {
+                let (addr, hb) = self.worker_a.take().expect("A spawned at epoch 1");
+                hb.abandon();
+                std::thread::sleep(self.config.ttl() + Duration::from_millis(50));
+                let gone = addr.clone();
+                await_membership(&self.registry_addr, "worker A to expire", move |m| {
+                    !m.contains(&gone)
+                });
+            }
+            // worker B registers mid-run
+            6 => {
+                let addr = spawn_worker();
+                let hb = Heartbeater::spawn(&self.registry_addr, &addr, self.config.heartbeat);
+                let want = addr.clone();
+                await_membership(&self.registry_addr, "worker B to join", move |m| {
+                    m.contains(&want)
+                });
+                *self.b_addr.lock().unwrap() = addr.clone();
+                self._worker_b = Some((addr, hb));
+            }
+            _ => {}
+        }
+        record_final_stats(ctx, &self.finals);
+        Ok(())
+    }
+}
+
+#[test]
+fn tcp_registry_churn_matches_single_engine_bitwise() {
+    let (p_base, h_base) = run_session(None, None);
+
+    // fast liveness so the heartbeat-miss expiry happens within the run
+    let config = FleetConfig { heartbeat: Duration::from_millis(50), miss_budget: 2 };
+    let registry = Registry::bind("127.0.0.1:0", config).unwrap();
+    let registry_addr = registry.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let _ = registry.serve_forever();
+    });
+
+    let finals: FinalStats = Arc::new(Mutex::new(Vec::new()));
+    let a_addr = Arc::new(Mutex::new(String::new()));
+    let b_addr = Arc::new(Mutex::new(String::new()));
+    let churn = Box::new(RegistryChurn {
+        registry_addr: registry_addr.clone(),
+        config,
+        worker_a: None,
+        _worker_b: None,
+        finals: Arc::clone(&finals),
+        a_addr: Arc::clone(&a_addr),
+        b_addr: Arc::clone(&b_addr),
+    });
+    // zero pre-listed hosts: the session starts against an empty registry
+    let (p, h) = run_session(Some(FleetDirectory::registry(registry_addr)), Some(churn));
+
+    assert_eq!(p_base, p, "tcp registry churn: params diverged");
+    assert_hist_eq(&h_base, &h, "tcp registry churn");
+    let finals = finals.lock().unwrap();
+    let a_addr = a_addr.lock().unwrap();
+    let b_addr = b_addr.lock().unwrap();
+    assert!(
+        !finals.iter().any(|(l, _)| l == &*a_addr),
+        "the heartbeat-missing worker must be out of the final replica set, got {finals:?}"
+    );
+    assert!(
+        finals.iter().any(|(l, rows)| l == &*b_addr && *rows > 0),
+        "the mid-run joiner must end up evaluating rows, got {finals:?}"
+    );
+}
