@@ -119,16 +119,28 @@ impl Table {
 }
 
 /// Append a JSON record for this bench run under `bench_out/`.
+///
+/// I/O failures (e.g. a read-only CI workspace) are reported on stderr
+/// instead of aborting the bench — the timings already printed are
+/// still useful — but they are never silently swallowed: an empty
+/// trajectory must be visible in the logs.
 pub fn record(target: &str, payload: Json) {
-    let dir = std::path::Path::new("bench_out");
-    let _ = std::fs::create_dir_all(dir);
+    if let Err(e) = record_in(std::path::Path::new("bench_out"), target, payload) {
+        eprintln!("bench_harness: warning: could not record {target}: {e}");
+    }
+}
+
+/// Fallible core of [`record`]: append `payload` to `<dir>/<target>.json`
+/// (created as a one-element array when absent or unreadable).
+pub fn record_in(dir: &std::path::Path, target: &str, payload: Json) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{target}.json"));
     let mut arr = match Json::from_file(&path) {
         Ok(Json::Arr(v)) => v,
         _ => Vec::new(),
     };
     arr.push(payload);
-    let _ = std::fs::write(&path, Json::Arr(arr).to_string());
+    std::fs::write(&path, Json::Arr(arr).to_string())
 }
 
 #[cfg(test)]
@@ -160,5 +172,41 @@ mod tests {
     fn table_rejects_bad_rows() {
         let mut t = Table::new("T", &["a"]);
         t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn record_in_appends_and_surfaces_io_errors() {
+        let base = std::env::temp_dir().join(format!("opinn_record_{}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        // happy path: two records accumulate into one array
+        record_in(&base, "t", Json::Num(1.0)).unwrap();
+        record_in(&base, "t", Json::Num(2.0)).unwrap();
+        let arr = Json::from_file(&base.join("t.json")).unwrap();
+        assert_eq!(arr, Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]));
+        // unwritable dir (a plain file where the dir should be): the
+        // error must surface, not vanish into a `let _`
+        let blocked = base.join("not_a_dir");
+        std::fs::write(&blocked, b"x").unwrap();
+        assert!(record_in(&blocked, "t", Json::Num(3.0)).is_err());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn record_in_fails_on_a_read_only_dir() {
+        use std::os::unix::fs::PermissionsExt;
+        let base = std::env::temp_dir().join(format!("opinn_record_ro_{}", std::process::id()));
+        let dir = base.join("ro");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o555)).unwrap();
+        let result = record_in(&dir, "t", Json::Num(1.0));
+        // restore before asserting so cleanup works even on failure
+        std::fs::set_permissions(&dir, std::fs::Permissions::from_mode(0o755)).unwrap();
+        let _ = std::fs::remove_dir_all(&base);
+        // root (some CI containers) can write anywhere; only assert the
+        // error when the permission bit actually blocked the write
+        if let Err(e) = result {
+            assert_eq!(e.kind(), std::io::ErrorKind::PermissionDenied);
+        }
     }
 }

@@ -1,0 +1,186 @@
+//! The wire protocol between the bench harness and the `opinn train`
+//! child processes it spawns.
+//!
+//! A child launched with `--bench-json` attaches a [`StepTimer`] to its
+//! session and, after training, prints exactly one machine-readable
+//! line to stdout — [`CHILD_MARKER`] followed by a JSON summary. The
+//! parent harness scrapes that line out of whatever else reached stdout
+//! with [`parse_child_summary`]. Human-readable progress stays on
+//! stderr, so the protocol survives verbose children.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::session::{Observer, StepCtx};
+use crate::util::json::Json;
+use crate::zo::trainer::History;
+use crate::{err, Result};
+
+/// Prefix of the single machine-readable stdout line a `--bench-json`
+/// child emits. The suffix is the protocol version: bump it when the
+/// summary schema changes shape.
+pub const CHILD_MARKER: &str = "OPINN_BENCH_V1";
+
+/// An [`Observer`] that records the wall-clock duration of every
+/// optimizer step into a shared buffer.
+///
+/// Place it *first* in a [`crate::session::MultiObserver`] so each
+/// sample closes before the same step's eval/checkpoint observers run —
+/// step latency then measures the training path, not the eval schedule.
+pub struct StepTimer {
+    samples: Arc<Mutex<Vec<f64>>>,
+    last: Instant,
+}
+
+impl StepTimer {
+    /// A timer appending step durations (seconds) into `samples`.
+    /// The interval clock starts at construction, so build the timer
+    /// immediately before [`crate::session::Session::run`].
+    pub fn new(samples: Arc<Mutex<Vec<f64>>>) -> StepTimer {
+        StepTimer { samples, last: Instant::now() }
+    }
+}
+
+impl Observer for StepTimer {
+    fn after_step(&mut self, _ctx: &mut StepCtx<'_>, _hist: &mut History) -> Result<()> {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.samples.lock().unwrap_or_else(|p| p.into_inner()).push(dt);
+        Ok(())
+    }
+}
+
+/// A non-finite number has no JSON literal; emit `null` instead.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// The child's summary line payload: run totals from the [`History`]
+/// plus the per-step latency samples collected by [`StepTimer`].
+pub fn child_summary_json(hist: &History, step_secs: &[f64]) -> Json {
+    Json::obj(vec![
+        ("epochs", Json::Num(step_secs.len() as f64)),
+        ("total_forwards", Json::Num(hist.total_forwards as f64)),
+        ("wall_secs", Json::Num(hist.wall_secs)),
+        ("final_rel_l2", num_or_null(hist.final_error)),
+        ("wire_tx_bytes", Json::Num(hist.wire_tx_bytes as f64)),
+        ("wire_rx_bytes", Json::Num(hist.wire_rx_bytes as f64)),
+        ("step_secs", Json::arr_f64(step_secs)),
+    ])
+}
+
+/// A parsed child summary line.
+#[derive(Debug, Clone)]
+pub struct ChildSummary {
+    /// Optimizer steps the child ran (length of `step_secs`).
+    pub epochs: usize,
+    /// Training forward queries the run consumed.
+    pub total_forwards: u64,
+    /// The child's own wall-clock training time in seconds.
+    pub wall_secs: f64,
+    /// Final relative-l2 eval error (NaN when the child reported null).
+    pub final_rel_l2: f64,
+    /// Bytes the child sent to shard workers (0 for local runs).
+    pub wire_tx_bytes: u64,
+    /// Bytes the child received from shard workers (0 for local runs).
+    pub wire_rx_bytes: u64,
+    /// Per-step wall-clock latency samples in seconds.
+    pub step_secs: Vec<f64>,
+}
+
+impl ChildSummary {
+    /// Photonic forward queries per second of child wall-clock time —
+    /// the headline throughput of every scenario.
+    pub fn probes_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.total_forwards as f64 / self.wall_secs
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Scrape the last [`CHILD_MARKER`] line out of a child's captured
+/// stdout and decode the JSON summary after it.
+pub fn parse_child_summary(stdout: &str) -> Result<ChildSummary> {
+    let line = stdout
+        .lines()
+        .rev()
+        .find_map(|l| l.trim().strip_prefix(CHILD_MARKER))
+        .ok_or_else(|| err(format!("child stdout carried no {CHILD_MARKER} line")))?;
+    let j = Json::parse(line.trim())?;
+    let opt_num = |key: &str| -> Result<f64> {
+        match j.req(key)? {
+            Json::Null => Ok(f64::NAN),
+            v => v.as_f64(),
+        }
+    };
+    Ok(ChildSummary {
+        epochs: j.req("epochs")?.as_usize()?,
+        total_forwards: j.req("total_forwards")?.as_f64()? as u64,
+        wall_secs: j.req("wall_secs")?.as_f64()?,
+        final_rel_l2: opt_num("final_rel_l2")?,
+        wire_tx_bytes: j.req("wire_tx_bytes")?.as_f64()? as u64,
+        wire_rx_bytes: j.req("wire_rx_bytes")?.as_f64()? as u64,
+        step_secs: j.req("step_secs")?.as_f64_vec()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture_hist() -> History {
+        History {
+            final_error: 3.5e-2,
+            total_forwards: 960,
+            wall_secs: 1.25,
+            wire_tx_bytes: 2048,
+            wire_rx_bytes: 512,
+            ..History::default()
+        }
+    }
+
+    #[test]
+    fn summary_round_trips_through_the_marker_line() {
+        let steps = [0.01, 0.02, 0.015];
+        let line = format!(
+            "{CHILD_MARKER} {}",
+            child_summary_json(&fixture_hist(), &steps).to_string()
+        );
+        // buried in unrelated stdout noise, last marker line wins
+        let stdout = format!("warmup noise\n{CHILD_MARKER} {{}}\n{line}\ntrailing noise\n");
+        let s = parse_child_summary(&stdout).unwrap();
+        assert_eq!(s.epochs, 3);
+        assert_eq!(s.total_forwards, 960);
+        assert_eq!(s.wall_secs, 1.25);
+        assert_eq!(s.final_rel_l2, 3.5e-2);
+        assert_eq!((s.wire_tx_bytes, s.wire_rx_bytes), (2048, 512));
+        assert_eq!(s.step_secs, steps);
+        assert!((s.probes_per_sec() - 960.0 / 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_final_error_serializes_as_null_and_parses_back_as_nan() {
+        let mut hist = fixture_hist();
+        hist.final_error = f64::NAN;
+        let payload = child_summary_json(&hist, &[0.01]);
+        let text = payload.to_string();
+        assert!(text.contains("\"final_rel_l2\":null"), "{text}");
+        let s = parse_child_summary(&format!("{CHILD_MARKER} {text}")).unwrap();
+        assert!(s.final_rel_l2.is_nan());
+    }
+
+    #[test]
+    fn missing_marker_is_a_clean_error() {
+        assert!(parse_child_summary("epoch 10 loss 1e-2\n").is_err());
+        assert!(parse_child_summary("").is_err());
+        // marker present but payload malformed
+        assert!(parse_child_summary(&format!("{CHILD_MARKER} {{not json")).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! Regression gating: diff two `BENCH_<scenario>.json` records and
+//! decide whether the current run is worse than the baseline by more
+//! than an allowed factor.
+//!
+//! The gate watches the headline metrics only — throughput, median and
+//! tail step latency, peak RSS. Per-case numbers stay informational:
+//! CI noise on a cold runner would otherwise page on every sub-case
+//! wiggle, and a generous threshold (2x by default) on the headline is
+//! what keeps the trajectory useful rather than noisy.
+
+use crate::util::json::Json;
+use crate::{err, Result};
+
+use super::emit::validate_report;
+
+/// The factor by which a metric may worsen before `--compare` fails.
+pub const DEFAULT_THRESHOLD: f64 = 2.0;
+
+/// Whether a metric improves upward or downward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Throughput-like: regression means the value dropped.
+    HigherIsBetter,
+    /// Latency/footprint-like: regression means the value grew.
+    LowerIsBetter,
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    /// Dotted path of the metric (e.g. `step_ms.p99`).
+    pub metric: &'static str,
+    /// Which way this metric improves.
+    pub direction: Direction,
+    /// Baseline value.
+    pub baseline: f64,
+    /// Current value.
+    pub current: f64,
+    /// How many times worse the current value is (1.0 = unchanged,
+    /// below 1.0 = improved).
+    pub worse_ratio: f64,
+    /// Whether `worse_ratio` reached the threshold.
+    pub regressed: bool,
+}
+
+/// The headline metrics the gate watches, with their directions.
+const WATCHED: &[(&str, Direction)] = &[
+    ("probes_per_sec", Direction::HigherIsBetter),
+    ("step_ms.p50", Direction::LowerIsBetter),
+    ("step_ms.p99", Direction::LowerIsBetter),
+    ("peak_rss_bytes", Direction::LowerIsBetter),
+];
+
+/// Fetch a top-level or one-dot-deep numeric field.
+fn metric_value(record: &Json, path: &str) -> Result<f64> {
+    match path.split_once('.') {
+        Some((outer, inner)) => record.req(outer)?.req(inner)?.as_f64(),
+        None => record.req(path)?.as_f64(),
+    }
+}
+
+/// Diff `current` against `baseline`, both validated first. A metric
+/// regresses when it is at least `threshold` times worse; metrics whose
+/// baseline is non-positive or non-finite are skipped (nothing sane to
+/// ratio against — e.g. RSS on a platform without `/proc`).
+pub fn compare(baseline: &Json, current: &Json, threshold: f64) -> Result<Vec<Delta>> {
+    if !(threshold.is_finite() && threshold >= 1.0) {
+        return Err(err(format!("--threshold must be >= 1.0, got {threshold}")));
+    }
+    validate_report(baseline)?;
+    validate_report(current)?;
+    let (b_scenario, c_scenario) =
+        (baseline.req("scenario")?.as_str()?, current.req("scenario")?.as_str()?);
+    if b_scenario != c_scenario {
+        return Err(err(format!(
+            "scenario mismatch: baseline is {b_scenario:?}, current is {c_scenario:?}"
+        )));
+    }
+    let mut deltas = Vec::new();
+    for &(metric, direction) in WATCHED {
+        let b = metric_value(baseline, metric)?;
+        let c = metric_value(current, metric)?;
+        if !(b.is_finite() && b > 0.0) || !c.is_finite() {
+            continue;
+        }
+        let worse_ratio = match direction {
+            Direction::HigherIsBetter => {
+                if c > 0.0 {
+                    b / c
+                } else {
+                    f64::INFINITY
+                }
+            }
+            Direction::LowerIsBetter => c / b,
+        };
+        let regressed = worse_ratio >= threshold;
+        deltas.push(Delta { metric, direction, baseline: b, current: c, worse_ratio, regressed });
+    }
+    Ok(deltas)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::benchsuite::emit::{report_to_json, tests::fixture_report};
+
+    use super::*;
+
+    fn doctor(record: &Json, path: &str, scale: f64) -> Json {
+        let mut out = record.clone();
+        let value = metric_value(record, path).unwrap() * scale;
+        let (outer, inner) = path.split_once('.').map_or((path, None), |(a, b)| (a, Some(b)));
+        if let Json::Obj(m) = &mut out {
+            match inner {
+                None => {
+                    m.insert(outer.to_string(), Json::Num(value));
+                }
+                Some(inner) => {
+                    if let Some(Json::Obj(sub)) = m.get_mut(outer) {
+                        sub.insert(inner.to_string(), Json::Num(value));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn identical_records_never_regress() {
+        let record = report_to_json(&fixture_report(), false);
+        let deltas = compare(&record, &record, DEFAULT_THRESHOLD).unwrap();
+        assert_eq!(deltas.len(), WATCHED.len());
+        for d in &deltas {
+            assert!((d.worse_ratio - 1.0).abs() < 1e-12, "{d:?}");
+            assert!(!d.regressed, "{d:?}");
+        }
+    }
+
+    #[test]
+    fn throughput_drop_and_latency_growth_both_trip_the_gate() {
+        let base = report_to_json(&fixture_report(), false);
+        // throughput halved -> worse_ratio 2.0 -> at the 2x gate
+        let slow = doctor(&base, "probes_per_sec", 0.5);
+        let deltas = compare(&base, &slow, 2.0).unwrap();
+        let d = deltas.iter().find(|d| d.metric == "probes_per_sec").unwrap();
+        assert!(d.regressed && (d.worse_ratio - 2.0).abs() < 1e-12, "{d:?}");
+        // tail latency tripled -> regressed; median untouched -> not
+        let tailheavy = doctor(&base, "step_ms.p99", 3.0);
+        let deltas = compare(&base, &tailheavy, 2.0).unwrap();
+        assert!(deltas.iter().find(|d| d.metric == "step_ms.p99").unwrap().regressed);
+        assert!(!deltas.iter().find(|d| d.metric == "step_ms.p50").unwrap().regressed);
+        // improvements never regress, whatever their size
+        let fast = doctor(&base, "probes_per_sec", 100.0);
+        assert!(compare(&base, &fast, 2.0).unwrap().iter().all(|d| !d.regressed));
+    }
+
+    #[test]
+    fn zero_baseline_metrics_are_skipped_not_divided() {
+        let base = report_to_json(&fixture_report(), false);
+        // the fixture is a local run: peak_rss may be 0 off-Linux; force
+        // the case by zeroing the baseline RSS
+        let no_rss = doctor(&base, "peak_rss_bytes", 0.0);
+        let deltas = compare(&no_rss, &base, 2.0).unwrap();
+        assert!(deltas.iter().all(|d| d.metric != "peak_rss_bytes"));
+    }
+
+    #[test]
+    fn mismatched_inputs_are_rejected() {
+        let record = report_to_json(&fixture_report(), false);
+        let mut other = record.clone();
+        if let Json::Obj(m) = &mut other {
+            m.insert("scenario".to_string(), Json::str("pipelined"));
+        }
+        assert!(compare(&record, &other, 2.0).is_err(), "scenario mismatch");
+        assert!(compare(&record, &record, 0.5).is_err(), "threshold below 1");
+        assert!(compare(&record, &Json::Null, 2.0).is_err(), "invalid record");
+    }
+}

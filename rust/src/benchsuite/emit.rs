@@ -1,0 +1,334 @@
+//! Report emission: fold a [`ScenarioReport`] into the schema-versioned
+//! `BENCH_<scenario>.json` record at the repo root, and validate records
+//! on the way back in (golden tests, `--compare` inputs).
+//!
+//! The schema is deliberately flat and fully validated: every future PR
+//! is judged against these files, so a field that silently vanished or
+//! changed meaning would corrupt the whole trajectory. Bump
+//! [`SCHEMA_VERSION`] (and the committed golden fixture) on any shape
+//! change.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::metrics::{percentiles, HIST_SCHEME, LatencyHistogram, Percentiles};
+use super::registry::{CaseReport, ScenarioReport};
+
+/// Version stamped into every record; `--compare` refuses mixed
+/// versions.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Walk up from the current directory to the repo root (the first
+/// ancestor containing `.git`), falling back to the current directory —
+/// mirrors where `BENCH_hotpath.json` lands so the whole trajectory
+/// lives in one place.
+pub fn repo_root() -> PathBuf {
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir = cwd.clone();
+    loop {
+        if dir.join(".git").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return cwd;
+        }
+    }
+}
+
+/// FNV-1a over the scenario name and every case argv: two records with
+/// equal digests measured the same configuration, so their numbers are
+/// directly comparable.
+pub fn config_digest(report: &ScenarioReport) -> String {
+    let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |s: &str| {
+        for b in s.bytes() {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        // NUL separator so ["ab","c"] and ["a","bc"] differ
+        hash ^= 0;
+        hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    eat(&report.scenario);
+    for case in &report.cases {
+        eat(&case.name);
+        for arg in &case.argv {
+            eat(arg);
+        }
+    }
+    format!("{hash:016x}")
+}
+
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Percentile summary in milliseconds as a JSON object.
+fn step_ms_json(p: &Percentiles) -> Json {
+    let ms = 1e3;
+    Json::obj(vec![
+        ("count", Json::Num(p.count as f64)),
+        ("mean", num_or_null(p.mean * ms)),
+        ("min", num_or_null(p.min * ms)),
+        ("max", num_or_null(p.max * ms)),
+        ("p50", num_or_null(p.p50 * ms)),
+        ("p90", num_or_null(p.p90 * ms)),
+        ("p99", num_or_null(p.p99 * ms)),
+    ])
+}
+
+fn wire_json(tx: u64, rx: u64) -> Json {
+    Json::obj(vec![
+        ("tx_bytes", Json::Num(tx as f64)),
+        ("rx_bytes", Json::Num(rx as f64)),
+    ])
+}
+
+fn case_json(case: &CaseReport) -> Json {
+    let s = &case.summary;
+    Json::obj(vec![
+        ("name", Json::str(case.name.clone())),
+        ("argv", Json::Arr(case.argv.iter().map(|a| Json::str(a.clone())).collect())),
+        ("epochs", Json::Num(s.epochs as f64)),
+        ("total_forwards", Json::Num(s.total_forwards as f64)),
+        ("probes_per_sec", num_or_null(s.probes_per_sec())),
+        ("step_ms", step_ms_json(&percentiles(&s.step_secs))),
+        ("final_rel_l2", num_or_null(s.final_rel_l2)),
+        ("wall_secs", Json::Num(case.wall_secs)),
+        ("peak_rss_bytes", Json::Num(case.peak_rss_bytes as f64)),
+        ("cpu_ticks", Json::Num(case.cpu_ticks as f64)),
+        ("wire", wire_json(s.wire_tx_bytes, s.wire_rx_bytes)),
+    ])
+}
+
+/// The full record for one scenario. Top-level metrics come from the
+/// headline case; the per-case breakdown and the merged latency
+/// histogram keep the rest.
+pub fn report_to_json(report: &ScenarioReport, full: bool) -> Json {
+    let head = report.headline_case();
+    let mut hist = LatencyHistogram::new();
+    for case in &report.cases {
+        hist.merge(&LatencyHistogram::from_samples(&case.summary.step_secs));
+    }
+    Json::obj(vec![
+        ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+        ("scenario", Json::str(report.scenario.clone())),
+        ("config_digest", Json::str(config_digest(report))),
+        ("quick_scale", Json::Bool(!full)),
+        ("probes_per_sec", num_or_null(head.summary.probes_per_sec())),
+        ("step_ms", step_ms_json(&percentiles(&head.summary.step_secs))),
+        ("peak_rss_bytes", Json::Num(head.peak_rss_bytes as f64)),
+        ("cpu_ticks", Json::Num(head.cpu_ticks as f64)),
+        ("wire", wire_json(head.summary.wire_tx_bytes, head.summary.wire_rx_bytes)),
+        ("histogram", hist.to_json()),
+        ("cases", Json::Arr(report.cases.iter().map(case_json).collect())),
+    ])
+}
+
+/// Validate and write `BENCH_<scenario>.json` into `dir`; returns the
+/// path written.
+pub fn write_report(dir: &Path, report: &ScenarioReport, full: bool) -> Result<PathBuf> {
+    let record = report_to_json(report, full);
+    validate_report(&record)?;
+    let path = dir.join(format!("BENCH_{}.json", report.scenario));
+    std::fs::write(&path, record.to_string())?;
+    Ok(path)
+}
+
+fn bad(msg: impl Into<String>) -> Error {
+    Error::Json(format!("bench record: {}", msg.into()))
+}
+
+fn check_num(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?.as_f64().map_err(|_| bad(format!("{key} must be a number")))
+}
+
+/// A number, or null (the encoding of NaN — e.g. a child that never
+/// evaluated).
+fn check_num_or_null(j: &Json, key: &str) -> Result<()> {
+    match j.req(key)? {
+        Json::Null | Json::Num(_) => Ok(()),
+        _ => Err(bad(format!("{key} must be a number or null"))),
+    }
+}
+
+fn check_step_ms(j: &Json, what: &str) -> Result<()> {
+    let p = j.req("step_ms").map_err(|_| bad(format!("{what}: missing step_ms")))?;
+    if check_num(p, "count")? < 0.0 {
+        return Err(bad(format!("{what}: negative step_ms.count")));
+    }
+    for key in ["mean", "min", "max", "p50", "p90", "p99"] {
+        check_num_or_null(p, key).map_err(|_| bad(format!("{what}: step_ms.{key} invalid")))?;
+    }
+    Ok(())
+}
+
+fn check_wire(j: &Json, what: &str) -> Result<()> {
+    let w = j.req("wire").map_err(|_| bad(format!("{what}: missing wire")))?;
+    for key in ["tx_bytes", "rx_bytes"] {
+        if check_num(w, key)? < 0.0 {
+            return Err(bad(format!("{what}: negative wire.{key}")));
+        }
+    }
+    Ok(())
+}
+
+/// Structurally validate a bench record: schema version, required
+/// fields, and field types — including every case and the histogram.
+/// Run on every record written and on both sides of `--compare`.
+pub fn validate_report(j: &Json) -> Result<()> {
+    let version = check_num(j, "schema_version")?;
+    if version != SCHEMA_VERSION as f64 {
+        return Err(bad(format!("schema_version {version} (this build reads {SCHEMA_VERSION})")));
+    }
+    if j.req("scenario")?.as_str()?.is_empty() {
+        return Err(bad("empty scenario name"));
+    }
+    j.req("config_digest")?.as_str()?;
+    match j.req("quick_scale")? {
+        Json::Bool(_) => {}
+        _ => return Err(bad("quick_scale must be a bool")),
+    }
+    let probes = check_num(j, "probes_per_sec")?;
+    if !probes.is_finite() {
+        return Err(bad("probes_per_sec must be finite"));
+    }
+    check_step_ms(j, "top-level")?;
+    check_num(j, "peak_rss_bytes")?;
+    check_num(j, "cpu_ticks")?;
+    check_wire(j, "top-level")?;
+    let hist = j.req("histogram")?;
+    if hist.req("scheme")?.as_str()? != HIST_SCHEME {
+        return Err(bad(format!("histogram scheme must be {HIST_SCHEME:?}")));
+    }
+    check_num(hist, "underflow")?;
+    for bucket in hist.req("buckets")?.as_arr()? {
+        let pair = bucket.as_arr()?;
+        if pair.len() != 2 || pair.iter().any(|v| v.as_f64().is_err()) {
+            return Err(bad("histogram buckets must be [index, count] pairs"));
+        }
+    }
+    let cases = j.req("cases")?.as_arr()?;
+    if cases.is_empty() {
+        return Err(bad("a record needs at least one case"));
+    }
+    for case in cases {
+        let what = format!("case {:?}", case.req("name")?.as_str()?);
+        if case.req("argv")?.as_arr()?.is_empty() {
+            return Err(bad(format!("{what}: empty argv")));
+        }
+        for key in ["epochs", "total_forwards", "wall_secs", "peak_rss_bytes", "cpu_ticks"] {
+            check_num(case, key).map_err(|_| bad(format!("{what}: {key} invalid")))?;
+        }
+        check_num_or_null(case, "probes_per_sec")
+            .map_err(|_| bad(format!("{what}: probes_per_sec invalid")))?;
+        check_num_or_null(case, "final_rel_l2")
+            .map_err(|_| bad(format!("{what}: final_rel_l2 invalid")))?;
+        check_step_ms(case, &what)?;
+        check_wire(case, &what)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use crate::benchsuite::child::ChildSummary;
+
+    use super::*;
+
+    /// A small but fully-populated report used across the emit tests.
+    pub(crate) fn fixture_report() -> ScenarioReport {
+        let case = |name: &str, extra: &[&str], dt: f64| CaseReport {
+            name: name.to_string(),
+            argv: ["train", "bs", "tt"]
+                .iter()
+                .map(|s| s.to_string())
+                .chain(extra.iter().map(|s| s.to_string()))
+                .collect(),
+            summary: ChildSummary {
+                epochs: 4,
+                total_forwards: 64,
+                wall_secs: 4.0 * dt,
+                final_rel_l2: 0.52,
+                wire_tx_bytes: 0,
+                wire_rx_bytes: 0,
+                step_secs: vec![dt, dt * 1.5, dt * 0.5, dt],
+            },
+            wall_secs: 4.2 * dt,
+            peak_rss_bytes: 48 * 1024 * 1024,
+            cpu_ticks: 37,
+        };
+        ScenarioReport {
+            scenario: "single-engine".to_string(),
+            headline: 0,
+            cases: vec![case("bs-tt-zo", &[], 0.02)],
+        }
+    }
+
+    #[test]
+    fn emitted_record_validates_and_round_trips() {
+        let record = report_to_json(&fixture_report(), false);
+        validate_report(&record).unwrap();
+        let back = Json::parse(&record.to_string()).unwrap();
+        assert_eq!(back, record, "record must round-trip through util::json");
+        validate_report(&back).unwrap();
+    }
+
+    #[test]
+    fn digest_is_stable_and_sensitive_to_argv() {
+        let report = fixture_report();
+        let d1 = config_digest(&report);
+        assert_eq!(d1, config_digest(&report), "digest must be deterministic");
+        assert_eq!(d1.len(), 16);
+        let mut changed = fixture_report();
+        changed.cases[0].argv.push("--epochs".to_string());
+        assert_ne!(d1, config_digest(&changed));
+    }
+
+    #[test]
+    fn validation_rejects_mutilated_records() {
+        let good = report_to_json(&fixture_report(), false);
+        let mutate = |key: &str, value: Json| {
+            let mut bad = good.clone();
+            if let Json::Obj(m) = &mut bad {
+                m.insert(key.to_string(), value);
+            }
+            bad
+        };
+        assert!(validate_report(&mutate("schema_version", Json::Num(99.0))).is_err());
+        assert!(validate_report(&mutate("scenario", Json::str(""))).is_err());
+        assert!(validate_report(&mutate("probes_per_sec", Json::Null)).is_err());
+        assert!(validate_report(&mutate("cases", Json::Arr(vec![]))).is_err());
+        assert!(validate_report(&mutate("quick_scale", Json::Num(1.0))).is_err());
+        let mut no_wire = good.clone();
+        if let Json::Obj(m) = &mut no_wire {
+            m.remove("wire");
+        }
+        assert!(validate_report(&no_wire).is_err());
+        validate_report(&good).unwrap();
+    }
+
+    #[test]
+    fn write_report_lands_the_named_file() {
+        let dir = std::env::temp_dir().join(format!("opinn_emit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = write_report(&dir, &fixture_report(), false).unwrap();
+        assert!(path.ends_with("BENCH_single-engine.json"), "{path:?}");
+        validate_report(&Json::from_file(&path).unwrap()).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn repo_root_finds_the_git_checkout() {
+        // tests run with cwd inside the repo; the walk-up must find the
+        // same root the hotpath bench writes to
+        let root = repo_root();
+        assert!(root.join(".git").exists() || root == std::env::current_dir().unwrap());
+    }
+}

@@ -1,0 +1,319 @@
+//! The harness's measurement math: percentile summaries, mergeable
+//! log-scale latency histograms, and `/proc` text parsing for the
+//! RSS/CPU sampling of child processes.
+//!
+//! Everything here is pure — no clocks, no filesystem — so the whole
+//! layer is pinned by hand-computed fixtures in the unit tests below
+//! (the harness is only as trustworthy as this math).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Percentile summary of a latency sample set, in the sample's own unit.
+///
+/// Percentiles use [`crate::util::stats::percentile`]'s linear
+/// interpolation between closest ranks; an empty sample set yields NaN
+/// statistics and `count == 0`.
+#[derive(Debug, Clone, Copy)]
+pub struct Percentiles {
+    /// Number of samples summarized.
+    pub count: usize,
+    /// Arithmetic mean (NaN when empty).
+    pub mean: f64,
+    /// Smallest sample (NaN when empty).
+    pub min: f64,
+    /// Largest sample (NaN when empty).
+    pub max: f64,
+    /// Median.
+    pub p50: f64,
+    /// 90th percentile.
+    pub p90: f64,
+    /// 99th percentile — the tail the paper's latency claims live in.
+    pub p99: f64,
+}
+
+/// Summarize `xs` (any unit; the harness feeds seconds).
+pub fn percentiles(xs: &[f64]) -> Percentiles {
+    Percentiles {
+        count: xs.len(),
+        mean: stats::mean(xs),
+        min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+        max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+        p50: stats::percentile(xs, 50.0),
+        p90: stats::percentile(xs, 90.0),
+        p99: stats::percentile(xs, 99.0),
+    }
+}
+
+/// Sub-buckets per factor-of-two octave of the latency histogram
+/// (resolution `2^(1/8)` ≈ 9% per bucket).
+pub const HIST_SUB_BUCKETS: i64 = 8;
+
+/// The histogram's bucket scheme name, recorded in every emitted report
+/// so a reader never has to guess the bucket boundaries.
+pub const HIST_SCHEME: &str = "log2x8_secs";
+
+/// A mergeable log-scale latency histogram.
+///
+/// Bucket `i` covers `[2^(i/8), 2^((i+1)/8))` seconds; negative indices
+/// are valid (sub-second latencies), and non-positive or non-finite
+/// samples land in a dedicated underflow counter. Merging two histograms
+/// adds their counters bucket-by-bucket, so per-case histograms can be
+/// combined into a scenario histogram (and scenario histograms across
+/// machines) without losing tail shape — merge is associative and
+/// commutative by construction, pinned in the tests below.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LatencyHistogram {
+    underflow: u64,
+    counts: BTreeMap<i64, u64>,
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Build a histogram from raw samples in seconds.
+    pub fn from_samples(xs: &[f64]) -> LatencyHistogram {
+        let mut h = LatencyHistogram::new();
+        for &x in xs {
+            h.push(x);
+        }
+        h
+    }
+
+    /// The bucket index for a positive finite sample, `None` otherwise.
+    pub fn bucket_index(x: f64) -> Option<i64> {
+        if x.is_finite() && x > 0.0 {
+            Some((x.log2() * HIST_SUB_BUCKETS as f64).floor() as i64)
+        } else {
+            None
+        }
+    }
+
+    /// The inclusive lower bound of bucket `i`, in seconds.
+    pub fn bucket_floor(i: i64) -> f64 {
+        2f64.powf(i as f64 / HIST_SUB_BUCKETS as f64)
+    }
+
+    /// Count one sample (seconds).
+    pub fn push(&mut self, x: f64) {
+        match LatencyHistogram::bucket_index(x) {
+            Some(i) => *self.counts.entry(i).or_default() += 1,
+            None => self.underflow += 1,
+        }
+    }
+
+    /// Add every counter of `other` into `self`.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        self.underflow += other.underflow;
+        for (&i, &n) in &other.counts {
+            *self.counts.entry(i).or_default() += n;
+        }
+    }
+
+    /// Total samples counted, underflow included.
+    pub fn count(&self) -> u64 {
+        self.underflow + self.counts.values().sum::<u64>()
+    }
+
+    /// Samples that were non-positive or non-finite.
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    /// The non-empty buckets as `(index, count)` in ascending index order.
+    pub fn buckets(&self) -> Vec<(i64, u64)> {
+        self.counts.iter().map(|(&i, &n)| (i, n)).collect()
+    }
+
+    /// JSON form: `{scheme, underflow, buckets: [[index, count], ...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheme", Json::str(HIST_SCHEME)),
+            ("underflow", Json::Num(self.underflow as f64)),
+            (
+                "buckets",
+                Json::Arr(
+                    self.counts
+                        .iter()
+                        .map(|(&i, &n)| Json::Arr(vec![Json::Num(i as f64), Json::Num(n as f64)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Parse a `kB` line (`VmRSS`, `VmHWM`, ...) out of `/proc/<pid>/status`
+/// text. Returns `None` when the key is absent or malformed.
+pub fn parse_status_kb(status: &str, key: &str) -> Option<u64> {
+    for line in status.lines() {
+        let rest = match line.strip_prefix(key) {
+            Some(r) => r,
+            None => continue,
+        };
+        let rest = match rest.strip_prefix(':') {
+            Some(r) => r,
+            None => continue,
+        };
+        return rest.split_whitespace().next()?.parse().ok();
+    }
+    None
+}
+
+/// Parse `utime + stime` (clock ticks the process spent on CPU) out of
+/// `/proc/<pid>/stat` text. The comm field may itself contain spaces and
+/// parentheses, so fields are counted from the *last* `)` — after it the
+/// text resumes at field 3 (`state`), putting `utime`/`stime` (overall
+/// fields 14/15) at split indices 11/12.
+pub fn parse_stat_cpu_ticks(stat: &str) -> Option<u64> {
+    let rest = &stat[stat.rfind(')')? + 1..];
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    Some(utime + stime)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- percentile interpolation against hand-computed fixtures ------
+
+    #[test]
+    fn percentiles_of_a_single_sample_are_that_sample() {
+        let p = percentiles(&[0.25]);
+        assert_eq!(p.count, 1);
+        for v in [p.mean, p.min, p.max, p.p50, p.p90, p.p99] {
+            assert_eq!(v, 0.25);
+        }
+    }
+
+    #[test]
+    fn percentiles_interpolate_between_closest_ranks() {
+        // sorted [1, 2, 3, 4]: rank(p) = p/100 * 3
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        let p = percentiles(&xs);
+        assert_eq!(p.p50, 2.5); // rank 1.5 -> midway 2..3
+        assert!((p.p90 - 3.7).abs() < 1e-12); // rank 2.7 -> 3 + 0.7
+        assert!((p.p99 - 3.97).abs() < 1e-12); // rank 2.97
+        assert_eq!((p.min, p.max, p.count), (1.0, 4.0, 4));
+    }
+
+    #[test]
+    fn percentiles_hit_exact_boundary_ranks() {
+        // 5 elements: p25 -> rank exactly 1, p75 -> rank exactly 3
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(crate::util::stats::percentile(&xs, 25.0), 20.0);
+        assert_eq!(crate::util::stats::percentile(&xs, 75.0), 40.0);
+        assert_eq!(crate::util::stats::percentile(&xs, 0.0), 10.0);
+        assert_eq!(crate::util::stats::percentile(&xs, 100.0), 50.0);
+    }
+
+    #[test]
+    fn percentiles_handle_ties() {
+        let xs = [2.0, 2.0, 2.0, 2.0, 9.0];
+        let p = percentiles(&xs);
+        assert_eq!(p.p50, 2.0);
+        assert!((p.p90 - (2.0 + 0.6 * 7.0)).abs() < 1e-12); // rank 3.6
+    }
+
+    #[test]
+    fn percentiles_of_empty_are_nan() {
+        let p = percentiles(&[]);
+        assert_eq!(p.count, 0);
+        assert!(p.mean.is_nan() && p.p50.is_nan() && p.p99.is_nan());
+    }
+
+    // ---- histogram bucket assignment + merge --------------------------
+
+    #[test]
+    fn bucket_assignment_matches_hand_computed_indices() {
+        // 2^0 = 1s -> bucket 0; 2s -> bucket 8; exact powers sit on
+        // their own lower boundary.
+        assert_eq!(LatencyHistogram::bucket_index(1.0), Some(0));
+        assert_eq!(LatencyHistogram::bucket_index(2.0), Some(8));
+        assert_eq!(LatencyHistogram::bucket_index(0.5), Some(-8));
+        // 1.5s: log2(1.5)*8 = 4.679... -> bucket 4
+        assert_eq!(LatencyHistogram::bucket_index(1.5), Some(4));
+        // 1ms: log2(1e-3)*8 = -79.7... -> bucket -80
+        assert_eq!(LatencyHistogram::bucket_index(1e-3), Some(-80));
+        assert_eq!(LatencyHistogram::bucket_index(0.0), None);
+        assert_eq!(LatencyHistogram::bucket_index(-1.0), None);
+        assert_eq!(LatencyHistogram::bucket_index(f64::NAN), None);
+        assert_eq!(LatencyHistogram::bucket_index(f64::INFINITY), None);
+    }
+
+    #[test]
+    fn bucket_floor_inverts_bucket_index() {
+        for &x in &[1e-4, 3.7e-3, 0.5, 1.0, 1.9, 64.0] {
+            let i = LatencyHistogram::bucket_index(x).unwrap();
+            assert!(LatencyHistogram::bucket_floor(i) <= x * (1.0 + 1e-12), "{x}");
+            assert!(LatencyHistogram::bucket_floor(i + 1) > x * (1.0 - 1e-12), "{x}");
+        }
+    }
+
+    #[test]
+    fn histogram_counts_and_underflow() {
+        let h = LatencyHistogram::from_samples(&[1.0, 1.01, 2.0, 0.0, f64::NAN]);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.underflow(), 2);
+        assert_eq!(h.buckets(), vec![(0, 2), (8, 1)]);
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_commutative() {
+        let a = LatencyHistogram::from_samples(&[1.0, 0.5, 0.0]);
+        let b = LatencyHistogram::from_samples(&[2.0, 0.5]);
+        let c = LatencyHistogram::from_samples(&[1e-3, -4.0, 1.0]);
+
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge must be associative");
+
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba, "merge must be commutative");
+        assert_eq!(ab_c.count(), a.count() + b.count() + c.count());
+    }
+
+    // ---- /proc parsing against canned fixtures ------------------------
+
+    const STATUS_FIXTURE: &str = "Name:\topinn\nUmask:\t0022\nState:\tR (running)\n\
+                                  VmPeak:\t  271508 kB\nVmSize:\t  271508 kB\n\
+                                  VmHWM:\t   57040 kB\nVmRSS:\t   54180 kB\nThreads:\t9\n";
+
+    #[test]
+    fn status_rss_parses_from_canned_lines() {
+        assert_eq!(parse_status_kb(STATUS_FIXTURE, "VmRSS"), Some(54180));
+        assert_eq!(parse_status_kb(STATUS_FIXTURE, "VmHWM"), Some(57040));
+        assert_eq!(parse_status_kb(STATUS_FIXTURE, "VmSwap"), None);
+        assert_eq!(parse_status_kb("", "VmRSS"), None);
+        assert_eq!(parse_status_kb("VmRSS:\tgarbage kB\n", "VmRSS"), None);
+    }
+
+    #[test]
+    fn stat_cpu_ticks_parse_despite_hostile_comm_names() {
+        // utime=1007 (field 14), stime=13 (field 15)
+        let plain = "12345 (opinn) R 1 12345 12345 0 -1 4194304 5000 0 0 0 \
+                     1007 13 0 0 20 0 9 0 8000000 278024192 13545";
+        assert_eq!(parse_stat_cpu_ticks(plain), Some(1020));
+        // comm containing spaces and a ')' — fields count from the LAST ')'
+        let hostile = "999 (tmux: server (2)) S 1 999 999 0 -1 4194304 50 0 0 0 \
+                       7 3 0 0 20 0 1 0 100 1000 10";
+        assert_eq!(parse_stat_cpu_ticks(hostile), Some(10));
+        assert_eq!(parse_stat_cpu_ticks("no parens at all"), None);
+        assert_eq!(parse_stat_cpu_ticks("1 (x) R 1 1"), None, "truncated stat line");
+    }
+}

@@ -1,0 +1,58 @@
+//! The `opinn bench` harness: measure the shipped binary, keep the
+//! numbers as a per-PR trajectory.
+//!
+//! Where [`crate::bench_harness`] times closures *inside* one process,
+//! this subsystem spawns release-built `opinn` binaries as child
+//! processes — train runs, `shard-worker` replicas, the fleet
+//! `registry` — and measures what a user of the CLI would see: child
+//! wall-clock, per-step latency percentiles and histograms, peak RSS
+//! and CPU ticks sampled from `/proc/<pid>`, and wire traffic for the
+//! distributed scenarios. Modeled on WIND's bench-harness: the
+//! orchestrator owns processes and merges metrics; each child reports
+//! itself with a single machine-readable stdout line.
+//!
+//! The pieces, in data-flow order:
+//!
+//! - [`registry`] — the fixed-seed scenario catalog ([`SCENARIOS`]):
+//!   `single-engine`, `pipelined`, `precision`, `sharded-tcp`,
+//!   `fleet-churn`;
+//! - [`proc`] — child spawning, pipe draining, `/proc` sampling;
+//! - [`child`] — the `--bench-json` protocol a train child speaks back;
+//! - [`metrics`] — percentiles, mergeable log-scale histograms,
+//!   `/proc` text parsing;
+//! - [`emit`] — the schema-versioned `BENCH_<scenario>.json` record at
+//!   the repo root;
+//! - [`compare`] — the `--compare` regression gate CI runs against the
+//!   committed baselines in `benchmarks/baselines/`.
+//!
+//! ```
+//! use optical_pinn::benchsuite::{compare, emit, metrics};
+//!
+//! # fn main() -> optical_pinn::Result<()> {
+//! // the metrics layer is pure and usable on its own
+//! let p = metrics::percentiles(&[0.010, 0.012, 0.011, 0.030]);
+//! assert!(p.p50 <= p.p99);
+//! // records validate structurally before they are written or compared
+//! let record = optical_pinn::util::json::Json::parse("{}")?;
+//! assert!(emit::validate_report(&record).is_err());
+//! assert!(compare::compare(&record, &record, 2.0).is_err());
+//! # Ok(())
+//! # }
+//! ```
+
+#![deny(missing_docs)]
+
+pub mod child;
+pub mod compare;
+pub mod emit;
+pub mod metrics;
+pub mod proc;
+pub mod registry;
+
+pub use child::{child_summary_json, parse_child_summary, ChildSummary, CHILD_MARKER, StepTimer};
+pub use compare::{compare, Delta, Direction, DEFAULT_THRESHOLD};
+pub use emit::{
+    config_digest, repo_root, report_to_json, validate_report, write_report, SCHEMA_VERSION,
+};
+pub use metrics::{percentiles, LatencyHistogram, Percentiles};
+pub use registry::{find, BenchOpts, CaseReport, Scenario, ScenarioReport, SCENARIOS};

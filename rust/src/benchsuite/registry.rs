@@ -1,0 +1,293 @@
+//! The scenario registry: every `opinn bench` scenario is a fixed-seed
+//! problem + training configuration, so two runs of the same binary
+//! measure the same work and differences are machine or code, not luck.
+//!
+//! Each scenario spawns the benched `opinn` binary as child processes —
+//! train runs via [`super::proc::run_measured`], plus `shard-worker` /
+//! `registry` services where the scenario is distributed — and reduces
+//! the children's summary lines into a [`ScenarioReport`].
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::Duration;
+
+use crate::{err, Result};
+
+use super::child::{parse_child_summary, ChildSummary};
+use super::proc::{run_measured, spawn_service, ServiceChild};
+
+/// How the harness launches children and scales the work.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// The `opinn` binary to bench (a release build, normally).
+    pub bin: PathBuf,
+    /// Override every scenario's epoch count (debug-binary self-tests).
+    pub epochs: Option<usize>,
+    /// Paper scale (`OPINN_FULL=1`): 10x the quick epoch counts.
+    pub full: bool,
+}
+
+impl BenchOpts {
+    fn epochs_for(&self, quick: usize) -> usize {
+        self.epochs.unwrap_or(if self.full { quick * 10 } else { quick })
+    }
+
+    fn timeout(&self) -> Duration {
+        Duration::from_secs(if self.full { 3600 } else { 600 })
+    }
+}
+
+/// One registered scenario: a name, a one-line summary for `--list`,
+/// and the runner that produces its report.
+pub struct Scenario {
+    /// Registry key, also the `BENCH_<name>.json` file stem.
+    pub name: &'static str,
+    /// One-line description shown by `opinn bench --list`.
+    pub summary: &'static str,
+    /// Runs the scenario's children and reduces their summaries.
+    pub run: fn(&BenchOpts) -> Result<ScenarioReport>,
+}
+
+/// Every scenario, in trajectory order. The first entries are the cheap
+/// socket-free ones CI runs on every PR; the distributed scenarios
+/// follow.
+pub const SCENARIOS: &[Scenario] = &[
+    Scenario {
+        name: "single-engine",
+        summary: "one native engine, ZO/RGE on Black-Scholes TT (the baseline)",
+        run: run_single_engine,
+    },
+    Scenario {
+        name: "pipelined",
+        summary: "blocking vs async probe streams (pipeline depth 1 vs 2)",
+        run: run_pipelined,
+    },
+    Scenario {
+        name: "precision",
+        summary: "f64 reference vs f32 packed evaluation (speed and fidelity)",
+        run: run_precision,
+    },
+    Scenario {
+        name: "sharded-tcp",
+        summary: "probe fan-out across 1/2/4 TCP shard-worker processes",
+        run: run_sharded_tcp,
+    },
+    Scenario {
+        name: "fleet-churn",
+        summary: "elastic fleet: a worker dies and a replacement joins mid-run",
+        run: run_fleet_churn,
+    },
+];
+
+/// Look up a scenario by name.
+pub fn find(name: &str) -> Result<&'static Scenario> {
+    SCENARIOS.iter().find(|s| s.name == name).ok_or_else(|| {
+        let known: Vec<&str> = SCENARIOS.iter().map(|s| s.name).collect();
+        err(format!("unknown scenario {name:?} (known: {})", known.join(", ")))
+    })
+}
+
+/// One measured child run within a scenario.
+#[derive(Debug, Clone)]
+pub struct CaseReport {
+    /// Case name within the scenario (e.g. `shards-4`).
+    pub name: String,
+    /// The exact child argv (after the binary path), for reproduction.
+    pub argv: Vec<String>,
+    /// The child's own summary line, parsed.
+    pub summary: ChildSummary,
+    /// Parent-observed wall-clock for the child, in seconds.
+    pub wall_secs: f64,
+    /// Peak RSS of the train child in bytes (0 where /proc is absent).
+    pub peak_rss_bytes: u64,
+    /// CPU ticks (utime+stime) of the train child at exit.
+    pub cpu_ticks: u64,
+}
+
+/// A completed scenario: its cases plus which case is the headline
+/// (the one whose numbers become the report's top-level metrics).
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    /// The scenario's registry name.
+    pub scenario: String,
+    /// Index into `cases` of the headline configuration.
+    pub headline: usize,
+    /// Every measured case, in run order.
+    pub cases: Vec<CaseReport>,
+}
+
+impl ScenarioReport {
+    /// The headline case (panics on an empty report, which no runner
+    /// produces).
+    pub fn headline_case(&self) -> &CaseReport {
+        &self.cases[self.headline]
+    }
+}
+
+/// The common fixed-seed train invocation: ZO/RGE on Black-Scholes TT,
+/// native backend, eval twice per run, summary line on stdout.
+fn train_argv(epochs: usize, extra: &[String]) -> Vec<String> {
+    let mut argv: Vec<String> = ["train", "bs", "tt", "--train", "zo", "--backend", "native"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    for (key, value) in [
+        ("--seed", "0".to_string()),
+        ("--epochs", epochs.to_string()),
+        ("--eval-every", (epochs / 2).max(1).to_string()),
+    ] {
+        argv.push(key.to_string());
+        argv.push(value);
+    }
+    argv.extend(extra.iter().cloned());
+    argv.push("--bench-json".to_string());
+    argv
+}
+
+/// Spawn one train child, measure it, and parse its summary line.
+fn run_case(opts: &BenchOpts, name: &str, argv: Vec<String>) -> Result<CaseReport> {
+    let mut cmd = Command::new(&opts.bin);
+    cmd.args(&argv);
+    let m = run_measured(&mut cmd, opts.timeout())?;
+    if !m.success {
+        let tail: String = m.stderr.lines().rev().take(12).collect::<Vec<_>>().join("\n");
+        return Err(err(format!(
+            "bench case {name}: child failed (argv {argv:?}); stderr tail:\n{tail}"
+        )));
+    }
+    let summary = parse_child_summary(&m.stdout)?;
+    Ok(CaseReport {
+        name: name.to_string(),
+        argv,
+        summary,
+        wall_secs: m.wall_secs,
+        peak_rss_bytes: m.peak_rss_bytes,
+        cpu_ticks: m.cpu_ticks,
+    })
+}
+
+fn run_single_engine(opts: &BenchOpts) -> Result<ScenarioReport> {
+    let epochs = opts.epochs_for(80);
+    let case = run_case(opts, "bs-tt-zo", train_argv(epochs, &[]))?;
+    Ok(ScenarioReport { scenario: "single-engine".to_string(), headline: 0, cases: vec![case] })
+}
+
+fn run_pipelined(opts: &BenchOpts) -> Result<ScenarioReport> {
+    let epochs = opts.epochs_for(80);
+    let mut cases = Vec::new();
+    for depth in ["1", "2"] {
+        let extra = vec!["--pipeline-depth".to_string(), depth.to_string()];
+        cases.push(run_case(opts, &format!("depth-{depth}"), train_argv(epochs, &extra))?);
+    }
+    // headline: the async probe-stream schedule we actually ship
+    Ok(ScenarioReport { scenario: "pipelined".to_string(), headline: 1, cases })
+}
+
+fn run_precision(opts: &BenchOpts) -> Result<ScenarioReport> {
+    let epochs = opts.epochs_for(80);
+    let mut cases = Vec::new();
+    for precision in ["f64", "f32"] {
+        let extra = vec!["--eval-precision".to_string(), precision.to_string()];
+        cases.push(run_case(opts, precision, train_argv(epochs, &extra))?);
+    }
+    // headline: the f32 packed kernel; the f64 case keeps the fidelity
+    // reference (compare the cases' final_rel_l2 for the trade-off)
+    Ok(ScenarioReport { scenario: "precision".to_string(), headline: 1, cases })
+}
+
+fn spawn_worker(bin: &Path, registry: Option<&str>) -> Result<ServiceChild> {
+    let mut cmd = Command::new(bin);
+    cmd.args(["shard-worker", "--listen", "127.0.0.1:0"]);
+    if let Some(registry) = registry {
+        cmd.args(["--registry", registry]);
+    }
+    spawn_service(&mut cmd, "shard-worker")
+}
+
+fn run_sharded_tcp(opts: &BenchOpts) -> Result<ScenarioReport> {
+    let epochs = opts.epochs_for(50);
+    // one worker pool for every case; each case uses a prefix of it
+    let workers: Vec<ServiceChild> =
+        (0..4).map(|_| spawn_worker(&opts.bin, None)).collect::<Result<_>>()?;
+    let hosts: Vec<String> = workers.iter().map(|w| w.addr.clone()).collect();
+    let mut cases = Vec::new();
+    for n in [1usize, 2, 4] {
+        let extra = vec![
+            "--shards".to_string(),
+            n.to_string(),
+            "--shard-hosts".to_string(),
+            hosts[..n].join(","),
+        ];
+        cases.push(run_case(opts, &format!("shards-{n}"), train_argv(epochs, &extra))?);
+    }
+    Ok(ScenarioReport { scenario: "sharded-tcp".to_string(), headline: 2, cases })
+}
+
+fn run_fleet_churn(opts: &BenchOpts) -> Result<ScenarioReport> {
+    let epochs = opts.epochs_for(400);
+    let mut cmd = Command::new(&opts.bin);
+    cmd.args(["registry", "--listen", "127.0.0.1:0", "--heartbeat-secs", "1"]);
+    cmd.args(["--miss-budget", "2"]);
+    let registry = spawn_service(&mut cmd, "registry")?;
+    let doomed = spawn_worker(&opts.bin, Some(&registry.addr))?;
+    let _survivor = spawn_worker(&opts.bin, Some(&registry.addr))?;
+    // let both workers register before the session first resolves
+    std::thread::sleep(Duration::from_millis(500));
+    // churn while the train child runs: kill one worker at ~1s, spawn a
+    // replacement at ~2s. The replacement is returned (not dropped) so
+    // it outlives the thread and keeps serving until the case ends.
+    let churn = {
+        let bin = opts.bin.clone();
+        let reg_addr = registry.addr.clone();
+        std::thread::spawn(move || -> Option<ServiceChild> {
+            let mut doomed = doomed;
+            std::thread::sleep(Duration::from_secs(1));
+            doomed.kill();
+            std::thread::sleep(Duration::from_secs(1));
+            spawn_worker(&bin, Some(&reg_addr)).ok()
+        })
+    };
+    let extra = vec!["--registry".to_string(), registry.addr.clone()];
+    let case = run_case(opts, "churn-kill-then-join", train_argv(epochs, &extra));
+    let replacement = churn.join().ok().flatten();
+    drop(replacement);
+    Ok(ScenarioReport { scenario: "fleet-churn".to_string(), headline: 0, cases: vec![case?] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_findable() {
+        for s in SCENARIOS {
+            assert!(std::ptr::eq(find(s.name).unwrap(), s));
+        }
+        let names: std::collections::BTreeSet<&str> = SCENARIOS.iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), SCENARIOS.len(), "duplicate scenario name");
+        assert!(find("no-such-scenario").is_err());
+    }
+
+    #[test]
+    fn train_argv_is_reproducible_and_ends_with_the_protocol_flag() {
+        let argv = train_argv(60, &["--pipeline-depth".to_string(), "2".to_string()]);
+        assert_eq!(argv[0], "train");
+        assert!(argv.windows(2).any(|w| w == ["--seed", "0"]), "fixed seed: {argv:?}");
+        assert!(argv.windows(2).any(|w| w == ["--epochs", "60"]), "{argv:?}");
+        assert!(argv.windows(2).any(|w| w == ["--eval-every", "30"]), "{argv:?}");
+        assert!(argv.windows(2).any(|w| w == ["--pipeline-depth", "2"]), "{argv:?}");
+        // --bench-json must stay last: the zero-dependency argparse
+        // treats a trailing `--flag` as a boolean flag
+        assert_eq!(argv.last().map(String::as_str), Some("--bench-json"));
+    }
+
+    #[test]
+    fn epoch_scaling_quick_full_and_override() {
+        let base = BenchOpts { bin: PathBuf::from("opinn"), epochs: None, full: false };
+        assert_eq!(base.epochs_for(80), 80);
+        let full = BenchOpts { full: true, ..base.clone() };
+        assert_eq!(full.epochs_for(80), 800);
+        let tiny = BenchOpts { epochs: Some(4), ..full };
+        assert_eq!(tiny.epochs_for(80), 4, "explicit override beats OPINN_FULL");
+    }
+}

@@ -164,8 +164,21 @@
 //! async-probe-stream scheduling. Trajectories are pinned bitwise against
 //! frozen copies of the pre-session loops — at any probe-thread count and
 //! any pipeline depth — in `rust/tests/session_parity.rs`.
+//!
+//! ## The benchmark harness
+//!
+//! `opinn bench` ([`benchsuite`]) measures the shipped binary, not
+//! in-process library code: a scenario registry spawns `opinn` child
+//! processes (train runs, shard workers, a fleet registry), samples
+//! their `/proc` RSS/CPU while they run, folds per-step latencies into
+//! percentile summaries and mergeable log-scale histograms, and writes
+//! one schema-versioned `BENCH_<scenario>.json` per scenario at the
+//! repo root. `opinn bench --compare` diffs two such records and exits
+//! nonzero past a regression threshold — the per-PR perf trajectory CI
+//! enforces.
 
 pub mod bench_harness;
+pub mod benchsuite;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

@@ -8,6 +8,10 @@
 //!                heartbeat, training sessions resolve the live set
 //!   tables       regenerate a paper table/figure (t1 t2 t3 t456 fig3
 //!                ablations mnist)
+//!   bench        process-based benchmark harness: run the fixed-seed
+//!                scenario registry against a built `opinn` binary,
+//!                write BENCH_<scenario>.json records at the repo root,
+//!                and gate regressions with --compare
 //!   hw-report    print the pre-silicon footprint/latency model
 //!   info         artifact manifest summary
 //!
@@ -26,8 +30,9 @@
 //!   opinn tables t2
 //!   OPINN_FULL=1 opinn tables t3
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
+use optical_pinn::benchsuite;
 use optical_pinn::config::ExperimentConfig;
 use optical_pinn::coordinator::{save_params, Metrics};
 use optical_pinn::engine::Engine;
@@ -37,8 +42,9 @@ use optical_pinn::hw;
 use optical_pinn::mnist;
 use optical_pinn::net::build_model;
 use optical_pinn::photonic::{PhaseProtocol, PhaseTrainConfig, PhotonicModel, PhotonicVariant};
-use optical_pinn::session::{self, SessionBuilder};
+use optical_pinn::session::{self, EvalObserver, MultiObserver, SessionBuilder};
 use optical_pinn::util::argparse::Args;
+use optical_pinn::util::json::Json;
 use optical_pinn::util::stats::sci;
 use optical_pinn::zo::rge::RgeConfig;
 use optical_pinn::zo::TrainMethod;
@@ -71,6 +77,7 @@ fn run(args: &Args) -> Result<()> {
         Some("shard-worker") => cmd_shard_worker(args),
         Some("registry") => cmd_registry(args),
         Some("tables") => cmd_tables(args),
+        Some("bench") => cmd_bench(args),
         Some("hw-report") => cmd_hw_report(args),
         Some("info") => cmd_info(args),
         _ => {
@@ -109,13 +116,13 @@ fn help() -> String {
     out
 }
 
-const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables|hw-report|info> [options]
+const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables|bench|hw-report|info> [options]
   train <problem> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
         [--lr F] [--seed N] [--rank N] [--width N] [--mu F] [--queries N]
         [--eval-every N] [--max-forwards N] [--backend pjrt|native]
         [--probe-threads N] [--pipeline-depth 1|2] [--shards N]
         [--shard-hosts H1,H2,...] [--registry ADDR]
-        [--eval-precision f64|f32] [--verbose]
+        [--eval-precision f64|f32] [--verbose] [--bench-json]
         [--out ckpt.json] [--ckpt-every N] [--curve curve.csv]
   train-phase <problem> [--protocol ours|flops|l2ight] [--epochs N] [--lr F]
         [--seed N] [--mu F] [--queries N] [--eval-every N]
@@ -135,6 +142,17 @@ const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables
         step; a member that misses its heartbeat budget (default 2 s
         x 3) is dropped until it re-registers
   tables <t1|t2|t3|t456|fig3|tt_rank|width|grid|mc_samples|sg_level|sigma|mu|queries|mnist>
+  bench [--scenario NAME|all] [--bin PATH] [--out-dir DIR] [--epochs N] [--list]
+        spawn the built `opinn` binary through the fixed-seed scenario
+        registry (single-engine, pipelined, precision, sharded-tcp,
+        fleet-churn) and write one schema-versioned BENCH_<scenario>.json
+        per scenario (default --out-dir: the repo root; default --bin:
+        this binary; OPINN_FULL=1 runs paper scale)
+  bench --compare BASELINE.json [--against CURRENT.json] [--threshold F]
+        diff two bench records (default current: the repo-root record
+        for the baseline's scenario) and exit nonzero when any headline
+        metric — probes/s, p50/p99 step latency, peak RSS — is at least
+        F times worse (default 2.0)
   hw-report [--epochs N]
   info
 options:
@@ -164,6 +182,10 @@ options:
   --eval-precision P evaluation kernel precision: f64 (default, bitwise-
                      reference) or f32 (native backend only; ~2x packed
                      kernel throughput, losses still returned as f64)
+  --bench-json       time every optimizer step and print one
+                     machine-readable OPINN_BENCH_V1 summary line to
+                     stdout after training (the `opinn bench` child
+                     protocol; human logs stay on stderr)
   --ckpt-every N     with --out: checkpoint every N epochs, not just at
                      the end
   --curve FILE       write the eval curve as CSV (train)
@@ -212,6 +234,26 @@ fn cmd_train(args: &Args) -> Result<()> {
         .eval_precision(cfg.eval_precision)
         .verbose(true)
         .method(method, model.param_layout());
+    // --bench-json: wrap the default eval policy with a step timer (the
+    // timer runs first so its sample closes before eval work starts)
+    // and speak the benchsuite child protocol on stdout after the run
+    let bench_samples = if args.flag("bench-json") {
+        let samples = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        builder = builder.observer(Box::new(MultiObserver {
+            observers: vec![
+                Box::new(benchsuite::StepTimer::new(samples.clone())),
+                Box::new(EvalObserver {
+                    eval_every: cfg.eval_every,
+                    seed: cfg.seed,
+                    verbose: true,
+                    tag: None,
+                }),
+            ],
+        }));
+        Some(samples)
+    } else {
+        None
+    };
     let ckpt_every = args.get_usize("ckpt-every", 0)?;
     if ckpt_every > 0 {
         let out = args.get("out").ok_or_else(|| {
@@ -233,6 +275,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         hist.wall_secs,
         engine.backend(),
     );
+    if let Some(samples) = &bench_samples {
+        let steps = samples.lock().unwrap_or_else(|p| p.into_inner());
+        let payload = benchsuite::child_summary_json(&hist, &steps).to_string();
+        println!("{} {payload}", benchsuite::CHILD_MARKER);
+    }
     if let Some(out) = args.get("out") {
         save_params(std::path::Path::new(out), &model.name, cfg.epochs, &params)?;
         println!("checkpoint -> {out}");
@@ -409,6 +456,100 @@ fn cmd_mnist() -> Result<()> {
         ]);
     }
     experiments::record_table("mnist", &t);
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    if args.flag("list") {
+        for scenario in benchsuite::SCENARIOS {
+            println!("{:<14} {}", scenario.name, scenario.summary);
+        }
+        return Ok(());
+    }
+    if let Some(baseline) = args.get("compare") {
+        return cmd_bench_compare(args, baseline);
+    }
+    let bin = match args.get("bin") {
+        Some(path) => PathBuf::from(path),
+        None => std::env::current_exe()?,
+    };
+    let out_dir = args
+        .get("out-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(benchsuite::repo_root);
+    let epochs = args.get_usize("epochs", 0)?;
+    let opts = benchsuite::BenchOpts {
+        bin,
+        epochs: if epochs > 0 { Some(epochs) } else { None },
+        full: optical_pinn::bench_harness::full_scale(),
+    };
+    let which = args.get_or("scenario", "all");
+    let selected: Vec<&benchsuite::Scenario> = if which == "all" {
+        benchsuite::SCENARIOS.iter().collect()
+    } else {
+        vec![benchsuite::find(&which)?]
+    };
+    std::fs::create_dir_all(&out_dir)?;
+    for scenario in selected {
+        eprintln!("opinn bench: {} — {}", scenario.name, scenario.summary);
+        let report = (scenario.run)(&opts)?;
+        let path = benchsuite::write_report(&out_dir, &report, opts.full)?;
+        let head = report.headline_case();
+        let p = benchsuite::percentiles(&head.summary.step_secs);
+        println!(
+            "bench {:<14} {:>9.1} probes/s  p50 {:>8.2} ms  p99 {:>8.2} ms  rss {:>6.1} MiB  -> {}",
+            report.scenario,
+            head.summary.probes_per_sec(),
+            p.p50 * 1e3,
+            p.p99 * 1e3,
+            head.peak_rss_bytes as f64 / (1024.0 * 1024.0),
+            path.display(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_compare(args: &Args, baseline_path: &str) -> Result<()> {
+    let baseline = Json::from_file(Path::new(baseline_path))?;
+    let scenario = baseline.req("scenario")?.as_str()?.to_string();
+    let against = args
+        .get("against")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| benchsuite::repo_root().join(format!("BENCH_{scenario}.json")));
+    let current = Json::from_file(&against)?;
+    let threshold = args.get_f64("threshold", benchsuite::DEFAULT_THRESHOLD)?;
+    let deltas = benchsuite::compare(&baseline, &current, threshold)?;
+    let base_digest = baseline.req("config_digest")?.as_str()?;
+    let cur_digest = current.req("config_digest")?.as_str()?;
+    if base_digest != cur_digest {
+        eprintln!(
+            "opinn bench: note: config digests differ (baseline {base_digest}, \
+             current {cur_digest}) — the runs measured different configurations"
+        );
+    }
+    println!("comparing {} vs baseline {baseline_path}", against.display());
+    println!("{:<16} {:>14} {:>14} {:>8}  status", "metric", "baseline", "current", "ratio");
+    let mut regressed = 0usize;
+    for d in &deltas {
+        let status = if d.regressed {
+            regressed += 1;
+            "REGRESSED"
+        } else if d.worse_ratio < 1.0 {
+            "improved"
+        } else {
+            "ok"
+        };
+        println!(
+            "{:<16} {:>14.3} {:>14.3} {:>8.2}  {status}",
+            d.metric, d.baseline, d.current, d.worse_ratio
+        );
+    }
+    if regressed > 0 {
+        return Err(optical_pinn::err(format!(
+            "{regressed} metric(s) at least {threshold}x worse than {baseline_path}"
+        )));
+    }
+    println!("no regression past {threshold}x ({} metrics compared)", deltas.len());
     Ok(())
 }
 

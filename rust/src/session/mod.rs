@@ -258,6 +258,13 @@ impl Session<'_> {
         hist.final_error = *hist.errors.last().unwrap_or(&f64::NAN);
         hist.total_forwards = forwards;
         hist.wall_secs = t0.elapsed().as_secs_f64();
+        // surface the dispatcher's wire counters so callers (bench
+        // harness, experiment records) see distributed cost per run
+        if let SessionEngine::Sharded(sharded) = &engine_slot {
+            let (tx, rx) = sharded.wire_bytes();
+            hist.wire_tx_bytes = tx;
+            hist.wire_rx_bytes = rx;
+        }
         Ok(hist)
     }
 }

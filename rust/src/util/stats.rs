@@ -50,7 +50,7 @@ impl Welford {
     }
 }
 
-/// Mean of a slice.
+/// Mean of a slice. Empty input yields NaN (there is no neutral mean).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -58,7 +58,9 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Sample standard deviation.
+/// Sample standard deviation with ddof = 1 (the n-1 Bessel-corrected
+/// denominator, matching [`Welford::std`]). Fewer than two samples have
+/// no spread estimate and yield 0.0 by convention.
 pub fn std(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;
@@ -67,14 +69,19 @@ pub fn std(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Percentile via linear interpolation on the sorted copy (p in [0, 100]).
+/// Percentile via linear interpolation between closest ranks on a sorted
+/// copy: `rank = p/100 * (n-1)`, interpolating when the rank is
+/// fractional (numpy's default scheme). `p` is clamped to [0, 100];
+/// empty input yields NaN. NaN samples sort to the top (total order)
+/// rather than panicking, so a poisoned sample set degrades loudly in
+/// the upper percentiles instead of crashing the harness.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    v.sort_by(|a, b| a.total_cmp(b));
+    let rank = (p.clamp(0.0, 100.0) / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
     if lo == hi {
@@ -143,6 +150,40 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // n=1: every percentile is the sample itself
+        for p in [0.0, 37.5, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], p), 7.5);
+        }
+        // out-of-range p clamps instead of extrapolating
+        assert_eq!(percentile(&[1.0, 2.0], -10.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 250.0), 2.0);
+        // empty input is NaN, not a panic
+        assert!(percentile(&[], 50.0).is_nan());
+        // NaN samples sort high instead of panicking the comparator
+        let poisoned = [1.0, f64::NAN, 2.0];
+        assert_eq!(percentile(&poisoned, 0.0), 1.0);
+        assert!(percentile(&poisoned, 100.0).is_nan());
+    }
+
+    #[test]
+    fn mean_and_std_edge_cases() {
+        // empty: mean has no neutral value -> NaN; std convention -> 0.0
+        assert!(mean(&[]).is_nan());
+        assert_eq!(std(&[]), 0.0);
+        // single element: mean is the element, spread is undefined -> 0.0
+        assert_eq!(mean(&[3.25]), 3.25);
+        assert_eq!(std(&[3.25]), 0.0);
+        // ddof=1 pinned by hand: [1, 3] -> var (1+1)/(2-1) = 2
+        assert!((std(&[1.0, 3.0]) - 2f64.sqrt()).abs() < 1e-12);
+        // Welford agrees on the degenerate counts too
+        let mut w = Welford::new();
+        assert_eq!(w.std(), 0.0);
+        w.push(3.25);
+        assert_eq!((w.mean(), w.std()), (3.25, 0.0));
     }
 
     #[test]

@@ -107,6 +107,10 @@ pub struct History {
     pub total_forwards: u64,
     /// Wall-clock duration of the run in seconds.
     pub wall_secs: f64,
+    /// Bytes sent to shard workers over the wire (0 for local runs).
+    pub wire_tx_bytes: u64,
+    /// Bytes received from shard workers over the wire (0 for local runs).
+    pub wire_rx_bytes: u64,
 }
 
 impl History {

@@ -1,0 +1,191 @@
+//! End-to-end coverage of the `opinn bench` process harness: the
+//! cheapest scenario runs for real against the debug binary, the
+//! `--compare` gate's exit codes are pinned, and the committed golden
+//! fixture nails the `BENCH_<scenario>.json` schema field-for-field.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use optical_pinn::benchsuite::{validate_report, SCHEMA_VERSION};
+use optical_pinn::util::json::Json;
+
+fn opinn() -> &'static str {
+    env!("CARGO_BIN_EXE_opinn")
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("opinn_benchsuite_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/BENCH_single-engine.json")
+}
+
+/// The full scenario pipeline against a real child process: spawn
+/// `opinn bench`, which spawns an `opinn train --bench-json` child,
+/// samples it, and emits the record. Debug binaries are slow, so the
+/// run is cut to 4 epochs — the schema and the measurement plumbing are
+/// what is under test, not the numbers.
+#[test]
+fn single_engine_scenario_end_to_end() {
+    let out_dir = tmp_dir("e2e");
+    let status = Command::new(opinn())
+        .args(["bench", "--scenario", "single-engine", "--bin", opinn(), "--epochs", "4"])
+        .args(["--out-dir", out_dir.to_str().unwrap()])
+        .status()
+        .unwrap();
+    assert!(status.success(), "bench run failed");
+    let record_path = out_dir.join("BENCH_single-engine.json");
+    let record = Json::from_file(&record_path).unwrap();
+    validate_report(&record).unwrap();
+    // sane values from a real child: it trained, steps took time
+    let probes = record.req("probes_per_sec").unwrap().as_f64().unwrap();
+    assert!(probes > 0.0, "probes_per_sec {probes}");
+    let step_ms = record.req("step_ms").unwrap();
+    let p50 = step_ms.req("p50").unwrap().as_f64().unwrap();
+    let p99 = step_ms.req("p99").unwrap().as_f64().unwrap();
+    assert!(p50 > 0.0 && p50 <= p99, "p50 {p50} p99 {p99}");
+    assert_eq!(step_ms.req("count").unwrap().as_usize().unwrap(), 4);
+    #[cfg(target_os = "linux")]
+    {
+        let rss = record.req("peak_rss_bytes").unwrap().as_f64().unwrap();
+        assert!(rss > 0.0, "peak_rss_bytes {rss} (the /proc sampler saw nothing)");
+    }
+    // a record always compares clean against itself
+    let self_compare = Command::new(opinn())
+        .args(["bench", "--compare", record_path.to_str().unwrap()])
+        .args(["--against", record_path.to_str().unwrap()])
+        .status()
+        .unwrap();
+    assert!(self_compare.success(), "self-compare must pass");
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+/// `--compare` exit codes: clean on identical records, nonzero once the
+/// baseline says the binary used to be 100x faster.
+#[test]
+fn compare_gate_exit_codes() {
+    let dir = tmp_dir("compare");
+    let record = Json::from_file(&fixture_path()).unwrap();
+    let current = dir.join("current.json");
+    std::fs::write(&current, record.to_string()).unwrap();
+
+    let clean = Command::new(opinn())
+        .args(["bench", "--compare", current.to_str().unwrap()])
+        .args(["--against", current.to_str().unwrap()])
+        .status()
+        .unwrap();
+    assert!(clean.success(), "identical records must compare clean");
+
+    // doctor a baseline claiming 100x the throughput -> regression
+    let mut doctored = record.clone();
+    if let Json::Obj(m) = &mut doctored {
+        let probes = record.req("probes_per_sec").unwrap().as_f64().unwrap();
+        m.insert("probes_per_sec".to_string(), Json::Num(probes * 100.0));
+    }
+    let baseline = dir.join("baseline.json");
+    std::fs::write(&baseline, doctored.to_string()).unwrap();
+    let gate = Command::new(opinn())
+        .args(["bench", "--compare", baseline.to_str().unwrap()])
+        .args(["--against", current.to_str().unwrap()])
+        .status()
+        .unwrap();
+    assert!(!gate.success(), "a 100x throughput regression must exit nonzero");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Golden-file schema pin: the committed fixture must validate, carry
+/// the exact field set the emitter writes (schema bumps have to touch
+/// the fixture deliberately), and round-trip through `util::json`.
+#[test]
+fn golden_fixture_pins_the_schema() {
+    let record = Json::from_file(&fixture_path()).unwrap();
+    validate_report(&record).unwrap();
+    assert_eq!(
+        record.req("schema_version").unwrap().as_usize().unwrap(),
+        SCHEMA_VERSION as usize
+    );
+
+    let keys = |j: &Json| -> Vec<String> { j.as_obj().unwrap().keys().cloned().collect() };
+    assert_eq!(
+        keys(&record),
+        [
+            "cases",
+            "config_digest",
+            "cpu_ticks",
+            "histogram",
+            "peak_rss_bytes",
+            "probes_per_sec",
+            "quick_scale",
+            "scenario",
+            "schema_version",
+            "step_ms",
+            "wire",
+        ],
+        "top-level field set changed — bump SCHEMA_VERSION and refresh the fixture"
+    );
+    assert_eq!(
+        keys(record.req("step_ms").unwrap()),
+        ["count", "max", "mean", "min", "p50", "p90", "p99"]
+    );
+    assert_eq!(keys(record.req("wire").unwrap()), ["rx_bytes", "tx_bytes"]);
+    assert_eq!(
+        keys(record.req("histogram").unwrap()),
+        ["buckets", "scheme", "underflow"]
+    );
+    let case = &record.req("cases").unwrap().as_arr().unwrap()[0];
+    assert_eq!(
+        keys(case),
+        [
+            "argv",
+            "cpu_ticks",
+            "epochs",
+            "final_rel_l2",
+            "name",
+            "peak_rss_bytes",
+            "probes_per_sec",
+            "step_ms",
+            "total_forwards",
+            "wall_secs",
+            "wire",
+        ],
+        "case field set changed — bump SCHEMA_VERSION and refresh the fixture"
+    );
+
+    // round-trip through the zero-dependency codec
+    let reparsed = Json::parse(&record.to_string()).unwrap();
+    assert_eq!(reparsed, record);
+    validate_report(&reparsed).unwrap();
+}
+
+/// The committed CI baselines must stay schema-valid: a stale baseline
+/// would make the bench-trajectory job fail on parse, not on perf.
+#[test]
+fn committed_baselines_are_schema_valid() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../benchmarks/baselines");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let record = Json::from_file(&path).unwrap();
+        validate_report(&record).unwrap_or_else(|e| panic!("{path:?}: {e}"));
+        seen += 1;
+    }
+    assert!(seen >= 3, "expected the three cheap-scenario baselines, found {seen}");
+}
+
+/// `opinn bench --list` names every registered scenario.
+#[test]
+fn bench_list_names_all_scenarios() {
+    let out = Command::new(opinn()).args(["bench", "--list"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["single-engine", "pipelined", "precision", "sharded-tcp", "fleet-churn"] {
+        assert!(text.contains(name), "--list missing {name}: {text}");
+    }
+}
