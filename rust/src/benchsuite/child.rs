@@ -12,6 +12,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::session::{Observer, StepCtx};
+use crate::telemetry::MetricsHub;
 use crate::util::json::Json;
 use crate::zo::trainer::History;
 use crate::{err, Result};
@@ -105,6 +106,23 @@ impl ChildSummary {
     }
 }
 
+/// Fold one child's summary into a [`MetricsHub`] — the bridge from
+/// the bench harness's raw per-step samples (exact percentiles, one
+/// process) to the unified telemetry store (mergeable log2 histograms,
+/// any number of children). Counters accumulate across calls, so a
+/// parent can harvest a whole scenario sweep into one hub and snapshot
+/// it as Prometheus text. The child's wire counters land under the
+/// same `wire.*` names the live [`crate::shard::ShardedEngine`] uses.
+pub fn harvest_into_hub(hub: &MetricsHub, summary: &ChildSummary) {
+    hub.inc("bench.steps", summary.epochs as u64);
+    hub.inc("bench.forwards", summary.total_forwards);
+    hub.inc("wire.tx_bytes", summary.wire_tx_bytes);
+    hub.inc("wire.rx_bytes", summary.wire_rx_bytes);
+    for dt in &summary.step_secs {
+        hub.observe("bench.step.secs", *dt);
+    }
+}
+
 /// Scrape the last [`CHILD_MARKER`] line out of a child's captured
 /// stdout and decode the JSON summary after it.
 pub fn parse_child_summary(stdout: &str) -> Result<ChildSummary> {
@@ -174,6 +192,27 @@ mod tests {
         assert!(text.contains("\"final_rel_l2\":null"), "{text}");
         let s = parse_child_summary(&format!("{CHILD_MARKER} {text}")).unwrap();
         assert!(s.final_rel_l2.is_nan());
+    }
+
+    #[test]
+    fn harvest_folds_children_into_one_hub() {
+        let s = ChildSummary {
+            epochs: 3,
+            total_forwards: 960,
+            wall_secs: 1.25,
+            final_rel_l2: 3.5e-2,
+            wire_tx_bytes: 2048,
+            wire_rx_bytes: 512,
+            step_secs: vec![0.01, 0.02, 0.015],
+        };
+        let hub = MetricsHub::new();
+        harvest_into_hub(&hub, &s);
+        harvest_into_hub(&hub, &s);
+        assert_eq!(hub.counter("bench.steps"), 6);
+        assert_eq!(hub.counter("bench.forwards"), 1920);
+        assert_eq!(hub.counter("wire.tx_bytes"), 4096);
+        assert_eq!(hub.counter("wire.rx_bytes"), 1024);
+        assert_eq!(hub.hist("bench.step.secs").unwrap().count(), 6);
     }
 
     #[test]

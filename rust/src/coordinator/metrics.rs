@@ -57,6 +57,8 @@ impl Metrics {
     }
 
     /// Export the curve as CSV (header from the union of columns).
+    /// Columns a row never recorded are written as `nan` — an empty cell
+    /// would be indistinguishable from zero to most CSV readers.
     pub fn curve_csv(&self) -> String {
         let mut cols: Vec<String> = Vec::new();
         for (_, row) in &self.curve {
@@ -76,8 +78,9 @@ impl Metrics {
             out.push_str(&step.to_string());
             for c in &cols {
                 out.push(',');
-                if let Some(v) = row.get(c) {
-                    out.push_str(&format!("{v:.6e}"));
+                match row.get(c) {
+                    Some(v) => out.push_str(&format!("{v:.6e}")),
+                    None => out.push_str("nan"),
                 }
             }
             out.push('\n');
@@ -141,7 +144,9 @@ mod tests {
         let csv = m.curve_csv();
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines[0], "step,err,loss");
-        assert!(lines[1].starts_with("0,"));
-        assert!(lines[2].starts_with("10,,") || lines[2].contains(",,"));
+        assert_eq!(lines[1], "0,5.000000e-1,1.000000e0");
+        // a column the row never recorded is `nan`, never an empty cell
+        // (which CSV readers silently coerce to zero)
+        assert_eq!(lines[2], "10,nan,1.000000e-1");
     }
 }

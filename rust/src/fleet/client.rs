@@ -9,7 +9,8 @@ use std::time::{Duration, Instant};
 use super::membership::MembershipTable;
 use crate::shard::wire::{self, RegistryReply, RegistryRequest};
 use crate::shard::{TcpTransport, Transport};
-use crate::{err, Result};
+use crate::telemetry::Level;
+use crate::{err, log, Result};
 
 /// Member address the dispatcher treats as a local in-process replica
 /// instead of a TCP worker. Lets tests, benches and single-host
@@ -106,9 +107,13 @@ impl Heartbeater {
         let handle = std::thread::spawn(move || {
             let mut client = RegistryClient::new(registry_addr.clone());
             match client.register(&member) {
-                Ok(_) => eprintln!("shard-worker: registered {member} with {registry_addr}"),
-                Err(e) => eprintln!(
-                    "shard-worker: register with {registry_addr} failed ({e}); heartbeats will keep trying"
+                Ok(_) => {
+                    log!(Level::Info, "shard-worker: registered {member} with {registry_addr}")
+                }
+                Err(e) => log!(
+                    Level::Warn,
+                    "shard-worker: register with {registry_addr} failed ({e}); \
+                     heartbeats will keep trying"
                 ),
             }
             while !stop_flag.load(Ordering::Relaxed) {
@@ -124,7 +129,10 @@ impl Heartbeater {
                     break;
                 }
                 if let Err(e) = client.heartbeat(&member) {
-                    eprintln!("shard-worker: heartbeat to {registry_addr} failed ({e}); retrying");
+                    log!(
+                        Level::Warn,
+                        "shard-worker: heartbeat to {registry_addr} failed ({e}); retrying"
+                    );
                 }
             }
             if graceful_flag.load(Ordering::Relaxed) {

@@ -15,7 +15,8 @@ use std::time::{Duration, Instant};
 
 use super::membership::MembershipTable;
 use crate::shard::wire::{self, RegistryReply, RegistryRequest};
-use crate::Result;
+use crate::telemetry::{global_hub, Level};
+use crate::{log, Result};
 
 /// Heartbeat cadence and miss tolerance shared by workers and the
 /// registry. The TTL is their product: a worker may miss
@@ -88,7 +89,7 @@ impl Registry {
                     std::thread::spawn(move || serve_connection(s, table));
                 }
                 Err(e) => {
-                    eprintln!("registry: accept failed ({e}); continuing");
+                    log!(Level::Warn, "registry: accept failed ({e}); continuing");
                     std::thread::sleep(Duration::from_millis(50));
                 }
             }
@@ -103,40 +104,50 @@ pub fn handle_registry_request(
     req: &RegistryRequest,
     table: &Mutex<MembershipTable>,
 ) -> RegistryReply {
+    // daemon-side accounting lands in the process-global hub so a
+    // long-lived `opinn registry` can answer `opinn stat`
+    let hub = global_hub();
+    hub.inc("registry.requests", 1);
     let now = Instant::now();
     let mut t = table.lock().expect("registry membership lock");
     for addr in t.prune(now) {
-        eprintln!("registry: {addr} missed its heartbeat budget; dropped");
+        hub.inc("registry.pruned", 1);
+        log!(Level::Warn, "registry: {addr} missed its heartbeat budget; dropped");
     }
-    match req {
+    let reply = match req {
         RegistryRequest::Register(addr) => {
             let known = t.register(addr, now);
             if !known {
-                eprintln!("registry: {addr} joined");
+                log!(Level::Info, "registry: {addr} joined");
             }
             RegistryReply::Ack(known)
         }
         RegistryRequest::Heartbeat(addr) => {
             let known = t.heartbeat(addr, now);
             if !known {
-                eprintln!("registry: {addr} joined via heartbeat");
+                log!(Level::Info, "registry: {addr} joined via heartbeat");
             }
             RegistryReply::Ack(known)
         }
         RegistryRequest::Deregister(addr) => {
             let known = t.deregister(addr);
             if known {
-                eprintln!("registry: {addr} left");
+                log!(Level::Info, "registry: {addr} left");
             }
             RegistryReply::Ack(known)
         }
         RegistryRequest::Resolve => RegistryReply::Members(t.live(now)),
-    }
+    };
+    hub.set_gauge("registry.members", t.len() as f64);
+    reply
 }
 
 /// Serve one client connection: read registry frames, apply, reply —
 /// until clean EOF. A malformed frame ends the connection (the registry
-/// protocol has no error reply; a confused client should reconnect).
+/// protocol has no error reply; a confused client should reconnect). A
+/// stats request (tag `22`) short-circuits to a snapshot of the
+/// registry's process-global [`crate::telemetry::MetricsHub`] — the
+/// server side of `opinn stat <addr>`.
 pub fn serve_connection(mut stream: TcpStream, table: Arc<Mutex<MembershipTable>>) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(crate::shard::worker::IDLE_TIMEOUT));
@@ -145,10 +156,17 @@ pub fn serve_connection(mut stream: TcpStream, table: Arc<Mutex<MembershipTable>
             Ok(Some(p)) => p,
             Ok(None) | Err(_) => return,
         };
+        if wire::is_stats_request(&payload) {
+            let reply = wire::encode_stats_reply(&global_hub().prometheus_text());
+            if wire::write_frame(&mut stream, &reply).is_err() {
+                return;
+            }
+            continue;
+        }
         let req = match wire::decode_registry_request(&payload) {
             Ok(req) => req,
             Err(e) => {
-                eprintln!("registry: malformed request ({e}); closing connection");
+                log!(Level::Warn, "registry: malformed request ({e}); closing connection");
                 return;
             }
         };

@@ -44,6 +44,12 @@
 //!   adapter;
 //! * [`hw`] — footprint/latency model (Eq. 14–16, Tables 4–6);
 //! * [`coordinator`] — batched inference dispatcher, metrics, checkpoints;
+//! * [`telemetry`] — the observability layer: span tracing to Chrome
+//!   trace JSON (`--trace-out`), the unified [`telemetry::MetricsHub`]
+//!   registry served over the wire (`opinn stat <addr>`), and the
+//!   leveled rate-limited [`log!`](macro@crate::log) macro — all strictly
+//!   passive (trajectories are bitwise-identical with telemetry on or
+//!   off);
 //! * [`bench_harness`] — the in-tree micro-benchmark runner used by
 //!   `cargo bench` (criterion is not available in the vendored registry).
 //!
@@ -196,6 +202,7 @@ pub mod quadrature;
 pub mod session;
 pub mod shard;
 pub mod stein;
+pub mod telemetry;
 pub mod util;
 pub mod xla;
 pub mod zo;

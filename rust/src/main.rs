@@ -12,6 +12,8 @@
 //!                scenario registry against a built `opinn` binary,
 //!                write BENCH_<scenario>.json records at the repo root,
 //!                and gate regressions with --compare
+//!   stat         fetch a live metrics snapshot (Prometheus-style text)
+//!                from a running shard-worker or registry daemon
 //!   hw-report    print the pre-silicon footprint/latency model
 //!   info         artifact manifest summary
 //!
@@ -43,6 +45,8 @@ use optical_pinn::mnist;
 use optical_pinn::net::build_model;
 use optical_pinn::photonic::{PhaseProtocol, PhaseTrainConfig, PhotonicModel, PhotonicVariant};
 use optical_pinn::session::{self, EvalObserver, MultiObserver, SessionBuilder};
+use optical_pinn::shard::{wire, TcpTransport, Transport};
+use optical_pinn::telemetry::{recorder, MetricsHub};
 use optical_pinn::util::argparse::Args;
 use optical_pinn::util::json::Json;
 use optical_pinn::util::stats::sci;
@@ -78,6 +82,7 @@ fn run(args: &Args) -> Result<()> {
         Some("registry") => cmd_registry(args),
         Some("tables") => cmd_tables(args),
         Some("bench") => cmd_bench(args),
+        Some("stat") => cmd_stat(args),
         Some("hw-report") => cmd_hw_report(args),
         Some("info") => cmd_info(args),
         _ => {
@@ -116,7 +121,7 @@ fn help() -> String {
     out
 }
 
-const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables|bench|hw-report|info> [options]
+const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables|bench|stat|hw-report|info> [options]
   train <problem> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
         [--lr F] [--seed N] [--rank N] [--width N] [--mu F] [--queries N]
         [--eval-every N] [--max-forwards N] [--backend pjrt|native]
@@ -124,6 +129,7 @@ const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables
         [--shard-hosts H1,H2,...] [--registry ADDR]
         [--eval-precision f64|f32] [--verbose] [--bench-json]
         [--out ckpt.json] [--ckpt-every N] [--curve curve.csv]
+        [--trace-out trace.json]
   train-phase <problem> [--protocol ours|flops|l2ight] [--epochs N] [--lr F]
         [--seed N] [--mu F] [--queries N] [--eval-every N]
         [--max-forwards N] [--backend pjrt|native] [--probe-threads N]
@@ -153,6 +159,9 @@ const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables
         for the baseline's scenario) and exit nonzero when any headline
         metric — probes/s, p50/p99 step latency, peak RSS — is at least
         F times worse (default 2.0)
+  stat <addr>
+        fetch a live metrics snapshot (Prometheus-style text) from the
+        `opinn shard-worker` or `opinn registry` daemon at host:port
   hw-report [--epochs N]
   info
 options:
@@ -189,6 +198,9 @@ options:
   --ckpt-every N     with --out: checkpoint every N epochs, not just at
                      the end
   --curve FILE       write the eval curve as CSV (train)
+  --trace-out FILE   write a Chrome trace-event JSON of the run (load in
+                     Perfetto / chrome://tracing) and print a one-line
+                     metrics summary; tracing never changes trajectories
   --out FILE         save final params (train) / phases (train-phase)";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -254,6 +266,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         None
     };
+    // --trace-out: switch on the global span recorder and hand the
+    // session a metrics hub (shared with its sharded engine, if any).
+    // Telemetry is strictly passive — the trajectory is bitwise
+    // identical with or without it (pinned in tests/telemetry.rs).
+    let trace_out = args.get("trace-out").map(PathBuf::from);
+    let hub = std::sync::Arc::new(MetricsHub::new());
+    if trace_out.is_some() {
+        recorder().set_enabled(true);
+        builder = builder.telemetry(std::sync::Arc::clone(&hub));
+    }
     let ckpt_every = args.get_usize("ckpt-every", 0)?;
     if ckpt_every > 0 {
         let out = args.get("out").ok_or_else(|| {
@@ -286,6 +308,31 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(curve) = args.get("curve") {
         metrics.write_curve_csv(std::path::Path::new(curve))?;
+    }
+    if let Some(path) = &trace_out {
+        let rec = recorder();
+        rec.write_chrome_trace(path)?;
+        rec.set_enabled(false);
+        println!("telemetry: {}", hub.summary());
+        println!("trace -> {}", path.display());
+    }
+    Ok(())
+}
+
+/// `opinn stat <addr>` — round-trip a stats frame (wire tag 22) to a
+/// running shard-worker or registry and print the Prometheus-style
+/// snapshot it replies with (tag 23).
+fn cmd_stat(args: &Args) -> Result<()> {
+    let addr = args
+        .positional
+        .first()
+        .ok_or_else(|| optical_pinn::err("stat: expected a daemon address (host:port)"))?;
+    let mut transport = TcpTransport::new(addr.clone());
+    let reply = transport.round_trip(&wire::encode_stats_request())?;
+    let text = wire::decode_stats_reply(&reply)?;
+    print!("{text}");
+    if !text.ends_with('\n') {
+        println!();
     }
     Ok(())
 }

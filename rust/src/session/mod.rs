@@ -94,6 +94,7 @@ pub use space::{IdentitySpace, ParamSpace, PhotonicSpace};
 pub use crate::zo::trainer::History;
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::engine::{Engine, EvalPrecision, PendingLosses, ProbeBatch};
 use crate::net::ParamEntry;
@@ -103,6 +104,7 @@ use crate::photonic::training::{PhaseProtocol, PhaseTrainConfig};
 use crate::photonic::PhotonicModel;
 use crate::fleet::FleetDirectory;
 use crate::shard::ShardedEngine;
+use crate::telemetry::{recorder, MetricsHub, TelemetryObserver};
 use crate::util::rng::Rng;
 use crate::zo::rge::{Perturbation, RgeConfig, RgeEstimator};
 use crate::zo::trainer::{TrainConfig, TrainMethod};
@@ -291,15 +293,24 @@ fn run_blocking(
     let mut ws = SessionWorkspace::new(space.out_dim(), d);
     let mut forwards: u64 = 0;
 
+    // Telemetry spans are strictly passive — they read the clock and
+    // never touch `rng`, so traced and untraced runs are bitwise-equal.
+    let rec = recorder();
     for epoch in 0..epochs {
+        let resample_span = rec.span(|| "step.resample".into());
         engine.resample(&mut rng);
         let pts = engine.pde().sample_points(&mut rng);
+        drop(resample_span);
+        let grad_span = rec.span(|| "step.grad".into());
         let report =
             source.step(&mut *engine, &mut *space, params, &pts, &mut rng, &mut grad, &mut ws)?;
+        drop(grad_span);
         forwards += report.forwards;
+        let commit_span = rec.span(|| "step.commit".into());
         if report.apply {
             opt.step(params, &grad);
         }
+        drop(commit_span);
 
         let last = epoch + 1 == epochs;
         let budget_hit = max_forwards.map(|m| forwards >= m).unwrap_or(false);
@@ -311,7 +322,9 @@ fn run_blocking(
             ws: &mut ws,
             info: StepInfo { epoch, epochs, last, budget_hit, forwards },
         };
+        let observe_span = rec.span(|| "step.observe".into());
         observer.after_step(&mut ctx, hist)?;
+        drop(observe_span);
         if budget_hit {
             break;
         }
@@ -399,17 +412,24 @@ fn run_pipelined(
         // consume the main RNG, so the draw order matches the blocking
         // loop exactly.
         if !last {
+            let _draw_span = recorder().span(|| "step.draw".into());
             engine.resample(&mut rng);
             pts_next = Some(engine.pde().sample_points(&mut rng));
             source.draw(&mut rng)?;
         }
+        let wait_span = recorder().span(|| "step.wait".into());
         let (buf, losses) = pending.take().expect("a batch is always in flight here").wait();
         let losses = losses?;
+        drop(wait_span);
+        let assemble_span = recorder().span(|| "step.assemble".into());
         let report = source.assemble(&losses, fpl, &mut grad)?;
+        drop(assemble_span);
         forwards += report.forwards;
+        let commit_span = recorder().span(|| "step.commit".into());
         if report.apply {
             opt.step(params, &grad);
         }
+        drop(commit_span);
 
         let budget_hit = max_forwards.map(|m| forwards >= m).unwrap_or(false);
         let mut ctx = StepCtx {
@@ -420,13 +440,16 @@ fn run_pipelined(
             ws: &mut ws,
             info: StepInfo { epoch, epochs, last, budget_hit, forwards },
         };
+        let observe_span = recorder().span(|| "step.observe".into());
         observer.after_step(&mut ctx, hist)?;
+        drop(observe_span);
         if budget_hit || last {
             break;
         }
         // Commit the speculative epoch+1 plan: promote it to active,
         // re-base its probe rows on the post-step parameters and hand it
         // back to the engine, recycling the returned batch buffer.
+        let _issue_span = recorder().span(|| "step.issue".into());
         pts = pts_next.take().expect("drawn in the overlap window");
         source.advance_plan()?;
         pending = Some(materialize_and_issue(source, space, engine, params, &pts, &mut ws, buf)?);
@@ -457,6 +480,7 @@ pub struct SessionBuilder {
     source: Option<Box<dyn GradientSource>>,
     observer: Option<Box<dyn Observer>>,
     checkpoint: Option<(PathBuf, usize, String)>,
+    telemetry: Option<Arc<MetricsHub>>,
 }
 
 impl SessionBuilder {
@@ -482,6 +506,7 @@ impl SessionBuilder {
             source: None,
             observer: None,
             checkpoint: None,
+            telemetry: None,
         }
     }
 
@@ -618,6 +643,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Record session metrics into `hub`: a [`TelemetryObserver`] is
+    /// placed ahead of the eval observer (per-step latency histogram
+    /// `session.step.secs`, counter `session.steps`), and a sharded
+    /// engine routes its `shard.*` / `fleet.*` / `wire.*` counters into
+    /// the same hub. Strictly passive — the trajectory is
+    /// bitwise-identical with or without a hub attached
+    /// (`rust/tests/telemetry.rs`).
+    pub fn telemetry(mut self, hub: Arc<MetricsHub>) -> SessionBuilder {
+        self.telemetry = Some(hub);
+        self
+    }
+
     /// Checkpoint the trainable vector to `path` every `every` epochs
     /// (plus the final/budget-hit epoch).
     pub fn checkpoint_every(
@@ -725,6 +762,7 @@ impl SessionBuilder {
             source,
             observer,
             checkpoint,
+            telemetry,
         } = self;
         // Select the kernel precision before any shard wrapping, so the
         // engine's refreshed replica spec carries it to every worker.
@@ -743,6 +781,10 @@ impl SessionBuilder {
             (None, None) => unreachable!("validate() rejects sourceless sessions"),
         };
         let mut observers: Vec<Box<dyn Observer>> = Vec::new();
+        // first, so step-latency samples close before eval/checkpoint run
+        if let Some(hub) = &telemetry {
+            observers.push(Box::new(TelemetryObserver::new(Arc::clone(hub))));
+        }
         match observer {
             Some(o) => observers.push(o),
             None => observers.push(Box::new(EvalObserver { eval_every, seed, verbose, tag })),
@@ -762,9 +804,17 @@ impl SessionBuilder {
         // wires it here once.
         let directory = fleet_directory.or_else(|| registry.map(FleetDirectory::registry));
         let engine = if let Some(directory) = directory {
-            SessionEngine::Sharded(ShardedEngine::from_directory(engine, directory)?)
+            let mut sharded = ShardedEngine::from_directory(engine, directory)?;
+            if let Some(hub) = &telemetry {
+                sharded.use_metrics_hub(Arc::clone(hub));
+            }
+            SessionEngine::Sharded(sharded)
         } else if shards > 0 || !shard_hosts.is_empty() {
-            SessionEngine::Sharded(ShardedEngine::from_config(engine, shards, &shard_hosts)?)
+            let mut sharded = ShardedEngine::from_config(engine, shards, &shard_hosts)?;
+            if let Some(hub) = &telemetry {
+                sharded.use_metrics_hub(Arc::clone(hub));
+            }
+            SessionEngine::Sharded(sharded)
         } else {
             SessionEngine::Direct(engine)
         };

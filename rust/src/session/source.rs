@@ -187,9 +187,13 @@ impl GradientSource for RgeSource {
         grad: &mut [f64],
         ws: &mut SessionWorkspace,
     ) -> Result<StepReport> {
+        let rec = crate::telemetry::recorder();
         let fpl = engine.forwards_per_loss() as u64;
+        let plan_span = rec.span(|| "step.plan".into());
         let plan = self.est.plan(params, rng);
         let n_probes = plan.n_probes() as u64;
+        drop(plan_span);
+        let eval_span = rec.span(|| "step.eval".into());
         let losses = if space.is_identity() {
             engine.loss_many(&plan, pts)?
         } else {
@@ -201,7 +205,10 @@ impl GradientSource for RgeSource {
             }
             engine.loss_many(batch, pts)?
         };
+        drop(eval_span);
+        let assemble_span = rec.span(|| "step.assemble".into());
         self.est.assemble(&losses, grad)?;
+        drop(assemble_span);
         Ok(StepReport { forwards: n_probes * fpl, apply: true })
     }
 

@@ -64,14 +64,14 @@ use std::time::Instant;
 use super::transport::{InProcessTransport, TcpTransport, Transport};
 use super::wire;
 use super::worker::POINT_CACHE_CAP;
-use crate::coordinator::Metrics;
 use crate::engine::{
     Engine, EngineSpec, EvalPrecision, NativeEngine, PendingLosses, ProbeBatch, ShardStat,
 };
 use crate::fleet::{is_in_process, FleetDirectory};
 use crate::pde::{Pde, PointSet};
+use crate::telemetry::{recorder, Level, MetricsHub};
 use crate::util::rng::Rng;
-use crate::{err, Error, Result};
+use crate::{err, log, Error, Result};
 
 /// Base wall-clock backoff after a shard failure; doubled per
 /// consecutive failure up to [`MAX_BACKOFF_DOUBLINGS`]. Keeps a *hung*
@@ -137,7 +137,7 @@ impl ShardSlot {
     /// the old streak's doubling.
     fn note_success(&mut self) {
         if self.warned {
-            eprintln!("shard[{}]: recovered; resuming remote dispatch", self.label);
+            log!(Level::Info, "shard[{}]: recovered; resuming remote dispatch", self.label);
         }
         self.warned = false;
         self.failures = 0;
@@ -151,7 +151,7 @@ impl ShardSlot {
         self.failures = self.failures.saturating_add(1);
         self.retry_at = Some(Instant::now() + RETRY_BACKOFF * (1u32 << doublings));
         if !self.warned {
-            eprintln!("shard[{}]: {what}; falling back to local evaluation", self.label);
+            log!(Level::Warn, "shard[{}]: {what}; falling back to local evaluation", self.label);
             self.warned = true;
         }
     }
@@ -218,9 +218,11 @@ fn eval_range(
     use_cache: bool,
     bytes: &mut (u64, u64),
 ) -> Result<Vec<f64>> {
+    let rec = recorder();
     if use_cache && slot.mirror.contains(&pw.digest) {
         let request = wire::encode_eval_request_hashed(spec, probes.rows(range.clone()), pw.digest);
         bytes.0 += request.len() as u64;
+        let rt_span = rec.span(|| "wire.roundtrip".into());
         let reply = match slot.transport.round_trip(&request) {
             Ok(reply) => reply,
             Err(e) => {
@@ -228,6 +230,7 @@ fn eval_range(
                 return Err(e);
             }
         };
+        drop(rt_span);
         bytes.1 += reply.len() as u64;
         match wire::decode_worker_reply(&reply)? {
             wire::EvalReply::Losses(losses) => {
@@ -241,6 +244,7 @@ fn eval_range(
     }
     let request = wire::encode_eval_request_precoded(spec, probes.rows(range), &pw.bytes);
     bytes.0 += request.len() as u64;
+    let rt_span = rec.span(|| "wire.roundtrip".into());
     let reply = match slot.transport.round_trip(&request) {
         Ok(reply) => reply,
         Err(e) => {
@@ -248,6 +252,7 @@ fn eval_range(
             return Err(e);
         }
     };
+    drop(rt_span);
     bytes.1 += reply.len() as u64;
     match wire::decode_worker_reply(&reply)? {
         wire::EvalReply::Losses(losses) => {
@@ -303,7 +308,7 @@ impl FleetState {
         match self.directory.resolve() {
             Ok(members) => {
                 if self.resolve_warned {
-                    eprintln!("fleet: {} reachable again", self.directory.label());
+                    log!(Level::Info, "fleet: {} reachable again", self.directory.label());
                     self.resolve_warned = false;
                 }
                 let mut old = std::mem::take(&mut self.slots);
@@ -332,7 +337,8 @@ impl FleetState {
             }
             Err(e) => {
                 if !self.resolve_warned {
-                    eprintln!(
+                    log!(
+                        Level::Warn,
                         "fleet: resolve via {} failed ({e}); keeping the last {} member(s)",
                         self.directory.label(),
                         self.slots.len()
@@ -357,8 +363,10 @@ pub struct ShardedEngine<E: Engine> {
     /// thread ([`Engine::loss_many_async`]) can drive it too.
     replicas: Arc<Mutex<Replicas>>,
     /// Per-shard dispatch accounting (rows, busy seconds, fallbacks,
-    /// wire bytes).
-    metrics: Arc<Mutex<Metrics>>,
+    /// wire bytes) under `shard.<i>.*` / `fleet.<addr>.*` / `wire.*`
+    /// names. Per-instance by default (test isolation); a session shares
+    /// its hub via [`ShardedEngine::use_metrics_hub`].
+    hub: Arc<MetricsHub>,
     /// Lazily-built local replica used as the fallback evaluator on the
     /// async dispatch thread, where the wrapped engine is out of reach.
     async_fallback: Arc<Mutex<Option<NativeEngine>>>,
@@ -408,7 +416,7 @@ impl<E: Engine> ShardedEngine<E> {
             local,
             spec,
             replicas: Arc::new(Mutex::new(Replicas::Static(slots))),
-            metrics: Arc::new(Mutex::new(Metrics::new())),
+            hub: Arc::new(MetricsHub::new()),
             async_fallback: Arc::new(Mutex::new(None)),
             point_cache: Arc::new(AtomicBool::new(true)),
         })
@@ -427,7 +435,7 @@ impl<E: Engine> ShardedEngine<E> {
                 slots: Vec::new(),
                 resolve_warned: false,
             }))),
-            metrics: Arc::new(Mutex::new(Metrics::new())),
+            hub: Arc::new(MetricsHub::new()),
             async_fallback: Arc::new(Mutex::new(None)),
             point_cache: Arc::new(AtomicBool::new(true)),
         })
@@ -476,8 +484,22 @@ impl<E: Engine> ShardedEngine<E> {
     /// Cumulative `(tx, rx)` request/reply payload bytes exchanged with
     /// replicas across all dispatches (both modes, both transports).
     pub fn wire_bytes(&self) -> (u64, u64) {
-        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
-        (m.counter("wire.tx_bytes"), m.counter("wire.rx_bytes"))
+        (self.hub.counter("wire.tx_bytes"), self.hub.counter("wire.rx_bytes"))
+    }
+
+    /// Route this engine's dispatch accounting into `hub` instead of the
+    /// private per-instance registry — the session driver shares one hub
+    /// between its [`crate::telemetry::TelemetryObserver`] and the
+    /// engine, so `session.*`, `shard.*`, `fleet.*` and `wire.*` land in
+    /// one namespace. Call before the first dispatch; metrics already
+    /// recorded stay behind in the old hub.
+    pub fn use_metrics_hub(&mut self, hub: Arc<MetricsHub>) {
+        self.hub = hub;
+    }
+
+    /// The metrics registry this engine records into.
+    pub fn metrics_hub(&self) -> Arc<MetricsHub> {
+        Arc::clone(&self.hub)
     }
 
     /// Per-slot consecutive-failure counts, in slot order (tests).
@@ -525,7 +547,7 @@ const STEAL_CHUNKS_PER_SLOT: usize = 4;
 fn shard_loss_many(
     spec: &EngineSpec,
     replicas: &Mutex<Replicas>,
-    metrics: &Mutex<Metrics>,
+    hub: &MetricsHub,
     probes: &ProbeBatch,
     pts: &PointSet,
     use_cache: bool,
@@ -535,10 +557,10 @@ fn shard_loss_many(
     let pw = PointsWire::new(pts);
     match &mut *guard {
         Replicas::Static(slots) => {
-            static_loss_many(spec, slots, metrics, probes, &pw, use_cache, fallback)
+            static_loss_many(spec, slots, hub, probes, &pw, use_cache, fallback)
         }
         Replicas::Fleet(state) => {
-            fleet_loss_many(spec, state, metrics, probes, &pw, use_cache, fallback)
+            fleet_loss_many(spec, state, hub, probes, &pw, use_cache, fallback)
         }
     }
 }
@@ -548,17 +570,20 @@ fn shard_loss_many(
 fn static_loss_many(
     spec: &EngineSpec,
     slots: &mut [ShardSlot],
-    metrics: &Mutex<Metrics>,
+    hub: &MetricsHub,
     probes: &ProbeBatch,
     pw: &PointsWire,
     use_cache: bool,
     fallback: &mut dyn FnMut(&ProbeBatch) -> Result<Vec<f64>>,
 ) -> Result<Vec<f64>> {
+    let rec = recorder();
     let n = probes.n_probes();
     let ranges = ranges(n, slots.len());
     let mut outcomes: Vec<Option<RangeOutcome>> = (0..ranges.len()).map(|_| None).collect();
+    let dispatch_span = rec.span(|| "shard.dispatch".into());
     std::thread::scope(|sc| {
-        for ((slot, range), out) in slots.iter_mut().zip(&ranges).zip(outcomes.iter_mut()) {
+        let zipped = slots.iter_mut().zip(&ranges).zip(outcomes.iter_mut());
+        for (i, ((slot, range), out)) in zipped.enumerate() {
             if range.is_empty() {
                 continue;
             }
@@ -569,6 +594,7 @@ fn static_loss_many(
                 continue;
             }
             sc.spawn(move || {
+                let _eval_span = rec.span(|| format!("shard.{i}.eval"));
                 let eff = effective_spec(spec, slot.dilution);
                 let t0 = Instant::now();
                 let mut bytes = (0u64, 0u64);
@@ -590,10 +616,11 @@ fn static_loss_many(
             });
         }
     });
+    drop(dispatch_span);
 
+    let _assemble_span = rec.span(|| "shard.assemble".into());
     let mut out = vec![0.0; n];
     let mut sub: Option<ProbeBatch> = None;
-    let mut m = metrics.lock().unwrap_or_else(|p| p.into_inner());
     let it = slots.iter_mut().zip(&ranges).zip(outcomes).enumerate();
     for (i, ((slot, range), outcome)) in it {
         let rows = range.len();
@@ -601,17 +628,15 @@ fn static_loss_many(
             continue;
         }
         if let Some(RangeOutcome { tx, rx, .. }) = &outcome {
-            m.inc("wire.tx_bytes", *tx);
-            m.inc("wire.rx_bytes", *rx);
+            hub.inc("wire.tx_bytes", *tx);
+            hub.inc("wire.rx_bytes", *rx);
         }
         let failure = match outcome {
             Some(RangeOutcome { result: Ok(losses), secs, .. }) if losses.len() == rows => {
                 out[range.start..range.end].copy_from_slice(&losses);
                 slot.note_success();
-                m.inc(&format!("shard{i}.rows"), rows as u64);
-                let key = format!("shard{i}.secs");
-                let prev = m.gauge(&key).unwrap_or(0.0);
-                m.set_gauge(&key, prev + secs);
+                hub.inc(&format!("shard.{i}.rows"), rows as u64);
+                hub.add_gauge(&format!("shard.{i}.secs"), secs);
                 continue;
             }
             Some(RangeOutcome { result: Ok(losses), .. }) => {
@@ -624,7 +649,7 @@ fn static_loss_many(
         if !failure.is_empty() {
             slot.note_failure(&failure);
         }
-        m.inc(&format!("shard{i}.fallbacks"), 1);
+        hub.inc(&format!("shard.{i}.fallbacks"), 1);
         let sb = sub.get_or_insert_with(|| ProbeBatch::new(probes.dim()));
         sb.clear();
         sb.extend_from_rows(probes.rows(range.clone()));
@@ -660,12 +685,13 @@ struct SlotRun {
 fn fleet_loss_many(
     spec: &EngineSpec,
     state: &mut FleetState,
-    metrics: &Mutex<Metrics>,
+    hub: &MetricsHub,
     probes: &ProbeBatch,
     pw: &PointsWire,
     use_cache: bool,
     fallback: &mut dyn FnMut(&ProbeBatch) -> Result<Vec<f64>>,
 ) -> Result<Vec<f64>> {
+    let rec = recorder();
     state.sync();
     let n = probes.n_probes();
     let dispatchable = state.slots.iter().filter(|(_, s)| !s.backing_off()).count();
@@ -674,6 +700,7 @@ fn fleet_loss_many(
         (0..n).step_by(chunk_rows).map(|s| s..(s + chunk_rows).min(n)).collect();
     let next = AtomicUsize::new(0);
     let mut runs: Vec<Option<SlotRun>> = (0..state.slots.len()).map(|_| None).collect();
+    let dispatch_span = rec.span(|| "fleet.dispatch".into());
     if dispatchable > 0 {
         std::thread::scope(|sc| {
             for ((_, slot), out) in state.slots.iter_mut().zip(runs.iter_mut()) {
@@ -683,6 +710,7 @@ fn fleet_loss_many(
                 let chunks = &chunks;
                 let next = &next;
                 sc.spawn(move || {
+                    let _eval_span = rec.span(|| format!("fleet.{}.eval", slot.label));
                     let eff = effective_spec(spec, slot.dilution);
                     let t0 = Instant::now();
                     let mut run =
@@ -729,14 +757,15 @@ fn fleet_loss_many(
             }
         });
     }
+    drop(dispatch_span);
 
+    let _assemble_span = rec.span(|| "shard.assemble".into());
     let mut out = vec![0.0; n];
     let mut covered = vec![false; chunks.len()];
-    let mut m = metrics.lock().unwrap_or_else(|p| p.into_inner());
     for ((_, slot), run) in state.slots.iter_mut().zip(runs) {
         let Some(run) = run else { continue }; // backing off this dispatch
-        m.inc("wire.tx_bytes", run.tx);
-        m.inc("wire.rx_bytes", run.rx);
+        hub.inc("wire.tx_bytes", run.tx);
+        hub.inc("wire.rx_bytes", run.rx);
         let mut rows = 0u64;
         for (ci, losses) in run.done {
             let range = &chunks[ci];
@@ -745,15 +774,13 @@ fn fleet_loss_many(
             rows += range.len() as u64;
         }
         if rows > 0 {
-            m.inc(&format!("fleet.{}.rows", slot.label), rows);
-            let key = format!("fleet.{}.secs", slot.label);
-            let prev = m.gauge(&key).unwrap_or(0.0);
-            m.set_gauge(&key, prev + run.secs);
+            hub.inc(&format!("fleet.{}.rows", slot.label), rows);
+            hub.add_gauge(&format!("fleet.{}.secs", slot.label), run.secs);
         }
         match run.failure {
             Some(what) => {
                 slot.note_failure(&what);
-                m.inc(&format!("fleet.{}.fallbacks", slot.label), 1);
+                hub.inc(&format!("fleet.{}.fallbacks", slot.label), 1);
             }
             // a slot that claimed nothing (lost every race) is neither a
             // success nor a failure
@@ -785,7 +812,7 @@ fn fleet_loss_many(
         local_rows += range.len() as u64;
     }
     if local_rows > 0 {
-        m.inc("fleet.local.rows", local_rows);
+        hub.inc("fleet.local.rows", local_rows);
     }
     Ok(out)
 }
@@ -810,7 +837,7 @@ impl<E: Engine> Engine for ShardedEngine<E> {
         let local = &mut self.local;
         let use_cache = self.point_cache.load(Ordering::Relaxed);
         let fallback = &mut |pb: &ProbeBatch| local.loss_many(pb, pts);
-        shard_loss_many(&self.spec, &self.replicas, &self.metrics, probes, pts, use_cache, fallback)
+        shard_loss_many(&self.spec, &self.replicas, &self.hub, probes, pts, use_cache, fallback)
     }
 
     fn loss_many_async(&mut self, probes: ProbeBatch, pts: &PointSet) -> PendingLosses {
@@ -823,7 +850,7 @@ impl<E: Engine> Engine for ShardedEngine<E> {
         // queries, exactly like the native engine's async path.
         let spec = self.spec.clone();
         let replicas = Arc::clone(&self.replicas);
-        let metrics = Arc::clone(&self.metrics);
+        let hub = Arc::clone(&self.hub);
         let async_fallback = Arc::clone(&self.async_fallback);
         let use_cache = self.point_cache.load(Ordering::Relaxed);
         let pts = pts.clone();
@@ -836,7 +863,7 @@ impl<E: Engine> Engine for ShardedEngine<E> {
                 guard.as_mut().expect("built above").loss_many(pb, &pts)
             };
             let result =
-                shard_loss_many(&spec, &replicas, &metrics, &probes, &pts, use_cache, &mut fb);
+                shard_loss_many(&spec, &replicas, &hub, &probes, &pts, use_cache, &mut fb);
             (probes, result)
         });
         PendingLosses::in_flight(handle)
@@ -885,23 +912,22 @@ impl<E: Engine> Engine for ShardedEngine<E> {
 
     fn shard_stats(&self) -> Option<Vec<ShardStat>> {
         let guard = self.replicas.lock().unwrap_or_else(|p| p.into_inner());
-        let m = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
         let stat = |i: usize, label: &str, key: &str| {
-            let rows = m.counter(&format!("{key}.rows"));
-            let secs = m.gauge(&format!("{key}.secs")).unwrap_or(0.0);
+            let rows = self.hub.counter(&format!("{key}.rows"));
+            let secs = self.hub.gauge(&format!("{key}.secs")).unwrap_or(0.0);
             ShardStat {
                 index: i,
                 label: label.to_string(),
                 rows,
                 probes_per_s: if secs > 0.0 { rows as f64 / secs } else { 0.0 },
-                fallbacks: m.counter(&format!("{key}.fallbacks")),
+                fallbacks: self.hub.counter(&format!("{key}.fallbacks")),
             }
         };
         Some(match &*guard {
             Replicas::Static(slots) => slots
                 .iter()
                 .enumerate()
-                .map(|(i, slot)| stat(i, &slot.label, &format!("shard{i}")))
+                .map(|(i, slot)| stat(i, &slot.label, &format!("shard.{i}")))
                 .collect(),
             Replicas::Fleet(state) => state
                 .slots
@@ -1265,5 +1291,66 @@ mod tests {
         assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
         let (after_off, _) = sharded.wire_bytes();
         assert_eq!(after_off - after_warm, cold, "cache off re-ships the full cloud");
+    }
+
+    /// A transport that swaps in a brand-new in-process worker (empty
+    /// point cache) when told to — simulating a worker restart while the
+    /// dispatcher's digest mirror still believes the cloud is mirrored,
+    /// which is exactly what provokes the need-points retry.
+    struct Restartable {
+        inner: InProcessTransport,
+        restart: Arc<AtomicBool>,
+    }
+
+    impl Transport for Restartable {
+        fn round_trip(&mut self, request: &[u8]) -> Result<Vec<u8>> {
+            if self.restart.swap(false, Ordering::SeqCst) {
+                self.inner = InProcessTransport::new();
+            }
+            self.inner.round_trip(request)
+        }
+        fn label(&self) -> String {
+            "restartable".into()
+        }
+    }
+
+    #[test]
+    fn need_points_retry_charges_hashed_plus_full_exactly_once() {
+        let restart = Arc::new(AtomicBool::new(false));
+        let local = NativeEngine::new("bs", "tt").unwrap();
+        let params = local.model.init_flat(0);
+        let transports: Vec<Box<dyn Transport>> = vec![Box::new(Restartable {
+            inner: InProcessTransport::new(),
+            restart: Arc::clone(&restart),
+        })];
+        let mut sharded = ShardedEngine::new(local, transports).unwrap();
+        let mut rng = Rng::new(14);
+        let pts = sharded.pde().sample_points(&mut rng);
+        let probes = probes_around(&params, 3);
+        let mut direct = NativeEngine::new("bs", "tt").unwrap();
+        let want = direct.loss_many(&probes, &pts).unwrap();
+
+        // cold dispatch ships the full cloud; warm dispatch hashes it
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        let (full, _) = sharded.wire_bytes();
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        let (t2, _) = sharded.wire_bytes();
+        let hashed = t2 - full;
+        assert!(hashed < full, "hashed request must undercut the full one");
+
+        // restart the worker: the hashed request draws need-points and
+        // the dispatcher re-sends the full request — tx must count the
+        // hashed attempt AND the full re-send, each exactly once
+        restart.store(true, Ordering::SeqCst);
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        let (t3, _) = sharded.wire_bytes();
+        assert_eq!(t3 - t2, hashed + full, "one miss = one hashed + one full request");
+
+        // the retry re-warmed both caches: steady state is hashed again,
+        // and the miss never surfaced as a failure
+        assert_eq!(sharded.loss_many(&probes, &pts).unwrap(), want);
+        let (t4, _) = sharded.wire_bytes();
+        assert_eq!(t4 - t3, hashed, "the retry path must re-warm the mirror");
+        assert_eq!(sharded.shard_stats().unwrap()[0].fallbacks, 0);
     }
 }

@@ -21,6 +21,8 @@
 //! | `19` | resolve | (empty) |
 //! | `20` | members reply | `u64` count + that many `host:port` strings |
 //! | `21` | ack reply | `u8` flag (request-specific; see [`RegistryReply::Ack`]) |
+//! | `22` | stats request | (empty) |
+//! | `23` | stats reply | UTF-8 Prometheus-style exposition text |
 //!
 //! Tags `1`–`5` are the shard-worker evaluation protocol (tag `4`/`5`
 //! are the steady-state point-cloud cache: the dispatcher ships a
@@ -28,7 +30,11 @@
 //! replica that does not hold the cloud answers `5` so the dispatcher
 //! re-sends the full request — a cache miss is one extra round trip,
 //! never a wrong evaluation). Tags `16`–`21` are the fleet registry
-//! protocol served by `opinn registry` (see [`crate::fleet`]).
+//! protocol served by `opinn registry` (see [`crate::fleet`]). Tags
+//! `22`/`23` are the introspection pair behind `opinn stat <addr>`:
+//! both the shard worker and the registry answer a stats request with a
+//! snapshot of their process-global
+//! [`MetricsHub`](crate::telemetry::MetricsHub).
 //!
 //! Primitives: `u64` and `u32` little-endian; `f64` as the little-endian
 //! bytes of [`f64::to_bits`] (bitwise round-trip, including NaN payloads
@@ -79,6 +85,11 @@ pub const TAG_RESOLVE: u8 = 19;
 pub const TAG_MEMBERS: u8 = 20;
 /// Payload tag of a fleet-registry acknowledgment reply.
 pub const TAG_ACK: u8 = 21;
+
+/// Payload tag of a metrics-snapshot request (`opinn stat`).
+pub const TAG_STATS: u8 = 22;
+/// Payload tag of a metrics-snapshot reply.
+pub const TAG_STATS_REPLY: u8 = 23;
 
 /// A 128-bit content digest of a [`PointSet`]'s canonical wire encoding
 /// (two independently-seeded FNV-1a streams over [`encode_points`]
@@ -601,6 +612,45 @@ pub fn decode_worker_reply(payload: &[u8]) -> Result<EvalReply> {
 }
 
 // ---------------------------------------------------------------------
+// introspection frames (tags 22/23)
+// ---------------------------------------------------------------------
+
+/// Encode a metrics-snapshot request payload (the bare [`TAG_STATS`]
+/// byte — the request carries nothing).
+pub fn encode_stats_request() -> Vec<u8> {
+    vec![TAG_STATS]
+}
+
+/// True when `payload` is a stats request. Daemons peek this before
+/// their normal request decoding so the introspection path needs no
+/// changes to the existing protocol enums.
+pub fn is_stats_request(payload: &[u8]) -> bool {
+    payload.len() == 1 && payload[0] == TAG_STATS
+}
+
+/// Encode a metrics-snapshot reply payload carrying the hub's
+/// Prometheus-style exposition text.
+pub fn encode_stats_reply(text: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(16 + text.len());
+    put_u8(&mut buf, TAG_STATS_REPLY);
+    put_str(&mut buf, text);
+    buf
+}
+
+/// Decode a metrics-snapshot reply payload (strict: trailing bytes are
+/// an error).
+pub fn decode_stats_reply(payload: &[u8]) -> Result<String> {
+    let mut r = Reader::new(payload);
+    match r.get_u8()? {
+        TAG_STATS_REPLY => {}
+        other => return Err(err(format!("shard wire: expected stats reply, got tag {other}"))),
+    }
+    let text = r.get_str()?;
+    r.finish()?;
+    Ok(text)
+}
+
+// ---------------------------------------------------------------------
 // fleet registry frames (tags 16..=21)
 // ---------------------------------------------------------------------
 
@@ -1095,6 +1145,45 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    // -- introspection frames (tags 22/23) ----------------------------
+
+    #[test]
+    fn stats_frames_round_trip() {
+        let req = encode_stats_request();
+        assert!(is_stats_request(&req));
+        // every other frame kind must NOT look like a stats request
+        assert!(!is_stats_request(&encode_registry_request(&RegistryRequest::Resolve)));
+        assert!(!is_stats_request(&encode_eval_reply(&[])));
+        assert!(!is_stats_request(b""));
+        check(
+            "stats reply round-trip",
+            64,
+            |rng| {
+                let n = rng.below(200);
+                (0..n).map(|_| (b' ' + rng.below(95) as u8) as char).collect::<String>()
+            },
+            |text| {
+                let got =
+                    decode_stats_reply(&encode_stats_reply(text)).map_err(|e| e.to_string())?;
+                if got != *text {
+                    return Err("stats text diverged".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn corrupt_stats_replies_error_instead_of_panicking() {
+        let mut payload = encode_stats_reply("wire_tx_bytes 128\n");
+        payload.truncate(5);
+        assert!(decode_stats_reply(&payload).is_err());
+        assert!(decode_stats_reply(&encode_eval_reply(&[1.0])).is_err());
+        let mut trailing = encode_stats_reply("x");
+        trailing.push(0xaa);
+        assert!(decode_stats_reply(&trailing).is_err());
     }
 
     // -- fleet registry frames (tags 16..=21) -------------------------

@@ -22,7 +22,8 @@ use std::sync::Arc;
 use super::wire;
 use crate::engine::{Engine, EngineSpec, NativeEngine};
 use crate::pde::PointSet;
-use crate::Result;
+use crate::telemetry::{global_hub, Level};
+use crate::{log, Result};
 
 /// Point clouds a connection keeps for hashed requests, most recently
 /// used first. Small on purpose: a dispatcher reuses at most a handful
@@ -98,6 +99,11 @@ pub fn handle_request(payload: &[u8], cache: &mut EngineCache) -> Vec<u8> {
 }
 
 fn handle_inner(payload: &[u8], cache: &mut EngineCache) -> Result<Vec<u8>> {
+    // worker-side accounting lands in the process-global hub so a
+    // long-lived `opinn shard-worker` can answer `opinn stat` with its
+    // lifetime totals (tags 22/23)
+    let hub = global_hub();
+    hub.inc("worker.requests", 1);
     let (spec, probes, pts) = match wire::decode_worker_request(payload)? {
         wire::WorkerRequest::Full(req, digest) => {
             let pts = Arc::new(req.pts);
@@ -106,9 +112,13 @@ fn handle_inner(payload: &[u8], cache: &mut EngineCache) -> Result<Vec<u8>> {
         }
         wire::WorkerRequest::Hashed { spec, probes, digest } => match cache.points_for(digest) {
             Some(pts) => (spec, probes, pts),
-            None => return Ok(wire::encode_need_points(digest)),
+            None => {
+                hub.inc("worker.need_points", 1);
+                return Ok(wire::encode_need_points(digest));
+            }
         },
     };
+    hub.inc("worker.rows", probes.n_probes() as u64);
     let engine = cache.engine_for(&spec)?;
     let losses = engine.loss_many(&probes, &pts)?;
     Ok(wire::encode_eval_reply(&losses))
@@ -145,7 +155,7 @@ impl ShardWorker {
                     std::thread::spawn(move || serve_connection(s));
                 }
                 Err(e) => {
-                    eprintln!("shard-worker: accept failed ({e}); continuing");
+                    log!(Level::Warn, "shard-worker: accept failed ({e}); continuing");
                     std::thread::sleep(std::time::Duration::from_millis(50));
                 }
             }
@@ -162,7 +172,10 @@ pub const IDLE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(360
 
 /// Serve one client connection: read request frames, evaluate, reply —
 /// until clean EOF (or a connection error, which just ends the
-/// connection; the dispatcher side handles it as a fallback).
+/// connection; the dispatcher side handles it as a fallback). A stats
+/// request (tag `22`) short-circuits to a snapshot of the worker's
+/// process-global [`crate::telemetry::MetricsHub`] — the server side of
+/// `opinn stat <addr>`.
 pub fn serve_connection(mut stream: TcpStream) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
@@ -174,7 +187,11 @@ pub fn serve_connection(mut stream: TcpStream) {
             // the dispatcher side handles the re-dispatch either way
             Ok(None) | Err(_) => return,
         };
-        let reply = handle_request(&payload, &mut cache);
+        let reply = if wire::is_stats_request(&payload) {
+            wire::encode_stats_reply(&global_hub().prometheus_text())
+        } else {
+            handle_request(&payload, &mut cache)
+        };
         if wire::write_frame(&mut stream, &reply).is_err() {
             return;
         }
@@ -268,6 +285,27 @@ mod tests {
         assert_eq!(cache.points.len(), POINT_CACHE_CAP);
         assert!(cache.points_for(digest_of(0)).is_none(), "oldest entry evicted");
         assert!(cache.points_for(digest_of(POINT_CACHE_CAP)).is_some(), "newest entry kept");
+    }
+
+    #[test]
+    fn requests_count_into_the_global_hub() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let spec = eng.replica_spec().unwrap();
+        let params = eng.model.init_flat(0);
+        let mut rng = Rng::new(3);
+        let pts = eng.pde().sample_points(&mut rng);
+        let mut probes = ProbeBatch::new(params.len());
+        probes.push(&params);
+        probes.push(&params);
+        // other tests share the process-global hub, so assert deltas
+        // with >= rather than exact equality
+        let hub = global_hub();
+        let (req0, rows0) = (hub.counter("worker.requests"), hub.counter("worker.rows"));
+        let mut cache = EngineCache::new();
+        let req = wire::encode_eval_request(&spec, probes.rows(0..2), &pts);
+        let _ = handle_request(&req, &mut cache);
+        assert!(hub.counter("worker.requests") >= req0 + 1);
+        assert!(hub.counter("worker.rows") >= rows0 + 2);
     }
 
     #[test]

@@ -1,0 +1,225 @@
+//! [`MetricsHub`]: the unified metrics registry behind hierarchical
+//! dotted names.
+//!
+//! One hub replaces the scattered per-subsystem stores: the sharded
+//! engine's per-replica counters (`shard.<i>.rows`), the fleet's
+//! per-member counters (`fleet.<addr>.rows`), wire traffic
+//! (`wire.tx_bytes`/`wire.rx_bytes`) and the session's step metrics
+//! (`session.step.secs`) all land in the same namespace. Snapshots come
+//! out as Prometheus-style text exposition or a one-line summary; the
+//! histogram type is the mergeable log2x8 scheme from
+//! [`crate::benchsuite::metrics`], so a hub snapshot merges with bench
+//! records.
+//!
+//! Each hub is internally synchronized; clone the [`std::sync::Arc`]
+//! that owns it to share across threads. Training components keep
+//! per-instance hubs (test isolation); long-lived daemons — the shard
+//! worker and the fleet registry — record into the process-global
+//! [`global_hub`] they serve over the wire for `opinn stat`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::benchsuite::metrics::LatencyHistogram;
+
+/// A registry of named counters, gauges and latency histograms.
+///
+/// Names are hierarchical dotted paths (`session.step.secs`,
+/// `shard.0.rows`). All methods take `&self`; the maps are mutex-guarded
+/// per kind, and every operation holds one lock briefly.
+#[derive(Debug, Default)]
+pub struct MetricsHub {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    hists: Mutex<BTreeMap<String, LatencyHistogram>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl MetricsHub {
+    /// An empty hub.
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    /// Add `by` to the counter `name` (created at zero).
+    pub fn inc(&self, name: &str, by: u64) {
+        *lock(&self.counters).entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Current value of counter `name` (zero if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        lock(&self.counters).get(name).copied().unwrap_or(0)
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        lock(&self.gauges).insert(name.to_string(), v);
+    }
+
+    /// Add `v` to gauge `name` (created at zero) — accumulated seconds,
+    /// mostly.
+    pub fn add_gauge(&self, name: &str, v: f64) {
+        *lock(&self.gauges).entry(name.to_string()).or_insert(0.0) += v;
+    }
+
+    /// Current value of gauge `name`, if ever set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        lock(&self.gauges).get(name).copied()
+    }
+
+    /// Fold one duration sample (seconds) into histogram `name`.
+    pub fn observe(&self, name: &str, secs: f64) {
+        lock(&self.hists).entry(name.to_string()).or_default().push(secs);
+    }
+
+    /// A snapshot of histogram `name`, if any samples landed.
+    pub fn hist(&self, name: &str) -> Option<LatencyHistogram> {
+        lock(&self.hists).get(name).cloned()
+    }
+
+    /// Prometheus-style text exposition of every metric.
+    ///
+    /// Dots (and any other non-identifier character) in names become
+    /// underscores; counters and gauges are one `name value` line each,
+    /// histograms expose `name_count`, `name_underflow` and one
+    /// `name_bucket{idx="<i>"}` line per occupied log2x8 bucket.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in lock(&self.counters).iter() {
+            let n = sanitize(name);
+            let _ = writeln!(out, "# TYPE {n} counter");
+            let _ = writeln!(out, "{n} {v}");
+        }
+        for (name, v) in lock(&self.gauges).iter() {
+            let n = sanitize(name);
+            let _ = writeln!(out, "# TYPE {n} gauge");
+            let _ = writeln!(out, "{n} {v}");
+        }
+        for (name, h) in lock(&self.hists).iter() {
+            let n = sanitize(name);
+            let _ = writeln!(out, "# TYPE {n} histogram");
+            let _ = writeln!(out, "{n}_count {}", h.count());
+            let _ = writeln!(out, "{n}_underflow {}", h.underflow());
+            for (idx, c) in h.buckets() {
+                let _ = writeln!(out, "{n}_bucket{{idx=\"{idx}\"}} {c}");
+            }
+        }
+        out
+    }
+
+    /// A compact one-line summary: `k=v` pairs for counters and gauges,
+    /// `name(n=count)` for histograms. Empty hub -> `"(no metrics)"`.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for (name, v) in lock(&self.counters).iter() {
+            parts.push(format!("{name}={v}"));
+        }
+        for (name, v) in lock(&self.gauges).iter() {
+            parts.push(format!("{name}={v:.3}"));
+        }
+        for (name, h) in lock(&self.hists).iter() {
+            parts.push(format!("{name}(n={})", h.count()));
+        }
+        if parts.is_empty() {
+            "(no metrics)".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+
+    /// Drop every metric (tests and long-lived daemons that re-baseline).
+    pub fn clear(&self) {
+        lock(&self.counters).clear();
+        lock(&self.gauges).clear();
+        lock(&self.hists).clear();
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect()
+}
+
+/// The process-global hub long-lived daemons (shard worker, fleet
+/// registry) record into and serve over the wire for `opinn stat`.
+pub fn global_hub() -> Arc<MetricsHub> {
+    static GLOBAL: OnceLock<Arc<MetricsHub>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(MetricsHub::new())).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let hub = MetricsHub::new();
+        assert_eq!(hub.counter("wire.tx_bytes"), 0);
+        hub.inc("wire.tx_bytes", 100);
+        hub.inc("wire.tx_bytes", 28);
+        assert_eq!(hub.counter("wire.tx_bytes"), 128);
+        assert_eq!(hub.gauge("shard.0.secs"), None);
+        hub.add_gauge("shard.0.secs", 0.25);
+        hub.add_gauge("shard.0.secs", 0.25);
+        assert_eq!(hub.gauge("shard.0.secs"), Some(0.5));
+        hub.set_gauge("shard.0.secs", 1.0);
+        assert_eq!(hub.gauge("shard.0.secs"), Some(1.0));
+    }
+
+    #[test]
+    fn histograms_accumulate() {
+        let hub = MetricsHub::new();
+        assert!(hub.hist("session.step.secs").is_none());
+        hub.observe("session.step.secs", 0.010);
+        hub.observe("session.step.secs", 0.020);
+        let h = hub.hist("session.step.secs").unwrap();
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let hub = MetricsHub::new();
+        hub.inc("wire.tx_bytes", 42);
+        hub.set_gauge("fleet.members", 3.0);
+        hub.observe("session.step.secs", 0.010);
+        let text = hub.prometheus_text();
+        assert!(text.contains("# TYPE wire_tx_bytes counter"), "{text}");
+        assert!(text.contains("wire_tx_bytes 42"), "{text}");
+        assert!(text.contains("# TYPE fleet_members gauge"), "{text}");
+        assert!(text.contains("fleet_members 3"), "{text}");
+        assert!(text.contains("session_step_secs_count 1"), "{text}");
+        // member addresses sanitize into identifier-safe names
+        hub.inc("fleet.127.0.0.1:9000.rows", 1);
+        assert!(hub.prometheus_text().contains("fleet_127_0_0_1_9000_rows 1"));
+    }
+
+    #[test]
+    fn summary_is_one_line() {
+        let hub = MetricsHub::new();
+        assert_eq!(hub.summary(), "(no metrics)");
+        hub.inc("session.steps", 4);
+        hub.observe("session.step.secs", 0.010);
+        let s = hub.summary();
+        assert!(!s.contains('\n'));
+        assert!(s.contains("session.steps=4"), "{s}");
+        assert!(s.contains("session.step.secs(n=1)"), "{s}");
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let hub = MetricsHub::new();
+        hub.inc("a", 1);
+        hub.set_gauge("b", 2.0);
+        hub.observe("c", 0.5);
+        hub.clear();
+        assert_eq!(hub.counter("a"), 0);
+        assert_eq!(hub.gauge("b"), None);
+        assert!(hub.hist("c").is_none());
+        assert_eq!(hub.summary(), "(no metrics)");
+    }
+}

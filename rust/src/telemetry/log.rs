@@ -1,0 +1,172 @@
+//! Leveled, rate-limited stderr logging: the [`crate::log!`] macro.
+//!
+//! Levels follow `OPINN_LOG=error|warn|info|debug` (default `info`,
+//! read once per process). Each call site embeds its own [`RateSite`]:
+//! at most one message per [`RATE_LIMIT_MS`] escapes per site, and the
+//! next message that does escape reports how many were suppressed — a
+//! flapping worker warns once a second, not once per retry.
+//!
+//! The announcement lines child-process orchestration scrapes
+//! (`listening on ADDR`) stay raw `eprintln!`s on purpose: they are
+//! protocol, not logging, and must survive `OPINN_LOG=error`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::process_epoch;
+
+/// Log severity, most severe first.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    /// Unrecoverable or data-affecting problems.
+    Error,
+    /// Degraded but self-healing conditions (fallbacks, retries).
+    Warn,
+    /// Life-cycle events worth one line.
+    Info,
+    /// High-volume diagnostics.
+    Debug,
+}
+
+impl Level {
+    /// The lowercase tag printed in brackets before each message.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// The maximum level that prints, from `OPINN_LOG` (read once; unknown
+/// values and unset default to [`Level::Info`]).
+pub fn max_level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("OPINN_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    })
+}
+
+/// Whether messages at `level` currently print.
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Minimum milliseconds between emissions from one call site.
+pub const RATE_LIMIT_MS: u64 = 1000;
+
+/// Per-call-site rate-limiter state. The [`crate::log!`] macro embeds
+/// one as a `static` at each expansion site.
+pub struct RateSite {
+    last_ms: AtomicU64,
+    suppressed: AtomicU64,
+}
+
+impl RateSite {
+    /// A site that has never emitted (its first message always passes).
+    pub const fn new() -> RateSite {
+        RateSite { last_ms: AtomicU64::new(u64::MAX), suppressed: AtomicU64::new(0) }
+    }
+}
+
+impl Default for RateSite {
+    fn default() -> RateSite {
+        RateSite::new()
+    }
+}
+
+/// Claim the right to emit from `site`: `Some(n)` means print (with `n`
+/// messages suppressed since the last one), `None` means stay quiet.
+pub fn gate(site: &RateSite) -> Option<u64> {
+    let now = process_epoch().elapsed().as_millis() as u64;
+    let last = site.last_ms.load(Ordering::Relaxed);
+    if last != u64::MAX && now.saturating_sub(last) < RATE_LIMIT_MS {
+        site.suppressed.fetch_add(1, Ordering::Relaxed);
+        return None;
+    }
+    // one thread wins the slot; racers count as suppressed
+    if site
+        .last_ms
+        .compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed)
+        .is_ok()
+    {
+        Some(site.suppressed.swap(0, Ordering::Relaxed))
+    } else {
+        site.suppressed.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+}
+
+/// Print one formatted message (the [`crate::log!`] macro's sink).
+pub fn emit(level: Level, msg: std::fmt::Arguments<'_>, suppressed: u64) {
+    if suppressed > 0 {
+        eprintln!("[{}] {msg} ({suppressed} similar suppressed)", level.tag());
+    } else {
+        eprintln!("[{}] {msg}", level.tag());
+    }
+}
+
+/// Leveled, rate-limited logging to stderr.
+///
+/// `log!(Level::Warn, "shard[{i}]: {what}")` prints
+/// `[warn] shard[0]: ...` when `OPINN_LOG` admits warnings, at most
+/// once per second per call site; the formatting arguments are not even
+/// evaluated when the level is filtered out.
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)*) => {{
+        let lvl: $crate::telemetry::Level = $lvl;
+        if $crate::telemetry::log::enabled(lvl) {
+            static SITE: $crate::telemetry::log::RateSite =
+                $crate::telemetry::log::RateSite::new();
+            if let Some(n) = $crate::telemetry::log::gate(&SITE) {
+                $crate::telemetry::log::emit(lvl, format_args!($($arg)*), n);
+            }
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert_eq!(Level::Warn.tag(), "warn");
+    }
+
+    #[test]
+    fn default_level_admits_warnings_but_not_debug() {
+        // OPINN_LOG is unset in the test environment
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug) || max_level() == Level::Debug);
+    }
+
+    #[test]
+    fn first_emission_always_passes_then_the_gate_closes() {
+        let site = RateSite::new();
+        assert_eq!(gate(&site), Some(0));
+        // immediately after, the window is closed and calls are counted
+        assert_eq!(gate(&site), None);
+        assert_eq!(gate(&site), None);
+        assert_eq!(site.suppressed.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn macro_expands_at_every_level() {
+        // smoke: expansion compiles for literal and formatted arms
+        crate::log!(Level::Debug, "plain");
+        for i in 0..3 {
+            crate::log!(Level::Debug, "formatted {} of {}", i, 3);
+        }
+    }
+}

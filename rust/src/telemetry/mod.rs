@@ -1,0 +1,70 @@
+//! Zero-dependency observability: span tracing, a unified metrics
+//! registry, and leveled rate-limited logging.
+//!
+//! Everything here is **strictly passive**: telemetry never consumes a
+//! training RNG, never reorders dispatch, and never gates behavior, so a
+//! session with tracing and metrics enabled is bitwise-identical to the
+//! same session with telemetry disabled (pinned in
+//! `rust/tests/telemetry.rs`). Overhead with the recorder disabled is a
+//! relaxed atomic load per span site.
+//!
+//! The pieces:
+//!
+//! - [`recorder`] — a lock-light [`Recorder`] of span-style trace events
+//!   (begin/end + instant, thread-tagged, monotonic microsecond
+//!   timestamps) in a bounded ring buffer, emitted on demand as Chrome
+//!   trace-event JSON loadable in Perfetto (`opinn train ...
+//!   --trace-out trace.json`);
+//! - [`hub`] — the unified [`MetricsHub`]: counters, gauges and the
+//!   mergeable log2x8 histograms from [`crate::benchsuite::metrics`]
+//!   behind hierarchical dotted names (`session.step.secs`,
+//!   `shard.0.rows`, `fleet.<addr>.fallbacks`, `wire.tx_bytes`),
+//!   snapshot-able as Prometheus-style text exposition
+//!   ([`MetricsHub::prometheus_text`]) or a one-line summary. Workers
+//!   and the registry serve their process-global hub ([`global_hub`])
+//!   over the shard wire protocol (`opinn stat <addr>`);
+//! - [`log`] — the leveled, per-call-site rate-limited [`crate::log!`]
+//!   macro behind `OPINN_LOG=error|warn|info|debug`, so a flapping
+//!   worker cannot flood stderr;
+//! - [`observer`] — [`TelemetryObserver`], the session-side sink that
+//!   folds per-step latency into the hub.
+//!
+//! ```
+//! use optical_pinn::telemetry::{MetricsHub, Recorder};
+//!
+//! let hub = MetricsHub::new();
+//! hub.inc("wire.tx_bytes", 128);
+//! hub.observe("session.step.secs", 0.012);
+//! assert_eq!(hub.counter("wire.tx_bytes"), 128);
+//! assert!(hub.prometheus_text().contains("wire_tx_bytes 128"));
+//!
+//! let rec = Recorder::new();
+//! rec.set_enabled(true);
+//! {
+//!     let _span = rec.span(|| "step.commit".into());
+//! }
+//! let trace = rec.chrome_trace_json();
+//! assert!(trace.contains("\"step.commit\""));
+//! ```
+
+#![deny(missing_docs)]
+
+pub mod hub;
+pub mod log;
+pub mod observer;
+pub mod recorder;
+
+pub use hub::{global_hub, MetricsHub};
+pub use log::{Level, RateSite};
+pub use observer::TelemetryObserver;
+pub use recorder::{recorder, Recorder, Span};
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The process time origin every telemetry timestamp is measured from.
+/// Fixed at first use so trace timestamps and rate-limiter clocks agree.
+pub(crate) fn process_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}

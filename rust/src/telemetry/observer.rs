@@ -1,0 +1,96 @@
+//! [`TelemetryObserver`]: the session-side metrics sink.
+//!
+//! An ordinary [`Observer`] that folds per-step wall-clock latency into
+//! a [`MetricsHub`] histogram (`session.step.secs`) and counts steps
+//! (`session.steps`). Place it *first* in a
+//! [`crate::session::MultiObserver`] so each sample closes before the
+//! same step's eval/checkpoint observers run — like the bench harness's
+//! [`crate::benchsuite::StepTimer`], step latency then measures the
+//! training path, not the eval schedule.
+//!
+//! The observer reads clocks and writes metrics only — it never touches
+//! the training RNG or the parameter vector, so attaching it cannot
+//! perturb a trajectory.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::session::{Observer, StepCtx};
+use crate::zo::trainer::History;
+use crate::Result;
+
+use super::hub::MetricsHub;
+
+/// Folds per-step latency and step counts into a [`MetricsHub`].
+pub struct TelemetryObserver {
+    hub: Arc<MetricsHub>,
+    last: Instant,
+    summary: bool,
+}
+
+impl TelemetryObserver {
+    /// An observer recording into `hub`. The interval clock starts at
+    /// construction, so build it immediately before
+    /// [`crate::session::Session::run`].
+    pub fn new(hub: Arc<MetricsHub>) -> TelemetryObserver {
+        TelemetryObserver { hub, last: Instant::now(), summary: false }
+    }
+
+    /// Also print the hub's one-line summary to stderr at the final
+    /// (or budget-terminated) step.
+    pub fn with_summary(mut self) -> TelemetryObserver {
+        self.summary = true;
+        self
+    }
+}
+
+impl Observer for TelemetryObserver {
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, _hist: &mut History) -> Result<()> {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.hub.inc("session.steps", 1);
+        self.hub.observe("session.step.secs", dt);
+        if self.summary && (ctx.info.last || ctx.info.budget_hit) {
+            eprintln!("telemetry: {}", self.hub.summary());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Engine, NativeEngine};
+    use crate::session::{IdentitySpace, SessionWorkspace, StepInfo};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn steps_and_latency_land_in_the_hub() {
+        let mut eng = NativeEngine::new("bs", "tt").unwrap();
+        let params = eng.model.init_flat(0);
+        let d = params.len();
+        let mut space = IdentitySpace::new(d);
+        let mut ws = SessionWorkspace::new(d, d);
+        let mut rng = Rng::new(0);
+        let pts = eng.pde().sample_points(&mut rng);
+        let hub = Arc::new(MetricsHub::new());
+        let mut obs = TelemetryObserver::new(Arc::clone(&hub));
+        let mut hist = History::default();
+        for epoch in 0..2 {
+            let info =
+                StepInfo { epoch, epochs: 2, last: epoch == 1, budget_hit: false, forwards: 0 };
+            let mut ctx = StepCtx {
+                engine: &mut eng,
+                space: &mut space,
+                params: &params,
+                pts: &pts,
+                ws: &mut ws,
+                info,
+            };
+            obs.after_step(&mut ctx, &mut hist).unwrap();
+        }
+        assert_eq!(hub.counter("session.steps"), 2);
+        assert_eq!(hub.hist("session.step.secs").unwrap().count(), 2);
+    }
+}

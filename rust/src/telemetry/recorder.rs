@@ -1,0 +1,349 @@
+//! [`Recorder`]: a lock-light ring buffer of span-style trace events,
+//! emitted on demand as Chrome trace-event JSON.
+//!
+//! Call sites open spans with [`Recorder::span`] (begin/end pair closed
+//! by a scope guard) or drop point markers with [`Recorder::instant`].
+//! Every event carries a small per-thread tag and a monotonic
+//! microsecond timestamp measured from the process epoch. The buffer is
+//! bounded ([`TRACE_CAPACITY`]): when full, the oldest events are
+//! dropped and counted, and serialization skips any begin/end half
+//! whose partner was evicted, so the emitted trace always has balanced
+//! begin/end pairs.
+//!
+//! Disabled (the default), a span site costs one relaxed atomic load —
+//! the name closure is never invoked and nothing allocates.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::json::Json;
+use crate::Result;
+
+use super::process_epoch;
+
+/// Maximum buffered events; beyond this the oldest are dropped.
+pub const TRACE_CAPACITY: usize = 1 << 16;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Phase {
+    Begin,
+    End,
+    Mark,
+}
+
+#[derive(Debug)]
+struct Event {
+    name: String,
+    ph: Phase,
+    tid: u64,
+    ts_us: u64,
+}
+
+#[derive(Default)]
+struct Ring {
+    events: VecDeque<Event>,
+    dropped: u64,
+}
+
+/// A bounded, thread-safe trace-event recorder.
+///
+/// One process-global instance lives behind [`recorder`]; independent
+/// instances are ordinary values (tests use them for isolation).
+#[derive(Default)]
+pub struct Recorder {
+    enabled: AtomicBool,
+    ring: Mutex<Ring>,
+}
+
+/// A scope guard returned by [`Recorder::span`]; dropping it emits the
+/// matching end event. Inert when the recorder was disabled at open.
+#[must_use = "a span closes when dropped; binding it to _ closes it immediately"]
+pub struct Span<'a> {
+    live: Option<(&'a Recorder, String)>,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some((rec, name)) = self.live.take() {
+            rec.push(name, Phase::End);
+        }
+    }
+}
+
+/// Small dense per-thread tags (1, 2, ...) in first-use order — Chrome
+/// trace `tid`s, stable for the life of each thread.
+fn thread_tag() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static TAG: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    TAG.with(|t| *t)
+}
+
+impl Recorder {
+    /// A new recorder, disabled and empty.
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Whether events are currently being captured.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn capture on or off. Buffered events are kept either way.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Discard every buffered event and the dropped-event count.
+    pub fn clear(&self) {
+        let mut ring = self.lock();
+        ring.events.clear();
+        ring.dropped = 0;
+    }
+
+    /// Buffered events right now.
+    pub fn len(&self) -> usize {
+        self.lock().events.len()
+    }
+
+    /// Whether the buffer holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted so far because the buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.lock().dropped
+    }
+
+    /// Open a span named by `name` (invoked only when enabled); the
+    /// returned guard emits the end event when dropped.
+    pub fn span<F: FnOnce() -> String>(&self, name: F) -> Span<'_> {
+        if !self.enabled() {
+            return Span { live: None };
+        }
+        let name = name();
+        self.push(name.clone(), Phase::Begin);
+        Span { live: Some((self, name)) }
+    }
+
+    /// Record a point-in-time marker (Chrome "instant" event).
+    pub fn instant<F: FnOnce() -> String>(&self, name: F) {
+        if self.enabled() {
+            self.push(name(), Phase::Mark);
+        }
+    }
+
+    fn push(&self, name: String, ph: Phase) {
+        let ts_us = process_epoch().elapsed().as_micros() as u64;
+        let tid = thread_tag();
+        let mut ring = self.lock();
+        if ring.events.len() >= TRACE_CAPACITY {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(Event { name, ph, tid, ts_us });
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ring> {
+        self.ring.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Serialize the buffer as Chrome trace-event JSON
+    /// (`{"traceEvents": [...]}`), loadable in Perfetto / `chrome://tracing`.
+    ///
+    /// Begin/end halves whose partner was evicted from the ring (or
+    /// whose span is still open) are skipped, so the output always
+    /// carries balanced `"B"`/`"E"` pairs per thread and name.
+    pub fn chrome_trace_json(&self) -> String {
+        let ring = self.lock();
+        // pair up begin/end per (tid, name); guards nest per thread, so
+        // a stack per key reproduces the nesting
+        let mut open: HashMap<(u64, &str), Vec<usize>> = HashMap::new();
+        let mut keep = vec![false; ring.events.len()];
+        for (i, e) in ring.events.iter().enumerate() {
+            match e.ph {
+                Phase::Mark => keep[i] = true,
+                Phase::Begin => open.entry((e.tid, e.name.as_str())).or_default().push(i),
+                Phase::End => {
+                    if let Some(b) = open.get_mut(&(e.tid, e.name.as_str())).and_then(|v| v.pop())
+                    {
+                        keep[b] = true;
+                        keep[i] = true;
+                    }
+                }
+            }
+        }
+        let events: Vec<Json> = ring
+            .events
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| keep[*i])
+            .map(|(_, e)| {
+                let ph = match e.ph {
+                    Phase::Begin => "B",
+                    Phase::End => "E",
+                    Phase::Mark => "i",
+                };
+                let mut pairs = vec![
+                    ("name", Json::str(e.name.clone())),
+                    ("ph", Json::str(ph)),
+                    ("pid", Json::Num(1.0)),
+                    ("tid", Json::Num(e.tid as f64)),
+                    ("ts", Json::Num(e.ts_us as f64)),
+                ];
+                if e.ph == Phase::Mark {
+                    pairs.push(("s", Json::str("t")));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("droppedEvents", Json::Num(ring.dropped as f64)),
+        ])
+        .to_string()
+    }
+
+    /// Write [`Recorder::chrome_trace_json`] to `path`.
+    pub fn write_chrome_trace(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.chrome_trace_json())?;
+        Ok(())
+    }
+}
+
+/// The process-global recorder. Disabled until something (the
+/// `--trace-out` CLI flag, a test) enables it; instrumented code paths
+/// all record here.
+pub fn recorder() -> &'static Recorder {
+    static RECORDER: OnceLock<Recorder> = OnceLock::new();
+    RECORDER.get_or_init(Recorder::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names_of(trace: &str, ph: &str) -> Vec<String> {
+        let j = Json::parse(trace).unwrap();
+        j.req("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.req("ph").unwrap().as_str().unwrap() == ph)
+            .map(|e| e.req("name").unwrap().as_str().unwrap().to_string())
+            .collect()
+    }
+
+    #[test]
+    fn disabled_recorder_captures_nothing() {
+        let rec = Recorder::new();
+        {
+            let _s = rec.span(|| unreachable!("name closure must not run when disabled"));
+        }
+        rec.instant(|| unreachable!());
+        assert!(rec.is_empty());
+    }
+
+    #[test]
+    fn spans_emit_balanced_pairs_with_monotonic_timestamps() {
+        let rec = Recorder::new();
+        rec.set_enabled(true);
+        {
+            let _outer = rec.span(|| "step".into());
+            let _inner = rec.span(|| "step.eval".into());
+        }
+        rec.instant(|| "mark".into());
+        assert_eq!(rec.len(), 5);
+        let trace = rec.chrome_trace_json();
+        let begins = names_of(&trace, "B");
+        let ends = names_of(&trace, "E");
+        assert_eq!(begins, vec!["step", "step.eval"]);
+        // guards drop inner-first
+        assert_eq!(ends, vec!["step.eval", "step"]);
+        assert_eq!(names_of(&trace, "i"), vec!["mark"]);
+        let j = Json::parse(&trace).unwrap();
+        let ts: Vec<f64> = j
+            .req("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.req("ts").unwrap().as_f64().unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "{ts:?}");
+    }
+
+    #[test]
+    fn open_spans_are_skipped_at_serialization() {
+        let rec = Recorder::new();
+        rec.set_enabled(true);
+        let held = rec.span(|| "still-open".into());
+        {
+            let _s = rec.span(|| "closed".into());
+        }
+        let trace = rec.chrome_trace_json();
+        assert_eq!(names_of(&trace, "B"), vec!["closed"]);
+        assert_eq!(names_of(&trace, "E"), vec!["closed"]);
+        drop(held);
+        let trace = rec.chrome_trace_json();
+        assert_eq!(names_of(&trace, "B").len(), 2);
+        assert_eq!(names_of(&trace, "E").len(), 2);
+    }
+
+    #[test]
+    fn ring_eviction_is_bounded_and_counted() {
+        let rec = Recorder::new();
+        rec.set_enabled(true);
+        for i in 0..(TRACE_CAPACITY + 10) {
+            rec.instant(|| format!("m{i}"));
+        }
+        assert_eq!(rec.len(), TRACE_CAPACITY);
+        assert_eq!(rec.dropped(), 10);
+        rec.clear();
+        assert!(rec.is_empty());
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn orphan_end_after_eviction_is_dropped_from_the_trace() {
+        let rec = Recorder::new();
+        rec.set_enabled(true);
+        let s = rec.span(|| "victim".into());
+        // overflow the ring so the Begin half is evicted
+        for i in 0..TRACE_CAPACITY {
+            rec.instant(|| format!("m{i}"));
+        }
+        drop(s); // End lands in the buffer with no Begin
+        let trace = rec.chrome_trace_json();
+        assert!(names_of(&trace, "B").is_empty());
+        assert!(names_of(&trace, "E").is_empty());
+    }
+
+    #[test]
+    fn threads_get_distinct_tids() {
+        let rec = Recorder::new();
+        rec.set_enabled(true);
+        rec.instant(|| "main".into());
+        std::thread::scope(|s| {
+            s.spawn(|| rec.instant(|| "worker".into()));
+        });
+        let j = Json::parse(&rec.chrome_trace_json()).unwrap();
+        let tids: Vec<f64> = j
+            .req("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.req("tid").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(tids.len(), 2);
+        assert_ne!(tids[0], tids[1]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Acceptance contract of the telemetry layer (ISSUE 9): tracing and
+//! metrics are strictly passive — a weight-RGE session with the global
+//! span recorder and a metrics hub attached must be **bitwise**
+//! identical to the same session with telemetry disabled — and the
+//! Chrome trace of a sharded run must carry balanced begin/end spans
+//! for every step phase on every shard.
+//!
+//! The span recorder is process-global, so every test that enables or
+//! reads it serializes on [`RECORDER_GATE`].
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use optical_pinn::engine::{Engine, NativeEngine};
+use optical_pinn::session::SessionBuilder;
+use optical_pinn::telemetry::{recorder, MetricsHub};
+use optical_pinn::util::json::Json;
+use optical_pinn::zo::rge::RgeConfig;
+use optical_pinn::zo::{History, TrainMethod};
+
+/// Serializes access to the process-global recorder across tests.
+static RECORDER_GATE: Mutex<()> = Mutex::new(());
+
+/// One weight-RGE session on the native `bs`/`tt` problem; `n_queries`
+/// is 4 so a 2-shard dispatch gives every shard a non-empty row range.
+fn run_weight_rge(
+    epochs: usize,
+    shards: usize,
+    hub: Option<Arc<MetricsHub>>,
+) -> (Vec<f64>, History) {
+    let mut eng = NativeEngine::new("bs", "tt").unwrap();
+    eng.set_probe_threads(2);
+    let layout = eng.model.param_layout();
+    let mut params = eng.model.init_flat(0);
+    let rge = RgeConfig { n_queries: 4, ..Default::default() };
+    let mut builder = SessionBuilder::new(epochs)
+        .eval_every(2)
+        .shards(shards)
+        .method(TrainMethod::ZoRge(rge), layout);
+    if let Some(hub) = hub {
+        builder = builder.telemetry(hub);
+    }
+    let hist = builder.build(&mut eng).unwrap().run(&mut params).unwrap();
+    (params, hist)
+}
+
+#[test]
+fn traced_session_is_bitwise_identical_to_untraced() {
+    let _gate = RECORDER_GATE.lock().unwrap_or_else(|p| p.into_inner());
+    let rec = recorder();
+    rec.set_enabled(false);
+    rec.clear();
+    let (p_base, h_base) = run_weight_rge(8, 0, None);
+
+    rec.set_enabled(true);
+    let hub = Arc::new(MetricsHub::new());
+    let (p, h) = run_weight_rge(8, 0, Some(Arc::clone(&hub)));
+    rec.set_enabled(false);
+
+    assert_eq!(p_base, p, "telemetry must not perturb the trajectory");
+    assert_eq!(h_base.steps, h.steps, "eval steps diverged");
+    assert_eq!(h_base.losses, h.losses, "loss curve diverged");
+    assert_eq!(h_base.errors, h.errors, "error curve diverged");
+    assert_eq!(h_base.total_forwards, h.total_forwards, "forward accounting diverged");
+
+    // ... while the hub saw every step
+    assert_eq!(hub.counter("session.steps"), 8);
+    assert_eq!(hub.hist("session.step.secs").unwrap().count(), 8);
+}
+
+#[test]
+fn sharded_trace_covers_every_phase_on_every_shard() {
+    let _gate = RECORDER_GATE.lock().unwrap_or_else(|p| p.into_inner());
+    let rec = recorder();
+    rec.clear();
+    rec.set_enabled(true);
+    let hub = Arc::new(MetricsHub::new());
+    let (_, hist) = run_weight_rge(4, 2, Some(Arc::clone(&hub)));
+    rec.set_enabled(false);
+
+    let trace = rec.chrome_trace_json();
+    let j = Json::parse(&trace).unwrap();
+    let events = j.req("traceEvents").unwrap().as_arr().unwrap();
+
+    // every begin is closed by an end on the same thread, in order
+    let mut open: HashMap<(u64, String), i64> = HashMap::new();
+    let mut names: HashSet<String> = HashSet::new();
+    for e in events {
+        let name = e.req("name").unwrap().as_str().unwrap().to_string();
+        let tid = e.req("tid").unwrap().as_f64().unwrap() as u64;
+        names.insert(name.clone());
+        match e.req("ph").unwrap().as_str().unwrap() {
+            "B" => *open.entry((tid, name)).or_insert(0) += 1,
+            "E" => {
+                let depth = open.entry((tid, name.clone())).or_insert(0);
+                *depth -= 1;
+                assert!(*depth >= 0, "end before begin for {name}");
+            }
+            "i" => {}
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    for ((tid, name), depth) in &open {
+        assert_eq!(*depth, 0, "unbalanced span {name} on thread {tid}");
+    }
+
+    // every step phase, the dispatch/assemble envelope, and a per-shard
+    // eval span for both shards
+    for want in [
+        "step.resample",
+        "step.grad",
+        "step.plan",
+        "step.eval",
+        "step.assemble",
+        "step.commit",
+        "step.observe",
+        "shard.dispatch",
+        "shard.0.eval",
+        "shard.1.eval",
+        "shard.assemble",
+    ] {
+        assert!(names.contains(want), "trace is missing span {want:?}; have {names:?}");
+    }
+
+    // the shared hub carries both the session- and shard-level metrics
+    assert_eq!(hub.counter("session.steps"), 4);
+    assert!(hub.counter("shard.0.rows") > 0, "shard 0 evaluated no rows");
+    assert!(hub.counter("shard.1.rows") > 0, "shard 1 evaluated no rows");
+    assert_eq!(hub.counter("shard.0.fallbacks"), 0);
+    assert_eq!(hub.counter("shard.1.fallbacks"), 0);
+    // the History's wire accounting is a view of the same hub counters
+    assert_eq!(hub.counter("wire.tx_bytes"), hist.wire_tx_bytes);
+    assert_eq!(hub.counter("wire.rx_bytes"), hist.wire_rx_bytes);
+    let text = hub.prometheus_text();
+    assert!(text.contains("session_steps 4"), "{text}");
+    assert!(text.contains("shard_0_rows"), "{text}");
+}
