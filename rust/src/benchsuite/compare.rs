@@ -51,11 +51,18 @@ const WATCHED: &[(&str, Direction)] = &[
     ("peak_rss_bytes", Direction::LowerIsBetter),
 ];
 
-/// Fetch a top-level or one-dot-deep numeric field.
+/// Fetch a top-level or one-dot-deep numeric field. `null` — the JSON
+/// encoding of NaN, e.g. the step percentiles of a record built from a
+/// metric stream with no per-step samples (the `serve` scenario) —
+/// reads as NaN, which the gate then skips.
 fn metric_value(record: &Json, path: &str) -> Result<f64> {
-    match path.split_once('.') {
-        Some((outer, inner)) => record.req(outer)?.req(inner)?.as_f64(),
-        None => record.req(path)?.as_f64(),
+    let v = match path.split_once('.') {
+        Some((outer, inner)) => record.req(outer)?.req(inner)?,
+        None => record.req(path)?,
+    };
+    match v {
+        Json::Null => Ok(f64::NAN),
+        v => v.as_f64(),
     }
 }
 
@@ -161,6 +168,19 @@ mod tests {
         let no_rss = doctor(&base, "peak_rss_bytes", 0.0);
         let deltas = compare(&no_rss, &base, 2.0).unwrap();
         assert!(deltas.iter().all(|d| d.metric != "peak_rss_bytes"));
+    }
+
+    #[test]
+    fn null_step_percentiles_are_skipped_not_fatal() {
+        // a serve-scenario record has no per-step samples: its step_ms
+        // percentiles serialize as null, and the gate must fall back to
+        // throughput + RSS instead of erroring
+        let mut streamed = fixture_report();
+        streamed.cases[0].summary.step_secs.clear();
+        let record = report_to_json(&streamed, false);
+        let deltas = compare(&record, &record, DEFAULT_THRESHOLD).unwrap();
+        assert!(deltas.iter().all(|d| !d.metric.starts_with("step_ms")), "{deltas:?}");
+        assert!(deltas.iter().any(|d| d.metric == "probes_per_sec"));
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //!
 //! - [`registry`] — the fixed-seed scenario catalog ([`SCENARIOS`]):
 //!   `single-engine`, `pipelined`, `precision`, `sharded-tcp`,
-//!   `fleet-churn`;
+//!   `fleet-churn`, `serve`;
 //! - [`proc`] — child spawning, pipe draining, `/proc` sampling;
 //! - [`child`] — the `--bench-json` protocol a train child speaks back;
 //! - [`metrics`] — percentiles, mergeable log-scale histograms,

@@ -77,6 +77,11 @@ pub const SCENARIOS: &[Scenario] = &[
         summary: "elastic fleet: a worker dies and a replacement joins mid-run",
         run: run_fleet_churn,
     },
+    Scenario {
+        name: "serve",
+        summary: "training service: two tenants submit concurrent jobs to one daemon",
+        run: run_serve,
+    },
 ];
 
 /// Look up a scenario by name.
@@ -252,6 +257,65 @@ fn run_fleet_churn(opts: &BenchOpts) -> Result<ScenarioReport> {
     let replacement = churn.join().ok().flatten();
     drop(replacement);
     Ok(ScenarioReport { scenario: "fleet-churn".to_string(), headline: 0, cases: vec![case?] })
+}
+
+fn run_serve(opts: &BenchOpts) -> Result<ScenarioReport> {
+    let epochs = opts.epochs_for(60);
+    // scratch space for the daemon's checkpoints and the job configs
+    let dir = std::env::temp_dir().join(format!("opinn_bench_serve_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    let mut cmd = Command::new(&opts.bin);
+    cmd.args(["serve", "--listen", "127.0.0.1:0", "--max-concurrent", "2"]);
+    cmd.arg("--ckpt-dir").arg(dir.join("ckpt"));
+    let daemon = spawn_service(&mut cmd, "serve")?;
+    // two tenants submit concurrently (distinct specs, fixed seeds);
+    // each `opinn submit --follow --bench-json` child rebuilds a history
+    // from its metric stream and speaks the same summary-line protocol
+    // as a train child, so run_case measures it unchanged
+    let handles: Vec<_> = [("tenant-a-bs", "bs", 3u64), ("tenant-b-poisson", "poisson?d=2", 5u64)]
+        .into_iter()
+        .map(|(name, spec, seed)| -> Result<_> {
+            let config = dir.join(format!("{name}.json"));
+            let cadence = (epochs / 2).max(1);
+            std::fs::write(
+                &config,
+                format!(r#"{{"epochs":{epochs},"eval_every":{cadence},"seed":{seed}}}"#),
+            )?;
+            let argv: Vec<String> = [
+                "submit",
+                daemon.addr.as_str(),
+                spec,
+                "--config",
+                config.to_str().ok_or_else(|| err("bench serve: non-utf8 temp path"))?,
+                "--tenant",
+                name,
+                "--follow",
+                "--bench-json",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+            let opts = opts.clone();
+            let name = name.to_string();
+            Ok(std::thread::spawn(move || run_case(&opts, &name, argv)))
+        })
+        .collect::<Result<_>>()?;
+    let mut cases = Vec::new();
+    for h in handles {
+        cases.push(h.join().map_err(|_| err("bench serve: a submit thread panicked"))??);
+    }
+    // graceful shutdown (wire tag 24) drains the daemon before the
+    // ServiceChild guard would have to SIGKILL it on drop
+    let mut shut = Command::new(&opts.bin);
+    shut.args(["cancel", daemon.addr.as_str(), "--shutdown"]);
+    let m = run_measured(&mut shut, opts.timeout())?;
+    if !m.success {
+        return Err(err("bench serve: graceful shutdown request failed"));
+    }
+    drop(daemon);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(ScenarioReport { scenario: "serve".to_string(), headline: 0, cases })
 }
 
 #[cfg(test)]

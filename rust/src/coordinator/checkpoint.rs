@@ -1,9 +1,17 @@
 //! Parameter/phase checkpointing (JSON; full f64 round-trip).
+//!
+//! Two artifact shapes share one file format. [`save_params`] writes the
+//! legacy params-only record (`name`/`step`/`len`/`params`).
+//! [`save_state`] writes a strict superset — the same four keys plus the
+//! optimizer moments, the training RNG state and the consumed forward
+//! count — so [`load_params`] still reads either shape, while
+//! [`load_state`] can rebuild a [`TrainState`] that resumes a session
+//! bitwise-identically to a run that was never interrupted.
 
 use std::path::Path;
 
 use crate::util::json::Json;
-use crate::{Error, Result};
+use crate::{err, Error, Result};
 
 /// Save a flat vector with metadata.
 pub fn save_params(path: &Path, name: &str, step: usize, params: &[f64]) -> Result<()> {
@@ -36,6 +44,113 @@ pub fn load_params(path: &Path) -> Result<(String, usize, Vec<f64>)> {
     Ok((name, step, params))
 }
 
+/// Everything a training session needs to resume mid-run with a
+/// bitwise-identical trajectory: parameters, Adam moments, the exact
+/// xoshiro256++ RNG state, and the consumed forward-query budget.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainState {
+    /// Model key the checkpoint belongs to (e.g. `bs_tt`).
+    pub name: String,
+    /// Completed optimizer steps — also the index of the next epoch to
+    /// run on resume.
+    pub epoch: usize,
+    /// Flat parameter vector after `epoch` steps.
+    pub params: Vec<f64>,
+    /// Adam first-moment estimate.
+    pub opt_m: Vec<f64>,
+    /// Adam second-moment estimate.
+    pub opt_v: Vec<f64>,
+    /// Adam step counter.
+    pub opt_t: u64,
+    /// Training RNG state as drawn through epoch `epoch - 1` (the four
+    /// xoshiro256++ words).
+    pub rng: [u64; 4],
+    /// Cached Box–Muller spare of the training RNG, if any.
+    pub rng_spare: Option<f64>,
+    /// Training forward queries consumed so far (budget accounting).
+    pub forwards: u64,
+}
+
+/// Hex-encode a 64-bit RNG word. JSON numbers are f64 (53-bit exact
+/// integers), so full-width words travel as strings.
+fn hex_u64(w: u64) -> Json {
+    Json::str(format!("{w:016x}"))
+}
+
+fn parse_hex_u64(j: &Json) -> Result<u64> {
+    let s = j.as_str()?;
+    u64::from_str_radix(s, 16).map_err(|_| Error::Json(format!("bad RNG hex word {s:?}")))
+}
+
+/// Save a full [`TrainState`]. The record is a superset of the
+/// [`save_params`] shape, so legacy readers keep working on it.
+pub fn save_state(path: &Path, state: &TrainState) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let spare = match state.rng_spare {
+        Some(v) => Json::Num(v),
+        None => Json::Null,
+    };
+    let obj = Json::obj(vec![
+        ("name", Json::str(state.name.as_str())),
+        ("step", Json::Num(state.epoch as f64)),
+        ("len", Json::Num(state.params.len() as f64)),
+        ("params", Json::arr_f64(&state.params)),
+        ("opt_m", Json::arr_f64(&state.opt_m)),
+        ("opt_v", Json::arr_f64(&state.opt_v)),
+        ("opt_t", Json::Num(state.opt_t as f64)),
+        ("rng", Json::Arr(state.rng.iter().map(|w| hex_u64(*w)).collect())),
+        ("rng_spare", spare),
+        ("forwards", Json::Num(state.forwards as f64)),
+    ]);
+    std::fs::write(path, obj.to_string())?;
+    Ok(())
+}
+
+/// Load a full [`TrainState`] written by [`save_state`]. A params-only
+/// checkpoint (no optimizer/RNG keys) is a clean error — resuming from
+/// it could not reproduce the uninterrupted trajectory.
+pub fn load_state(path: &Path) -> Result<TrainState> {
+    let j = Json::from_file(path)?;
+    let name = j.req("name")?.as_str()?.to_string();
+    let epoch = j.req("step")?.as_usize()?;
+    let params = j.req("params")?.as_f64_vec()?;
+    let want = j.req("len")?.as_usize()?;
+    if params.len() != want {
+        return Err(Error::Json(format!(
+            "checkpoint corrupt: len field {want} != {} values",
+            params.len()
+        )));
+    }
+    if j.get("opt_m").is_none() {
+        return Err(err(format!(
+            "{path:?} is a params-only checkpoint (no optimizer/RNG state); \
+             cannot resume a training trajectory from it"
+        )));
+    }
+    let opt_m = j.req("opt_m")?.as_f64_vec()?;
+    let opt_v = j.req("opt_v")?.as_f64_vec()?;
+    if opt_m.len() != params.len() || opt_v.len() != params.len() {
+        return Err(Error::Json("checkpoint corrupt: optimizer moment length mismatch".into()));
+    }
+    let opt_t = j.req("opt_t")?.as_f64()? as u64;
+    let words = j.req("rng")?.as_arr()?;
+    if words.len() != 4 {
+        return Err(Error::Json(format!("checkpoint rng must have 4 words, got {}", words.len())));
+    }
+    let mut rng = [0u64; 4];
+    for (slot, word) in rng.iter_mut().zip(words) {
+        *slot = parse_hex_u64(word)?;
+    }
+    let rng_spare = match j.req("rng_spare")? {
+        Json::Null => None,
+        v => Some(v.as_f64()?),
+    };
+    let forwards = j.req("forwards")?.as_f64()? as u64;
+    Ok(TrainState { name, epoch, params, opt_m, opt_v, opt_t, rng, rng_spare, forwards })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,6 +180,58 @@ mod tests {
         let path = dir.join("bad.json");
         std::fs::write(&path, r#"{"name":"x","step":1,"len":5,"params":[1,2]}"#).unwrap();
         assert!(load_params(&path).is_err());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    fn fixture_state() -> TrainState {
+        TrainState {
+            name: "bs_tt".into(),
+            epoch: 17,
+            params: vec![0.25, -1.5e-9, 0.1 + 0.2],
+            opt_m: vec![1e-3, -2e-4, 0.0],
+            opt_v: vec![5e-7, 6e-8, 1e-12],
+            opt_t: 17,
+            rng: [u64::MAX, 0x0123_4567_89ab_cdef, 1, 0],
+            rng_spare: Some(-0.731),
+            forwards: 93_840,
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_every_field_bitwise() {
+        let dir = std::env::temp_dir().join("opinn_ckpt_state");
+        let path = dir.join("s.json");
+        let state = fixture_state();
+        save_state(&path, &state).unwrap();
+        let back = load_state(&path).unwrap();
+        assert_eq!(back, state);
+        // full-width RNG words survive (they exceed 2^53, so a numeric
+        // encoding would have truncated them)
+        assert_eq!(back.rng[0], u64::MAX);
+        // the state file is readable as a legacy params checkpoint too
+        let (name, step, params) = load_params(&path).unwrap();
+        assert_eq!((name.as_str(), step), ("bs_tt", 17));
+        assert_eq!(params, state.params);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn state_with_no_spare_roundtrips() {
+        let dir = std::env::temp_dir().join("opinn_ckpt_state2");
+        let path = dir.join("s.json");
+        let state = TrainState { rng_spare: None, ..fixture_state() };
+        save_state(&path, &state).unwrap();
+        assert_eq!(load_state(&path).unwrap(), state);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn params_only_checkpoint_cannot_resume() {
+        let dir = std::env::temp_dir().join("opinn_ckpt_state3");
+        let path = dir.join("legacy.json");
+        save_params(&path, "bs_tt", 3, &[1.0, 2.0]).unwrap();
+        let e = load_state(&path).unwrap_err().to_string();
+        assert!(e.contains("params-only"), "{e}");
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -12,5 +12,5 @@ pub mod checkpoint;
 pub mod metrics;
 
 pub use batcher::{BatcherConfig, InferenceServer};
-pub use checkpoint::{load_params, save_params};
+pub use checkpoint::{load_params, load_state, save_params, save_state, TrainState};
 pub use metrics::Metrics;

@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 use super::membership::MembershipTable;
 use crate::shard::wire::{self, RegistryReply, RegistryRequest};
 use crate::telemetry::{global_hub, Level};
+use crate::util::shutdown::ShutdownFlag;
 use crate::{log, Result};
 
 /// Heartbeat cadence and miss tolerance shared by workers and the
@@ -52,6 +53,8 @@ impl FleetConfig {
 pub struct Registry {
     listener: TcpListener,
     table: Arc<Mutex<MembershipTable>>,
+    idle_timeout: Duration,
+    shutdown: ShutdownFlag,
 }
 
 impl Registry {
@@ -64,7 +67,17 @@ impl Registry {
         Ok(Registry {
             listener: TcpListener::bind(addr)?,
             table: Arc::new(Mutex::new(MembershipTable::new(config.ttl()))),
+            idle_timeout: crate::shard::worker::IDLE_TIMEOUT,
+            shutdown: ShutdownFlag::new(),
         })
+    }
+
+    /// Override the per-connection idle reap window (default
+    /// [`crate::shard::worker::IDLE_TIMEOUT`]; the `--idle-reap-secs`
+    /// flag of `opinn registry`).
+    pub fn with_idle_timeout(mut self, timeout: Duration) -> Registry {
+        self.idle_timeout = timeout;
+        self
     }
 
     /// The actually-bound address (resolves ephemeral ports).
@@ -78,21 +91,42 @@ impl Registry {
         self.table.clone()
     }
 
-    /// Accept connections forever, serving each on its own thread until
-    /// the client sends EOF. Transient accept errors are logged and
-    /// survived, mirroring the shard worker's accept loop.
+    /// The registry's shutdown signal — a clone lets a supervising
+    /// thread (or test) stop the registry without a wire frame.
+    pub fn shutdown_flag(&self) -> ShutdownFlag {
+        self.shutdown.clone()
+    }
+
+    /// Accept connections until a graceful-shutdown frame (tag `24`)
+    /// arrives, serving each on its own thread until the client sends
+    /// EOF. Transient accept errors are logged and survived, mirroring
+    /// the shard worker's accept loop. On shutdown the registry stops
+    /// accepting, drains in-flight connections for a bounded time and
+    /// returns.
     pub fn serve_forever(&self) -> Result<()> {
         for stream in self.listener.incoming() {
+            if self.shutdown.is_set() {
+                break;
+            }
             match stream {
                 Ok(s) => {
                     let table = self.table.clone();
-                    std::thread::spawn(move || serve_connection(s, table));
+                    let guard = self.shutdown.guard();
+                    let idle = self.idle_timeout;
+                    let flag = self.shutdown.clone();
+                    std::thread::spawn(move || {
+                        let _guard = guard;
+                        serve_connection_with(s, table, idle, Some(flag));
+                    });
                 }
                 Err(e) => {
                     log!(Level::Warn, "registry: accept failed ({e}); continuing");
                     std::thread::sleep(Duration::from_millis(50));
                 }
             }
+        }
+        if !self.shutdown.drain(Duration::from_secs(10)) {
+            log!(Level::Warn, "registry: shutdown drain timed out; exiting anyway");
         }
         Ok(())
     }
@@ -142,20 +176,43 @@ pub fn handle_registry_request(
     reply
 }
 
+/// Serve one client connection with the default idle window and no
+/// shutdown signal (see [`serve_connection_with`]).
+pub fn serve_connection(stream: TcpStream, table: Arc<Mutex<MembershipTable>>) {
+    serve_connection_with(stream, table, crate::shard::worker::IDLE_TIMEOUT, None);
+}
+
 /// Serve one client connection: read registry frames, apply, reply —
 /// until clean EOF. A malformed frame ends the connection (the registry
 /// protocol has no error reply; a confused client should reconnect). A
 /// stats request (tag `22`) short-circuits to a snapshot of the
 /// registry's process-global [`crate::telemetry::MetricsHub`] — the
-/// server side of `opinn stat <addr>`.
-pub fn serve_connection(mut stream: TcpStream, table: Arc<Mutex<MembershipTable>>) {
+/// server side of `opinn stat <addr>`. A shutdown request (tag `24`) is
+/// acked, then `shutdown` (when given) is triggered so the owning
+/// accept loop drains and exits.
+pub fn serve_connection_with(
+    mut stream: TcpStream,
+    table: Arc<Mutex<MembershipTable>>,
+    idle_timeout: Duration,
+    shutdown: Option<ShutdownFlag>,
+) {
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(crate::shard::worker::IDLE_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(idle_timeout));
     loop {
         let payload = match wire::read_frame(&mut stream) {
             Ok(Some(p)) => p,
             Ok(None) | Err(_) => return,
         };
+        if wire::is_shutdown_request(&payload) {
+            let _ = wire::write_frame(&mut stream, &wire::encode_shutdown_ack());
+            if let Some(flag) = &shutdown {
+                match stream.local_addr() {
+                    Ok(addr) => flag.trigger(addr),
+                    Err(_) => flag.set(),
+                }
+            }
+            return;
+        }
         if wire::is_stats_request(&payload) {
             let reply = wire::encode_stats_reply(&global_hub().prometheus_text());
             if wire::write_frame(&mut stream, &reply).is_err() {
@@ -219,5 +276,17 @@ mod tests {
         let reg = Registry::bind("127.0.0.1:0", FleetConfig::default()).unwrap();
         assert_ne!(reg.local_addr().unwrap().port(), 0);
         assert!(reg.table().lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn shutdown_frame_drains_the_accept_loop() {
+        let reg = Registry::bind("127.0.0.1:0", FleetConfig::default()).unwrap();
+        let addr = reg.local_addr().unwrap();
+        let t = std::thread::spawn(move || reg.serve_forever());
+        let mut stream = TcpStream::connect(addr).unwrap();
+        wire::write_frame(&mut stream, &wire::encode_shutdown_request()).unwrap();
+        let ack = wire::read_frame(&mut stream).unwrap().expect("ack before close");
+        assert!(wire::is_shutdown_ack(&ack));
+        t.join().unwrap().unwrap();
     }
 }

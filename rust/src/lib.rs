@@ -38,6 +38,11 @@
 //! * [`fleet`] — elastic worker fleets: the `opinn registry` discovery
 //!   daemon with TTL heartbeat liveness, and the per-step membership
 //!   resolution that lets workers join, leave and crash mid-run;
+//! * [`serve`] — the multi-tenant training service: the `opinn serve`
+//!   job daemon (fair-share scheduling over tenants and priorities, a
+//!   bounded worker pool, per-job checkpoints that make cancelled or
+//!   evicted jobs resumable) and the `opinn submit`/`jobs`/`cancel`
+//!   client;
 //! * [`photonic`] — MZI meshes, non-idealities, TONN cores, on-chip
 //!   training protocols (FLOPS, L²ight, ours);
 //! * [`mnist`] — the App. G classifier workload + its session engine
@@ -199,6 +204,7 @@ pub mod optim;
 pub mod pde;
 pub mod photonic;
 pub mod quadrature;
+pub mod serve;
 pub mod session;
 pub mod shard;
 pub mod stein;

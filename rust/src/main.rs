@@ -44,6 +44,7 @@ use optical_pinn::hw;
 use optical_pinn::mnist;
 use optical_pinn::net::build_model;
 use optical_pinn::photonic::{PhaseProtocol, PhaseTrainConfig, PhotonicModel, PhotonicVariant};
+use optical_pinn::serve::{JobStatus, JobSubmission, ServeClient, ServeDaemon, ServeOptions};
 use optical_pinn::session::{self, EvalObserver, MultiObserver, SessionBuilder};
 use optical_pinn::shard::{wire, TcpTransport, Transport};
 use optical_pinn::telemetry::{recorder, MetricsHub};
@@ -80,6 +81,10 @@ fn run(args: &Args) -> Result<()> {
         Some("train-phase") => cmd_train_phase(args),
         Some("shard-worker") => cmd_shard_worker(args),
         Some("registry") => cmd_registry(args),
+        Some("serve") => cmd_serve(args),
+        Some("submit") => cmd_submit(args),
+        Some("jobs") => cmd_jobs(args),
+        Some("cancel") => cmd_cancel(args),
         Some("tables") => cmd_tables(args),
         Some("bench") => cmd_bench(args),
         Some("stat") => cmd_stat(args),
@@ -121,7 +126,7 @@ fn help() -> String {
     out
 }
 
-const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables|bench|stat|hw-report|info> [options]
+const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|serve|submit|jobs|cancel|tables|bench|stat|hw-report|info> [options]
   train <problem> <std|tt> [--train fo|zo] [--method sg|se] [--epochs N]
         [--lr F] [--seed N] [--rank N] [--width N] [--mu F] [--queries N]
         [--eval-every N] [--max-forwards N] [--backend pjrt|native]
@@ -137,21 +142,48 @@ const HELP: &str = "usage: opinn <train|train-phase|shard-worker|registry|tables
         [--registry ADDR] [--eval-precision f64|f32] [--verbose]
         [--out phases.json]
   shard-worker [--listen ADDR] [--registry ADDR] [--advertise ADDR]
+        [--idle-reap-secs N] [--io-timeout-secs N]
         host an engine replica; serves probe ranges to sharded sessions
         until each client disconnects (default ADDR 127.0.0.1:7171).
         With --registry: register + heartbeat the worker so elastic
         sessions discover it (--advertise overrides the announced
-        address when workers sit behind NAT/port maps)
+        address when workers sit behind NAT/port maps). A graceful
+        shutdown frame (opinn cancel ADDR --shutdown) drains in-flight
+        work and deregisters from the fleet
   registry [--listen ADDR] [--heartbeat-secs N] [--miss-budget N]
+        [--idle-reap-secs N] [--io-timeout-secs N]
         fleet discovery daemon (default ADDR 127.0.0.1:7271): workers
         register and heartbeat, sessions resolve the live set each
         step; a member that misses its heartbeat budget (default 2 s
         x 3) is dropped until it re-registers
+  serve [--listen ADDR] [--registry ADDR] [--max-concurrent N]
+        [--ckpt-dir DIR] [--idle-reap-secs N] [--io-timeout-secs N]
+        multi-tenant training service (default ADDR 127.0.0.1:7371):
+        accept job submissions, validate specs against the problem
+        catalog, and run up to N jobs concurrently (default 2) with
+        fair-share scheduling (priority classes + per-tenant round-
+        robin). Jobs checkpoint at eval cadence under --ckpt-dir
+        (default opinn-serve/), so cancelled/evicted jobs resume from
+        their last checkpoint on resubmission with the same --key.
+        With --registry: jobs evaluate against the shared worker fleet
+  submit <addr> <problem> [--config FILE] [--key K] [--tenant T]
+        [--priority 0|1|2] [--follow] [--bench-json]
+        submit a training job to an `opinn serve` daemon. --config is
+        the same JSON schema `opinn train` reads (epochs, seed, lr,
+        max_forwards, ...). --follow streams eval metrics until the
+        job finishes and exits nonzero unless it completed
+  jobs <addr>
+        list every job the daemon knows (key, tenant, priority, spec,
+        state, progress)
+  cancel <addr> <key> | cancel <addr> --shutdown
+        cancel one job (resumable from its last checkpoint), or ask
+        the daemon at <addr> — serve, shard-worker or registry — to
+        shut down gracefully
   tables <t1|t2|t3|t456|fig3|tt_rank|width|grid|mc_samples|sg_level|sigma|mu|queries|mnist>
   bench [--scenario NAME|all] [--bin PATH] [--out-dir DIR] [--epochs N] [--list]
         spawn the built `opinn` binary through the fixed-seed scenario
         registry (single-engine, pipelined, precision, sharded-tcp,
-        fleet-churn) and write one schema-versioned BENCH_<scenario>.json
+        fleet-churn, serve) and write one schema-versioned BENCH_<scenario>.json
         per scenario (default --out-dir: the repo root; default --bin:
         this binary; OPINN_FULL=1 runs paper scale)
   bench --compare BASELINE.json [--against CURRENT.json] [--threshold F]
@@ -397,23 +429,47 @@ fn cmd_train_phase(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Shared daemon flags: `--io-timeout-secs` overrides the process-wide
+/// TCP transport timeout; `--idle-reap-secs` returns the per-connection
+/// idle window override, if given.
+fn apply_daemon_flags(args: &Args) -> Result<Option<std::time::Duration>> {
+    let io_secs = args.get_u64("io-timeout-secs", 0)?;
+    if io_secs > 0 {
+        optical_pinn::shard::set_default_io_timeout(std::time::Duration::from_secs(io_secs));
+    }
+    let idle_secs = args.get_u64("idle-reap-secs", 0)?;
+    Ok((idle_secs > 0).then(|| std::time::Duration::from_secs(idle_secs)))
+}
+
 fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let idle = apply_daemon_flags(args)?;
     let addr = args.get_or("listen", "127.0.0.1:7171");
-    let worker = optical_pinn::shard::ShardWorker::bind(&addr)?;
+    let mut worker = optical_pinn::shard::ShardWorker::bind(&addr)?;
+    if let Some(idle) = idle {
+        worker = worker.with_idle_timeout(idle);
+    }
     let local = worker.local_addr()?;
     eprintln!("opinn shard-worker: listening on {local}");
     // --registry: announce this worker to the fleet registry and keep it
     // live with background heartbeats for as long as we serve. The
     // advertised address defaults to the bound one; --advertise covers
     // NAT/port-mapped workers whose reachable address differs.
-    let _heartbeater = args.get("registry").map(|registry| {
+    let heartbeater = args.get("registry").map(|registry| {
         let advertise = args.get_or("advertise", &local.to_string());
         Heartbeater::spawn(registry, &advertise, FleetConfig::default().heartbeat)
     });
-    worker.serve_forever()
+    let out = worker.serve_forever();
+    // graceful shutdown (wire tag 24) lands here: deregister from the
+    // fleet before exiting so dispatchers stop routing immediately
+    // instead of waiting out the TTL
+    if let Some(hb) = heartbeater {
+        hb.stop();
+    }
+    out
 }
 
 fn cmd_registry(args: &Args) -> Result<()> {
+    let idle = apply_daemon_flags(args)?;
     let addr = args.get_or("listen", "127.0.0.1:7271");
     let heartbeat = args.get_u64("heartbeat-secs", 2)?;
     let miss_budget = args.get_usize("miss-budget", 3)?;
@@ -426,12 +482,162 @@ fn cmd_registry(args: &Args) -> Result<()> {
         heartbeat: std::time::Duration::from_secs(heartbeat),
         miss_budget: miss_budget as u32,
     };
-    let registry = Registry::bind(&addr, config)?;
+    let mut registry = Registry::bind(&addr, config)?;
+    if let Some(idle) = idle {
+        registry = registry.with_idle_timeout(idle);
+    }
     eprintln!(
         "opinn registry: listening on {} (heartbeat {heartbeat}s, miss budget {miss_budget})",
         registry.local_addr()?
     );
     registry.serve_forever()
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let idle = apply_daemon_flags(args)?;
+    let addr = args.get_or("listen", "127.0.0.1:7371");
+    let max_concurrent = args.get_usize("max-concurrent", 2)?;
+    if max_concurrent == 0 {
+        return Err(optical_pinn::err("serve: --max-concurrent must be positive"));
+    }
+    let opts = ServeOptions {
+        registry: args.get("registry").map(str::to_string),
+        max_concurrent,
+        ckpt_dir: PathBuf::from(args.get_or("ckpt-dir", "opinn-serve")),
+    };
+    let fleet = opts.registry.clone();
+    let mut daemon = ServeDaemon::bind(&addr, opts)?;
+    if let Some(idle) = idle {
+        daemon = daemon.with_idle_timeout(idle);
+    }
+    eprintln!(
+        "opinn serve: listening on {} (max {max_concurrent} concurrent jobs{})",
+        daemon.local_addr()?,
+        match &fleet {
+            Some(reg) => format!(", fleet via {reg}"),
+            None => ", in-process".to_string(),
+        }
+    );
+    daemon.serve_forever()
+}
+
+fn print_job_status(st: &JobStatus) {
+    let fin = st
+        .final_error
+        .map(|e| sci(e))
+        .unwrap_or_else(|| "-".to_string());
+    println!(
+        "{:<10} {:<10} p{} {:<10} {:<9} epoch {:>7}  forwards {:>10}  rel_l2 {:>10}  {}",
+        st.key, st.tenant, st.priority, st.spec, st.state.to_string(), st.epoch, st.forwards,
+        fin, st.detail
+    );
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let addr = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| optical_pinn::err("submit: expected a daemon address (host:port)"))?;
+    let spec = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| optical_pinn::err("submit: expected a problem spec (e.g. bs, hjb?d=20)"))?;
+    let config = match args.get("config") {
+        Some(path) => std::fs::read_to_string(path)?,
+        None => String::new(),
+    };
+    let priority = args.get_u64("priority", 1)?.min(u8::MAX as u64) as u8;
+    let sub = JobSubmission {
+        key: args.get("key").map(str::to_string),
+        tenant: args.get_or("tenant", "cli"),
+        priority,
+        spec,
+        config,
+    };
+    let mut client = ServeClient::new(addr.clone());
+    let key = client.submit(&sub)?;
+    println!("submitted {key}");
+    if !args.flag("follow") {
+        return Ok(());
+    }
+    // --bench-json: rebuild a history from the metric stream and speak
+    // the benchsuite child protocol (the `opinn bench` serve scenario)
+    let bench = args.flag("bench-json");
+    let started = std::time::Instant::now();
+    let mut hist = optical_pinn::zo::History::default();
+    let status = ServeClient::follow(&addr, &key, |m| {
+        eprintln!(
+            "[{key}] epoch {:>6}  loss {:10.4e}  rel_l2 {:9.3e}  forwards {}",
+            m.epoch, m.loss, m.rel_l2, m.forwards
+        );
+        hist.steps.push(m.epoch as usize);
+        hist.losses.push(m.loss);
+        hist.errors.push(m.rel_l2);
+        hist.forwards.push(m.forwards);
+        hist.final_error = m.rel_l2;
+        hist.total_forwards = m.forwards;
+    })?;
+    hist.wall_secs = started.elapsed().as_secs_f64();
+    println!(
+        "job {key}: {}  (epoch {}, forwards {}, rel_l2 {})  {}",
+        status.state,
+        status.epoch,
+        status.forwards,
+        status.final_error.map(|e| sci(e)).unwrap_or_else(|| "-".to_string()),
+        status.detail
+    );
+    if bench {
+        let payload = benchsuite::child_summary_json(&hist, &[]).to_string();
+        println!("{} {payload}", benchsuite::CHILD_MARKER);
+    }
+    if status.state != optical_pinn::serve::JobState::Done {
+        return Err(optical_pinn::err(format!(
+            "job {key} ended {}: {}",
+            status.state, status.detail
+        )));
+    }
+    Ok(())
+}
+
+fn cmd_jobs(args: &Args) -> Result<()> {
+    let addr = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| optical_pinn::err("jobs: expected a daemon address (host:port)"))?;
+    let jobs = ServeClient::new(addr).jobs()?;
+    if jobs.is_empty() {
+        println!("(no jobs)");
+        return Ok(());
+    }
+    for st in &jobs {
+        print_job_status(st);
+    }
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    let addr = args
+        .positional
+        .first()
+        .cloned()
+        .ok_or_else(|| optical_pinn::err("cancel: expected a daemon address (host:port)"))?;
+    let mut client = ServeClient::new(addr);
+    if args.flag("shutdown") {
+        client.shutdown()?;
+        println!("shutdown acknowledged; daemon is draining");
+        return Ok(());
+    }
+    let key = args
+        .positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| optical_pinn::err("cancel: expected a job key (or --shutdown)"))?;
+    let status = client.cancel(&key)?;
+    print_job_status(&status);
+    Ok(())
 }
 
 fn cmd_tables(args: &Args) -> Result<()> {

@@ -23,6 +23,23 @@ impl Adam {
     pub fn new(dim: usize, lr: f64) -> Adam {
         Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; dim], v: vec![0.0; dim], t: 0 }
     }
+
+    /// Snapshot the moment estimates and step counter `(m, v, t)` —
+    /// everything [`Adam::restore`] needs to resume the exact update
+    /// sequence from a checkpoint.
+    pub fn state(&self) -> (&[f64], &[f64], u64) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Restore a `(m, v, t)` snapshot taken by [`Adam::state`]. Panics
+    /// on a dimension mismatch, which would silently corrupt training.
+    pub fn restore(&mut self, m: &[f64], v: &[f64], t: u64) {
+        assert_eq!(m.len(), self.m.len(), "Adam restore dim mismatch");
+        assert_eq!(v.len(), self.v.len(), "Adam restore dim mismatch");
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+        self.t = t;
+    }
 }
 
 impl Optimizer for Adam {
@@ -126,6 +143,30 @@ mod tests {
             opt.step(&mut p, &g);
         }
         assert!(p[0].abs() < 1e-4, "{}", p[0]);
+    }
+
+    #[test]
+    fn adam_state_round_trip_resumes_the_exact_update_sequence() {
+        let mut warm = Adam::new(2, 0.1);
+        let mut p = vec![5.0, -3.0];
+        for _ in 0..10 {
+            let g: Vec<f64> = p.iter().map(|x| 2.0 * x).collect();
+            warm.step(&mut p, &g);
+        }
+        let (m, v, t) = warm.state();
+        assert_eq!(t, 10);
+        let mut resumed = Adam::new(2, 0.1);
+        resumed.restore(&m.to_vec(), &v.to_vec(), t);
+        let mut q = p.clone();
+        for _ in 0..10 {
+            let g: Vec<f64> = p.iter().map(|x| 2.0 * x).collect();
+            warm.step(&mut p, &g);
+            let g: Vec<f64> = q.iter().map(|x| 2.0 * x).collect();
+            resumed.step(&mut q, &g);
+        }
+        for (a, b) in p.iter().zip(&q) {
+            assert_eq!(a.to_bits(), b.to_bits(), "resumed Adam must track exactly");
+        }
     }
 
     #[test]

@@ -1,0 +1,144 @@
+//! [`ServeClient`]: the blocking client behind `opinn submit` /
+//! `opinn jobs` / `opinn cancel`.
+//!
+//! Request/reply calls ride the same lazily-reconnecting
+//! [`TcpTransport`] the shard slots use. [`ServeClient::follow`] is the
+//! one exception: a metric-stream subscription switches its connection
+//! to server-push, so it opens a dedicated socket with no read timeout
+//! and consumes frames until the terminal status arrives.
+
+use std::net::TcpStream;
+
+use crate::shard::wire::{
+    self, JobStatus, JobSubmission, MetricUpdate, ServeReply, ServeRequest,
+};
+use crate::shard::{TcpTransport, Transport};
+use crate::{err, Result};
+
+/// A blocking RPC client to one `opinn serve` daemon.
+pub struct ServeClient {
+    transport: TcpTransport,
+}
+
+impl ServeClient {
+    /// A client for the daemon at `addr` (`host:port`); connects on
+    /// first use.
+    pub fn new(addr: impl Into<String>) -> ServeClient {
+        ServeClient { transport: TcpTransport::new(addr) }
+    }
+
+    /// Endpoint label for logs (`tcp://host:port`).
+    pub fn label(&self) -> String {
+        self.transport.label()
+    }
+
+    fn call(&mut self, req: &ServeRequest) -> Result<ServeReply> {
+        let reply = self.transport.round_trip(&wire::encode_serve_request(req))?;
+        wire::decode_serve_reply(&reply)
+    }
+
+    /// Submit a job; returns the (possibly server-assigned) job key.
+    /// An admission rejection surfaces as an error carrying the
+    /// daemon's validation message.
+    pub fn submit(&mut self, sub: &JobSubmission) -> Result<String> {
+        match self.call(&ServeRequest::Submit(sub.clone()))? {
+            ServeReply::Accepted(key) => Ok(key),
+            ServeReply::Rejected(msg) => Err(err(format!("serve: rejected: {msg}"))),
+            _ => Err(err("serve: unexpected reply to submit")),
+        }
+    }
+
+    /// The current status of job `key`.
+    pub fn status(&mut self, key: &str) -> Result<JobStatus> {
+        match self.call(&ServeRequest::Query(key.to_string()))? {
+            ServeReply::Status(status) => Ok(status),
+            ServeReply::Rejected(msg) => Err(err(format!("serve: {msg}"))),
+            _ => Err(err("serve: unexpected reply to query")),
+        }
+    }
+
+    /// Status of every job the daemon knows, in key order.
+    pub fn jobs(&mut self) -> Result<Vec<JobStatus>> {
+        match self.call(&ServeRequest::List)? {
+            ServeReply::Jobs(jobs) => Ok(jobs),
+            ServeReply::Rejected(msg) => Err(err(format!("serve: {msg}"))),
+            _ => Err(err("serve: unexpected reply to list")),
+        }
+    }
+
+    /// Request cancellation of job `key`; returns the post-request
+    /// status (a queued job is already terminal, a running one goes
+    /// terminal when its next step observes the flag).
+    pub fn cancel(&mut self, key: &str) -> Result<JobStatus> {
+        match self.call(&ServeRequest::Cancel(key.to_string()))? {
+            ServeReply::Status(status) => Ok(status),
+            ServeReply::Rejected(msg) => Err(err(format!("serve: {msg}"))),
+            _ => Err(err("serve: unexpected reply to cancel")),
+        }
+    }
+
+    /// Ask the daemon to shut down gracefully (wire tag `24`): running
+    /// jobs are checkpointed and evicted, then the daemon drains and
+    /// exits. Returns once the shutdown ack lands.
+    pub fn shutdown(&mut self) -> Result<()> {
+        let reply = self.transport.round_trip(&wire::encode_shutdown_request())?;
+        if wire::is_shutdown_ack(&reply) {
+            Ok(())
+        } else {
+            Err(err("serve: expected a shutdown ack"))
+        }
+    }
+
+    /// Subscribe to job `key`'s metric stream on a dedicated
+    /// connection, invoking `on_metric` per update, until a terminal
+    /// status frame closes the stream; returns that final status.
+    ///
+    /// Blocks for as long as the job runs (no read timeout — training
+    /// epochs between eval points can be arbitrarily long).
+    pub fn follow(
+        addr: &str,
+        key: &str,
+        mut on_metric: impl FnMut(&MetricUpdate),
+    ) -> Result<JobStatus> {
+        let mut stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        wire::write_frame(
+            &mut stream,
+            &wire::encode_serve_request(&ServeRequest::Stream(key.to_string())),
+        )?;
+        loop {
+            let payload = wire::read_frame(&mut stream)?.ok_or_else(|| {
+                err(format!("serve: stream for job {key:?} closed before the job finished"))
+            })?;
+            match wire::decode_serve_reply(&payload)? {
+                ServeReply::Metric(update) => on_metric(&update),
+                ServeReply::Status(status) if status.state.is_terminal() => return Ok(status),
+                ServeReply::Status(_) => {}
+                ServeReply::Rejected(msg) => return Err(err(format!("serve: {msg}"))),
+                _ => return Err(err("serve: unexpected frame in metric stream")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unreachable_daemon_errors_cleanly() {
+        let mut client = ServeClient::new("127.0.0.1:1");
+        assert!(client.jobs().is_err());
+        assert!(client
+            .submit(&JobSubmission {
+                key: None,
+                tenant: "t".into(),
+                priority: 1,
+                spec: "bs".into(),
+                config: String::new(),
+            })
+            .is_err());
+        assert_eq!(client.label(), "tcp://127.0.0.1:1");
+        assert!(ServeClient::follow("127.0.0.1:1", "job-0001", |_| {}).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! Job admission and runtime construction for the training service.
+//!
+//! A submission carries a problem-spec string plus an optional config
+//! JSON body (the same schema `opinn train` reads via
+//! [`ExperimentConfig::from_json`]). [`admission_check`] turns the pair
+//! into a validated [`ExperimentConfig`] — or a rejection message —
+//! **without** building anything expensive, so the accept loop can
+//! answer synchronously. [`build_runtime`] later materializes the
+//! engine, model, initial parameters and [`TrainConfig`] on the worker
+//! thread that runs the job, mirroring `opinn train`'s construction
+//! sequence exactly so a served job's trajectory is bitwise-identical
+//! to the same spec+config run standalone through
+//! [`crate::session::run_weight`].
+
+use crate::config::ExperimentConfig;
+use crate::engine::Engine;
+use crate::experiments::{self, Backend, RunSpec};
+use crate::net::{build_model, Model};
+use crate::util::json::Json;
+use crate::zo::rge::RgeConfig;
+use crate::zo::{TrainConfig, TrainMethod};
+use crate::{Error, Result};
+
+/// Validate one submission: parse the config JSON (empty body = all
+/// defaults), overlay the submitted spec, force the native backend (the
+/// daemon has no PJRT artifact bundle and jobs must not depend on one),
+/// and reject configs that try to wire their own replica set — the
+/// daemon owns fleet wiring via its `--registry` flag.
+pub fn admission_check(spec: &str, config_json: &str) -> Result<ExperimentConfig> {
+    let mut cfg = if config_json.trim().is_empty() {
+        ExperimentConfig::default()
+    } else {
+        let j = Json::parse(config_json)
+            .map_err(|e| Error::Config(format!("serve: config is not valid JSON: {e}")))?;
+        ExperimentConfig::from_json(&j)?
+    };
+    if spec.trim().is_empty() {
+        return Err(Error::Config("serve: empty problem spec".into()));
+    }
+    cfg.pde = spec.to_string();
+    // served jobs always evaluate on the native engine
+    cfg.backend = "native".into();
+    if cfg.registry.is_some() || cfg.shards > 0 || !cfg.shard_hosts.is_empty() {
+        return Err(Error::Config(
+            "serve: jobs may not set registry/shards/shard_hosts — the daemon \
+             owns replica wiring (start `opinn serve` with --registry)"
+            .into(),
+        ));
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Everything a worker thread needs to run one admitted job.
+pub struct JobRuntime {
+    /// The loss oracle (native engine; sharding is layered on by the
+    /// session when `train.registry` is set).
+    pub engine: Box<dyn Engine>,
+    /// The model (for `param_layout()` and the checkpoint name).
+    pub model: Model,
+    /// Fresh initial parameters (`init_flat(seed)`).
+    pub params: Vec<f64>,
+    /// The session config equivalent to `opinn train` on this spec.
+    pub train: TrainConfig,
+}
+
+/// The [`TrainConfig`] `opinn train` would run for `cfg`, with the
+/// model's parameter layout (tensor-wise RGE) and the daemon's fleet
+/// `registry` (if any) filled in.
+pub fn train_config(
+    cfg: &ExperimentConfig,
+    layout: Vec<crate::net::ParamEntry>,
+    registry: Option<&str>,
+) -> TrainConfig {
+    let method = if cfg.train == "fo" {
+        TrainMethod::Fo
+    } else {
+        TrainMethod::ZoRge(RgeConfig {
+            mu: cfg.mu,
+            n_queries: cfg.n_queries,
+            ..Default::default()
+        })
+    };
+    TrainConfig {
+        method,
+        epochs: cfg.epochs,
+        lr: cfg.lr,
+        eval_every: cfg.eval_every,
+        seed: cfg.seed,
+        layout,
+        max_forwards: cfg.max_forwards,
+        pipeline_depth: cfg.pipeline_depth,
+        shards: 0,
+        shard_hosts: Vec::new(),
+        registry: registry.map(str::to_string),
+        eval_precision: cfg.eval_precision,
+        verbose: false,
+    }
+}
+
+/// Materialize the engine/model/params/config for one validated job —
+/// the exact `opinn train` construction sequence (RunSpec → engine →
+/// probe threads → model → `init_flat(seed)`), native backend.
+pub fn build_runtime(cfg: &ExperimentConfig, registry: Option<&str>) -> Result<JobRuntime> {
+    let loss_method = match cfg.method {
+        crate::loss::DerivMethod::Sg => "sg",
+        crate::loss::DerivMethod::Se => "se",
+    };
+    let spec = RunSpec {
+        pde: cfg.pde.clone(),
+        variant: cfg.variant.clone(),
+        model_key: None,
+        method: loss_method.into(),
+        rank: cfg.rank,
+        width: cfg.width,
+    };
+    let mut engine = experiments::make_engine(&spec, Backend::Native)?;
+    if cfg.probe_threads > 0 {
+        engine.set_probe_threads(cfg.probe_threads);
+    }
+    let model = build_model(&cfg.pde, &cfg.variant, cfg.rank, cfg.width)?;
+    let params = model.init_flat(cfg.seed);
+    let train = train_config(cfg, model.param_layout(), registry);
+    Ok(JobRuntime { engine, model, params, train })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_admits_with_defaults() {
+        let cfg = admission_check("bs", "").unwrap();
+        assert_eq!(cfg.pde, "bs");
+        assert_eq!(cfg.backend, "native", "serve forces the native backend");
+        assert_eq!(cfg.epochs, ExperimentConfig::default().epochs);
+    }
+
+    #[test]
+    fn config_json_overrides_are_applied() {
+        let cfg = admission_check(
+            "poisson?d=2",
+            r#"{"epochs":12,"seed":3,"max_forwards":500,"eval_every":4}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.pde, "poisson?d=2");
+        assert_eq!(cfg.epochs, 12);
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.max_forwards, Some(500));
+    }
+
+    #[test]
+    fn bad_submissions_are_rejected() {
+        assert!(admission_check("", "").is_err(), "empty spec");
+        assert!(admission_check("no-such-pde", "").is_err(), "unknown family");
+        assert!(admission_check("bs", "{not json").is_err(), "malformed JSON");
+        assert!(admission_check("bs", r#"{"bogus_key":1}"#).is_err(), "unknown key");
+        assert!(
+            admission_check("bs", r#"{"registry":"10.0.0.1:7271"}"#).is_err(),
+            "jobs may not wire their own fleet"
+        );
+        assert!(admission_check("bs", r#"{"shards":2}"#).is_err());
+    }
+
+    #[test]
+    fn train_config_mirrors_the_cli_mapping() {
+        let cfg = admission_check("bs", r#"{"train":"zo","mu":0.05,"n_queries":2}"#).unwrap();
+        let t = train_config(&cfg, Vec::new(), Some("127.0.0.1:7271"));
+        match &t.method {
+            TrainMethod::ZoRge(rc) => {
+                assert_eq!(rc.mu, 0.05);
+                assert_eq!(rc.n_queries, 2);
+            }
+            other => panic!("expected ZoRge, got {other:?}"),
+        }
+        assert_eq!(t.registry.as_deref(), Some("127.0.0.1:7271"));
+        assert!(!t.verbose, "served jobs never log to the daemon's stderr");
+        let fo = admission_check("bs", r#"{"train":"fo"}"#).unwrap();
+        assert!(matches!(train_config(&fo, Vec::new(), None).method, TrainMethod::Fo));
+    }
+
+    #[test]
+    fn build_runtime_produces_a_runnable_job() {
+        let cfg = admission_check("bs", r#"{"epochs":2,"eval_every":1}"#).unwrap();
+        let rt = build_runtime(&cfg, None).unwrap();
+        assert_eq!(rt.params.len(), rt.engine.n_params());
+        assert!(!rt.train.layout.is_empty(), "tt layout feeds tensor-wise RGE");
+        assert_eq!(rt.train.epochs, 2);
+    }
+}

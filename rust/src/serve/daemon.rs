@@ -1,0 +1,437 @@
+//! [`ServeDaemon`]: the multi-tenant training service behind
+//! `opinn serve --listen <addr>`.
+//!
+//! The daemon couples three loops:
+//!
+//! * an **accept loop** (same shape as the shard worker and registry):
+//!   one thread per client connection, speaking the serve frames of
+//!   [`crate::shard::wire`], plus the stats peek (`opinn stat`) and the
+//!   graceful-shutdown frame;
+//! * a **worker pool** of `max_concurrent` threads, each popping job
+//!   keys from the [`FairShare`] queue and running them to completion;
+//! * per-job **sessions**: each job builds its engine/model via the
+//!   `opinn train`-parity path ([`super::config`]), trains through
+//!   [`crate::session::weight_builder`] with an observer chain of
+//!   eval → checkpoint → [`JobObserver`], and lands its final params in
+//!   the checkpoint directory.
+//!
+//! Checkpoints make cancellation and eviction *resumable*: every job
+//! checkpoints at eval cadence under `<ckpt_dir>/<key>.ckpt.json`, and
+//! a resubmission with the same key resumes from that file (bitwise —
+//! the checkpoint carries optimizer moments and the exact RNG state)
+//! instead of epoch 0. With `--registry`, jobs evaluate against the
+//! shared worker fleet; otherwise they run in-process.
+
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::config;
+use super::job::{self, JobStore};
+use super::observer::JobObserver;
+use super::scheduler::FairShare;
+use crate::coordinator::checkpoint::{load_state, save_params};
+use crate::session::{self, CheckpointObserver, EvalObserver, MultiObserver};
+use crate::shard::wire::{self, JobState, JobSubmission, ServeReply, ServeRequest};
+use crate::telemetry::{global_hub, Level};
+use crate::util::shutdown::ShutdownFlag;
+use crate::zo::History;
+use crate::{log, Result};
+
+/// Daemon configuration (the `opinn serve` flags).
+pub struct ServeOptions {
+    /// Resolve engine replicas from the `opinn registry` at this
+    /// address (elastic fleet mode); `None` runs jobs in-process.
+    pub registry: Option<String>,
+    /// Worker-pool width: how many jobs run concurrently.
+    pub max_concurrent: usize,
+    /// Directory for per-job checkpoints and final-parameter artifacts.
+    pub ckpt_dir: PathBuf,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { registry: None, max_concurrent: 2, ckpt_dir: PathBuf::from("opinn-serve") }
+    }
+}
+
+/// State shared by the accept loop, connection handlers and the worker
+/// pool.
+struct Shared {
+    opts: ServeOptions,
+    store: Arc<JobStore>,
+    queue: Mutex<FairShare>,
+    wake: Condvar,
+    shutdown: ShutdownFlag,
+}
+
+/// The TCP training-service daemon; see the module docs.
+pub struct ServeDaemon {
+    listener: TcpListener,
+    idle_timeout: Duration,
+    shared: Arc<Shared>,
+}
+
+impl ServeDaemon {
+    /// Bind to `addr` (e.g. `127.0.0.1:0` for an ephemeral test port).
+    pub fn bind(addr: &str, opts: ServeOptions) -> Result<ServeDaemon> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| crate::err(format!("serve: cannot resolve {addr:?}")))?;
+        Ok(ServeDaemon {
+            listener: TcpListener::bind(addr)?,
+            idle_timeout: crate::shard::worker::IDLE_TIMEOUT,
+            shared: Arc::new(Shared {
+                opts,
+                store: Arc::new(JobStore::new()),
+                queue: Mutex::new(FairShare::new()),
+                wake: Condvar::new(),
+                shutdown: ShutdownFlag::new(),
+            }),
+        })
+    }
+
+    /// Override the per-connection idle reap window (default
+    /// [`crate::shard::worker::IDLE_TIMEOUT`]; the `--idle-reap-secs`
+    /// flag).
+    pub fn with_idle_timeout(mut self, timeout: Duration) -> ServeDaemon {
+        self.idle_timeout = timeout;
+        self
+    }
+
+    /// The actually-bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// The daemon's job store — lets tests observe job state without a
+    /// socket.
+    pub fn store(&self) -> Arc<JobStore> {
+        self.shared.store.clone()
+    }
+
+    /// The daemon's shutdown signal — a clone lets a supervising thread
+    /// (or test) stop the daemon without a wire frame.
+    pub fn shutdown_flag(&self) -> ShutdownFlag {
+        self.shared.shutdown.clone()
+    }
+
+    /// Accept connections and run jobs until a graceful-shutdown frame
+    /// (tag `24`) arrives. On shutdown: stop accepting, evict queued
+    /// jobs, interrupt running ones (their observers checkpoint-then-
+    /// abort), join the worker pool and drain connection handlers for a
+    /// bounded time.
+    pub fn serve_forever(&self) -> Result<()> {
+        let workers: Vec<_> = (0..self.shared.opts.max_concurrent.max(1))
+            .map(|_| {
+                let shared = self.shared.clone();
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        for stream in self.listener.incoming() {
+            if self.shared.shutdown.is_set() {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let shared = self.shared.clone();
+                    let guard = self.shared.shutdown.guard();
+                    let idle = self.idle_timeout;
+                    std::thread::spawn(move || {
+                        let _guard = guard;
+                        handle_connection(s, &shared, idle);
+                    });
+                }
+                Err(e) => {
+                    log!(Level::Warn, "serve: accept failed ({e}); continuing");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        // eviction: park queued jobs, raise the evict flag on running
+        // ones, then wake every idle worker so the pool exits
+        {
+            let mut q = self.shared.queue.lock().unwrap_or_else(|p| p.into_inner());
+            q.clear();
+        }
+        self.shared.store.evict_all();
+        self.shared.wake.notify_all();
+        for w in workers {
+            let _ = w.join();
+        }
+        if !self.shared.shutdown.drain(Duration::from_secs(10)) {
+            log!(Level::Warn, "serve: shutdown drain timed out; exiting anyway");
+        }
+        Ok(())
+    }
+}
+
+/// One worker-pool thread: pop a job key, run it, repeat — until
+/// shutdown with an empty queue.
+fn worker_loop(shared: &Shared) {
+    loop {
+        let key = {
+            let mut q = shared.queue.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if let Some(key) = q.pop() {
+                    break Some(key);
+                }
+                if shared.shutdown.is_set() {
+                    break None;
+                }
+                let (guard, _) = shared
+                    .wake
+                    .wait_timeout(q, Duration::from_millis(200))
+                    .unwrap_or_else(|p| p.into_inner());
+                q = guard;
+            }
+        };
+        match key {
+            Some(key) => run_job(shared, &key),
+            None => return,
+        }
+    }
+}
+
+/// Run one admitted job to a terminal state.
+fn run_job(shared: &Shared, key: &str) {
+    let Some(interrupt) = shared.store.interrupt_handle(key) else { return };
+    if !shared.store.set_running(key) {
+        // cancelled (or otherwise moved on) while queued
+        return;
+    }
+    log!(Level::Info, "serve: job {key} started");
+    match execute(shared, key, &interrupt) {
+        Ok((hist, final_path)) => {
+            let detail = format!("final params -> {}", final_path.display());
+            shared.store.finish(key, JobState::Done, Some(hist.final_error), &detail);
+            log!(Level::Info, "serve: job {key} done (rel_l2 {:.3e})", hist.final_error);
+        }
+        Err(e) => {
+            let (state, detail) = match interrupt.load(Ordering::SeqCst) {
+                job::CANCEL => (JobState::Cancelled, "cancelled; resumable from checkpoint".into()),
+                job::EVICT => (JobState::Evicted, "evicted; resumable from checkpoint".into()),
+                _ => (JobState::Failed, e.to_string()),
+            };
+            log!(Level::Warn, "serve: job {key} -> {state} ({detail})");
+            shared.store.finish(key, state, None, &detail);
+        }
+    }
+}
+
+/// Build and run the session for one job; returns the history and the
+/// final-parameter artifact path.
+fn execute(
+    shared: &Shared,
+    key: &str,
+    interrupt: &Arc<AtomicU8>,
+) -> Result<(History, PathBuf)> {
+    let sub = shared
+        .store
+        .submission(key)
+        .ok_or_else(|| crate::err(format!("serve: job {key:?} vanished from the store")))?;
+    // re-derive the validated config (admission already vetted it; this
+    // cannot newly fail short of a racing registry change)
+    let cfg = config::admission_check(&sub.spec, &sub.config)?;
+    let mut rt = config::build_runtime(&cfg, shared.opts.registry.as_deref())?;
+    let ckpt = shared.opts.ckpt_dir.join(format!("{key}.ckpt.json"));
+
+    let mut builder = session::weight_builder(&rt.train, rt.params.len());
+    if ckpt.exists() {
+        match load_state(&ckpt) {
+            Ok(state) if state.params.len() == rt.params.len() => {
+                log!(Level::Info, "serve: job {key} resuming from epoch {}", state.epoch);
+                builder = builder.resume(state);
+            }
+            Ok(state) => log!(
+                Level::Warn,
+                "serve: job {key}: checkpoint is for {} params, expected {}; starting fresh",
+                state.params.len(),
+                rt.params.len()
+            ),
+            Err(e) => {
+                log!(Level::Warn, "serve: job {key}: unreadable checkpoint ({e}); starting fresh")
+            }
+        }
+    }
+    // observer order matters: eval appends the fresh history point,
+    // checkpoint persists the epoch's resume state, and only then may
+    // the job observer abort on cancel/evict — so an interrupted run
+    // always resumes from a checkpoint no older than its last eval
+    builder = builder.observer(Box::new(MultiObserver {
+        observers: vec![
+            Box::new(EvalObserver {
+                eval_every: rt.train.eval_every,
+                seed: rt.train.seed,
+                verbose: false,
+                tag: None,
+            }),
+            Box::new(CheckpointObserver {
+                path: ckpt.clone(),
+                every: rt.train.eval_every,
+                name: rt.model.name.clone(),
+            }),
+            Box::new(JobObserver::new(
+                shared.store.clone(),
+                key,
+                interrupt.clone(),
+                rt.train.eval_every,
+            )),
+        ],
+    }));
+    let session = builder.build(rt.engine.as_mut())?;
+    let hist = session.run(&mut rt.params)?;
+    let final_path = shared.opts.ckpt_dir.join(format!("{key}.final.json"));
+    save_params(&final_path, &rt.model.name, rt.train.epochs, &rt.params)?;
+    Ok((hist, final_path))
+}
+
+/// Serve one client connection: serve-protocol frames until EOF, plus
+/// the stats peek and the shutdown frame. A connection that subscribes
+/// to a metric stream becomes server-push and stops being read for
+/// requests.
+fn handle_connection(mut stream: TcpStream, shared: &Shared, idle_timeout: Duration) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(idle_timeout));
+    loop {
+        let payload = match wire::read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) | Err(_) => return,
+        };
+        if wire::is_shutdown_request(&payload) {
+            let _ = wire::write_frame(&mut stream, &wire::encode_shutdown_ack());
+            match stream.local_addr() {
+                Ok(addr) => shared.shutdown.trigger(addr),
+                Err(_) => shared.shutdown.set(),
+            }
+            return;
+        }
+        if wire::is_stats_request(&payload) {
+            let reply = wire::encode_stats_reply(&global_hub().prometheus_text());
+            if wire::write_frame(&mut stream, &reply).is_err() {
+                return;
+            }
+            continue;
+        }
+        let req = match wire::decode_serve_request(&payload) {
+            Ok(req) => req,
+            Err(e) => {
+                log!(Level::Warn, "serve: malformed request ({e}); closing connection");
+                return;
+            }
+        };
+        let reply = match req {
+            ServeRequest::Submit(sub) => match submit(shared, sub) {
+                Ok(key) => ServeReply::Accepted(key),
+                Err(e) => ServeReply::Rejected(e.to_string()),
+            },
+            ServeRequest::Query(key) => match shared.store.status(&key) {
+                Some(status) => ServeReply::Status(status),
+                None => ServeReply::Rejected(format!("unknown job {key:?}")),
+            },
+            ServeRequest::List => ServeReply::Jobs(shared.store.list()),
+            ServeRequest::Cancel(key) => {
+                // a queued job must also leave the scheduler
+                let queued = shared
+                    .store
+                    .status(&key)
+                    .is_some_and(|s| s.state == JobState::Queued);
+                if queued {
+                    let mut q = shared.queue.lock().unwrap_or_else(|p| p.into_inner());
+                    q.remove(&key);
+                }
+                match shared.store.request_cancel(&key) {
+                    Ok(status) => ServeReply::Status(status),
+                    Err(e) => ServeReply::Rejected(e.to_string()),
+                }
+            }
+            ServeRequest::Stream(key) => {
+                let subscribed = stream
+                    .try_clone()
+                    .map_err(crate::Error::from)
+                    .and_then(|clone| shared.store.subscribe(&key, clone));
+                match subscribed {
+                    Ok(()) => {
+                        // server-push from here on: hold the connection
+                        // open (job threads write to the clone) and
+                        // ignore anything else the client sends
+                        let _ = stream.set_read_timeout(None);
+                        while let Ok(Some(_)) = wire::read_frame(&mut stream) {}
+                        return;
+                    }
+                    Err(e) => ServeReply::Rejected(e.to_string()),
+                }
+            }
+        };
+        if wire::write_frame(&mut stream, &wire::encode_serve_reply(&reply)).is_err() {
+            return;
+        }
+    }
+}
+
+/// Validate + admit + enqueue one submission.
+fn submit(shared: &Shared, sub: JobSubmission) -> Result<String> {
+    if shared.shutdown.is_set() {
+        return Err(crate::err("serve: daemon is shutting down"));
+    }
+    config::admission_check(&sub.spec, &sub.config)?;
+    let tenant = sub.tenant.clone();
+    let priority = sub.priority;
+    let key = shared.store.admit(sub)?;
+    {
+        let mut q = shared.queue.lock().unwrap_or_else(|p| p.into_inner());
+        q.push(&tenant, priority, key.clone());
+    }
+    shared.wake.notify_one();
+    log!(Level::Info, "serve: job {key} admitted (tenant {tenant}, priority {priority})");
+    Ok(key)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_resolves_ephemeral_ports() {
+        let daemon = ServeDaemon::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+        assert_ne!(daemon.local_addr().unwrap().port(), 0);
+        assert!(daemon.store().list().is_empty());
+    }
+
+    #[test]
+    fn shutdown_frame_drains_the_accept_loop_and_worker_pool() {
+        let opts = ServeOptions { max_concurrent: 2, ..Default::default() };
+        let daemon = ServeDaemon::bind("127.0.0.1:0", opts).unwrap();
+        let addr = daemon.local_addr().unwrap();
+        let t = std::thread::spawn(move || daemon.serve_forever());
+        let mut stream = TcpStream::connect(addr).unwrap();
+        wire::write_frame(&mut stream, &wire::encode_shutdown_request()).unwrap();
+        let ack = wire::read_frame(&mut stream).unwrap().expect("ack before close");
+        assert!(wire::is_shutdown_ack(&ack));
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn queued_jobs_are_evicted_on_shutdown() {
+        // no workers started (serve_forever not called): admit directly,
+        // then evict — the queued job parks terminal and resumable
+        let daemon = ServeDaemon::bind("127.0.0.1:0", ServeOptions::default()).unwrap();
+        let key = daemon
+            .store()
+            .admit(JobSubmission {
+                key: None,
+                tenant: "t".into(),
+                priority: 1,
+                spec: "bs".into(),
+                config: String::new(),
+            })
+            .unwrap();
+        daemon.store().evict_all();
+        let st = daemon.store().status(&key).unwrap();
+        assert_eq!(st.state, JobState::Evicted);
+        assert!(st.state.is_terminal());
+    }
+}

@@ -1,0 +1,382 @@
+//! [`JobStore`]: the daemon's synchronized job table.
+//!
+//! One record per job key: the submission itself, the lifecycle state
+//! (`queued → running → {done, cancelled, evicted, failed}`), progress
+//! counters mirrored at eval cadence, the interrupt flag the job's
+//! observer polls, and the live metric-stream subscribers. Terminal
+//! cancelled/evicted jobs are *resumable*: resubmitting the same key
+//! re-queues the record, and the run picks up from the job's last
+//! checkpoint on disk.
+//!
+//! The store also mirrors job state into the process-global
+//! [`crate::telemetry::MetricsHub`] under `serve.jobs.*` /
+//! `serve.job.<key>.*`, so a long-lived `opinn serve` answers
+//! `opinn stat` like every other daemon.
+
+use std::collections::BTreeMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::shard::wire::{self, JobState, JobStatus, JobSubmission, MetricUpdate, ServeReply};
+use crate::telemetry::global_hub;
+use crate::{err, Result};
+
+/// Interrupt flag values polled by the job observer.
+pub const RUN: u8 = 0;
+/// A client asked for this job to be cancelled.
+pub const CANCEL: u8 = 1;
+/// The daemon is shutting down; the job is being evicted (resumable).
+pub const EVICT: u8 = 2;
+
+struct JobRecord {
+    submission: JobSubmission, // key is always Some here
+    state: JobState,
+    epoch: u64,
+    forwards: u64,
+    final_error: Option<f64>,
+    detail: String,
+    interrupt: Arc<AtomicU8>,
+    subscribers: Vec<TcpStream>,
+}
+
+impl JobRecord {
+    fn status(&self) -> JobStatus {
+        JobStatus {
+            key: self.submission.key.clone().unwrap_or_default(),
+            tenant: self.submission.tenant.clone(),
+            priority: self.submission.priority,
+            spec: self.submission.spec.clone(),
+            state: self.state,
+            epoch: self.epoch,
+            forwards: self.forwards,
+            final_error: self.final_error,
+            detail: self.detail.clone(),
+        }
+    }
+}
+
+struct StoreInner {
+    jobs: BTreeMap<String, JobRecord>,
+    next_id: u64,
+}
+
+/// The synchronized job table shared by the accept loop, the worker
+/// pool and every running job's observer.
+pub struct JobStore {
+    inner: Mutex<StoreInner>,
+}
+
+impl Default for JobStore {
+    fn default() -> JobStore {
+        JobStore::new()
+    }
+}
+
+fn lock(store: &JobStore) -> MutexGuard<'_, StoreInner> {
+    store.inner.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Write one serve reply frame to a subscriber; `false` means the
+/// subscriber is gone and should be dropped.
+fn push_frame(stream: &mut TcpStream, reply: &ServeReply) -> bool {
+    wire::write_frame(stream, &wire::encode_serve_reply(reply)).is_ok()
+}
+
+impl JobStore {
+    /// An empty store.
+    pub fn new() -> JobStore {
+        JobStore { inner: Mutex::new(StoreInner { jobs: BTreeMap::new(), next_id: 1 }) }
+    }
+
+    /// Admit a submission: assign a key if the client supplied none,
+    /// re-queue a terminal record when the key names one (checkpoint
+    /// resume), reject keys that are still queued/running. Returns the
+    /// job key.
+    pub fn admit(&self, mut sub: JobSubmission) -> Result<String> {
+        let mut inner = lock(self);
+        let key = match &sub.key {
+            Some(k) if !k.is_empty() => k.clone(),
+            _ => loop {
+                let candidate = format!("job-{:04}", inner.next_id);
+                inner.next_id += 1;
+                if !inner.jobs.contains_key(&candidate) {
+                    break candidate;
+                }
+            },
+        };
+        if let Some(existing) = inner.jobs.get(&key) {
+            if !existing.state.is_terminal() {
+                return Err(err(format!(
+                    "serve: job {key:?} is still {}; cancel it before resubmitting",
+                    existing.state
+                )));
+            }
+        }
+        sub.key = Some(key.clone());
+        let resumed = inner.jobs.contains_key(&key);
+        inner.jobs.insert(
+            key.clone(),
+            JobRecord {
+                submission: sub,
+                state: JobState::Queued,
+                epoch: 0,
+                forwards: 0,
+                final_error: None,
+                detail: if resumed { "resubmitted".into() } else { "queued".into() },
+                interrupt: Arc::new(AtomicU8::new(RUN)),
+                subscribers: Vec::new(),
+            },
+        );
+        global_hub().inc("serve.jobs.submitted", 1);
+        refresh_gauges(&inner);
+        Ok(key)
+    }
+
+    /// The submission behind `key` (spec + config for the worker).
+    pub fn submission(&self, key: &str) -> Option<JobSubmission> {
+        lock(self).jobs.get(key).map(|r| r.submission.clone())
+    }
+
+    /// A status snapshot of `key`, if known.
+    pub fn status(&self, key: &str) -> Option<JobStatus> {
+        lock(self).jobs.get(key).map(JobRecord::status)
+    }
+
+    /// Status snapshots of every job, in key order.
+    pub fn list(&self) -> Vec<JobStatus> {
+        lock(self).jobs.values().map(JobRecord::status).collect()
+    }
+
+    /// The interrupt flag a running job's observer polls.
+    pub fn interrupt_handle(&self, key: &str) -> Option<Arc<AtomicU8>> {
+        lock(self).jobs.get(key).map(|r| r.interrupt.clone())
+    }
+
+    /// Mark `key` running (a worker picked it up). Returns `false` when
+    /// the job is no longer queued (e.g. cancelled while waiting) — the
+    /// worker must skip it.
+    pub fn set_running(&self, key: &str) -> bool {
+        let mut inner = lock(self);
+        let ok = match inner.jobs.get_mut(key) {
+            Some(r) if r.state == JobState::Queued => {
+                r.state = JobState::Running;
+                r.detail = "running".into();
+                true
+            }
+            _ => false,
+        };
+        refresh_gauges(&inner);
+        ok
+    }
+
+    /// Mirror progress counters (called at eval cadence).
+    pub fn progress(&self, key: &str, epoch: u64, forwards: u64) {
+        if let Some(r) = lock(self).jobs.get_mut(key) {
+            r.epoch = epoch;
+            r.forwards = forwards;
+        }
+    }
+
+    /// Push one metric update to every live subscriber of the job,
+    /// dropping subscribers whose connection is gone.
+    pub fn push_metric(&self, update: &MetricUpdate) {
+        if let Some(r) = lock(self).jobs.get_mut(&update.key) {
+            let reply = ServeReply::Metric(update.clone());
+            r.subscribers.retain_mut(|s| push_frame(s, &reply));
+        }
+    }
+
+    /// Subscribe `stream` to the job's metric stream. A terminal job
+    /// gets its final status frame immediately (and the stream is
+    /// dropped); a live job's stream receives metric frames until a
+    /// terminal status frame closes the subscription.
+    pub fn subscribe(&self, key: &str, mut stream: TcpStream) -> Result<()> {
+        let mut inner = lock(self);
+        let r = inner
+            .jobs
+            .get_mut(key)
+            .ok_or_else(|| err(format!("serve: unknown job {key:?}")))?;
+        if r.state.is_terminal() {
+            let _ = push_frame(&mut stream, &ServeReply::Status(r.status()));
+            return Ok(());
+        }
+        r.subscribers.push(stream);
+        Ok(())
+    }
+
+    /// Request cancellation. A queued job goes terminal immediately
+    /// (the scheduler entry is removed by the caller); a running job
+    /// gets its interrupt flag raised and goes terminal when its
+    /// observer aborts the session; a terminal job is a no-op. Returns
+    /// the post-request status.
+    pub fn request_cancel(&self, key: &str) -> Result<JobStatus> {
+        let mut inner = lock(self);
+        let r = inner
+            .jobs
+            .get_mut(key)
+            .ok_or_else(|| err(format!("serve: unknown job {key:?}")))?;
+        match r.state {
+            JobState::Queued => {
+                r.state = JobState::Cancelled;
+                r.detail = "cancelled while queued".into();
+                let status = r.status();
+                let reply = ServeReply::Status(status.clone());
+                let mut subs = std::mem::take(&mut r.subscribers);
+                for s in &mut subs {
+                    let _ = push_frame(s, &reply);
+                }
+                global_hub().inc("serve.jobs.cancelled", 1);
+                refresh_gauges(&inner);
+                Ok(status)
+            }
+            JobState::Running => {
+                r.interrupt.store(CANCEL, Ordering::SeqCst);
+                r.detail = "cancel requested".into();
+                Ok(r.status())
+            }
+            _ => Ok(r.status()),
+        }
+    }
+
+    /// Finish a job: record the terminal state, notify and drop every
+    /// subscriber with the final status frame.
+    pub fn finish(&self, key: &str, state: JobState, final_error: Option<f64>, detail: &str) {
+        let mut inner = lock(self);
+        if let Some(r) = inner.jobs.get_mut(key) {
+            r.state = state;
+            r.final_error = final_error;
+            r.detail = detail.to_string();
+            let reply = ServeReply::Status(r.status());
+            let mut subs = std::mem::take(&mut r.subscribers);
+            for s in &mut subs {
+                let _ = push_frame(s, &reply);
+            }
+            let hub = global_hub();
+            match state {
+                JobState::Done => hub.inc("serve.jobs.completed", 1),
+                JobState::Cancelled => hub.inc("serve.jobs.cancelled", 1),
+                JobState::Evicted => hub.inc("serve.jobs.evicted", 1),
+                JobState::Failed => hub.inc("serve.jobs.failed", 1),
+                _ => {}
+            }
+        }
+        refresh_gauges(&inner);
+    }
+
+    /// Begin daemon eviction: every queued job goes terminal-resumable
+    /// right away; every running job's interrupt flag is raised to
+    /// [`EVICT`] so its observer aborts (and checkpoints survive).
+    pub fn evict_all(&self) {
+        let mut inner = lock(self);
+        let mut notified = 0u64;
+        for r in inner.jobs.values_mut() {
+            match r.state {
+                JobState::Queued => {
+                    r.state = JobState::Evicted;
+                    r.detail = "evicted: daemon shutting down".into();
+                    let reply = ServeReply::Status(r.status());
+                    let mut subs = std::mem::take(&mut r.subscribers);
+                    for s in &mut subs {
+                        let _ = push_frame(s, &reply);
+                    }
+                    notified += 1;
+                }
+                JobState::Running => r.interrupt.store(EVICT, Ordering::SeqCst),
+                _ => {}
+            }
+        }
+        if notified > 0 {
+            global_hub().inc("serve.jobs.evicted", notified);
+        }
+        refresh_gauges(&inner);
+    }
+}
+
+/// Mirror queue/running depths into the global hub.
+fn refresh_gauges(inner: &StoreInner) {
+    let hub = global_hub();
+    let count = |s: JobState| inner.jobs.values().filter(|r| r.state == s).count() as f64;
+    hub.set_gauge("serve.jobs.queued", count(JobState::Queued));
+    hub.set_gauge("serve.jobs.running", count(JobState::Running));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sub(key: Option<&str>, tenant: &str) -> JobSubmission {
+        JobSubmission {
+            key: key.map(str::to_string),
+            tenant: tenant.into(),
+            priority: 1,
+            spec: "bs".into(),
+            config: String::new(),
+        }
+    }
+
+    #[test]
+    fn admit_assigns_unique_keys_and_tracks_lifecycle() {
+        let store = JobStore::new();
+        let a = store.admit(sub(None, "t1")).unwrap();
+        let b = store.admit(sub(None, "t1")).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(store.status(&a).unwrap().state, JobState::Queued);
+        assert!(store.set_running(&a));
+        assert!(!store.set_running(&a), "already running");
+        store.progress(&a, 7, 1234);
+        let st = store.status(&a).unwrap();
+        assert_eq!((st.epoch, st.forwards), (7, 1234));
+        store.finish(&a, JobState::Done, Some(1e-3), "done");
+        assert_eq!(store.status(&a).unwrap().state, JobState::Done);
+        assert_eq!(store.list().len(), 2);
+    }
+
+    #[test]
+    fn active_keys_reject_resubmission_terminal_keys_requeue() {
+        let store = JobStore::new();
+        let key = store.admit(sub(Some("mine"), "t1")).unwrap();
+        assert_eq!(key, "mine");
+        assert!(store.admit(sub(Some("mine"), "t1")).is_err(), "still queued");
+        store.set_running(&key);
+        assert!(store.admit(sub(Some("mine"), "t1")).is_err(), "still running");
+        store.finish(&key, JobState::Cancelled, None, "cancelled");
+        let again = store.admit(sub(Some("mine"), "t1")).unwrap();
+        assert_eq!(again, "mine");
+        let st = store.status("mine").unwrap();
+        assert_eq!(st.state, JobState::Queued);
+        assert_eq!(st.detail, "resubmitted");
+    }
+
+    #[test]
+    fn cancel_semantics_by_state() {
+        let store = JobStore::new();
+        assert!(store.request_cancel("nope").is_err());
+        let q = store.admit(sub(None, "t")).unwrap();
+        assert_eq!(store.request_cancel(&q).unwrap().state, JobState::Cancelled);
+        let r = store.admit(sub(None, "t")).unwrap();
+        store.set_running(&r);
+        let flag = store.interrupt_handle(&r).unwrap();
+        assert_eq!(flag.load(Ordering::SeqCst), RUN);
+        assert_eq!(store.request_cancel(&r).unwrap().state, JobState::Running);
+        assert_eq!(flag.load(Ordering::SeqCst), CANCEL, "running jobs cancel via the flag");
+        // cancelling a terminal job is a no-op
+        store.finish(&r, JobState::Cancelled, None, "cancelled");
+        assert_eq!(store.request_cancel(&r).unwrap().state, JobState::Cancelled);
+    }
+
+    #[test]
+    fn evict_all_parks_queued_and_flags_running() {
+        let store = JobStore::new();
+        let q = store.admit(sub(None, "t")).unwrap();
+        let r = store.admit(sub(None, "t")).unwrap();
+        store.set_running(&r);
+        let flag = store.interrupt_handle(&r).unwrap();
+        store.evict_all();
+        assert_eq!(store.status(&q).unwrap().state, JobState::Evicted);
+        assert_eq!(store.status(&r).unwrap().state, JobState::Running, "runs until the flag lands");
+        assert_eq!(flag.load(Ordering::SeqCst), EVICT);
+        // a fresh admit on the evicted key resumes it
+        assert!(store.admit(sub(Some(q.as_str()), "t")).is_ok());
+    }
+}

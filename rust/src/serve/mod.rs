@@ -1,0 +1,45 @@
+//! The multi-tenant training service: `opinn serve` and its clients.
+//!
+//! A long-lived daemon that accepts training-job submissions over the
+//! shard wire codec (tags 32–36 request, 40–44 reply; see
+//! [`crate::shard::wire`]), validates specs against the problem catalog
+//! at admission, and runs each job as a [`crate::session`] on a bounded
+//! worker pool. The pieces:
+//!
+//! * [`config`] — admission validation + the `opinn train`-parity
+//!   runtime construction, so a served job's trajectory is
+//!   bitwise-identical to the same spec+config run standalone;
+//! * [`job`] — the synchronized job table: lifecycle state
+//!   (`queued → running → {done, cancelled, evicted, failed}`),
+//!   progress mirroring, metric-stream subscribers, interrupt flags;
+//! * [`scheduler`] — fair-share admission: strict priority classes,
+//!   per-tenant round-robin, FIFO within a tenant;
+//! * [`observer`] — the per-job session hook that streams metrics,
+//!   mirrors `serve.job.<key>.*` gauges into the global hub (so
+//!   `opinn stat` works unchanged) and aborts on cancel/evict;
+//! * [`daemon`] — the accept loop + worker pool + graceful shutdown;
+//! * [`client`] — the blocking [`ServeClient`] behind `opinn submit`,
+//!   `opinn jobs` and `opinn cancel`, including the server-push
+//!   metric-stream follower.
+//!
+//! Cancelled and evicted jobs are **resumable**: every job checkpoints
+//! resume-grade [`crate::coordinator::checkpoint::TrainState`] at eval
+//! cadence, and resubmitting the same job key picks the run up from its
+//! last checkpoint — bitwise-identically — instead of epoch 0.
+
+#![deny(missing_docs)]
+
+pub mod client;
+pub mod config;
+pub mod daemon;
+pub mod job;
+pub mod observer;
+pub mod scheduler;
+
+pub use client::ServeClient;
+pub use daemon::{ServeDaemon, ServeOptions};
+pub use job::JobStore;
+pub use observer::JobObserver;
+pub use scheduler::FairShare;
+
+pub use crate::shard::wire::{JobState, JobStatus, JobSubmission, MetricUpdate};

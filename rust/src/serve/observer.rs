@@ -1,0 +1,85 @@
+//! [`JobObserver`]: the serve daemon's per-job session hook.
+//!
+//! Runs *last* in the job's observer chain (after the [`EvalObserver`]
+//! that appends to the history and the `CheckpointObserver` that
+//! persists resume state), so by the time it sees an eval epoch the
+//! fresh loss/rel-l2 point is already in the history and the epoch's
+//! checkpoint is already on disk. At eval cadence it mirrors progress
+//! into the [`JobStore`] and the global metrics hub
+//! (`serve.job.<key>.*`) and pushes one wire metric frame to every
+//! stream subscriber. Every step it polls the job's interrupt flag:
+//! cancel/evict aborts the session with an error the worker maps back
+//! to the matching terminal state.
+//!
+//! The observer is strictly passive with respect to the trajectory — it
+//! reads the history and touches no RNG, so a served run stays
+//! bitwise-identical to the same config run standalone.
+//!
+//! [`EvalObserver`]: crate::session::EvalObserver
+//! [`JobStore`]: super::job::JobStore
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+
+use super::job::{self, JobStore};
+use crate::session::{Observer, StepCtx};
+use crate::shard::wire::MetricUpdate;
+use crate::telemetry::global_hub;
+use crate::zo::History;
+use crate::{err, Result};
+
+/// Error text a cancelled job's session aborts with.
+pub const CANCELLED_MSG: &str = "serve: job cancelled";
+/// Error text an evicted job's session aborts with.
+pub const EVICTED_MSG: &str = "serve: job evicted (daemon shutting down)";
+
+/// The per-job observer (see module docs).
+pub struct JobObserver {
+    store: Arc<JobStore>,
+    key: String,
+    interrupt: Arc<AtomicU8>,
+    eval_every: usize,
+}
+
+impl JobObserver {
+    /// An observer for job `key`, polling `interrupt` and mirroring at
+    /// `eval_every` cadence (matching the job's eval observer).
+    pub fn new(
+        store: Arc<JobStore>,
+        key: impl Into<String>,
+        interrupt: Arc<AtomicU8>,
+        eval_every: usize,
+    ) -> JobObserver {
+        JobObserver { store, key: key.into(), interrupt, eval_every: eval_every.max(1) }
+    }
+}
+
+impl Observer for JobObserver {
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, hist: &mut History) -> Result<()> {
+        let info = ctx.info;
+        let at_eval = info.epoch % self.eval_every == 0 || info.last || info.budget_hit;
+        if at_eval {
+            // epoch+1 = completed steps, mirroring the checkpoint record
+            self.store.progress(&self.key, (info.epoch + 1) as u64, info.forwards);
+            if let (Some(&loss), Some(&rel_l2)) = (hist.losses.last(), hist.errors.last()) {
+                let hub = global_hub();
+                hub.set_gauge(&format!("serve.job.{}.epoch", self.key), (info.epoch + 1) as f64);
+                hub.set_gauge(&format!("serve.job.{}.loss", self.key), loss);
+                hub.set_gauge(&format!("serve.job.{}.rel_l2", self.key), rel_l2);
+                hub.set_gauge(&format!("serve.job.{}.forwards", self.key), info.forwards as f64);
+                self.store.push_metric(&MetricUpdate {
+                    key: self.key.clone(),
+                    epoch: info.epoch as u64,
+                    loss,
+                    rel_l2,
+                    forwards: info.forwards,
+                });
+            }
+        }
+        match self.interrupt.load(Ordering::SeqCst) {
+            job::RUN => Ok(()),
+            job::CANCEL => Err(err(CANCELLED_MSG)),
+            _ => Err(err(EVICTED_MSG)),
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! [`FairShare`]: the daemon's admission queue.
+//!
+//! Three strict priority classes (0 = high, 1 = normal, 2 = low; higher
+//! submitted values clamp to low). Within a class, tenants are served
+//! round-robin by a rotating cursor so one chatty tenant cannot starve
+//! the others; within a tenant, jobs run in submission (FIFO) order.
+//! The queue holds job *keys* only — the [`super::job::JobStore`] owns
+//! the records.
+
+use std::collections::VecDeque;
+
+/// Number of priority classes.
+pub const PRIORITY_CLASSES: usize = 3;
+
+struct Tenant {
+    name: String,
+    queue: VecDeque<String>,
+}
+
+struct Class {
+    tenants: Vec<Tenant>,
+    cursor: usize,
+}
+
+impl Class {
+    fn new() -> Class {
+        Class { tenants: Vec::new(), cursor: 0 }
+    }
+
+    fn push(&mut self, tenant: &str, key: String) {
+        match self.tenants.iter_mut().find(|t| t.name == tenant) {
+            Some(t) => t.queue.push_back(key),
+            None => self
+                .tenants
+                .push(Tenant { name: tenant.to_string(), queue: VecDeque::from([key]) }),
+        }
+    }
+
+    /// Pop the next job round-robin across tenants, starting at the
+    /// cursor; empty tenants are skipped (but keep their rotation slot
+    /// for later submissions).
+    fn pop(&mut self) -> Option<String> {
+        let n = self.tenants.len();
+        for i in 0..n {
+            let idx = (self.cursor + i) % n;
+            if let Some(key) = self.tenants[idx].queue.pop_front() {
+                self.cursor = (idx + 1) % n;
+                return Some(key);
+            }
+        }
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.tenants.iter().map(|t| t.queue.len()).sum()
+    }
+
+    fn remove(&mut self, key: &str) -> bool {
+        for t in &mut self.tenants {
+            if let Some(pos) = t.queue.iter().position(|k| k == key) {
+                t.queue.remove(pos);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// The fair-share scheduler: strict priority classes, per-tenant
+/// round-robin within a class, FIFO within a tenant.
+pub struct FairShare {
+    classes: Vec<Class>,
+}
+
+impl Default for FairShare {
+    fn default() -> FairShare {
+        FairShare::new()
+    }
+}
+
+impl FairShare {
+    /// An empty queue.
+    pub fn new() -> FairShare {
+        FairShare { classes: (0..PRIORITY_CLASSES).map(|_| Class::new()).collect() }
+    }
+
+    /// Enqueue `key` for `tenant` at `priority` (clamped to the lowest
+    /// class).
+    pub fn push(&mut self, tenant: &str, priority: u8, key: String) {
+        let class = (priority as usize).min(PRIORITY_CLASSES - 1);
+        self.classes[class].push(tenant, key);
+    }
+
+    /// Dequeue the next job key: highest non-empty priority class,
+    /// round-robin across its tenants.
+    pub fn pop(&mut self) -> Option<String> {
+        self.classes.iter_mut().find_map(Class::pop)
+    }
+
+    /// Queued jobs across every class.
+    pub fn len(&self) -> usize {
+        self.classes.iter().map(Class::len).sum()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove a specific queued key (cancellation while queued).
+    /// Returns whether it was present.
+    pub fn remove(&mut self, key: &str) -> bool {
+        self.classes.iter_mut().any(|c| c.remove(key))
+    }
+
+    /// Drop everything (daemon eviction). Returns the drained keys.
+    pub fn clear(&mut self) -> Vec<String> {
+        let mut drained = Vec::new();
+        for c in &mut self.classes {
+            for t in &mut c.tenants {
+                drained.extend(t.queue.drain(..));
+            }
+        }
+        drained
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn higher_priority_classes_drain_first() {
+        let mut q = FairShare::new();
+        q.push("t", 2, "low".into());
+        q.push("t", 0, "high".into());
+        q.push("t", 1, "normal".into());
+        q.push("t", 9, "clamped".into()); // clamps into the low class
+        assert_eq!(q.pop().as_deref(), Some("high"));
+        assert_eq!(q.pop().as_deref(), Some("normal"));
+        assert_eq!(q.pop().as_deref(), Some("low"));
+        assert_eq!(q.pop().as_deref(), Some("clamped"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn tenants_round_robin_within_a_class() {
+        let mut q = FairShare::new();
+        q.push("alice", 1, "a1".into());
+        q.push("alice", 1, "a2".into());
+        q.push("alice", 1, "a3".into());
+        q.push("bob", 1, "b1".into());
+        q.push("bob", 1, "b2".into());
+        let order: Vec<String> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, ["a1", "b1", "a2", "b2", "a3"], "no tenant starves another");
+    }
+
+    #[test]
+    fn fifo_within_a_tenant_and_remove() {
+        let mut q = FairShare::new();
+        q.push("t", 1, "first".into());
+        q.push("t", 1, "second".into());
+        q.push("t", 1, "third".into());
+        assert!(q.remove("second"));
+        assert!(!q.remove("second"), "already gone");
+        assert_eq!(q.pop().as_deref(), Some("first"));
+        assert_eq!(q.pop().as_deref(), Some("third"));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn clear_drains_every_class() {
+        let mut q = FairShare::new();
+        q.push("a", 0, "x".into());
+        q.push("b", 1, "y".into());
+        q.push("c", 2, "z".into());
+        assert_eq!(q.len(), 3);
+        let mut drained = q.clear();
+        drained.sort();
+        assert_eq!(drained, ["x", "y", "z"]);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn an_emptied_tenant_keeps_its_rotation_slot() {
+        let mut q = FairShare::new();
+        q.push("a", 1, "a1".into());
+        q.push("b", 1, "b1".into());
+        assert_eq!(q.pop().as_deref(), Some("a1"));
+        assert_eq!(q.pop().as_deref(), Some("b1"));
+        // both empty; a resubmitting tenant just works
+        q.push("a", 1, "a2".into());
+        assert_eq!(q.pop().as_deref(), Some("a2"));
+        assert_eq!(q.pop(), None);
+    }
+}

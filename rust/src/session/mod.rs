@@ -96,6 +96,7 @@ pub use crate::zo::trainer::History;
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use crate::coordinator::checkpoint::TrainState;
 use crate::engine::{Engine, EvalPrecision, PendingLosses, ProbeBatch};
 use crate::net::ParamEntry;
 use crate::optim::{Adam, Optimizer};
@@ -141,6 +142,49 @@ pub struct StepCtx<'c> {
     pub ws: &'c mut SessionWorkspace,
     /// Progress flags for the step just applied.
     pub info: StepInfo,
+    /// Resume-grade training state for the step just applied; `None` in
+    /// hand-built contexts, where checkpoints degrade to params-only.
+    pub train: Option<TrainSnapshot<'c>>,
+}
+
+/// A borrow of the driver's resumable state at observe time: the Adam
+/// moments plus the training-RNG snapshot. The RNG snapshot is taken at
+/// the epoch boundary — all of this epoch's draws done, none of the
+/// next epoch's — at **either** pipeline depth (the pipelined driver
+/// captures it before its speculative overlap draw), so a checkpoint
+/// written at depth 1 resumes bitwise-identically at depth 2 and vice
+/// versa.
+#[derive(Debug, Clone)]
+pub struct TrainSnapshot<'c> {
+    /// Adam first-moment estimate.
+    pub opt_m: &'c [f64],
+    /// Adam second-moment estimate.
+    pub opt_v: &'c [f64],
+    /// Adam step counter.
+    pub opt_t: u64,
+    /// Training RNG words at the epoch boundary.
+    pub rng: [u64; 4],
+    /// Training RNG cached Box–Muller spare, if any.
+    pub rng_spare: Option<f64>,
+}
+
+impl StepCtx<'_> {
+    /// Assemble a full [`TrainState`] checkpoint record for the step just
+    /// applied, or `None` when the context carries no driver state.
+    pub fn train_state(&self, name: &str) -> Option<TrainState> {
+        self.train.as_ref().map(|t| TrainState {
+            name: name.to_string(),
+            // completed steps == the next epoch to run on resume
+            epoch: self.info.epoch + 1,
+            params: self.params.to_vec(),
+            opt_m: t.opt_m.to_vec(),
+            opt_v: t.opt_v.to_vec(),
+            opt_t: t.opt_t,
+            rng: t.rng,
+            rng_spare: t.rng_spare,
+            forwards: self.info.forwards,
+        })
+    }
 }
 
 /// Reusable per-session scratch, sized once so the hot loop never
@@ -201,6 +245,7 @@ pub struct Session<'a> {
     train_seed: u64,
     max_forwards: Option<u64>,
     pipeline_depth: usize,
+    resume: Option<TrainState>,
 }
 
 impl Session<'_> {
@@ -223,6 +268,7 @@ impl Session<'_> {
             train_seed,
             max_forwards,
             pipeline_depth,
+            resume,
         } = self;
         let engine = engine_slot.as_dyn();
         let t0 = std::time::Instant::now();
@@ -240,6 +286,7 @@ impl Session<'_> {
                 lr,
                 train_seed,
                 max_forwards,
+                resume,
                 params,
                 &mut hist,
             )?
@@ -253,6 +300,7 @@ impl Session<'_> {
                 lr,
                 train_seed,
                 max_forwards,
+                resume,
                 params,
                 &mut hist,
             )?
@@ -271,6 +319,29 @@ impl Session<'_> {
     }
 }
 
+/// Restore a [`TrainState`] into a driver's mutable state; returns the
+/// epoch to resume from.
+fn restore_state(
+    state: &TrainState,
+    opt: &mut Adam,
+    rng: &mut Rng,
+    forwards: &mut u64,
+    params: &mut [f64],
+) -> Result<usize> {
+    if state.params.len() != params.len() {
+        return Err(Error::Config(format!(
+            "session: resume state has {} params, the model has {}",
+            state.params.len(),
+            params.len()
+        )));
+    }
+    params.copy_from_slice(&state.params);
+    opt.restore(&state.opt_m, &state.opt_v, state.opt_t);
+    *rng = Rng::from_state(state.rng, state.rng_spare);
+    *forwards = state.forwards;
+    Ok(state.epoch)
+}
+
 /// The blocking (pipeline depth 1) drive loop; returns the training
 /// forwards consumed.
 #[allow(clippy::too_many_arguments)]
@@ -283,6 +354,7 @@ fn run_blocking(
     lr: f64,
     train_seed: u64,
     max_forwards: Option<u64>,
+    resume: Option<TrainState>,
     params: &mut [f64],
     hist: &mut History,
 ) -> Result<u64> {
@@ -292,11 +364,15 @@ fn run_blocking(
     let mut grad = vec![0.0; d];
     let mut ws = SessionWorkspace::new(space.out_dim(), d);
     let mut forwards: u64 = 0;
+    let start = match &resume {
+        Some(state) => restore_state(state, &mut opt, &mut rng, &mut forwards, params)?,
+        None => 0,
+    };
 
     // Telemetry spans are strictly passive — they read the clock and
     // never touch `rng`, so traced and untraced runs are bitwise-equal.
     let rec = recorder();
-    for epoch in 0..epochs {
+    for epoch in start..epochs {
         let resample_span = rec.span(|| "step.resample".into());
         engine.resample(&mut rng);
         let pts = engine.pde().sample_points(&mut rng);
@@ -314,6 +390,9 @@ fn run_blocking(
 
         let last = epoch + 1 == epochs;
         let budget_hit = max_forwards.map(|m| forwards >= m).unwrap_or(false);
+        // all of this epoch's draws are done, none of the next epoch's
+        let (rng_words, rng_spare) = rng.state();
+        let (opt_m, opt_v, opt_t) = opt.state();
         let mut ctx = StepCtx {
             engine: &mut *engine,
             space: &mut *space,
@@ -321,6 +400,7 @@ fn run_blocking(
             pts: &pts,
             ws: &mut ws,
             info: StepInfo { epoch, epochs, last, budget_hit, forwards },
+            train: Some(TrainSnapshot { opt_m, opt_v, opt_t, rng: rng_words, rng_spare }),
         };
         let observe_span = rec.span(|| "step.observe".into());
         observer.after_step(&mut ctx, hist)?;
@@ -375,6 +455,7 @@ fn run_pipelined(
     lr: f64,
     train_seed: u64,
     max_forwards: Option<u64>,
+    resume: Option<TrainState>,
     params: &mut [f64],
     hist: &mut History,
 ) -> Result<u64> {
@@ -385,12 +466,18 @@ fn run_pipelined(
     let mut ws = SessionWorkspace::new(space.out_dim(), d);
     let fpl = engine.forwards_per_loss() as u64;
     let mut forwards: u64 = 0;
+    let start = match &resume {
+        Some(state) => restore_state(state, &mut opt, &mut rng, &mut forwards, params)?,
+        None => 0,
+    };
 
-    if epochs == 0 {
-        return Ok(0);
+    if start >= epochs {
+        return Ok(forwards);
     }
 
-    // Prologue: draw, materialize and issue epoch 0.
+    // Prologue: draw, materialize and issue epoch `start`. On resume the
+    // restored RNG sits exactly at the start-epoch boundary, so these are
+    // the same draws the uninterrupted run made in its overlap window.
     engine.resample(&mut rng);
     let mut pts = engine.pde().sample_points(&mut rng);
     source.draw(&mut rng)?;
@@ -401,8 +488,11 @@ fn run_pipelined(
     )?);
     let mut pts_next: Option<PointSet> = None;
 
-    for epoch in 0..epochs {
+    for epoch in start..epochs {
         let last = epoch + 1 == epochs;
+        // Snapshot before the speculative overlap draw: the state at the
+        // epoch boundary, interchangeable with the blocking driver's.
+        let (rng_words, rng_spare) = rng.state();
         // Overlap window: while epoch `epoch`'s batch is in flight, do
         // epoch+1's parameter-independent work. The draw lands in the
         // source's *staged* plan slot, so the in-flight plan stays intact
@@ -432,6 +522,7 @@ fn run_pipelined(
         drop(commit_span);
 
         let budget_hit = max_forwards.map(|m| forwards >= m).unwrap_or(false);
+        let (opt_m, opt_v, opt_t) = opt.state();
         let mut ctx = StepCtx {
             engine: &mut *engine,
             space: &mut *space,
@@ -439,6 +530,7 @@ fn run_pipelined(
             pts: &pts,
             ws: &mut ws,
             info: StepInfo { epoch, epochs, last, budget_hit, forwards },
+            train: Some(TrainSnapshot { opt_m, opt_v, opt_t, rng: rng_words, rng_spare }),
         };
         let observe_span = recorder().span(|| "step.observe".into());
         observer.after_step(&mut ctx, hist)?;
@@ -481,6 +573,7 @@ pub struct SessionBuilder {
     observer: Option<Box<dyn Observer>>,
     checkpoint: Option<(PathBuf, usize, String)>,
     telemetry: Option<Arc<MetricsHub>>,
+    resume: Option<TrainState>,
 }
 
 impl SessionBuilder {
@@ -507,6 +600,7 @@ impl SessionBuilder {
             observer: None,
             checkpoint: None,
             telemetry: None,
+            resume: None,
         }
     }
 
@@ -655,6 +749,18 @@ impl SessionBuilder {
         self
     }
 
+    /// Resume a run from a [`TrainState`] checkpoint: the trainable
+    /// vector, Adam moments, training-RNG stream and forward budget are
+    /// restored and the drive loop starts at `state.epoch`. With the same
+    /// configuration, the resumed trajectory is bitwise-identical to the
+    /// uninterrupted run (`rust/tests/checkpoint_resume.rs`) — at either
+    /// pipeline depth, regardless of which depth wrote the checkpoint. A
+    /// state at or past the final epoch makes [`Session::run`] a no-op.
+    pub fn resume(mut self, state: TrainState) -> SessionBuilder {
+        self.resume = Some(state);
+        self
+    }
+
     /// Checkpoint the trainable vector to `path` every `every` epochs
     /// (plus the final/budget-hit epoch).
     pub fn checkpoint_every(
@@ -763,6 +869,7 @@ impl SessionBuilder {
             observer,
             checkpoint,
             telemetry,
+            resume,
         } = self;
         // Select the kernel precision before any shard wrapping, so the
         // engine's refreshed replica spec carries it to every worker.
@@ -828,16 +935,16 @@ impl SessionBuilder {
             train_seed: train_rng_seed.unwrap_or(seed),
             max_forwards,
             pipeline_depth,
+            resume,
         })
     }
 }
 
-/// Assemble the weight-domain session equivalent to a legacy
-/// [`TrainConfig`] (the `zo::train` shim and the experiment runners go
-/// through here).
-pub fn weight_session<'a>(engine: &'a mut dyn Engine, cfg: &TrainConfig) -> Result<Session<'a>> {
-    let d = engine.n_params();
-    let source: Box<dyn GradientSource> = match &cfg.method {
+/// The weight-domain gradient source for `cfg` over a `d`-dimensional
+/// parameter vector (preserves the legacy silent fallback to joint RGE
+/// when the layout is empty).
+pub fn weight_source(cfg: &TrainConfig, d: usize) -> Box<dyn GradientSource> {
+    match &cfg.method {
         TrainMethod::Fo => Box::new(FoSource::full()),
         // constructed directly (not via .method) to preserve the legacy
         // silent fallback to joint RGE when the layout is empty
@@ -847,7 +954,15 @@ pub fn weight_session<'a>(engine: &'a mut dyn Engine, cfg: &TrainConfig) -> Resu
         TrainMethod::ZoCoordwise { mu, coords_per_step } => {
             Box::new(CoordwiseSource::new(*mu, d, *coords_per_step))
         }
-    };
+    }
+}
+
+/// The [`SessionBuilder`] equivalent to a legacy [`TrainConfig`] for a
+/// `d`-dimensional parameter vector, not yet built — callers (the serve
+/// daemon, custom harnesses) may attach observers, checkpointing,
+/// telemetry or a resume state first. Building this against the same
+/// engine reproduces [`weight_session`] trajectories bitwise.
+pub fn weight_builder(cfg: &TrainConfig, d: usize) -> SessionBuilder {
     SessionBuilder::new(cfg.epochs)
         .lr(cfg.lr)
         .seed(cfg.seed)
@@ -859,8 +974,15 @@ pub fn weight_session<'a>(engine: &'a mut dyn Engine, cfg: &TrainConfig) -> Resu
         .registry(cfg.registry.clone())
         .eval_precision(cfg.eval_precision)
         .verbose(cfg.verbose)
-        .gradient_source(source)
-        .build(engine)
+        .gradient_source(weight_source(cfg, d))
+}
+
+/// Assemble the weight-domain session equivalent to a legacy
+/// [`TrainConfig`] (the `zo::train` shim and the experiment runners go
+/// through here).
+pub fn weight_session<'a>(engine: &'a mut dyn Engine, cfg: &TrainConfig) -> Result<Session<'a>> {
+    let d = engine.n_params();
+    weight_builder(cfg, d).build(engine)
 }
 
 /// One-call weight-domain run (legacy `zo::train` semantics).

@@ -10,7 +10,7 @@
 
 use std::path::PathBuf;
 
-use crate::coordinator::checkpoint::save_params;
+use crate::coordinator::checkpoint::{save_params, save_state};
 use crate::engine::rel_l2_eval;
 use crate::util::rng::Rng;
 use crate::zo::trainer::History;
@@ -106,9 +106,13 @@ impl Observer for EvalObserver {
     }
 }
 
-/// Periodic checkpointing of the trainable vector via
-/// [`crate::coordinator::checkpoint`]. Saves every `every` epochs and at
-/// the final/budget-hit epoch, overwriting `path` each time.
+/// Periodic checkpointing via [`crate::coordinator::checkpoint`]. Saves
+/// every `every` epochs and at the final/budget-hit epoch, overwriting
+/// `path` each time. When the driver supplies a resume-grade
+/// [`super::TrainSnapshot`] (every session-driven run does), the full
+/// [`crate::coordinator::checkpoint::TrainState`] is written so the run
+/// can be resumed bitwise-identically; hand-built contexts degrade to
+/// the legacy params-only record.
 pub struct CheckpointObserver {
     /// Checkpoint file path (overwritten on every save).
     pub path: PathBuf,
@@ -122,7 +126,10 @@ impl Observer for CheckpointObserver {
     fn after_step(&mut self, ctx: &mut StepCtx<'_>, _hist: &mut History) -> Result<()> {
         let info = ctx.info;
         if info.epoch % self.every == 0 || info.last || info.budget_hit {
-            save_params(&self.path, &self.name, info.epoch, ctx.params)?;
+            match ctx.train_state(&self.name) {
+                Some(state) => save_state(&self.path, &state)?,
+                None => save_params(&self.path, &self.name, info.epoch, ctx.params)?,
+            }
         }
         Ok(())
     }

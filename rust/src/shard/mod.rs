@@ -60,5 +60,7 @@ pub mod wire;
 pub mod worker;
 
 pub use engine::ShardedEngine;
-pub use transport::{InProcessTransport, TcpTransport, Transport};
+pub use transport::{
+    default_io_timeout, set_default_io_timeout, InProcessTransport, TcpTransport, Transport,
+};
 pub use worker::{EngineCache, ShardWorker};

@@ -84,6 +84,30 @@ pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(3);
 /// local evaluation — rather than block the training loop forever.
 pub const IO_TIMEOUT: Duration = Duration::from_secs(300);
 
+/// The process-wide default I/O timeout, overridable by
+/// [`set_default_io_timeout`] (the `--io-timeout-secs` flag). Stored in
+/// whole seconds — sub-second shard timeouts are below the codec's
+/// useful resolution anyway.
+static DEFAULT_IO_TIMEOUT_SECS: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(IO_TIMEOUT.as_secs());
+
+/// Override the process-wide default per-request I/O timeout applied to
+/// every [`TcpTransport`] that has no per-instance override. Clamped to
+/// at least one second (a zero socket timeout is invalid and would mean
+/// "never time out"). Daemons and the CLI call this once at startup
+/// from `--io-timeout-secs`, before any transport connects — transports
+/// built by [`crate::shard::ShardedEngine`] then pick it up without
+/// plumbing a parameter through every constructor.
+pub fn set_default_io_timeout(timeout: Duration) {
+    let secs = timeout.as_secs().max(1);
+    DEFAULT_IO_TIMEOUT_SECS.store(secs, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// The current process-wide default per-request I/O timeout.
+pub fn default_io_timeout() -> Duration {
+    Duration::from_secs(DEFAULT_IO_TIMEOUT_SECS.load(std::sync::atomic::Ordering::SeqCst))
+}
+
 /// A lazily-connected blocking TCP channel to one `opinn shard-worker`.
 /// Connection errors surface as `Err` from [`Transport::round_trip`] and
 /// drop the socket; the next dispatch re-attempts the connection, so a
@@ -91,13 +115,21 @@ pub const IO_TIMEOUT: Duration = Duration::from_secs(300);
 pub struct TcpTransport {
     addr: String,
     stream: Option<TcpStream>,
+    io_timeout: Option<Duration>,
 }
 
 impl TcpTransport {
     /// A transport to the worker at `addr` (`host:port`); connects on
-    /// first use.
+    /// first use with the process-wide [`default_io_timeout`].
     pub fn new(addr: impl Into<String>) -> TcpTransport {
-        TcpTransport { addr: addr.into(), stream: None }
+        TcpTransport { addr: addr.into(), stream: None, io_timeout: None }
+    }
+
+    /// Override this transport's per-request I/O timeout, ignoring the
+    /// process-wide default.
+    pub fn with_io_timeout(mut self, timeout: Duration) -> TcpTransport {
+        self.io_timeout = Some(timeout);
+        self
     }
 
     /// Connect to the first reachable resolved address (dual-stack hosts
@@ -120,8 +152,9 @@ impl TcpTransport {
         if self.stream.is_none() {
             let stream = self.connect()?;
             let _ = stream.set_nodelay(true);
-            stream.set_read_timeout(Some(IO_TIMEOUT))?;
-            stream.set_write_timeout(Some(IO_TIMEOUT))?;
+            let io_timeout = self.io_timeout.unwrap_or_else(default_io_timeout);
+            stream.set_read_timeout(Some(io_timeout))?;
+            stream.set_write_timeout(Some(io_timeout))?;
             self.stream = Some(stream);
         }
         let stream = self.stream.as_mut().expect("connected above");
@@ -160,6 +193,17 @@ mod tests {
         assert!(t.round_trip(b"ping").is_err());
         assert!(t.stream.is_none(), "failed transports must drop the socket");
         assert_eq!(t.label(), "tcp://127.0.0.1:1");
+    }
+
+    #[test]
+    fn default_io_timeout_is_overridable_and_clamped() {
+        set_default_io_timeout(Duration::from_secs(7));
+        assert_eq!(default_io_timeout(), Duration::from_secs(7));
+        // zero clamps up: a zero socket timeout means "never time out"
+        set_default_io_timeout(Duration::ZERO);
+        assert_eq!(default_io_timeout(), Duration::from_secs(1));
+        set_default_io_timeout(IO_TIMEOUT);
+        assert_eq!(default_io_timeout(), IO_TIMEOUT);
     }
 
     #[test]

@@ -23,6 +23,7 @@ use super::wire;
 use crate::engine::{Engine, EngineSpec, NativeEngine};
 use crate::pde::PointSet;
 use crate::telemetry::{global_hub, Level};
+use crate::util::shutdown::ShutdownFlag;
 use crate::{log, Result};
 
 /// Point clouds a connection keeps for hashed requests, most recently
@@ -127,6 +128,8 @@ fn handle_inner(payload: &[u8], cache: &mut EngineCache) -> Result<Vec<u8>> {
 /// A TCP shard worker bound to a listen address.
 pub struct ShardWorker {
     listener: TcpListener,
+    idle_timeout: std::time::Duration,
+    shutdown: ShutdownFlag,
 }
 
 impl ShardWorker {
@@ -136,7 +139,19 @@ impl ShardWorker {
             .to_socket_addrs()?
             .next()
             .ok_or_else(|| crate::err(format!("shard worker: cannot resolve {addr:?}")))?;
-        Ok(ShardWorker { listener: TcpListener::bind(addr)? })
+        Ok(ShardWorker {
+            listener: TcpListener::bind(addr)?,
+            idle_timeout: IDLE_TIMEOUT,
+            shutdown: ShutdownFlag::new(),
+        })
+    }
+
+    /// Override the per-connection idle reap window (default
+    /// [`IDLE_TIMEOUT`]; the `--idle-reap-secs` flag of
+    /// `opinn shard-worker`).
+    pub fn with_idle_timeout(mut self, timeout: std::time::Duration) -> ShardWorker {
+        self.idle_timeout = timeout;
+        self
     }
 
     /// The actually-bound address (resolves ephemeral ports).
@@ -144,21 +159,43 @@ impl ShardWorker {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Accept connections forever, serving each on its own thread until
-    /// the client sends EOF. Transient accept errors (fd pressure,
-    /// aborted handshakes) are logged and survived — a long-lived worker
-    /// must not die because one accept failed.
+    /// The worker's shutdown signal — a clone lets a supervising thread
+    /// (or test) stop the worker without a wire frame via
+    /// [`ShutdownFlag::trigger`].
+    pub fn shutdown_flag(&self) -> ShutdownFlag {
+        self.shutdown.clone()
+    }
+
+    /// Accept connections until a graceful-shutdown frame (tag `24`)
+    /// arrives, serving each on its own thread until the client sends
+    /// EOF. Transient accept errors (fd pressure, aborted handshakes)
+    /// are logged and survived — a long-lived worker must not die
+    /// because one accept failed. On shutdown the worker stops
+    /// accepting, drains in-flight connections for a bounded time and
+    /// returns, so the caller can deregister from its fleet.
     pub fn serve_forever(&self) -> Result<()> {
         for stream in self.listener.incoming() {
+            if self.shutdown.is_set() {
+                break;
+            }
             match stream {
                 Ok(s) => {
-                    std::thread::spawn(move || serve_connection(s));
+                    let guard = self.shutdown.guard();
+                    let idle = self.idle_timeout;
+                    let flag = self.shutdown.clone();
+                    std::thread::spawn(move || {
+                        let _guard = guard;
+                        serve_connection_with(s, idle, Some(flag));
+                    });
                 }
                 Err(e) => {
                     log!(Level::Warn, "shard-worker: accept failed ({e}); continuing");
                     std::thread::sleep(std::time::Duration::from_millis(50));
                 }
             }
+        }
+        if !self.shutdown.drain(std::time::Duration::from_secs(10)) {
+            log!(Level::Warn, "shard-worker: shutdown drain timed out; exiting anyway");
         }
         Ok(())
     }
@@ -170,15 +207,27 @@ impl ShardWorker {
 /// quiet longer simply reconnect on their next dispatch.
 pub const IDLE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(3600);
 
+/// Serve one client connection with the default idle window and no
+/// shutdown signal (see [`serve_connection_with`]).
+pub fn serve_connection(stream: TcpStream) {
+    serve_connection_with(stream, IDLE_TIMEOUT, None);
+}
+
 /// Serve one client connection: read request frames, evaluate, reply —
 /// until clean EOF (or a connection error, which just ends the
 /// connection; the dispatcher side handles it as a fallback). A stats
 /// request (tag `22`) short-circuits to a snapshot of the worker's
 /// process-global [`crate::telemetry::MetricsHub`] — the server side of
-/// `opinn stat <addr>`.
-pub fn serve_connection(mut stream: TcpStream) {
+/// `opinn stat <addr>`. A shutdown request (tag `24`) is acked, then
+/// `shutdown` (when given) is triggered so the owning accept loop
+/// drains and exits.
+pub fn serve_connection_with(
+    mut stream: TcpStream,
+    idle_timeout: std::time::Duration,
+    shutdown: Option<ShutdownFlag>,
+) {
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(IDLE_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(idle_timeout));
     let mut cache = EngineCache::new();
     loop {
         let payload = match wire::read_frame(&mut stream) {
@@ -187,6 +236,17 @@ pub fn serve_connection(mut stream: TcpStream) {
             // the dispatcher side handles the re-dispatch either way
             Ok(None) | Err(_) => return,
         };
+        if wire::is_shutdown_request(&payload) {
+            let _ = wire::write_frame(&mut stream, &wire::encode_shutdown_ack());
+            if let Some(flag) = &shutdown {
+                // the connection's local address IS the listener address
+                match stream.local_addr() {
+                    Ok(addr) => flag.trigger(addr),
+                    Err(_) => flag.set(),
+                }
+            }
+            return;
+        }
         let reply = if wire::is_stats_request(&payload) {
             wire::encode_stats_reply(&global_hub().prometheus_text())
         } else {
@@ -306,6 +366,19 @@ mod tests {
         let _ = handle_request(&req, &mut cache);
         assert!(hub.counter("worker.requests") >= req0 + 1);
         assert!(hub.counter("worker.rows") >= rows0 + 2);
+    }
+
+    #[test]
+    fn shutdown_frame_drains_the_accept_loop() {
+        let worker = ShardWorker::bind("127.0.0.1:0").unwrap();
+        let addr = worker.local_addr().unwrap();
+        let t = std::thread::spawn(move || worker.serve_forever());
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        wire::write_frame(&mut stream, &wire::encode_shutdown_request()).unwrap();
+        let ack = wire::read_frame(&mut stream).unwrap().expect("ack before close");
+        assert!(wire::is_shutdown_ack(&ack));
+        // the accept loop must observe the flag and return
+        t.join().unwrap().unwrap();
     }
 
     #[test]

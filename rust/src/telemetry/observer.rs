@@ -87,6 +87,7 @@ mod tests {
                 pts: &pts,
                 ws: &mut ws,
                 info,
+                train: None,
             };
             obs.after_step(&mut ctx, &mut hist).unwrap();
         }

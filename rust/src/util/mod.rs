@@ -8,4 +8,5 @@ pub mod argparse;
 pub mod json;
 pub mod proptest_lite;
 pub mod rng;
+pub mod shutdown;
 pub mod stats;

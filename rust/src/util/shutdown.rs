@@ -1,0 +1,146 @@
+//! [`ShutdownFlag`]: cooperative daemon shutdown over blocking accept
+//! loops.
+//!
+//! Every long-lived daemon in the crate (`opinn serve`, `opinn
+//! shard-worker`, `opinn registry`) serves a blocking
+//! `TcpListener::incoming()` loop. A graceful-shutdown frame (tag `24`
+//! of [`crate::shard::wire`]) arrives on a *connection* thread, which
+//! cannot return from the accept loop directly — so the connection
+//! handler sets this flag and pokes the listener with a throwaway
+//! self-connection, waking `incoming()` so the loop observes the flag
+//! and exits. The daemon then drains: it stops accepting, waits a
+//! bounded time for in-flight connections to finish, and returns from
+//! `serve_forever` so its caller can deregister (see
+//! [`crate::fleet::Heartbeater::stop`]) and exit cleanly.
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A clonable stop signal plus an in-flight connection count, shared
+/// between a daemon's accept loop and its connection threads.
+#[derive(Clone, Default)]
+pub struct ShutdownFlag {
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+}
+
+impl ShutdownFlag {
+    /// A fresh, unset flag.
+    pub fn new() -> ShutdownFlag {
+        ShutdownFlag::default()
+    }
+
+    /// True once any handler has requested shutdown.
+    pub fn is_set(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    /// Request shutdown. Idempotent.
+    pub fn set(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Request shutdown *and* wake the blocking accept loop listening on
+    /// `addr` with a throwaway connection. Best-effort: if the connect
+    /// fails the loop still exits on its next (real) accept.
+    pub fn trigger(&self, addr: SocketAddr) {
+        self.set();
+        let _ = TcpStream::connect_timeout(&addr, Duration::from_secs(1));
+    }
+
+    /// Track one in-flight connection; the count drops when the guard
+    /// does. Take the guard on the accept thread (before handing the
+    /// stream to its handler thread) so a drain never races a
+    /// just-accepted, not-yet-counted connection.
+    pub fn guard(&self) -> ConnGuard {
+        self.active.fetch_add(1, Ordering::SeqCst);
+        ConnGuard { active: self.active.clone() }
+    }
+
+    /// Connections currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Block until every in-flight connection finishes or `timeout`
+    /// elapses; returns `true` when the drain completed.
+    pub fn drain(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.in_flight() > 0 {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        true
+    }
+}
+
+/// RAII handle for one in-flight connection (see
+/// [`ShutdownFlag::guard`]).
+pub struct ConnGuard {
+    active: Arc<AtomicUsize>,
+}
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_starts_clear_and_sets_idempotently() {
+        let flag = ShutdownFlag::new();
+        assert!(!flag.is_set());
+        flag.set();
+        flag.set();
+        assert!(flag.is_set());
+        assert!(flag.clone().is_set(), "clones share the signal");
+    }
+
+    #[test]
+    fn guards_count_in_flight_connections_and_drain_waits() {
+        let flag = ShutdownFlag::new();
+        assert_eq!(flag.in_flight(), 0);
+        let g1 = flag.guard();
+        let g2 = flag.guard();
+        assert_eq!(flag.in_flight(), 2);
+        drop(g1);
+        assert_eq!(flag.in_flight(), 1);
+        // a held guard makes a short drain time out ...
+        assert!(!flag.drain(Duration::from_millis(30)));
+        // ... and releasing it from another thread completes the drain
+        let flag2 = flag.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            drop(g2);
+            let _ = flag2;
+        });
+        assert!(flag.drain(Duration::from_secs(5)));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn trigger_wakes_a_blocking_accept_loop() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let flag = ShutdownFlag::new();
+        let loop_flag = flag.clone();
+        let t = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if loop_flag.is_set() {
+                    break;
+                }
+                drop(stream);
+            }
+        });
+        flag.trigger(addr);
+        t.join().unwrap();
+    }
+}

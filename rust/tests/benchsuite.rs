@@ -185,7 +185,7 @@ fn bench_list_names_all_scenarios() {
     let out = Command::new(opinn()).args(["bench", "--list"]).output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for name in ["single-engine", "pipelined", "precision", "sharded-tcp", "fleet-churn"] {
+    for name in ["single-engine", "pipelined", "precision", "sharded-tcp", "fleet-churn", "serve"] {
         assert!(text.contains(name), "--list missing {name}: {text}");
     }
 }

@@ -1,0 +1,183 @@
+//! End-to-end checkpoint-resume contract: a session killed at epoch *k*
+//! and resumed from its [`CheckpointObserver`] artifact must reproduce
+//! the uninterrupted run's final parameters **bitwise**.
+//!
+//! The checkpoint carries the trainable vector, the Adam moments and the
+//! exact training-RNG words at the epoch boundary, so a resumed driver
+//! replays the identical step sequence. The snapshot is taken before the
+//! pipelined driver's speculative overlap draw, which makes checkpoints
+//! depth-portable: a file written at pipeline depth 1 resumes
+//! bitwise-identically at depth 2 and vice versa — pinned here too.
+
+use std::path::PathBuf;
+
+use optical_pinn::coordinator::checkpoint::load_state;
+use optical_pinn::engine::NativeEngine;
+use optical_pinn::session::{
+    self, CheckpointObserver, EvalObserver, MultiObserver, Observer, StepCtx,
+};
+use optical_pinn::zo::rge::RgeConfig;
+use optical_pinn::zo::{History, TrainConfig, TrainMethod};
+use optical_pinn::{err, Result};
+
+const EPOCHS: usize = 12;
+const EVAL_EVERY: usize = 3;
+const SEED: u64 = 7;
+
+fn cfg(pipeline_depth: usize) -> (NativeEngine, Vec<f64>, TrainConfig) {
+    let eng = NativeEngine::new("bs", "tt").unwrap();
+    let layout = eng.model.param_layout();
+    let params = eng.model.init_flat(SEED);
+    let train = TrainConfig {
+        method: TrainMethod::ZoRge(RgeConfig::default()),
+        epochs: EPOCHS,
+        lr: 1e-3,
+        eval_every: EVAL_EVERY,
+        seed: SEED,
+        layout,
+        max_forwards: None,
+        pipeline_depth,
+        shards: 0,
+        shard_hosts: Vec::new(),
+        registry: None,
+        eval_precision: Default::default(),
+        verbose: false,
+    };
+    (eng, params, train)
+}
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("opinn_ckpt_resume_{}", std::process::id()))
+        .join(format!("{tag}.ckpt.json"))
+}
+
+/// Aborts the session (simulated kill) after observing `at_epoch`.
+/// Placed *after* the checkpoint observer, so the abort epoch's resume
+/// state is already on disk — the same ordering the serve daemon uses.
+struct AbortAfter {
+    at_epoch: usize,
+}
+
+impl Observer for AbortAfter {
+    fn after_step(&mut self, ctx: &mut StepCtx<'_>, _hist: &mut History) -> Result<()> {
+        if ctx.info.epoch >= self.at_epoch {
+            return Err(err("test: simulated kill"));
+        }
+        Ok(())
+    }
+}
+
+/// The uninterrupted baseline at a given pipeline depth.
+fn uninterrupted(pipeline_depth: usize) -> (Vec<f64>, History) {
+    let (mut eng, mut params, train) = cfg(pipeline_depth);
+    let hist = session::run_weight(&mut eng, &mut params, &train).unwrap();
+    (params, hist)
+}
+
+/// Run until the simulated kill at `abort_epoch`, checkpointing at eval
+/// cadence to `path`; the session must end in the kill error.
+fn run_until_killed(pipeline_depth: usize, abort_epoch: usize, path: &PathBuf) {
+    let (mut eng, mut params, train) = cfg(pipeline_depth);
+    let d = params.len();
+    let e = session::weight_builder(&train, d)
+        .observer(Box::new(MultiObserver {
+            observers: vec![
+                Box::new(EvalObserver {
+                    eval_every: EVAL_EVERY,
+                    seed: SEED,
+                    verbose: false,
+                    tag: None,
+                }),
+                Box::new(CheckpointObserver {
+                    path: path.clone(),
+                    every: EVAL_EVERY,
+                    name: "bs_tt".into(),
+                }),
+                Box::new(AbortAfter { at_epoch: abort_epoch }),
+            ],
+        }))
+        .build(&mut eng)
+        .unwrap()
+        .run(&mut params)
+        .unwrap_err();
+    assert!(e.to_string().contains("simulated kill"), "{e}");
+}
+
+/// Resume from `path` and run to completion at a given pipeline depth.
+fn resume_and_finish(pipeline_depth: usize, path: &PathBuf) -> (Vec<f64>, History) {
+    let (mut eng, mut params, train) = cfg(pipeline_depth);
+    let d = params.len();
+    let state = load_state(path).unwrap();
+    assert!(state.epoch > 0, "checkpoint must be mid-run, not fresh");
+    assert!(state.epoch < EPOCHS, "checkpoint must leave work to replay");
+    let hist = session::weight_builder(&train, d)
+        .resume(state)
+        .build(&mut eng)
+        .unwrap()
+        .run(&mut params)
+        .unwrap();
+    (params, hist)
+}
+
+#[test]
+fn killed_at_a_checkpoint_epoch_resumes_bitwise() {
+    let path = ckpt_path("at_ckpt");
+    let (p_full, h_full) = uninterrupted(1);
+    // epoch 6 is a checkpoint epoch (6 % 3 == 0): the freshest possible
+    // resume state, written moments before the kill
+    run_until_killed(1, 6, &path);
+    assert_eq!(load_state(&path).unwrap().epoch, 7, "checkpoint at epoch 6 resumes at 7");
+    let (p_res, h_res) = resume_and_finish(1, &path);
+    assert_eq!(p_full, p_res, "resumed final params diverged");
+    assert_eq!(
+        h_full.final_error.to_bits(),
+        h_res.final_error.to_bits(),
+        "resumed final eval diverged"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn killed_between_checkpoints_replays_the_gap_bitwise() {
+    let path = ckpt_path("between");
+    let (p_full, _) = uninterrupted(1);
+    // killed at epoch 8: the last checkpoint is from epoch 6, so the
+    // resumed driver must replay epochs 7 and 8 identically before
+    // covering new ground
+    run_until_killed(1, 8, &path);
+    assert_eq!(load_state(&path).unwrap().epoch, 7, "last checkpoint predates the kill");
+    let (p_res, _) = resume_and_finish(1, &path);
+    assert_eq!(p_full, p_res, "gap replay diverged");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn pipelined_kill_and_resume_is_bitwise_too() {
+    let path = ckpt_path("depth2");
+    let (p_full, _) = uninterrupted(2);
+    run_until_killed(2, 7, &path);
+    let (p_res, _) = resume_and_finish(2, &path);
+    assert_eq!(p_full, p_res, "depth-2 resume diverged");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn checkpoints_are_pipeline_depth_portable() {
+    // the RNG snapshot is taken at the epoch boundary at either depth,
+    // so a depth-1 checkpoint resumes at depth 2 (and vice versa) with
+    // the same bitwise trajectory
+    let (p_full, _) = uninterrupted(1);
+
+    let path = ckpt_path("d1_to_d2");
+    run_until_killed(1, 6, &path);
+    let (p_cross, _) = resume_and_finish(2, &path);
+    assert_eq!(p_full, p_cross, "depth-1 checkpoint resumed at depth 2 diverged");
+    let _ = std::fs::remove_file(&path);
+
+    let path = ckpt_path("d2_to_d1");
+    run_until_killed(2, 6, &path);
+    let (p_cross, _) = resume_and_finish(1, &path);
+    assert_eq!(p_full, p_cross, "depth-2 checkpoint resumed at depth 1 diverged");
+    let _ = std::fs::remove_file(&path);
+}

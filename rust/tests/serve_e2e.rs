@@ -1,0 +1,221 @@
+//! End-to-end multi-tenant contract of the `opinn serve` training
+//! service, over real loopback TCP:
+//!
+//! * two jobs submitted concurrently (distinct specs, distinct
+//!   `max_forwards` budgets) both stream metrics to their followers and
+//!   complete, and each job's final parameters are **bitwise identical**
+//!   to the same spec+config run standalone through
+//!   [`session::run_weight`] — a served job adds scheduling,
+//!   checkpointing and metric streaming but never touches the
+//!   trajectory;
+//! * a cancelled job resubmitted under the same key **resumes from its
+//!   checkpoint** (first streamed metric past epoch 0) and still lands
+//!   on the uninterrupted run's exact final parameters;
+//! * a graceful-shutdown frame drains the daemon and joins its accept
+//!   loop.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use optical_pinn::coordinator::checkpoint::load_params;
+use optical_pinn::serve::config::{admission_check, build_runtime};
+use optical_pinn::serve::{
+    JobState, JobSubmission, MetricUpdate, ServeClient, ServeDaemon, ServeOptions,
+};
+use optical_pinn::session;
+use optical_pinn::zo::History;
+
+/// Per-test scratch directory for the daemon's checkpoints/artifacts.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("opinn_serve_e2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Bind a daemon on an ephemeral port and run its accept loop on a
+/// background thread; returns the address and the join handle.
+fn spawn_daemon(
+    ckpt_dir: PathBuf,
+    max_concurrent: usize,
+) -> (String, std::thread::JoinHandle<optical_pinn::Result<()>>) {
+    let opts = ServeOptions { registry: None, max_concurrent, ckpt_dir };
+    let daemon = ServeDaemon::bind("127.0.0.1:0", opts).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let t = std::thread::spawn(move || daemon.serve_forever());
+    (addr, t)
+}
+
+fn submission(key: Option<&str>, tenant: &str, spec: &str, config: &str) -> JobSubmission {
+    JobSubmission {
+        key: key.map(str::to_string),
+        tenant: tenant.into(),
+        priority: 1,
+        spec: spec.into(),
+        config: config.into(),
+    }
+}
+
+/// The ground truth: the same spec+config run standalone through the
+/// serve admission/construction path and [`session::run_weight`].
+fn standalone(spec: &str, config: &str) -> (Vec<f64>, History) {
+    let cfg = admission_check(spec, config).unwrap();
+    let mut rt = build_runtime(&cfg, None).unwrap();
+    let hist = session::run_weight(rt.engine.as_mut(), &mut rt.params, &rt.train).unwrap();
+    (rt.params, hist)
+}
+
+/// Follow a job's metric stream to its terminal status.
+fn follow(addr: &str, key: &str) -> (Vec<MetricUpdate>, optical_pinn::serve::JobStatus) {
+    let mut metrics = Vec::new();
+    let status = ServeClient::follow(addr, key, |m| metrics.push(m.clone())).unwrap();
+    (metrics, status)
+}
+
+/// Poll one job's status until `pred` holds (panics after `timeout`).
+fn wait_for(
+    client: &mut ServeClient,
+    key: &str,
+    timeout: Duration,
+    pred: impl Fn(&optical_pinn::serve::JobStatus) -> bool,
+) -> optical_pinn::serve::JobStatus {
+    let t0 = Instant::now();
+    loop {
+        let st = client.status(key).unwrap();
+        if pred(&st) {
+            return st;
+        }
+        assert!(
+            t0.elapsed() < timeout,
+            "timed out waiting on job {key}: state {} epoch {}",
+            st.state,
+            st.epoch
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn concurrent_jobs_match_standalone_runs_bitwise() {
+    // distinct specs, distinct max_forwards budgets
+    const SPEC_A: &str = "bs";
+    const CFG_A: &str = r#"{"epochs":40,"eval_every":4,"max_forwards":2000000,"seed":3}"#;
+    const SPEC_B: &str = "poisson?d=2";
+    const CFG_B: &str = r#"{"epochs":30,"eval_every":3,"max_forwards":1500000,"seed":5}"#;
+
+    let ckpt_dir = scratch("concurrent");
+    let (addr, daemon) = spawn_daemon(ckpt_dir.clone(), 2);
+
+    let mut client = ServeClient::new(addr.clone());
+    let key_a = client.submit(&submission(None, "alice", SPEC_A, CFG_A)).unwrap();
+    let key_b = client.submit(&submission(None, "bob", SPEC_B, CFG_B)).unwrap();
+    assert_ne!(key_a, key_b);
+
+    // follow both jobs concurrently on dedicated stream connections
+    let (fa, fb) = {
+        let (aa, ka) = (addr.clone(), key_a.clone());
+        let (ab, kb) = (addr.clone(), key_b.clone());
+        let ta = std::thread::spawn(move || follow(&aa, &ka));
+        let tb = std::thread::spawn(move || follow(&ab, &kb));
+        (ta.join().unwrap(), tb.join().unwrap())
+    };
+
+    for ((metrics, status), key, spec, cfg) in
+        [(fa, &key_a, SPEC_A, CFG_A), (fb, &key_b, SPEC_B, CFG_B)]
+    {
+        assert_eq!(status.state, JobState::Done, "{key}: {}", status.detail);
+        assert!(!metrics.is_empty(), "{key} streamed no metrics");
+        assert!(
+            metrics.windows(2).all(|w| w[0].epoch < w[1].epoch),
+            "{key} metric epochs must be strictly increasing"
+        );
+        let (want_params, want_hist) = standalone(spec, cfg);
+        assert_eq!(
+            status.final_error.unwrap().to_bits(),
+            want_hist.final_error.to_bits(),
+            "{key} final_error diverged from the standalone run"
+        );
+        let final_path = ckpt_dir.join(format!("{key}.final.json"));
+        let (_, _, got_params) = load_params(&final_path).unwrap();
+        assert_eq!(got_params, want_params, "{key} final params diverged from standalone");
+    }
+
+    client.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(ckpt_dir);
+}
+
+#[test]
+fn cancel_then_resubmit_resumes_from_checkpoint() {
+    const SPEC: &str = "bs";
+    // long enough that the cancel always lands mid-run
+    const CFG: &str = r#"{"epochs":160,"eval_every":2,"seed":11}"#;
+    const KEY: &str = "resume-me";
+
+    let ckpt_dir = scratch("resume");
+    let (addr, daemon) = spawn_daemon(ckpt_dir.clone(), 1);
+    let mut client = ServeClient::new(addr.clone());
+
+    let key = client.submit(&submission(Some(KEY), "carol", SPEC, CFG)).unwrap();
+    assert_eq!(key, KEY, "client-supplied keys are honored");
+
+    // let it make checkpointed progress, then cancel mid-run
+    wait_for(&mut client, KEY, Duration::from_secs(60), |st| {
+        st.state == JobState::Running && st.epoch >= 3
+    });
+    client.cancel(KEY).unwrap();
+    let st = wait_for(&mut client, KEY, Duration::from_secs(60), |st| st.state.is_terminal());
+    assert_eq!(st.state, JobState::Cancelled, "{}", st.detail);
+    let ckpt = ckpt_dir.join(format!("{KEY}.ckpt.json"));
+    assert!(ckpt.exists(), "a cancelled job must leave its resume checkpoint behind");
+    assert!(
+        !ckpt_dir.join(format!("{KEY}.final.json")).exists(),
+        "a cancelled job must not publish final params"
+    );
+
+    // resubmit under the same key: the run resumes from the checkpoint
+    let again = client.submit(&submission(Some(KEY), "carol", SPEC, CFG)).unwrap();
+    assert_eq!(again, KEY);
+    let (metrics, status) = follow(&addr, KEY);
+    assert_eq!(status.state, JobState::Done, "{}", status.detail);
+    assert!(!metrics.is_empty(), "resumed job streamed no metrics");
+    assert!(
+        metrics[0].epoch > 0,
+        "resumed from checkpoint, so the first eval must be past epoch 0 (got {})",
+        metrics[0].epoch
+    );
+
+    // ... and still lands bitwise on the uninterrupted trajectory
+    let (want_params, want_hist) = standalone(SPEC, CFG);
+    let (_, _, got_params) = load_params(&ckpt_dir.join(format!("{KEY}.final.json"))).unwrap();
+    assert_eq!(got_params, want_params, "resumed final params diverged from uninterrupted run");
+    assert_eq!(
+        status.final_error.unwrap().to_bits(),
+        want_hist.final_error.to_bits(),
+        "resumed final eval diverged"
+    );
+
+    client.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(ckpt_dir);
+}
+
+#[test]
+fn rejected_submissions_and_unknown_jobs_error_cleanly() {
+    let ckpt_dir = scratch("reject");
+    let (addr, daemon) = spawn_daemon(ckpt_dir.clone(), 1);
+    let mut client = ServeClient::new(addr);
+
+    let e = client.submit(&submission(None, "t", "no-such-pde", "")).unwrap_err();
+    assert!(e.to_string().contains("rejected"), "{e}");
+    let e = client
+        .submit(&submission(None, "t", "bs", r#"{"shards":4}"#))
+        .unwrap_err();
+    assert!(e.to_string().contains("replica wiring"), "{e}");
+    assert!(client.status("ghost").is_err());
+    assert!(client.jobs().unwrap().is_empty(), "nothing was admitted");
+
+    client.shutdown().unwrap();
+    daemon.join().unwrap().unwrap();
+    let _ = std::fs::remove_dir_all(ckpt_dir);
+}
